@@ -1,0 +1,102 @@
+//! End-to-end driver: exercises the FULL three-layer stack on a real small
+//! workload, proving the layers compose:
+//!
+//!   L3 rust coordinator (this binary, batched driver)
+//!     -> runtime/ (PJRT CPU client)
+//!       -> artifacts/*.hlo.txt  (L2 JAX graphs, AOT-lowered)
+//!         -> Pallas kernels     (L1, interpret-mode, inside the HLO)
+//!
+//! Workload: the Malicious-URLs-like dataset at 1000 nodes, P2PegasosMU,
+//! 100 cycles — the paper's headline experiment shape — run twice: once on
+//! the native backend and once through PJRT, with the loss curves compared
+//! and throughput reported.  Results are recorded in EXPERIMENTS.md.
+//!
+//!     make artifacts && cargo run --release --example e2e_full
+
+use golf::data::synthetic::{urls_like, Scale};
+use golf::engine::batched::run_batched;
+use golf::engine::native::NativeBackend;
+use golf::engine::pjrt::PjrtBackend;
+use golf::gossip::protocol::ProtocolConfig;
+use golf::util::benchkit::Table;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let dataset = urls_like(2026, Scale(0.1)); // 1000 nodes, 24k test rows
+    let cycles = 100;
+    println!(
+        "e2e: {} — {} nodes, d={}, {} test rows, {} cycles, P2PegasosMU\n",
+        dataset.name,
+        dataset.n_train(),
+        dataset.d(),
+        dataset.n_test(),
+        cycles
+    );
+
+    let cfg = || {
+        let mut c = ProtocolConfig::paper_default(cycles);
+        c.eval.n_peers = 100;
+        c
+    };
+
+    // --- native backend
+    let t0 = Instant::now();
+    let mut native = NativeBackend::new();
+    let res_native = run_batched(cfg(), &dataset, &mut native)?;
+    let dt_native = t0.elapsed();
+
+    // --- PJRT backend (AOT artifacts)
+    let dir = PjrtBackend::default_dir();
+    let mut pjrt = PjrtBackend::new(&dir)?;
+    let t0 = Instant::now();
+    let res_pjrt = run_batched(cfg(), &dataset, &mut pjrt)?;
+    let dt_pjrt = t0.elapsed();
+    println!(
+        "runtime platform: {}, {} executables compiled\n",
+        pjrt.runtime().platform(),
+        pjrt.runtime().compiled_count()
+    );
+
+    // --- loss curves side by side
+    let mut t = Table::new(&["cycle", "err (native)", "err (pjrt)", "|diff|"]);
+    let mut max_diff = 0.0f64;
+    for (a, b) in res_native.curve.points.iter().zip(&res_pjrt.curve.points) {
+        let diff = (a.err_mean - b.err_mean).abs();
+        max_diff = max_diff.max(diff);
+        t.row(&[
+            a.cycle.to_string(),
+            format!("{:.4}", a.err_mean),
+            format!("{:.4}", b.err_mean),
+            format!("{:.2e}", diff),
+        ]);
+    }
+    t.print();
+
+    let msgs = res_native.stats.messages_sent as f64;
+    let upd = res_native.stats.updates_applied as f64;
+    println!("\nthroughput:");
+    println!(
+        "  native: {:>8.0} updates/s  ({:.2}s total)",
+        upd / dt_native.as_secs_f64(),
+        dt_native.as_secs_f64()
+    );
+    println!(
+        "  pjrt:   {:>8.0} updates/s  ({:.2}s total)",
+        upd / dt_pjrt.as_secs_f64(),
+        dt_pjrt.as_secs_f64()
+    );
+    println!("  {} messages total, final error {:.4} (native) / {:.4} (pjrt)",
+        msgs, res_native.curve.final_error(), res_pjrt.curve.final_error());
+
+    anyhow::ensure!(
+        max_diff < 5e-3,
+        "native and PJRT trajectories diverged: max diff {max_diff}"
+    );
+    anyhow::ensure!(
+        res_native.curve.final_error() < 0.12,
+        "did not converge: {}",
+        res_native.curve.final_error()
+    );
+    println!("\ne2e OK: all three layers compose and agree (max curve diff {max_diff:.2e})");
+    Ok(())
+}

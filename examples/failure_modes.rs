@@ -1,0 +1,70 @@
+//! Failure robustness demo (paper Section VI-A(i), Fig. 1 lower row):
+//! message drop (50%), extreme delay (uniform [Δ, 10Δ]), churn (lognormal
+//! sessions, 90% online), and all three combined.
+//!
+//!     cargo run --release --example failure_modes
+
+use golf::data::synthetic::{urls_like, Scale};
+use golf::gossip::protocol::{run, ProtocolConfig, RunResult};
+use golf::sim::churn::ChurnConfig;
+use golf::sim::network::DelayModel;
+use golf::util::benchkit::Table;
+
+fn main() {
+    let dataset = urls_like(11, Scale(0.05)); // 500 nodes
+    let cycles = 400;
+
+    let base = || {
+        let mut c = ProtocolConfig::paper_default(cycles);
+        c.eval.n_peers = 100;
+        c
+    };
+
+    let scenarios: Vec<(&str, ProtocolConfig)> = vec![
+        ("no failures", base()),
+        ("drop 50%", {
+            let mut c = base();
+            c.network.drop_prob = 0.5;
+            c
+        }),
+        ("delay U[Δ,10Δ]", {
+            let mut c = base();
+            c.network.delay = DelayModel::Uniform { lo: c.delta, hi: 10 * c.delta };
+            c
+        }),
+        ("churn 90% online", {
+            let mut c = base();
+            c.churn = Some(ChurnConfig::paper_default(c.delta));
+            c
+        }),
+        ("all failures", base().with_extreme_failures()),
+    ];
+
+    let mut t = Table::new(&[
+        "scenario", "err@10", "err@50", "final", "to 0.15", "dropped", "lost offline",
+    ]);
+    for (name, cfg) in scenarios {
+        let res: RunResult = run(cfg, &dataset);
+        let at = |cy: u64| {
+            res.curve
+                .points
+                .iter()
+                .filter(|p| p.cycle <= cy)
+                .next_back()
+                .map_or(f64::NAN, |p| p.err_mean)
+        };
+        t.row(&[
+            name.to_string(),
+            format!("{:.3}", at(10)),
+            format!("{:.3}", at(50)),
+            format!("{:.3}", res.curve.final_error()),
+            res.curve
+                .cycles_to_reach(0.15)
+                .map_or("-".into(), |v| v.to_string()),
+            res.stats.messages_dropped.to_string(),
+            res.stats.messages_lost_offline.to_string(),
+        ]);
+    }
+    t.print();
+    println!("\n(the paper's headline robustness claim: even the all-failure run converges\n to the same error, just ~10x later — delay accounts for ~5x, drop for ~2x)");
+}

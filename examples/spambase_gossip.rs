@@ -1,0 +1,61 @@
+//! Spambase scenario: the paper's spam-filtering motivation — every mailbox
+//! (node) holds one labeled message vector; gossip learning trains a shared
+//! spam model with no raw data movement.  Compares RW / MU / UM variants
+//! against the sequential Pegasos baseline.
+//!
+//!     cargo run --release --example spambase_gossip
+
+use golf::baselines::sequential;
+use golf::data::synthetic::{spambase_like, Scale};
+use golf::gossip::create_model::Variant;
+use golf::gossip::protocol::{run, ProtocolConfig};
+use golf::learning::Learner;
+use golf::util::benchkit::Table;
+
+fn main() {
+    let dataset = spambase_like(7, Scale(0.5)); // 2070 mailboxes
+    let cycles = 300;
+    println!(
+        "spambase-like: {} nodes, d={}, {} test rows\n",
+        dataset.n_train(),
+        dataset.d(),
+        dataset.n_test()
+    );
+
+    let learner = Learner::pegasos(1e-2);
+    let mut curves = vec![{
+        let mut c = sequential::curve(&dataset, &learner, cycles, 1);
+        c.label = "sequential pegasos".into();
+        c
+    }];
+    for variant in [Variant::Rw, Variant::Mu, Variant::Um] {
+        let mut cfg = ProtocolConfig::paper_default(cycles);
+        cfg.variant = variant;
+        cfg.learner = learner;
+        cfg.eval.n_peers = 100;
+        let mut c = run(cfg, &dataset).curve;
+        c.label = format!("p2pegasos-{}", variant.name());
+        curves.push(c);
+    }
+
+    let mut t = Table::new(&["algorithm", "err@10", "err@100", "final", "cycles to 0.20"]);
+    for c in &curves {
+        let at = |cy: u64| {
+            c.points
+                .iter()
+                .filter(|p| p.cycle <= cy)
+                .next_back()
+                .map_or(f64::NAN, |p| p.err_mean)
+        };
+        t.row(&[
+            c.label.clone(),
+            format!("{:.3}", at(10)),
+            format!("{:.3}", at(100)),
+            format!("{:.3}", c.final_error()),
+            c.cycles_to_reach(0.20)
+                .map_or("-".into(), |v| v.to_string()),
+        ]);
+    }
+    t.print();
+    println!("\n(model merging should dominate: mu/um reach low error orders of magnitude\n earlier than the single-model baselines — paper Fig. 1 middle column)");
+}

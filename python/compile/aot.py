@@ -1,0 +1,126 @@
+# AOT compile path: lower every L2 op to HLO *text* per shape bucket and
+# write artifacts/ + manifest.tsv for the rust runtime.
+#
+# HLO text (NOT .serialize()) is the interchange format: jax >= 0.5 emits
+# HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+# version behind the published `xla` crate) rejects; the text parser
+# reassigns ids and round-trips cleanly.  See /opt/xla-example/gen_hlo.py.
+#
+# Usage:  python -m compile.aot --out-dir ../artifacts [--quick]
+import argparse
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = "float32"
+
+
+def spec(*shape):
+    import jax.numpy as jnp
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def to_hlo_text(fn, args):
+    lowered = jax.jit(fn).lower(*args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# Shape buckets.  The rust runtime picks the smallest bucket that fits and
+# mask-pads (rust/src/runtime/artifacts.rs mirrors this table).
+FULL = {
+    "D": [16, 64, 128, 1024, 10240],
+    "B": [128, 1024],
+    "N": [1024],          # test-set chunk rows for eval ops
+    "M": [16, 128],       # model count for eval ops
+}
+QUICK = {"D": [16, 64], "B": [128], "N": [256], "M": [16]}
+
+
+def op_table(b, d, n, m):
+    """op name -> (callable, example args).  All f32."""
+    mat = spec(b, d)
+    vec = spec(b)
+    rw_args = (mat, mat, vec, vec, vec, vec)               # w,x,y,t,hp,mask
+    mu_args = (mat, vec, mat, vec, mat, vec, vec, vec)     # w1,t1,w2,t2,x,y,hp,mask
+    return {
+        "pegasos_rw": (model.pegasos_rw, rw_args, dict(b=b, d=d)),
+        "pegasos_mu": (model.pegasos_mu, mu_args, dict(b=b, d=d)),
+        "pegasos_um": (model.pegasos_um, mu_args, dict(b=b, d=d)),
+        "adaline_rw": (model.adaline_rw, rw_args, dict(b=b, d=d)),
+        "adaline_mu": (model.adaline_mu, mu_args, dict(b=b, d=d)),
+        "adaline_um": (model.adaline_um, mu_args, dict(b=b, d=d)),
+        "logreg_rw": (model.logreg_rw, rw_args, dict(b=b, d=d)),
+        "logreg_mu": (model.logreg_mu, mu_args, dict(b=b, d=d)),
+        "logreg_um": (model.logreg_um, mu_args, dict(b=b, d=d)),
+        "merge": (model.merge_op, (mat, vec, mat, vec), dict(b=b, d=d)),
+        "eval_error_counts": (model.eval_error_counts,
+                              (spec(n, d), spec(n), spec(m, d)),
+                              dict(n=n, m=m, d=d)),
+        "eval_margins": (model.eval_margins,
+                         (spec(n, d), spec(m, d)), dict(n=n, m=m, d=d)),
+        "similarity_mean": (model.similarity_mean,
+                            (spec(m, d), spec(m)), dict(m=m, d=d)),
+    }
+
+
+def artifact_list(buckets):
+    """Yield (name, op, params, fn, args) without duplicates."""
+    seen = set()
+    for d in buckets["D"]:
+        for b in buckets["B"]:
+            for n in buckets["N"]:
+                for m in buckets["M"]:
+                    for op, (fn, args, params) in op_table(b, d, n, m).items():
+                        name = op + "".join(
+                            f"_{k}{v}" for k, v in sorted(params.items()))
+                        if name in seen:
+                            continue
+                        seen.add(name)
+                        yield name, op, params, fn, args
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None,
+                    help="compat: also write a copy of the first artifact here")
+    ap.add_argument("--quick", action="store_true",
+                    help="small bucket set for fast iteration")
+    args = ap.parse_args()
+
+    buckets = QUICK if args.quick else FULL
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest_rows = []
+    first_path = None
+    for name, op, params, fn, fargs in artifact_list(buckets):
+        text = to_hlo_text(fn, fargs)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        if first_path is None:
+            first_path = path
+        pstr = ",".join(f"{k}={v}" for k, v in sorted(params.items()))
+        manifest_rows.append(f"{name}\t{op}\t{pstr}\t{fname}")
+        print(f"  {name}: {len(text)} chars", file=sys.stderr)
+
+    with open(os.path.join(args.out_dir, "manifest.tsv"), "w") as f:
+        f.write("# name\top\tparams\tfile\n")
+        f.write("\n".join(manifest_rows) + "\n")
+    if args.out and first_path:
+        import shutil
+        shutil.copy(first_path, args.out)
+    print(f"wrote {len(manifest_rows)} artifacts to {args.out_dir}",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

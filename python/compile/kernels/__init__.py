@@ -1,0 +1,9 @@
+# L1: Pallas kernels for the gossip-learning hot path.
+from .pegasos import pegasos_update
+from .adaline import adaline_update
+from .logreg import logreg_update
+from .merge import merge
+from .margins import margins
+
+__all__ = ["pegasos_update", "adaline_update", "logreg_update", "merge",
+           "margins"]

@@ -1,0 +1,55 @@
+# L1 Pallas kernel: batched Adaline (Widrow-Hoff LMS) update, paper Eq. (5).
+#
+# Same tiling as the Pegasos kernel; the update is unconditional
+# (linear activation), which is what makes averaging strictly equivalent to
+# voting for Adaline (paper Section V-A).
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _adaline_kernel(w_ref, x_ref, y_ref, t_ref, eta_ref, mask_ref,
+                    ow_ref, ot_ref):
+    w = w_ref[...]
+    x = x_ref[...]
+    y = y_ref[...]
+    t = t_ref[...]
+    eta = eta_ref[...]
+    mask = mask_ref[...]
+
+    err = y - jnp.sum(w * x, axis=1)             # y - <w, x>
+    w_new = w + (eta * err)[:, None] * x
+
+    m = mask[:, None]
+    ow_ref[...] = m * w_new + (1.0 - m) * w
+    ot_ref[...] = mask * (t + 1.0) + (1.0 - mask) * t
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def adaline_update(w, x, y, t, eta, mask, *, block_b=None):
+    """Batched Adaline update.  Shapes: w,x [B,D]; y,t,eta,mask [B]."""
+    b, d = w.shape
+    bb = block_b or common.row_block(b, d)
+    grid = (pl.cdiv(b, bb),)
+    return pl.pallas_call(
+        _adaline_kernel,
+        grid=grid,
+        in_specs=[
+            common.mat_spec(bb, d),
+            common.mat_spec(bb, d),
+            common.vec_spec(bb),
+            common.vec_spec(bb),
+            common.vec_spec(bb),
+            common.vec_spec(bb),
+        ],
+        out_specs=(common.mat_spec(bb, d), common.vec_spec(bb)),
+        out_shape=(
+            jax.ShapeDtypeStruct((b, d), w.dtype),
+            jax.ShapeDtypeStruct((b,), t.dtype),
+        ),
+        interpret=True,
+    )(w, x, y, t, eta, mask)

@@ -1,0 +1,38 @@
+# Shared Pallas plumbing: block-size policy and spec builders.
+#
+# All kernels tile the batch dimension and keep the feature dimension whole
+# inside a block (the paper's models are row-vectors; the update is a rowwise
+# dot followed by an elementwise axpy, so there is no cross-row reuse to
+# exploit).  Block sizes are chosen so one block's working set fits a TPU
+# VMEM budget; on CPU (interpret=True) the same tiling simply bounds the
+# working set per grid step.
+from jax.experimental import pallas as pl
+
+# Per-block VMEM budget (bytes).  A TPU core has ~16 MiB of VMEM; we keep a
+# block's *inputs* under 4 MiB so double-buffering plus outputs fit easily.
+VMEM_BLOCK_BUDGET = 4 * 1024 * 1024
+
+# How many [block_b, D] f32 operands the row-tiled kernels keep live at once
+# (w, x, and the output block).
+_ROW_OPERANDS = 3
+
+
+def row_block(b: int, d: int) -> int:
+    """Pick the batch-tile size for a [B, D] row-wise kernel."""
+    per_row = d * 4 * _ROW_OPERANDS
+    bb = max(1, VMEM_BLOCK_BUDGET // per_row)
+    # round down to a power of two, clamp to [1, min(B, 256)]
+    p = 1
+    while p * 2 <= bb:
+        p *= 2
+    return max(1, min(p, b, 256))
+
+
+def mat_spec(block_b: int, d: int):
+    """BlockSpec for a [B, D] operand tiled along rows only."""
+    return pl.BlockSpec((block_b, d), lambda i: (i, 0))
+
+
+def vec_spec(block_b: int):
+    """BlockSpec for a [B] per-row scalar operand."""
+    return pl.BlockSpec((block_b,), lambda i: (i,))

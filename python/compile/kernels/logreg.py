@@ -1,0 +1,62 @@
+# L1 Pallas kernel: batched L2-regularized online logistic regression.
+#
+# Beyond-paper extension (Section VII claims gossip learning generalizes to
+# any online learner): same Pegasos-style 1/(lambda*t) step schedule, but the
+# log-loss gradient
+#     w' = (1 - eta*lam) w + eta * (y01 - sigmoid(<w, x>)) * x
+# The rust learner (rust/src/learning/logreg.rs) mirrors this math.
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _logreg_kernel(w_ref, x_ref, y_ref, t_ref, lam_ref, mask_ref,
+                   ow_ref, ot_ref):
+    w = w_ref[...]
+    x = x_ref[...]
+    y = y_ref[...]
+    t = t_ref[...]
+    lam = lam_ref[...]
+    mask = mask_ref[...]
+
+    t1 = t + 1.0
+    eta = 1.0 / (lam * t1)
+    z = jnp.sum(w * x, axis=1)
+    p = 1.0 / (1.0 + jnp.exp(-z))            # sigmoid(<w, x>)
+    y01 = (y + 1.0) * 0.5                    # {-1,1} -> {0,1}
+    decay = (1.0 - eta * lam)[:, None] * w
+    w_new = decay + (eta * (y01 - p))[:, None] * x
+
+    m = mask[:, None]
+    ow_ref[...] = m * w_new + (1.0 - m) * w
+    ot_ref[...] = mask * t1 + (1.0 - mask) * t
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def logreg_update(w, x, y, t, lam, mask, *, block_b=None):
+    """Batched logistic-regression update.  Shapes as pegasos_update."""
+    b, d = w.shape
+    bb = block_b or common.row_block(b, d)
+    grid = (pl.cdiv(b, bb),)
+    return pl.pallas_call(
+        _logreg_kernel,
+        grid=grid,
+        in_specs=[
+            common.mat_spec(bb, d),
+            common.mat_spec(bb, d),
+            common.vec_spec(bb),
+            common.vec_spec(bb),
+            common.vec_spec(bb),
+            common.vec_spec(bb),
+        ],
+        out_specs=(common.mat_spec(bb, d), common.vec_spec(bb)),
+        out_shape=(
+            jax.ShapeDtypeStruct((b, d), w.dtype),
+            jax.ShapeDtypeStruct((b,), t.dtype),
+        ),
+        interpret=True,
+    )(w, x, y, t, lam, mask)

@@ -1,0 +1,54 @@
+# L1 Pallas kernel: margins matmul  [N, D] examples x [M, D] models -> [N, M].
+#
+# Serves three consumers in the rust coordinator:
+#   * test-set 0-1 error:      sign(margins) vs labels (paper Section VI-A(h))
+#   * weighted voting (Eq. 7): sign(sum_j margins[:, j])
+#   * model similarity:        margins(w, w) = w w^T, normalized to cosine.
+#
+# TPU shape: a 2-D grid of [block_n, block_m] output tiles; each grid step
+# loads a [block_n, D] slab of examples and a [block_m, D] slab of models and
+# contracts on the MXU.  D is kept whole per block: the paper's feature
+# dimensions (10 .. 9947) fit VMEM alongside the row tiles.
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _margins_kernel(x_ref, w_ref, o_ref):
+    # [block_n, D] @ [D, block_m] on the MXU; f32 accumulation.
+    o_ref[...] = jnp.dot(x_ref[...], w_ref[...].T,
+                         preferred_element_type=jnp.float32)
+
+
+def _tile(n: int, d: int) -> int:
+    per_row = d * 4 * 2  # x slab + w slab, f32
+    bb = max(1, common.VMEM_BLOCK_BUDGET // per_row)
+    p = 1
+    while p * 2 <= bb:
+        p *= 2
+    return max(1, min(p, n, 128))
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_m"))
+def margins(x, w, *, block_n=None, block_m=None):
+    """Raw margins <w_j, x_i>.  x [N,D], w [M,D] -> [N,M]."""
+    n, d = x.shape
+    m, _ = w.shape
+    bn = block_n or _tile(n, d)
+    bm = block_m or _tile(m, d)
+    grid = (pl.cdiv(n, bn), pl.cdiv(m, bm))
+    return pl.pallas_call(
+        _margins_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, bm), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        interpret=True,
+    )(x, w)

@@ -1,0 +1,42 @@
+# L1 Pallas kernel: batched MERGE (Algorithm 3) -- elementwise average of two
+# model populations, with the update counter taken as the pairwise max.
+#
+# This is the paper's core trick: averaging two linear models is (heuristically
+# for Pegasos, exactly for Adaline) equivalent to weighted voting over the
+# exponentially growing set of "virtual" models each carries (Section V).
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _merge_kernel(w1_ref, t1_ref, w2_ref, t2_ref, ow_ref, ot_ref):
+    ow_ref[...] = (w1_ref[...] + w2_ref[...]) * 0.5
+    ot_ref[...] = jnp.maximum(t1_ref[...], t2_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def merge(w1, t1, w2, t2, *, block_b=None):
+    """Pairwise-average two model batches.  w1,w2 [B,D]; t1,t2 [B]."""
+    b, d = w1.shape
+    bb = block_b or common.row_block(b, d)
+    grid = (pl.cdiv(b, bb),)
+    return pl.pallas_call(
+        _merge_kernel,
+        grid=grid,
+        in_specs=[
+            common.mat_spec(bb, d),
+            common.vec_spec(bb),
+            common.mat_spec(bb, d),
+            common.vec_spec(bb),
+        ],
+        out_specs=(common.mat_spec(bb, d), common.vec_spec(bb)),
+        out_shape=(
+            jax.ShapeDtypeStruct((b, d), w1.dtype),
+            jax.ShapeDtypeStruct((b,), t1.dtype),
+        ),
+        interpret=True,
+    )(w1, t1, w2, t2)

@@ -1,0 +1,65 @@
+# L1 Pallas kernel: batched Pegasos update (Algorithm 3, UPDATEPEGASOS).
+#
+# One kernel invocation applies the Pegasos sub-gradient step to a whole
+# batch of (model, local example) pairs at once -- this is the gossip
+# simulator's hot path: every delivery tick, the rust coordinator batches all
+# independent per-node updates into a single [B, D] call (see
+# rust/src/engine/batcher.rs).
+#
+# TPU shape: rows tile VMEM as [block_b, D] blocks (BlockSpec below); the
+# rowwise dot reduces on the VPU, the conditional hinge step is a masked
+# elementwise axpy.  interpret=True everywhere in this image (CPU PJRT).
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _pegasos_kernel(w_ref, x_ref, y_ref, t_ref, lam_ref, mask_ref,
+                    ow_ref, ot_ref):
+    w = w_ref[...]
+    x = x_ref[...]
+    y = y_ref[...]
+    t = t_ref[...]
+    lam = lam_ref[...]
+    mask = mask_ref[...]
+
+    t1 = t + 1.0
+    eta = 1.0 / (lam * t1)                       # eta_t = 1 / (lambda * t)
+    margin = y * jnp.sum(w * x, axis=1)          # y <w, x>
+    decay = (1.0 - eta * lam)[:, None] * w       # (1 - eta*lambda) w
+    hinge = (margin < 1.0).astype(w.dtype)       # hinge-loss subgradient gate
+    w_new = decay + (hinge * eta * y)[:, None] * x
+
+    m = mask[:, None]
+    ow_ref[...] = m * w_new + (1.0 - m) * w
+    ot_ref[...] = mask * t1 + (1.0 - mask) * t
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def pegasos_update(w, x, y, t, lam, mask, *, block_b=None):
+    """Batched Pegasos update.  Shapes: w,x [B,D]; y,t,lam,mask [B]."""
+    b, d = w.shape
+    bb = block_b or common.row_block(b, d)
+    grid = (pl.cdiv(b, bb),)
+    return pl.pallas_call(
+        _pegasos_kernel,
+        grid=grid,
+        in_specs=[
+            common.mat_spec(bb, d),   # w
+            common.mat_spec(bb, d),   # x
+            common.vec_spec(bb),      # y
+            common.vec_spec(bb),      # t
+            common.vec_spec(bb),      # lam
+            common.vec_spec(bb),      # mask
+        ],
+        out_specs=(common.mat_spec(bb, d), common.vec_spec(bb)),
+        out_shape=(
+            jax.ShapeDtypeStruct((b, d), w.dtype),
+            jax.ShapeDtypeStruct((b,), t.dtype),
+        ),
+        interpret=True,
+    )(w, x, y, t, lam, mask)

@@ -1,0 +1,64 @@
+# Pure-jnp correctness oracles for the Pallas kernels.
+#
+# Every kernel in this package has an exact reference implementation here;
+# pytest (python/tests/) sweeps shapes/dtypes with hypothesis and asserts
+# allclose between the pallas interpret-mode kernel and these functions.
+# The rust NativeEngine mirrors the same math (rust/src/learning/), so this
+# file is the single written-down semantics of the hot path.
+import jax.numpy as jnp
+
+
+def pegasos_update_ref(w, x, y, t, lam, mask):
+    """Batched Pegasos (primal SVM SGD) update, Algorithm 3 of the paper.
+
+    Args:
+      w:    [B, D] current models.
+      x:    [B, D] local training examples (one per row/node).
+      y:    [B]    labels in {-1, +1}.
+      t:    [B]    per-model update counts (float32 carrying integers).
+      lam:  [B]    regularization parameter (broadcast per-row).
+      mask: [B]    1.0 = apply update, 0.0 = pass through unchanged.
+
+    Returns (w', t').
+    """
+    t1 = t + 1.0
+    eta = 1.0 / (lam * t1)
+    margin = y * jnp.sum(w * x, axis=-1)
+    decay = (1.0 - eta * lam)[:, None] * w
+    hinge_active = (margin < 1.0).astype(w.dtype)
+    w_new = decay + (hinge_active * eta * y)[:, None] * x
+    m = mask[:, None]
+    return m * w_new + (1.0 - m) * w, mask * t1 + (1.0 - mask) * t
+
+
+def adaline_update_ref(w, x, y, t, eta, mask):
+    """Batched Adaline (Widrow-Hoff LMS) update, Eq. (5) of the paper."""
+    err = y - jnp.sum(w * x, axis=-1)
+    w_new = w + (eta * err)[:, None] * x
+    m = mask[:, None]
+    return m * w_new + (1.0 - m) * w, mask * (t + 1.0) + (1.0 - mask) * t
+
+
+def logreg_update_ref(w, x, y, t, lam, mask):
+    """Batched L2-regularized online logistic regression (extension)."""
+    t1 = t + 1.0
+    eta = 1.0 / (lam * t1)
+    p = 1.0 / (1.0 + jnp.exp(-jnp.sum(w * x, axis=-1)))
+    y01 = (y + 1.0) * 0.5
+    w_new = (1.0 - eta * lam)[:, None] * w + (eta * (y01 - p))[:, None] * x
+    m = mask[:, None]
+    return m * w_new + (1.0 - m) * w, mask * t1 + (1.0 - mask) * t
+
+
+def merge_ref(w1, t1, w2, t2):
+    """Merge two model populations by averaging, Algorithm 3 MERGE."""
+    return (w1 + w2) * 0.5, jnp.maximum(t1, t2)
+
+
+def margins_ref(x, w):
+    """[N, D] examples x [M, D] models -> [N, M] raw margins <w_j, x_i>.
+
+    Used for test-set evaluation, weighted voting (Eq. 7) and as the
+    building block of cosine model similarity (w @ w^T).
+    """
+    return x @ w.T

@@ -1,0 +1,110 @@
+# L2: the gossip-learning compute graphs, composed from the L1 kernels.
+#
+# Each function here is one "op" the rust coordinator executes through PJRT:
+# a whole delivery tick's worth of independent per-node steps, batched into a
+# single [B, D] computation (Algorithm 2's three createModel variants, plus
+# evaluation).  aot.py lowers each op to HLO text per shape bucket; the rust
+# runtime (rust/src/runtime/) loads + compiles the text and keeps python off
+# the request path.
+import jax.numpy as jnp
+
+from .kernels import adaline_update, logreg_update, margins, merge, pegasos_update
+
+
+# --------------------------------------------------------------------------
+# Algorithm 2 variants, batched across nodes.
+# m1 = incoming model (w1, t1); m2 = previously received model (w2, t2);
+# (x, y) = the receiving node's single local example; mask gates padding rows.
+
+def pegasos_rw(w1, x, y, t1, lam, mask):
+    """CREATEMODELRW: update(m1)."""
+    return pegasos_update(w1, x, y, t1, lam, mask)
+
+
+def pegasos_mu(w1, t1, w2, t2, x, y, lam, mask):
+    """CREATEMODELMU: update(merge(m1, m2))."""
+    wm, tm = merge(w1, t1, w2, t2)
+    return pegasos_update(wm, x, y, tm, lam, mask)
+
+
+def pegasos_um(w1, t1, w2, t2, x, y, lam, mask):
+    """CREATEMODELUM: merge(update(m1), update(m2)) -- both updates use the
+    node's same local example (Section V-B discusses why this hurts
+    independence relative to MU)."""
+    u1w, u1t = pegasos_update(w1, x, y, t1, lam, mask)
+    u2w, u2t = pegasos_update(w2, x, y, t2, lam, mask)
+    return merge(u1w, u1t, u2w, u2t)
+
+
+def adaline_rw(w1, x, y, t1, eta, mask):
+    return adaline_update(w1, x, y, t1, eta, mask)
+
+
+def adaline_mu(w1, t1, w2, t2, x, y, eta, mask):
+    wm, tm = merge(w1, t1, w2, t2)
+    return adaline_update(wm, x, y, tm, eta, mask)
+
+
+def adaline_um(w1, t1, w2, t2, x, y, eta, mask):
+    u1w, u1t = adaline_update(w1, x, y, t1, eta, mask)
+    u2w, u2t = adaline_update(w2, x, y, t2, eta, mask)
+    return merge(u1w, u1t, u2w, u2t)
+
+
+def logreg_rw(w1, x, y, t1, lam, mask):
+    return logreg_update(w1, x, y, t1, lam, mask)
+
+
+def logreg_mu(w1, t1, w2, t2, x, y, lam, mask):
+    wm, tm = merge(w1, t1, w2, t2)
+    return logreg_update(wm, x, y, tm, lam, mask)
+
+
+def logreg_um(w1, t1, w2, t2, x, y, lam, mask):
+    u1w, u1t = logreg_update(w1, x, y, t1, lam, mask)
+    u2w, u2t = logreg_update(w2, x, y, t2, lam, mask)
+    return merge(u1w, u1t, u2w, u2t)
+
+
+def merge_op(w1, t1, w2, t2):
+    """Standalone MERGE (used by the coordinator's cache voting paths)."""
+    return merge(w1, t1, w2, t2)
+
+
+# --------------------------------------------------------------------------
+# Evaluation graphs.
+
+def eval_margins(x, w):
+    """Raw margins for a test-set chunk against a model batch: [N, M]."""
+    return (margins(x, w),)
+
+
+def eval_error_counts(x, ylab, w):
+    """Per-model misclassification counts over a test chunk.
+
+    x [N, D], ylab [N] in {-1,+1} (0 rows = padding), w [M, D] -> [M] f32
+    counts of test rows with y * <w, x> <= 0 (0-1 error numerator).
+    Padding rows (ylab == 0) contribute nothing.
+    """
+    mg = margins(x, w)                              # [N, M]
+    signed = ylab[:, None] * mg                     # y_i <w_j, x_i>
+    wrong = (signed <= 0.0).astype(jnp.float32)
+    valid = (ylab != 0.0).astype(jnp.float32)[:, None]
+    return (jnp.sum(wrong * valid, axis=0),)
+
+
+def similarity_mean(w, mask):
+    """Mean pairwise cosine similarity over the masked model rows.
+
+    w [M, D]; mask [M] with K = sum(mask) live rows.  Returns ([] f32,)
+    the average of cos(w_i, w_j) over live i < j pairs (paper VI-A(h)).
+    """
+    norms = jnp.sqrt(jnp.sum(w * w, axis=1))
+    safe = jnp.where(norms > 0.0, norms, 1.0)
+    wn = w / safe[:, None] * mask[:, None]
+    g = margins(wn, wn)                             # [M, M] gram = wn wn^T
+    k = jnp.sum(mask)
+    diag = jnp.sum(jnp.diagonal(g))
+    total = jnp.sum(g) - diag
+    pairs = jnp.maximum(k * (k - 1.0), 1.0)
+    return (total / pairs,)

@@ -1,0 +1,51 @@
+# AOT path: every emitted artifact must be valid HLO text with the expected
+# entry layout, and the manifest must round-trip.
+import os
+import re
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot
+
+
+def test_artifact_list_unique_names():
+    names = [n for n, *_ in aot.artifact_list(aot.QUICK)]
+    assert len(names) == len(set(names))
+    assert "pegasos_mu_b128_d16" in names
+
+
+def test_bucket_tables_sane():
+    for buckets in (aot.QUICK, aot.FULL):
+        for key in ("D", "B", "N", "M"):
+            assert buckets[key] == sorted(buckets[key])
+            assert all(v > 0 for v in buckets[key])
+
+
+def test_lower_one_op_produces_hlo(tmp_path):
+    table = aot.op_table(b=8, d=4, n=8, m=2)
+    fn, args, _ = table["pegasos_rw"]
+    text = aot.to_hlo_text(fn, args)
+    assert text.startswith("HloModule")
+    # entry layout: 6 f32 inputs, tuple of (w', t') outputs
+    m = re.search(r"entry_computation_layout=\{\(([^)]*)\)->", text)
+    assert m and m.group(1).count("f32[8,4]") == 2
+
+
+def test_emit_quick_set(tmp_path):
+    env = dict(os.environ)
+    r = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(tmp_path),
+         "--quick"],
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        capture_output=True, text=True, env=env)
+    assert r.returncode == 0, r.stderr
+    manifest = (tmp_path / "manifest.tsv").read_text().strip().splitlines()
+    rows = [l for l in manifest if not l.startswith("#")]
+    assert len(rows) >= 10
+    for row in rows:
+        name, op, params, fname = row.split("\t")
+        p = tmp_path / fname
+        assert p.exists(), fname
+        assert p.read_text().startswith("HloModule")

@@ -1,0 +1,183 @@
+# pytest: Pallas kernels vs the pure-jnp oracle (ref.py) -- the CORE
+# correctness signal for L1.  hypothesis sweeps shapes and value regimes.
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (adaline_update, margins, merge, pegasos_update)
+from compile.kernels import ref
+from compile.kernels import common
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+def _batch(rng, b, d, scale=1.0):
+    w = jnp.array(rng.normal(size=(b, d), scale=scale), jnp.float32)
+    x = jnp.array(rng.normal(size=(b, d), scale=scale), jnp.float32)
+    y = jnp.array(rng.choice([-1.0, 1.0], b), jnp.float32)
+    t = jnp.array(rng.integers(1, 1000, b), jnp.float32)
+    mask = jnp.array(rng.choice([0.0, 1.0], b), jnp.float32)
+    return w, x, y, t, mask
+
+
+shapes = st.tuples(st.integers(1, 33), st.integers(1, 70))
+
+
+@settings(max_examples=30, deadline=None)
+@given(shapes=shapes, seed=st.integers(0, 2**31 - 1),
+       lam=st.sampled_from([1e-4, 1e-3, 1e-2, 0.1]))
+def test_pegasos_matches_ref(shapes, seed, lam):
+    b, d = shapes
+    w, x, y, t, mask = _batch(_rng(seed), b, d)
+    lamv = jnp.full((b,), lam, jnp.float32)
+    ow, ot = pegasos_update(w, x, y, t, lamv, mask)
+    rw, rt = ref.pegasos_update_ref(w, x, y, t, lamv, mask)
+    np.testing.assert_allclose(ow, rw, rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(ot, rt)
+
+
+@settings(max_examples=30, deadline=None)
+@given(shapes=shapes, seed=st.integers(0, 2**31 - 1),
+       eta=st.sampled_from([1e-4, 1e-2, 0.5]))
+def test_adaline_matches_ref(shapes, seed, eta):
+    b, d = shapes
+    w, x, y, t, mask = _batch(_rng(seed), b, d)
+    etav = jnp.full((b,), eta, jnp.float32)
+    ow, ot = adaline_update(w, x, y, t, etav, mask)
+    rw, rt = ref.adaline_update_ref(w, x, y, t, etav, mask)
+    np.testing.assert_allclose(ow, rw, rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(ot, rt)
+
+
+@settings(max_examples=30, deadline=None)
+@given(shapes=shapes, seed=st.integers(0, 2**31 - 1),
+       lam=st.sampled_from([1e-3, 1e-2, 0.1]))
+def test_logreg_matches_ref(shapes, seed, lam):
+    from compile.kernels import logreg_update
+    b, d = shapes
+    w, x, y, t, mask = _batch(_rng(seed), b, d)
+    lamv = jnp.full((b,), lam, jnp.float32)
+    ow, ot = logreg_update(w, x, y, t, lamv, mask)
+    rw, rt = ref.logreg_update_ref(w, x, y, t, lamv, mask)
+    np.testing.assert_allclose(ow, rw, rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(ot, rt)
+
+
+def test_logreg_probability_moves_toward_label():
+    from compile.kernels import logreg_update
+    w = jnp.zeros((1, 4), jnp.float32)
+    x = jnp.ones((1, 4), jnp.float32)
+    y = jnp.ones((1,), jnp.float32)
+    t = jnp.zeros((1,), jnp.float32)
+    lam = jnp.full((1,), 0.1, jnp.float32)
+    one = jnp.ones((1,), jnp.float32)
+    for _ in range(50):
+        w, t = logreg_update(w, x, y, t, lam, one)
+    p = 1.0 / (1.0 + np.exp(-float(jnp.sum(w * x))))
+    assert p > 0.8, p
+
+
+@settings(max_examples=20, deadline=None)
+@given(shapes=shapes, seed=st.integers(0, 2**31 - 1))
+def test_merge_matches_ref(shapes, seed):
+    b, d = shapes
+    rng = _rng(seed)
+    w1, w2 = (jnp.array(rng.normal(size=(b, d)), jnp.float32) for _ in "ab")
+    t1 = jnp.array(rng.integers(0, 100, b), jnp.float32)
+    t2 = jnp.array(rng.integers(0, 100, b), jnp.float32)
+    ow, ot = merge(w1, t1, w2, t2)
+    rw, rt = ref.merge_ref(w1, t1, w2, t2)
+    np.testing.assert_array_equal(ow, rw)
+    np.testing.assert_array_equal(ot, rt)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 50), m=st.integers(1, 20), d=st.integers(1, 64),
+       seed=st.integers(0, 2**31 - 1))
+def test_margins_matches_ref(n, m, d, seed):
+    rng = _rng(seed)
+    x = jnp.array(rng.normal(size=(n, d)), jnp.float32)
+    w = jnp.array(rng.normal(size=(m, d)), jnp.float32)
+    np.testing.assert_allclose(margins(x, w), ref.margins_ref(x, w),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------- edge cases
+
+def test_pegasos_mask_zero_is_identity():
+    w, x, y, t, _ = _batch(_rng(1), 8, 5)
+    zero = jnp.zeros((8,), jnp.float32)
+    lam = jnp.full((8,), 1e-2, jnp.float32)
+    ow, ot = pegasos_update(w, x, y, t, lam, zero)
+    np.testing.assert_array_equal(ow, w)
+    np.testing.assert_array_equal(ot, t)
+
+
+def test_pegasos_from_zero_model():
+    """First update from the all-zeros init model (Algorithm 3 INITMODEL):
+    margin is 0 < 1, so w_1 = eta_1 * y * x = y x / lambda."""
+    d = 6
+    x = jnp.array(_rng(2).normal(size=(1, d)), jnp.float32)
+    w0 = jnp.zeros((1, d), jnp.float32)
+    y = jnp.array([1.0], jnp.float32)
+    lam = jnp.array([0.01], jnp.float32)
+    ow, ot = pegasos_update(w0, x, y, jnp.zeros((1,), jnp.float32),
+                            lam, jnp.ones((1,), jnp.float32))
+    np.testing.assert_allclose(ow, x / 0.01, rtol=1e-5)
+    assert float(ot[0]) == 1.0
+
+
+def test_pegasos_correct_side_only_decays():
+    """A confidently-correct example (margin >= 1) must only shrink w."""
+    w = jnp.ones((1, 4), jnp.float32)
+    x = jnp.ones((1, 4), jnp.float32)       # <w,x> = 4, y=1 -> margin 4 >= 1
+    y = jnp.array([1.0], jnp.float32)
+    t = jnp.array([9.0], jnp.float32)       # t'=10, eta=1/(lam*10)
+    lam = jnp.array([0.1], jnp.float32)
+    ow, _ = pegasos_update(w, x, y, t, lam, jnp.ones((1,), jnp.float32))
+    np.testing.assert_allclose(ow, w * (1.0 - 1.0 / 10.0), rtol=1e-6)
+
+
+def test_adaline_converges_on_one_example():
+    """Repeated LMS steps on a single example drive the error to zero."""
+    rng = _rng(3)
+    x = jnp.array(rng.normal(size=(1, 8)), jnp.float32)
+    y = jnp.array([1.0], jnp.float32)
+    w = jnp.zeros((1, 8), jnp.float32)
+    t = jnp.zeros((1,), jnp.float32)
+    eta = jnp.array([0.05], jnp.float32)
+    one = jnp.ones((1,), jnp.float32)
+    for _ in range(200):
+        w, t = adaline_update(w, x, y, t, eta, one)
+    err = float(y[0] - jnp.sum(w * x))
+    assert abs(err) < 1e-3
+    assert float(t[0]) == 200.0
+
+
+def test_margins_zero_dims_ok():
+    x = jnp.zeros((4, 3), jnp.float32)
+    w = jnp.zeros((2, 3), jnp.float32)
+    np.testing.assert_array_equal(margins(x, w), jnp.zeros((4, 2)))
+
+
+def test_row_block_respects_budget():
+    for b, d in [(1, 1), (1024, 16), (1024, 10240), (7, 9947)]:
+        bb = common.row_block(b, d)
+        assert 1 <= bb <= max(1, b)
+        assert bb * d * 4 * 3 <= common.VMEM_BLOCK_BUDGET or bb == 1
+
+
+def test_explicit_block_sizes_agree():
+    """Different legal tilings must not change the numbers."""
+    w, x, y, t, mask = _batch(_rng(4), 32, 24)
+    lam = jnp.full((32,), 1e-3, jnp.float32)
+    a = pegasos_update(w, x, y, t, lam, mask, block_b=4)
+    b = pegasos_update(w, x, y, t, lam, mask, block_b=32)
+    np.testing.assert_allclose(a[0], b[0], rtol=1e-5, atol=1e-6)
+    # different tilings reassociate the f32 contraction: tolerate ulp noise
+    m1 = margins(x, w, block_n=8, block_m=8)
+    m2 = margins(x, w, block_n=32, block_m=32)
+    np.testing.assert_allclose(m1, m2, rtol=1e-4, atol=1e-5)

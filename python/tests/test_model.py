@@ -1,0 +1,98 @@
+# L2 graph semantics: the Algorithm-2 compositions and evaluation ops.
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def _mk(seed, b, d):
+    rng = np.random.default_rng(seed)
+    f = lambda *s: jnp.array(rng.normal(size=s), jnp.float32)
+    w1, w2, x = f(b, d), f(b, d), f(b, d)
+    y = jnp.array(rng.choice([-1.0, 1.0], b), jnp.float32)
+    t1 = jnp.array(rng.integers(1, 40, b), jnp.float32)
+    t2 = jnp.array(rng.integers(1, 40, b), jnp.float32)
+    lam = jnp.full((b,), 1e-3, jnp.float32)
+    mask = jnp.ones((b,), jnp.float32)
+    return w1, t1, w2, t2, x, y, lam, mask
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), b=st.integers(1, 17),
+       d=st.integers(1, 40))
+def test_mu_is_update_of_merge(seed, b, d):
+    w1, t1, w2, t2, x, y, lam, mask = _mk(seed, b, d)
+    ow, ot = model.pegasos_mu(w1, t1, w2, t2, x, y, lam, mask)
+    wm, tm = ref.merge_ref(w1, t1, w2, t2)
+    rw, rt = ref.pegasos_update_ref(wm, x, y, tm, lam, mask)
+    np.testing.assert_allclose(ow, rw, rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(ot, rt)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), b=st.integers(1, 17),
+       d=st.integers(1, 40))
+def test_um_is_merge_of_updates(seed, b, d):
+    w1, t1, w2, t2, x, y, lam, mask = _mk(seed, b, d)
+    ow, ot = model.pegasos_um(w1, t1, w2, t2, x, y, lam, mask)
+    u1 = ref.pegasos_update_ref(w1, x, y, t1, lam, mask)
+    u2 = ref.pegasos_update_ref(w2, x, y, t2, lam, mask)
+    rw, rt = ref.merge_ref(u1[0], u1[1], u2[0], u2[1])
+    np.testing.assert_allclose(ow, rw, rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(ot, rt)
+
+
+def test_adaline_um_equals_mu():
+    """Section V-A: for Adaline's linear rule, update and merge commute
+    (Eq. 8), so the UM and MU compositions yield identical models."""
+    w1, t1, w2, t2, x, y, _, mask = _mk(7, 9, 21)
+    eta = jnp.full((9,), 0.01, jnp.float32)
+    mu = model.adaline_mu(w1, t1, w2, t2, x, y, eta, mask)
+    um = model.adaline_um(w1, t1, w2, t2, x, y, eta, mask)
+    np.testing.assert_allclose(mu[0], um[0], rtol=1e-5, atol=1e-6)
+
+
+def test_error_counts_respect_padding():
+    rng = np.random.default_rng(11)
+    x = jnp.array(rng.normal(size=(10, 5)), jnp.float32)
+    w = jnp.array(rng.normal(size=(3, 5)), jnp.float32)
+    y = jnp.array(rng.choice([-1.0, 1.0], 10), jnp.float32)
+    ypad = jnp.concatenate([y[:6], jnp.zeros((4,), jnp.float32)])
+    full = model.eval_error_counts(x[:6], y[:6], w)[0]
+    padded = model.eval_error_counts(x, ypad, w)[0]
+    np.testing.assert_array_equal(full, padded)
+
+
+def test_error_counts_zero_model_counts_all_wrong():
+    """sign(0) <= 0 counts as misclassification for every test row, matching
+    the untrained-model convention of the rust evaluator."""
+    x = jnp.ones((7, 3), jnp.float32)
+    y = jnp.ones((7,), jnp.float32)
+    w = jnp.zeros((1, 3), jnp.float32)
+    assert float(model.eval_error_counts(x, y, w)[0][0]) == 7.0
+
+
+def test_similarity_identical_models_is_one():
+    w = jnp.tile(jnp.array([[1.0, 2.0, 3.0]], jnp.float32), (5, 1))
+    s = model.similarity_mean(w, jnp.ones((5,), jnp.float32))[0]
+    np.testing.assert_allclose(float(s), 1.0, rtol=1e-5)
+
+
+def test_similarity_mask_excludes_rows():
+    rng = np.random.default_rng(5)
+    w = jnp.array(rng.normal(size=(6, 8)), jnp.float32)
+    mask = jnp.array([1, 1, 1, 0, 0, 0], jnp.float32)
+    s = model.similarity_mean(w, mask)[0]
+    wn = np.asarray(w[:3])
+    wn = wn / np.linalg.norm(wn, axis=1, keepdims=True)
+    g = wn @ wn.T
+    exp = (g.sum() - np.trace(g)) / (3 * 2)
+    np.testing.assert_allclose(float(s), exp, rtol=1e-4)
+
+
+def test_opposite_models_similarity_negative():
+    w = jnp.array([[1.0, 0.0], [-1.0, 0.0]], jnp.float32)
+    s = model.similarity_mean(w, jnp.ones((2,), jnp.float32))[0]
+    np.testing.assert_allclose(float(s), -1.0, rtol=1e-5)

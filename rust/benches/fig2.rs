@@ -1,0 +1,48 @@
+//! Bench target regenerating Figure 2: P2PegasosMU vs P2PegasosUM vs
+//! PERFECT MATCHING — prediction error and mean pairwise cosine model
+//! similarity.  CSVs land in results/.
+//!
+//!     cargo bench --bench fig2
+//!     GOLF_SCALE=0.1 GOLF_CYCLES=100 cargo bench --bench fig2   (quick)
+
+use golf::experiments::{self, common, fig2};
+use std::time::Instant;
+
+fn main() {
+    let scale = common::env_scale();
+    let cycles = std::env::var("GOLF_CYCLES").ok().and_then(|s| s.parse().ok());
+    let seed = 42;
+    println!("=== Figure 2 (scale {scale}, cycles {cycles:?}) ===\n");
+    let sets = experiments::datasets(seed, scale);
+
+    let t0 = Instant::now();
+    let panels = fig2::run_figure(&sets, cycles, seed);
+    let dt = t0.elapsed();
+    let dir = common::results_dir();
+    fig2::to_csv(&panels, &dir).expect("writing CSVs");
+
+    for p in &panels {
+        println!("--- {}", p.dataset);
+        for c in &p.curves {
+            let last = c.points.last().unwrap();
+            let mid = &c.points[c.points.len() / 2];
+            println!(
+                "  {:<24} err mid/final {:.3}/{:.3}   similarity mid/final {:.3}/{:.3}",
+                c.label,
+                mid.err_mean,
+                last.err_mean,
+                mid.similarity.unwrap_or(f64::NAN),
+                last.similarity.unwrap_or(f64::NAN),
+            );
+        }
+        println!();
+    }
+    println!(
+        "wrote {} CSV panels to {} in {:.1}s",
+        panels.len(),
+        dir.display(),
+        dt.as_secs_f64()
+    );
+    println!("\nexpected shape (paper): mu converges faster than um; um shows lower model");
+    println!("similarity; perfect matching does not clearly beat random sampling for Pegasos.");
+}

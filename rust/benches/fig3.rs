@@ -1,0 +1,62 @@
+//! Bench target regenerating Figure 3: local voting (Algorithm 4, cache 10)
+//! vs freshest-model prediction for RW and MU, with and without failures.
+//! Includes the beyond-paper cache-size ablation (DESIGN.md §8).
+//!
+//!     cargo bench --bench fig3
+//!     GOLF_SCALE=0.1 GOLF_CYCLES=100 cargo bench --bench fig3   (quick)
+
+use golf::experiments::{self, common, fig3};
+use std::time::Instant;
+
+fn main() {
+    let scale = common::env_scale();
+    let cycles = std::env::var("GOLF_CYCLES").ok().and_then(|s| s.parse().ok());
+    let seed = 42;
+    println!("=== Figure 3 (scale {scale}, cycles {cycles:?}) ===\n");
+    let sets = experiments::datasets(seed, scale);
+
+    let t0 = Instant::now();
+    let panels = fig3::run_figure(&sets, cycles, seed);
+    let dt = t0.elapsed();
+    let dir = common::results_dir();
+    fig3::to_csv(&panels, &dir).expect("writing CSVs");
+
+    for p in &panels {
+        println!(
+            "--- {} ({})",
+            p.dataset,
+            if p.failures { "all failures" } else { "no failures" }
+        );
+        for c in &p.curves {
+            let last = c.points.last().unwrap();
+            println!(
+                "  {:<16} freshest {:.3} -> voted {:.3}  (gain {:+.3})",
+                c.label,
+                last.err_mean,
+                last.err_vote.unwrap_or(f64::NAN),
+                last.err_mean - last.err_vote.unwrap_or(f64::NAN),
+            );
+        }
+    }
+
+    // ablation: cache size sweep on the urls dataset (MU)
+    println!("\n--- cache-size ablation (urls, MU, beyond paper)");
+    let e = &sets[2];
+    let sweep_cycles = cycles.unwrap_or(200).min(200);
+    for (size, curve) in fig3::cache_sweep(e, sweep_cycles, &[1, 2, 5, 10, 20], seed) {
+        let last = curve.points.last().unwrap();
+        println!(
+            "  cache {size:>2}: freshest {:.3}  voted {:.3}",
+            last.err_mean,
+            last.err_vote.unwrap_or(f64::NAN)
+        );
+    }
+    println!(
+        "\nwrote {} CSV panels to {} in {:.1}s",
+        panels.len(),
+        dir.display(),
+        dt.as_secs_f64()
+    );
+    println!("\nexpected shape (paper): voting helps rw a lot, mu a little; early cycles can");
+    println!("degrade slightly (cached models are staler than the freshest).");
+}

@@ -1,0 +1,166 @@
+//! Performance microbenches for the whole stack (EXPERIMENTS.md §Perf):
+//!
+//! * L3 event-driven simulator: delivered messages/s end to end.
+//! * Native backend: batched update + eval throughput at paper shapes.
+//! * PJRT backend: the same ops through the AOT artifacts, including the
+//!   per-call overhead / batch-size break-even.
+//!
+//!     cargo bench --bench perf
+
+use golf::data::synthetic::{reuters_like, spambase_like, urls_like, Scale};
+use golf::engine::native::NativeBackend;
+use golf::engine::pjrt::PjrtBackend;
+use golf::engine::{Backend, LearnerKind, StepBatch, StepOp};
+use golf::gossip::create_model::Variant;
+use golf::gossip::protocol::{run, ProtocolConfig};
+use golf::util::benchkit::bench;
+use golf::util::rng::Rng;
+
+fn batch(rng: &mut Rng, b: usize, d: usize) -> StepBatch {
+    let mut sb = StepBatch::default();
+    sb.resize(b, d);
+    for v in sb.w1.iter_mut().chain(&mut sb.w2).chain(&mut sb.x) {
+        *v = rng.normal() as f32;
+    }
+    for i in 0..b {
+        sb.y[i] = rng.sign();
+        sb.t1[i] = 1.0 + rng.below(100) as f32;
+        sb.t2[i] = 1.0 + rng.below(100) as f32;
+    }
+    sb
+}
+
+fn main() {
+    let mut rng = Rng::new(1);
+
+    println!("--- L3 event-driven simulator throughput");
+    for (name, ds, cycles) in [
+        ("urls 1000 nodes d=10", urls_like(1, Scale(0.1)), 50u64),
+        ("spambase 4140 nodes d=57", spambase_like(1, Scale::FULL), 20),
+        ("reuters 500 nodes d=9947", reuters_like(1, Scale(0.25)), 10),
+    ] {
+        let mut msgs = 0u64;
+        let r = bench(&format!("event sim: {name}"), 0, 3, || {
+            let mut cfg = ProtocolConfig::paper_default(cycles);
+            cfg.eval.n_peers = 0; // isolate protocol cost from eval cost
+            cfg.eval.at_cycles = vec![cycles];
+            let res = run(cfg, &ds);
+            msgs = res.stats.messages_sent;
+        });
+        println!(
+            "    -> {:.2} M delivered messages/s",
+            r.throughput(msgs as f64) / 1e6
+        );
+    }
+
+    println!("\n--- native backend: batched MU step");
+    let op = StepOp { learner: LearnerKind::Pegasos, variant: Variant::Mu, hp: 0.01 };
+    let mut native = NativeBackend::new();
+    for (b, d) in [(128, 10), (1024, 10), (128, 57), (1024, 57), (128, 1024), (128, 10240)] {
+        let mut sb = batch(&mut rng, b, d);
+        let r = bench(&format!("native mu step b={b} d={d}"), 2, 10, || {
+            native.step(&op, &mut sb).unwrap();
+        });
+        println!("    -> {:.2} M row-updates/s", r.throughput(b as f64) / 1e6);
+    }
+
+    println!("\n--- native backend: eval error_counts");
+    for (n, d, m) in [(1024, 10, 100), (1024, 57, 100), (600, 9947, 100)] {
+        let x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let y: Vec<f32> = (0..n).map(|_| rng.sign()).collect();
+        let w: Vec<f32> = (0..m * d).map(|_| rng.normal() as f32).collect();
+        let r = bench(&format!("native eval n={n} d={d} m={m}"), 1, 5, || {
+            std::hint::black_box(native.error_counts(&x, &y, n, d, &w, m).unwrap());
+        });
+        println!(
+            "    -> {:.2} G dot-products/s",
+            r.throughput((n * m) as f64) / 1e9
+        );
+    }
+
+    let dir = PjrtBackend::default_dir();
+    if dir.join("manifest.tsv").exists() {
+        println!("\n--- PJRT backend: batched MU step (AOT artifacts, CPU client)");
+        let mut pjrt = PjrtBackend::new(&dir).expect("pjrt backend");
+        for (b, d) in [(1, 10), (16, 10), (128, 10), (1024, 10), (128, 57), (1024, 57), (128, 1024)] {
+            let mut sb = batch(&mut rng, b, d);
+            let r = bench(&format!("pjrt mu step b={b} d={d}"), 2, 10, || {
+                pjrt.step(&op, &mut sb).unwrap();
+            });
+            println!(
+                "    -> {:.3} M row-updates/s (per-call overhead amortized over {b} rows)",
+                r.throughput(b as f64) / 1e6
+            );
+        }
+        println!("\n--- PJRT backend: eval error_counts");
+        for (n, d, m) in [(1024, 10, 100), (1024, 57, 100)] {
+            let x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+            let y: Vec<f32> = (0..n).map(|_| rng.sign()).collect();
+            let w: Vec<f32> = (0..m * d).map(|_| rng.normal() as f32).collect();
+            let r = bench(&format!("pjrt eval n={n} d={d} m={m}"), 1, 5, || {
+                std::hint::black_box(pjrt.error_counts(&x, &y, n, d, &w, m).unwrap());
+            });
+            println!(
+                "    -> {:.2} G dot-products/s",
+                r.throughput((n * m) as f64) / 1e9
+            );
+        }
+    } else {
+        println!("\n(pjrt benches skipped: no artifacts — run `make artifacts`)");
+    }
+
+    println!("\n--- L3 hot-path optimization: CREATEMODEL before/after (perf §L3)");
+    {
+        use golf::data::dataset::Row;
+        use golf::gossip::create_model::{create_model, create_model_step};
+        use golf::learning::{Learner, LinearModel};
+        for d in [57usize, 9947] {
+            let learner = Learner::pegasos(0.01);
+            let w1: Vec<f32> = (0..d).map(|i| (i % 7) as f32).collect();
+            let w2: Vec<f32> = (0..d).map(|i| (i % 5) as f32).collect();
+            let x: Vec<f32> = (0..d).map(|i| (i % 3) as f32 * 0.1).collect();
+            // BEFORE: reference path — clone incoming + allocating merge
+            let before = bench(&format!("createModel MU reference d={d}"), 100, 2000, || {
+                let m1 = LinearModel::from_weights(w1.clone(), 10);
+                let m2 = LinearModel::from_weights(w2.clone(), 12);
+                std::hint::black_box(create_model(
+                    Variant::Mu,
+                    &learner,
+                    m1.clone(), // simulator used to clone for lastModel
+                    &m2,
+                    &Row::Dense(&x),
+                    1.0,
+                ));
+            });
+            // AFTER: in-place step used by the simulator
+            let mut last = LinearModel::from_weights(w2.clone(), 12);
+            let after = bench(&format!("createModel MU step      d={d}"), 100, 2000, || {
+                let m1 = LinearModel::from_weights(w1.clone(), 10);
+                std::hint::black_box(create_model_step(
+                    Variant::Mu,
+                    &learner,
+                    m1,
+                    &mut last,
+                    &Row::Dense(&x),
+                    1.0,
+                ));
+            });
+            println!(
+                "    -> speedup x{:.2} (both include the unavoidable one message-buffer alloc)",
+                before.mean_ns / after.mean_ns
+            );
+        }
+    }
+
+    println!("\n--- merge / model algebra");
+    {
+        use golf::learning::LinearModel;
+        let d = 9947;
+        let a = LinearModel::from_weights((0..d).map(|i| i as f32).collect(), 1);
+        let b = LinearModel::from_weights((0..d).map(|i| (d - i) as f32).collect(), 2);
+        let r = bench("merge d=9947", 10, 100, || {
+            std::hint::black_box(LinearModel::merge(&a, &b));
+        });
+        println!("    -> {:.2} GB/s effective", r.throughput((d * 4 * 3) as f64) / 1e9);
+    }
+}

@@ -1,0 +1,39 @@
+//! Bench target regenerating Table I: dataset statistics + sequential
+//! Pegasos error after 20,000 iterations, with run-time measurement.
+//!
+//!     cargo bench --bench table1
+//!     GOLF_SCALE=0.1 cargo bench --bench table1     (quick)
+
+use golf::experiments::{self, common, table1};
+use golf::util::benchkit::bench;
+
+fn main() {
+    let scale = common::env_scale();
+    let seed = 42;
+    println!("=== Table I (scale {scale}) ===\n");
+    let sets = experiments::datasets(seed, scale);
+
+    let rows = table1::run(&sets, seed);
+    table1::print(&rows);
+
+    println!("\ntiming the 20k-iteration baseline per dataset:");
+    for e in &sets {
+        bench(&format!("pegasos-20k {}", e.ds.name), 0, 1, || {
+            std::hint::black_box(golf::baselines::sequential::pegasos_20k_error(
+                &e.ds, e.lambda, seed,
+            ));
+        });
+    }
+
+    println!("\npaper-vs-measured (shape check): errors within 0.05 of Table I");
+    for r in &rows {
+        let ok = (r.pegasos_20k - r.paper_pegasos_20k).abs() < 0.05;
+        println!(
+            "  {}: ours {:.3} vs paper {:.3}  [{}]",
+            r.name,
+            r.pegasos_20k,
+            r.paper_pegasos_20k,
+            if ok { "ok" } else { "DIVERGES" }
+        );
+    }
+}

@@ -1,0 +1,9 @@
+//! Baseline algorithms from Section VI-A: sequential Pegasos, the two
+//! weighted-bagging idealizations, and the perfect-matching sampler variant.
+pub mod perfect_matching;
+pub mod sequential;
+pub mod weighted_bagging;
+
+pub use perfect_matching::run_perfect_matching;
+pub use sequential::pegasos_20k_error;
+pub use weighted_bagging::Bagging;

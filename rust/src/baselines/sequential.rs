@@ -1,0 +1,75 @@
+//! Sequential Pegasos baseline (Table I last row, Fig. 1 "Pegasos"): a
+//! single model trained on uniformly drawn examples.  In cycle t this is
+//! exactly what P2PegasosRW produces at every node in the failure-free case,
+//! so it doubles as the no-merge convergence reference.
+
+use crate::data::dataset::Dataset;
+use crate::eval::tracker::{point_from_errors, Curve};
+use crate::eval::{self, zero_one_error};
+use crate::learning::{Learner, LinearModel};
+use crate::util::rng::Rng;
+
+/// Train for `iters` uniform random samples; return the final model.
+pub fn train(data: &Dataset, learner: &Learner, iters: u64, seed: u64) -> LinearModel {
+    let mut rng = Rng::new(seed);
+    let n = data.n_train();
+    let mut m = LinearModel::zeros(data.d());
+    for _ in 0..iters {
+        let i = rng.below_usize(n);
+        learner.update(&mut m, &data.train.row(i), data.train_y[i]);
+    }
+    m
+}
+
+/// Table I bottom row: 0-1 test error after 20,000 Pegasos iterations.
+pub fn pegasos_20k_error(data: &Dataset, lambda: f32, seed: u64) -> f64 {
+    let m = train(data, &Learner::pegasos(lambda), 20_000, seed);
+    zero_one_error(&m, &data.test, &data.test_y)
+}
+
+/// Error curve on the log-spaced cycle grid: the model at point t has seen
+/// exactly t samples (one gossip cycle = one update in the paper's
+/// accounting).
+pub fn curve(data: &Dataset, learner: &Learner, cycles: u64, seed: u64) -> Curve {
+    let mut rng = Rng::new(seed);
+    let n = data.n_train();
+    let mut m = LinearModel::zeros(data.d());
+    let mut c = Curve::new(format!("{}-sequential", learner.name()));
+    let grid = eval::log_spaced_cycles(cycles);
+    let mut done = 0u64;
+    for &target in &grid {
+        while done < target {
+            let i = rng.below_usize(n);
+            learner.update(&mut m, &data.train.row(i), data.train_y[i]);
+            done += 1;
+        }
+        let e = zero_one_error(&m, &data.test, &data.test_y);
+        c.push(point_from_errors(target, &[e], None, None, 0));
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{urls_like, Scale};
+
+    #[test]
+    fn curve_error_falls() {
+        let ds = urls_like(1, Scale(0.02));
+        let c = curve(&ds, &Learner::pegasos(0.01), 2000, 7);
+        let first = c.points.first().unwrap().err_mean;
+        let last = c.final_error();
+        assert!(last < first, "{first} -> {last}");
+        assert!(last < 0.2);
+    }
+
+    #[test]
+    fn train_is_deterministic() {
+        let ds = urls_like(2, Scale(0.01));
+        let a = train(&ds, &Learner::pegasos(0.01), 500, 3);
+        let b = train(&ds, &Learner::pegasos(0.01), 500, 3);
+        assert_eq!(a.weights(), b.weights());
+        assert_eq!(a.t, 500);
+    }
+}

@@ -1,0 +1,105 @@
+//! Weighted bagging baselines WB1 / WB2 (Section VI-A(e), Eq. 18-19):
+//! N models trained on independent uniform sample streams — the *ideal*
+//! utilization of the N parallel updates the network performs per cycle.
+//!
+//! Key implementation shortcut, straight from the paper's own Eq. (6)/(7):
+//! margin-weighted voting over a set of linear models equals prediction by
+//! their average, so the vote over N (or min(2^t, N)) models reduces to one
+//! summed model — evaluation is O(d) per test row instead of O(N d).
+
+use crate::data::dataset::Dataset;
+use crate::eval::tracker::{point_from_errors, Curve};
+use crate::eval::{self, zero_one_error};
+use crate::learning::{Learner, LinearModel};
+use crate::util::rng::Rng;
+
+pub enum Bagging {
+    /// Eq. (18): vote over all N models.
+    Wb1,
+    /// Eq. (19): vote over min(2^t, N) models — the number of models a
+    /// gossip node has (transitively) heard from by cycle t.
+    Wb2,
+}
+
+/// Error curves for the chosen variant.  Models are updated once per cycle
+/// each, on independent uniform streams.
+pub fn curve(data: &Dataset, learner: &Learner, variant: Bagging, cycles: u64, seed: u64) -> Curve {
+    let n = data.n_train();
+    let d = data.d();
+    let mut rng = Rng::new(seed);
+    let mut models: Vec<LinearModel> = (0..n).map(|_| LinearModel::zeros(d)).collect();
+
+    let label = match variant {
+        Bagging::Wb1 => "wb1",
+        Bagging::Wb2 => "wb2",
+    };
+    let mut curve = Curve::new(label);
+    let grid = eval::log_spaced_cycles(cycles);
+    let mut done = 0u64;
+
+    for &target in &grid {
+        while done < target {
+            for m in models.iter_mut() {
+                let i = rng.below_usize(n);
+                learner.update(m, &data.train.row(i), data.train_y[i]);
+            }
+            done += 1;
+        }
+        // voting == averaged model (Eq. 6/7); subset for WB2
+        let k = match variant {
+            Bagging::Wb1 => n,
+            Bagging::Wb2 => {
+                if target >= 63 {
+                    n
+                } else {
+                    ((1u64 << target.min(62)) as usize).min(n)
+                }
+            }
+        };
+        let mut sum = vec![0.0f32; d];
+        // a fresh random subset per measurement, as a node's 2^t influence
+        // set is random
+        let idx = rng.sample_indices(n, k);
+        let mut buf = vec![0.0f32; d];
+        for &i in &idx {
+            models[i].write_weights(&mut buf);
+            for (s, &v) in sum.iter_mut().zip(&buf) {
+                *s += v;
+            }
+        }
+        let avg = LinearModel::from_weights(sum, target);
+        let e = zero_one_error(&avg, &data.test, &data.test_y);
+        curve.push(point_from_errors(target, &[e], None, None, 0));
+    }
+    curve
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{urls_like, Scale};
+
+    #[test]
+    fn wb1_converges_fast() {
+        let ds = urls_like(1, Scale(0.02));
+        let c = curve(&ds, &Learner::pegasos(0.01), Bagging::Wb1, 30, 5);
+        assert!(c.final_error() < 0.2, "final {}", c.final_error());
+        // bagging should already be decent after very few cycles
+        let early = c.points.iter().find(|p| p.cycle == 5).unwrap().err_mean;
+        assert!(early < 0.35, "early {early}");
+    }
+
+    #[test]
+    fn wb2_approaches_wb1() {
+        let ds = urls_like(2, Scale(0.02));
+        let w1 = curve(&ds, &Learner::pegasos(0.01), Bagging::Wb1, 40, 5);
+        let w2 = curve(&ds, &Learner::pegasos(0.01), Bagging::Wb2, 40, 5);
+        // by cycle 40, 2^t >> N so the two coincide in distribution
+        assert!((w1.final_error() - w2.final_error()).abs() < 0.05);
+        // at cycle 1, WB2 votes over 2 models and should generally be worse
+        // than WB1's full vote (allow equality on easy seeds)
+        let e1 = w1.points.iter().find(|p| p.cycle == 1).unwrap().err_mean;
+        let e2 = w2.points.iter().find(|p| p.cycle == 1).unwrap().err_mean;
+        assert!(e2 >= e1 - 0.05, "wb2 {e2} vs wb1 {e1}");
+    }
+}

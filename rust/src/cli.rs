@@ -1,0 +1,276 @@
+//! Hand-rolled CLI for the `golf` binary (the offline crate set has no
+//! clap).  Subcommands:
+//!
+//! ```text
+//! golf run [--config FILE] [--key value ...]   run one experiment
+//! golf table1 [--scale S] [--seed N]           reproduce Table I
+//! golf fig1|fig2|fig3 [--scale S] [--cycles N] reproduce a figure
+//! golf info                                    artifact/runtime info
+//! ```
+//!
+//! `--key value` flags mirror the INI keys of config::ExperimentSpec.
+
+use crate::config::{BackendChoice, ExperimentSpec};
+use crate::engine::batched::run_batched;
+use crate::engine::native::NativeBackend;
+use crate::engine::pjrt::PjrtBackend;
+use crate::experiments::{self, common};
+use crate::gossip::protocol::RunResult;
+use std::collections::HashMap;
+
+pub struct ParsedArgs {
+    pub command: String,
+    pub flags: HashMap<String, String>,
+}
+
+/// Parse `--key value` pairs after the subcommand. Bare `--flag` followed by
+/// another flag (or end) gets value "true".
+pub fn parse_args(args: &[String]) -> Result<ParsedArgs, String> {
+    let command = args.first().cloned().unwrap_or_else(|| "help".to_string());
+    let mut flags = HashMap::new();
+    let mut i = 1;
+    while i < args.len() {
+        let a = &args[i];
+        let key = a
+            .strip_prefix("--")
+            .ok_or(format!("expected --flag, got {a:?}"))?;
+        let next_is_value = args.get(i + 1).map_or(false, |n| !n.starts_with("--"));
+        if next_is_value {
+            flags.insert(key.to_string(), args[i + 1].clone());
+            i += 2;
+        } else {
+            flags.insert(key.to_string(), "true".to_string());
+            i += 1;
+        }
+    }
+    Ok(ParsedArgs { command, flags })
+}
+
+pub fn usage() -> &'static str {
+    "golf — gossip learning with linear models (Ormándi et al., 2011)
+
+USAGE:
+  golf run    [--config FILE] [--dataset D] [--scale S] [--cycles N]
+              [--variant rw|mu|um] [--learner pegasos|adaline]
+              [--failures none|extreme] [--backend event|batched-native|batched-pjrt]
+              [--voting true] [--similarity true] [--seed N] [--out FILE.csv]
+  golf table1 [--scale S] [--seed N]
+  golf fig1   [--scale S] [--cycles N] [--seed N] [--out-dir DIR]
+  golf fig2   [--scale S] [--cycles N] [--seed N] [--out-dir DIR]
+  golf fig3   [--scale S] [--cycles N] [--seed N] [--out-dir DIR]
+  golf info"
+}
+
+fn spec_from_flags(flags: &HashMap<String, String>) -> Result<ExperimentSpec, String> {
+    let mut spec = if let Some(path) = flags.get("config") {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        ExperimentSpec::from_ini(&text)?
+    } else {
+        ExperimentSpec::default()
+    };
+    let mut kv = flags.clone();
+    kv.remove("config");
+    kv.remove("out");
+    spec.apply(&kv)?;
+    Ok(spec)
+}
+
+fn run_spec(spec: &ExperimentSpec) -> Result<RunResult, String> {
+    let ds = spec.build_dataset()?;
+    let cfg = spec.protocol_config()?;
+    eprintln!(
+        "running {} on {} ({} nodes, d={}) for {} cycles [{}]",
+        cfg.variant.name(),
+        ds.name,
+        ds.n_train(),
+        ds.d(),
+        cfg.cycles,
+        spec.backend.name()
+    );
+    match spec.backend {
+        BackendChoice::Event => Ok(crate::gossip::run(cfg, &ds)),
+        BackendChoice::BatchedNative => {
+            let mut be = NativeBackend::new();
+            run_batched(cfg, &ds, &mut be).map_err(|e| e.to_string())
+        }
+        BackendChoice::BatchedPjrt => {
+            let mut be = PjrtBackend::new(&PjrtBackend::default_dir())
+                .map_err(|e| format!("{e:#}"))?;
+            run_batched(cfg, &ds, &mut be).map_err(|e| format!("{e:#}"))
+        }
+    }
+}
+
+fn print_curve(res: &RunResult) {
+    let mut t = crate::util::benchkit::Table::new(&[
+        "cycle", "err", "±std", "vote", "similarity", "msgs",
+    ]);
+    for p in &res.curve.points {
+        t.row(&[
+            p.cycle.to_string(),
+            format!("{:.4}", p.err_mean),
+            format!("{:.4}", p.err_std),
+            p.err_vote.map_or("-".into(), |v| format!("{v:.4}")),
+            p.similarity.map_or("-".into(), |v| format!("{v:.4}")),
+            p.messages_sent.to_string(),
+        ]);
+    }
+    t.print();
+    eprintln!(
+        "sent={} dropped={} lost_offline={} updates={}",
+        res.stats.messages_sent,
+        res.stats.messages_dropped,
+        res.stats.messages_lost_offline,
+        res.stats.updates_applied
+    );
+}
+
+/// Entry point used by main.rs; returns a process exit code.
+pub fn dispatch(args: &[String]) -> i32 {
+    let parsed = match parse_args(args) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{}", usage());
+            return 2;
+        }
+    };
+    match run_command(&parsed) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn fig_args(flags: &HashMap<String, String>) -> Result<(f64, Option<u64>, u64, std::path::PathBuf), String> {
+    let scale: f64 = flags.get("scale").map_or(Ok(common::env_scale()), |s| {
+        s.parse().map_err(|_| format!("bad scale {s:?}"))
+    })?;
+    let cycles: Option<u64> = match flags.get("cycles") {
+        Some(s) => Some(s.parse().map_err(|_| format!("bad cycles {s:?}"))?),
+        None => None,
+    };
+    let seed: u64 = flags.get("seed").map_or(Ok(42), |s| {
+        s.parse().map_err(|_| format!("bad seed {s:?}"))
+    })?;
+    let out: std::path::PathBuf = flags
+        .get("out-dir")
+        .map(Into::into)
+        .unwrap_or_else(common::results_dir);
+    Ok((scale, cycles, seed, out))
+}
+
+fn run_command(parsed: &ParsedArgs) -> Result<(), String> {
+    match parsed.command.as_str() {
+        "run" => {
+            let spec = spec_from_flags(&parsed.flags)?;
+            let res = run_spec(&spec)?;
+            print_curve(&res);
+            if let Some(out) = parsed.flags.get("out") {
+                crate::eval::csv::write_curves(std::path::Path::new(out), &[res.curve.clone()])
+                    .map_err(|e| e.to_string())?;
+                eprintln!("wrote {out}");
+            }
+            Ok(())
+        }
+        "table1" => {
+            let (scale, _, seed, _) = fig_args(&parsed.flags)?;
+            let sets = experiments::datasets(seed, scale);
+            let rows = experiments::table1::run(&sets, seed);
+            experiments::table1::print(&rows);
+            Ok(())
+        }
+        "fig1" => {
+            let (scale, cycles, seed, out) = fig_args(&parsed.flags)?;
+            let sets = experiments::datasets(seed, scale);
+            let panels = experiments::fig1::run_figure(&sets, cycles, seed);
+            experiments::fig1::to_csv(&panels, &out).map_err(|e| e.to_string())?;
+            eprintln!("wrote {} panels to {}", panels.len(), out.display());
+            Ok(())
+        }
+        "fig2" => {
+            let (scale, cycles, seed, out) = fig_args(&parsed.flags)?;
+            let sets = experiments::datasets(seed, scale);
+            let panels = experiments::fig2::run_figure(&sets, cycles, seed);
+            experiments::fig2::to_csv(&panels, &out).map_err(|e| e.to_string())?;
+            eprintln!("wrote {} panels to {}", panels.len(), out.display());
+            Ok(())
+        }
+        "fig3" => {
+            let (scale, cycles, seed, out) = fig_args(&parsed.flags)?;
+            let sets = experiments::datasets(seed, scale);
+            let panels = experiments::fig3::run_figure(&sets, cycles, seed);
+            experiments::fig3::to_csv(&panels, &out).map_err(|e| e.to_string())?;
+            eprintln!("wrote {} panels to {}", panels.len(), out.display());
+            Ok(())
+        }
+        "info" => {
+            let dir = PjrtBackend::default_dir();
+            match crate::runtime::Runtime::load(&dir) {
+                Ok(rt) => {
+                    println!("platform: {}", rt.platform());
+                    println!("artifacts: {} ({} ops)", dir.display(), rt.manifest().ops().len());
+                    for op in rt.manifest().ops() {
+                        let n = rt.manifest().entries.iter().filter(|e| e.op == op).count();
+                        println!("  {op}: {n} shape buckets");
+                    }
+                }
+                Err(e) => println!("artifacts not available at {}: {e}", dir.display()),
+            }
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => Err(format!("unknown command {other:?}\n\n{}", usage())),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_flags_with_values_and_bools() {
+        let p = parse_args(&s(&["run", "--dataset", "urls", "--voting", "--seed", "7"])).unwrap();
+        assert_eq!(p.command, "run");
+        assert_eq!(p.flags["dataset"], "urls");
+        assert_eq!(p.flags["voting"], "true");
+        assert_eq!(p.flags["seed"], "7");
+    }
+
+    #[test]
+    fn rejects_positional_garbage() {
+        assert!(parse_args(&s(&["run", "oops"])).is_err());
+    }
+
+    #[test]
+    fn spec_from_flags_applies_overrides() {
+        let p = parse_args(&s(&["run", "--dataset", "spambase", "--cycles", "5"])).unwrap();
+        let spec = spec_from_flags(&p.flags).unwrap();
+        assert_eq!(spec.dataset, "spambase");
+        assert_eq!(spec.cycles, 5);
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        let p = parse_args(&s(&["frobnicate"])).unwrap();
+        assert!(run_command(&p).is_err());
+    }
+
+    #[test]
+    fn tiny_run_end_to_end() {
+        let p = parse_args(&s(&[
+            "run", "--dataset", "urls", "--scale", "0.005", "--cycles", "5",
+            "--eval_peers", "5",
+        ]))
+        .unwrap();
+        run_command(&p).unwrap();
+    }
+}

@@ -1,0 +1,83 @@
+//! Tiny INI parser: `[section]` headers, `key = value` pairs, `;`/`#`
+//! comments, blank lines.  Values keep internal whitespace.
+
+use std::collections::HashMap;
+
+pub type Section = HashMap<String, String>;
+pub type Document = HashMap<String, Section>;
+
+pub fn parse(text: &str) -> Result<Document, String> {
+    let mut doc: Document = HashMap::new();
+    let mut current = String::from("");
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[') {
+            let name = name
+                .strip_suffix(']')
+                .ok_or(format!("line {}: unterminated section", lineno + 1))?
+                .trim();
+            if name.is_empty() {
+                return Err(format!("line {}: empty section name", lineno + 1));
+            }
+            current = name.to_string();
+            doc.entry(current.clone()).or_default();
+        } else if let Some((k, v)) = line.split_once('=') {
+            let (k, v) = (k.trim(), v.trim());
+            if k.is_empty() {
+                return Err(format!("line {}: empty key", lineno + 1));
+            }
+            doc.entry(current.clone())
+                .or_default()
+                .insert(k.to_string(), v.to_string());
+        } else {
+            return Err(format!("line {}: expected `key = value`", lineno + 1));
+        }
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    let cut = line
+        .find(';')
+        .into_iter()
+        .chain(line.find('#'))
+        .min()
+        .unwrap_or(line.len());
+    &line[..cut]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_pairs() {
+        let d = parse("[a]\nx = 1\ny = hello world\n[b]\nz=2 # trailing").unwrap();
+        assert_eq!(d["a"]["x"], "1");
+        assert_eq!(d["a"]["y"], "hello world");
+        assert_eq!(d["b"]["z"], "2");
+    }
+
+    #[test]
+    fn top_level_keys_in_anonymous_section() {
+        let d = parse("k = v").unwrap();
+        assert_eq!(d[""]["k"], "v");
+    }
+
+    #[test]
+    fn comments_and_blank_lines() {
+        let d = parse("; full comment\n\n# another\n[s]\nk = v ; tail").unwrap();
+        assert_eq!(d["s"]["k"], "v");
+    }
+
+    #[test]
+    fn errors_are_reported_with_lines() {
+        assert!(parse("[unterminated").unwrap_err().contains("line 1"));
+        assert!(parse("[s]\nnonsense").unwrap_err().contains("line 2"));
+        assert!(parse("= v").unwrap_err().contains("empty key"));
+        assert!(parse("[]").unwrap_err().contains("empty section"));
+    }
+}

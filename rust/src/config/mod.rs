@@ -1,0 +1,264 @@
+//! Experiment configuration: a small INI-style format (the offline crate set
+//! has no serde/toml) plus the mapping onto `ProtocolConfig` and datasets.
+//!
+//! ```ini
+//! [experiment]
+//! dataset = urls          ; reuters | spambase | urls
+//! scale = 0.1             ; dataset size multiplier
+//! cycles = 200
+//! variant = mu            ; rw | mu | um
+//! learner = pegasos       ; pegasos | adaline | logreg
+//! lambda = 0.01
+//! cache = 10
+//! sampler = newscast      ; newscast | oracle | matching
+//! view = 20
+//! failures = none         ; none | extreme
+//! seed = 42
+//! eval_peers = 100
+//! voting = false
+//! similarity = false
+//! backend = event         ; event | batched-native | batched-pjrt
+//! ```
+
+use crate::data::dataset::Dataset;
+use crate::data::synthetic::{reuters_like, spambase_like, urls_like, Scale};
+use crate::gossip::create_model::Variant;
+use crate::gossip::protocol::ProtocolConfig;
+use crate::learning::Learner;
+use crate::p2p::overlay::SamplerConfig;
+use std::collections::HashMap;
+
+pub mod ini;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendChoice {
+    Event,
+    BatchedNative,
+    BatchedPjrt,
+}
+
+impl BackendChoice {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "event" => Some(BackendChoice::Event),
+            "batched-native" => Some(BackendChoice::BatchedNative),
+            "batched-pjrt" => Some(BackendChoice::BatchedPjrt),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendChoice::Event => "event",
+            BackendChoice::BatchedNative => "batched-native",
+            BackendChoice::BatchedPjrt => "batched-pjrt",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ExperimentSpec {
+    pub dataset: String,
+    pub scale: f64,
+    pub cycles: u64,
+    pub variant: Variant,
+    pub learner_name: String,
+    pub lambda: f32,
+    pub eta: f32,
+    pub cache: usize,
+    pub sampler: SamplerConfig,
+    pub failures: bool,
+    pub seed: u64,
+    pub eval_peers: usize,
+    pub voting: bool,
+    pub similarity: bool,
+    pub backend: BackendChoice,
+}
+
+impl Default for ExperimentSpec {
+    fn default() -> Self {
+        ExperimentSpec {
+            dataset: "urls".into(),
+            scale: 1.0,
+            cycles: 200,
+            variant: Variant::Mu,
+            learner_name: "pegasos".into(),
+            lambda: 1e-2,
+            eta: 1e-3,
+            cache: 10,
+            sampler: SamplerConfig::Newscast { view_size: 20 },
+            failures: false,
+            seed: 42,
+            eval_peers: 100,
+            voting: false,
+            similarity: false,
+            backend: BackendChoice::Event,
+        }
+    }
+}
+
+impl ExperimentSpec {
+    /// Apply a parsed key=value map (e.g. from an INI section or CLI flags).
+    pub fn apply(&mut self, kv: &HashMap<String, String>) -> Result<(), String> {
+        for (k, v) in kv {
+            match k.as_str() {
+                "dataset" => self.dataset = v.clone(),
+                "scale" => self.scale = parse(v, k)?,
+                "cycles" => self.cycles = parse(v, k)?,
+                "variant" => {
+                    self.variant =
+                        Variant::parse(v).ok_or(format!("bad variant {v:?}"))?
+                }
+                "learner" => self.learner_name = v.clone(),
+                "lambda" => self.lambda = parse(v, k)?,
+                "eta" => self.eta = parse(v, k)?,
+                "cache" => self.cache = parse(v, k)?,
+                "sampler" => {
+                    self.sampler = match v.as_str() {
+                        "newscast" => SamplerConfig::Newscast { view_size: 20 },
+                        "oracle" => SamplerConfig::Oracle,
+                        "matching" => SamplerConfig::Matching,
+                        _ => return Err(format!("bad sampler {v:?}")),
+                    }
+                }
+                "view" => {
+                    if let SamplerConfig::Newscast { view_size } = &mut self.sampler {
+                        *view_size = parse(v, k)?;
+                    }
+                }
+                "failures" => {
+                    self.failures = match v.as_str() {
+                        "none" => false,
+                        "extreme" => true,
+                        _ => return Err(format!("bad failures {v:?}")),
+                    }
+                }
+                "seed" => self.seed = parse(v, k)?,
+                "eval_peers" => self.eval_peers = parse(v, k)?,
+                "voting" => self.voting = parse_bool(v, k)?,
+                "similarity" => self.similarity = parse_bool(v, k)?,
+                "backend" => {
+                    self.backend = BackendChoice::parse(v)
+                        .ok_or(format!("bad backend {v:?}"))?
+                }
+                _ => return Err(format!("unknown key {k:?}")),
+            }
+        }
+        Ok(())
+    }
+
+    pub fn learner(&self) -> Result<Learner, String> {
+        match self.learner_name.as_str() {
+            "pegasos" => Ok(Learner::pegasos(self.lambda)),
+            "adaline" => Ok(Learner::adaline(self.eta)),
+            "logreg" => Ok(Learner::logreg(self.lambda)),
+            other => Err(format!("unknown learner {other:?}")),
+        }
+    }
+
+    pub fn build_dataset(&self) -> Result<Dataset, String> {
+        let s = Scale(self.scale);
+        match self.dataset.as_str() {
+            "reuters" => Ok(reuters_like(self.seed, s)),
+            "spambase" => Ok(spambase_like(self.seed, s)),
+            "urls" => Ok(urls_like(self.seed, s)),
+            other => Err(format!("unknown dataset {other:?}")),
+        }
+    }
+
+    pub fn protocol_config(&self) -> Result<ProtocolConfig, String> {
+        let mut cfg = ProtocolConfig::paper_default(self.cycles);
+        cfg.variant = self.variant;
+        cfg.learner = self.learner()?;
+        cfg.cache_size = self.cache;
+        cfg.sampler = self.sampler;
+        cfg.seed = self.seed;
+        cfg.eval.n_peers = self.eval_peers;
+        cfg.eval.voting = self.voting;
+        cfg.eval.similarity = self.similarity;
+        if self.failures {
+            cfg = cfg.with_extreme_failures();
+        }
+        Ok(cfg)
+    }
+
+    /// Parse an INI file's `[experiment]` section.
+    pub fn from_ini(text: &str) -> Result<Self, String> {
+        let doc = ini::parse(text)?;
+        let mut spec = ExperimentSpec::default();
+        if let Some(kv) = doc.get("experiment") {
+            spec.apply(kv)?;
+        }
+        Ok(spec)
+    }
+}
+
+fn parse<T: std::str::FromStr>(v: &str, k: &str) -> Result<T, String> {
+    v.parse().map_err(|_| format!("bad value for {k}: {v:?}"))
+}
+
+fn parse_bool(v: &str, k: &str) -> Result<bool, String> {
+    match v {
+        "true" | "1" | "yes" => Ok(true),
+        "false" | "0" | "no" => Ok(false),
+        _ => Err(format!("bad bool for {k}: {v:?}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ini_roundtrip() {
+        let text = "
+; experiment config
+[experiment]
+dataset = spambase
+scale = 0.5
+cycles = 99
+variant = um
+failures = extreme
+voting = true
+backend = batched-native
+";
+        let spec = ExperimentSpec::from_ini(text).unwrap();
+        assert_eq!(spec.dataset, "spambase");
+        assert_eq!(spec.scale, 0.5);
+        assert_eq!(spec.cycles, 99);
+        assert_eq!(spec.variant, Variant::Um);
+        assert!(spec.failures);
+        assert!(spec.voting);
+        assert_eq!(spec.backend, BackendChoice::BatchedNative);
+        let cfg = spec.protocol_config().unwrap();
+        assert!(cfg.churn.is_some());
+        assert!(cfg.eval.voting);
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_values() {
+        let mut kv = HashMap::new();
+        kv.insert("bogus".to_string(), "1".to_string());
+        assert!(ExperimentSpec::default().apply(&kv).is_err());
+        let mut kv = HashMap::new();
+        kv.insert("variant".to_string(), "xx".to_string());
+        assert!(ExperimentSpec::default().apply(&kv).is_err());
+    }
+
+    #[test]
+    fn builds_all_datasets() {
+        for name in ["reuters", "spambase", "urls"] {
+            let mut spec = ExperimentSpec { scale: 0.01, ..Default::default() };
+            spec.dataset = name.into();
+            let ds = spec.build_dataset().unwrap();
+            assert_eq!(ds.name, name);
+        }
+    }
+
+    #[test]
+    fn adaline_learner_selectable() {
+        let mut spec = ExperimentSpec::default();
+        spec.learner_name = "adaline".into();
+        assert_eq!(spec.learner().unwrap().name(), "adaline");
+    }
+}

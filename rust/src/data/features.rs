@@ -1,0 +1,179 @@
+//! Feature engineering used by the paper: correlation-coefficient feature
+//! selection (Section VI-A(f), applied to the Malicious URLs set to reduce
+//! ~3M features to 10) and projection onto the selected subspace.
+
+use crate::data::dataset::{Examples, Row};
+use crate::data::matrix::Matrix;
+
+/// Pearson correlation of every feature with the label; returns the indices
+/// of the `k` features with the largest |r|, in decreasing |r| order.
+pub fn correlation_select(x: &Examples, y: &[f32], k: usize) -> Vec<usize> {
+    let (n, d) = (x.n(), x.d());
+    assert_eq!(n, y.len());
+    let nf = n as f64;
+    let sy: f64 = y.iter().map(|&v| v as f64).sum();
+    let sy2: f64 = y.iter().map(|&v| (v as f64) * (v as f64)).sum();
+
+    let mut sx = vec![0.0f64; d];
+    let mut sx2 = vec![0.0f64; d];
+    let mut sxy = vec![0.0f64; d];
+    for i in 0..n {
+        let yi = y[i] as f64;
+        match x.row(i) {
+            Row::Dense(r) => {
+                for (j, &v) in r.iter().enumerate() {
+                    let v = v as f64;
+                    sx[j] += v;
+                    sx2[j] += v * v;
+                    sxy[j] += v * yi;
+                }
+            }
+            Row::Sparse(idx, val) => {
+                for (&j, &v) in idx.iter().zip(val) {
+                    let v = v as f64;
+                    sx[j as usize] += v;
+                    sx2[j as usize] += v * v;
+                    sxy[j as usize] += v * yi;
+                }
+            }
+        }
+    }
+
+    let var_y = nf * sy2 - sy * sy;
+    let mut scored: Vec<(usize, f64)> = (0..d)
+        .map(|j| {
+            let var_x = nf * sx2[j] - sx[j] * sx[j];
+            let cov = nf * sxy[j] - sx[j] * sy;
+            let denom = (var_x * var_y).sqrt();
+            let r = if denom > 0.0 { cov / denom } else { 0.0 };
+            (j, r.abs())
+        })
+        .collect();
+    scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    scored.truncate(k);
+    scored.into_iter().map(|(j, _)| j).collect()
+}
+
+/// Project examples onto the selected feature indices (dense output).
+pub fn project(x: &Examples, keep: &[usize]) -> Matrix {
+    let n = x.n();
+    let mut out = Matrix::zeros(n, keep.len());
+    // inverse map for sparse rows
+    let mut inv = vec![usize::MAX; x.d()];
+    for (new_j, &old_j) in keep.iter().enumerate() {
+        inv[old_j] = new_j;
+    }
+    for i in 0..n {
+        match x.row(i) {
+            Row::Dense(r) => {
+                let dst = out.row_mut(i);
+                for (new_j, &old_j) in keep.iter().enumerate() {
+                    dst[new_j] = r[old_j];
+                }
+            }
+            Row::Sparse(idx, val) => {
+                let dst = out.row_mut(i);
+                for (&j, &v) in idx.iter().zip(val) {
+                    let nj = inv[j as usize];
+                    if nj != usize::MAX {
+                        dst[nj] = v;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Per-feature max-|v| scaling to [-1, 1] (utility for real libsvm data).
+pub fn max_abs_scale(m: &mut Matrix) {
+    let (rows, cols) = (m.rows, m.cols);
+    let mut maxes = vec![0.0f32; cols];
+    for i in 0..rows {
+        for (j, &v) in m.row(i).iter().enumerate() {
+            maxes[j] = maxes[j].max(v.abs());
+        }
+    }
+    for i in 0..rows {
+        let r = m.row_mut(i);
+        for j in 0..cols {
+            if maxes[j] > 0.0 {
+                r[j] /= maxes[j];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::sparse::Csr;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn selects_informative_features() {
+        // feature 2 == label, feature 0 anti-correlated, feature 1 noise
+        let mut rng = Rng::new(4);
+        let n = 400;
+        let mut data = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..n {
+            let label = rng.sign();
+            data.push(-label + 0.1 * rng.normal() as f32);
+            data.push(rng.normal() as f32);
+            data.push(label);
+            y.push(label);
+        }
+        let x = Examples::Dense(Matrix::from_vec(n, 3, data));
+        let keep = correlation_select(&x, &y, 2);
+        assert_eq!(keep[0], 2);
+        assert_eq!(keep[1], 0);
+    }
+
+    #[test]
+    fn sparse_and_dense_selection_agree() {
+        let mut rng = Rng::new(9);
+        let (n, d) = (200, 12);
+        let mut dense = Vec::new();
+        let mut csr = Csr::new(d);
+        let mut y = Vec::new();
+        for _ in 0..n {
+            let label = rng.sign();
+            let mut entries = Vec::new();
+            for j in 0..d {
+                let v = if j < 3 && rng.chance(0.6) {
+                    label * (1.0 + j as f32)
+                } else if rng.chance(0.2) {
+                    rng.normal() as f32
+                } else {
+                    0.0
+                };
+                dense.push(v);
+                if v != 0.0 {
+                    entries.push((j as u32, v));
+                }
+            }
+            csr.push_row(&entries);
+            y.push(label);
+        }
+        let a = correlation_select(&Examples::Dense(Matrix::from_vec(n, d, dense)), &y, 4);
+        let b = correlation_select(&Examples::Sparse(csr), &y, 4);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn project_maps_columns() {
+        let m = Matrix::from_vec(2, 4, vec![1., 2., 3., 4., 5., 6., 7., 8.]);
+        let p = project(&Examples::Dense(m), &[3, 1]);
+        assert_eq!(p.row(0), &[4., 2.]);
+        assert_eq!(p.row(1), &[8., 6.]);
+    }
+
+    #[test]
+    fn max_abs_scale_bounds() {
+        let mut m = Matrix::from_vec(2, 2, vec![2.0, -8.0, -4.0, 0.0]);
+        max_abs_scale(&mut m);
+        assert_eq!(m.row(0), &[0.5, -1.0]);
+        assert_eq!(m.row(1), &[-1.0, 0.0]);
+    }
+}

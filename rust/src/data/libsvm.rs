@@ -1,0 +1,133 @@
+//! libsvm/svmlight format parser, so the real UCI datasets (Reuters,
+//! Spambase, Malicious URLs) can be dropped in place of the synthetic
+//! generators when files are available (DESIGN.md §4).
+//!
+//! Format: one example per line, `label idx:value idx:value ...` with
+//! 1-based feature indices.  Labels `0` and `-1` map to -1.
+
+use crate::data::dataset::Examples;
+use crate::data::sparse::Csr;
+use std::io::BufRead;
+
+#[derive(Debug)]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "libsvm parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// Parse a libsvm stream. `dims`: force a dimensionality (features beyond it
+/// are rejected); `None` infers from the data.
+pub fn parse<R: BufRead>(
+    reader: R,
+    dims: Option<usize>,
+) -> Result<(Examples, Vec<f32>), ParseError> {
+    let mut rows: Vec<Vec<(u32, f32)>> = Vec::new();
+    let mut ys = Vec::new();
+    let mut max_idx = 0usize;
+
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line.map_err(|e| ParseError { line: lineno + 1, msg: e.to_string() })?;
+        let body = line.split('#').next().unwrap_or("").trim();
+        if body.is_empty() {
+            continue;
+        }
+        let mut parts = body.split_whitespace();
+        let label_tok = parts.next().unwrap();
+        let label: f32 = label_tok.parse().map_err(|_| ParseError {
+            line: lineno + 1,
+            msg: format!("bad label {label_tok:?}"),
+        })?;
+        let y = if label > 0.0 { 1.0 } else { -1.0 };
+
+        let mut entries = Vec::new();
+        for tok in parts {
+            let (i_str, v_str) = tok.split_once(':').ok_or_else(|| ParseError {
+                line: lineno + 1,
+                msg: format!("bad feature token {tok:?}"),
+            })?;
+            let idx: usize = i_str.parse().map_err(|_| ParseError {
+                line: lineno + 1,
+                msg: format!("bad index {i_str:?}"),
+            })?;
+            let val: f32 = v_str.parse().map_err(|_| ParseError {
+                line: lineno + 1,
+                msg: format!("bad value {v_str:?}"),
+            })?;
+            if idx == 0 {
+                return Err(ParseError {
+                    line: lineno + 1,
+                    msg: "libsvm indices are 1-based".into(),
+                });
+            }
+            if let Some(d) = dims {
+                if idx > d {
+                    return Err(ParseError {
+                        line: lineno + 1,
+                        msg: format!("index {idx} exceeds dims {d}"),
+                    });
+                }
+            }
+            max_idx = max_idx.max(idx);
+            entries.push(((idx - 1) as u32, val));
+        }
+        entries.sort_unstable_by_key(|e| e.0);
+        rows.push(entries);
+        ys.push(y);
+    }
+
+    let d = dims.unwrap_or(max_idx);
+    let mut m = Csr::new(d.max(1));
+    for r in &rows {
+        m.push_row(r);
+    }
+    Ok((Examples::Sparse(m), ys))
+}
+
+/// Convenience: parse a file path.
+pub fn load(path: &std::path::Path, dims: Option<usize>) -> anyhow::Result<(Examples, Vec<f32>)> {
+    let f = std::fs::File::open(path)?;
+    Ok(parse(std::io::BufReader::new(f), dims)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_basic_lines() {
+        let text = "+1 1:0.5 3:1.0\n-1 2:2.0\n0 1:1.0 # comment\n\n";
+        let (x, y) = parse(text.as_bytes(), None).unwrap();
+        assert_eq!(x.n(), 3);
+        assert_eq!(x.d(), 3);
+        assert_eq!(y, vec![1.0, -1.0, -1.0]);
+        if let Examples::Sparse(m) = &x {
+            assert_eq!(m.row(0), (&[0u32, 2][..], &[0.5f32, 1.0][..]));
+        }
+    }
+
+    #[test]
+    fn rejects_zero_index() {
+        assert!(parse("+1 0:1.0".as_bytes(), None).is_err());
+    }
+
+    #[test]
+    fn rejects_index_beyond_dims() {
+        assert!(parse("+1 5:1.0".as_bytes(), Some(3)).is_err());
+        assert!(parse("+1 3:1.0".as_bytes(), Some(3)).is_ok());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("abc 1:1.0".as_bytes(), None).is_err());
+        assert!(parse("+1 1-1.0".as_bytes(), None).is_err());
+        assert!(parse("+1 1:x".as_bytes(), None).is_err());
+    }
+}

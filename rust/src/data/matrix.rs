@@ -1,0 +1,98 @@
+//! Dense row-major f32 matrix — the in-memory model/feature container shared
+//! by the native engine, the PJRT marshalling code, and the batched driver.
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "matrix shape mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert!(i < self.rows);
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        debug_assert!(i < self.rows);
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Disjoint mutable rows (for in-place pairwise ops).
+    pub fn rows_mut2(&mut self, i: usize, j: usize) -> (&mut [f32], &mut [f32]) {
+        assert!(i != j && i < self.rows && j < self.rows);
+        let c = self.cols;
+        if i < j {
+            let (a, b) = self.data.split_at_mut(j * c);
+            (&mut a[i * c..(i + 1) * c], &mut b[..c])
+        } else {
+            let (a, b) = self.data.split_at_mut(i * c);
+            (&mut b[..c], &mut a[j * c..(j + 1) * c])
+        }
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn fill(&mut self, v: f32) {
+        self.data.fill(v);
+    }
+
+    pub fn copy_row_from(&mut self, i: usize, src: &[f32]) {
+        self.row_mut(i).copy_from_slice(src);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_access() {
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(m.row(0), &[1., 2., 3.]);
+        assert_eq!(m.row(1), &[4., 5., 6.]);
+    }
+
+    #[test]
+    fn rows_mut2_disjoint_both_orders() {
+        let mut m = Matrix::from_vec(3, 2, vec![0.; 6]);
+        {
+            let (a, b) = m.rows_mut2(0, 2);
+            a[0] = 1.0;
+            b[1] = 2.0;
+        }
+        assert_eq!(m.row(0), &[1., 0.]);
+        assert_eq!(m.row(2), &[0., 2.]);
+        {
+            let (a, b) = m.rows_mut2(2, 0);
+            a[0] = 9.0;
+            b[0] = 8.0;
+        }
+        assert_eq!(m.row(2), &[9., 2.]);
+        assert_eq!(m.row(0), &[8., 0.]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Matrix::from_vec(2, 2, vec![0.; 3]);
+    }
+}

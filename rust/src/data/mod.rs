@@ -1,0 +1,14 @@
+//! Data substrate: dense/sparse containers, the fully-distributed dataset
+//! abstraction, synthetic Table-I generators, libsvm loading, feature
+//! selection, and splitting.
+pub mod dataset;
+pub mod features;
+pub mod libsvm;
+pub mod matrix;
+pub mod sparse;
+pub mod split;
+pub mod synthetic;
+
+pub use dataset::{Dataset, Examples, Row};
+pub use matrix::Matrix;
+pub use sparse::Csr;

@@ -1,0 +1,121 @@
+//! Train/test splitting and row-subsetting utilities (used when loading real
+//! libsvm data, and by the URLs-like 10k-sample training subset per
+//! Section VI-A(h)).
+
+use crate::data::dataset::Examples;
+use crate::data::matrix::Matrix;
+use crate::data::sparse::Csr;
+use crate::util::rng::Rng;
+
+/// Select a subset of rows (in the given order) into a new container.
+pub fn select_rows(x: &Examples, idx: &[usize]) -> Examples {
+    match x {
+        Examples::Dense(m) => {
+            let mut out = Matrix::zeros(idx.len(), m.cols);
+            for (new_i, &old_i) in idx.iter().enumerate() {
+                out.copy_row_from(new_i, m.row(old_i));
+            }
+            Examples::Dense(out)
+        }
+        Examples::Sparse(m) => {
+            let mut out = Csr::new(m.cols);
+            let mut buf = Vec::new();
+            for &old_i in idx {
+                let (ix, vals) = m.row(old_i);
+                buf.clear();
+                buf.extend(ix.iter().copied().zip(vals.iter().copied()));
+                out.push_row(&buf);
+            }
+            Examples::Sparse(out)
+        }
+    }
+}
+
+pub fn select_labels(y: &[f32], idx: &[usize]) -> Vec<f32> {
+    idx.iter().map(|&i| y[i]).collect()
+}
+
+/// Random split into (train, test) with `test_frac` of rows in the test set.
+pub fn random_split(
+    x: &Examples,
+    y: &[f32],
+    test_frac: f64,
+    seed: u64,
+) -> ((Examples, Vec<f32>), (Examples, Vec<f32>)) {
+    let n = x.n();
+    let mut rng = Rng::new(seed);
+    let perm = rng.permutation(n);
+    let n_test = ((n as f64) * test_frac).round() as usize;
+    let (test_idx, train_idx) = perm.split_at(n_test);
+    (
+        (select_rows(x, train_idx), select_labels(y, train_idx)),
+        (select_rows(x, test_idx), select_labels(y, test_idx)),
+    )
+}
+
+/// Uniform random subsample of k rows without replacement.
+pub fn subsample(x: &Examples, y: &[f32], k: usize, seed: u64) -> (Examples, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    let idx = rng.sample_indices(x.n(), k);
+    (select_rows(x, &idx), select_labels(y, &idx))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::Row;
+
+    fn dense4() -> (Examples, Vec<f32>) {
+        let m = Matrix::from_vec(4, 2, vec![1., 1., 2., 2., 3., 3., 4., 4.]);
+        (Examples::Dense(m), vec![1.0, -1.0, 1.0, -1.0])
+    }
+
+    #[test]
+    fn select_rows_dense() {
+        let (x, y) = dense4();
+        let s = select_rows(&x, &[2, 0]);
+        if let Examples::Dense(m) = s {
+            assert_eq!(m.row(0), &[3., 3.]);
+            assert_eq!(m.row(1), &[1., 1.]);
+        }
+        assert_eq!(select_labels(&y, &[2, 0]), vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn select_rows_sparse() {
+        let mut c = Csr::new(3);
+        c.push_row(&[(0, 1.0)]);
+        c.push_row(&[(2, 5.0)]);
+        let s = select_rows(&Examples::Sparse(c), &[1, 1]);
+        match s.row(0) {
+            Row::Sparse(i, v) => {
+                assert_eq!(i, &[2]);
+                assert_eq!(v, &[5.0]);
+            }
+            _ => panic!(),
+        }
+        assert_eq!(s.n(), 2);
+    }
+
+    #[test]
+    fn random_split_partitions() {
+        let (x, y) = dense4();
+        let ((xtr, ytr), (xte, yte)) = random_split(&x, &y, 0.25, 1);
+        assert_eq!(xtr.n(), 3);
+        assert_eq!(xte.n(), 1);
+        assert_eq!(ytr.len(), 3);
+        assert_eq!(yte.len(), 1);
+    }
+
+    #[test]
+    fn subsample_size_and_determinism() {
+        let (x, y) = dense4();
+        let (a, ya) = subsample(&x, &y, 2, 9);
+        let (b, yb) = subsample(&x, &y, 2, 9);
+        assert_eq!(a.n(), 2);
+        assert_eq!(ya, yb);
+        if let (Examples::Dense(ma), Examples::Dense(mb)) = (&a, &b) {
+            assert_eq!(ma.as_slice(), mb.as_slice());
+        }
+    }
+}

@@ -1,0 +1,373 @@
+//! Cycle-synchronous batched driver: the same gossip-learning protocol as
+//! gossip/protocol.rs, but with all per-node CREATEMODEL steps of a cycle
+//! executed as batched engine ops — the vectorized hot path that the PJRT
+//! backend (and a future TPU deployment) needs.
+//!
+//! Semantics relative to the event-driven simulator: sends are synchronized
+//! at cycle boundaries (no Δ jitter within a cycle) and message delay is
+//! quantized to whole cycles.  Deliveries landing at the same node in the
+//! same cycle are processed in arrival order through sequential sub-rounds,
+//! so the per-node state machine (cache/lastModel chaining) is preserved
+//! exactly.  DESIGN.md §2 discusses the tradeoff; the engine-parity tests
+//! pin native and PJRT backends to each other on identical schedules.
+
+use crate::data::dataset::Dataset;
+use crate::engine::{Backend, LearnerKind, StepBatch, StepOp};
+use crate::eval::tracker::{point_from_errors, Curve};
+use crate::eval::{self};
+use crate::gossip::protocol::{ProtocolConfig, RunResult, RunStats};
+use crate::learning::Learner;
+use crate::p2p::overlay::PeerSampler;
+use crate::sim::churn::ChurnSchedule;
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+/// Maximum rows per engine call (matches the largest compiled bucket).
+const MAX_BATCH: usize = 1024;
+/// Test-set rows per eval chunk (matches the eval artifact bucket).
+const EVAL_CHUNK: usize = 1024;
+/// Models per eval call (matches the eval artifact bucket).
+const EVAL_MODELS: usize = 128;
+
+struct PendingMsg {
+    dst: usize,
+    w: Vec<f32>,
+    t: f32,
+    arrival_cycle: u64,
+    seq: u64,
+}
+
+pub struct BatchedSim<'a, B: Backend> {
+    cfg: ProtocolConfig,
+    data: &'a Dataset,
+    backend: &'a mut B,
+    op: StepOp,
+    // per-node state (flat [n, d])
+    freshest_w: Vec<f32>,
+    freshest_t: Vec<f32>,
+    last_w: Vec<f32>,
+    last_t: Vec<f32>,
+    dense_x: Vec<f32>, // local examples, densified once
+    rng: Rng,
+    stats: RunStats,
+}
+
+fn learner_op(l: &Learner) -> StepOp {
+    match l {
+        Learner::Pegasos(p) => StepOp {
+            learner: LearnerKind::Pegasos,
+            variant: crate::gossip::Variant::Mu, // patched by caller
+            hp: p.lambda,
+        },
+        Learner::Adaline(a) => StepOp {
+            learner: LearnerKind::Adaline,
+            variant: crate::gossip::Variant::Mu,
+            hp: a.eta,
+        },
+        Learner::LogReg(l) => StepOp {
+            learner: LearnerKind::LogReg,
+            variant: crate::gossip::Variant::Mu,
+            hp: l.lambda,
+        },
+    }
+}
+
+impl<'a, B: Backend> BatchedSim<'a, B> {
+    pub fn new(cfg: ProtocolConfig, data: &'a Dataset, backend: &'a mut B) -> Self {
+        let n = data.n_train();
+        let d = data.d();
+        let mut op = learner_op(&cfg.learner);
+        op.variant = cfg.variant;
+        let mut dense_x = vec![0.0f32; n * d];
+        for i in 0..n {
+            data.train.row(i).write_dense(&mut dense_x[i * d..(i + 1) * d]);
+        }
+        let rng = Rng::new(cfg.seed);
+        BatchedSim {
+            op,
+            freshest_w: vec![0.0; n * d],
+            freshest_t: vec![0.0; n],
+            last_w: vec![0.0; n * d],
+            last_t: vec![0.0; n],
+            dense_x,
+            rng,
+            stats: RunStats::default(),
+            cfg,
+            data,
+            backend,
+        }
+    }
+
+    pub fn run(mut self) -> Result<RunResult> {
+        let n = self.data.n_train();
+        let d = self.data.d();
+        let delta = self.cfg.delta;
+        let horizon = delta * (self.cfg.cycles + 1);
+
+        let churn = self.cfg.churn.as_ref().map(|c| {
+            let mut crng = self.rng.fork();
+            ChurnSchedule::generate(c, n, horizon, &mut crng)
+        });
+        let mut sampler_rng = self.rng.fork();
+        let mut sampler = PeerSampler::new(self.cfg.sampler, n, delta, &mut sampler_rng);
+        let mut eval_rng = self.rng.fork();
+        let eval_peers = eval_rng.sample_indices(n, self.cfg.eval.n_peers.min(n));
+
+        let eval_cycles: std::collections::BTreeSet<u64> = if self.cfg.eval.at_cycles.is_empty() {
+            eval::log_spaced_cycles(self.cfg.cycles).into_iter().collect()
+        } else {
+            self.cfg.eval.at_cycles.iter().copied().collect()
+        };
+
+        let mut curve = Curve::new(format!(
+            "{}-{}-batched-{}",
+            self.cfg.learner.name(),
+            self.cfg.variant.name(),
+            self.backend.name()
+        ));
+
+        let mut pending: Vec<PendingMsg> = Vec::new();
+        let mut batch = StepBatch::default();
+        let mut seq = 0u64;
+
+        for cycle in 1..=self.cfg.cycles {
+            let now = cycle * delta;
+            let online: Vec<bool> = (0..n)
+                .map(|i| churn.as_ref().map_or(true, |c| c.is_online(i, now)))
+                .collect();
+
+            // -------- sends (synchronized at the cycle boundary)
+            for node in 0..n {
+                if !online[node] {
+                    continue;
+                }
+                let Some(dst) = sampler.select(node, now, &online, &mut self.rng) else {
+                    continue;
+                };
+                self.stats.messages_sent += 1;
+                self.stats.bytes_sent += (d * 4 + 8) as u64;
+                if self.cfg.network.drop_prob > 0.0
+                    && self.rng.chance(self.cfg.network.drop_prob)
+                {
+                    self.stats.messages_dropped += 1;
+                    continue;
+                }
+                let delay_ticks = self.cfg.network.delay.sample(&mut self.rng);
+                let delay_cycles = delay_ticks / delta; // quantized
+                pending.push(PendingMsg {
+                    dst,
+                    w: self.freshest_w[node * d..(node + 1) * d].to_vec(),
+                    t: self.freshest_t[node],
+                    arrival_cycle: cycle + delay_cycles,
+                    seq,
+                });
+                seq += 1;
+            }
+
+            // -------- deliveries due this cycle, grouped by destination
+            let mut due: Vec<PendingMsg> = Vec::new();
+            pending.retain_mut(|msg| {
+                if msg.arrival_cycle <= cycle {
+                    due.push(PendingMsg {
+                        dst: msg.dst,
+                        w: std::mem::take(&mut msg.w),
+                        t: msg.t,
+                        arrival_cycle: msg.arrival_cycle,
+                        seq: msg.seq,
+                    });
+                    false
+                } else {
+                    true
+                }
+            });
+            due.sort_by_key(|m| (m.dst, m.seq));
+
+            // offline receivers lose their messages
+            due.retain(|m| {
+                if online[m.dst] {
+                    true
+                } else {
+                    self.stats.messages_lost_offline += 1;
+                    false
+                }
+            });
+
+            // sub-rounds: the k-th message of each node forms round k
+            let mut rounds: Vec<Vec<PendingMsg>> = Vec::new();
+            {
+                let mut k_of_dst: std::collections::HashMap<usize, usize> =
+                    std::collections::HashMap::new();
+                for m in due {
+                    let k = k_of_dst.entry(m.dst).or_insert(0);
+                    if rounds.len() <= *k {
+                        rounds.push(Vec::new());
+                    }
+                    rounds[*k].push(m);
+                    *k += 1;
+                }
+            }
+
+            for round in rounds {
+                for chunk in round.chunks(MAX_BATCH) {
+                    let b = chunk.len();
+                    batch.resize(b, d);
+                    for (i, m) in chunk.iter().enumerate() {
+                        let dst = m.dst;
+                        batch.w1[i * d..(i + 1) * d].copy_from_slice(&m.w);
+                        batch.t1[i] = m.t;
+                        batch.w2[i * d..(i + 1) * d]
+                            .copy_from_slice(&self.last_w[dst * d..(dst + 1) * d]);
+                        batch.t2[i] = self.last_t[dst];
+                        batch.x[i * d..(i + 1) * d]
+                            .copy_from_slice(&self.dense_x[dst * d..(dst + 1) * d]);
+                        batch.y[i] = self.data.train_y[dst];
+                    }
+                    self.backend.step(&self.op, &mut batch)?;
+                    self.stats.updates_applied += b as u64;
+                    for (i, m) in chunk.iter().enumerate() {
+                        let dst = m.dst;
+                        self.freshest_w[dst * d..(dst + 1) * d]
+                            .copy_from_slice(&batch.out_w[i * d..(i + 1) * d]);
+                        self.freshest_t[dst] = batch.out_t[i];
+                        // lastModel <- incoming (Algorithm 1 line 9)
+                        self.last_w[dst * d..(dst + 1) * d].copy_from_slice(&m.w);
+                        self.last_t[dst] = m.t;
+                    }
+                }
+            }
+
+            // -------- measurement
+            if eval_cycles.contains(&cycle) {
+                let errs = self.measure_errors(&eval_peers)?;
+                curve.push(point_from_errors(
+                    cycle,
+                    &errs,
+                    None,
+                    None,
+                    self.stats.messages_sent,
+                ));
+            }
+        }
+
+        Ok(RunResult { curve, stats: self.stats })
+    }
+
+    /// 0-1 error of every eval peer's freshest model via batched
+    /// `error_counts` over test-set chunks.
+    fn measure_errors(&mut self, eval_peers: &[usize]) -> Result<Vec<f64>> {
+        let d = self.data.d();
+        let n_test = self.data.n_test();
+        let mut errs = vec![0.0f64; eval_peers.len()];
+
+        let mut xchunk = vec![0.0f32; EVAL_CHUNK.min(n_test) * d];
+        for mgroup in eval_peers.chunks(EVAL_MODELS) {
+            let m = mgroup.len();
+            let mut w = vec![0.0f32; m * d];
+            for (j, &p) in mgroup.iter().enumerate() {
+                w[j * d..(j + 1) * d]
+                    .copy_from_slice(&self.freshest_w[p * d..(p + 1) * d]);
+            }
+            let mut counts = vec![0.0f64; m];
+            let mut row = 0;
+            while row < n_test {
+                let rows = EVAL_CHUNK.min(n_test - row);
+                xchunk.resize(rows * d, 0.0);
+                let mut ychunk = vec![0.0f32; rows];
+                for i in 0..rows {
+                    self.data
+                        .test
+                        .row(row + i)
+                        .write_dense(&mut xchunk[i * d..(i + 1) * d]);
+                    ychunk[i] = self.data.test_y[row + i];
+                }
+                let c = self
+                    .backend
+                    .error_counts(&xchunk, &ychunk, rows, d, &w, m)?;
+                for (acc, v) in counts.iter_mut().zip(&c) {
+                    *acc += *v as f64;
+                }
+                row += rows;
+            }
+            let base = mgroup.as_ptr() as usize;
+            let _ = base;
+            for (j, &_p) in mgroup.iter().enumerate() {
+                let idx = eval_peers.iter().position(|&q| q == mgroup[j]).unwrap();
+                errs[idx] = counts[j] / n_test as f64;
+            }
+        }
+        Ok(errs)
+    }
+}
+
+/// Run the batched driver with the given backend.
+pub fn run_batched<B: Backend>(
+    cfg: ProtocolConfig,
+    data: &Dataset,
+    backend: &mut B,
+) -> Result<RunResult> {
+    BatchedSim::new(cfg, data, backend).run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{urls_like, Scale};
+    use crate::engine::native::NativeBackend;
+
+    #[test]
+    fn batched_native_converges() {
+        let ds = urls_like(1, Scale(0.02));
+        let mut cfg = ProtocolConfig::paper_default(50);
+        cfg.eval.n_peers = 20;
+        let mut be = NativeBackend::new();
+        let res = run_batched(cfg, &ds, &mut be).unwrap();
+        let first = res.curve.points.first().unwrap().err_mean;
+        let last = res.curve.final_error();
+        assert!(last < first, "{first} -> {last}");
+        assert!(last < 0.25, "final {last}");
+    }
+
+    #[test]
+    fn batched_deterministic() {
+        let ds = urls_like(2, Scale(0.01));
+        let mk = || {
+            let mut cfg = ProtocolConfig::paper_default(15);
+            cfg.eval.n_peers = 10;
+            cfg
+        };
+        let mut b1 = NativeBackend::new();
+        let mut b2 = NativeBackend::new();
+        let a = run_batched(mk(), &ds, &mut b1).unwrap();
+        let b = run_batched(mk(), &ds, &mut b2).unwrap();
+        let ea: Vec<f64> = a.curve.points.iter().map(|p| p.err_mean).collect();
+        let eb: Vec<f64> = b.curve.points.iter().map(|p| p.err_mean).collect();
+        assert_eq!(ea, eb);
+    }
+
+    #[test]
+    fn batched_failures_converge() {
+        let ds = urls_like(3, Scale(0.02));
+        let mut cfg = ProtocolConfig::paper_default(80).with_extreme_failures();
+        cfg.eval.n_peers = 15;
+        let mut be = NativeBackend::new();
+        let res = run_batched(cfg, &ds, &mut be).unwrap();
+        assert!(res.stats.messages_dropped > 0);
+        assert!(res.stats.messages_lost_offline > 0);
+        let first = res.curve.points.first().unwrap().err_mean;
+        assert!(res.curve.final_error() < first);
+    }
+
+    #[test]
+    fn batched_close_to_event_driven() {
+        // same protocol, different scheduling model: final errors must land
+        // in the same regime (loose statistical check, not bitwise)
+        let ds = urls_like(4, Scale(0.02));
+        let mut cfg = ProtocolConfig::paper_default(40);
+        cfg.eval.n_peers = 20;
+        let ev = crate::gossip::run(cfg.clone(), &ds);
+        let mut be = NativeBackend::new();
+        let bt = run_batched(cfg, &ds, &mut be).unwrap();
+        let (a, b) = (ev.curve.final_error(), bt.curve.final_error());
+        assert!((a - b).abs() < 0.08, "event {a} vs batched {b}");
+    }
+}

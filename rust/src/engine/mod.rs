@@ -1,0 +1,102 @@
+//! Compute engines: the batched hot path of the simulator.
+//!
+//! A delivery tick's worth of independent per-node CREATEMODEL steps is
+//! expressed as one batched op over `[B, D]` matrices — the same graphs the
+//! L2 JAX layer lowers to HLO (python/compile/model.py).  Two backends
+//! implement the op set:
+//!
+//! * [`native::NativeBackend`] — pure Rust, mirrors ref.py exactly.
+//! * [`pjrt::PjrtBackend`] — executes the AOT artifacts through the PJRT
+//!   CPU client (runtime/), padding to the compiled shape buckets.
+//!
+//! The [`batched`] driver runs the gossip protocol cycle-synchronously on
+//! top of either backend; the engine-parity integration test pins the two
+//! backends to each other, and python/tests pins the artifacts to ref.py —
+//! closing the loop Rust native == XLA == Pallas == paper math.
+
+pub mod batched;
+pub mod native;
+pub mod pjrt;
+
+use crate::gossip::create_model::Variant;
+use anyhow::Result;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LearnerKind {
+    Pegasos,
+    Adaline,
+    LogReg,
+}
+
+/// One batched CREATEMODEL op: which learner, which Algorithm-2 variant,
+/// and the learner hyperparameter (λ for Pegasos, η for Adaline).
+#[derive(Clone, Copy, Debug)]
+pub struct StepOp {
+    pub learner: LearnerKind,
+    pub variant: Variant,
+    pub hp: f32,
+}
+
+impl StepOp {
+    /// Artifact op name, e.g. "pegasos_mu".
+    pub fn op_name(&self) -> String {
+        let l = match self.learner {
+            LearnerKind::Pegasos => "pegasos",
+            LearnerKind::Adaline => "adaline",
+            LearnerKind::LogReg => "logreg",
+        };
+        format!("{}_{}", l, self.variant.name())
+    }
+}
+
+/// Reusable batch buffers (flat row-major `[b, d]` matrices plus `[b]`
+/// vectors). `w2`/`t2` are ignored for the RW variant.
+#[derive(Clone, Debug, Default)]
+pub struct StepBatch {
+    pub b: usize,
+    pub d: usize,
+    pub w1: Vec<f32>,
+    pub t1: Vec<f32>,
+    pub w2: Vec<f32>,
+    pub t2: Vec<f32>,
+    pub x: Vec<f32>,
+    pub y: Vec<f32>,
+    pub out_w: Vec<f32>,
+    pub out_t: Vec<f32>,
+}
+
+impl StepBatch {
+    pub fn resize(&mut self, b: usize, d: usize) {
+        self.b = b;
+        self.d = d;
+        self.w1.resize(b * d, 0.0);
+        self.w2.resize(b * d, 0.0);
+        self.x.resize(b * d, 0.0);
+        self.t1.resize(b, 0.0);
+        self.t2.resize(b, 0.0);
+        self.y.resize(b, 0.0);
+        self.out_w.resize(b * d, 0.0);
+        self.out_t.resize(b, 0.0);
+    }
+}
+
+/// A batched compute backend.
+pub trait Backend {
+    fn name(&self) -> &'static str;
+
+    /// Apply `op` to every row of the batch, writing `out_w`/`out_t`.
+    fn step(&mut self, op: &StepOp, batch: &mut StepBatch) -> Result<()>;
+
+    /// Misclassification counts: `x` is a dense `[n, d]` test chunk with
+    /// labels `y` (0 = padding row), `w` a `[m, d]` model batch; returns the
+    /// per-model count of rows with `y * <w, x> <= 0`.
+    fn error_counts(
+        &mut self,
+        x: &[f32],
+        y: &[f32],
+        n: usize,
+        d: usize,
+        w: &[f32],
+        m: usize,
+    ) -> Result<Vec<f32>>;
+}

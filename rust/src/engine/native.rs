@@ -1,0 +1,249 @@
+//! Native (pure Rust) batched backend — the written-down semantics of the
+//! hot path, mirroring python/compile/kernels/ref.py line for line.
+
+use crate::engine::{Backend, LearnerKind, StepBatch, StepOp};
+use crate::gossip::create_model::Variant;
+use anyhow::Result;
+
+#[derive(Debug, Default)]
+pub struct NativeBackend {
+    // scratch rows for the UM variant (avoids per-row allocation; perf §L3)
+    u1: Vec<f32>,
+    u2: Vec<f32>,
+}
+
+impl NativeBackend {
+    pub fn new() -> Self {
+        NativeBackend::default()
+    }
+
+    /// ref.py pegasos_update_ref on one row.
+    fn pegasos_row(w: &mut [f32], x: &[f32], y: f32, t: &mut f32, lam: f32) {
+        *t += 1.0;
+        let eta = 1.0 / (lam * *t);
+        let margin = y * dot(w, x);
+        let decay = 1.0 - eta * lam;
+        if margin < 1.0 {
+            let c = eta * y;
+            for (wi, &xi) in w.iter_mut().zip(x) {
+                *wi = decay * *wi + c * xi;
+            }
+        } else {
+            for wi in w.iter_mut() {
+                *wi *= decay;
+            }
+        }
+    }
+
+    /// ref.py adaline_update_ref on one row.
+    fn adaline_row(w: &mut [f32], x: &[f32], y: f32, t: &mut f32, eta: f32) {
+        let err = y - dot(w, x);
+        let c = eta * err;
+        for (wi, &xi) in w.iter_mut().zip(x) {
+            *wi += c * xi;
+        }
+        *t += 1.0;
+    }
+
+    /// ref.py logreg_update_ref on one row (extension learner).
+    fn logreg_row(w: &mut [f32], x: &[f32], y: f32, t: &mut f32, lam: f32) {
+        *t += 1.0;
+        let eta = 1.0 / (lam * *t);
+        let p = 1.0 / (1.0 + (-dot(w, x)).exp());
+        let y01 = (y + 1.0) * 0.5;
+        let decay = 1.0 - eta * lam;
+        let c = eta * (y01 - p);
+        for (wi, &xi) in w.iter_mut().zip(x) {
+            *wi = decay * *wi + c * xi;
+        }
+    }
+
+    fn update_row(op: &StepOp, w: &mut [f32], x: &[f32], y: f32, t: &mut f32) {
+        match op.learner {
+            LearnerKind::Pegasos => Self::pegasos_row(w, x, y, t, op.hp),
+            LearnerKind::Adaline => Self::adaline_row(w, x, y, t, op.hp),
+            LearnerKind::LogReg => Self::logreg_row(w, x, y, t, op.hp),
+        }
+    }
+}
+
+#[inline]
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    crate::data::dataset::dense_dot(a, b)
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn step(&mut self, op: &StepOp, batch: &mut StepBatch) -> Result<()> {
+        let (b, d) = (batch.b, batch.d);
+        for i in 0..b {
+            let r = i * d..(i + 1) * d;
+            let w1 = &batch.w1[r.clone()];
+            let w2 = &batch.w2[r.clone()];
+            let x = &batch.x[r.clone()];
+            let y = batch.y[i];
+            let out_w = &mut batch.out_w[r];
+            let out_t = &mut batch.out_t[i];
+            match op.variant {
+                Variant::Rw => {
+                    out_w.copy_from_slice(w1);
+                    *out_t = batch.t1[i];
+                    Self::update_row(op, out_w, x, y, out_t);
+                }
+                Variant::Mu => {
+                    for (o, (&a, &bb)) in out_w.iter_mut().zip(w1.iter().zip(w2)) {
+                        *o = 0.5 * (a + bb);
+                    }
+                    *out_t = batch.t1[i].max(batch.t2[i]);
+                    Self::update_row(op, out_w, x, y, out_t);
+                }
+                Variant::Um => {
+                    // update both with the same local example, then average
+                    self.u1.clear();
+                    self.u1.extend_from_slice(w1);
+                    self.u2.clear();
+                    self.u2.extend_from_slice(w2);
+                    let mut t1 = batch.t1[i];
+                    let mut t2 = batch.t2[i];
+                    Self::update_row(op, &mut self.u1, x, y, &mut t1);
+                    Self::update_row(op, &mut self.u2, x, y, &mut t2);
+                    for (o, (&a, &bb)) in
+                        out_w.iter_mut().zip(self.u1.iter().zip(&self.u2))
+                    {
+                        *o = 0.5 * (a + bb);
+                    }
+                    *out_t = t1.max(t2);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn error_counts(
+        &mut self,
+        x: &[f32],
+        y: &[f32],
+        n: usize,
+        d: usize,
+        w: &[f32],
+        m: usize,
+    ) -> Result<Vec<f32>> {
+        let mut counts = vec![0.0f32; m];
+        for i in 0..n {
+            if y[i] == 0.0 {
+                continue;
+            }
+            let xi = &x[i * d..(i + 1) * d];
+            for (j, c) in counts.iter_mut().enumerate() {
+                let margin = y[i] * dot(&w[j * d..(j + 1) * d], xi);
+                if margin <= 0.0 {
+                    *c += 1.0;
+                }
+            }
+        }
+        Ok(counts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::Row;
+    use crate::learning::{Learner, LinearModel};
+    use crate::util::rng::Rng;
+
+    fn random_batch(rng: &mut Rng, b: usize, d: usize) -> StepBatch {
+        let mut sb = StepBatch::default();
+        sb.resize(b, d);
+        for v in sb.w1.iter_mut().chain(&mut sb.w2).chain(&mut sb.x) {
+            *v = rng.normal() as f32;
+        }
+        for i in 0..b {
+            sb.y[i] = rng.sign();
+            sb.t1[i] = rng.below(50) as f32;
+            sb.t2[i] = rng.below(50) as f32;
+        }
+        sb
+    }
+
+    /// The batched RW step must match the event-driven LinearModel path.
+    #[test]
+    fn rw_matches_linear_model_update() {
+        let mut rng = Rng::new(3);
+        let (b, d) = (16, 9);
+        let mut sb = random_batch(&mut rng, b, d);
+        let op = StepOp { learner: LearnerKind::Pegasos, variant: Variant::Rw, hp: 0.01 };
+        let mut be = NativeBackend::new();
+        let learner = Learner::pegasos(0.01);
+        let expect: Vec<Vec<f32>> = (0..b)
+            .map(|i| {
+                let mut m = LinearModel::from_weights(
+                    sb.w1[i * d..(i + 1) * d].to_vec(),
+                    sb.t1[i] as u64,
+                );
+                learner.update(&mut m, &Row::Dense(&sb.x[i * d..(i + 1) * d]), sb.y[i]);
+                m.weights()
+            })
+            .collect();
+        be.step(&op, &mut sb).unwrap();
+        for i in 0..b {
+            for (a, e) in sb.out_w[i * d..(i + 1) * d].iter().zip(&expect[i]) {
+                assert!((a - e).abs() < 1e-4, "{a} vs {e}");
+            }
+            assert_eq!(sb.out_t[i], sb.t1[i] + 1.0);
+        }
+    }
+
+    #[test]
+    fn mu_is_merge_then_update() {
+        let mut rng = Rng::new(4);
+        let (b, d) = (8, 5);
+        let mut sb = random_batch(&mut rng, b, d);
+        let op = StepOp { learner: LearnerKind::Pegasos, variant: Variant::Mu, hp: 0.1 };
+        let snapshot = sb.clone();
+        NativeBackend::new().step(&op, &mut sb).unwrap();
+        for i in 0..b {
+            let mut w: Vec<f32> = (0..d)
+                .map(|k| 0.5 * (snapshot.w1[i * d + k] + snapshot.w2[i * d + k]))
+                .collect();
+            let mut t = snapshot.t1[i].max(snapshot.t2[i]);
+            NativeBackend::pegasos_row(&mut w, &snapshot.x[i * d..(i + 1) * d], snapshot.y[i], &mut t, 0.1);
+            for (a, e) in sb.out_w[i * d..(i + 1) * d].iter().zip(&w) {
+                assert!((a - e).abs() < 1e-5);
+            }
+            assert_eq!(sb.out_t[i], t);
+        }
+    }
+
+    #[test]
+    fn adaline_um_equals_mu_eq8() {
+        // Section V-A: for Adaline the two compositions coincide.
+        let mut rng = Rng::new(5);
+        let (b, d) = (12, 7);
+        let base = random_batch(&mut rng, b, d);
+        let mut be = NativeBackend::new();
+        let mut mu = base.clone();
+        let mut um = base.clone();
+        be.step(&StepOp { learner: LearnerKind::Adaline, variant: Variant::Mu, hp: 0.05 }, &mut mu)
+            .unwrap();
+        be.step(&StepOp { learner: LearnerKind::Adaline, variant: Variant::Um, hp: 0.05 }, &mut um)
+            .unwrap();
+        for (a, e) in mu.out_w.iter().zip(&um.out_w) {
+            assert!((a - e).abs() < 1e-5, "{a} vs {e}");
+        }
+    }
+
+    #[test]
+    fn error_counts_basic() {
+        let mut be = NativeBackend::new();
+        // 3 test rows (last padded), 2 models
+        let x = vec![1.0, 0.0, -1.0, 0.0, 9.0, 9.0];
+        let y = vec![1.0, -1.0, 0.0];
+        let w = vec![1.0, 0.0, /* model 0: perfect */ -1.0, 0.0 /* model 1: inverted */];
+        let c = be.error_counts(&x, &y, 3, 2, &w, 2).unwrap();
+        assert_eq!(c, vec![0.0, 2.0]);
+    }
+}

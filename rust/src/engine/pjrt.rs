@@ -1,0 +1,151 @@
+//! PJRT batched backend: executes the AOT-compiled L2 graphs (Pallas kernels
+//! inside) through the XLA CPU client.  Requests are padded up to the
+//! compiled shape buckets with mask rows; padding rows pass through
+//! unchanged and are never read back.
+
+use crate::engine::{Backend, StepBatch, StepOp};
+use crate::gossip::create_model::Variant;
+use crate::runtime::{literal_matrix, literal_to_vec, literal_vec, Runtime};
+use anyhow::{Context, Result};
+use std::path::Path;
+
+pub struct PjrtBackend {
+    rt: Runtime,
+    // padded staging buffers, reused across calls
+    mat: Vec<Vec<f32>>,
+    vec: Vec<Vec<f32>>,
+}
+
+impl PjrtBackend {
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        Ok(PjrtBackend {
+            rt: Runtime::load(artifacts_dir)?,
+            mat: vec![Vec::new(); 3],
+            vec: vec![Vec::new(); 4],
+        })
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    /// Default artifact location: `$GOLF_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> std::path::PathBuf {
+        std::env::var_os("GOLF_ARTIFACTS")
+            .map(Into::into)
+            .unwrap_or_else(|| "artifacts".into())
+    }
+
+    fn pad_matrix(dst: &mut Vec<f32>, src: &[f32], b: usize, d: usize, pb: usize, pd: usize) {
+        dst.clear();
+        dst.resize(pb * pd, 0.0);
+        for i in 0..b {
+            dst[i * pd..i * pd + d].copy_from_slice(&src[i * d..(i + 1) * d]);
+        }
+    }
+
+    fn pad_vec(dst: &mut Vec<f32>, src: &[f32], b: usize, pb: usize) {
+        dst.clear();
+        dst.resize(pb, 0.0);
+        dst[..b].copy_from_slice(&src[..b]);
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn step(&mut self, op: &StepOp, batch: &mut StepBatch) -> Result<()> {
+        let (b, d) = (batch.b, batch.d);
+        let (name, params) = self
+            .rt
+            .resolve(&op.op_name(), &[("b", b), ("d", d)])
+            .context("resolving step artifact")?;
+        let (pb, pd) = (params["b"], params["d"]);
+
+        // mask: 1 for live rows, 0 for padding; hp broadcast per-row
+        let mut mask = vec![0.0f32; pb];
+        mask[..b].fill(1.0);
+        let mut hp = vec![0.0f32; pb];
+        hp[..b].fill(op.hp);
+
+        let [m0, m1, m2] = &mut self.mat[..] else { unreachable!() };
+        Self::pad_matrix(m0, &batch.w1, b, d, pb, pd);
+        Self::pad_matrix(m2, &batch.x, b, d, pb, pd);
+        let [v0, v1, v2, _v3] = &mut self.vec[..] else { unreachable!() };
+        Self::pad_vec(v0, &batch.t1, b, pb);
+        Self::pad_vec(v2, &batch.y, b, pb);
+
+        let outs = match op.variant {
+            Variant::Rw => {
+                // (w, x, y, t, hp, mask)
+                let inputs = [
+                    literal_matrix(m0, pb, pd)?,
+                    literal_matrix(m2, pb, pd)?,
+                    literal_vec(v2),
+                    literal_vec(v0),
+                    literal_vec(&hp),
+                    literal_vec(&mask),
+                ];
+                self.rt.execute(&name, &inputs)?
+            }
+            Variant::Mu | Variant::Um => {
+                // (w1, t1, w2, t2, x, y, hp, mask)
+                Self::pad_matrix(m1, &batch.w2, b, d, pb, pd);
+                Self::pad_vec(v1, &batch.t2, b, pb);
+                let inputs = [
+                    literal_matrix(m0, pb, pd)?,
+                    literal_vec(v0),
+                    literal_matrix(m1, pb, pd)?,
+                    literal_vec(v1),
+                    literal_matrix(m2, pb, pd)?,
+                    literal_vec(v2),
+                    literal_vec(&hp),
+                    literal_vec(&mask),
+                ];
+                self.rt.execute(&name, &inputs)?
+            }
+        };
+
+        let w_out = literal_to_vec(&outs[0])?;
+        let t_out = literal_to_vec(&outs[1])?;
+        for i in 0..b {
+            batch.out_w[i * d..(i + 1) * d]
+                .copy_from_slice(&w_out[i * pd..i * pd + d]);
+            batch.out_t[i] = t_out[i];
+        }
+        Ok(())
+    }
+
+    fn error_counts(
+        &mut self,
+        x: &[f32],
+        y: &[f32],
+        n: usize,
+        d: usize,
+        w: &[f32],
+        m: usize,
+    ) -> Result<Vec<f32>> {
+        let (name, params) = self
+            .rt
+            .resolve("eval_error_counts", &[("n", n), ("m", m), ("d", d)])
+            .context("resolving eval artifact")?;
+        let (pn, pm, pd) = (params["n"], params["m"], params["d"]);
+
+        let [m0, m1, _] = &mut self.mat[..] else { unreachable!() };
+        Self::pad_matrix(m0, x, n, d, pn, pd);
+        Self::pad_matrix(m1, w, m, d, pm, pd);
+        let [v0, ..] = &mut self.vec[..] else { unreachable!() };
+        Self::pad_vec(v0, y, n, pn); // label 0 marks padding rows
+
+        let inputs = [
+            literal_matrix(m0, pn, pd)?,
+            literal_vec(v0),
+            literal_matrix(m1, pm, pd)?,
+        ];
+        let outs = self.rt.execute(&name, &inputs)?;
+        let counts = literal_to_vec(&outs[0])?;
+        Ok(counts[..m].to_vec())
+    }
+}

@@ -1,0 +1,55 @@
+//! CSV output for convergence curves — the bench targets write these files
+//! so the paper's figures can be re-plotted from the repo.
+
+use crate::eval::tracker::Curve;
+use std::io::Write;
+use std::path::Path;
+
+/// Write a set of curves in long format:
+/// `label,cycle,err_mean,err_std,err_vote,similarity,messages_sent`.
+pub fn write_curves(path: &Path, curves: &[Curve]) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "label,cycle,err_mean,err_std,err_vote,similarity,messages_sent")?;
+    for c in curves {
+        for p in &c.points {
+            writeln!(
+                f,
+                "{},{},{:.6},{:.6},{},{},{}",
+                c.label,
+                p.cycle,
+                p.err_mean,
+                p.err_std,
+                p.err_vote.map_or(String::new(), |v| format!("{v:.6}")),
+                p.similarity.map_or(String::new(), |v| format!("{v:.6}")),
+                p.messages_sent
+            )?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::tracker::point_from_errors;
+
+    #[test]
+    fn writes_long_format() {
+        let mut c = Curve::new("p2pegasos-mu");
+        c.push(point_from_errors(1, &[0.4], None, Some(0.5), 10));
+        c.push(point_from_errors(2, &[0.3], Some(&[0.25]), None, 20));
+        let dir = std::env::temp_dir().join("golf_csv_test");
+        let path = dir.join("curves.csv");
+        write_curves(&path, &[c]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.trim().lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("label,cycle"));
+        assert!(lines[1].starts_with("p2pegasos-mu,1,0.4"));
+        assert!(lines[2].contains(",0.250000,"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

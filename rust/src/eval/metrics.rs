@@ -1,0 +1,106 @@
+//! Prediction-error metrics (Section VI-A(h)): the 0-1 error of a model (or
+//! of a cache-backed voting predictor) over a held-out test set.
+
+use crate::data::dataset::Examples;
+use crate::gossip::cache::ModelCache;
+use crate::gossip::predict::Predictor;
+use crate::learning::linear::LinearModel;
+
+/// 0-1 error of a single model. The zero model (margin 0) counts every
+/// positive example as a miss — sign(0) is treated as -1 throughout.
+pub fn zero_one_error(m: &LinearModel, test: &Examples, y: &[f32]) -> f64 {
+    debug_assert_eq!(test.n(), y.len());
+    let mut wrong = 0usize;
+    for i in 0..test.n() {
+        if m.predict(&test.row(i)) != y[i] {
+            wrong += 1;
+        }
+    }
+    wrong as f64 / test.n().max(1) as f64
+}
+
+/// 0-1 error of a cache-backed predictor (Algorithm 4).
+pub fn cache_error(
+    cache: &ModelCache,
+    predictor: Predictor,
+    test: &Examples,
+    y: &[f32],
+) -> f64 {
+    let mut wrong = 0usize;
+    for i in 0..test.n() {
+        if predictor.predict(cache, &test.row(i)) != y[i] {
+            wrong += 1;
+        }
+    }
+    wrong as f64 / test.n().max(1) as f64
+}
+
+/// Error of the margin-weighted full-population vote (Eq. 18/19, the WB1/WB2
+/// baselines): sign(sum_j <w_j, x>).
+pub fn weighted_vote_error(models: &[&LinearModel], test: &Examples, y: &[f32]) -> f64 {
+    let mut wrong = 0usize;
+    for i in 0..test.n() {
+        let x = test.row(i);
+        let s: f32 = models.iter().map(|m| m.raw_margin(&x)).sum();
+        let pred = if s > 0.0 { 1.0 } else { -1.0 };
+        if pred != y[i] {
+            wrong += 1;
+        }
+    }
+    wrong as f64 / test.n().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::matrix::Matrix;
+
+    fn test_set() -> (Examples, Vec<f32>) {
+        // y = sign(x0)
+        let m = Matrix::from_vec(4, 2, vec![1., 0., -1., 0., 2., 1., -2., 1.]);
+        (Examples::Dense(m), vec![1.0, -1.0, 1.0, -1.0])
+    }
+
+    #[test]
+    fn perfect_model_zero_error() {
+        let (x, y) = test_set();
+        let m = LinearModel::from_weights(vec![1.0, 0.0], 0);
+        assert_eq!(zero_one_error(&m, &x, &y), 0.0);
+    }
+
+    #[test]
+    fn inverted_model_full_error() {
+        let (x, y) = test_set();
+        let m = LinearModel::from_weights(vec![-1.0, 0.0], 0);
+        assert_eq!(zero_one_error(&m, &x, &y), 1.0);
+    }
+
+    #[test]
+    fn zero_model_errs_on_positives() {
+        let (x, y) = test_set();
+        let m = LinearModel::zeros(2);
+        assert_eq!(zero_one_error(&m, &x, &y), 0.5);
+    }
+
+    #[test]
+    fn vote_error_beats_bad_member() {
+        let (x, y) = test_set();
+        let good = LinearModel::from_weights(vec![1.0, 0.0], 0);
+        let bad = LinearModel::from_weights(vec![-0.1, 0.0], 0);
+        let e = weighted_vote_error(&[&good, &bad, &good], &x, &y);
+        assert_eq!(e, 0.0);
+    }
+
+    #[test]
+    fn cache_error_matches_single_for_freshest() {
+        let (x, y) = test_set();
+        let mut c = ModelCache::new(3);
+        let m = LinearModel::from_weights(vec![1.0, 0.0], 0);
+        c.add(LinearModel::from_weights(vec![-1.0, 0.0], 0));
+        c.add(m.clone());
+        assert_eq!(
+            cache_error(&c, Predictor::Freshest, &x, &y),
+            zero_one_error(&m, &x, &y)
+        );
+    }
+}

@@ -1,0 +1,10 @@
+//! Evaluation: 0-1 error metrics, model-similarity, log-spaced convergence
+//! tracking, and CSV export for figure regeneration.
+pub mod csv;
+pub mod metrics;
+pub mod similarity;
+pub mod tracker;
+
+pub use metrics::{cache_error, weighted_vote_error, zero_one_error};
+pub use similarity::mean_pairwise_cosine;
+pub use tracker::{log_spaced_cycles, Curve, EvalPoint};

@@ -1,0 +1,57 @@
+//! Model-similarity metric (Section VI-A(h)): mean pairwise cosine
+//! similarity of the models circulating in the network — used in Fig. 2 to
+//! relate convergence speed to model diversity.
+
+use crate::learning::linear::LinearModel;
+
+/// Mean cosine similarity over all unordered pairs.
+pub fn mean_pairwise_cosine(models: &[&LinearModel]) -> f64 {
+    let k = models.len();
+    if k < 2 {
+        return 1.0;
+    }
+    let mut sum = 0.0f64;
+    let mut pairs = 0u64;
+    for i in 0..k {
+        for j in (i + 1)..k {
+            sum += LinearModel::cosine(models[i], models[j]) as f64;
+            pairs += 1;
+        }
+    }
+    sum / pairs as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_models_similarity_one() {
+        let a = LinearModel::from_weights(vec![1.0, 2.0], 0);
+        let b = a.clone();
+        let c = a.clone();
+        assert!((mean_pairwise_cosine(&[&a, &b, &c]) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn orthogonal_models_similarity_zero() {
+        let a = LinearModel::from_weights(vec![1.0, 0.0], 0);
+        let b = LinearModel::from_weights(vec![0.0, 1.0], 0);
+        assert!(mean_pairwise_cosine(&[&a, &b]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn single_model_defined_as_one() {
+        let a = LinearModel::from_weights(vec![1.0], 0);
+        assert_eq!(mean_pairwise_cosine(&[&a]), 1.0);
+    }
+
+    #[test]
+    fn mixed_pairs_average() {
+        let a = LinearModel::from_weights(vec![1.0, 0.0], 0);
+        let b = LinearModel::from_weights(vec![-1.0, 0.0], 0);
+        let c = LinearModel::from_weights(vec![0.0, 1.0], 0);
+        // pairs: (a,b)=-1, (a,c)=0, (b,c)=0
+        assert!((mean_pairwise_cosine(&[&a, &b, &c]) + 1.0 / 3.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,135 @@
+//! Convergence-curve tracking: log-spaced measurement cycles (the paper's
+//! figures use a logarithmic x axis) and the per-point statistics collected
+//! over the sampled evaluation peers.
+
+use crate::util::stats;
+
+/// Log-spaced cycle grid: 1..10 by 1, 10..100 by 10, 100..1000 by 100, ...
+/// always including `max_cycle`.
+pub fn log_spaced_cycles(max_cycle: u64) -> Vec<u64> {
+    let mut pts = Vec::new();
+    let mut step = 1u64;
+    let mut c = 1u64;
+    while c <= max_cycle {
+        pts.push(c);
+        if c >= step * 10 {
+            step *= 10;
+        }
+        c += step;
+    }
+    if pts.last() != Some(&max_cycle) {
+        pts.push(max_cycle);
+    }
+    pts
+}
+
+/// One measured point of a convergence curve.
+#[derive(Clone, Debug)]
+pub struct EvalPoint {
+    pub cycle: u64,
+    /// mean 0-1 error over sampled peers, freshest-model prediction
+    pub err_mean: f64,
+    pub err_std: f64,
+    /// mean 0-1 error with cache voting (Algorithm 4), when enabled
+    pub err_vote: Option<f64>,
+    /// mean pairwise cosine similarity of sampled models, when enabled
+    pub similarity: Option<f64>,
+    /// messages sent network-wide up to this point
+    pub messages_sent: u64,
+}
+
+/// A full convergence curve plus run metadata.
+#[derive(Clone, Debug, Default)]
+pub struct Curve {
+    pub label: String,
+    pub points: Vec<EvalPoint>,
+}
+
+impl Curve {
+    pub fn new(label: impl Into<String>) -> Self {
+        Curve { label: label.into(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, p: EvalPoint) {
+        self.points.push(p);
+    }
+
+    pub fn final_error(&self) -> f64 {
+        self.points.last().map(|p| p.err_mean).unwrap_or(1.0)
+    }
+
+    /// First cycle at which the mean error drops below `threshold`
+    /// (convergence-speed comparison across algorithms).
+    pub fn cycles_to_reach(&self, threshold: f64) -> Option<u64> {
+        self.points
+            .iter()
+            .find(|p| p.err_mean <= threshold)
+            .map(|p| p.cycle)
+    }
+}
+
+/// Aggregate per-peer errors into an EvalPoint.
+pub fn point_from_errors(
+    cycle: u64,
+    errs: &[f64],
+    vote_errs: Option<&[f64]>,
+    similarity: Option<f64>,
+    messages_sent: u64,
+) -> EvalPoint {
+    EvalPoint {
+        cycle,
+        err_mean: stats::mean(errs),
+        err_std: stats::std_dev(errs),
+        err_vote: vote_errs.map(stats::mean),
+        similarity,
+        messages_sent,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_grid_shape() {
+        let g = log_spaced_cycles(1000);
+        assert_eq!(g[0], 1);
+        assert!(g.contains(&10));
+        assert!(g.contains(&100));
+        assert!(g.contains(&1000));
+        assert_eq!(*g.last().unwrap(), 1000);
+        // strictly increasing
+        for w in g.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        // dense early, sparse late
+        assert!(g.iter().filter(|&&c| c <= 10).count() >= 10);
+        assert!(g.iter().filter(|&&c| c > 100).count() <= 10);
+    }
+
+    #[test]
+    fn log_grid_includes_max_when_off_grid() {
+        let g = log_spaced_cycles(137);
+        assert_eq!(*g.last().unwrap(), 137);
+    }
+
+    #[test]
+    fn curve_threshold_search() {
+        let mut c = Curve::new("x");
+        for (cy, e) in [(1, 0.5), (10, 0.2), (100, 0.05)] {
+            c.push(point_from_errors(cy, &[e], None, None, 0));
+        }
+        assert_eq!(c.cycles_to_reach(0.2), Some(10));
+        assert_eq!(c.cycles_to_reach(0.01), None);
+        assert_eq!(c.final_error(), 0.05);
+    }
+
+    #[test]
+    fn point_aggregation() {
+        let p = point_from_errors(5, &[0.1, 0.3], Some(&[0.0, 0.2]), Some(0.8), 42);
+        assert!((p.err_mean - 0.2).abs() < 1e-12);
+        assert_eq!(p.err_vote, Some(0.1));
+        assert_eq!(p.similarity, Some(0.8));
+        assert_eq!(p.messages_sent, 42);
+    }
+}

@@ -1,0 +1,89 @@
+//! Shared experiment plumbing: the Table-I dataset registry with calibrated
+//! hyperparameters, standard run lengths, and output locations.
+
+use crate::data::dataset::Dataset;
+use crate::data::synthetic::{reuters_like, spambase_like, urls_like, Scale};
+use std::path::PathBuf;
+
+/// One benchmark dataset plus its experiment parameters.
+pub struct ExpDataset {
+    pub ds: Dataset,
+    /// Pegasos λ (calibrated per dataset; the paper does not report λ)
+    pub lambda: f32,
+    /// run length in gossip cycles for figure-style experiments
+    pub cycles: u64,
+    /// paper's Table-I Pegasos-20k reference error
+    pub paper_error: f64,
+}
+
+/// The three Table-I datasets at `scale` (1.0 = full size).
+pub fn datasets(seed: u64, scale: f64) -> Vec<ExpDataset> {
+    vec![
+        ExpDataset {
+            ds: reuters_like(seed, Scale(scale)),
+            lambda: 1e-2,
+            cycles: 1000,
+            paper_error: 0.025,
+        },
+        ExpDataset {
+            ds: spambase_like(seed, Scale(scale)),
+            lambda: 1e-2,
+            cycles: 1000,
+            paper_error: 0.111,
+        },
+        ExpDataset {
+            ds: urls_like(seed, Scale(scale)),
+            lambda: 1e-2,
+            cycles: 1000,
+            paper_error: 0.080,
+        },
+    ]
+}
+
+/// Scale knob for quick runs: `GOLF_SCALE` env var (default 1.0, figures) —
+/// integration tests and smoke benches set e.g. 0.05.
+pub fn env_scale() -> f64 {
+    std::env::var("GOLF_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0)
+}
+
+/// Cycle-count scale: `GOLF_CYCLES` caps the run length.
+pub fn env_cycles(default: u64) -> u64 {
+    std::env::var("GOLF_CYCLES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Where experiment CSVs land.
+pub fn results_dir() -> PathBuf {
+    std::env::var_os("GOLF_RESULTS")
+        .map(Into::into)
+        .unwrap_or_else(|| PathBuf::from("results"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_has_three_calibrated_sets() {
+        let sets = datasets(1, 0.01);
+        assert_eq!(sets.len(), 3);
+        let names: Vec<&str> = sets.iter().map(|e| e.ds.name.as_str()).collect();
+        assert_eq!(names, vec!["reuters", "spambase", "urls"]);
+        for e in &sets {
+            assert!(e.lambda > 0.0);
+            assert!(e.paper_error > 0.0 && e.paper_error < 0.5);
+        }
+    }
+
+    #[test]
+    fn env_knobs_default() {
+        // do not set env in tests (they run in parallel) — just defaults
+        assert!(env_scale() > 0.0);
+        assert_eq!(env_cycles(123), 123);
+    }
+}

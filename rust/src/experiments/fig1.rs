@@ -1,0 +1,139 @@
+//! Figure 1: prediction error vs. gossip cycle (log x), without failures
+//! (upper row) and under the extreme failure scenario (lower row), for
+//! the sequential Pegasos, P2PegasosRW, P2PegasosMU, WB1 and WB2.
+
+use crate::baselines::{sequential, weighted_bagging::{self, Bagging}};
+use crate::data::dataset::Dataset;
+use crate::eval::tracker::Curve;
+use crate::experiments::common::ExpDataset;
+use crate::gossip::create_model::Variant;
+use crate::gossip::protocol::{run, ProtocolConfig};
+use crate::learning::Learner;
+
+pub struct Fig1Panel {
+    pub dataset: String,
+    pub failures: bool,
+    pub curves: Vec<Curve>,
+}
+
+fn gossip_cfg(e: &ExpDataset, variant: Variant, cycles: u64, failures: bool, seed: u64) -> ProtocolConfig {
+    let mut cfg = ProtocolConfig::paper_default(cycles);
+    cfg.variant = variant;
+    cfg.learner = Learner::pegasos(e.lambda);
+    cfg.seed = seed;
+    if failures {
+        cfg = cfg.with_extreme_failures();
+    }
+    cfg
+}
+
+/// One dataset panel (one column of Fig. 1).
+pub fn panel(e: &ExpDataset, cycles: u64, failures: bool, seed: u64) -> Fig1Panel {
+    let learner = Learner::pegasos(e.lambda);
+    let mut curves = Vec::new();
+
+    // baselines are failure-free references in both rows (they model ideal
+    // central resources, not the P2P network)
+    let mut c = sequential::curve(&e.ds, &learner, cycles, seed);
+    c.label = "pegasos".into();
+    curves.push(c);
+    let mut c = weighted_bagging::curve(&e.ds, &learner, Bagging::Wb1, wb_cycles(cycles), seed);
+    c.label = "wb1".into();
+    curves.push(c);
+    let mut c = weighted_bagging::curve(&e.ds, &learner, Bagging::Wb2, wb_cycles(cycles), seed);
+    c.label = "wb2".into();
+    curves.push(c);
+
+    for variant in [Variant::Rw, Variant::Mu] {
+        let res = run(gossip_cfg(e, variant, cycles, failures, seed), &e.ds);
+        let mut c = res.curve;
+        c.label = format!("p2pegasos-{}", variant.name());
+        curves.push(c);
+    }
+
+    Fig1Panel { dataset: e.ds.name.clone(), failures, curves }
+}
+
+/// WB baselines update all N models per cycle — cap the horizon to keep the
+/// cost of the ideal baselines in check (they converge by ~100 cycles).
+fn wb_cycles(cycles: u64) -> u64 {
+    cycles.min(200)
+}
+
+/// Run the full figure: every dataset x {no failure, all failures}.
+pub fn run_figure(sets: &[ExpDataset], cycles_override: Option<u64>, seed: u64) -> Vec<Fig1Panel> {
+    let mut panels = Vec::new();
+    for e in sets {
+        let cycles = cycles_override.unwrap_or(e.cycles);
+        for failures in [false, true] {
+            panels.push(panel(e, cycles, failures, seed));
+        }
+    }
+    panels
+}
+
+/// Convergence-ordering summary used by tests and the bench report: cycles
+/// to reach `threshold` error for each curve of a panel.
+pub fn cycles_to_threshold(panel: &Fig1Panel, threshold: f64) -> Vec<(String, Option<u64>)> {
+    panel
+        .curves
+        .iter()
+        .map(|c| (c.label.clone(), c.cycles_to_reach(threshold)))
+        .collect()
+}
+
+pub fn to_csv(panels: &[Fig1Panel], dir: &std::path::Path) -> std::io::Result<()> {
+    for p in panels {
+        let f = dir.join(format!(
+            "fig1_{}_{}.csv",
+            p.dataset,
+            if p.failures { "af" } else { "nofail" }
+        ));
+        crate::eval::csv::write_curves(&f, &p.curves)?;
+    }
+    Ok(())
+}
+
+#[allow(dead_code)]
+fn _dataset_unused(_: &Dataset) {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::common::datasets;
+
+    #[test]
+    fn panel_produces_all_curves_and_ordering() {
+        let sets = datasets(3, 0.02);
+        let urls = &sets[2];
+        let p = panel(urls, 60, false, 9);
+        assert_eq!(p.curves.len(), 5);
+        let labels: Vec<&str> = p.curves.iter().map(|c| c.label.as_str()).collect();
+        assert!(labels.contains(&"pegasos"));
+        assert!(labels.contains(&"wb1"));
+        assert!(labels.contains(&"p2pegasos-mu"));
+        // headline shape: merging speeds up convergence — the MU curve's
+        // mean error over the log grid must not exceed the RW curve's
+        // (area-under-curve comparison is robust to single-point noise)
+        let auc = |l: &str| {
+            let c = p.curves.iter().find(|c| c.label == l).unwrap();
+            c.points.iter().map(|pt| pt.err_mean).sum::<f64>() / c.points.len() as f64
+        };
+        assert!(
+            auc("p2pegasos-mu") <= auc("p2pegasos-rw") + 0.02,
+            "mu auc {} vs rw auc {}",
+            auc("p2pegasos-mu"),
+            auc("p2pegasos-rw")
+        );
+    }
+
+    #[test]
+    fn csv_written_per_panel() {
+        let sets = datasets(4, 0.01);
+        let p = panel(&sets[2], 10, false, 1);
+        let dir = std::env::temp_dir().join("golf_fig1_test");
+        to_csv(&[p], &dir).unwrap();
+        assert!(dir.join("fig1_urls_nofail.csv").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

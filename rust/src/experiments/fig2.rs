@@ -1,0 +1,75 @@
+//! Figure 2: P2PegasosMU vs P2PegasosUM vs PERFECT MATCHING — prediction
+//! error (upper row) and mean pairwise cosine model similarity (lower row),
+//! failure-free.
+
+use crate::baselines::perfect_matching::run_perfect_matching;
+use crate::eval::tracker::Curve;
+use crate::experiments::common::ExpDataset;
+use crate::gossip::create_model::Variant;
+use crate::gossip::protocol::{run, ProtocolConfig};
+use crate::learning::Learner;
+
+pub struct Fig2Panel {
+    pub dataset: String,
+    pub curves: Vec<Curve>,
+}
+
+fn cfg(e: &ExpDataset, variant: Variant, cycles: u64, seed: u64) -> ProtocolConfig {
+    let mut cfg = ProtocolConfig::paper_default(cycles);
+    cfg.variant = variant;
+    cfg.learner = Learner::pegasos(e.lambda);
+    cfg.eval.similarity = true;
+    cfg.seed = seed;
+    cfg
+}
+
+pub fn panel(e: &ExpDataset, cycles: u64, seed: u64) -> Fig2Panel {
+    let mut curves = Vec::new();
+
+    for variant in [Variant::Mu, Variant::Um] {
+        let res = run(cfg(e, variant, cycles, seed), &e.ds);
+        let mut c = res.curve;
+        c.label = format!("p2pegasos-{}", variant.name());
+        curves.push(c);
+    }
+    let res = run_perfect_matching(cfg(e, Variant::Mu, cycles, seed), &e.ds);
+    let mut c = res.curve;
+    c.label = "p2pegasos-mu-matching".into();
+    curves.push(c);
+
+    Fig2Panel { dataset: e.ds.name.clone(), curves }
+}
+
+pub fn run_figure(sets: &[ExpDataset], cycles_override: Option<u64>, seed: u64) -> Vec<Fig2Panel> {
+    sets.iter()
+        .map(|e| panel(e, cycles_override.unwrap_or(e.cycles), seed))
+        .collect()
+}
+
+pub fn to_csv(panels: &[Fig2Panel], dir: &std::path::Path) -> std::io::Result<()> {
+    for p in panels {
+        crate::eval::csv::write_curves(&dir.join(format!("fig2_{}.csv", p.dataset)), &p.curves)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::common::datasets;
+
+    #[test]
+    fn panel_has_similarity_curves() {
+        let sets = datasets(5, 0.02);
+        let p = panel(&sets[2], 30, 3);
+        assert_eq!(p.curves.len(), 3);
+        for c in &p.curves {
+            assert!(c.points.iter().all(|pt| pt.similarity.is_some()));
+        }
+        // similarity should rise as models converge toward each other
+        let mu = &p.curves[0];
+        let first = mu.points.first().unwrap().similarity.unwrap();
+        let last = mu.points.last().unwrap().similarity.unwrap();
+        assert!(last > first, "similarity should increase: {first} -> {last}");
+    }
+}

@@ -1,0 +1,107 @@
+//! Figure 3: the effect of local voting (Algorithm 4, cache size 10) for
+//! P2PegasosRW and P2PegasosMU, without failures (upper row) and under the
+//! extreme failure scenario (lower row).  Curves carry both the
+//! freshest-model error (err_mean) and the voted error (err_vote).
+
+use crate::eval::tracker::Curve;
+use crate::experiments::common::ExpDataset;
+use crate::gossip::create_model::Variant;
+use crate::gossip::protocol::{run, ProtocolConfig};
+use crate::learning::Learner;
+
+pub struct Fig3Panel {
+    pub dataset: String,
+    pub failures: bool,
+    pub curves: Vec<Curve>,
+}
+
+pub fn panel(
+    e: &ExpDataset,
+    cycles: u64,
+    failures: bool,
+    cache_size: usize,
+    seed: u64,
+) -> Fig3Panel {
+    let mut curves = Vec::new();
+    for variant in [Variant::Rw, Variant::Mu] {
+        let mut cfg = ProtocolConfig::paper_default(cycles);
+        cfg.variant = variant;
+        cfg.learner = Learner::pegasos(e.lambda);
+        cfg.cache_size = cache_size;
+        cfg.eval.voting = true;
+        cfg.seed = seed;
+        if failures {
+            cfg = cfg.with_extreme_failures();
+        }
+        let res = run(cfg, &e.ds);
+        let mut c = res.curve;
+        c.label = format!("p2pegasos-{}", variant.name());
+        curves.push(c);
+    }
+    Fig3Panel { dataset: e.ds.name.clone(), failures, curves }
+}
+
+pub fn run_figure(sets: &[ExpDataset], cycles_override: Option<u64>, seed: u64) -> Vec<Fig3Panel> {
+    let mut panels = Vec::new();
+    for e in sets {
+        let cycles = cycles_override.unwrap_or(e.cycles);
+        for failures in [false, true] {
+            panels.push(panel(e, cycles, failures, 10, seed));
+        }
+    }
+    panels
+}
+
+/// Cache-size ablation (beyond the paper; DESIGN.md §8).
+pub fn cache_sweep(e: &ExpDataset, cycles: u64, sizes: &[usize], seed: u64) -> Vec<(usize, Curve)> {
+    sizes
+        .iter()
+        .map(|&s| {
+            let p = panel(e, cycles, false, s, seed);
+            (s, p.curves.into_iter().nth(1).unwrap()) // MU curve
+        })
+        .collect()
+}
+
+pub fn to_csv(panels: &[Fig3Panel], dir: &std::path::Path) -> std::io::Result<()> {
+    for p in panels {
+        let f = dir.join(format!(
+            "fig3_{}_{}.csv",
+            p.dataset,
+            if p.failures { "af" } else { "nofail" }
+        ));
+        crate::eval::csv::write_curves(&f, &p.curves)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::common::datasets;
+
+    #[test]
+    fn voting_fields_present_and_voting_helps_rw() {
+        let sets = datasets(6, 0.02);
+        let p = panel(&sets[2], 40, false, 10, 4);
+        let rw = &p.curves[0];
+        assert!(rw.points.iter().all(|pt| pt.err_vote.is_some()));
+        // paper: voting clearly helps the no-merge RW variant (compare at
+        // the last point; allow noise slack)
+        let last = rw.points.last().unwrap();
+        assert!(
+            last.err_vote.unwrap() <= last.err_mean + 0.05,
+            "vote {} vs freshest {}",
+            last.err_vote.unwrap(),
+            last.err_mean
+        );
+    }
+
+    #[test]
+    fn cache_sweep_runs() {
+        let sets = datasets(7, 0.01);
+        let sw = cache_sweep(&sets[2], 10, &[1, 5, 10], 2);
+        assert_eq!(sw.len(), 3);
+        assert_eq!(sw[0].0, 1);
+    }
+}

@@ -1,0 +1,10 @@
+//! Experiment drivers regenerating every table and figure of the paper's
+//! evaluation (Section VI).  Each bench target (`rust/benches/`) is a thin
+//! wrapper over these functions; DESIGN.md §3 is the index.
+pub mod common;
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod table1;
+
+pub use common::{datasets, ExpDataset};

@@ -1,0 +1,77 @@
+//! Table I: dataset statistics and the sequential Pegasos baseline error
+//! after 20,000 iterations.
+
+use crate::baselines::sequential;
+use crate::experiments::common::ExpDataset;
+
+#[derive(Debug)]
+pub struct Table1Row {
+    pub name: String,
+    pub n_train: usize,
+    pub n_test: usize,
+    pub d: usize,
+    pub pos: usize,
+    pub neg: usize,
+    pub pegasos_20k: f64,
+    pub paper_pegasos_20k: f64,
+}
+
+pub fn run(sets: &[ExpDataset], seed: u64) -> Vec<Table1Row> {
+    sets.iter()
+        .map(|e| {
+            let (pos, neg) = e.ds.class_counts();
+            Table1Row {
+                name: e.ds.name.clone(),
+                n_train: e.ds.n_train(),
+                n_test: e.ds.n_test(),
+                d: e.ds.d(),
+                pos,
+                neg,
+                pegasos_20k: sequential::pegasos_20k_error(&e.ds, e.lambda, seed),
+                paper_pegasos_20k: e.paper_error,
+            }
+        })
+        .collect()
+}
+
+pub fn print(rows: &[Table1Row]) {
+    let mut t = crate::util::benchkit::Table::new(&[
+        "dataset",
+        "train",
+        "test",
+        "features",
+        "class ratio",
+        "Pegasos 20k (ours)",
+        "(paper)",
+    ]);
+    for r in rows {
+        t.row(&[
+            r.name.clone(),
+            r.n_train.to_string(),
+            r.n_test.to_string(),
+            r.d.to_string(),
+            format!("{}:{}", r.pos, r.neg),
+            format!("{:.3}", r.pegasos_20k),
+            format!("{:.3}", r.paper_pegasos_20k),
+        ]);
+    }
+    t.print();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::common::datasets;
+
+    #[test]
+    fn rows_carry_stats() {
+        let sets = datasets(1, 0.02);
+        let rows = run(&sets, 7);
+        assert_eq!(rows.len(), 3);
+        for r in &rows {
+            assert!(r.pegasos_20k >= 0.0 && r.pegasos_20k <= 1.0);
+            assert_eq!(r.pos + r.neg, r.n_train);
+        }
+        print(&rows); // must not panic
+    }
+}

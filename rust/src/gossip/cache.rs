@@ -1,0 +1,84 @@
+//! Bounded FIFO model cache (Algorithm 1): stores the most recent models
+//! created at a node; `freshest` is what the active loop sends, and the full
+//! cache backs the local voting predictor (Algorithm 4, cache size 10).
+
+use crate::learning::linear::LinearModel;
+use std::collections::VecDeque;
+
+#[derive(Clone, Debug)]
+pub struct ModelCache {
+    models: VecDeque<LinearModel>,
+    cap: usize,
+}
+
+impl ModelCache {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap >= 1);
+        ModelCache { models: VecDeque::with_capacity(cap), cap }
+    }
+
+    /// Add a model; evicts the oldest when full (Algorithm 1 line 8).
+    pub fn add(&mut self, m: LinearModel) {
+        if self.models.len() == self.cap {
+            self.models.pop_front();
+        }
+        self.models.push_back(m);
+    }
+
+    /// The most recently added model (Algorithm 1 line 5).
+    pub fn freshest(&self) -> &LinearModel {
+        self.models.back().expect("cache never empty after init")
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.models.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &LinearModel> {
+        self.models.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(t: u64) -> LinearModel {
+        LinearModel::from_weights(vec![t as f32], t)
+    }
+
+    #[test]
+    fn fifo_eviction() {
+        let mut c = ModelCache::new(3);
+        for t in 0..5 {
+            c.add(m(t));
+        }
+        assert_eq!(c.len(), 3);
+        let ts: Vec<u64> = c.iter().map(|x| x.t).collect();
+        assert_eq!(ts, vec![2, 3, 4]);
+        assert_eq!(c.freshest().t, 4);
+    }
+
+    #[test]
+    fn freshest_is_last_added() {
+        let mut c = ModelCache::new(10);
+        c.add(m(1));
+        assert_eq!(c.freshest().t, 1);
+        c.add(m(9));
+        assert_eq!(c.freshest().t, 9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_capacity_rejected() {
+        ModelCache::new(0);
+    }
+}

@@ -1,0 +1,194 @@
+//! CREATEMODEL (Algorithm 2): the three studied ways to combine the incoming
+//! model `m1`, the previously received model `m2`, and the node's single
+//! local example.
+
+use crate::data::dataset::Row;
+use crate::learning::adaline::Learner;
+use crate::learning::linear::LinearModel;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Variant {
+    /// CREATEMODELRW: update(m1) — independent random walks (baseline).
+    Rw,
+    /// CREATEMODELMU: update(merge(m1, m2)).
+    Mu,
+    /// CREATEMODELUM: merge(update(m1), update(m2)) — both updates use the
+    /// same local example.
+    Um,
+}
+
+impl Variant {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Variant::Rw => "rw",
+            Variant::Mu => "mu",
+            Variant::Um => "um",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Variant> {
+        match s.to_ascii_lowercase().as_str() {
+            "rw" => Some(Variant::Rw),
+            "mu" => Some(Variant::Mu),
+            "um" => Some(Variant::Um),
+            _ => None,
+        }
+    }
+}
+
+/// Create the new model from the incoming model (consumed) and the last
+/// received model, using the node's local example (x, y).
+pub fn create_model(
+    variant: Variant,
+    learner: &Learner,
+    m1: LinearModel,
+    m2: &LinearModel,
+    x: &Row<'_>,
+    y: f32,
+) -> LinearModel {
+    match variant {
+        Variant::Rw => {
+            let mut m = m1;
+            learner.update(&mut m, x, y);
+            m
+        }
+        Variant::Mu => {
+            // merge into m1's buffer in place: the incoming model is owned,
+            // so no allocation is needed on this hot path (perf pass §L3)
+            let mut m = m1;
+            m.merge_from(m2);
+            learner.update(&mut m, x, y);
+            m
+        }
+        Variant::Um => {
+            let mut u1 = m1;
+            let mut u2 = m2.clone();
+            learner.update(&mut u1, x, y);
+            learner.update(&mut u2, x, y);
+            LinearModel::merge(&u1, &u2)
+        }
+    }
+}
+
+/// Allocation-minimal CREATEMODEL used by the simulator hot path: consumes
+/// the incoming model, performs the Algorithm-1 `lastModel <- m` assignment
+/// in place, and returns the created model.  For MU this needs **zero**
+/// extra allocations (the merge reuses the previous lastModel's buffer);
+/// RW/UM need exactly one clone of the incoming model.
+/// Equivalent to `create_model` + assignment — pinned by a property test.
+pub fn create_model_step(
+    variant: Variant,
+    learner: &Learner,
+    incoming: LinearModel,
+    last_recv: &mut LinearModel,
+    x: &Row<'_>,
+    y: f32,
+) -> LinearModel {
+    match variant {
+        Variant::Rw => {
+            let mut created = incoming.clone();
+            learner.update(&mut created, x, y);
+            *last_recv = incoming;
+            created
+        }
+        Variant::Mu => {
+            // prev <- merge(prev, incoming) in prev's buffer, then update
+            let mut prev = std::mem::replace(last_recv, incoming);
+            prev.merge_from(last_recv);
+            learner.update(&mut prev, x, y);
+            prev
+        }
+        Variant::Um => {
+            let mut u1 = incoming.clone();
+            learner.update(&mut u1, x, y);
+            let mut u2 = std::mem::replace(last_recv, incoming);
+            learner.update(&mut u2, x, y);
+            u2.merge_from(&u1);
+            u2
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::learning::adaline::Learner;
+
+    fn setup() -> (Learner, LinearModel, LinearModel, Vec<f32>) {
+        (
+            Learner::pegasos(0.1),
+            LinearModel::from_weights(vec![1.0, 0.0], 4),
+            LinearModel::from_weights(vec![0.0, 1.0], 2),
+            vec![1.0, 1.0],
+        )
+    }
+
+    #[test]
+    fn rw_ignores_m2() {
+        let (l, m1, m2, x) = setup();
+        let a = create_model(Variant::Rw, &l, m1.clone(), &m2, &Row::Dense(&x), 1.0);
+        let zero = LinearModel::zeros(2);
+        let b = create_model(Variant::Rw, &l, m1, &zero, &Row::Dense(&x), 1.0);
+        assert_eq!(a.weights(), b.weights());
+        assert_eq!(a.t, 5);
+    }
+
+    #[test]
+    fn mu_merges_then_updates() {
+        let (l, m1, m2, x) = setup();
+        let got = create_model(Variant::Mu, &l, m1.clone(), &m2, &Row::Dense(&x), 1.0);
+        let mut expect = LinearModel::merge(&m1, &m2);
+        l.update(&mut expect, &Row::Dense(&x), 1.0);
+        assert_eq!(got.weights(), expect.weights());
+        assert_eq!(got.t, 5); // max(4,2)+1
+    }
+
+    #[test]
+    fn um_updates_both_with_same_example() {
+        let (l, m1, m2, x) = setup();
+        let got = create_model(Variant::Um, &l, m1.clone(), &m2, &Row::Dense(&x), 1.0);
+        let mut u1 = m1;
+        let mut u2 = m2;
+        l.update(&mut u1, &Row::Dense(&x), 1.0);
+        l.update(&mut u2, &Row::Dense(&x), 1.0);
+        let expect = LinearModel::merge(&u1, &u2);
+        assert_eq!(got.weights(), expect.weights());
+        assert_eq!(got.t, 5); // max(4+1, 2+1)
+    }
+
+    #[test]
+    fn step_variant_equivalent_to_reference_for_all_variants() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(31);
+        for _ in 0..60 {
+            let d = 1 + rng.below_usize(12);
+            let variant = *rng.pick(&[Variant::Rw, Variant::Mu, Variant::Um]);
+            let l = Learner::pegasos(0.05);
+            let w1: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            let w2: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            let y = rng.sign();
+            let m1 = LinearModel::from_weights(w1, 3);
+            let m2 = LinearModel::from_weights(w2, 8);
+
+            let expect = create_model(variant, &l, m1.clone(), &m2, &Row::Dense(&x), y);
+            let mut last = m2.clone();
+            let got = create_model_step(variant, &l, m1.clone(), &mut last, &Row::Dense(&x), y);
+            for (a, b) in got.weights().iter().zip(expect.weights()) {
+                assert!((a - b).abs() < 1e-5, "{variant:?}: {a} vs {b}");
+            }
+            assert_eq!(got.t, expect.t);
+            // Algorithm 1 line 9: lastModel <- incoming
+            assert_eq!(last.weights(), m1.weights());
+            assert_eq!(last.t, m1.t);
+        }
+    }
+
+    #[test]
+    fn variant_parse_roundtrip() {
+        for v in [Variant::Rw, Variant::Mu, Variant::Um] {
+            assert_eq!(Variant::parse(v.name()), Some(v));
+        }
+        assert_eq!(Variant::parse("bogus"), None);
+    }
+}

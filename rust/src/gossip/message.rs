@@ -1,0 +1,43 @@
+//! The single message type of gossip learning (Algorithm 1 line 5): a model
+//! plus the piggybacked NEWSCAST descriptors (Section IV — peer-sampling
+//! gossip rides along with learning gossip, so the message complexity stays
+//! one message per node per Δ).
+
+use crate::p2p::newscast::Descriptor;
+use crate::sim::event::NodeId;
+
+#[derive(Clone, Debug)]
+pub struct ModelMsg {
+    pub src: NodeId,
+    /// materialized model weights
+    pub w: Vec<f32>,
+    /// Pegasos update counter
+    pub t: u64,
+    /// piggybacked peer-sampling descriptors (empty for oracle samplers)
+    pub view: Vec<Descriptor>,
+}
+
+impl ModelMsg {
+    /// Wire size in bytes: weights + counter + descriptors
+    /// (d * 4 + 8 + |view| * 16).  Used by the message-complexity metrics
+    /// (the paper's cost analysis in Section IV).
+    pub fn wire_bytes(&self) -> usize {
+        self.w.len() * 4 + 8 + self.view.len() * 16
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_size_counts_all_fields() {
+        let msg = ModelMsg {
+            src: 0,
+            w: vec![0.0; 10],
+            t: 3,
+            view: vec![Descriptor { node: 1, ts: 2 }; 20],
+        };
+        assert_eq!(msg.wire_bytes(), 40 + 8 + 320);
+    }
+}

@@ -1,0 +1,13 @@
+//! The gossip learning protocol: Algorithm 1 skeleton, the CREATEMODEL
+//! variants (Algorithm 2), model caches and local prediction (Algorithm 4),
+//! and the event-driven simulation driver.
+pub mod cache;
+pub mod create_model;
+pub mod message;
+pub mod predict;
+pub mod protocol;
+
+pub use cache::ModelCache;
+pub use create_model::{create_model, Variant};
+pub use predict::Predictor;
+pub use protocol::{run, EvalConfig, GossipSim, ProtocolConfig, RunResult, RunStats};

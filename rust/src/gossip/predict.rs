@@ -1,0 +1,127 @@
+//! Local prediction (Algorithm 4): every node predicts from its own cache at
+//! zero communication cost — either with the freshest model, or by majority
+//! voting over the cached models, or by the margin-weighted vote of Eq. (7)
+//! (which for linear models equals prediction by the averaged model).
+
+use crate::data::dataset::Row;
+use crate::gossip::cache::ModelCache;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Predictor {
+    /// sign(<freshest.w, x>)
+    Freshest,
+    /// Algorithm 4 VOTEDPREDICT: majority of sign votes over the cache.
+    MajorityVote,
+    /// Eq. (7): sign of the mean raw margin (margin-weighted voting).
+    WeightedVote,
+}
+
+impl Predictor {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Predictor::Freshest => "freshest",
+            Predictor::MajorityVote => "vote",
+            Predictor::WeightedVote => "wvote",
+        }
+    }
+
+    pub fn predict(&self, cache: &ModelCache, x: &Row<'_>) -> f32 {
+        match self {
+            Predictor::Freshest => cache.freshest().predict(x),
+            Predictor::MajorityVote => {
+                // Algorithm 4: pRatio counts sign(<w,x>) >= 0 votes
+                let mut p = 0usize;
+                for m in cache.iter() {
+                    if m.raw_margin(x) >= 0.0 {
+                        p += 1;
+                    }
+                }
+                if 2 * p > cache.len() {
+                    1.0
+                } else {
+                    -1.0
+                }
+            }
+            Predictor::WeightedVote => {
+                let s: f32 = cache.iter().map(|m| m.raw_margin(x)).sum();
+                if s > 0.0 {
+                    1.0
+                } else {
+                    -1.0
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::learning::linear::LinearModel;
+
+    fn cache_with(ws: &[f32]) -> ModelCache {
+        let mut c = ModelCache::new(10);
+        for &w in ws {
+            c.add(LinearModel::from_weights(vec![w], 0));
+        }
+        c
+    }
+
+    #[test]
+    fn freshest_uses_last_model() {
+        let c = cache_with(&[1.0, -1.0]);
+        let x = [1.0];
+        assert_eq!(Predictor::Freshest.predict(&c, &Row::Dense(&x)), -1.0);
+    }
+
+    #[test]
+    fn majority_outvotes_freshest() {
+        let c = cache_with(&[1.0, 1.0, 1.0, -1.0]);
+        let x = [1.0];
+        assert_eq!(Predictor::MajorityVote.predict(&c, &Row::Dense(&x)), 1.0);
+    }
+
+    #[test]
+    fn weighted_vote_uses_margins() {
+        // two weak +, one strong -: majority says +, weighted says -
+        let c = cache_with(&[0.1, 0.1, -5.0]);
+        let x = [1.0];
+        assert_eq!(Predictor::MajorityVote.predict(&c, &Row::Dense(&x)), 1.0);
+        assert_eq!(Predictor::WeightedVote.predict(&c, &Row::Dense(&x)), -1.0);
+    }
+
+    #[test]
+    fn weighted_vote_equals_average_model_prediction() {
+        // Eq. (6)/(7): weighted voting == prediction by the mean model
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(5);
+        for _ in 0..50 {
+            let mut c = ModelCache::new(8);
+            let d = 6;
+            let mut sum = vec![0.0f32; d];
+            let k = 1 + rng.below_usize(8);
+            for _ in 0..k {
+                let w: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+                for (s, &wi) in sum.iter_mut().zip(&w) {
+                    *s += wi;
+                }
+                c.add(LinearModel::from_weights(w, 0));
+            }
+            let avg: Vec<f32> = sum.iter().map(|s| s / k as f32).collect();
+            let avg_model = LinearModel::from_weights(avg, 0);
+            let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            let xr = Row::Dense(&x[..]);
+            assert_eq!(
+                Predictor::WeightedVote.predict(&c, &xr),
+                avg_model.predict(&xr)
+            );
+        }
+    }
+
+    #[test]
+    fn tie_breaks_negative() {
+        let c = cache_with(&[1.0, -1.0]);
+        let x = [1.0];
+        assert_eq!(Predictor::MajorityVote.predict(&c, &Row::Dense(&x)), -1.0);
+    }
+}

@@ -1,0 +1,135 @@
+//! Adaline perceptron (Widrow-Hoff LMS), paper Section V-A Eq. (5).
+//!
+//! The linear activation makes its update commute with averaging (Eq. 8),
+//! which is the paper's motivating exact case for merge-as-voting.
+
+use crate::data::dataset::Row;
+use crate::learning::linear::LinearModel;
+
+#[derive(Clone, Copy, Debug)]
+pub struct Adaline {
+    pub eta: f32,
+}
+
+impl Adaline {
+    pub fn new(eta: f32) -> Self {
+        assert!(eta > 0.0, "eta must be positive");
+        Adaline { eta }
+    }
+
+    /// w <- w + eta (y - <w,x>) x
+    #[inline]
+    pub fn update(&self, m: &mut LinearModel, x: &Row<'_>, y: f32) {
+        let err = y - m.raw_margin(x);
+        m.add_scaled(self.eta * err, x);
+        m.t += 1;
+    }
+}
+
+/// Learner selection for the gossip protocol (enum dispatch keeps the
+/// per-message hot path monomorphic and allocation-free).
+#[derive(Clone, Copy, Debug)]
+pub enum Learner {
+    Pegasos(super::pegasos::Pegasos),
+    Adaline(Adaline),
+    LogReg(super::logreg::LogReg),
+}
+
+impl Learner {
+    pub fn pegasos(lambda: f32) -> Self {
+        Learner::Pegasos(super::pegasos::Pegasos::new(lambda))
+    }
+
+    pub fn adaline(eta: f32) -> Self {
+        Learner::Adaline(Adaline::new(eta))
+    }
+
+    pub fn logreg(lambda: f32) -> Self {
+        Learner::LogReg(super::logreg::LogReg::new(lambda))
+    }
+
+    #[inline]
+    pub fn update(&self, m: &mut LinearModel, x: &Row<'_>, y: f32) {
+        match self {
+            Learner::Pegasos(p) => p.update(m, x, y),
+            Learner::Adaline(a) => a.update(m, x, y),
+            Learner::LogReg(l) => l.update(m, x, y),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Learner::Pegasos(_) => "pegasos",
+            Learner::Adaline(_) => "adaline",
+            Learner::LogReg(_) => "logreg",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::Row;
+    use crate::learning::linear::LinearModel;
+
+    #[test]
+    fn lms_step_reduces_error() {
+        let a = Adaline::new(0.1);
+        let mut m = LinearModel::zeros(2);
+        let x = [1.0, 1.0];
+        for _ in 0..100 {
+            a.update(&mut m, &Row::Dense(&x), 1.0);
+        }
+        assert!((m.raw_margin(&Row::Dense(&x)) - 1.0).abs() < 1e-3);
+        assert_eq!(m.t, 100);
+    }
+
+    #[test]
+    fn update_merge_commute_eq8() {
+        // Eq. (8): update(avg(w1,w2)) == avg(update(w1), update(w2))
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(11);
+        let a = Adaline::new(0.05);
+        let d = 6;
+        for _ in 0..50 {
+            let w1 = LinearModel::from_weights(
+                (0..d).map(|_| rng.normal() as f32).collect(),
+                0,
+            );
+            let w2 = LinearModel::from_weights(
+                (0..d).map(|_| rng.normal() as f32).collect(),
+                0,
+            );
+            let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            let y = rng.sign();
+
+            let mut avg_then_update = LinearModel::merge(&w1, &w2);
+            a.update(&mut avg_then_update, &Row::Dense(&x), y);
+
+            let mut u1 = w1.clone();
+            let mut u2 = w2.clone();
+            a.update(&mut u1, &Row::Dense(&x), y);
+            a.update(&mut u2, &Row::Dense(&x), y);
+            let update_then_avg = LinearModel::merge(&u1, &u2);
+
+            for (p, q) in avg_then_update
+                .weights()
+                .iter()
+                .zip(update_then_avg.weights())
+            {
+                assert!((p - q).abs() < 1e-5, "{p} vs {q}");
+            }
+        }
+    }
+
+    #[test]
+    fn learner_enum_dispatch() {
+        let l = Learner::pegasos(0.01);
+        assert_eq!(l.name(), "pegasos");
+        let mut m = LinearModel::zeros(2);
+        l.update(&mut m, &Row::Dense(&[1.0, 0.0]), 1.0);
+        assert_eq!(m.t, 1);
+        let l = Learner::adaline(0.1);
+        assert_eq!(l.name(), "adaline");
+    }
+}

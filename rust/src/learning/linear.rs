@@ -1,0 +1,228 @@
+//! Linear model representation shared by the whole system.
+//!
+//! A model is a dense weight vector `w` plus the Pegasos update counter `t`
+//! (Algorithm 3).  The hot-path representation keeps an explicit scalar
+//! `scale` so the Pegasos decay `(1 - eta*lambda) * w` is O(1) instead of
+//! O(d), and sparse example updates touch only the non-zero coordinates —
+//! the classic Pegasos trick; see the perf notes in DESIGN.md §7.
+
+use crate::data::dataset::Row;
+
+#[derive(Clone, Debug)]
+pub struct LinearModel {
+    /// unscaled weights; effective model is `scale * v`
+    v: Vec<f32>,
+    /// lazy global scale factor
+    scale: f32,
+    /// Pegasos update counter (Algorithm 3 `m.t`)
+    pub t: u64,
+}
+
+/// Below this scale the weights are re-materialized to avoid f32 underflow.
+const SCALE_FLOOR: f32 = 1e-20;
+
+impl LinearModel {
+    pub fn zeros(d: usize) -> Self {
+        LinearModel { v: vec![0.0; d], scale: 1.0, t: 0 }
+    }
+
+    pub fn from_weights(w: Vec<f32>, t: u64) -> Self {
+        LinearModel { v: w, scale: 1.0, t }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.v.len()
+    }
+
+    /// Raw margin <w, x>.
+    #[inline]
+    pub fn raw_margin(&self, x: &Row<'_>) -> f32 {
+        self.scale * x.dot(&self.v)
+    }
+
+    /// Predicted label in {-1, +1}; the all-zeros init model predicts -1
+    /// (sign(0) <= 0 counts as a miss against y=+1, matching the evaluator).
+    pub fn predict(&self, x: &Row<'_>) -> f32 {
+        if self.raw_margin(x) > 0.0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// w *= c (lazy, O(1)).
+    #[inline]
+    pub fn scale_by(&mut self, c: f32) {
+        self.scale *= c;
+        if self.scale.abs() < SCALE_FLOOR {
+            self.materialize();
+        }
+    }
+
+    /// w += c * x.
+    #[inline]
+    pub fn add_scaled(&mut self, c: f32, x: &Row<'_>) {
+        if self.scale == 0.0 {
+            // dead model: reset to exact zeros
+            self.v.fill(0.0);
+            self.scale = 1.0;
+        }
+        x.add_scaled_into(c / self.scale, &mut self.v);
+    }
+
+    /// Fold the lazy scale into the weights.
+    pub fn materialize(&mut self) {
+        if self.scale != 1.0 {
+            let s = self.scale;
+            for w in &mut self.v {
+                *w *= s;
+            }
+            self.scale = 1.0;
+        }
+    }
+
+    /// Materialized weight slice (requires `materialize` for zero-copy; this
+    /// clones only when a lazy scale is pending).
+    pub fn weights(&self) -> Vec<f32> {
+        if self.scale == 1.0 {
+            self.v.clone()
+        } else {
+            self.v.iter().map(|&w| w * self.scale).collect()
+        }
+    }
+
+    /// Write the effective weights into `out` (no allocation).
+    pub fn write_weights(&self, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.v.len());
+        if self.scale == 1.0 {
+            out.copy_from_slice(&self.v);
+        } else {
+            for (o, &w) in out.iter_mut().zip(&self.v) {
+                *o = w * self.scale;
+            }
+        }
+    }
+
+    pub fn norm_sq(&self) -> f32 {
+        self.scale * self.scale * crate::data::dataset::dense_dot(&self.v, &self.v)
+    }
+
+    /// MERGE (Algorithm 3): fresh model = average of the two, t = max.
+    pub fn merge(a: &LinearModel, b: &LinearModel) -> LinearModel {
+        debug_assert_eq!(a.dim(), b.dim());
+        let mut v = Vec::with_capacity(a.dim());
+        for (&wa, &wb) in a.v.iter().zip(&b.v) {
+            v.push(0.5 * (wa * a.scale + wb * b.scale));
+        }
+        LinearModel { v, scale: 1.0, t: a.t.max(b.t) }
+    }
+
+    /// In-place variant: self = (self + other)/2, t = max.
+    pub fn merge_from(&mut self, other: &LinearModel) {
+        debug_assert_eq!(self.dim(), other.dim());
+        let (sa, sb) = (self.scale, other.scale);
+        for (wa, &wb) in self.v.iter_mut().zip(&other.v) {
+            *wa = 0.5 * (*wa * sa + wb * sb);
+        }
+        self.scale = 1.0;
+        self.t = self.t.max(other.t);
+    }
+
+    /// Cosine similarity between two models (0 when either is zero).
+    pub fn cosine(a: &LinearModel, b: &LinearModel) -> f32 {
+        let num: f32 = a.v.iter().zip(&b.v).map(|(x, y)| x * y).sum::<f32>()
+            * a.scale
+            * b.scale;
+        let den = (a.norm_sq() * b.norm_sq()).sqrt();
+        if den > 0.0 {
+            num / den
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::Row;
+
+    #[test]
+    fn zero_model_predicts_negative() {
+        let m = LinearModel::zeros(3);
+        assert_eq!(m.predict(&Row::Dense(&[1.0, 1.0, 1.0])), -1.0);
+    }
+
+    #[test]
+    fn lazy_scale_equals_eager() {
+        let mut a = LinearModel::from_weights(vec![1.0, -2.0, 3.0], 5);
+        let mut b = LinearModel::from_weights(vec![1.0, -2.0, 3.0], 5);
+        let x = [0.5, 0.5, 0.5];
+        a.scale_by(0.25);
+        a.add_scaled(2.0, &Row::Dense(&x));
+        // eager version
+        let mut bw = b.weights();
+        for w in &mut bw {
+            *w *= 0.25;
+        }
+        for (w, &xi) in bw.iter_mut().zip(&x) {
+            *w += 2.0 * xi;
+        }
+        for (wa, wb) in a.weights().iter().zip(&bw) {
+            assert!((wa - wb).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn merge_is_average_and_max_t() {
+        let a = LinearModel::from_weights(vec![2.0, 0.0], 3);
+        let mut b = LinearModel::from_weights(vec![0.0, 4.0], 7);
+        b.scale_by(0.5); // effective [0, 2]
+        let m = LinearModel::merge(&a, &b);
+        assert_eq!(m.weights(), vec![1.0, 1.0]);
+        assert_eq!(m.t, 7);
+    }
+
+    #[test]
+    fn merge_from_matches_merge() {
+        let a = LinearModel::from_weights(vec![1.0, 2.0, 3.0], 2);
+        let b = LinearModel::from_weights(vec![-1.0, 0.0, 5.0], 9);
+        let m = LinearModel::merge(&a, &b);
+        let mut c = a.clone();
+        c.merge_from(&b);
+        assert_eq!(c.weights(), m.weights());
+        assert_eq!(c.t, m.t);
+    }
+
+    #[test]
+    fn scale_floor_rematerializes() {
+        let mut m = LinearModel::from_weights(vec![1.0e10], 0);
+        for _ in 0..2000 {
+            m.scale_by(0.1);
+        }
+        // would have underflowed the scale; value must still be finite & tiny
+        let w = m.weights();
+        assert!(w[0].abs() < 1e-6);
+        assert!(w[0].is_finite());
+    }
+
+    #[test]
+    fn cosine_limits() {
+        let a = LinearModel::from_weights(vec![1.0, 0.0], 0);
+        let b = LinearModel::from_weights(vec![2.0, 0.0], 0);
+        let c = LinearModel::from_weights(vec![-1.0, 0.0], 0);
+        let z = LinearModel::zeros(2);
+        assert!((LinearModel::cosine(&a, &b) - 1.0).abs() < 1e-6);
+        assert!((LinearModel::cosine(&a, &c) + 1.0).abs() < 1e-6);
+        assert_eq!(LinearModel::cosine(&a, &z), 0.0);
+    }
+
+    #[test]
+    fn write_weights_no_alloc_path() {
+        let mut m = LinearModel::from_weights(vec![2.0, 4.0], 0);
+        m.scale_by(0.5);
+        let mut out = vec![0.0; 2];
+        m.write_weights(&mut out);
+        assert_eq!(out, vec![1.0, 2.0]);
+    }
+}

@@ -1,0 +1,87 @@
+//! L2-regularized online logistic regression (beyond-paper extension —
+//! Section VII claims gossip learning generalizes across online learners).
+//!
+//! Uses the Pegasos step schedule eta_t = 1/(lambda t) with the log-loss
+//! gradient; mirrors python/compile/kernels/logreg.py exactly.
+
+use crate::data::dataset::Row;
+use crate::learning::linear::LinearModel;
+
+#[derive(Clone, Copy, Debug)]
+pub struct LogReg {
+    pub lambda: f32,
+}
+
+impl LogReg {
+    pub fn new(lambda: f32) -> Self {
+        assert!(lambda > 0.0, "lambda must be positive");
+        LogReg { lambda }
+    }
+
+    /// w <- (1 - eta*lam) w + eta (y01 - sigmoid(<w,x>)) x
+    #[inline]
+    pub fn update(&self, m: &mut LinearModel, x: &Row<'_>, y: f32) {
+        m.t += 1;
+        let t = m.t as f32;
+        let eta = 1.0 / (self.lambda * t);
+        let z = m.raw_margin(x);
+        let p = 1.0 / (1.0 + (-z).exp());
+        let y01 = (y + 1.0) * 0.5;
+        m.scale_by(1.0 - 1.0 / t); // (1 - eta*lam) = 1 - 1/t
+        m.add_scaled(eta * (y01 - p), x);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn moves_probability_toward_label() {
+        let lr = LogReg::new(0.1);
+        let mut m = LinearModel::zeros(3);
+        let x = [1.0, 0.5, -0.5];
+        for _ in 0..200 {
+            lr.update(&mut m, &Row::Dense(&x), 1.0);
+        }
+        let p = 1.0 / (1.0 + (-m.raw_margin(&Row::Dense(&x))).exp());
+        assert!(p > 0.8, "p = {p}");
+    }
+
+    #[test]
+    fn separates_a_simple_blob() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(9);
+        let lr = LogReg::new(1e-2);
+        let d = 8;
+        let w_star: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let mut m = LinearModel::zeros(d);
+        let mut errs = 0;
+        let mut total = 0;
+        for step in 0..4000 {
+            let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            let y = if crate::data::dataset::dense_dot(&x, &w_star) > 0.0 { 1.0 } else { -1.0 };
+            if step > 3000 {
+                total += 1;
+                if m.predict(&Row::Dense(&x)) != y {
+                    errs += 1;
+                }
+            }
+            lr.update(&mut m, &Row::Dense(&x), y);
+        }
+        assert!((errs as f64) < 0.08 * total as f64, "{errs}/{total}");
+    }
+
+    #[test]
+    fn matches_reference_math() {
+        // hand-computed single step from zeros: p = 0.5, y01 = 1
+        // w1 = eta * 0.5 * x with eta = 1/lam (t=1)
+        let lr = LogReg::new(0.5);
+        let mut m = LinearModel::zeros(2);
+        let x = [2.0, -1.0];
+        lr.update(&mut m, &Row::Dense(&x), 1.0);
+        let w = m.weights();
+        assert!((w[0] - 2.0 * 0.5 * 2.0).abs() < 1e-5, "{w:?}");
+        assert!((w[1] + 2.0 * 0.5 * 1.0).abs() < 1e-5, "{w:?}");
+    }
+}

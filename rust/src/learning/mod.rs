@@ -1,0 +1,11 @@
+//! Online learners and the linear-model algebra (Algorithm 3): Pegasos,
+//! Adaline, and merge-by-averaging.
+pub mod adaline;
+pub mod linear;
+pub mod logreg;
+pub mod pegasos;
+
+pub use adaline::{Adaline, Learner};
+pub use linear::LinearModel;
+pub use logreg::LogReg;
+pub use pegasos::Pegasos;

@@ -1,0 +1,33 @@
+//! # golf — Gossip Learning with Linear Models on Fully Distributed Data
+//!
+//! Rust + JAX/Pallas reproduction of Ormándi, Hegedűs & Jelasity (2011).
+//!
+//! The crate is organised in layers (see DESIGN.md):
+//!
+//! * [`util`] — RNG, stats, property-test and bench substrates.
+//! * [`data`] — dataset containers, synthetic Table-I generators, libsvm.
+//! * [`learning`] — linear models, Pegasos and Adaline online updates.
+//! * [`sim`] — discrete-event P2P simulator with failure/churn models.
+//! * [`p2p`] — NEWSCAST gossip-based peer sampling.
+//! * [`gossip`] — the gossip-learning protocol (Algorithms 1, 2, 4).
+//! * [`engine`] — compute backends: native Rust and batched PJRT.
+//! * [`runtime`] — XLA/PJRT artifact loading and execution.
+//! * [`baselines`] — sequential Pegasos, weighted bagging, perfect matching.
+//! * [`eval`] — 0-1 error tracking, model similarity, CSV output.
+//! * [`experiments`] — drivers regenerating every paper table/figure.
+//! * [`config`] / [`cli`] — experiment configuration and the `golf` binary.
+
+pub mod baselines;
+pub mod cli;
+pub mod config;
+pub mod data;
+pub mod engine;
+pub mod eval;
+pub mod experiments;
+pub mod gossip;
+pub mod learning;
+pub mod net;
+pub mod p2p;
+pub mod runtime;
+pub mod sim;
+pub mod util;

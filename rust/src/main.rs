@@ -1,0 +1,6 @@
+//! `golf` binary: the L3 coordinator CLI.  See `golf help`.
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(golf::cli::dispatch(&args));
+}

@@ -1,0 +1,7 @@
+//! Real-deployment layer: framed wire format + a threaded localhost-TCP
+//! runner that executes the gossip protocol as actual concurrent peers
+//! (validating the asynchronous message path outside the simulator).
+pub mod deploy;
+pub mod wire;
+
+pub use deploy::{run_deployment, DeployConfig, DeployResult};

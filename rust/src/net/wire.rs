@@ -1,0 +1,217 @@
+//! Wire format for deployed gossip messages (the offline crate set has no
+//! serde): a fixed little-endian framing with an explicit version byte.
+//!
+//! ```text
+//! u32  frame length (bytes after this field)
+//! u8   version (1)
+//! u64  src node id
+//! u64  model update counter t
+//! u32  d  (weight count)
+//! f32* d weights
+//! u16  view entry count
+//! (u64 node, u64 ts)* view entries
+//! ```
+
+use crate::gossip::message::ModelMsg;
+use crate::p2p::newscast::Descriptor;
+use std::io::{self, Read, Write};
+
+pub const WIRE_VERSION: u8 = 1;
+/// Hard cap against corrupt frames (largest paper model: d=9947 ≈ 40 KB).
+pub const MAX_FRAME: u32 = 64 * 1024 * 1024;
+
+pub fn encode(msg: &ModelMsg) -> Vec<u8> {
+    let body_len = 1 + 8 + 8 + 4 + msg.w.len() * 4 + 2 + msg.view.len() * 16;
+    let mut buf = Vec::with_capacity(4 + body_len);
+    buf.extend_from_slice(&(body_len as u32).to_le_bytes());
+    buf.push(WIRE_VERSION);
+    buf.extend_from_slice(&(msg.src as u64).to_le_bytes());
+    buf.extend_from_slice(&msg.t.to_le_bytes());
+    buf.extend_from_slice(&(msg.w.len() as u32).to_le_bytes());
+    for &w in &msg.w {
+        buf.extend_from_slice(&w.to_le_bytes());
+    }
+    buf.extend_from_slice(&(msg.view.len() as u16).to_le_bytes());
+    for d in &msg.view {
+        buf.extend_from_slice(&(d.node as u64).to_le_bytes());
+        buf.extend_from_slice(&d.ts.to_le_bytes());
+    }
+    buf
+}
+
+#[derive(Debug)]
+pub enum WireError {
+    Io(io::Error),
+    BadVersion(u8),
+    BadLength(u32),
+    Truncated,
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Io(e) => write!(f, "io: {e}"),
+            WireError::BadVersion(v) => write!(f, "bad wire version {v}"),
+            WireError::BadLength(n) => write!(f, "bad frame length {n}"),
+            WireError::Truncated => write!(f, "truncated frame"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<io::Error> for WireError {
+    fn from(e: io::Error) -> Self {
+        WireError::Io(e)
+    }
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.pos + n > self.buf.len() {
+            return Err(WireError::Truncated);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, WireError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32, WireError> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+}
+
+pub fn decode_body(body: &[u8]) -> Result<ModelMsg, WireError> {
+    let mut c = Cursor { buf: body, pos: 0 };
+    let version = c.u8()?;
+    if version != WIRE_VERSION {
+        return Err(WireError::BadVersion(version));
+    }
+    let src = c.u64()? as usize;
+    let t = c.u64()?;
+    let d = c.u32()? as usize;
+    if d * 4 > body.len() {
+        return Err(WireError::Truncated);
+    }
+    let mut w = Vec::with_capacity(d);
+    for _ in 0..d {
+        w.push(c.f32()?);
+    }
+    let nv = c.u16()? as usize;
+    let mut view = Vec::with_capacity(nv);
+    for _ in 0..nv {
+        let node = c.u64()? as usize;
+        let ts = c.u64()?;
+        view.push(Descriptor { node, ts });
+    }
+    Ok(ModelMsg { src, w, t, view })
+}
+
+/// Blocking framed read from a stream.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<ModelMsg, WireError> {
+    let mut len4 = [0u8; 4];
+    r.read_exact(&mut len4)?;
+    let len = u32::from_le_bytes(len4);
+    if len == 0 || len > MAX_FRAME {
+        return Err(WireError::BadLength(len));
+    }
+    let mut body = vec![0u8; len as usize];
+    r.read_exact(&mut body)?;
+    decode_body(&body)
+}
+
+/// Blocking framed write to a stream.
+pub fn write_frame<W: Write>(w: &mut W, msg: &ModelMsg) -> Result<(), WireError> {
+    w.write_all(&encode(msg))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(d: usize, nv: usize) -> ModelMsg {
+        ModelMsg {
+            src: 7,
+            w: (0..d).map(|i| i as f32 * 0.5 - 1.0).collect(),
+            t: 99,
+            view: (0..nv).map(|i| Descriptor { node: i, ts: i as u64 * 3 }).collect(),
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        for (d, nv) in [(0, 0), (1, 1), (57, 20), (9947, 20)] {
+            let m = sample(d, nv);
+            let enc = encode(&m);
+            let got = decode_body(&enc[4..]).unwrap();
+            assert_eq!(got.src, m.src);
+            assert_eq!(got.t, m.t);
+            assert_eq!(got.w, m.w);
+            assert_eq!(got.view, m.view);
+        }
+    }
+
+    #[test]
+    fn stream_roundtrip_multiple_frames() {
+        let mut buf = Vec::new();
+        for d in [3, 5] {
+            write_frame(&mut buf, &sample(d, 2)).unwrap();
+        }
+        let mut r = &buf[..];
+        assert_eq!(read_frame(&mut r).unwrap().w.len(), 3);
+        assert_eq!(read_frame(&mut r).unwrap().w.len(), 5);
+    }
+
+    #[test]
+    fn rejects_bad_version_and_truncation() {
+        let m = sample(4, 1);
+        let mut enc = encode(&m);
+        enc[4] = 9; // version byte
+        assert!(matches!(decode_body(&enc[4..]), Err(WireError::BadVersion(9))));
+        let enc = encode(&m);
+        assert!(matches!(
+            decode_body(&enc[4..enc.len() - 3]),
+            Err(WireError::Truncated)
+        ));
+    }
+
+    #[test]
+    fn rejects_huge_frame_header() {
+        let bytes = (MAX_FRAME + 1).to_le_bytes();
+        let mut stream: Vec<u8> = bytes.to_vec();
+        stream.extend_from_slice(&[0; 16]);
+        assert!(matches!(
+            read_frame(&mut &stream[..]),
+            Err(WireError::BadLength(_))
+        ));
+    }
+
+    #[test]
+    fn frame_size_matches_wire_bytes_estimate() {
+        let m = sample(57, 20);
+        // encode adds len+version+src+counts framing over the estimate
+        assert!(encode(&m).len() as i64 - m.wire_bytes() as i64 <= 32);
+    }
+}

@@ -1,0 +1,6 @@
+//! Peer-sampling layer: NEWSCAST plus oracle and perfect-matching baselines.
+pub mod newscast;
+pub mod overlay;
+
+pub use newscast::{Descriptor, Newscast};
+pub use overlay::{PeerSampler, SamplerConfig};

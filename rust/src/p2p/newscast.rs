@@ -1,0 +1,170 @@
+//! NEWSCAST (Jelasity et al.) — gossip-based peer sampling, Section III(c).
+//!
+//! Every node keeps a small partial view of (address, timestamp) descriptors.
+//! Views travel piggybacked on gossip-learning messages (no extra traffic);
+//! on receipt, the two views are merged and the freshest `c` distinct
+//! descriptors are kept.  SELECTPEER draws uniformly from the local view,
+//! which approximates a uniform random sample of the network.
+
+use crate::sim::event::{NodeId, Ticks};
+use crate::util::rng::Rng;
+
+pub const DEFAULT_VIEW_SIZE: usize = 20;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Descriptor {
+    pub node: NodeId,
+    pub ts: Ticks,
+}
+
+/// The full network's newscast state (per-node views), owned by the
+/// simulator.
+#[derive(Debug)]
+pub struct Newscast {
+    views: Vec<Vec<Descriptor>>,
+    pub view_size: usize,
+}
+
+impl Newscast {
+    /// Bootstrap: every node starts with `view_size` random descriptors
+    /// (timestamp 0), as if a rendezvous service seeded the overlay.
+    pub fn bootstrap(n: usize, view_size: usize, rng: &mut Rng) -> Self {
+        let mut views = Vec::with_capacity(n);
+        for me in 0..n {
+            let mut v = Vec::with_capacity(view_size);
+            while v.len() < view_size.min(n.saturating_sub(1)) {
+                let peer = rng.below_usize(n);
+                if peer != me && !v.iter().any(|d: &Descriptor| d.node == peer) {
+                    v.push(Descriptor { node: peer, ts: 0 });
+                }
+            }
+            views.push(v);
+        }
+        Newscast { views, view_size }
+    }
+
+    /// SELECTPEER: uniform draw from the local view.
+    pub fn select(&self, node: NodeId, rng: &mut Rng) -> Option<NodeId> {
+        let v = &self.views[node];
+        if v.is_empty() {
+            None
+        } else {
+            Some(v[rng.below_usize(v.len())].node)
+        }
+    }
+
+    /// Payload to piggyback on an outgoing message: own view + own fresh
+    /// descriptor.
+    pub fn payload(&self, node: NodeId, now: Ticks) -> Vec<Descriptor> {
+        let mut p = Vec::with_capacity(self.views[node].len() + 1);
+        p.push(Descriptor { node, ts: now });
+        p.extend_from_slice(&self.views[node]);
+        p
+    }
+
+    /// Merge an incoming payload into `node`'s view: union, dedup by node id
+    /// keeping the freshest timestamp, drop self, keep the `view_size`
+    /// freshest.
+    pub fn merge(&mut self, node: NodeId, payload: &[Descriptor]) {
+        let view = &mut self.views[node];
+        for &d in payload {
+            if d.node == node {
+                continue;
+            }
+            match view.iter_mut().find(|e| e.node == d.node) {
+                Some(e) => e.ts = e.ts.max(d.ts),
+                None => view.push(d),
+            }
+        }
+        // keep freshest view_size (stable by node id on timestamp ties)
+        view.sort_by(|a, b| b.ts.cmp(&a.ts).then(a.node.cmp(&b.node)));
+        view.truncate(self.view_size);
+    }
+
+    pub fn view(&self, node: NodeId) -> &[Descriptor] {
+        &self.views[node]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::chi2_uniform;
+
+    #[test]
+    fn bootstrap_views_valid() {
+        let mut rng = Rng::new(1);
+        let nc = Newscast::bootstrap(50, 20, &mut rng);
+        for me in 0..50 {
+            let v = nc.view(me);
+            assert_eq!(v.len(), 20);
+            assert!(v.iter().all(|d| d.node != me));
+            let mut ids: Vec<_> = v.iter().map(|d| d.node).collect();
+            ids.sort();
+            ids.dedup();
+            assert_eq!(ids.len(), 20, "duplicate descriptors");
+        }
+    }
+
+    #[test]
+    fn merge_keeps_freshest_and_bounds_size() {
+        let mut rng = Rng::new(2);
+        let mut nc = Newscast::bootstrap(10, 4, &mut rng);
+        let payload = vec![
+            Descriptor { node: 1, ts: 100 },
+            Descriptor { node: 2, ts: 99 },
+            Descriptor { node: 3, ts: 98 },
+            Descriptor { node: 4, ts: 97 },
+            Descriptor { node: 0, ts: 1000 }, // self — must be dropped
+        ];
+        nc.merge(0, &payload);
+        let v = nc.view(0);
+        assert_eq!(v.len(), 4);
+        assert!(v.iter().all(|d| d.node != 0));
+        assert_eq!(v[0].node, 1);
+        assert_eq!(v[0].ts, 100);
+    }
+
+    #[test]
+    fn merge_dedups_updating_timestamp() {
+        let mut rng = Rng::new(3);
+        let mut nc = Newscast::bootstrap(5, 3, &mut rng);
+        nc.merge(0, &[Descriptor { node: 1, ts: 5 }]);
+        nc.merge(0, &[Descriptor { node: 1, ts: 9 }]);
+        let hits: Vec<_> = nc.view(0).iter().filter(|d| d.node == 1).collect();
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].ts, 9);
+    }
+
+    #[test]
+    fn selection_approximately_uniform_over_time() {
+        // NEWSCAST's uniformity guarantee is for the *time-averaged*
+        // sampling distribution (any snapshot is biased toward recent
+        // senders).  Count the targets each node selects while gossiping —
+        // exactly how the protocol consumes the service — and check the
+        // time-averaged histogram against uniform.
+        let n = 60;
+        let mut rng = Rng::new(4);
+        let mut nc = Newscast::bootstrap(n, 15, &mut rng);
+        let mut counts = vec![0u64; n];
+        let mut order: Vec<usize> = (0..n).collect();
+        for round in 0..700u64 {
+            rng.shuffle(&mut order); // nodes fire in random order per round
+            for (k, &node) in order.iter().enumerate() {
+                if let Some(dst) = nc.select(node, &mut rng) {
+                    if round >= 100 {
+                        counts[dst] += 1;
+                    }
+                    let now = round * n as u64 + k as u64;
+                    let p = nc.payload(node, now);
+                    nc.merge(dst, &p);
+                }
+            }
+        }
+        // df = 59; p=0.001 critical value ~98. Allow slack for the residual
+        // freshness bias — what we must rule out is gross concentration.
+        let chi2 = chi2_uniform(&counts);
+        assert!(chi2 < 59.0 * 4.0, "chi2 = {chi2}");
+        assert!(counts.iter().all(|&c| c > 0), "some node never selected");
+    }
+}

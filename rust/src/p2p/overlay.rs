@@ -1,0 +1,204 @@
+//! Peer-sampling service abstraction: the SELECTPEER placeholder of
+//! Algorithm 1.  Three implementations (Section VI-A):
+//!
+//! * `Newscast` — the paper's choice: gossip-based peer sampling with
+//!   piggybacked views (p2p/newscast.rs).
+//! * `Oracle` — idealized uniform sampling over *online* nodes (baseline for
+//!   testing the NEWSCAST uniformity assumption).
+//! * `Matching` — PERFECT MATCHING: a fresh random perfect matching of the
+//!   online nodes each cycle, so every peer receives exactly one message
+//!   (Section VI-A(e); not practical, used as a diversity-maximizing
+//!   baseline).
+
+use crate::p2p::newscast::{Descriptor, Newscast};
+use crate::sim::event::{NodeId, Ticks};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SamplerConfig {
+    Oracle,
+    Newscast { view_size: usize },
+    Matching,
+}
+
+impl SamplerConfig {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SamplerConfig::Oracle => "oracle",
+            SamplerConfig::Newscast { .. } => "newscast",
+            SamplerConfig::Matching => "matching",
+        }
+    }
+}
+
+#[derive(Debug)]
+pub enum PeerSampler {
+    Oracle { n: usize },
+    Newscast(Newscast),
+    Matching(MatchingState),
+}
+
+#[derive(Debug)]
+pub struct MatchingState {
+    n: usize,
+    delta: Ticks,
+    cycle: u64,
+    partner: Vec<Option<NodeId>>,
+}
+
+impl PeerSampler {
+    pub fn new(cfg: SamplerConfig, n: usize, delta: Ticks, rng: &mut Rng) -> Self {
+        match cfg {
+            SamplerConfig::Oracle => PeerSampler::Oracle { n },
+            SamplerConfig::Newscast { view_size } => {
+                PeerSampler::Newscast(Newscast::bootstrap(n, view_size, rng))
+            }
+            SamplerConfig::Matching => PeerSampler::Matching(MatchingState {
+                n,
+                delta,
+                cycle: u64::MAX,
+                partner: vec![None; n],
+            }),
+        }
+    }
+
+    /// SELECTPEER for `node` at `now`. `online` gives current liveness (the
+    /// oracle and matching samplers restrict to online peers; newscast may
+    /// return an offline peer — the message is then simply lost, as in a
+    /// real deployment).
+    pub fn select(
+        &mut self,
+        node: NodeId,
+        now: Ticks,
+        online: &[bool],
+        rng: &mut Rng,
+    ) -> Option<NodeId> {
+        match self {
+            PeerSampler::Oracle { n } => {
+                for _ in 0..64 {
+                    let p = rng.below_usize(*n);
+                    if p != node && online[p] {
+                        return Some(p);
+                    }
+                }
+                None
+            }
+            PeerSampler::Newscast(nc) => {
+                nc.select(node, rng).filter(|&p| p != node)
+            }
+            PeerSampler::Matching(st) => {
+                st.refresh(now, online, rng);
+                st.partner[node]
+            }
+        }
+    }
+
+    /// Piggyback payload for an outgoing message (newscast only).
+    pub fn payload(&self, node: NodeId, now: Ticks) -> Vec<Descriptor> {
+        match self {
+            PeerSampler::Newscast(nc) => nc.payload(node, now),
+            _ => Vec::new(),
+        }
+    }
+
+    /// Handle the piggybacked view of a received message.
+    pub fn on_receive(&mut self, dst: NodeId, view: &[Descriptor]) {
+        if let PeerSampler::Newscast(nc) = self {
+            if !view.is_empty() {
+                nc.merge(dst, view);
+            }
+        }
+    }
+}
+
+impl MatchingState {
+    fn refresh(&mut self, now: Ticks, online: &[bool], rng: &mut Rng) {
+        let cycle = now / self.delta.max(1);
+        if cycle == self.cycle {
+            return;
+        }
+        self.cycle = cycle;
+        self.partner.iter_mut().for_each(|p| *p = None);
+        let mut live: Vec<NodeId> =
+            (0..self.n).filter(|&i| online[i]).collect();
+        rng.shuffle(&mut live);
+        for pair in live.chunks(2) {
+            if let [a, b] = *pair {
+                self.partner[a] = Some(b);
+                self.partner[b] = Some(a);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oracle_skips_offline_and_self() {
+        let mut s = PeerSampler::new(SamplerConfig::Oracle, 4, 1000, &mut Rng::new(1));
+        let online = vec![true, false, true, true];
+        let mut rng = Rng::new(2);
+        for _ in 0..200 {
+            let p = s.select(0, 0, &online, &mut rng).unwrap();
+            assert!(p != 0 && p != 1);
+        }
+    }
+
+    #[test]
+    fn oracle_gives_up_when_alone() {
+        let mut s = PeerSampler::new(SamplerConfig::Oracle, 3, 1000, &mut Rng::new(1));
+        let online = vec![true, false, false];
+        assert_eq!(s.select(0, 0, &online, &mut Rng::new(2)), None);
+    }
+
+    #[test]
+    fn matching_is_a_perfect_matching_per_cycle() {
+        let n = 10;
+        let mut s = PeerSampler::new(SamplerConfig::Matching, n, 100, &mut Rng::new(3));
+        let online = vec![true; n];
+        let mut rng = Rng::new(4);
+        let partners: Vec<Option<NodeId>> =
+            (0..n).map(|i| s.select(i, 50, &online, &mut rng)).collect();
+        for (i, p) in partners.iter().enumerate() {
+            let p = p.unwrap();
+            assert_eq!(partners[p], Some(i), "matching must be symmetric");
+            assert_ne!(p, i);
+        }
+        // same cycle -> stable; next cycle -> refreshed
+        assert_eq!(
+            (0..n).map(|i| s.select(i, 60, &online, &mut rng)).collect::<Vec<_>>(),
+            partners
+        );
+    }
+
+    #[test]
+    fn matching_leaves_odd_node_out() {
+        let n = 5;
+        let mut s = PeerSampler::new(SamplerConfig::Matching, n, 100, &mut Rng::new(5));
+        let online = vec![true; n];
+        let mut rng = Rng::new(6);
+        let unmatched = (0..n)
+            .filter(|&i| s.select(i, 0, &online, &mut rng).is_none())
+            .count();
+        assert_eq!(unmatched, 1);
+    }
+
+    #[test]
+    fn newscast_sampler_integration() {
+        let mut rng = Rng::new(7);
+        let mut s = PeerSampler::new(
+            SamplerConfig::Newscast { view_size: 5 },
+            20,
+            1000,
+            &mut rng,
+        );
+        let online = vec![true; 20];
+        let p = s.select(3, 0, &online, &mut rng);
+        assert!(p.is_some());
+        let payload = s.payload(3, 10);
+        assert_eq!(payload[0].node, 3);
+        s.on_receive(7, &payload);
+    }
+}

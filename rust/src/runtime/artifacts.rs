@@ -1,0 +1,151 @@
+//! Artifact manifest: maps (op, shape requirements) to the AOT-compiled HLO
+//! text files emitted by `python/compile/aot.py` (see `make artifacts`).
+//!
+//! Shapes are bucketed (aot.py `FULL`/`QUICK` tables); the runtime picks the
+//! smallest bucket that fits a request and mask-pads the batch.
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub op: String,
+    /// shape bucket parameters, e.g. {"b": 128, "d": 64}
+    pub params: HashMap<String, usize>,
+    pub file: PathBuf,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub entries: Vec<ArtifactEntry>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Parse `<dir>/manifest.tsv` (columns: name, op, k=v params, file).
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let mut entries = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 4 {
+                return Err(anyhow!("manifest line {}: expected 4 columns", i + 1));
+            }
+            let mut params = HashMap::new();
+            for kv in cols[2].split(',') {
+                if kv.is_empty() {
+                    continue;
+                }
+                let (k, v) = kv
+                    .split_once('=')
+                    .ok_or_else(|| anyhow!("manifest line {}: bad param {kv:?}", i + 1))?;
+                params.insert(
+                    k.to_string(),
+                    v.parse::<usize>()
+                        .with_context(|| format!("manifest line {}: param {kv:?}", i + 1))?,
+                );
+            }
+            entries.push(ArtifactEntry {
+                name: cols[0].to_string(),
+                op: cols[1].to_string(),
+                params,
+                file: dir.join(cols[3]),
+            });
+        }
+        Ok(Manifest { entries, dir: dir.to_path_buf() })
+    }
+
+    /// Smallest bucket of `op` satisfying every `(key, >= need)` constraint.
+    /// "Smallest" = lexicographic on the constrained params (padding cost).
+    pub fn select(&self, op: &str, needs: &[(&str, usize)]) -> Result<&ArtifactEntry> {
+        let mut best: Option<&ArtifactEntry> = None;
+        'entry: for e in self.entries.iter().filter(|e| e.op == op) {
+            for &(k, need) in needs {
+                match e.params.get(k) {
+                    Some(&have) if have >= need => {}
+                    _ => continue 'entry,
+                }
+            }
+            let cost = |e: &ArtifactEntry| -> usize {
+                needs.iter().map(|&(k, _)| e.params[k]).product()
+            };
+            if best.map_or(true, |b| cost(e) < cost(b)) {
+                best = Some(e);
+            }
+        }
+        best.ok_or_else(|| {
+            anyhow!(
+                "no artifact for op {op} with {needs:?} (have: {:?})",
+                self.entries
+                    .iter()
+                    .filter(|e| e.op == op)
+                    .map(|e| &e.params)
+                    .collect::<Vec<_>>()
+            )
+        })
+    }
+
+    pub fn ops(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.entries.iter().map(|e| e.op.as_str()).collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# name\top\tparams\tfile
+pegasos_rw_b128_d16\tpegasos_rw\tb=128,d=16\tpegasos_rw_b128_d16.hlo.txt
+pegasos_rw_b128_d64\tpegasos_rw\tb=128,d=64\tpegasos_rw_b128_d64.hlo.txt
+pegasos_rw_b1024_d16\tpegasos_rw\tb=1024,d=16\tpegasos_rw_b1024_d16.hlo.txt
+merge_b128_d16\tmerge\tb=128,d=16\tmerge_b128_d16.hlo.txt
+";
+
+    #[test]
+    fn parse_and_select_smallest_fit() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.entries.len(), 4);
+        let e = m.select("pegasos_rw", &[("b", 100), ("d", 10)]).unwrap();
+        assert_eq!(e.name, "pegasos_rw_b128_d16");
+        let e = m.select("pegasos_rw", &[("b", 200), ("d", 16)]).unwrap();
+        assert_eq!(e.name, "pegasos_rw_b1024_d16");
+        let e = m.select("pegasos_rw", &[("b", 10), ("d", 17)]).unwrap();
+        assert_eq!(e.name, "pegasos_rw_b128_d64");
+    }
+
+    #[test]
+    fn select_fails_when_too_big() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert!(m.select("pegasos_rw", &[("b", 5000), ("d", 16)]).is_err());
+        assert!(m.select("nonexistent", &[]).is_err());
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        assert!(Manifest::parse("a\tb\tc", Path::new("/")).is_err());
+        assert!(Manifest::parse("a\tb\tbadparam\tf", Path::new("/")).is_err());
+        assert!(Manifest::parse("a\tb\tk=x\tf", Path::new("/")).is_err());
+    }
+
+    #[test]
+    fn ops_deduped() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.ops(), vec!["merge", "pegasos_rw"]);
+    }
+}

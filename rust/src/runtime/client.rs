@@ -1,0 +1,100 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them on the
+//! XLA CPU client.  This is the only place Python output crosses into the
+//! Rust request path — as compiled executables, never as an interpreter.
+//!
+//! Pattern follows /opt/xla-example/src/bin/load_hlo.rs: HLO *text* →
+//! `HloModuleProto::from_text_file` → `XlaComputation` → `client.compile`.
+
+use crate::runtime::artifacts::Manifest;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    execs: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// executions per artifact (perf accounting)
+    pub calls: HashMap<String, u64>,
+}
+
+impl Runtime {
+    /// Load the manifest from `artifacts/` and create the CPU PJRT client.
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, manifest, execs: HashMap::new(), calls: HashMap::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Resolve an op + shape needs to a concrete artifact name (smallest
+    /// fitting bucket).
+    pub fn resolve(&self, op: &str, needs: &[(&str, usize)]) -> Result<(String, HashMap<String, usize>)> {
+        let e = self.manifest.select(op, needs)?;
+        Ok((e.name.clone(), e.params.clone()))
+    }
+
+    fn ensure_compiled(&mut self, name: &str) -> Result<()> {
+        if self.execs.contains_key(name) {
+            return Ok(());
+        }
+        let entry = self
+            .manifest
+            .entries
+            .iter()
+            .find(|e| e.name == name)
+            .with_context(|| format!("unknown artifact {name}"))?;
+        let proto = xla::HloModuleProto::from_text_file(&entry.file)
+            .with_context(|| format!("parsing HLO text {:?}", entry.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        self.execs.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute artifact `name`; returns the flattened output tuple.
+    /// (aot.py lowers with return_tuple=True, so the root is always a tuple.)
+    pub fn execute(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.ensure_compiled(name)?;
+        *self.calls.entry(name.to_string()).or_insert(0) += 1;
+        let exe = &self.execs[name];
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {name}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {name}"))?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Number of distinct compiled executables (perf accounting).
+    pub fn compiled_count(&self) -> usize {
+        self.execs.len()
+    }
+}
+
+/// Build a [rows, cols] f32 literal from a slice.
+pub fn literal_matrix(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    debug_assert_eq!(data.len(), rows * cols);
+    Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+}
+
+/// Build a [len] f32 literal.
+pub fn literal_vec(data: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(data)
+}
+
+/// Read a f32 literal back into a Vec.
+pub fn literal_to_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}

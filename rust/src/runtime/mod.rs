@@ -1,0 +1,8 @@
+//! XLA/PJRT runtime layer: artifact manifest + lazy-compiled executables.
+//! (PjRtClient::cpu() -> HloModuleProto::from_text_file -> compile ->
+//! execute; adapted from /opt/xla-example load_hlo.)
+pub mod artifacts;
+pub mod client;
+
+pub use artifacts::{ArtifactEntry, Manifest};
+pub use client::{literal_matrix, literal_to_vec, literal_vec, Runtime};

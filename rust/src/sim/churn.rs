@@ -1,0 +1,190 @@
+//! Churn model (paper Section VI-A(i)): online-session lengths drawn from a
+//! lognormal distribution (Stutzbach & Rejaie's model, which the paper fits
+//! to a FileList.org BitTorrent-community trace we cannot access — DESIGN.md
+//! §4), offline gaps scaled so ~90% of peers are online at any moment, and
+//! state retained across sessions.
+//!
+//! Parameters are expressed in ticks.  With the paper's Δ = 10 s and our
+//! Δ = 1000 ticks, the default median session of 100Δ corresponds to ~17 min,
+//! in the range reported for BitTorrent communities.
+
+use crate::sim::event::{NodeId, Ticks};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub struct ChurnConfig {
+    /// lognormal mu of the online-session length (ln ticks)
+    pub mu: f64,
+    /// lognormal sigma
+    pub sigma: f64,
+    /// target steady-state online fraction (paper: 0.9)
+    pub online_fraction: f64,
+}
+
+impl ChurnConfig {
+    /// Defaults matched to the paper's setup for gossip period `delta`.
+    pub fn paper_default(delta: Ticks) -> Self {
+        ChurnConfig {
+            mu: ((100 * delta) as f64).ln(), // median session = 100 cycles
+            sigma: 1.39,                     // Stutzbach-Rejaie-style spread
+            online_fraction: 0.9,
+        }
+    }
+
+    fn draw_online(&self, rng: &mut Rng) -> Ticks {
+        rng.lognormal(self.mu, self.sigma).max(1.0) as Ticks
+    }
+
+    fn draw_offline(&self, rng: &mut Rng) -> Ticks {
+        // E[offline] = E[online] * (1-f)/f gives the target online fraction.
+        let scale = (1.0 - self.online_fraction) / self.online_fraction;
+        (rng.lognormal(self.mu, self.sigma) * scale).max(1.0) as Ticks
+    }
+}
+
+/// Precomputed alternating online/offline timeline for every node.
+#[derive(Debug)]
+pub struct ChurnSchedule {
+    /// per node: sorted list of (go_online_at, go_offline_at)
+    pub intervals: Vec<Vec<(Ticks, Ticks)>>,
+    pub horizon: Ticks,
+}
+
+impl ChurnSchedule {
+    /// Build a schedule for `n` nodes over `[0, horizon)`.
+    pub fn generate(cfg: &ChurnConfig, n: usize, horizon: Ticks, rng: &mut Rng) -> Self {
+        let mut intervals = vec![Vec::new(); n];
+        for node_iv in intervals.iter_mut() {
+            // stationary start: begin mid-session with prob = online fraction
+            let mut t: Ticks;
+            let mut online = rng.chance(cfg.online_fraction);
+            if online {
+                // already partway through an online session
+                let len = cfg.draw_online(rng);
+                let into = rng.below(len.max(1));
+                let end = len - into;
+                node_iv.push((0, end.min(horizon)));
+                t = end;
+                online = false;
+            } else {
+                let len = cfg.draw_offline(rng);
+                t = len - rng.below(len.max(1));
+            }
+            while t < horizon {
+                if online {
+                    let len = cfg.draw_online(rng);
+                    node_iv.push((t, (t + len).min(horizon)));
+                    t += len;
+                } else {
+                    t += cfg.draw_offline(rng);
+                }
+                online = !online;
+            }
+        }
+        ChurnSchedule { intervals, horizon }
+    }
+
+    /// Is `node` online at `time`?
+    pub fn is_online(&self, node: NodeId, time: Ticks) -> bool {
+        let iv = &self.intervals[node];
+        match iv.binary_search_by(|&(s, _)| s.cmp(&time)) {
+            Ok(_) => true, // session starts exactly at `time`
+            Err(0) => false,
+            Err(i) => time < iv[i - 1].1,
+        }
+    }
+
+    /// All join/leave transitions as (time, node, goes_online).
+    pub fn events(&self) -> Vec<(Ticks, NodeId, bool)> {
+        let mut ev = Vec::new();
+        for (node, iv) in self.intervals.iter().enumerate() {
+            for &(s, e) in iv {
+                if s > 0 {
+                    ev.push((s, node, true));
+                }
+                if e < self.horizon {
+                    ev.push((e, node, false));
+                }
+            }
+        }
+        ev.sort_by_key(|&(t, n, _)| (t, n));
+        ev
+    }
+
+    /// Fraction of node-time online (sanity metric).
+    pub fn measured_online_fraction(&self) -> f64 {
+        let total: u128 = self
+            .intervals
+            .iter()
+            .flat_map(|iv| iv.iter().map(|&(s, e)| (e - s) as u128))
+            .sum();
+        total as f64 / (self.horizon as f64 * self.intervals.len() as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn online_fraction_near_target() {
+        let cfg = ChurnConfig::paper_default(1000);
+        let mut rng = Rng::new(42);
+        let sched = ChurnSchedule::generate(&cfg, 500, 1_000_000, &mut rng);
+        let f = sched.measured_online_fraction();
+        assert!((f - 0.9).abs() < 0.05, "online fraction {f}");
+    }
+
+    #[test]
+    fn is_online_consistent_with_intervals() {
+        let cfg = ChurnConfig::paper_default(1000);
+        let mut rng = Rng::new(7);
+        let sched = ChurnSchedule::generate(&cfg, 50, 100_000, &mut rng);
+        for node in 0..50 {
+            for &(s, e) in &sched.intervals[node] {
+                assert!(sched.is_online(node, s));
+                if e > s + 1 {
+                    assert!(sched.is_online(node, (s + e) / 2));
+                }
+                if e < sched.horizon {
+                    assert!(!sched.is_online(node, e));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn events_alternate_per_node() {
+        let cfg = ChurnConfig::paper_default(100);
+        let mut rng = Rng::new(3);
+        let sched = ChurnSchedule::generate(&cfg, 20, 50_000, &mut rng);
+        let ev = sched.events();
+        // events sorted by time
+        for w in ev.windows(2) {
+            assert!(w[0].0 <= w[1].0);
+        }
+        // per node, transitions alternate join/leave
+        for node in 0..20 {
+            let seq: Vec<bool> = ev
+                .iter()
+                .filter(|&&(_, n, _)| n == node)
+                .map(|&(_, _, up)| up)
+                .collect();
+            for w in seq.windows(2) {
+                assert_ne!(w[0], w[1], "node {node} transitions must alternate");
+            }
+        }
+    }
+
+    #[test]
+    fn intervals_are_disjoint_and_sorted() {
+        let cfg = ChurnConfig::paper_default(1000);
+        let mut rng = Rng::new(9);
+        let sched = ChurnSchedule::generate(&cfg, 100, 200_000, &mut rng);
+        for iv in &sched.intervals {
+            for w in iv.windows(2) {
+                assert!(w[0].1 <= w[1].0, "overlapping sessions {w:?}");
+            }
+        }
+    }
+}

@@ -1,0 +1,125 @@
+//! Event types and the deterministic priority queue of the discrete-event
+//! engine (our in-repo PeerSim replacement; DESIGN.md §4).
+//!
+//! Time is measured in integer *ticks*; the gossip period Δ defaults to
+//! 1000 ticks (sim/engine.rs), so one tick ≈ 10 ms at the paper's Δ = 10 s.
+
+use crate::gossip::message::ModelMsg;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+pub type NodeId = usize;
+pub type Ticks = u64;
+
+#[derive(Clone, Debug)]
+pub enum Event {
+    /// Active-loop firing of Algorithm 1 at `node` (wait(Δ) elapsed).
+    GossipTick { node: NodeId },
+    /// Message delivery: `msg` arrives at `dst`.
+    Deliver { dst: NodeId, msg: ModelMsg },
+    /// Churn: node comes online.
+    Join { node: NodeId },
+    /// Churn: node goes offline.
+    Leave { node: NodeId },
+    /// Measurement probe (error curve sample point).
+    Eval,
+}
+
+/// A scheduled event. Ordering: time, then insertion sequence — ties resolve
+/// in schedule order, which keeps runs deterministic for a given seed.
+#[derive(Debug)]
+struct Scheduled {
+    time: Ticks,
+    seq: u64,
+    event: Event,
+}
+
+impl PartialEq for Scheduled {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Scheduled {}
+impl PartialOrd for Scheduled {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Scheduled {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.time, self.seq).cmp(&(other.time, other.seq))
+    }
+}
+
+/// Min-heap event queue with deterministic FIFO tie-breaking.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Reverse<Scheduled>>,
+    next_seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, time: Ticks, event: Event) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Reverse(Scheduled { time, seq, event }));
+    }
+
+    pub fn pop(&mut self) -> Option<(Ticks, Event)> {
+        self.heap.pop().map(|Reverse(s)| (s.time, s.event))
+    }
+
+    pub fn peek_time(&self) -> Option<Ticks> {
+        self.heap.peek().map(|Reverse(s)| s.time)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(30, Event::Eval);
+        q.push(10, Event::Join { node: 1 });
+        q.push(20, Event::Leave { node: 2 });
+        let times: Vec<Ticks> = std::iter::from_fn(|| q.pop().map(|(t, _)| t)).collect();
+        assert_eq!(times, vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn fifo_on_ties() {
+        let mut q = EventQueue::new();
+        for node in 0..10 {
+            q.push(5, Event::Join { node });
+        }
+        let mut order = Vec::new();
+        while let Some((_, Event::Join { node })) = q.pop() {
+            order.push(node);
+        }
+        assert_eq!(order, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn peek_matches_pop() {
+        let mut q = EventQueue::new();
+        q.push(42, Event::Eval);
+        assert_eq!(q.peek_time(), Some(42));
+        assert_eq!(q.len(), 1);
+        q.pop();
+        assert!(q.is_empty());
+    }
+}

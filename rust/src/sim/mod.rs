@@ -1,0 +1,9 @@
+//! Discrete-event P2P simulation substrate (in-repo PeerSim replacement):
+//! deterministic event queue, message failure models, and lognormal churn.
+pub mod churn;
+pub mod event;
+pub mod network;
+
+pub use churn::{ChurnConfig, ChurnSchedule};
+pub use event::{Event, EventQueue, NodeId, Ticks};
+pub use network::{DelayModel, Network, NetworkConfig};

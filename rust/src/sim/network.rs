@@ -1,0 +1,142 @@
+//! Message-level failure model (paper Section VI-A(i)):
+//!
+//! * message drop with a fixed probability (0.5 in the "extreme failure"
+//!   scenario),
+//! * message delay — either a small fixed transmission delay (no-failure
+//!   runs) or uniform in [Δ, 10Δ] (failure runs),
+//! * delivery to an offline node silently loses the message (churn).
+
+use crate::sim::event::Ticks;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum DelayModel {
+    /// Constant transmission delay in ticks.
+    Fixed(Ticks),
+    /// Uniform in [lo, hi) ticks (paper failure scenario: [Δ, 10Δ]).
+    Uniform { lo: Ticks, hi: Ticks },
+}
+
+impl DelayModel {
+    pub fn sample(&self, rng: &mut Rng) -> Ticks {
+        match *self {
+            DelayModel::Fixed(d) => d,
+            DelayModel::Uniform { lo, hi } => rng.range_u64(lo, hi),
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        match *self {
+            DelayModel::Fixed(d) => d as f64,
+            DelayModel::Uniform { lo, hi } => (lo + hi) as f64 / 2.0,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct NetworkConfig {
+    pub delay: DelayModel,
+    pub drop_prob: f64,
+}
+
+impl NetworkConfig {
+    /// Reliable network with a small fixed delay (default: 10 ticks = Δ/100).
+    pub fn reliable() -> Self {
+        NetworkConfig { delay: DelayModel::Fixed(10), drop_prob: 0.0 }
+    }
+
+    /// The paper's extreme failure scenario for gossip period `delta`:
+    /// 50% drop + uniform [Δ, 10Δ] delay.
+    pub fn extreme(delta: Ticks) -> Self {
+        NetworkConfig {
+            delay: DelayModel::Uniform { lo: delta, hi: 10 * delta },
+            drop_prob: 0.5,
+        }
+    }
+}
+
+/// Network instance: decides per-message fate and counts outcomes.
+#[derive(Debug)]
+pub struct Network {
+    pub cfg: NetworkConfig,
+    pub sent: u64,
+    pub dropped: u64,
+    pub lost_offline: u64,
+}
+
+impl Network {
+    pub fn new(cfg: NetworkConfig) -> Self {
+        Network { cfg, sent: 0, dropped: 0, lost_offline: 0 }
+    }
+
+    /// Returns `Some(delivery_delay)` or `None` if the message is dropped.
+    pub fn transmit(&mut self, rng: &mut Rng) -> Option<Ticks> {
+        self.sent += 1;
+        if self.cfg.drop_prob > 0.0 && rng.chance(self.cfg.drop_prob) {
+            self.dropped += 1;
+            None
+        } else {
+            Some(self.cfg.delay.sample(rng))
+        }
+    }
+
+    pub fn note_lost_offline(&mut self) {
+        self.lost_offline += 1;
+    }
+
+    pub fn delivered(&self) -> u64 {
+        self.sent - self.dropped - self.lost_offline
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reliable_never_drops() {
+        let mut net = Network::new(NetworkConfig::reliable());
+        let mut rng = Rng::new(1);
+        for _ in 0..1000 {
+            assert_eq!(net.transmit(&mut rng), Some(10));
+        }
+        assert_eq!(net.dropped, 0);
+        assert_eq!(net.delivered(), 1000);
+    }
+
+    #[test]
+    fn extreme_drops_about_half() {
+        let mut net = Network::new(NetworkConfig::extreme(1000));
+        let mut rng = Rng::new(2);
+        let n = 20_000;
+        for _ in 0..n {
+            net.transmit(&mut rng);
+        }
+        let rate = net.dropped as f64 / n as f64;
+        assert!((rate - 0.5).abs() < 0.02, "drop rate {rate}");
+    }
+
+    #[test]
+    fn extreme_delay_in_range() {
+        let cfg = NetworkConfig::extreme(1000);
+        let mut rng = Rng::new(3);
+        let mut sum = 0.0;
+        let n = 10_000;
+        for _ in 0..n {
+            let d = cfg.delay.sample(&mut rng);
+            assert!((1000..10_000).contains(&d));
+            sum += d as f64;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - cfg.delay.mean()).abs() < 100.0, "mean {mean}");
+    }
+
+    #[test]
+    fn offline_loss_accounting() {
+        let mut net = Network::new(NetworkConfig::reliable());
+        let mut rng = Rng::new(4);
+        net.transmit(&mut rng);
+        net.note_lost_offline();
+        assert_eq!(net.delivered(), 0);
+    }
+}

@@ -1,0 +1,140 @@
+//! Minimal benchmarking harness (the offline crate set has no `criterion`).
+//!
+//! Used by the `cargo bench` targets (`harness = false`): warmup + timed
+//! iterations with mean/stddev/min reporting, plus simple fixed-width table
+//! printing for the paper-reproduction benches.
+
+use crate::util::stats::OnlineStats;
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub label: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.mean_ns * 1e-9)
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` untimed ones.
+pub fn bench<F: FnMut()>(label: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut s = OnlineStats::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        s.push(t0.elapsed().as_nanos() as f64);
+    }
+    let r = BenchResult {
+        label: label.to_string(),
+        iters,
+        mean_ns: s.mean(),
+        std_ns: s.std_dev(),
+        min_ns: s.min(),
+    };
+    println!(
+        "bench  {:<44} {:>12}/iter  (±{}, min {}, n={})",
+        r.label,
+        fmt_ns(r.mean_ns),
+        fmt_ns(r.std_ns),
+        fmt_ns(r.min_ns),
+        iters
+    );
+    r
+}
+
+/// Fixed-width table printer for paper-figure reproductions.
+pub struct Table {
+    headers: Vec<String>,
+    widths: Vec<usize>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            widths: headers.iter().map(|h| h.len()).collect(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        for (w, c) in self.widths.iter_mut().zip(cells) {
+            *w = (*w).max(c.len());
+        }
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let line = |cells: &[String], widths: &[usize]| {
+            let s: Vec<String> = cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect();
+            println!("  {}", s.join("  "));
+        };
+        line(&self.headers, &self.widths);
+        let total: usize = self.widths.iter().sum::<usize>() + 2 * self.widths.len();
+        println!("  {}", "-".repeat(total));
+        for r in &self.rows {
+            line(r, &self.widths);
+        }
+    }
+}
+
+/// `fX.Y`-style float cell helper.
+pub fn f(x: f64, prec: usize) -> String {
+    format!("{x:.prec$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("noop-ish", 2, 10, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(r.mean_ns >= 0.0);
+        assert_eq!(r.iters, 10);
+    }
+
+    #[test]
+    fn table_accepts_rows() {
+        let mut t = Table::new(&["a", "bb"]);
+        t.row(&["1".into(), "2".into()]);
+        t.print(); // must not panic
+        assert_eq!(t.rows.len(), 1);
+    }
+
+    #[test]
+    fn fmt_scales() {
+        assert!(fmt_ns(10.0).contains("ns"));
+        assert!(fmt_ns(10_000.0).contains("µs"));
+        assert!(fmt_ns(10_000_000.0).contains("ms"));
+        assert!(fmt_ns(2e9).contains(" s"));
+    }
+}

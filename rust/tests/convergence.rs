@@ -1,0 +1,98 @@
+//! End-to-end convergence: the gossip learner must reach dataset-appropriate
+//! error levels on all three Table-I workloads, and the paper's qualitative
+//! orderings must hold (WB1 ≼ WB2 ≼ MU ≼ RW ≼ sequential in convergence
+//! speed; merging beats no merging).
+
+use golf::baselines::sequential;
+use golf::baselines::weighted_bagging::{curve as wb_curve, Bagging};
+use golf::data::synthetic::{reuters_like, spambase_like, urls_like, Scale};
+use golf::eval::tracker::Curve;
+use golf::gossip::create_model::Variant;
+use golf::gossip::protocol::{run, ProtocolConfig};
+use golf::learning::Learner;
+
+fn cfg(cycles: u64, variant: Variant, seed: u64) -> ProtocolConfig {
+    let mut c = ProtocolConfig::paper_default(cycles);
+    c.variant = variant;
+    c.eval.n_peers = 30;
+    c.seed = seed;
+    c
+}
+
+fn auc(c: &Curve) -> f64 {
+    c.points.iter().map(|p| p.err_mean).sum::<f64>() / c.points.len() as f64
+}
+
+#[test]
+fn urls_reaches_low_error() {
+    let ds = urls_like(31, Scale(0.05)); // 500 nodes
+    let res = run(cfg(100, Variant::Mu, 1), &ds);
+    assert!(
+        res.curve.final_error() < 0.14,
+        "final error {}",
+        res.curve.final_error()
+    );
+}
+
+#[test]
+fn reuters_reaches_low_error() {
+    let ds = reuters_like(32, Scale(0.1)); // 200 nodes, d=9947
+    let res = run(cfg(120, Variant::Mu, 2), &ds);
+    assert!(
+        res.curve.final_error() < 0.15,
+        "final error {}",
+        res.curve.final_error()
+    );
+}
+
+#[test]
+fn spambase_reaches_moderate_error() {
+    let ds = spambase_like(33, Scale(0.25)); // 1035 nodes
+    let res = run(cfg(150, Variant::Mu, 3), &ds);
+    assert!(
+        res.curve.final_error() < 0.30,
+        "final error {}",
+        res.curve.final_error()
+    );
+}
+
+#[test]
+fn merging_speeds_up_convergence() {
+    // the paper's central claim: MU ≺ RW in convergence speed
+    let ds = urls_like(34, Scale(0.04));
+    let mu = run(cfg(60, Variant::Mu, 4), &ds);
+    let rw = run(cfg(60, Variant::Rw, 4), &ds);
+    assert!(
+        auc(&mu.curve) < auc(&rw.curve) + 1e-9,
+        "mu {} vs rw {}",
+        auc(&mu.curve),
+        auc(&rw.curve)
+    );
+}
+
+#[test]
+fn wb1_dominates_gossip_dominates_sequential() {
+    let ds = urls_like(35, Scale(0.04));
+    let learner = Learner::pegasos(1e-2);
+    let wb1 = wb_curve(&ds, &learner, Bagging::Wb1, 60, 5);
+    let mu = run(cfg(60, Variant::Mu, 5), &ds);
+    let seq = sequential::curve(&ds, &learner, 60, 5);
+    let (a, b, c) = (auc(&wb1), auc(&mu.curve), auc(&seq));
+    assert!(a <= b + 0.03, "wb1 {a} vs mu {b}");
+    assert!(b <= c + 0.03, "mu {b} vs sequential {c}");
+}
+
+#[test]
+fn adaline_gossip_converges_too() {
+    let ds = urls_like(36, Scale(0.03));
+    let mut c = cfg(60, Variant::Mu, 6);
+    c.learner = Learner::adaline(0.05);
+    let res = run(c, &ds);
+    let first = res.curve.points.first().unwrap().err_mean;
+    assert!(
+        res.curve.final_error() < first,
+        "{} -> {}",
+        first,
+        res.curve.final_error()
+    );
+}

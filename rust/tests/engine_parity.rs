@@ -1,0 +1,141 @@
+//! Engine parity: the native Rust backend and the PJRT backend (running the
+//! AOT-compiled Pallas kernels) must produce the same trajectories on the
+//! same batched schedule.  Combined with python/tests (kernels == ref.py)
+//! this closes the chain: rust native == XLA == Pallas == paper math.
+//!
+//! Tests are skipped when `artifacts/manifest.tsv` is missing (run
+//! `make artifacts` first).
+
+use golf::config::ExperimentSpec;
+use golf::data::synthetic::{spambase_like, urls_like, Scale};
+use golf::engine::batched::run_batched;
+use golf::engine::native::NativeBackend;
+use golf::engine::pjrt::PjrtBackend;
+use golf::engine::{Backend, LearnerKind, StepBatch, StepOp};
+use golf::gossip::create_model::Variant;
+use golf::gossip::protocol::ProtocolConfig;
+use golf::util::rng::Rng;
+
+fn pjrt() -> Option<PjrtBackend> {
+    let dir = PjrtBackend::default_dir();
+    if !dir.join("manifest.tsv").exists() {
+        eprintln!("skipping: no artifacts at {dir:?}");
+        return None;
+    }
+    Some(PjrtBackend::new(&dir).expect("loading PJRT backend"))
+}
+
+fn random_batch(rng: &mut Rng, b: usize, d: usize) -> StepBatch {
+    let mut sb = StepBatch::default();
+    sb.resize(b, d);
+    for v in sb.w1.iter_mut().chain(&mut sb.w2).chain(&mut sb.x) {
+        *v = rng.normal() as f32;
+    }
+    for i in 0..b {
+        sb.y[i] = rng.sign();
+        sb.t1[i] = rng.below(100) as f32;
+        sb.t2[i] = rng.below(100) as f32;
+    }
+    sb
+}
+
+#[test]
+fn step_ops_match_native_all_variants() {
+    let Some(mut pj) = pjrt() else { return };
+    let mut nat = NativeBackend::new();
+    let mut rng = Rng::new(11);
+    for learner in [LearnerKind::Pegasos, LearnerKind::Adaline, LearnerKind::LogReg] {
+        for variant in [Variant::Rw, Variant::Mu, Variant::Um] {
+            let op = StepOp { learner, variant, hp: 0.01 };
+            let mut a = random_batch(&mut rng, 37, 13); // forces padding
+            let mut b = a.clone();
+            nat.step(&op, &mut a).unwrap();
+            pj.step(&op, &mut b).unwrap();
+            for (i, (x, y)) in a.out_w.iter().zip(&b.out_w).enumerate() {
+                assert!(
+                    (x - y).abs() < 1e-4 + 1e-4 * x.abs().max(y.abs()),
+                    "{learner:?}/{variant:?} out_w[{i}]: native {x} vs pjrt {y}"
+                );
+            }
+            assert_eq!(a.out_t, b.out_t, "{learner:?}/{variant:?} out_t");
+        }
+    }
+}
+
+#[test]
+fn error_counts_match_native() {
+    let Some(mut pj) = pjrt() else { return };
+    let mut nat = NativeBackend::new();
+    let mut rng = Rng::new(12);
+    let (n, d, m) = (300, 10, 7);
+    let x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+    let w: Vec<f32> = (0..m * d).map(|_| rng.normal() as f32).collect();
+    let mut y: Vec<f32> = (0..n).map(|_| rng.sign()).collect();
+    y[n - 1] = 0.0; // padding row
+    let a = nat.error_counts(&x, &y, n, d, &w, m).unwrap();
+    let b = pj.error_counts(&x, &y, n, d, &w, m).unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn full_run_parity_urls() {
+    let Some(mut pj) = pjrt() else { return };
+    let ds = urls_like(21, Scale(0.01));
+    let mut cfg = ProtocolConfig::paper_default(12);
+    cfg.eval.n_peers = 10;
+    let mut nat = NativeBackend::new();
+    let a = run_batched(cfg.clone(), &ds, &mut nat).unwrap();
+    let b = run_batched(cfg, &ds, &mut pj).unwrap();
+    assert_eq!(a.curve.points.len(), b.curve.points.len());
+    for (pa, pb) in a.curve.points.iter().zip(&b.curve.points) {
+        // native and XLA contract dots in different orders; test rows whose
+        // margin sits at the f32 noise floor can flip — allow a few of the
+        // ~5k test rows to differ
+        assert!(
+            (pa.err_mean - pb.err_mean).abs() < 2e-3,
+            "cycle {}: native {} vs pjrt {}",
+            pa.cycle,
+            pa.err_mean,
+            pb.err_mean
+        );
+    }
+}
+
+#[test]
+fn full_run_parity_spambase_um() {
+    let Some(mut pj) = pjrt() else { return };
+    let ds = spambase_like(22, Scale(0.02));
+    let mut cfg = ProtocolConfig::paper_default(8);
+    cfg.variant = Variant::Um;
+    cfg.eval.n_peers = 8;
+    let mut nat = NativeBackend::new();
+    let a = run_batched(cfg.clone(), &ds, &mut nat).unwrap();
+    let b = run_batched(cfg, &ds, &mut pj).unwrap();
+    for (pa, pb) in a.curve.points.iter().zip(&b.curve.points) {
+        // UM chains two updates per receive; allow f32 slack
+        assert!(
+            (pa.err_mean - pb.err_mean).abs() < 5e-3,
+            "cycle {}: native {} vs pjrt {}",
+            pa.cycle,
+            pa.err_mean,
+            pb.err_mean
+        );
+    }
+}
+
+#[test]
+fn cli_backend_batched_pjrt_runs() {
+    if pjrt().is_none() {
+        return;
+    }
+    let mut spec = ExperimentSpec::default();
+    spec.scale = 0.005;
+    spec.cycles = 4;
+    spec.eval_peers = 4;
+    spec.backend = golf::config::BackendChoice::BatchedPjrt;
+    let ds = spec.build_dataset().unwrap();
+    let cfg = spec.protocol_config().unwrap();
+    let mut be = PjrtBackend::new(&PjrtBackend::default_dir()).unwrap();
+    let res = run_batched(cfg, &ds, &mut be).unwrap();
+    assert_eq!(res.curve.points.len(), 4);
+}

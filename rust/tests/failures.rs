@@ -1,0 +1,102 @@
+//! Failure robustness (Section VI, Fig. 1 lower row): drop, delay and churn
+//! — individually and combined — slow convergence but must not break it,
+//! and the slowdown factors should match the paper's accounting (delay ≈ ×5,
+//! drop ≈ ×2).
+
+use golf::data::synthetic::{urls_like, Scale};
+use golf::eval::tracker::Curve;
+use golf::gossip::protocol::{run, ProtocolConfig};
+use golf::sim::churn::ChurnConfig;
+use golf::sim::network::DelayModel;
+
+fn base_cfg(cycles: u64, seed: u64) -> ProtocolConfig {
+    let mut c = ProtocolConfig::paper_default(cycles);
+    c.eval.n_peers = 25;
+    c.seed = seed;
+    c
+}
+
+fn auc(c: &Curve) -> f64 {
+    c.points.iter().map(|p| p.err_mean).sum::<f64>() / c.points.len() as f64
+}
+
+#[test]
+fn drop_only_converges() {
+    let ds = urls_like(41, Scale(0.04));
+    let mut cfg = base_cfg(80, 1);
+    cfg.network.drop_prob = 0.5;
+    let res = run(cfg, &ds);
+    assert!(res.stats.messages_dropped > 0);
+    assert!(res.curve.final_error() < 0.16, "final {}", res.curve.final_error());
+}
+
+#[test]
+fn delay_only_converges() {
+    let ds = urls_like(42, Scale(0.04));
+    let mut cfg = base_cfg(80, 2);
+    cfg.network.delay = DelayModel::Uniform { lo: cfg.delta, hi: 10 * cfg.delta };
+    let res = run(cfg, &ds);
+    assert!(res.curve.final_error() < 0.16, "final {}", res.curve.final_error());
+}
+
+#[test]
+fn churn_only_converges() {
+    let ds = urls_like(43, Scale(0.04));
+    let mut cfg = base_cfg(80, 3);
+    cfg.churn = Some(ChurnConfig::paper_default(cfg.delta));
+    let res = run(cfg, &ds);
+    assert!(res.stats.messages_lost_offline > 0 || res.curve.final_error() < 0.2);
+    assert!(res.curve.final_error() < 0.16, "final {}", res.curve.final_error());
+}
+
+#[test]
+fn all_failures_converge_slower_but_converge() {
+    let ds = urls_like(44, Scale(0.04));
+    let clean = run(base_cfg(80, 4), &ds);
+    let failed = run(base_cfg(80, 4).with_extreme_failures(), &ds);
+    // slower...
+    assert!(
+        auc(&failed.curve) >= auc(&clean.curve) - 0.01,
+        "failures can't speed things up: {} vs {}",
+        auc(&failed.curve),
+        auc(&clean.curve)
+    );
+    // ...but still converging
+    let first = failed.curve.points.first().unwrap().err_mean;
+    assert!(failed.curve.final_error() < first);
+}
+
+#[test]
+fn delay_shifts_convergence_right() {
+    // the paper attributes most of the slowdown to delay: messages wait ~5
+    // cycles on average, so reaching a given error takes ~5x the cycles
+    let ds = urls_like(45, Scale(0.04));
+    let clean = run(base_cfg(120, 5), &ds);
+    let mut cfg = base_cfg(120, 5);
+    cfg.network.delay = DelayModel::Uniform { lo: cfg.delta, hi: 10 * cfg.delta };
+    let delayed = run(cfg, &ds);
+    let thr = 0.15;
+    if let (Some(a), Some(b)) =
+        (clean.curve.cycles_to_reach(thr), delayed.curve.cycles_to_reach(thr))
+    {
+        assert!(
+            b as f64 >= 1.5 * a as f64,
+            "delay should slow convergence: clean {a} vs delayed {b}"
+        );
+    } else {
+        panic!("both runs should reach {thr}");
+    }
+}
+
+#[test]
+fn message_loss_accounting_consistent() {
+    let ds = urls_like(46, Scale(0.03));
+    let cfg = base_cfg(40, 6).with_extreme_failures();
+    let res = run(cfg, &ds);
+    let s = &res.stats;
+    assert!(s.messages_dropped + s.messages_lost_offline < s.messages_sent);
+    assert!(s.updates_applied <= s.messages_sent - s.messages_dropped - s.messages_lost_offline);
+    // drop rate near the configured 0.5
+    let rate = s.messages_dropped as f64 / s.messages_sent as f64;
+    assert!((rate - 0.5).abs() < 0.05, "drop rate {rate}");
+}

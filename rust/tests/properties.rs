@@ -1,0 +1,392 @@
+//! Property-based tests over the paper's invariants, via the in-repo
+//! `util::check::forall` runner.
+
+use golf::data::dataset::Row;
+use golf::data::matrix::Matrix;
+use golf::data::{libsvm, Csr, Examples};
+use golf::engine::native::NativeBackend;
+use golf::engine::{Backend, LearnerKind, StepBatch, StepOp};
+use golf::gossip::cache::ModelCache;
+use golf::gossip::create_model::{create_model, Variant};
+use golf::learning::{Adaline, Learner, LinearModel, Pegasos};
+use golf::sim::event::{Event, EventQueue};
+use golf::util::check::{close_f32, forall};
+use golf::util::rng::Rng;
+
+fn rand_vec(rng: &mut Rng, d: usize) -> Vec<f32> {
+    (0..d).map(|_| rng.normal() as f32).collect()
+}
+
+#[test]
+fn prop_merge_is_commutative_and_averaging() {
+    forall(
+        101,
+        200,
+        |rng| {
+            let d = 1 + rng.below_usize(40);
+            (
+                rand_vec(rng, d),
+                rand_vec(rng, d),
+                rng.below(1000),
+                rng.below(1000),
+            )
+        },
+        |(wa, wb, ta, tb)| {
+            let a = LinearModel::from_weights(wa.clone(), *ta);
+            let b = LinearModel::from_weights(wb.clone(), *tb);
+            let ab = LinearModel::merge(&a, &b);
+            let ba = LinearModel::merge(&b, &a);
+            close_f32(&ab.weights(), &ba.weights(), 1e-6, 1e-7)?;
+            if ab.t != ta.max(tb).to_owned() {
+                return Err(format!("t {} != max({ta},{tb})", ab.t));
+            }
+            // averaging: each coordinate is the midpoint
+            for (i, ((&x, &y), m)) in
+                wa.iter().zip(wb.iter()).zip(ab.weights()).enumerate()
+            {
+                let expect = 0.5 * (x + y);
+                if (m - expect).abs() > 1e-6 {
+                    return Err(format!("coord {i}: {m} != {expect}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_adaline_update_merge_commute_eq8() {
+    // Eq. (8): update(avg(w1,w2)) == avg(update(w1), update(w2))
+    forall(
+        102,
+        200,
+        |rng| {
+            let d = 1 + rng.below_usize(30);
+            (
+                rand_vec(rng, d),
+                rand_vec(rng, d),
+                rand_vec(rng, d),
+                rng.sign(),
+                0.001 + rng.next_f32() * 0.3,
+            )
+        },
+        |(w1, w2, x, y, eta)| {
+            let ad = Adaline::new(*eta);
+            let a = LinearModel::from_weights(w1.clone(), 0);
+            let b = LinearModel::from_weights(w2.clone(), 0);
+            let mut avg_up = LinearModel::merge(&a, &b);
+            ad.update(&mut avg_up, &Row::Dense(x), *y);
+            let (mut ua, mut ub) = (a, b);
+            ad.update(&mut ua, &Row::Dense(x), *y);
+            ad.update(&mut ub, &Row::Dense(x), *y);
+            let up_avg = LinearModel::merge(&ua, &ub);
+            close_f32(&avg_up.weights(), &up_avg.weights(), 1e-4, 1e-5)
+        },
+    );
+}
+
+#[test]
+fn prop_weighted_vote_equals_average_model_eq7() {
+    forall(
+        103,
+        200,
+        |rng| {
+            let d = 1 + rng.below_usize(20);
+            let k = 1 + rng.below_usize(10);
+            let models: Vec<Vec<f32>> = (0..k).map(|_| rand_vec(rng, d)).collect();
+            let x = rand_vec(rng, d);
+            (models, x)
+        },
+        |(models, x)| {
+            let d = x.len();
+            let mut cache = ModelCache::new(models.len());
+            let mut sum = vec![0.0f32; d];
+            for w in models {
+                for (s, &v) in sum.iter_mut().zip(w) {
+                    *s += v;
+                }
+                cache.add(LinearModel::from_weights(w.clone(), 0));
+            }
+            let avg: Vec<f32> =
+                sum.iter().map(|s| s / models.len() as f32).collect();
+            let avg_model = LinearModel::from_weights(avg, 0);
+            let xr = Row::Dense(x);
+            let vote = golf::gossip::Predictor::WeightedVote.predict(&cache, &xr);
+            if vote != avg_model.predict(&xr) {
+                return Err(format!("vote {vote} != avg-model prediction"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_pegasos_update_bounded_step() {
+    // each Pegasos step moves w by at most eta*(lam*|w| + |x|) — sanity
+    // bound derived from the update rule; catches sign/step-size bugs
+    forall(
+        104,
+        300,
+        |rng| {
+            let d = 1 + rng.below_usize(25);
+            (
+                rand_vec(rng, d),
+                rand_vec(rng, d),
+                rng.sign(),
+                1 + rng.below(1000),
+                [1e-4, 1e-3, 1e-2, 0.1][rng.below_usize(4)],
+            )
+        },
+        |(w0, x, y, t0, lam)| {
+            let p = Pegasos::new(*lam);
+            let mut m = LinearModel::from_weights(w0.clone(), *t0);
+            p.update(&mut m, &Row::Dense(x), *y);
+            let t1 = (*t0 + 1) as f32;
+            let eta = 1.0 / (lam * t1);
+            let wnorm = w0.iter().map(|v| v * v).sum::<f32>().sqrt();
+            let xnorm = x.iter().map(|v| v * v).sum::<f32>().sqrt();
+            let moved: f32 = m
+                .weights()
+                .iter()
+                .zip(w0)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f32>()
+                .sqrt();
+            let bound = eta * lam * wnorm + eta * xnorm + 1e-3;
+            if moved > bound {
+                return Err(format!("step {moved} exceeds bound {bound}"));
+            }
+            if m.t != t0 + 1 {
+                return Err("t not incremented".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_create_model_rw_independent_of_m2() {
+    forall(
+        105,
+        100,
+        |rng| {
+            let d = 1 + rng.below_usize(15);
+            (rand_vec(rng, d), rand_vec(rng, d), rand_vec(rng, d), rng.sign())
+        },
+        |(w1, w2, x, y)| {
+            let l = Learner::pegasos(0.01);
+            let m1 = LinearModel::from_weights(w1.clone(), 3);
+            let m2 = LinearModel::from_weights(w2.clone(), 9);
+            let zeros = LinearModel::zeros(w1.len());
+            let a = create_model(Variant::Rw, &l, m1.clone(), &m2, &Row::Dense(x), *y);
+            let b = create_model(Variant::Rw, &l, m1, &zeros, &Row::Dense(x), *y);
+            close_f32(&a.weights(), &b.weights(), 1e-6, 1e-7)
+        },
+    );
+}
+
+#[test]
+fn prop_batched_native_matches_scalar_path() {
+    // batching must be a pure reorganization: batched MU == scalar MU
+    forall(
+        106,
+        60,
+        |rng| {
+            let d = 1 + rng.below_usize(12);
+            let b = 1 + rng.below_usize(20);
+            let mut sb = StepBatch::default();
+            sb.resize(b, d);
+            for v in sb.w1.iter_mut().chain(&mut sb.w2).chain(&mut sb.x) {
+                *v = rng.normal() as f32;
+            }
+            for i in 0..b {
+                sb.y[i] = rng.sign();
+                sb.t1[i] = rng.below(100) as f32;
+                sb.t2[i] = rng.below(100) as f32;
+            }
+            sb
+        },
+        |sb| {
+            let mut sb = sb.clone();
+            let (b, d) = (sb.b, sb.d);
+            let op = StepOp {
+                learner: LearnerKind::Pegasos,
+                variant: Variant::Mu,
+                hp: 0.05,
+            };
+            let learner = Learner::pegasos(0.05);
+            let mut expect = Vec::new();
+            for i in 0..b {
+                let m1 = LinearModel::from_weights(
+                    sb.w1[i * d..(i + 1) * d].to_vec(),
+                    sb.t1[i] as u64,
+                );
+                let m2 = LinearModel::from_weights(
+                    sb.w2[i * d..(i + 1) * d].to_vec(),
+                    sb.t2[i] as u64,
+                );
+                let c = create_model(
+                    Variant::Mu,
+                    &learner,
+                    m1,
+                    &m2,
+                    &Row::Dense(&sb.x[i * d..(i + 1) * d]),
+                    sb.y[i],
+                );
+                expect.push(c);
+            }
+            NativeBackend::new().step(&op, &mut sb).map_err(|e| e.to_string())?;
+            for i in 0..b {
+                close_f32(
+                    &sb.out_w[i * d..(i + 1) * d],
+                    &expect[i].weights(),
+                    1e-4,
+                    1e-5,
+                )?;
+                if sb.out_t[i] as u64 != expect[i].t {
+                    return Err(format!("t mismatch row {i}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_event_queue_total_order() {
+    forall(
+        107,
+        50,
+        |rng| {
+            let n = 1 + rng.below_usize(200);
+            (0..n).map(|_| rng.below(1000)).collect::<Vec<u64>>()
+        },
+        |times| {
+            let mut q = EventQueue::new();
+            for &t in times {
+                q.push(t, Event::Eval);
+            }
+            let mut prev = 0u64;
+            while let Some((t, _)) = q.pop() {
+                if t < prev {
+                    return Err(format!("out of order: {t} after {prev}"));
+                }
+                prev = t;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_cache_never_exceeds_capacity_and_keeps_freshest() {
+    forall(
+        108,
+        100,
+        |rng| {
+            let cap = 1 + rng.below_usize(12);
+            let n = 1 + rng.below_usize(50);
+            (cap, (0..n).map(|i| i as u64).collect::<Vec<u64>>())
+        },
+        |(cap, seq)| {
+            let mut c = ModelCache::new(*cap);
+            for &t in seq {
+                c.add(LinearModel::from_weights(vec![t as f32], t));
+                if c.len() > *cap {
+                    return Err("capacity exceeded".into());
+                }
+                if c.freshest().t != t {
+                    return Err("freshest is not last added".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_libsvm_roundtrip() {
+    forall(
+        109,
+        60,
+        |rng| {
+            let d = 1 + rng.below_usize(30);
+            let n = 1 + rng.below_usize(20);
+            let mut m = Csr::new(d);
+            let mut ys = Vec::new();
+            for _ in 0..n {
+                let mut entries = Vec::new();
+                for j in 0..d {
+                    if rng.chance(0.3) {
+                        // quantized values survive the float round-trip
+                        let v = (rng.normal() * 8.0).round() as f32 / 4.0;
+                        if v != 0.0 {
+                            entries.push((j as u32, v));
+                        }
+                    }
+                }
+                m.push_row(&entries);
+                ys.push(rng.sign());
+            }
+            (m, ys)
+        },
+        |(m, ys)| {
+            // serialize to libsvm text, reparse, compare
+            let mut text = String::new();
+            for i in 0..m.rows {
+                let (idx, val) = m.row(i);
+                text.push_str(if ys[i] > 0.0 { "+1" } else { "-1" });
+                for (&j, &v) in idx.iter().zip(val) {
+                    text.push_str(&format!(" {}:{}", j + 1, v));
+                }
+                text.push('\n');
+            }
+            let (x2, y2) = libsvm::parse(text.as_bytes(), Some(m.cols))
+                .map_err(|e| e.to_string())?;
+            if y2 != *ys {
+                return Err("labels differ".into());
+            }
+            for i in 0..m.rows {
+                let (i1, v1) = m.row(i);
+                match x2.row(i) {
+                    Row::Sparse(i2, v2) => {
+                        if i1 != i2 || v1 != v2 {
+                            return Err(format!("row {i} differs"));
+                        }
+                    }
+                    _ => return Err("expected sparse".into()),
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_feature_projection_preserves_dots() {
+    // <project(x), project(w*)> == <x restricted to kept coords, w*>
+    forall(
+        110,
+        80,
+        |rng| {
+            let d = 4 + rng.below_usize(20);
+            let k = 1 + rng.below_usize(d.min(8));
+            let keep = rng.sample_indices(d, k);
+            let n = 1 + rng.below_usize(10);
+            let data: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+            (d, keep, n, data)
+        },
+        |(d, keep, n, data)| {
+            let m = Matrix::from_vec(*n, *d, data.clone());
+            let p = golf::data::features::project(&Examples::Dense(m.clone()), keep);
+            for i in 0..*n {
+                for (new_j, &old_j) in keep.iter().enumerate() {
+                    if p.row(i)[new_j] != m.row(i)[old_j] {
+                        return Err(format!("({i},{new_j}) mismatch"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,136 @@
+//! Protocol-level integration: cost model, determinism, sampler variants,
+//! local voting (Fig. 3 shape), and the UM-vs-MU relationship (Fig. 2).
+
+use golf::data::synthetic::{urls_like, Scale};
+use golf::eval::tracker::Curve;
+use golf::gossip::create_model::Variant;
+use golf::gossip::protocol::{run, ProtocolConfig};
+use golf::p2p::overlay::SamplerConfig;
+
+fn cfg(cycles: u64, seed: u64) -> ProtocolConfig {
+    let mut c = ProtocolConfig::paper_default(cycles);
+    c.eval.n_peers = 25;
+    c.seed = seed;
+    c
+}
+
+fn auc(c: &Curve) -> f64 {
+    c.points.iter().map(|p| p.err_mean).sum::<f64>() / c.points.len() as f64
+}
+
+#[test]
+fn cost_model_one_message_per_node_per_cycle() {
+    let ds = urls_like(51, Scale(0.03));
+    let n = ds.n_train() as f64;
+    let res = run(cfg(25, 1), &ds);
+    let per = res.stats.messages_sent as f64 / (n * 25.0);
+    assert!((per - 1.0).abs() < 0.05, "messages per node-cycle {per}");
+    // message size: d*4 + 8 + view bytes (~20 descriptors)
+    let bytes_per_msg = res.stats.bytes_sent as f64 / res.stats.messages_sent as f64;
+    let d = ds.d() as f64;
+    assert!(bytes_per_msg >= d * 4.0 + 8.0);
+    assert!(bytes_per_msg <= d * 4.0 + 8.0 + 21.0 * 16.0);
+}
+
+#[test]
+fn newscast_close_to_oracle_sampling() {
+    // the paper's assumption: NEWSCAST behaves like uniform peer sampling
+    let ds = urls_like(52, Scale(0.04));
+    let mut a = cfg(50, 2);
+    a.sampler = SamplerConfig::Newscast { view_size: 20 };
+    let mut b = cfg(50, 2);
+    b.sampler = SamplerConfig::Oracle;
+    let ra = run(a, &ds);
+    let rb = run(b, &ds);
+    assert!(
+        (auc(&ra.curve) - auc(&rb.curve)).abs() < 0.05,
+        "newscast {} vs oracle {}",
+        auc(&ra.curve),
+        auc(&rb.curve)
+    );
+}
+
+#[test]
+fn um_not_faster_than_mu() {
+    // Section V-B + Fig 2: MU maintains more model independence and
+    // converges at least as fast as UM
+    let ds = urls_like(53, Scale(0.04));
+    let mut mu_cfg = cfg(60, 3);
+    mu_cfg.variant = Variant::Mu;
+    let mut um_cfg = cfg(60, 3);
+    um_cfg.variant = Variant::Um;
+    let mu = run(mu_cfg, &ds);
+    let um = run(um_cfg, &ds);
+    assert!(
+        auc(&mu.curve) <= auc(&um.curve) + 0.02,
+        "mu {} vs um {}",
+        auc(&mu.curve),
+        auc(&um.curve)
+    );
+}
+
+#[test]
+fn voting_helps_rw_significantly() {
+    // Fig 3: voting gives a large improvement for the no-merge variant
+    let ds = urls_like(54, Scale(0.04));
+    let mut c = cfg(60, 4);
+    c.variant = Variant::Rw;
+    c.eval.voting = true;
+    let res = run(c, &ds);
+    // compare freshest vs voted over the later half of the curve
+    let pts = &res.curve.points;
+    let half = pts.len() / 2;
+    let fresh: f64 =
+        pts[half..].iter().map(|p| p.err_mean).sum::<f64>() / (pts.len() - half) as f64;
+    let vote: f64 = pts[half..]
+        .iter()
+        .map(|p| p.err_vote.unwrap())
+        .sum::<f64>()
+        / (pts.len() - half) as f64;
+    assert!(vote <= fresh + 0.01, "vote {vote} vs freshest {fresh}");
+}
+
+#[test]
+fn similarity_rises_as_models_converge() {
+    let ds = urls_like(55, Scale(0.03));
+    let mut c = cfg(50, 5);
+    c.eval.similarity = true;
+    let res = run(c, &ds);
+    let sims: Vec<f64> =
+        res.curve.points.iter().map(|p| p.similarity.unwrap()).collect();
+    assert!(
+        sims.last().unwrap() > sims.first().unwrap(),
+        "{sims:?}"
+    );
+    assert!(sims.iter().all(|s| (-1.0..=1.0).contains(s)));
+}
+
+#[test]
+fn full_run_bit_deterministic() {
+    let ds = urls_like(56, Scale(0.03));
+    let mut a = cfg(30, 6).with_extreme_failures();
+    a.eval.voting = true;
+    a.eval.similarity = true;
+    let mut b = a.clone();
+    b.seed = a.seed;
+    let ra = run(a, &ds);
+    let rb = run(b, &ds);
+    for (pa, pb) in ra.curve.points.iter().zip(&rb.curve.points) {
+        assert_eq!(pa.err_mean, pb.err_mean);
+        assert_eq!(pa.err_vote, pb.err_vote);
+        assert_eq!(pa.similarity, pb.similarity);
+    }
+    assert_eq!(ra.stats.messages_sent, rb.stats.messages_sent);
+    assert_eq!(ra.stats.messages_dropped, rb.stats.messages_dropped);
+}
+
+#[test]
+fn different_seeds_differ() {
+    let ds = urls_like(57, Scale(0.03));
+    let ra = run(cfg(20, 7), &ds);
+    let rb = run(cfg(20, 8), &ds);
+    assert_ne!(
+        ra.curve.points.last().unwrap().err_mean,
+        rb.curve.points.last().unwrap().err_mean
+    );
+}
