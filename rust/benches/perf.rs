@@ -12,9 +12,10 @@ use golf::engine::native::NativeBackend;
 use golf::engine::pjrt::PjrtBackend;
 use golf::engine::{Backend, LearnerKind, StepBatch, StepOp};
 use golf::gossip::create_model::Variant;
-use golf::gossip::protocol::{run, ProtocolConfig};
+use golf::gossip::protocol::{run, ExecMode, ProtocolConfig};
 use golf::util::benchkit::bench;
 use golf::util::rng::Rng;
+use std::io::Write;
 
 fn batch(rng: &mut Rng, b: usize, d: usize) -> StepBatch {
     let mut sb = StepBatch::default();
@@ -30,8 +31,26 @@ fn batch(rng: &mut Rng, b: usize, d: usize) -> StepBatch {
     sb
 }
 
+/// Write the protocol-throughput results as a flat JSON object so the perf
+/// trajectory is tracked from PR to PR (`GOLF_BENCH_OUT` overrides the path).
+fn write_bench_json(results: &[(String, f64)]) {
+    let path = std::env::var("GOLF_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_protocol.json".to_string());
+    let mut body = String::from("{\n  \"bench\": \"protocol\",\n  \"unit\": \"delivered_messages_per_s\",\n  \"results\": {\n");
+    for (i, (k, v)) in results.iter().enumerate() {
+        let comma = if i + 1 < results.len() { "," } else { "" };
+        body.push_str(&format!("    \"{k}\": {v:.1}{comma}\n"));
+    }
+    body.push_str("  }\n}\n");
+    match std::fs::File::create(&path).and_then(|mut f| f.write_all(body.as_bytes())) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
+}
+
 fn main() {
     let mut rng = Rng::new(1);
+    let mut json: Vec<(String, f64)> = Vec::new();
 
     println!("--- L3 event-driven simulator throughput");
     for (name, ds, cycles) in [
@@ -51,6 +70,43 @@ fn main() {
             "    -> {:.2} M delivered messages/s",
             r.throughput(msgs as f64) / 1e6
         );
+    }
+
+    println!("\n--- event-driven stepping: scalar vs micro-batched (same semantics)");
+    for (key, name, ds, cycles) in [
+        ("urls", "urls 1000 nodes d=10", urls_like(1, Scale(0.1)), 40u64),
+        ("spambase", "spambase 1035 nodes d=57", spambase_like(1, Scale(0.25)), 25),
+        ("reuters", "reuters 500 nodes d=9947", reuters_like(1, Scale(0.25)), 8),
+    ] {
+        let delta = ProtocolConfig::paper_default(1).delta;
+        for (mode_key, mode_name, exec) in [
+            ("scalar", "scalar        ", ExecMode::Scalar),
+            ("microbatch", "microbatch w=0", ExecMode::MicroBatch { coalesce: 0 }),
+            (
+                "microbatch_w4",
+                "microbatch w=Δ/4",
+                ExecMode::MicroBatch { coalesce: delta / 4 },
+            ),
+        ] {
+            let mut msgs = 0u64;
+            let mut calls = 0u64;
+            let r = bench(&format!("event {mode_name}: {name}"), 0, 3, || {
+                let mut cfg = ProtocolConfig::paper_default(cycles);
+                cfg.eval.n_peers = 0;
+                cfg.eval.at_cycles = vec![cycles];
+                cfg.exec = exec;
+                let res = run(cfg, &ds);
+                msgs = res.stats.updates_applied;
+                calls = res.stats.engine_calls;
+            });
+            let per_s = r.throughput(msgs as f64);
+            println!(
+                "    -> {:.2} M delivered messages/s  ({:.1} rows/engine-call)",
+                per_s / 1e6,
+                msgs as f64 / calls.max(1) as f64
+            );
+            json.push((format!("event_{mode_key}_{key}"), per_s));
+        }
     }
 
     println!("\n--- native backend: batched MU step");
@@ -163,4 +219,6 @@ fn main() {
         });
         println!("    -> {:.2} GB/s effective", r.throughput((d * 4 * 3) as f64) / 1e9);
     }
+
+    write_bench_json(&json);
 }

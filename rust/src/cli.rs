@@ -5,17 +5,20 @@
 //! golf run [--config FILE] [--key value ...]   run one experiment
 //! golf table1 [--scale S] [--seed N]           reproduce Table I
 //! golf fig1|fig2|fig3 [--scale S] [--cycles N] reproduce a figure
+//! golf sweep [--scale S] [--replicates K]      parallel grid sweep
 //! golf info                                    artifact/runtime info
 //! ```
 //!
-//! `--key value` flags mirror the INI keys of config::ExperimentSpec.
+//! `--key value` flags mirror the INI keys of config::ExperimentSpec.  Figure
+//! and sweep commands fan independent runs across threads (`--threads N`,
+//! default: all cores).
 
 use crate::config::{BackendChoice, ExperimentSpec};
 use crate::engine::batched::run_batched;
 use crate::engine::native::NativeBackend;
 use crate::engine::pjrt::PjrtBackend;
-use crate::experiments::{self, common};
-use crate::gossip::protocol::RunResult;
+use crate::experiments::{self, common, sweep};
+use crate::gossip::protocol::{ExecMode, RunResult};
 use std::collections::HashMap;
 
 pub struct ParsedArgs {
@@ -52,12 +55,17 @@ pub fn usage() -> &'static str {
 USAGE:
   golf run    [--config FILE] [--dataset D] [--scale S] [--cycles N]
               [--variant rw|mu|um] [--learner pegasos|adaline]
-              [--failures none|extreme] [--backend event|batched-native|batched-pjrt]
+              [--failures none|extreme]
+              [--backend event|event-pjrt|batched-native|batched-pjrt]
+              [--mode microbatch|scalar] [--coalesce TICKS]
               [--voting true] [--similarity true] [--seed N] [--out FILE.csv]
-  golf table1 [--scale S] [--seed N]
-  golf fig1   [--scale S] [--cycles N] [--seed N] [--out-dir DIR]
-  golf fig2   [--scale S] [--cycles N] [--seed N] [--out-dir DIR]
-  golf fig3   [--scale S] [--cycles N] [--seed N] [--out-dir DIR]
+  golf table1 [--scale S] [--seed N] [--threads T]
+  golf fig1   [--scale S] [--cycles N] [--seed N] [--threads T] [--out-dir DIR]
+  golf fig2   [--scale S] [--cycles N] [--seed N] [--threads T] [--out-dir DIR]
+  golf fig3   [--scale S] [--cycles N] [--seed N] [--threads T] [--out-dir DIR]
+  golf sweep  [--scale S] [--cycles N] [--seed N] [--threads T]
+              [--replicates K] [--mode microbatch|scalar] [--coalesce TICKS]
+              [--out-dir DIR]
   golf info"
 }
 
@@ -89,6 +97,12 @@ fn run_spec(spec: &ExperimentSpec) -> Result<RunResult, String> {
     );
     match spec.backend {
         BackendChoice::Event => Ok(crate::gossip::run(cfg, &ds)),
+        BackendChoice::EventPjrt => {
+            let be = PjrtBackend::new(&PjrtBackend::default_dir())
+                .map_err(|e| format!("{e:#}"))?;
+            crate::gossip::run_with_backend(cfg, &ds, Box::new(be))
+                .map_err(|e| format!("{e:#}"))
+        }
         BackendChoice::BatchedNative => {
             let mut be = NativeBackend::new();
             run_batched(cfg, &ds, &mut be).map_err(|e| e.to_string())
@@ -143,7 +157,15 @@ pub fn dispatch(args: &[String]) -> i32 {
     }
 }
 
-fn fig_args(flags: &HashMap<String, String>) -> Result<(f64, Option<u64>, u64, std::path::PathBuf), String> {
+struct FigArgs {
+    scale: f64,
+    cycles: Option<u64>,
+    seed: u64,
+    threads: usize,
+    out: std::path::PathBuf,
+}
+
+fn fig_args(flags: &HashMap<String, String>) -> Result<FigArgs, String> {
     let scale: f64 = flags.get("scale").map_or(Ok(common::env_scale()), |s| {
         s.parse().map_err(|_| format!("bad scale {s:?}"))
     })?;
@@ -154,11 +176,14 @@ fn fig_args(flags: &HashMap<String, String>) -> Result<(f64, Option<u64>, u64, s
     let seed: u64 = flags.get("seed").map_or(Ok(42), |s| {
         s.parse().map_err(|_| format!("bad seed {s:?}"))
     })?;
+    let threads: usize = flags.get("threads").map_or(Ok(sweep::thread_count()), |s| {
+        s.parse().map_err(|_| format!("bad threads {s:?}"))
+    })?;
     let out: std::path::PathBuf = flags
         .get("out-dir")
         .map(Into::into)
         .unwrap_or_else(common::results_dir);
-    Ok((scale, cycles, seed, out))
+    Ok(FigArgs { scale, cycles, seed, threads, out })
 }
 
 fn run_command(parsed: &ParsedArgs) -> Result<(), String> {
@@ -175,34 +200,78 @@ fn run_command(parsed: &ParsedArgs) -> Result<(), String> {
             Ok(())
         }
         "table1" => {
-            let (scale, _, seed, _) = fig_args(&parsed.flags)?;
-            let sets = experiments::datasets(seed, scale);
-            let rows = experiments::table1::run(&sets, seed);
+            let a = fig_args(&parsed.flags)?;
+            let sets = experiments::datasets(a.seed, a.scale);
+            let rows = experiments::table1::run_threads(&sets, a.seed, a.threads);
             experiments::table1::print(&rows);
             Ok(())
         }
         "fig1" => {
-            let (scale, cycles, seed, out) = fig_args(&parsed.flags)?;
-            let sets = experiments::datasets(seed, scale);
-            let panels = experiments::fig1::run_figure(&sets, cycles, seed);
-            experiments::fig1::to_csv(&panels, &out).map_err(|e| e.to_string())?;
-            eprintln!("wrote {} panels to {}", panels.len(), out.display());
+            let a = fig_args(&parsed.flags)?;
+            let sets = experiments::datasets(a.seed, a.scale);
+            let panels = experiments::fig1::run_figure_threads(&sets, a.cycles, a.seed, a.threads);
+            experiments::fig1::to_csv(&panels, &a.out).map_err(|e| e.to_string())?;
+            eprintln!("wrote {} panels to {}", panels.len(), a.out.display());
             Ok(())
         }
         "fig2" => {
-            let (scale, cycles, seed, out) = fig_args(&parsed.flags)?;
-            let sets = experiments::datasets(seed, scale);
-            let panels = experiments::fig2::run_figure(&sets, cycles, seed);
-            experiments::fig2::to_csv(&panels, &out).map_err(|e| e.to_string())?;
-            eprintln!("wrote {} panels to {}", panels.len(), out.display());
+            let a = fig_args(&parsed.flags)?;
+            let sets = experiments::datasets(a.seed, a.scale);
+            let panels = experiments::fig2::run_figure_threads(&sets, a.cycles, a.seed, a.threads);
+            experiments::fig2::to_csv(&panels, &a.out).map_err(|e| e.to_string())?;
+            eprintln!("wrote {} panels to {}", panels.len(), a.out.display());
             Ok(())
         }
         "fig3" => {
-            let (scale, cycles, seed, out) = fig_args(&parsed.flags)?;
-            let sets = experiments::datasets(seed, scale);
-            let panels = experiments::fig3::run_figure(&sets, cycles, seed);
-            experiments::fig3::to_csv(&panels, &out).map_err(|e| e.to_string())?;
-            eprintln!("wrote {} panels to {}", panels.len(), out.display());
+            let a = fig_args(&parsed.flags)?;
+            let sets = experiments::datasets(a.seed, a.scale);
+            let panels = experiments::fig3::run_figure_threads(&sets, a.cycles, a.seed, a.threads);
+            experiments::fig3::to_csv(&panels, &a.out).map_err(|e| e.to_string())?;
+            eprintln!("wrote {} panels to {}", panels.len(), a.out.display());
+            Ok(())
+        }
+        "sweep" => {
+            let a = fig_args(&parsed.flags)?;
+            let replicates: u64 = parsed.flags.get("replicates").map_or(Ok(1), |s| {
+                s.parse().map_err(|_| format!("bad replicates {s:?}"))
+            })?;
+            let coalesce: u64 = parsed.flags.get("coalesce").map_or(Ok(0), |s| {
+                s.parse().map_err(|_| format!("bad coalesce {s:?}"))
+            })?;
+            let mut cfg =
+                sweep::SweepConfig::paper_grid(a.scale, a.cycles.unwrap_or(200), a.seed);
+            cfg.replicates = replicates.max(1);
+            cfg.threads = a.threads;
+            cfg.exec = match parsed.flags.get("mode").map(String::as_str) {
+                None | Some("microbatch") => ExecMode::MicroBatch { coalesce },
+                Some("scalar") => ExecMode::Scalar,
+                Some(other) => return Err(format!("bad mode {other:?}")),
+            };
+            eprintln!(
+                "sweep: 3 datasets x {} variants x {} scenarios x {} replicates on {} threads",
+                cfg.variants.len(),
+                cfg.failures.len(),
+                cfg.replicates,
+                cfg.threads
+            );
+            let cells = sweep::run_grid(&cfg);
+            let mut t = crate::util::benchkit::Table::new(&[
+                "dataset", "variant", "failures", "rep", "seed", "final err", "msgs",
+            ]);
+            for c in &cells {
+                t.row(&[
+                    c.dataset.clone(),
+                    c.variant.name().to_string(),
+                    if c.failures { "extreme" } else { "none" }.to_string(),
+                    c.replicate.to_string(),
+                    format!("{:#x}", c.seed),
+                    format!("{:.4}", c.curve.final_error()),
+                    c.stats.messages_sent.to_string(),
+                ]);
+            }
+            t.print();
+            sweep::to_csv(&cells, &a.out).map_err(|e| e.to_string())?;
+            eprintln!("wrote {} sweep cells to {}", cells.len(), a.out.display());
             Ok(())
         }
         "info" => {
@@ -272,5 +341,29 @@ mod tests {
         ]))
         .unwrap();
         run_command(&p).unwrap();
+    }
+
+    #[test]
+    fn tiny_scalar_mode_run() {
+        let p = parse_args(&s(&[
+            "run", "--dataset", "urls", "--scale", "0.005", "--cycles", "3",
+            "--eval_peers", "4", "--mode", "scalar",
+        ]))
+        .unwrap();
+        run_command(&p).unwrap();
+    }
+
+    #[test]
+    fn tiny_sweep_end_to_end() {
+        let dir = std::env::temp_dir().join("golf_cli_sweep_test");
+        let p = parse_args(&s(&[
+            "sweep", "--scale", "0.005", "--cycles", "3", "--threads", "2",
+            "--out-dir", dir.to_str().unwrap(),
+        ]))
+        .unwrap();
+        run_command(&p).unwrap();
+        assert!(dir.join("sweep_urls_nofail.csv").exists());
+        assert!(dir.join("sweep_urls_af.csv").exists());
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -17,13 +17,15 @@
 //! eval_peers = 100
 //! voting = false
 //! similarity = false
-//! backend = event         ; event | batched-native | batched-pjrt
+//! backend = event         ; event | event-pjrt | batched-native | batched-pjrt
+//! mode = microbatch       ; microbatch | scalar (event-driven stepping)
+//! coalesce = 0            ; micro-batch coalescing window in ticks
 //! ```
 
 use crate::data::dataset::Dataset;
 use crate::data::synthetic::{reuters_like, spambase_like, urls_like, Scale};
 use crate::gossip::create_model::Variant;
-use crate::gossip::protocol::ProtocolConfig;
+use crate::gossip::protocol::{ExecMode, ProtocolConfig};
 use crate::learning::Learner;
 use crate::p2p::overlay::SamplerConfig;
 use std::collections::HashMap;
@@ -33,6 +35,8 @@ pub mod ini;
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum BackendChoice {
     Event,
+    /// event-driven semantics, micro-batches executed through PJRT
+    EventPjrt,
     BatchedNative,
     BatchedPjrt,
 }
@@ -41,6 +45,7 @@ impl BackendChoice {
     pub fn parse(s: &str) -> Option<Self> {
         match s {
             "event" => Some(BackendChoice::Event),
+            "event-pjrt" => Some(BackendChoice::EventPjrt),
             "batched-native" => Some(BackendChoice::BatchedNative),
             "batched-pjrt" => Some(BackendChoice::BatchedPjrt),
             _ => None,
@@ -50,6 +55,7 @@ impl BackendChoice {
     pub fn name(&self) -> &'static str {
         match self {
             BackendChoice::Event => "event",
+            BackendChoice::EventPjrt => "event-pjrt",
             BackendChoice::BatchedNative => "batched-native",
             BackendChoice::BatchedPjrt => "batched-pjrt",
         }
@@ -73,6 +79,10 @@ pub struct ExperimentSpec {
     pub voting: bool,
     pub similarity: bool,
     pub backend: BackendChoice,
+    /// event-driven stepping mode: "microbatch" (default) or "scalar"
+    pub mode: String,
+    /// micro-batch coalescing window in ticks (0 = exact-timestamp batching)
+    pub coalesce: u64,
 }
 
 impl Default for ExperimentSpec {
@@ -93,6 +103,8 @@ impl Default for ExperimentSpec {
             voting: false,
             similarity: false,
             backend: BackendChoice::Event,
+            mode: "microbatch".into(),
+            coalesce: 0,
         }
     }
 }
@@ -141,6 +153,11 @@ impl ExperimentSpec {
                     self.backend = BackendChoice::parse(v)
                         .ok_or(format!("bad backend {v:?}"))?
                 }
+                "mode" => match v.as_str() {
+                    "scalar" | "microbatch" => self.mode = v.clone(),
+                    _ => return Err(format!("bad mode {v:?}")),
+                },
+                "coalesce" => self.coalesce = parse(v, k)?,
                 _ => return Err(format!("unknown key {k:?}")),
             }
         }
@@ -176,6 +193,11 @@ impl ExperimentSpec {
         cfg.eval.n_peers = self.eval_peers;
         cfg.eval.voting = self.voting;
         cfg.eval.similarity = self.similarity;
+        cfg.exec = match self.mode.as_str() {
+            "scalar" => ExecMode::Scalar,
+            "microbatch" => ExecMode::MicroBatch { coalesce: self.coalesce },
+            other => return Err(format!("bad mode {other:?}")),
+        };
         if self.failures {
             cfg = cfg.with_extreme_failures();
         }
@@ -253,6 +275,30 @@ backend = batched-native
             let ds = spec.build_dataset().unwrap();
             assert_eq!(ds.name, name);
         }
+    }
+
+    #[test]
+    fn exec_mode_keys_map_to_protocol_config() {
+        let mut kv = HashMap::new();
+        kv.insert("mode".to_string(), "scalar".to_string());
+        let mut spec = ExperimentSpec { scale: 0.01, ..Default::default() };
+        spec.apply(&kv).unwrap();
+        assert_eq!(spec.protocol_config().unwrap().exec, ExecMode::Scalar);
+
+        let mut kv = HashMap::new();
+        kv.insert("mode".to_string(), "microbatch".to_string());
+        kv.insert("coalesce".to_string(), "250".to_string());
+        let mut spec = ExperimentSpec { scale: 0.01, ..Default::default() };
+        spec.apply(&kv).unwrap();
+        assert_eq!(
+            spec.protocol_config().unwrap().exec,
+            ExecMode::MicroBatch { coalesce: 250 }
+        );
+
+        let mut kv = HashMap::new();
+        kv.insert("mode".to_string(), "warp".to_string());
+        assert!(ExperimentSpec::default().apply(&kv).is_err());
+        assert_eq!(BackendChoice::parse("event-pjrt"), Some(BackendChoice::EventPjrt));
     }
 
     #[test]

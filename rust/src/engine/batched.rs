@@ -1,29 +1,31 @@
 //! Cycle-synchronous batched driver: the same gossip-learning protocol as
 //! gossip/protocol.rs, but with all per-node CREATEMODEL steps of a cycle
-//! executed as batched engine ops — the vectorized hot path that the PJRT
-//! backend (and a future TPU deployment) needs.
+//! executed as batched engine ops — the maximally-vectorized hot path that a
+//! future TPU deployment wants when exact event timing is not needed.
 //!
 //! Semantics relative to the event-driven simulator: sends are synchronized
 //! at cycle boundaries (no Δ jitter within a cycle) and message delay is
-//! quantized to whole cycles.  Deliveries landing at the same node in the
-//! same cycle are processed in arrival order through sequential sub-rounds,
-//! so the per-node state machine (cache/lastModel chaining) is preserved
-//! exactly.  DESIGN.md §2 discusses the tradeoff; the engine-parity tests
-//! pin native and PJRT backends to each other on identical schedules.
+//! quantized to whole cycles.  Per-node state lives in the same
+//! structure-of-arrays [`ModelStore`] the event-driven simulator uses
+//! (DESIGN.md §5).  When one node receives several messages in a cycle they
+//! are chained in arrival order: message k's `lastModel` input is message
+//! k-1's weights, which is known before stepping, so the whole cycle still
+//! executes as flat batches.  DESIGN.md §2 discusses the tradeoff; the
+//! engine-parity tests pin native and PJRT backends to each other on
+//! identical schedules.
 
 use crate::data::dataset::Dataset;
-use crate::engine::{Backend, LearnerKind, StepBatch, StepOp};
+use crate::engine::{Backend, StepBatch, StepOp, MAX_BATCH_ROWS};
 use crate::eval::tracker::{point_from_errors, Curve};
 use crate::eval::{self};
 use crate::gossip::protocol::{ProtocolConfig, RunResult, RunStats};
-use crate::learning::Learner;
+use crate::gossip::state::ModelStore;
 use crate::p2p::overlay::PeerSampler;
 use crate::sim::churn::ChurnSchedule;
 use crate::util::rng::Rng;
 use anyhow::Result;
+use std::collections::HashMap;
 
-/// Maximum rows per engine call (matches the largest compiled bucket).
-const MAX_BATCH: usize = 1024;
 /// Test-set rows per eval chunk (matches the eval artifact bucket).
 const EVAL_CHUNK: usize = 1024;
 /// Models per eval call (matches the eval artifact bucket).
@@ -42,42 +44,18 @@ pub struct BatchedSim<'a, B: Backend> {
     data: &'a Dataset,
     backend: &'a mut B,
     op: StepOp,
-    // per-node state (flat [n, d])
-    freshest_w: Vec<f32>,
-    freshest_t: Vec<f32>,
-    last_w: Vec<f32>,
-    last_t: Vec<f32>,
+    /// unified SoA per-node model state, shared with the event-driven path
+    store: ModelStore,
     dense_x: Vec<f32>, // local examples, densified once
     rng: Rng,
     stats: RunStats,
-}
-
-fn learner_op(l: &Learner) -> StepOp {
-    match l {
-        Learner::Pegasos(p) => StepOp {
-            learner: LearnerKind::Pegasos,
-            variant: crate::gossip::Variant::Mu, // patched by caller
-            hp: p.lambda,
-        },
-        Learner::Adaline(a) => StepOp {
-            learner: LearnerKind::Adaline,
-            variant: crate::gossip::Variant::Mu,
-            hp: a.eta,
-        },
-        Learner::LogReg(l) => StepOp {
-            learner: LearnerKind::LogReg,
-            variant: crate::gossip::Variant::Mu,
-            hp: l.lambda,
-        },
-    }
 }
 
 impl<'a, B: Backend> BatchedSim<'a, B> {
     pub fn new(cfg: ProtocolConfig, data: &'a Dataset, backend: &'a mut B) -> Self {
         let n = data.n_train();
         let d = data.d();
-        let mut op = learner_op(&cfg.learner);
-        op.variant = cfg.variant;
+        let op = StepOp::for_protocol(&cfg.learner, cfg.variant);
         let mut dense_x = vec![0.0f32; n * d];
         for i in 0..n {
             data.train.row(i).write_dense(&mut dense_x[i * d..(i + 1) * d]);
@@ -85,10 +63,7 @@ impl<'a, B: Backend> BatchedSim<'a, B> {
         let rng = Rng::new(cfg.seed);
         BatchedSim {
             op,
-            freshest_w: vec![0.0; n * d],
-            freshest_t: vec![0.0; n],
-            last_w: vec![0.0; n * d],
-            last_t: vec![0.0; n],
+            store: ModelStore::new(n, d),
             dense_x,
             rng,
             stats: RunStats::default(),
@@ -156,15 +131,15 @@ impl<'a, B: Backend> BatchedSim<'a, B> {
                 let delay_cycles = delay_ticks / delta; // quantized
                 pending.push(PendingMsg {
                     dst,
-                    w: self.freshest_w[node * d..(node + 1) * d].to_vec(),
-                    t: self.freshest_t[node],
+                    w: self.store.freshest(node).to_vec(),
+                    t: self.store.freshest_t(node),
                     arrival_cycle: cycle + delay_cycles,
                     seq,
                 });
                 seq += 1;
             }
 
-            // -------- deliveries due this cycle, grouped by destination
+            // -------- deliveries due this cycle, in arrival (seq) order
             let mut due: Vec<PendingMsg> = Vec::new();
             pending.retain_mut(|msg| {
                 if msg.arrival_cycle <= cycle {
@@ -180,7 +155,9 @@ impl<'a, B: Backend> BatchedSim<'a, B> {
                     true
                 }
             });
-            due.sort_by_key(|m| (m.dst, m.seq));
+            // `pending` is appended in send order and `retain_mut` preserves
+            // relative order, so `due` is already in arrival (seq) order
+            debug_assert!(due.windows(2).all(|w| w[0].seq <= w[1].seq));
 
             // offline receivers lose their messages
             due.retain(|m| {
@@ -192,48 +169,43 @@ impl<'a, B: Backend> BatchedSim<'a, B> {
                 }
             });
 
-            // sub-rounds: the k-th message of each node forms round k
-            let mut rounds: Vec<Vec<PendingMsg>> = Vec::new();
-            {
-                let mut k_of_dst: std::collections::HashMap<usize, usize> =
-                    std::collections::HashMap::new();
-                for m in due {
-                    let k = k_of_dst.entry(m.dst).or_insert(0);
-                    if rounds.len() <= *k {
-                        rounds.push(Vec::new());
+            // single pass: per-node chaining is wired through the previous
+            // message's weights, so rows stay independent within a batch
+            let mut prev_in_cycle: HashMap<usize, usize> = HashMap::new();
+            let mut start = 0;
+            while start < due.len() {
+                let end = (start + MAX_BATCH_ROWS).min(due.len());
+                let b = end - start;
+                batch.resize(b, d);
+                for (i, m) in due[start..end].iter().enumerate() {
+                    let dst = m.dst;
+                    let r = i * d..(i + 1) * d;
+                    batch.w1[r.clone()].copy_from_slice(&m.w);
+                    batch.t1[i] = m.t;
+                    match prev_in_cycle.insert(dst, start + i) {
+                        Some(prev) => {
+                            batch.w2[r.clone()].copy_from_slice(&due[prev].w);
+                            batch.t2[i] = due[prev].t;
+                        }
+                        None => {
+                            batch.w2[r.clone()].copy_from_slice(self.store.last(dst));
+                            batch.t2[i] = self.store.last_t(dst);
+                        }
                     }
-                    rounds[*k].push(m);
-                    *k += 1;
+                    batch.x[r].copy_from_slice(&self.dense_x[dst * d..(dst + 1) * d]);
+                    batch.y[i] = self.data.train_y[dst];
                 }
-            }
-
-            for round in rounds {
-                for chunk in round.chunks(MAX_BATCH) {
-                    let b = chunk.len();
-                    batch.resize(b, d);
-                    for (i, m) in chunk.iter().enumerate() {
-                        let dst = m.dst;
-                        batch.w1[i * d..(i + 1) * d].copy_from_slice(&m.w);
-                        batch.t1[i] = m.t;
-                        batch.w2[i * d..(i + 1) * d]
-                            .copy_from_slice(&self.last_w[dst * d..(dst + 1) * d]);
-                        batch.t2[i] = self.last_t[dst];
-                        batch.x[i * d..(i + 1) * d]
-                            .copy_from_slice(&self.dense_x[dst * d..(dst + 1) * d]);
-                        batch.y[i] = self.data.train_y[dst];
-                    }
-                    self.backend.step(&self.op, &mut batch)?;
-                    self.stats.updates_applied += b as u64;
-                    for (i, m) in chunk.iter().enumerate() {
-                        let dst = m.dst;
-                        self.freshest_w[dst * d..(dst + 1) * d]
-                            .copy_from_slice(&batch.out_w[i * d..(i + 1) * d]);
-                        self.freshest_t[dst] = batch.out_t[i];
-                        // lastModel <- incoming (Algorithm 1 line 9)
-                        self.last_w[dst * d..(dst + 1) * d].copy_from_slice(&m.w);
-                        self.last_t[dst] = m.t;
-                    }
+                self.backend.step(&self.op, &mut batch)?;
+                self.stats.engine_calls += 1;
+                self.stats.updates_applied += b as u64;
+                for (i, m) in due[start..end].iter().enumerate() {
+                    let dst = m.dst;
+                    self.store
+                        .set_freshest(dst, &batch.out_w[i * d..(i + 1) * d], batch.out_t[i]);
+                    // lastModel <- incoming (Algorithm 1 line 9)
+                    self.store.set_last(dst, &m.w, m.t);
                 }
+                start = end;
             }
 
             // -------- measurement
@@ -260,12 +232,11 @@ impl<'a, B: Backend> BatchedSim<'a, B> {
         let mut errs = vec![0.0f64; eval_peers.len()];
 
         let mut xchunk = vec![0.0f32; EVAL_CHUNK.min(n_test) * d];
-        for mgroup in eval_peers.chunks(EVAL_MODELS) {
+        for (group_idx, mgroup) in eval_peers.chunks(EVAL_MODELS).enumerate() {
             let m = mgroup.len();
             let mut w = vec![0.0f32; m * d];
             for (j, &p) in mgroup.iter().enumerate() {
-                w[j * d..(j + 1) * d]
-                    .copy_from_slice(&self.freshest_w[p * d..(p + 1) * d]);
+                w[j * d..(j + 1) * d].copy_from_slice(self.store.freshest(p));
             }
             let mut counts = vec![0.0f64; m];
             let mut row = 0;
@@ -288,11 +259,8 @@ impl<'a, B: Backend> BatchedSim<'a, B> {
                 }
                 row += rows;
             }
-            let base = mgroup.as_ptr() as usize;
-            let _ = base;
-            for (j, &_p) in mgroup.iter().enumerate() {
-                let idx = eval_peers.iter().position(|&q| q == mgroup[j]).unwrap();
-                errs[idx] = counts[j] / n_test as f64;
+            for (j, c) in counts.iter().enumerate() {
+                errs[group_idx * EVAL_MODELS + j] = c / n_test as f64;
             }
         }
         Ok(errs)

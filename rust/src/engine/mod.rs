@@ -19,7 +19,13 @@ pub mod native;
 pub mod pjrt;
 
 use crate::gossip::create_model::Variant;
+use crate::learning::Learner;
 use anyhow::Result;
+
+/// Maximum rows per engine call — matches the largest compiled PJRT shape
+/// bucket.  Shared by the cycle-synchronous driver and the event-driven
+/// micro-batch flush so both chunk identically.
+pub const MAX_BATCH_ROWS: usize = 1024;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum LearnerKind {
@@ -47,6 +53,17 @@ impl StepOp {
         };
         format!("{}_{}", l, self.variant.name())
     }
+
+    /// The op a protocol run executes: learner kind + hyperparameter from the
+    /// [`Learner`] enum, combined with the CREATEMODEL variant.  Shared by the
+    /// event-driven micro-batched simulator and the cycle-synchronous driver.
+    pub fn for_protocol(learner: &Learner, variant: Variant) -> StepOp {
+        match learner {
+            Learner::Pegasos(p) => StepOp { learner: LearnerKind::Pegasos, variant, hp: p.lambda },
+            Learner::Adaline(a) => StepOp { learner: LearnerKind::Adaline, variant, hp: a.eta },
+            Learner::LogReg(l) => StepOp { learner: LearnerKind::LogReg, variant, hp: l.lambda },
+        }
+    }
 }
 
 /// Reusable batch buffers (flat row-major `[b, d]` matrices plus `[b]`
@@ -66,7 +83,18 @@ pub struct StepBatch {
 }
 
 impl StepBatch {
+    /// Resize the buffers for a `[b, d]` batch.
+    ///
+    /// Callers always refill `w1`/`t1`/`x`/`y` for every live row, but `w2`/
+    /// `t2` are only filled for merge variants and `out_*` only written by
+    /// the backend.  `Vec::resize` zero-fills grown elements but keeps the
+    /// surviving prefix, so after shrinking `b` (or reflowing `d`) those
+    /// buffers would still hold rows from an earlier, larger batch.  Any
+    /// geometry change therefore clears them outright, so no engine call can
+    /// observe stale data through an unfilled optional input or a read-back
+    /// of an unwritten output row.
     pub fn resize(&mut self, b: usize, d: usize) {
+        let changed = self.b != b || self.d != d;
         self.b = b;
         self.d = d;
         self.w1.resize(b * d, 0.0);
@@ -77,6 +105,12 @@ impl StepBatch {
         self.y.resize(b, 0.0);
         self.out_w.resize(b * d, 0.0);
         self.out_t.resize(b, 0.0);
+        if changed {
+            self.w2.fill(0.0);
+            self.t2.fill(0.0);
+            self.out_w.fill(0.0);
+            self.out_t.fill(0.0);
+        }
     }
 }
 
@@ -99,4 +133,62 @@ pub trait Backend {
         w: &[f32],
         m: usize,
     ) -> Result<Vec<f32>>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fill(sb: &mut StepBatch, v: f32) {
+        for buf in [&mut sb.w1, &mut sb.w2, &mut sb.x, &mut sb.out_w] {
+            buf.fill(v);
+        }
+        for buf in [&mut sb.t1, &mut sb.t2, &mut sb.y, &mut sb.out_t] {
+            buf.fill(v);
+        }
+    }
+
+    /// Regression: shrinking `b` between engine calls and growing it again
+    /// must not resurrect stale `w2`/`t2`/`out_*` rows from the larger batch.
+    #[test]
+    fn resize_clears_stale_optional_and_output_rows() {
+        let mut sb = StepBatch::default();
+        sb.resize(4, 3);
+        fill(&mut sb, 7.0);
+        sb.resize(2, 3); // shrink
+        assert_eq!(sb.w2.len(), 6);
+        assert!(sb.w2.iter().all(|&v| v == 0.0), "w2 stale after shrink");
+        assert!(sb.t2.iter().all(|&v| v == 0.0), "t2 stale after shrink");
+        assert!(sb.out_w.iter().all(|&v| v == 0.0), "out_w stale after shrink");
+        assert!(sb.out_t.iter().all(|&v| v == 0.0), "out_t stale after shrink");
+        fill(&mut sb, 9.0);
+        sb.resize(4, 3); // grow back: rows 2..4 must not contain the old 7s
+        assert!(sb.w2.iter().all(|&v| v == 0.0), "w2 stale after regrow");
+        assert!(sb.out_w.iter().all(|&v| v == 0.0), "out_w stale after regrow");
+    }
+
+    #[test]
+    fn resize_same_geometry_keeps_buffers() {
+        let mut sb = StepBatch::default();
+        sb.resize(2, 2);
+        fill(&mut sb, 3.0);
+        sb.resize(2, 2); // no-op geometry: caller-visible state preserved
+        assert!(sb.w1.iter().all(|&v| v == 3.0));
+        assert!(sb.w2.iter().all(|&v| v == 3.0));
+    }
+
+    #[test]
+    fn for_protocol_maps_learner_and_hp() {
+        let op = StepOp::for_protocol(&Learner::pegasos(0.25), Variant::Mu);
+        assert_eq!(op.learner, LearnerKind::Pegasos);
+        assert_eq!(op.variant, Variant::Mu);
+        assert_eq!(op.hp, 0.25);
+        assert_eq!(op.op_name(), "pegasos_mu");
+        let op = StepOp::for_protocol(&Learner::adaline(0.1), Variant::Rw);
+        assert_eq!(op.learner, LearnerKind::Adaline);
+        assert_eq!(op.hp, 0.1);
+        let op = StepOp::for_protocol(&Learner::logreg(0.01), Variant::Um);
+        assert_eq!(op.learner, LearnerKind::LogReg);
+        assert_eq!(op.op_name(), "logreg_um");
+    }
 }

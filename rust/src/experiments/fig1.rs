@@ -1,11 +1,17 @@
 //! Figure 1: prediction error vs. gossip cycle (log x), without failures
 //! (upper row) and under the extreme failure scenario (lower row), for
 //! the sequential Pegasos, P2PegasosRW, P2PegasosMU, WB1 and WB2.
+//!
+//! All curves of the figure are independent simulation runs; they execute in
+//! parallel through the [`sweep`] job pool.
 
-use crate::baselines::{sequential, weighted_bagging::{self, Bagging}};
-use crate::data::dataset::Dataset;
+use crate::baselines::{
+    sequential,
+    weighted_bagging::{self, Bagging},
+};
 use crate::eval::tracker::Curve;
 use crate::experiments::common::ExpDataset;
+use crate::experiments::sweep;
 use crate::gossip::create_model::Variant;
 use crate::gossip::protocol::{run, ProtocolConfig};
 use crate::learning::Learner;
@@ -16,7 +22,13 @@ pub struct Fig1Panel {
     pub curves: Vec<Curve>,
 }
 
-fn gossip_cfg(e: &ExpDataset, variant: Variant, cycles: u64, failures: bool, seed: u64) -> ProtocolConfig {
+fn gossip_cfg(
+    e: &ExpDataset,
+    variant: Variant,
+    cycles: u64,
+    failures: bool,
+    seed: u64,
+) -> ProtocolConfig {
     let mut cfg = ProtocolConfig::paper_default(cycles);
     cfg.variant = variant;
     cfg.learner = Learner::pegasos(e.lambda);
@@ -27,30 +39,50 @@ fn gossip_cfg(e: &ExpDataset, variant: Variant, cycles: u64, failures: bool, see
     cfg
 }
 
-/// One dataset panel (one column of Fig. 1).
-pub fn panel(e: &ExpDataset, cycles: u64, failures: bool, seed: u64) -> Fig1Panel {
+type CurveJob<'a> = Box<dyn Fn() -> Curve + Sync + 'a>;
+
+/// The five independent runs of one panel, as parallelizable jobs (curve
+/// order: pegasos, wb1, wb2, p2pegasos-rw, p2pegasos-mu).
+fn curve_jobs<'a>(
+    e: &'a ExpDataset,
+    cycles: u64,
+    failures: bool,
+    seed: u64,
+) -> Vec<CurveJob<'a>> {
     let learner = Learner::pegasos(e.lambda);
-    let mut curves = Vec::new();
+    let mut jobs: Vec<CurveJob<'a>> = Vec::new();
 
     // baselines are failure-free references in both rows (they model ideal
     // central resources, not the P2P network)
-    let mut c = sequential::curve(&e.ds, &learner, cycles, seed);
-    c.label = "pegasos".into();
-    curves.push(c);
-    let mut c = weighted_bagging::curve(&e.ds, &learner, Bagging::Wb1, wb_cycles(cycles), seed);
-    c.label = "wb1".into();
-    curves.push(c);
-    let mut c = weighted_bagging::curve(&e.ds, &learner, Bagging::Wb2, wb_cycles(cycles), seed);
-    c.label = "wb2".into();
-    curves.push(c);
-
+    jobs.push(Box::new(move || {
+        let mut c = sequential::curve(&e.ds, &learner, cycles, seed);
+        c.label = "pegasos".into();
+        c
+    }));
+    jobs.push(Box::new(move || {
+        let mut c = weighted_bagging::curve(&e.ds, &learner, Bagging::Wb1, wb_cycles(cycles), seed);
+        c.label = "wb1".into();
+        c
+    }));
+    jobs.push(Box::new(move || {
+        let mut c = weighted_bagging::curve(&e.ds, &learner, Bagging::Wb2, wb_cycles(cycles), seed);
+        c.label = "wb2".into();
+        c
+    }));
     for variant in [Variant::Rw, Variant::Mu] {
-        let res = run(gossip_cfg(e, variant, cycles, failures, seed), &e.ds);
-        let mut c = res.curve;
-        c.label = format!("p2pegasos-{}", variant.name());
-        curves.push(c);
+        jobs.push(Box::new(move || {
+            let res = run(gossip_cfg(e, variant, cycles, failures, seed), &e.ds);
+            let mut c = res.curve;
+            c.label = format!("p2pegasos-{}", variant.name());
+            c
+        }));
     }
+    jobs
+}
 
+/// One dataset panel (one column of Fig. 1), runs parallelized.
+pub fn panel(e: &ExpDataset, cycles: u64, failures: bool, seed: u64) -> Fig1Panel {
+    let curves = sweep::run_jobs(curve_jobs(e, cycles, failures, seed), sweep::thread_count());
     Fig1Panel { dataset: e.ds.name.clone(), failures, curves }
 }
 
@@ -62,14 +94,28 @@ fn wb_cycles(cycles: u64) -> u64 {
 
 /// Run the full figure: every dataset x {no failure, all failures}.
 pub fn run_figure(sets: &[ExpDataset], cycles_override: Option<u64>, seed: u64) -> Vec<Fig1Panel> {
-    let mut panels = Vec::new();
+    run_figure_threads(sets, cycles_override, seed, sweep::thread_count())
+}
+
+/// Same, with an explicit worker count: every curve of every panel is one job
+/// in a single flat pool.
+pub fn run_figure_threads(
+    sets: &[ExpDataset],
+    cycles_override: Option<u64>,
+    seed: u64,
+    threads: usize,
+) -> Vec<Fig1Panel> {
+    let mut groups: Vec<((String, bool), Vec<CurveJob>)> = Vec::new();
     for e in sets {
         let cycles = cycles_override.unwrap_or(e.cycles);
         for failures in [false, true] {
-            panels.push(panel(e, cycles, failures, seed));
+            groups.push(((e.ds.name.clone(), failures), curve_jobs(e, cycles, failures, seed)));
         }
     }
-    panels
+    sweep::run_grouped(groups, threads)
+        .into_iter()
+        .map(|((dataset, failures), curves)| Fig1Panel { dataset, failures, curves })
+        .collect()
 }
 
 /// Convergence-ordering summary used by tests and the bench report: cycles
@@ -93,9 +139,6 @@ pub fn to_csv(panels: &[Fig1Panel], dir: &std::path::Path) -> std::io::Result<()
     }
     Ok(())
 }
-
-#[allow(dead_code)]
-fn _dataset_unused(_: &Dataset) {}
 
 #[cfg(test)]
 mod tests {
@@ -125,6 +168,25 @@ mod tests {
             auc("p2pegasos-mu"),
             auc("p2pegasos-rw")
         );
+    }
+
+    #[test]
+    fn parallel_figure_matches_serial() {
+        let sets = datasets(4, 0.01);
+        let serial = run_figure_threads(&sets[2..3], Some(8), 5, 1);
+        let parallel = run_figure_threads(&sets[2..3], Some(8), 5, 4);
+        assert_eq!(serial.len(), parallel.len());
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.dataset, b.dataset);
+            assert_eq!(a.failures, b.failures);
+            assert_eq!(a.curves.len(), b.curves.len());
+            for (ca, cb) in a.curves.iter().zip(&b.curves) {
+                assert_eq!(ca.label, cb.label);
+                let ea: Vec<f64> = ca.points.iter().map(|p| p.err_mean).collect();
+                let eb: Vec<f64> = cb.points.iter().map(|p| p.err_mean).collect();
+                assert_eq!(ea, eb, "thread count changed curve {}", ca.label);
+            }
+        }
     }
 
     #[test]

@@ -1,10 +1,11 @@
 //! Figure 2: P2PegasosMU vs P2PegasosUM vs PERFECT MATCHING — prediction
 //! error (upper row) and mean pairwise cosine model similarity (lower row),
-//! failure-free.
+//! failure-free.  Runs execute in parallel through the [`sweep`] job pool.
 
 use crate::baselines::perfect_matching::run_perfect_matching;
 use crate::eval::tracker::Curve;
 use crate::experiments::common::ExpDataset;
+use crate::experiments::sweep;
 use crate::gossip::create_model::Variant;
 use crate::gossip::protocol::{run, ProtocolConfig};
 use crate::learning::Learner;
@@ -23,26 +24,50 @@ fn cfg(e: &ExpDataset, variant: Variant, cycles: u64, seed: u64) -> ProtocolConf
     cfg
 }
 
-pub fn panel(e: &ExpDataset, cycles: u64, seed: u64) -> Fig2Panel {
-    let mut curves = Vec::new();
+type CurveJob<'a> = Box<dyn Fn() -> Curve + Sync + 'a>;
 
+/// Curve order: p2pegasos-mu, p2pegasos-um, p2pegasos-mu-matching.
+fn curve_jobs<'a>(e: &'a ExpDataset, cycles: u64, seed: u64) -> Vec<CurveJob<'a>> {
+    let mut jobs: Vec<CurveJob<'a>> = Vec::new();
     for variant in [Variant::Mu, Variant::Um] {
-        let res = run(cfg(e, variant, cycles, seed), &e.ds);
-        let mut c = res.curve;
-        c.label = format!("p2pegasos-{}", variant.name());
-        curves.push(c);
+        jobs.push(Box::new(move || {
+            let res = run(cfg(e, variant, cycles, seed), &e.ds);
+            let mut c = res.curve;
+            c.label = format!("p2pegasos-{}", variant.name());
+            c
+        }));
     }
-    let res = run_perfect_matching(cfg(e, Variant::Mu, cycles, seed), &e.ds);
-    let mut c = res.curve;
-    c.label = "p2pegasos-mu-matching".into();
-    curves.push(c);
+    jobs.push(Box::new(move || {
+        let res = run_perfect_matching(cfg(e, Variant::Mu, cycles, seed), &e.ds);
+        let mut c = res.curve;
+        c.label = "p2pegasos-mu-matching".into();
+        c
+    }));
+    jobs
+}
 
+pub fn panel(e: &ExpDataset, cycles: u64, seed: u64) -> Fig2Panel {
+    let curves = sweep::run_jobs(curve_jobs(e, cycles, seed), sweep::thread_count());
     Fig2Panel { dataset: e.ds.name.clone(), curves }
 }
 
 pub fn run_figure(sets: &[ExpDataset], cycles_override: Option<u64>, seed: u64) -> Vec<Fig2Panel> {
-    sets.iter()
-        .map(|e| panel(e, cycles_override.unwrap_or(e.cycles), seed))
+    run_figure_threads(sets, cycles_override, seed, sweep::thread_count())
+}
+
+pub fn run_figure_threads(
+    sets: &[ExpDataset],
+    cycles_override: Option<u64>,
+    seed: u64,
+    threads: usize,
+) -> Vec<Fig2Panel> {
+    let groups: Vec<(String, Vec<CurveJob>)> = sets
+        .iter()
+        .map(|e| (e.ds.name.clone(), curve_jobs(e, cycles_override.unwrap_or(e.cycles), seed)))
+        .collect();
+    sweep::run_grouped(groups, threads)
+        .into_iter()
+        .map(|(dataset, curves)| Fig2Panel { dataset, curves })
         .collect()
 }
 

@@ -2,9 +2,11 @@
 //! P2PegasosRW and P2PegasosMU, without failures (upper row) and under the
 //! extreme failure scenario (lower row).  Curves carry both the
 //! freshest-model error (err_mean) and the voted error (err_vote).
+//! Runs execute in parallel through the [`sweep`] job pool.
 
 use crate::eval::tracker::Curve;
 use crate::experiments::common::ExpDataset;
+use crate::experiments::sweep;
 use crate::gossip::create_model::Variant;
 use crate::gossip::protocol::{run, ProtocolConfig};
 use crate::learning::Learner;
@@ -15,6 +17,38 @@ pub struct Fig3Panel {
     pub curves: Vec<Curve>,
 }
 
+type CurveJob<'a> = Box<dyn Fn() -> Curve + Sync + 'a>;
+
+/// Curve order: p2pegasos-rw, p2pegasos-mu.
+fn curve_jobs<'a>(
+    e: &'a ExpDataset,
+    cycles: u64,
+    failures: bool,
+    cache_size: usize,
+    seed: u64,
+) -> Vec<CurveJob<'a>> {
+    [Variant::Rw, Variant::Mu]
+        .into_iter()
+        .map(|variant| -> CurveJob<'a> {
+            Box::new(move || {
+                let mut cfg = ProtocolConfig::paper_default(cycles);
+                cfg.variant = variant;
+                cfg.learner = Learner::pegasos(e.lambda);
+                cfg.cache_size = cache_size;
+                cfg.eval.voting = true;
+                cfg.seed = seed;
+                if failures {
+                    cfg = cfg.with_extreme_failures();
+                }
+                let res = run(cfg, &e.ds);
+                let mut c = res.curve;
+                c.label = format!("p2pegasos-{}", variant.name());
+                c
+            })
+        })
+        .collect()
+}
+
 pub fn panel(
     e: &ExpDataset,
     cycles: u64,
@@ -22,45 +56,56 @@ pub fn panel(
     cache_size: usize,
     seed: u64,
 ) -> Fig3Panel {
-    let mut curves = Vec::new();
-    for variant in [Variant::Rw, Variant::Mu] {
-        let mut cfg = ProtocolConfig::paper_default(cycles);
-        cfg.variant = variant;
-        cfg.learner = Learner::pegasos(e.lambda);
-        cfg.cache_size = cache_size;
-        cfg.eval.voting = true;
-        cfg.seed = seed;
-        if failures {
-            cfg = cfg.with_extreme_failures();
-        }
-        let res = run(cfg, &e.ds);
-        let mut c = res.curve;
-        c.label = format!("p2pegasos-{}", variant.name());
-        curves.push(c);
-    }
+    let curves = sweep::run_jobs(
+        curve_jobs(e, cycles, failures, cache_size, seed),
+        sweep::thread_count(),
+    );
     Fig3Panel { dataset: e.ds.name.clone(), failures, curves }
 }
 
 pub fn run_figure(sets: &[ExpDataset], cycles_override: Option<u64>, seed: u64) -> Vec<Fig3Panel> {
-    let mut panels = Vec::new();
+    run_figure_threads(sets, cycles_override, seed, sweep::thread_count())
+}
+
+pub fn run_figure_threads(
+    sets: &[ExpDataset],
+    cycles_override: Option<u64>,
+    seed: u64,
+    threads: usize,
+) -> Vec<Fig3Panel> {
+    let mut groups: Vec<((String, bool), Vec<CurveJob>)> = Vec::new();
     for e in sets {
         let cycles = cycles_override.unwrap_or(e.cycles);
         for failures in [false, true] {
-            panels.push(panel(e, cycles, failures, 10, seed));
+            groups.push(((e.ds.name.clone(), failures), curve_jobs(e, cycles, failures, 10, seed)));
         }
     }
-    panels
+    sweep::run_grouped(groups, threads)
+        .into_iter()
+        .map(|((dataset, failures), curves)| Fig3Panel { dataset, failures, curves })
+        .collect()
 }
 
-/// Cache-size ablation (beyond the paper; DESIGN.md §8).
+/// Cache-size ablation (beyond the paper; DESIGN.md §8), one parallel run per
+/// cache size.
 pub fn cache_sweep(e: &ExpDataset, cycles: u64, sizes: &[usize], seed: u64) -> Vec<(usize, Curve)> {
-    sizes
-        .iter()
-        .map(|&s| {
-            let p = panel(e, cycles, false, s, seed);
-            (s, p.curves.into_iter().nth(1).unwrap()) // MU curve
-        })
-        .collect()
+    let curves = sweep::run_indexed(sizes.len(), sweep::thread_count(), |i| {
+        let p = panel_serial(e, cycles, false, sizes[i], seed);
+        p.curves.into_iter().nth(1).unwrap() // MU curve
+    });
+    sizes.iter().copied().zip(curves).collect()
+}
+
+/// Serial panel used inside already-parallel jobs (avoids nested pools).
+fn panel_serial(
+    e: &ExpDataset,
+    cycles: u64,
+    failures: bool,
+    cache_size: usize,
+    seed: u64,
+) -> Fig3Panel {
+    let curves = sweep::run_jobs(curve_jobs(e, cycles, failures, cache_size, seed), 1);
+    Fig3Panel { dataset: e.ds.name.clone(), failures, curves }
 }
 
 pub fn to_csv(panels: &[Fig3Panel], dir: &std::path::Path) -> std::io::Result<()> {

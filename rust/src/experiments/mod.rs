@@ -1,10 +1,16 @@
 //! Experiment drivers regenerating every table and figure of the paper's
 //! evaluation (Section VI).  Each bench target (`rust/benches/`) is a thin
 //! wrapper over these functions; DESIGN.md §3 is the index.
+//!
+//! All drivers fan their independent simulation runs across threads through
+//! [`sweep`], with deterministic per-run seeds — parallel and serial
+//! execution produce identical curves.
 pub mod common;
 pub mod fig1;
 pub mod fig2;
 pub mod fig3;
+pub mod sweep;
 pub mod table1;
 
 pub use common::{datasets, ExpDataset};
+pub use sweep::{run_grid, SweepCell, SweepConfig};

@@ -1,0 +1,286 @@
+//! Parallel experiment sweep runner (DESIGN.md §3).
+//!
+//! Every paper experiment decomposes into independent simulation runs — one
+//! per (dataset × variant × failure scenario × seed replicate) cell — so the
+//! natural scaling axis for the experiment layer is fanning those runs across
+//! threads.  This module provides:
+//!
+//! * [`run_indexed`] / [`run_jobs`] — a deterministic work-stealing job pool
+//!   on `std::thread::scope` (the offline crate set has no rayon).  Results
+//!   land in submission order regardless of thread interleaving, so parallel
+//!   and serial execution produce bit-identical output vectors.
+//! * [`run_grid`] — the Table-I grid sweep: each cell's seed is derived
+//!   deterministically from the base seed and the cell's identity
+//!   ([`crate::util::rng::derive_seed`]), never from execution order.
+//!
+//! fig1/fig2/fig3/table1 and the CLI all route their runs through this pool.
+
+use crate::eval::tracker::Curve;
+use crate::experiments::common::datasets;
+use crate::gossip::create_model::Variant;
+use crate::gossip::protocol::{run, ExecMode, ProtocolConfig, RunStats};
+use crate::learning::Learner;
+use crate::util::rng::derive_seed;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Worker count: `GOLF_THREADS` env override, else the machine's available
+/// parallelism.
+pub fn thread_count() -> usize {
+    std::env::var("GOLF_THREADS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        })
+        .max(1)
+}
+
+/// Run `f(0..n)` across `threads` workers; `results[i] == f(i)` in submission
+/// order.  Jobs are claimed from a shared atomic counter (cheap work
+/// stealing); panics in jobs propagate to the caller via the scope.
+pub fn run_indexed<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = threads.clamp(1, n.max(1));
+    if threads <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let results: Mutex<Vec<Option<T>>> = Mutex::new((0..n).map(|_| None).collect());
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let out = f(i);
+                results.lock().unwrap()[i] = Some(out);
+            });
+        }
+    });
+    results
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|o| o.expect("every job runs exactly once"))
+        .collect()
+}
+
+/// Run a list of heterogeneous jobs (boxed closures) through the pool,
+/// preserving submission order.
+pub fn run_jobs<'a, T: Send>(
+    jobs: Vec<Box<dyn Fn() -> T + Sync + 'a>>,
+    threads: usize,
+) -> Vec<T> {
+    let n = jobs.len();
+    run_indexed(n, threads, |i| (jobs[i])())
+}
+
+/// Run groups of jobs through one flat pool and reassemble the results per
+/// group (figure drivers: one group per panel, every curve one job).
+pub fn run_grouped<'a, M, T: Send>(
+    groups: Vec<(M, Vec<Box<dyn Fn() -> T + Sync + 'a>>)>,
+    threads: usize,
+) -> Vec<(M, Vec<T>)> {
+    let mut meta = Vec::with_capacity(groups.len());
+    let mut jobs = Vec::new();
+    for (m, j) in groups {
+        meta.push((m, j.len()));
+        jobs.extend(j);
+    }
+    let mut results = run_jobs(jobs, threads).into_iter();
+    meta.into_iter()
+        .map(|(m, k)| (m, results.by_ref().take(k).collect()))
+        .collect()
+}
+
+/// One sweep grid: the three Table-I datasets crossed with CREATEMODEL
+/// variants, failure scenarios and seed replicates.
+#[derive(Clone, Debug)]
+pub struct SweepConfig {
+    /// dataset size multiplier (1.0 = Table-I sizes)
+    pub scale: f64,
+    /// run length in gossip cycles
+    pub cycles: u64,
+    pub variants: Vec<Variant>,
+    /// failure scenarios: `false` = no failures, `true` = Section VI-A(i)
+    /// "all failures"
+    pub failures: Vec<bool>,
+    /// independent repetitions per cell
+    pub replicates: u64,
+    pub base_seed: u64,
+    pub eval_peers: usize,
+    pub exec: ExecMode,
+    pub threads: usize,
+}
+
+impl SweepConfig {
+    /// The paper's Section-VI grid shape: RW + MU, with and without the
+    /// extreme failure scenario, one replicate.
+    pub fn paper_grid(scale: f64, cycles: u64, base_seed: u64) -> Self {
+        SweepConfig {
+            scale,
+            cycles,
+            variants: vec![Variant::Rw, Variant::Mu],
+            failures: vec![false, true],
+            replicates: 1,
+            base_seed,
+            eval_peers: 100,
+            exec: ExecMode::default(),
+            threads: thread_count(),
+        }
+    }
+}
+
+/// One completed cell of a sweep grid.
+#[derive(Clone, Debug)]
+pub struct SweepCell {
+    pub dataset: String,
+    pub variant: Variant,
+    pub failures: bool,
+    pub replicate: u64,
+    /// the derived per-run seed actually used
+    pub seed: u64,
+    pub curve: Curve,
+    pub stats: RunStats,
+}
+
+/// Deterministic per-cell seed: independent of job scheduling and thread
+/// count.
+pub fn cell_seed(
+    base: u64,
+    dataset: &str,
+    variant: Variant,
+    failures: bool,
+    replicate: u64,
+) -> u64 {
+    derive_seed(base, &format!("{dataset}/{}/{failures}/r{replicate}", variant.name()))
+}
+
+/// Run the full grid in parallel.  Cells are returned in deterministic
+/// (dataset, variant, failures, replicate) order.
+pub fn run_grid(cfg: &SweepConfig) -> Vec<SweepCell> {
+    struct JobDesc {
+        ds_idx: usize,
+        variant: Variant,
+        failures: bool,
+        replicate: u64,
+    }
+
+    let sets = datasets(cfg.base_seed, cfg.scale);
+    let mut descs = Vec::new();
+    for ds_idx in 0..sets.len() {
+        for &variant in &cfg.variants {
+            for &failures in &cfg.failures {
+                for replicate in 0..cfg.replicates {
+                    descs.push(JobDesc { ds_idx, variant, failures, replicate });
+                }
+            }
+        }
+    }
+
+    run_indexed(descs.len(), cfg.threads, |i| {
+        let jd = &descs[i];
+        let e = &sets[jd.ds_idx];
+        let seed = cell_seed(cfg.base_seed, &e.ds.name, jd.variant, jd.failures, jd.replicate);
+        let mut pc = ProtocolConfig::paper_default(cfg.cycles);
+        pc.variant = jd.variant;
+        pc.learner = Learner::pegasos(e.lambda);
+        pc.eval.n_peers = cfg.eval_peers;
+        pc.seed = seed;
+        pc.exec = cfg.exec;
+        if jd.failures {
+            pc = pc.with_extreme_failures();
+        }
+        let res = run(pc, &e.ds);
+        SweepCell {
+            dataset: e.ds.name.clone(),
+            variant: jd.variant,
+            failures: jd.failures,
+            replicate: jd.replicate,
+            seed,
+            curve: res.curve,
+            stats: res.stats,
+        }
+    })
+}
+
+/// Write sweep results as CSV, one file per (dataset, failure scenario).
+pub fn to_csv(cells: &[SweepCell], dir: &std::path::Path) -> std::io::Result<()> {
+    use std::collections::BTreeMap;
+    let mut groups: BTreeMap<(String, bool), Vec<Curve>> = BTreeMap::new();
+    for c in cells {
+        let mut curve = c.curve.clone();
+        curve.label = format!("p2pegasos-{}-r{}", c.variant.name(), c.replicate);
+        groups.entry((c.dataset.clone(), c.failures)).or_default().push(curve);
+    }
+    for ((dataset, failures), curves) in groups {
+        let f = dir.join(format!(
+            "sweep_{dataset}_{}.csv",
+            if failures { "af" } else { "nofail" }
+        ));
+        crate::eval::csv::write_curves(&f, &curves)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_indexed_preserves_submission_order() {
+        let out = run_indexed(64, 8, |i| i * i);
+        assert_eq!(out, (0..64).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn run_indexed_serial_fallback() {
+        assert_eq!(run_indexed(3, 1, |i| i + 1), vec![1, 2, 3]);
+        assert!(run_indexed(0, 4, |i| i).is_empty());
+    }
+
+    #[test]
+    fn run_jobs_heterogeneous_closures() {
+        let base = vec![10usize, 20, 30];
+        let jobs: Vec<Box<dyn Fn() -> usize + Sync>> = base
+            .iter()
+            .map(|&v| Box::new(move || v + 1) as Box<dyn Fn() -> usize + Sync>)
+            .collect();
+        assert_eq!(run_jobs(jobs, 2), vec![11, 21, 31]);
+    }
+
+    #[test]
+    fn thread_count_positive() {
+        assert!(thread_count() >= 1);
+    }
+
+    #[test]
+    fn grid_enumerates_all_cells_in_order() {
+        let mut cfg = SweepConfig::paper_grid(0.01, 3, 7);
+        cfg.variants = vec![Variant::Mu];
+        cfg.failures = vec![false];
+        cfg.replicates = 2;
+        cfg.eval_peers = 5;
+        cfg.threads = 2;
+        let cells = run_grid(&cfg);
+        assert_eq!(cells.len(), 3 * 2); // 3 datasets x 2 replicates
+        assert_eq!(cells[0].dataset, "reuters");
+        assert_eq!(cells[0].replicate, 0);
+        assert_eq!(cells[1].replicate, 1);
+        assert_eq!(cells[2].dataset, "spambase");
+        for c in &cells {
+            assert!(!c.curve.points.is_empty());
+            assert_eq!(
+                c.seed,
+                cell_seed(7, &c.dataset, c.variant, c.failures, c.replicate)
+            );
+        }
+        // replicates are genuinely independent runs
+        assert_ne!(cells[0].seed, cells[1].seed);
+    }
+}

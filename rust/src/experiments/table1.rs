@@ -1,8 +1,10 @@
 //! Table I: dataset statistics and the sequential Pegasos baseline error
-//! after 20,000 iterations.
+//! after 20,000 iterations.  The per-dataset baselines are independent and
+//! run in parallel through the [`sweep`] job pool.
 
 use crate::baselines::sequential;
 use crate::experiments::common::ExpDataset;
+use crate::experiments::sweep;
 
 #[derive(Debug)]
 pub struct Table1Row {
@@ -17,21 +19,24 @@ pub struct Table1Row {
 }
 
 pub fn run(sets: &[ExpDataset], seed: u64) -> Vec<Table1Row> {
-    sets.iter()
-        .map(|e| {
-            let (pos, neg) = e.ds.class_counts();
-            Table1Row {
-                name: e.ds.name.clone(),
-                n_train: e.ds.n_train(),
-                n_test: e.ds.n_test(),
-                d: e.ds.d(),
-                pos,
-                neg,
-                pegasos_20k: sequential::pegasos_20k_error(&e.ds, e.lambda, seed),
-                paper_pegasos_20k: e.paper_error,
-            }
-        })
-        .collect()
+    run_threads(sets, seed, sweep::thread_count())
+}
+
+pub fn run_threads(sets: &[ExpDataset], seed: u64, threads: usize) -> Vec<Table1Row> {
+    sweep::run_indexed(sets.len(), threads, |i| {
+        let e = &sets[i];
+        let (pos, neg) = e.ds.class_counts();
+        Table1Row {
+            name: e.ds.name.clone(),
+            n_train: e.ds.n_train(),
+            n_test: e.ds.n_test(),
+            d: e.ds.d(),
+            pos,
+            neg,
+            pegasos_20k: sequential::pegasos_20k_error(&e.ds, e.lambda, seed),
+            paper_pegasos_20k: e.paper_error,
+        }
+    })
 }
 
 pub fn print(rows: &[Table1Row]) {

@@ -6,8 +6,12 @@ pub mod create_model;
 pub mod message;
 pub mod predict;
 pub mod protocol;
+pub mod state;
 
 pub use cache::ModelCache;
 pub use create_model::{create_model, Variant};
 pub use predict::Predictor;
-pub use protocol::{run, EvalConfig, GossipSim, ProtocolConfig, RunResult, RunStats};
+pub use protocol::{
+    run, run_with_backend, EvalConfig, ExecMode, GossipSim, ProtocolConfig, RunResult, RunStats,
+};
+pub use state::ModelStore;

@@ -7,13 +7,28 @@
 //! received one and the node's single local example, refreshing the cache.
 //! No synchrony and no reliability is assumed: messages can be dropped,
 //! delayed far beyond Δ, and nodes churn with state retention.
+//!
+//! Execution (DESIGN.md §2): per-node state lives in the structure-of-arrays
+//! [`ModelStore`]; `Deliver` events are drained into [`StepBatch`]
+//! micro-batches and executed through a [`Backend`], so the faithful
+//! event-driven semantics (jitter, arbitrary delay, churn, deterministic FIFO
+//! tie-breaking) run on the same vectorized kernels as the cycle-synchronous
+//! driver.  [`ExecMode::Scalar`] keeps one-delivery-at-a-time stepping as a
+//! debug/parity mode; the two modes are pinned bit-for-bit against each other
+//! in tests/engine_parity.rs.
 
 use crate::data::dataset::Dataset;
-use crate::eval::{self, tracker::{point_from_errors, Curve}};
+use crate::engine::native::NativeBackend;
+use crate::engine::{Backend, StepBatch, StepOp, MAX_BATCH_ROWS};
+use crate::eval::{
+    self,
+    tracker::{point_from_errors, Curve},
+};
 use crate::gossip::cache::ModelCache;
-use crate::gossip::create_model::{create_model_step, Variant};
+use crate::gossip::create_model::Variant;
 use crate::gossip::message::ModelMsg;
 use crate::gossip::predict::Predictor;
+use crate::gossip::state::ModelStore;
 use crate::learning::adaline::Learner;
 use crate::learning::linear::LinearModel;
 use crate::p2p::overlay::{PeerSampler, SamplerConfig};
@@ -21,6 +36,8 @@ use crate::sim::churn::{ChurnConfig, ChurnSchedule};
 use crate::sim::event::{Event, EventQueue, NodeId, Ticks};
 use crate::sim::network::{Network, NetworkConfig};
 use crate::util::rng::Rng;
+use anyhow::Result;
+use std::collections::HashMap;
 
 /// Evaluation settings (Section VI-A(h): misclassification ratio over the
 /// test set, measured at 100 randomly selected peers).
@@ -39,6 +56,35 @@ pub struct EvalConfig {
 impl Default for EvalConfig {
     fn default() -> Self {
         EvalConfig { n_peers: 100, voting: false, similarity: false, at_cycles: Vec::new() }
+    }
+}
+
+/// How the event-driven simulator executes CREATEMODEL steps.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    /// One backend call per delivery — the reference semantics, kept as a
+    /// debug/parity mode.
+    Scalar,
+    /// Drain all `Deliver` events sharing a timestamp into one batched engine
+    /// call.  With `coalesce > 0`, delivery times are additionally quantized
+    /// up to the next multiple of `coalesce` ticks, so deliveries landing
+    /// within the same window share a timestamp and batch together (a bounded
+    /// timing approximation, off by default; DESIGN.md §2).
+    MicroBatch { coalesce: Ticks },
+}
+
+impl Default for ExecMode {
+    fn default() -> Self {
+        ExecMode::MicroBatch { coalesce: 0 }
+    }
+}
+
+impl ExecMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExecMode::Scalar => "scalar",
+            ExecMode::MicroBatch { .. } => "microbatch",
+        }
     }
 }
 
@@ -61,6 +107,8 @@ pub struct ProtocolConfig {
     /// mechanism for following drifting concepts — beyond-paper extension):
     /// every `k` cycles a node resets its models to the initial state.
     pub restart_every: Option<u64>,
+    /// CREATEMODEL execution strategy (micro-batched by default).
+    pub exec: ExecMode,
 }
 
 impl ProtocolConfig {
@@ -80,6 +128,7 @@ impl ProtocolConfig {
             eval: EvalConfig::default(),
             seed: 42,
             restart_every: None,
+            exec: ExecMode::default(),
         }
     }
 
@@ -91,19 +140,6 @@ impl ProtocolConfig {
     }
 }
 
-/// Per-node protocol state. `freshest` mirrors cache.freshest() and is kept
-/// for every node; the full cache is materialized only at evaluation peers
-/// unless voting for all is requested (memory: Reuters models are 40 KB
-/// each — 10-deep caches at all 2000 nodes would be ~800 MB).
-struct Node {
-    online: bool,
-    last_recv: LinearModel,
-    freshest: LinearModel,
-    cache: Option<ModelCache>,
-    /// last cycle at which this node executed a scheduled restart
-    last_restart: u64,
-}
-
 /// Counters for the paper's cost model (one message per node per Δ).
 #[derive(Clone, Debug, Default)]
 pub struct RunStats {
@@ -112,6 +148,9 @@ pub struct RunStats {
     pub messages_lost_offline: u64,
     pub bytes_sent: u64,
     pub updates_applied: u64,
+    /// engine calls made by the micro-batched path (batching effectiveness =
+    /// updates_applied / engine_calls)
+    pub engine_calls: u64,
 }
 
 /// Result of one simulated run.
@@ -124,20 +163,40 @@ pub struct RunResult {
 pub struct GossipSim<'a> {
     cfg: ProtocolConfig,
     data: &'a Dataset,
-    nodes: Vec<Node>,
+    /// unified SoA per-node model state (freshest + lastModel rows)
+    store: ModelStore,
+    /// full model caches, materialized only at evaluation peers when voting
+    /// is measured (memory: Reuters models are 40 KB each — 10-deep caches at
+    /// all 2000 nodes would be ~800 MB)
+    caches: Vec<Option<ModelCache>>,
+    /// last cycle at which each node executed a scheduled restart
+    last_restart: Vec<u64>,
+    online: Vec<bool>,
     queue: EventQueue,
     network: Network,
     sampler: PeerSampler,
     churn: Option<ChurnSchedule>,
     rng: Rng,
     eval_peers: Vec<NodeId>,
-    online_flags: Vec<bool>,
     stats: RunStats,
     now: Ticks,
+    backend: Box<dyn Backend>,
+    op: StepOp,
+    batch: StepBatch,
+    /// deliveries awaiting the next flush, in FIFO (seq) order
+    pending: Vec<(NodeId, ModelMsg)>,
+    batch_start: Ticks,
+    /// local examples densified once for batch staging (`[n, d]`)
+    dense_x: Vec<f32>,
 }
 
 impl<'a> GossipSim<'a> {
     pub fn new(cfg: ProtocolConfig, data: &'a Dataset) -> Self {
+        Self::with_backend(cfg, data, Box::new(NativeBackend::new()))
+    }
+
+    /// Build the simulator on an explicit compute backend (native or PJRT).
+    pub fn with_backend(cfg: ProtocolConfig, data: &'a Dataset, backend: Box<dyn Backend>) -> Self {
         let n = data.n_train();
         assert!(n >= 2, "need at least two nodes");
         let mut rng = Rng::new(cfg.seed);
@@ -155,44 +214,47 @@ impl<'a> GossipSim<'a> {
         let eval_peers = eval_rng.sample_indices(n, cfg.eval.n_peers.min(n));
 
         let d = data.d();
-        let need_cache: std::collections::HashSet<NodeId> = if cfg.eval.voting {
-            eval_peers.iter().copied().collect()
-        } else {
-            Default::default()
-        };
-        let nodes: Vec<Node> = (0..n)
-            .map(|i| {
-                // INITMODEL (Algorithm 3): zero model, t = 0, seeded cache.
-                let init = LinearModel::zeros(d);
-                let cache = need_cache.contains(&i).then(|| {
-                    let mut c = ModelCache::new(cfg.cache_size);
-                    c.add(init.clone());
-                    c
-                });
-                Node {
-                    online: churn.as_ref().map_or(true, |ch| ch.is_online(i, 0)),
-                    last_recv: init.clone(),
-                    freshest: init,
-                    cache,
-                    last_restart: 0,
-                }
-            })
-            .collect();
-        let online_flags = nodes.iter().map(|nd| nd.online).collect();
+        let online: Vec<bool> =
+            (0..n).map(|i| churn.as_ref().map_or(true, |ch| ch.is_online(i, 0))).collect();
+
+        let mut caches: Vec<Option<ModelCache>> = vec![None; n];
+        if cfg.eval.voting {
+            for &p in &eval_peers {
+                // INITMODEL (Algorithm 3): seeded cache at evaluation peers.
+                let mut c = ModelCache::new(cfg.cache_size);
+                c.add(LinearModel::zeros(d));
+                caches[p] = Some(c);
+            }
+        }
+
+        let mut dense_x = vec![0.0f32; n * d];
+        for i in 0..n {
+            data.train.row(i).write_dense(&mut dense_x[i * d..(i + 1) * d]);
+        }
+
+        let op = StepOp::for_protocol(&cfg.learner, cfg.variant);
 
         GossipSim {
             network: Network::new(cfg.network),
-            nodes,
+            store: ModelStore::new(n, d),
+            caches,
+            last_restart: vec![0; n],
+            online,
             queue: EventQueue::new(),
             sampler,
             churn,
+            rng,
             eval_peers,
-            online_flags,
             stats: RunStats::default(),
             now: 0,
-            rng,
+            backend,
+            op,
+            batch: StepBatch::default(),
+            pending: Vec::new(),
+            batch_start: 0,
             cfg,
             data,
+            dense_x,
         }
     }
 
@@ -203,9 +265,15 @@ impl<'a> GossipSim<'a> {
         p.max(1.0) as Ticks
     }
 
+    /// Run to completion, panicking on backend errors (the native backend is
+    /// infallible; use [`GossipSim::try_run`] with fallible backends).
+    pub fn run(self) -> RunResult {
+        self.try_run().expect("backend error in event-driven run")
+    }
+
     /// Run to completion, returning the convergence curve and stats.
-    pub fn run(mut self) -> RunResult {
-        let n = self.nodes.len();
+    pub fn try_run(mut self) -> Result<RunResult> {
+        let n = self.store.n();
         let horizon = self.cfg.delta * self.cfg.cycles;
 
         // synchronized start (Section IV): first tick after one period
@@ -243,28 +311,138 @@ impl<'a> GossipSim<'a> {
 
         while let Some((t, ev)) = self.queue.pop() {
             if t > horizon {
+                // deliveries due at or before the horizon still apply
+                self.flush()?;
                 break;
             }
             self.now = t;
             match ev {
-                Event::GossipTick { node } => self.on_tick(node),
-                Event::Deliver { dst, msg } => self.on_deliver(dst, msg),
+                Event::Deliver { dst, msg } => {
+                    if self.pending.is_empty() {
+                        self.batch_start = t;
+                    }
+                    self.pending.push((dst, msg));
+                    if self.should_flush() {
+                        self.flush()?;
+                    }
+                }
+                Event::GossipTick { node } => {
+                    self.flush()?;
+                    self.on_tick(node);
+                }
                 Event::Join { node } => {
-                    self.nodes[node].online = true;
-                    self.online_flags[node] = true;
+                    self.flush()?;
+                    self.online[node] = true;
                 }
                 Event::Leave { node } => {
-                    self.nodes[node].online = false;
-                    self.online_flags[node] = false;
+                    self.flush()?;
+                    self.online[node] = false;
                 }
                 Event::Eval => {
+                    self.flush()?;
                     let cycle = (t / self.cfg.delta).max(1);
-                    curve.push(self.measure(cycle));
+                    let pt = self.measure(cycle);
+                    curve.push(pt);
                 }
             }
         }
+        self.flush()?;
 
-        RunResult { curve, stats: self.stats }
+        Ok(RunResult { curve, stats: self.stats })
+    }
+
+    /// Keep accumulating while the next event is another delivery at the same
+    /// (possibly window-quantized) timestamp — any other event must observe
+    /// fully applied state, so it forces a flush first.
+    fn should_flush(&self) -> bool {
+        match self.cfg.exec {
+            ExecMode::Scalar => true,
+            ExecMode::MicroBatch { .. } => match self.queue.peek() {
+                Some((t, Event::Deliver { .. })) => t != self.batch_start,
+                _ => true,
+            },
+        }
+    }
+
+    /// Quantize a delivery time up to the coalescing-window boundary.
+    fn arrival_time(&self, at: Ticks) -> Ticks {
+        match self.cfg.exec {
+            ExecMode::MicroBatch { coalesce } if coalesce > 0 => {
+                ((at + coalesce - 1) / coalesce) * coalesce
+            }
+            _ => at,
+        }
+    }
+
+    /// Apply the pending deliveries: FIFO ordering, offline losses, NEWSCAST
+    /// view merges, then all CREATEMODEL steps as engine micro-batches.
+    ///
+    /// Rows are independent even when one node receives several messages in a
+    /// flush: message k's `m2` input is message k-1's *weights* (Algorithm 1
+    /// line 9 assigns `lastModel <- m`, not the created model), which is known
+    /// before any stepping.  Per-node chaining is wired through `prev_in_flush`.
+    fn flush(&mut self) -> Result<()> {
+        if self.pending.is_empty() {
+            return Ok(());
+        }
+        let d = self.store.d();
+        let pending = std::mem::take(&mut self.pending);
+        let mut live: Vec<(NodeId, ModelMsg)> = Vec::with_capacity(pending.len());
+        for (dst, msg) in pending {
+            if !self.online[dst] {
+                self.network.note_lost_offline();
+                self.stats.messages_lost_offline += 1;
+                continue;
+            }
+            self.sampler.on_receive(dst, &msg.view);
+            live.push((dst, msg));
+        }
+        let per_msg_updates: u64 = match self.cfg.variant {
+            Variant::Um => 2,
+            _ => 1,
+        };
+        let mut prev_in_flush: HashMap<NodeId, usize> = HashMap::new();
+        let mut start = 0;
+        while start < live.len() {
+            let end = (start + MAX_BATCH_ROWS).min(live.len());
+            let b = end - start;
+            self.batch.resize(b, d);
+            for (row, (dst, msg)) in live[start..end].iter().enumerate() {
+                let dst = *dst;
+                let r = row * d..(row + 1) * d;
+                self.batch.w1[r.clone()].copy_from_slice(&msg.w);
+                self.batch.t1[row] = msg.t as f32;
+                match prev_in_flush.insert(dst, start + row) {
+                    Some(prev) => {
+                        let pm = &live[prev].1;
+                        self.batch.w2[r.clone()].copy_from_slice(&pm.w);
+                        self.batch.t2[row] = pm.t as f32;
+                    }
+                    None => {
+                        self.batch.w2[r.clone()].copy_from_slice(self.store.last(dst));
+                        self.batch.t2[row] = self.store.last_t(dst);
+                    }
+                }
+                self.batch.x[r].copy_from_slice(&self.dense_x[dst * d..(dst + 1) * d]);
+                self.batch.y[row] = self.data.train_y[dst];
+            }
+            self.backend.step(&self.op, &mut self.batch)?;
+            self.stats.engine_calls += 1;
+            self.stats.updates_applied += per_msg_updates * b as u64;
+            for (row, (dst, msg)) in live[start..end].iter().enumerate() {
+                let dst = *dst;
+                let out = &self.batch.out_w[row * d..(row + 1) * d];
+                let out_t = self.batch.out_t[row];
+                if let Some(cache) = &mut self.caches[dst] {
+                    cache.add(LinearModel::from_weights(out.to_vec(), out_t as u64));
+                }
+                self.store.set_freshest(dst, out, out_t);
+                // lastModel <- incoming (Algorithm 1 line 9)
+                self.store.set_last(dst, &msg.w, msg.t as f32);
+            }
+            start = end;
+        }
+        Ok(())
     }
 
     /// Active loop body (Algorithm 1 lines 3-5).
@@ -274,77 +452,40 @@ impl<'a> GossipSim<'a> {
         let p = self.next_period();
         self.queue.push(self.now + p, Event::GossipTick { node });
 
-        if !self.nodes[node].online {
+        if !self.online[node] {
             return;
         }
         // scheduled model restart (drifting-concept support, DESIGN.md §8)
         if let Some(k) = self.cfg.restart_every {
             let cycle = self.now / self.cfg.delta;
-            if k > 0 && cycle > 0 && cycle % k == 0 && self.nodes[node].last_restart != cycle {
-                let d = self.data.d();
-                let nd = &mut self.nodes[node];
-                nd.last_restart = cycle;
-                nd.freshest = LinearModel::zeros(d);
-                nd.last_recv = LinearModel::zeros(d);
-                if let Some(c) = &mut nd.cache {
+            if k > 0 && cycle > 0 && cycle % k == 0 && self.last_restart[node] != cycle {
+                self.last_restart[node] = cycle;
+                self.store.reset(node);
+                if let Some(c) = &mut self.caches[node] {
                     *c = ModelCache::new(self.cfg.cache_size);
-                    c.add(LinearModel::zeros(d));
+                    c.add(LinearModel::zeros(self.data.d()));
                 }
             }
         }
-        let Some(dst) =
-            self.sampler.select(node, self.now, &self.online_flags, &mut self.rng)
-        else {
+        let Some(dst) = self.sampler.select(node, self.now, &self.online, &mut self.rng) else {
             return;
         };
 
-        let m = &self.nodes[node].freshest;
         let msg = ModelMsg {
             src: node,
-            w: m.weights(),
-            t: m.t,
+            w: self.store.freshest(node).to_vec(),
+            t: self.store.freshest_t(node) as u64,
             view: self.sampler.payload(node, self.now),
         };
         self.stats.messages_sent += 1;
         self.stats.bytes_sent += msg.wire_bytes() as u64;
         match self.network.transmit(&mut self.rng) {
             Some(delay) => {
-                self.queue.push(self.now + delay, Event::Deliver { dst, msg });
+                let at = self.arrival_time(self.now + delay);
+                self.queue.push(at, Event::Deliver { dst, msg });
             }
             None => self.stats.messages_dropped += 1,
         }
-    }
-
-    /// ONRECEIVEMODEL (Algorithm 1 lines 7-10).
-    fn on_deliver(&mut self, dst: NodeId, msg: ModelMsg) {
-        if !self.nodes[dst].online {
-            self.network.note_lost_offline();
-            self.stats.messages_lost_offline += 1;
-            return;
-        }
-        self.sampler.on_receive(dst, &msg.view);
-
-        let m1 = LinearModel::from_weights(msg.w, msg.t);
-        let node = &mut self.nodes[dst];
-        let x = self.data.train.row(dst);
-        let y = self.data.train_y[dst];
-        // allocation-minimal CREATEMODEL + `lastModel <- m` in one step
-        let created = create_model_step(
-            self.cfg.variant,
-            &self.cfg.learner,
-            m1,
-            &mut node.last_recv,
-            &x,
-            y,
-        );
-        self.stats.updates_applied += match self.cfg.variant {
-            Variant::Um => 2,
-            _ => 1,
-        };
-        if let Some(cache) = &mut node.cache {
-            cache.add(created.clone());
-        }
-        node.freshest = created;
     }
 
     /// Measure the error curve point at `cycle` over the evaluation peers.
@@ -354,19 +495,20 @@ impl<'a> GossipSim<'a> {
         let errs: Vec<f64> = self
             .eval_peers
             .iter()
-            .map(|&p| eval::zero_one_error(&self.nodes[p].freshest, test, y))
+            .map(|&p| eval::zero_one_error(&self.store.freshest_model(p), test, y))
             .collect();
         let vote_errs: Option<Vec<f64>> = self.cfg.eval.voting.then(|| {
             self.eval_peers
                 .iter()
-                .filter_map(|&p| self.nodes[p].cache.as_ref())
+                .filter_map(|&p| self.caches[p].as_ref())
                 .map(|c| eval::cache_error(c, Predictor::MajorityVote, test, y))
                 .collect()
         });
         let similarity = self.cfg.eval.similarity.then(|| {
-            let models: Vec<&LinearModel> =
-                self.eval_peers.iter().map(|&p| &self.nodes[p].freshest).collect();
-            eval::mean_pairwise_cosine(&models)
+            let models: Vec<LinearModel> =
+                self.eval_peers.iter().map(|&p| self.store.freshest_model(p)).collect();
+            let refs: Vec<&LinearModel> = models.iter().collect();
+            eval::mean_pairwise_cosine(&refs)
         });
         point_from_errors(
             cycle,
@@ -378,9 +520,20 @@ impl<'a> GossipSim<'a> {
     }
 }
 
-/// Convenience: run one configuration against a dataset.
+/// Convenience: run one configuration against a dataset on the native
+/// backend.
 pub fn run(cfg: ProtocolConfig, data: &Dataset) -> RunResult {
     GossipSim::new(cfg, data).run()
+}
+
+/// Run the event-driven simulator on an explicit backend (e.g. PJRT), with
+/// backend errors surfaced.
+pub fn run_with_backend(
+    cfg: ProtocolConfig,
+    data: &Dataset,
+    backend: Box<dyn Backend>,
+) -> Result<RunResult> {
+    GossipSim::with_backend(cfg, data, backend).try_run()
 }
 
 #[cfg(test)]
@@ -495,5 +648,36 @@ mod tests {
             let res = run(cfg, &ds);
             assert!(!res.curve.points.is_empty());
         }
+    }
+
+    #[test]
+    fn scalar_mode_runs_and_converges() {
+        let ds = urls_like(9, Scale(0.02));
+        let mut cfg = quick_cfg(40);
+        cfg.exec = ExecMode::Scalar;
+        let res = run(cfg, &ds);
+        let first = res.curve.points.first().unwrap().err_mean;
+        assert!(res.curve.final_error() < first);
+        // scalar mode = one engine call per applied delivery
+        assert_eq!(
+            res.stats.engine_calls, res.stats.updates_applied,
+            "scalar mode must step one row at a time"
+        );
+    }
+
+    #[test]
+    fn microbatching_reduces_engine_calls() {
+        let ds = urls_like(10, Scale(0.03));
+        let mut cfg = quick_cfg(30);
+        cfg.exec = ExecMode::MicroBatch { coalesce: cfg.delta / 4 };
+        let res = run(cfg, &ds);
+        assert!(
+            res.stats.engine_calls < res.stats.updates_applied,
+            "coalesced micro-batching should batch multiple rows per call: {} calls for {} updates",
+            res.stats.engine_calls,
+            res.stats.updates_applied
+        );
+        let first = res.curve.points.first().unwrap().err_mean;
+        assert!(res.curve.final_error() < first);
     }
 }

@@ -1,0 +1,169 @@
+//! Unified structure-of-arrays model store (DESIGN.md §5).
+//!
+//! Every simulator driver — the event-driven [`crate::gossip::protocol`]
+//! simulator and the cycle-synchronous [`crate::engine::batched`] driver —
+//! keeps the same per-node protocol state: the freshest model created at the
+//! node and the last model received (Algorithm 1's `lastModel`).  Before this
+//! module existed each driver kept its own copy (per-node `LinearModel`
+//! allocations in the event path, private flat arrays in the batched path).
+//!
+//! `ModelStore` is the single representation: flat row-major `[n, d]` weight
+//! matrices plus `[n]` update-counter vectors, with node ids as row handles.
+//! Rows are always materialized (no lazy scale), so they can be memcpy'd
+//! straight into [`crate::engine::StepBatch`] buffers and back — which is
+//! what lets the event-driven hot path run through the same vectorized
+//! backends as the batched driver.
+//!
+//! The update counter `t` is f32 to match the engine's `StepBatch`/kernel
+//! representation: exact up to 2^24 (~16.7M) updates per node, far beyond
+//! any paper-scale run (one update per received message, hundreds to
+//! thousands of cycles).  `LinearModel`'s u64 `t` is recovered at the
+//! evaluation/cache boundary via [`ModelStore::freshest_model`].
+
+use crate::learning::linear::LinearModel;
+use std::ops::Range;
+
+#[derive(Clone, Debug)]
+pub struct ModelStore {
+    n: usize,
+    d: usize,
+    freshest_w: Vec<f32>,
+    freshest_t: Vec<f32>,
+    last_w: Vec<f32>,
+    last_t: Vec<f32>,
+}
+
+impl ModelStore {
+    /// INITMODEL (Algorithm 3) for every node: zero weights, t = 0.
+    pub fn new(n: usize, d: usize) -> Self {
+        ModelStore {
+            n,
+            d,
+            freshest_w: vec![0.0; n * d],
+            freshest_t: vec![0.0; n],
+            last_w: vec![0.0; n * d],
+            last_t: vec![0.0; n],
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    #[inline]
+    fn row(&self, i: usize) -> Range<usize> {
+        debug_assert!(i < self.n);
+        i * self.d..(i + 1) * self.d
+    }
+
+    /// Weight row of the freshest model created at node `i`.
+    #[inline]
+    pub fn freshest(&self, i: usize) -> &[f32] {
+        &self.freshest_w[self.row(i)]
+    }
+
+    #[inline]
+    pub fn freshest_t(&self, i: usize) -> f32 {
+        self.freshest_t[i]
+    }
+
+    /// Weight row of the last model received at node `i` (`lastModel`).
+    #[inline]
+    pub fn last(&self, i: usize) -> &[f32] {
+        &self.last_w[self.row(i)]
+    }
+
+    #[inline]
+    pub fn last_t(&self, i: usize) -> f32 {
+        self.last_t[i]
+    }
+
+    #[inline]
+    pub fn set_freshest(&mut self, i: usize, w: &[f32], t: f32) {
+        let r = self.row(i);
+        self.freshest_w[r].copy_from_slice(w);
+        self.freshest_t[i] = t;
+    }
+
+    #[inline]
+    pub fn set_last(&mut self, i: usize, w: &[f32], t: f32) {
+        let r = self.row(i);
+        self.last_w[r].copy_from_slice(w);
+        self.last_t[i] = t;
+    }
+
+    /// Reset node `i` back to INITMODEL state (restart schedules, churn with
+    /// state loss, drifting-concept experiments).
+    pub fn reset(&mut self, i: usize) {
+        let r = self.row(i);
+        self.freshest_w[r.clone()].fill(0.0);
+        self.last_w[r].fill(0.0);
+        self.freshest_t[i] = 0.0;
+        self.last_t[i] = 0.0;
+    }
+
+    /// Materialize node `i`'s freshest model as a [`LinearModel`] (evaluation
+    /// and cache paths; allocates one weight vector).
+    pub fn freshest_model(&self, i: usize) -> LinearModel {
+        LinearModel::from_weights(self.freshest(i).to_vec(), self.freshest_t(i) as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_at_init_model() {
+        let s = ModelStore::new(3, 4);
+        assert_eq!(s.n(), 3);
+        assert_eq!(s.d(), 4);
+        for i in 0..3 {
+            assert!(s.freshest(i).iter().all(|&v| v == 0.0));
+            assert!(s.last(i).iter().all(|&v| v == 0.0));
+            assert_eq!(s.freshest_t(i), 0.0);
+            assert_eq!(s.last_t(i), 0.0);
+        }
+    }
+
+    #[test]
+    fn set_get_roundtrip_per_row() {
+        let mut s = ModelStore::new(3, 2);
+        s.set_freshest(1, &[1.0, 2.0], 5.0);
+        s.set_last(1, &[-3.0, 4.0], 2.0);
+        assert_eq!(s.freshest(1), &[1.0, 2.0]);
+        assert_eq!(s.freshest_t(1), 5.0);
+        assert_eq!(s.last(1), &[-3.0, 4.0]);
+        assert_eq!(s.last_t(1), 2.0);
+        // neighbours untouched
+        assert!(s.freshest(0).iter().all(|&v| v == 0.0));
+        assert!(s.freshest(2).iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn reset_zeroes_one_node_only() {
+        let mut s = ModelStore::new(2, 2);
+        s.set_freshest(0, &[1.0, 1.0], 3.0);
+        s.set_freshest(1, &[2.0, 2.0], 4.0);
+        s.set_last(1, &[5.0, 5.0], 1.0);
+        s.reset(1);
+        assert_eq!(s.freshest(1), &[0.0, 0.0]);
+        assert_eq!(s.last(1), &[0.0, 0.0]);
+        assert_eq!(s.freshest_t(1), 0.0);
+        assert_eq!(s.freshest(0), &[1.0, 1.0]);
+        assert_eq!(s.freshest_t(0), 3.0);
+    }
+
+    #[test]
+    fn freshest_model_materializes() {
+        let mut s = ModelStore::new(1, 3);
+        s.set_freshest(0, &[0.5, -0.5, 1.0], 7.0);
+        let m = s.freshest_model(0);
+        assert_eq!(m.weights(), vec![0.5, -0.5, 1.0]);
+        assert_eq!(m.t, 7);
+    }
+}

@@ -6,6 +6,9 @@
 //! `HloModuleProto::from_text_file` → `XlaComputation` → `client.compile`.
 
 use crate::runtime::artifacts::Manifest;
+// Offline build: the `xla` name resolves to the in-repo stub.  Swap this
+// line for the real xla-rs crate to enable the PJRT path (see xla_stub.rs).
+use crate::runtime::xla_stub as xla;
 use anyhow::{Context, Result};
 use std::collections::HashMap;
 use std::path::Path;

@@ -3,6 +3,7 @@
 //! execute; adapted from /opt/xla-example load_hlo.)
 pub mod artifacts;
 pub mod client;
+pub mod xla_stub;
 
 pub use artifacts::{ArtifactEntry, Manifest};
 pub use client::{literal_matrix, literal_to_vec, literal_vec, Runtime};

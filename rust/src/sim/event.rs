@@ -77,6 +77,12 @@ impl EventQueue {
         self.heap.peek().map(|Reverse(s)| s.time)
     }
 
+    /// Time and event of the next pop, without removing it (the micro-batch
+    /// coalescing loop uses this to decide when to flush).
+    pub fn peek(&self) -> Option<(Ticks, &Event)> {
+        self.heap.peek().map(|Reverse(s)| (s.time, &s.event))
+    }
+
     pub fn len(&self) -> usize {
         self.heap.len()
     }
@@ -118,8 +124,10 @@ mod tests {
         let mut q = EventQueue::new();
         q.push(42, Event::Eval);
         assert_eq!(q.peek_time(), Some(42));
+        assert!(matches!(q.peek(), Some((42, Event::Eval))));
         assert_eq!(q.len(), 1);
         q.pop();
         assert!(q.is_empty());
+        assert!(q.peek().is_none());
     }
 }

@@ -12,8 +12,9 @@ use golf::engine::batched::run_batched;
 use golf::engine::native::NativeBackend;
 use golf::engine::pjrt::PjrtBackend;
 use golf::engine::{Backend, LearnerKind, StepBatch, StepOp};
+use golf::experiments::sweep;
 use golf::gossip::create_model::Variant;
-use golf::gossip::protocol::ProtocolConfig;
+use golf::gossip::protocol::{run, ExecMode, ProtocolConfig, RunResult};
 use golf::util::rng::Rng;
 
 fn pjrt() -> Option<PjrtBackend> {
@@ -120,6 +121,126 @@ fn full_run_parity_spambase_um() {
             pa.err_mean,
             pb.err_mean
         );
+    }
+}
+
+fn assert_runs_identical(a: &RunResult, b: &RunResult, what: &str) {
+    assert_eq!(a.curve.points.len(), b.curve.points.len(), "{what}: point counts");
+    for (pa, pb) in a.curve.points.iter().zip(&b.curve.points) {
+        assert_eq!(pa.cycle, pb.cycle, "{what}");
+        assert_eq!(pa.err_mean, pb.err_mean, "{what} @ cycle {}", pa.cycle);
+        assert_eq!(pa.err_std, pb.err_std, "{what} @ cycle {}", pa.cycle);
+        assert_eq!(pa.err_vote, pb.err_vote, "{what} @ cycle {}", pa.cycle);
+        assert_eq!(pa.similarity, pb.similarity, "{what} @ cycle {}", pa.cycle);
+        assert_eq!(pa.messages_sent, pb.messages_sent, "{what} @ cycle {}", pa.cycle);
+    }
+    assert_eq!(a.stats.messages_sent, b.stats.messages_sent, "{what}");
+    assert_eq!(a.stats.messages_dropped, b.stats.messages_dropped, "{what}");
+    assert_eq!(a.stats.messages_lost_offline, b.stats.messages_lost_offline, "{what}");
+    assert_eq!(a.stats.updates_applied, b.stats.updates_applied, "{what}");
+}
+
+/// The event-driven micro-batched path must be bit-for-bit identical to the
+/// scalar event-driven path on the same seed: micro-batching is a pure
+/// reorganization of independent rows, with per-node chaining wired through
+/// message weights.
+#[test]
+fn event_microbatch_bitwise_equals_scalar() {
+    for (seed, failures) in [(61u64, false), (62, true)] {
+        let ds = urls_like(seed, Scale(0.02));
+        let mut cfg = ProtocolConfig::paper_default(30);
+        cfg.eval.n_peers = 15;
+        cfg.eval.voting = true;
+        cfg.eval.similarity = true;
+        cfg.seed = seed;
+        if failures {
+            cfg = cfg.with_extreme_failures();
+        }
+        let mut scalar_cfg = cfg.clone();
+        scalar_cfg.exec = ExecMode::Scalar;
+        let mut micro_cfg = cfg;
+        micro_cfg.exec = ExecMode::MicroBatch { coalesce: 0 };
+        let a = run(scalar_cfg, &ds);
+        let b = run(micro_cfg, &ds);
+        assert_runs_identical(&a, &b, &format!("scalar vs microbatch (failures={failures})"));
+        assert!(
+            b.stats.engine_calls <= a.stats.engine_calls,
+            "micro-batching must not increase engine calls"
+        );
+    }
+}
+
+/// Same check across all three Table-I datasets and all learner variants at
+/// small scale — the UM variant exercises the two-update row path.
+#[test]
+fn event_microbatch_bitwise_equals_scalar_all_datasets() {
+    let sets = golf::experiments::datasets(63, 0.01);
+    for e in &sets {
+        for variant in [Variant::Rw, Variant::Mu, Variant::Um] {
+            let mut cfg = ProtocolConfig::paper_default(8).with_extreme_failures();
+            cfg.variant = variant;
+            cfg.eval.n_peers = 8;
+            cfg.seed = 63;
+            let mut scalar_cfg = cfg.clone();
+            scalar_cfg.exec = ExecMode::Scalar;
+            let mut micro_cfg = cfg;
+            micro_cfg.exec = ExecMode::MicroBatch { coalesce: 0 };
+            let a = run(scalar_cfg, &e.ds);
+            let b = run(micro_cfg, &e.ds);
+            assert_runs_identical(&a, &b, &format!("{} {:?}", e.ds.name, variant));
+        }
+    }
+}
+
+/// Window coalescing quantizes delivery times (a bounded, documented timing
+/// approximation) — convergence must stay in the same regime as window 0.
+#[test]
+fn event_coalescing_window_stays_close() {
+    let ds = urls_like(64, Scale(0.02));
+    let mut cfg = ProtocolConfig::paper_default(40);
+    cfg.eval.n_peers = 15;
+    cfg.seed = 64;
+    let exact = run(cfg.clone(), &ds);
+    cfg.exec = ExecMode::MicroBatch { coalesce: cfg.delta / 4 };
+    let coalesced = run(cfg, &ds);
+    let (a, b) = (exact.curve.final_error(), coalesced.curve.final_error());
+    assert!((a - b).abs() < 0.05, "window-0 {a} vs coalesced {b}");
+    assert!(
+        coalesced.stats.engine_calls < coalesced.stats.updates_applied,
+        "coalescing should batch multiple deliveries per engine call"
+    );
+}
+
+/// Acceptance: a parallel sweep of the three Table-I datasets with the
+/// all-failures scenario produces curves identical to serial execution for
+/// the same seeds.
+#[test]
+fn sweep_parallel_bitwise_equals_serial() {
+    let mk = |threads: usize| {
+        let mut cfg = sweep::SweepConfig::paper_grid(0.01, 10, 99);
+        cfg.variants = vec![Variant::Mu];
+        cfg.failures = vec![true];
+        cfg.replicates = 2;
+        cfg.eval_peers = 10;
+        cfg.threads = threads;
+        sweep::run_grid(&cfg)
+    };
+    let serial = mk(1);
+    let parallel = mk(4);
+    assert_eq!(serial.len(), parallel.len());
+    assert_eq!(serial.len(), 3 * 2); // three datasets, all-failures, 2 reps
+    for (a, b) in serial.iter().zip(&parallel) {
+        assert_eq!(a.dataset, b.dataset);
+        assert_eq!(a.variant, b.variant);
+        assert_eq!(a.failures, b.failures);
+        assert!(a.failures, "grid restricted to the all-failures scenario");
+        assert_eq!(a.seed, b.seed, "derived seeds must not depend on threads");
+        assert_eq!(a.curve.points.len(), b.curve.points.len());
+        for (pa, pb) in a.curve.points.iter().zip(&b.curve.points) {
+            assert_eq!(pa.cycle, pb.cycle);
+            assert_eq!(pa.err_mean, pb.err_mean, "{} parallel != serial", a.dataset);
+        }
+        assert_eq!(a.stats.messages_sent, b.stats.messages_sent);
     }
 }
 

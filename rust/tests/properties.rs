@@ -279,6 +279,99 @@ fn prop_event_queue_total_order() {
 }
 
 #[test]
+fn prop_event_queue_fifo_tie_breaking() {
+    // Events pushed at equal timestamps must pop in insertion order — the
+    // queue's total order is a *stable* sort by time.  This is what makes
+    // whole runs (and the micro-batch flush order) deterministic per seed.
+    forall(
+        112,
+        80,
+        |rng| {
+            let n = 1 + rng.below_usize(150);
+            // few distinct timestamps -> many ties
+            (0..n).map(|_| rng.below(8)).collect::<Vec<u64>>()
+        },
+        |times| {
+            let mut q = EventQueue::new();
+            for (id, &t) in times.iter().enumerate() {
+                q.push(t, Event::Join { node: id });
+            }
+            let mut expect: Vec<(u64, usize)> =
+                times.iter().copied().zip(0..times.len()).collect();
+            expect.sort_by_key(|&(t, _)| t); // stable: preserves insertion order on ties
+            let mut got = Vec::new();
+            while let Some((t, ev)) = q.pop() {
+                let Event::Join { node } = ev else {
+                    return Err("unexpected event type".into());
+                };
+                got.push((t, node));
+            }
+            if got != expect {
+                return Err(format!("pop order {got:?} != stable order {expect:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_scale_floor_rematerialization_preserves_predictions() {
+    // Repeated lazy down-scaling drives the internal scale through the
+    // SCALE_FLOOR re-materialization (linear.rs).  The effective weights —
+    // and therefore margins and predictions — must track an eagerly-computed
+    // f64 reference through the floor crossing, and stay finite.
+    forall(
+        113,
+        100,
+        |rng| {
+            let d = 1 + rng.below_usize(16);
+            let w: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            // 30 factors from {0.05, 0.1, 0.2}: the product is at most
+            // 0.2^30 ~ 1e-21 < SCALE_FLOOR = 1e-20, so every case crosses
+            // the floor, and at least 0.05^30 ~ 1e-39, so the materialized
+            // weights stay representable
+            let factors: Vec<f32> =
+                (0..30).map(|_| [0.05f32, 0.1, 0.2][rng.below_usize(3)]).collect();
+            (w, x, factors)
+        },
+        |(w, x, factors)| {
+            let mut m = LinearModel::from_weights(w.clone(), 0);
+            let mut eager = 1.0f64;
+            for &f in factors {
+                m.scale_by(f);
+                eager *= f as f64;
+            }
+            if eager >= 1e-20 {
+                return Err(format!("case does not cross the floor: scale {eager}"));
+            }
+            for (i, (&wi, got)) in w.iter().zip(m.weights()).enumerate() {
+                let expect = (wi as f64 * eager) as f32;
+                if !got.is_finite() {
+                    return Err(format!("coord {i} not finite: {got}"));
+                }
+                let tol = 1e-3 * expect.abs().max(got.abs()) + 1e-32;
+                if (got - expect).abs() > tol {
+                    return Err(format!("coord {i}: {got} vs eager {expect}"));
+                }
+            }
+            // prediction must agree with the eager reference whenever the
+            // raw margin is safely away from the f32 noise floor (a positive
+            // scale can never flip the margin sign)
+            let dot_ref: f64 = w.iter().zip(x).map(|(&a, &b)| a as f64 * b as f64).sum();
+            if dot_ref.abs() > 1e-3 {
+                let pred_ref = if dot_ref * eager > 0.0 { 1.0 } else { -1.0 };
+                let pred = m.predict(&Row::Dense(x));
+                if pred != pred_ref {
+                    return Err(format!("prediction {pred} != reference {pred_ref}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_cache_never_exceeds_capacity_and_keeps_freshest() {
     forall(
         108,

@@ -1,0 +1,195 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no network access and no crates.io registry, so
+//! the real `anyhow` cannot be fetched.  This shim implements exactly the
+//! surface the `golf` crate uses:
+//!
+//! * [`Error`] — a string-backed error (context chain flattened into the
+//!   message, so `{}` and `{:#}` both print the full chain),
+//! * [`Result`] with the defaulted error parameter,
+//! * [`Context`] — `.context(...)` / `.with_context(...)` on `Result` (for
+//!   both `std::error::Error` sources and `anyhow::Error` itself) and on
+//!   `Option`,
+//! * the [`anyhow!`], [`bail!`] and [`ensure!`] macros,
+//! * `?`-conversion from any `std::error::Error`.
+//!
+//! Dropping in the real crate is a one-line change in rust/Cargo.toml; no
+//! source edits are needed.
+
+use std::fmt;
+
+/// String-backed error value.  Like `anyhow::Error` it deliberately does NOT
+/// implement `std::error::Error` — that is what makes the blanket `From`
+/// impl below coherent.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Create an error from any displayable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Error { msg: m.to_string() }
+    }
+
+    fn wrap<C: fmt::Display>(self, c: C) -> Self {
+        Error { msg: format!("{c}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{}` and the real anyhow's `{:#}` both render the full chain here
+        // (contexts are flattened eagerly).
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg.push_str(&format!(": {s}"));
+            src = s.source();
+        }
+        Error { msg }
+    }
+}
+
+/// `Result` with the defaulted error type, matching `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+mod private {
+    /// Sealed conversion trait so `Context` covers both `E: std::error::Error`
+    /// and `anyhow::Error` without overlapping impls (`Error` itself does not
+    /// implement `std::error::Error`).
+    pub trait IntoError {
+        fn into_error(self) -> crate::Error;
+    }
+
+    impl<E: std::error::Error> IntoError for E {
+        fn into_error(self) -> crate::Error {
+            crate::Error::from(self)
+        }
+    }
+
+    impl IntoError for crate::Error {
+        fn into_error(self) -> crate::Error {
+            self
+        }
+    }
+}
+
+/// Context attachment, mirroring `anyhow::Context`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: private::IntoError> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into_error().wrap(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into_error().wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Early-return with an error.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Early-return with an error when the condition does not hold.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::{Context, Error, Result};
+
+    fn io_fail() -> Result<()> {
+        let e = std::io::Error::new(std::io::ErrorKind::Other, "boom");
+        Err(e).context("reading file")
+    }
+
+    #[test]
+    fn context_chain_flattens() {
+        let e = io_fail().unwrap_err();
+        assert_eq!(e.to_string(), "reading file: boom");
+        assert_eq!(format!("{e:#}"), "reading file: boom");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.with_context(|| format!("missing {}", 7)).unwrap_err();
+        assert_eq!(e.to_string(), "missing 7");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<u32> {
+            let n: u32 = "x".parse()?;
+            Ok(n)
+        }
+        assert!(f().is_err());
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn f(x: u32) -> Result<u32> {
+            crate::ensure!(x < 10, "too big: {x}");
+            if x == 3 {
+                crate::bail!("three is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(5).unwrap(), 5);
+        assert_eq!(f(12).unwrap_err().to_string(), "too big: 12");
+        assert_eq!(f(3).unwrap_err().to_string(), "three is right out");
+        let e = crate::anyhow!("plain {}", 1);
+        assert_eq!(e.to_string(), "plain 1");
+        let _: Error = crate::anyhow!("literal only");
+    }
+}
