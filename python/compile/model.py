@@ -83,12 +83,15 @@ def eval_error_counts(x, ylab, w):
     """Per-model misclassification counts over a test chunk.
 
     x [N, D], ylab [N] in {-1,+1} (0 rows = padding), w [M, D] -> [M] f32
-    counts of test rows with y * <w, x> <= 0 (0-1 error numerator).
-    Padding rows (ylab == 0) contribute nothing.
+    counts of misclassified rows under the repo-wide sign(0) = -1
+    convention: predicted label is +1 iff <w, x> > 0, so a zero margin
+    errs on positive rows only (matches rust eval/metrics.rs and the
+    native backend's error_counts).  Padding rows (ylab == 0) contribute
+    nothing.
     """
     mg = margins(x, w)                              # [N, M]
-    signed = ylab[:, None] * mg                     # y_i <w_j, x_i>
-    wrong = (signed <= 0.0).astype(jnp.float32)
+    pred = jnp.where(mg > 0.0, 1.0, -1.0)           # sign(0) = -1
+    wrong = (pred != ylab[:, None]).astype(jnp.float32)
     valid = (ylab != 0.0).astype(jnp.float32)[:, None]
     return (jnp.sum(wrong * valid, axis=0),)
 

@@ -31,20 +31,44 @@ fn batch(rng: &mut Rng, b: usize, d: usize) -> StepBatch {
     sb
 }
 
-/// Write the protocol-throughput results as a flat JSON object so the perf
-/// trajectory is tracked from PR to PR (`GOLF_BENCH_OUT` overrides the path).
-fn write_bench_json(results: &[(String, f64)]) {
-    let path = std::env::var("GOLF_BENCH_OUT")
-        .unwrap_or_else(|_| "BENCH_protocol.json".to_string());
-    let mut body = String::from("{\n  \"bench\": \"protocol\",\n  \"unit\": \"delivered_messages_per_s\",\n  \"results\": {\n");
+/// Resolve where a `BENCH_<name>.json` file lands.  `GOLF_BENCH_OUT` is
+/// respected both ways: a value ending in `.json` names the protocol file
+/// directly (the pre-kernels behavior; siblings land next to it), anything
+/// else is treated as an output directory.
+fn bench_out_path(name: &str) -> std::path::PathBuf {
+    match std::env::var("GOLF_BENCH_OUT") {
+        Err(_) => name.into(),
+        Ok(v) if v.ends_with(".json") => {
+            let p = std::path::PathBuf::from(v);
+            if name == "BENCH_protocol.json" {
+                p
+            } else {
+                p.parent()
+                    .unwrap_or_else(|| std::path::Path::new("."))
+                    .join(name)
+            }
+        }
+        Ok(v) => {
+            std::fs::create_dir_all(&v).ok();
+            std::path::Path::new(&v).join(name)
+        }
+    }
+}
+
+/// Write one bench family's results as a flat JSON object so the perf
+/// trajectory is tracked from PR to PR.
+fn write_bench_json(bench: &str, unit: &str, results: &[(String, f64)]) {
+    let path = bench_out_path(&format!("BENCH_{bench}.json"));
+    let mut body =
+        format!("{{\n  \"bench\": \"{bench}\",\n  \"unit\": \"{unit}\",\n  \"results\": {{\n");
     for (i, (k, v)) in results.iter().enumerate() {
         let comma = if i + 1 < results.len() { "," } else { "" };
         body.push_str(&format!("    \"{k}\": {v:.1}{comma}\n"));
     }
     body.push_str("  }\n}\n");
     match std::fs::File::create(&path).and_then(|mut f| f.write_all(body.as_bytes())) {
-        Ok(()) => println!("\nwrote {path}"),
-        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+        Ok(()) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\ncould not write {}: {e}", path.display()),
     }
 }
 
@@ -108,6 +132,142 @@ fn main() {
             json.push((format!("event_{mode_key}_{key}"), per_s));
         }
     }
+
+    // ---- dense vs sparse kernels (O(d) vs O(nnz); DESIGN.md §7) -----------
+    println!("\n--- kernels: dense vs O(nnz) sparse execution path");
+    let mut kjson: Vec<(String, f64)> = Vec::new();
+    {
+        let mut native = NativeBackend::new();
+        // (shape key, d, nnz, batch rows): spambase-like, reuters-like, and a
+        // URL-collection-like raw feature space
+        for (key, d, nnz, b) in [
+            ("d60", 60usize, 57usize, 256usize),
+            ("d10k", 10_000, 60, 64),
+            ("d1m", 1_000_000, 130, 4),
+        ] {
+            // one set of rows, staged both ways
+            let mut idxs: Vec<Vec<u32>> = Vec::with_capacity(b);
+            let mut vals: Vec<Vec<f32>> = Vec::with_capacity(b);
+            for _ in 0..b {
+                let mut seen = std::collections::HashSet::new();
+                let mut idx: Vec<u32> = Vec::with_capacity(nnz);
+                while idx.len() < nnz {
+                    let j = rng.below(d as u64) as u32;
+                    if seen.insert(j) {
+                        idx.push(j);
+                    }
+                }
+                idx.sort_unstable();
+                vals.push(idx.iter().map(|_| rng.normal() as f32).collect());
+                idxs.push(idx);
+            }
+            let mut dense_sb = StepBatch::default();
+            dense_sb.resize(b, d);
+            for v in dense_sb.w1.iter_mut().chain(&mut dense_sb.w2) {
+                *v = rng.normal() as f32;
+            }
+            for i in 0..b {
+                dense_sb.y[i] = rng.sign();
+                dense_sb.t1[i] = 1.0 + rng.below(100) as f32;
+                dense_sb.t2[i] = 1.0 + rng.below(100) as f32;
+                for (&j, &v) in idxs[i].iter().zip(&vals[i]) {
+                    dense_sb.x[i * d + j as usize] = v;
+                }
+            }
+            let mut sparse_sb = dense_sb.clone();
+            sparse_sb.resize_for(b, d, true);
+            for i in 0..b {
+                sparse_sb.push_sparse_x_row(&idxs[i], &vals[i]);
+            }
+            let iters = if d >= 1_000_000 { 10 } else { 200 };
+            for (vkey, variant) in [("rw", Variant::Rw), ("mu", Variant::Mu)] {
+                let op = StepOp { learner: LearnerKind::Pegasos, variant, hp: 0.01 };
+                let rd = bench(&format!("dense  pegasos {vkey} {key} b={b}"), 2, iters, || {
+                    native.step(&op, &mut dense_sb).unwrap();
+                });
+                let rs = bench(&format!("sparse pegasos {vkey} {key} b={b}"), 2, iters, || {
+                    native.step(&op, &mut sparse_sb).unwrap();
+                });
+                let speedup = rd.mean_ns / rs.mean_ns;
+                println!(
+                    "    -> dense {:.0} ns/update, sparse {:.0} ns/update: speedup x{:.1}",
+                    rd.mean_ns / b as f64,
+                    rs.mean_ns / b as f64,
+                    speedup
+                );
+                kjson.push((format!("dense_{vkey}_{key}"), rd.throughput(b as f64)));
+                kjson.push((format!("sparse_{vkey}_{key}"), rs.throughput(b as f64)));
+                kjson.push((format!("speedup_{vkey}_{key}"), speedup));
+            }
+        }
+
+        // end-to-end event-driven gossip on reuters: forced dense vs sparse
+        println!("\n--- kernels: end-to-end event-driven run, --exec dense vs sparse");
+        {
+            use golf::gossip::protocol::ExecPath;
+            let ds = reuters_like(2, Scale(0.25));
+            let mut per_s = [0.0f64; 2];
+            for (slot, (pkey, path)) in
+                [("dense", ExecPath::Dense), ("sparse", ExecPath::Sparse)].iter().enumerate()
+            {
+                let mut msgs = 0u64;
+                let r = bench(&format!("event sim reuters --exec {pkey}"), 0, 2, || {
+                    let mut cfg = ProtocolConfig::paper_default(6);
+                    cfg.eval.n_peers = 0;
+                    cfg.eval.at_cycles = vec![6];
+                    cfg.path = *path;
+                    let res = run(cfg, &ds);
+                    msgs = res.stats.updates_applied;
+                });
+                per_s[slot] = r.throughput(msgs as f64);
+                kjson.push((format!("protocol_{pkey}_reuters"), per_s[slot]));
+            }
+            println!("    -> end-to-end speedup x{:.1}", per_s[1] / per_s[0]);
+            kjson.push(("speedup_protocol_reuters".into(), per_s[1] / per_s[0]));
+        }
+
+        // batched evaluation on a reuters-like sparse test set, vs the same
+        // rows densified (the pre-sparse-path evaluator's layout)
+        println!("\n--- kernels: batched evaluation, sparse vs densified test set");
+        {
+            use golf::data::dataset::Examples;
+            use golf::data::matrix::Matrix;
+            let ds = reuters_like(3, Scale(0.25));
+            let d = ds.d();
+            let n = ds.n_test();
+            let m = 100usize;
+            let w: Vec<f32> = (0..m * d).map(|_| rng.normal() as f32).collect();
+            let mut dense = vec![0.0f32; n * d];
+            for i in 0..n {
+                ds.test.row(i).write_dense(&mut dense[i * d..(i + 1) * d]);
+            }
+            let dense_ex = Examples::Dense(Matrix::from_vec(n, d, dense));
+            let rd = bench(&format!("eval dense  n={n} d={d} m={m}"), 1, 5, || {
+                std::hint::black_box(
+                    native
+                        .error_counts_examples(&dense_ex, &ds.test_y, &w, m)
+                        .unwrap(),
+                );
+            });
+            let rs = bench(&format!("eval sparse n={n} d={d} m={m}"), 1, 5, || {
+                std::hint::black_box(
+                    native
+                        .error_counts_examples(&ds.test, &ds.test_y, &w, m)
+                        .unwrap(),
+                );
+            });
+            let speedup = rd.mean_ns / rs.mean_ns;
+            println!("    -> eval speedup x{speedup:.1}");
+            kjson.push(("eval_dense_reuters".into(), rd.throughput((n * m) as f64)));
+            kjson.push(("eval_sparse_reuters".into(), rs.throughput((n * m) as f64)));
+            kjson.push(("speedup_eval_reuters".into(), speedup));
+        }
+    }
+    write_bench_json(
+        "kernels",
+        "row_updates_per_s (speedup_* keys: dense_ns / sparse_ns)",
+        &kjson,
+    );
 
     println!("\n--- native backend: batched MU step");
     let op = StepOp { learner: LearnerKind::Pegasos, variant: Variant::Mu, hp: 0.01 };
@@ -220,5 +380,5 @@ fn main() {
         println!("    -> {:.2} GB/s effective", r.throughput((d * 4 * 3) as f64) / 1e9);
     }
 
-    write_bench_json(&json);
+    write_bench_json("protocol", "delivered_messages_per_s", &json);
 }

@@ -18,7 +18,7 @@ use crate::engine::batched::run_batched;
 use crate::engine::native::NativeBackend;
 use crate::engine::pjrt::PjrtBackend;
 use crate::experiments::{self, common, sweep};
-use crate::gossip::protocol::{ExecMode, RunResult};
+use crate::gossip::protocol::{ExecMode, ExecPath, RunResult};
 use std::collections::HashMap;
 
 pub struct ParsedArgs {
@@ -58,6 +58,7 @@ USAGE:
               [--failures none|extreme]
               [--backend event|event-pjrt|batched-native|batched-pjrt]
               [--mode microbatch|scalar] [--coalesce TICKS]
+              [--exec auto|dense|sparse]
               [--voting true] [--similarity true] [--seed N] [--out FILE.csv]
   golf table1 [--scale S] [--seed N] [--threads T]
   golf fig1   [--scale S] [--cycles N] [--seed N] [--threads T] [--out-dir DIR]
@@ -65,7 +66,7 @@ USAGE:
   golf fig3   [--scale S] [--cycles N] [--seed N] [--threads T] [--out-dir DIR]
   golf sweep  [--scale S] [--cycles N] [--seed N] [--threads T]
               [--replicates K] [--mode microbatch|scalar] [--coalesce TICKS]
-              [--out-dir DIR]
+              [--exec auto|dense|sparse] [--out-dir DIR]
   golf info"
 }
 
@@ -247,6 +248,10 @@ fn run_command(parsed: &ParsedArgs) -> Result<(), String> {
                 Some("scalar") => ExecMode::Scalar,
                 Some(other) => return Err(format!("bad mode {other:?}")),
             };
+            cfg.path = match parsed.flags.get("exec") {
+                None => ExecPath::Auto,
+                Some(s) => ExecPath::parse(s).ok_or(format!("bad exec {s:?}"))?,
+            };
             eprintln!(
                 "sweep: 3 datasets x {} variants x {} scenarios x {} replicates on {} threads",
                 cfg.variants.len(),
@@ -341,6 +346,23 @@ mod tests {
         ]))
         .unwrap();
         run_command(&p).unwrap();
+    }
+
+    #[test]
+    fn tiny_forced_sparse_exec_run() {
+        let p = parse_args(&s(&[
+            "run", "--dataset", "urls", "--scale", "0.005", "--cycles", "3",
+            "--eval_peers", "4", "--exec", "sparse",
+        ]))
+        .unwrap();
+        run_command(&p).unwrap();
+        // bad value is rejected
+        let p = parse_args(&s(&[
+            "run", "--dataset", "urls", "--scale", "0.005", "--cycles", "3",
+            "--exec", "warp",
+        ]))
+        .unwrap();
+        assert!(run_command(&p).is_err());
     }
 
     #[test]

@@ -20,12 +20,13 @@
 //! backend = event         ; event | event-pjrt | batched-native | batched-pjrt
 //! mode = microbatch       ; microbatch | scalar (event-driven stepping)
 //! coalesce = 0            ; micro-batch coalescing window in ticks
+//! exec = auto             ; auto | dense | sparse (kernel family dispatch)
 //! ```
 
 use crate::data::dataset::Dataset;
 use crate::data::synthetic::{reuters_like, spambase_like, urls_like, Scale};
 use crate::gossip::create_model::Variant;
-use crate::gossip::protocol::{ExecMode, ProtocolConfig};
+use crate::gossip::protocol::{ExecMode, ExecPath, ProtocolConfig};
 use crate::learning::Learner;
 use crate::p2p::overlay::SamplerConfig;
 use std::collections::HashMap;
@@ -83,6 +84,8 @@ pub struct ExperimentSpec {
     pub mode: String,
     /// micro-batch coalescing window in ticks (0 = exact-timestamp batching)
     pub coalesce: u64,
+    /// kernel-family dispatch: auto (density-based), dense, or sparse
+    pub exec_path: ExecPath,
 }
 
 impl Default for ExperimentSpec {
@@ -105,6 +108,7 @@ impl Default for ExperimentSpec {
             backend: BackendChoice::Event,
             mode: "microbatch".into(),
             coalesce: 0,
+            exec_path: ExecPath::Auto,
         }
     }
 }
@@ -158,6 +162,10 @@ impl ExperimentSpec {
                     _ => return Err(format!("bad mode {v:?}")),
                 },
                 "coalesce" => self.coalesce = parse(v, k)?,
+                "exec" => {
+                    self.exec_path =
+                        ExecPath::parse(v).ok_or(format!("bad exec {v:?}"))?
+                }
                 _ => return Err(format!("unknown key {k:?}")),
             }
         }
@@ -198,6 +206,7 @@ impl ExperimentSpec {
             "microbatch" => ExecMode::MicroBatch { coalesce: self.coalesce },
             other => return Err(format!("bad mode {other:?}")),
         };
+        cfg.path = self.exec_path;
         if self.failures {
             cfg = cfg.with_extreme_failures();
         }
@@ -299,6 +308,23 @@ backend = batched-native
         kv.insert("mode".to_string(), "warp".to_string());
         assert!(ExperimentSpec::default().apply(&kv).is_err());
         assert_eq!(BackendChoice::parse("event-pjrt"), Some(BackendChoice::EventPjrt));
+    }
+
+    #[test]
+    fn exec_key_maps_to_exec_path() {
+        let mut spec = ExperimentSpec { scale: 0.01, ..Default::default() };
+        assert_eq!(spec.protocol_config().unwrap().path, ExecPath::Auto);
+        let mut kv = HashMap::new();
+        kv.insert("exec".to_string(), "sparse".to_string());
+        spec.apply(&kv).unwrap();
+        assert_eq!(spec.protocol_config().unwrap().path, ExecPath::Sparse);
+        let mut kv = HashMap::new();
+        kv.insert("exec".to_string(), "dense".to_string());
+        spec.apply(&kv).unwrap();
+        assert_eq!(spec.protocol_config().unwrap().path, ExecPath::Dense);
+        let mut kv = HashMap::new();
+        kv.insert("exec".to_string(), "warp".to_string());
+        assert!(spec.apply(&kv).is_err());
     }
 
     #[test]

@@ -17,13 +17,7 @@ impl Row<'_> {
     pub fn dot(&self, w: &[f32]) -> f32 {
         match self {
             Row::Dense(x) => dense_dot(x, w),
-            Row::Sparse(idx, val) => {
-                let mut s = 0.0;
-                for (&j, &v) in idx.iter().zip(*val) {
-                    s += v * w[j as usize];
-                }
-                s
-            }
+            Row::Sparse(idx, val) => sparse_dot(idx, val, w),
         }
     }
 
@@ -68,6 +62,20 @@ impl Row<'_> {
             }
         }
     }
+}
+
+/// O(nnz) dot of a sparse row (indices, values) against a dense vector — the
+/// single sparse-dot implementation shared by [`Row::dot`] (model margins,
+/// `Predictor` voting), the engine's O(nnz) row kernels, and the batched
+/// sparse evaluator.  Terms accumulate in index order, so every caller sees
+/// the same float rounding.
+#[inline]
+pub fn sparse_dot(idx: &[u32], val: &[f32], w: &[f32]) -> f32 {
+    let mut s = 0.0;
+    for (&j, &v) in idx.iter().zip(val) {
+        s += v * w[j as usize];
+    }
+    s
 }
 
 #[inline]
@@ -119,6 +127,41 @@ impl Examples {
             Examples::Sparse(m) => {
                 let (idx, val) = m.row(i);
                 Row::Sparse(idx, val)
+            }
+        }
+    }
+
+    /// Fraction of non-zero entries, nnz / (n · d) — the quantity the
+    /// density-based sparse/dense execution dispatch thresholds on.
+    pub fn density(&self) -> f64 {
+        let cells = (self.n() * self.d()).max(1) as f64;
+        match self {
+            Examples::Dense(m) => {
+                m.as_slice().iter().filter(|&&v| v != 0.0).count() as f64 / cells
+            }
+            Examples::Sparse(m) => m.nnz() as f64 / cells,
+        }
+    }
+
+    /// Copy the examples into CSR form.  Used when the sparse execution path
+    /// is forced (`--exec sparse`) on a densely stored dataset; sparse
+    /// storage is cloned as-is.
+    pub fn to_csr(&self) -> Csr {
+        match self {
+            Examples::Sparse(m) => m.clone(),
+            Examples::Dense(m) => {
+                let mut out = Csr::new(m.cols);
+                let mut entries: Vec<(u32, f32)> = Vec::new();
+                for i in 0..m.rows {
+                    entries.clear();
+                    for (j, &v) in m.row(i).iter().enumerate() {
+                        if v != 0.0 {
+                            entries.push((j as u32, v));
+                        }
+                    }
+                    out.push_row(&entries);
+                }
+                out
             }
         }
     }
@@ -235,5 +278,36 @@ mod tests {
     #[test]
     fn class_counts() {
         assert_eq!(tiny().class_counts(), (1, 1));
+    }
+
+    #[test]
+    fn density_counts_nonzeros_for_both_storages() {
+        let ds = tiny(); // 2x3 train with 2 non-zeros
+        assert!((ds.train.density() - 2.0 / 6.0).abs() < 1e-12);
+        let mut csr = Csr::new(4);
+        csr.push_row(&[(0, 1.0), (2, 2.0)]);
+        csr.push_row(&[(3, -1.0)]);
+        assert!((Examples::Sparse(csr).density() - 3.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn to_csr_roundtrips_dense_rows() {
+        let ds = tiny();
+        let csr = ds.train.to_csr();
+        assert_eq!(csr.rows, 2);
+        assert_eq!(csr.cols, 3);
+        let mut out = vec![0.0; 3];
+        for i in 0..2 {
+            csr.row_to_dense(i, &mut out);
+            if let Examples::Dense(m) = &ds.train {
+                assert_eq!(out, m.row(i));
+            }
+        }
+        // sparse storage is cloned verbatim
+        let mut sp = Csr::new(2);
+        sp.push_row(&[(1, 4.0)]);
+        let ex = Examples::Sparse(sp);
+        let back = ex.to_csr();
+        assert_eq!(back.row(0), (&[1u32][..], &[4.0f32][..]));
     }
 }

@@ -17,12 +17,39 @@ impl Csr {
     }
 
     /// Append a row given (sorted or unsorted) index/value pairs.
+    ///
+    /// The stored row is canonical CSR: strictly increasing column indices
+    /// with duplicate entries summed and exact zeros dropped.  The
+    /// merge-based sparse dots and the engine's O(nnz) row kernels rely on
+    /// sorted rows, so canonicalization happens here, on insert.
     pub fn push_row(&mut self, entries: &[(u32, f32)]) {
-        for &(i, v) in entries {
-            assert!((i as usize) < self.cols, "column index out of range");
-            if v != 0.0 {
-                self.indices.push(i);
-                self.values.push(v);
+        let sorted = entries.windows(2).all(|w| w[0].0 < w[1].0);
+        if sorted {
+            // common case (libsvm files and the synthetic generators emit
+            // sorted rows): no allocation, no re-ordering
+            for &(i, v) in entries {
+                assert!((i as usize) < self.cols, "column index out of range");
+                if v != 0.0 {
+                    self.indices.push(i);
+                    self.values.push(v);
+                }
+            }
+        } else {
+            let mut es = entries.to_vec();
+            es.sort_by_key(|e| e.0);
+            let mut k = 0;
+            while k < es.len() {
+                let (i, mut v) = es[k];
+                assert!((i as usize) < self.cols, "column index out of range");
+                k += 1;
+                while k < es.len() && es[k].0 == i {
+                    v += es[k].1;
+                    k += 1;
+                }
+                if v != 0.0 {
+                    self.indices.push(i);
+                    self.values.push(v);
+                }
             }
         }
         self.rows += 1;
@@ -72,6 +99,22 @@ mod tests {
         let mut m = Csr::new(3);
         m.push_row(&[(0, 0.0), (1, 2.0)]);
         assert_eq!(m.nnz(), 1);
+    }
+
+    #[test]
+    fn unsorted_and_duplicate_entries_are_canonicalized() {
+        let mut m = Csr::new(6);
+        // unsorted, with a duplicated column (3) and a pair that cancels (5)
+        m.push_row(&[(3, 1.0), (0, 2.0), (3, 0.5), (5, 1.0), (1, -1.0), (5, -1.0)]);
+        assert_eq!(m.row(0), (&[0u32, 1, 3][..], &[2.0f32, -1.0, 1.5][..]));
+        // sorted input is stored as-is
+        m.push_row(&[(2, 4.0), (4, -3.0)]);
+        assert_eq!(m.row(1), (&[2u32, 4][..], &[4.0f32, -3.0][..]));
+        // every stored row ends up strictly increasing
+        for i in 0..m.rows {
+            let (idx, _) = m.row(i);
+            assert!(idx.windows(2).all(|w| w[0] < w[1]), "row {i} not sorted");
+        }
     }
 
     #[test]

@@ -15,7 +15,7 @@
 //! identical schedules.
 
 use crate::data::dataset::Dataset;
-use crate::engine::{Backend, StepBatch, StepOp, MAX_BATCH_ROWS};
+use crate::engine::{eval_peer_errors, Backend, StepBatch, StepOp, MAX_BATCH_ROWS};
 use crate::eval::tracker::{point_from_errors, Curve};
 use crate::eval::{self};
 use crate::gossip::protocol::{ProtocolConfig, RunResult, RunStats};
@@ -25,11 +25,6 @@ use crate::sim::churn::ChurnSchedule;
 use crate::util::rng::Rng;
 use anyhow::Result;
 use std::collections::HashMap;
-
-/// Test-set rows per eval chunk (matches the eval artifact bucket).
-const EVAL_CHUNK: usize = 1024;
-/// Models per eval call (matches the eval artifact bucket).
-const EVAL_MODELS: usize = 128;
 
 struct PendingMsg {
     dst: usize,
@@ -224,46 +219,19 @@ impl<'a, B: Backend> BatchedSim<'a, B> {
         Ok(RunResult { curve, stats: self.stats })
     }
 
-    /// 0-1 error of every eval peer's freshest model via batched
-    /// `error_counts` over test-set chunks.
+    /// 0-1 error of every eval peer's freshest model via the shared
+    /// sparse-aware chunked evaluator (`engine::eval_peer_errors`): dense
+    /// test sets score zero-copy off their storage on the native backend,
+    /// sparse ones through O(nnz) sparse dots, and the PJRT backend
+    /// densifies per chunk into its compiled buckets.
     fn measure_errors(&mut self, eval_peers: &[usize]) -> Result<Vec<f64>> {
-        let d = self.data.d();
-        let n_test = self.data.n_test();
-        let mut errs = vec![0.0f64; eval_peers.len()];
-
-        let mut xchunk = vec![0.0f32; EVAL_CHUNK.min(n_test) * d];
-        for (group_idx, mgroup) in eval_peers.chunks(EVAL_MODELS).enumerate() {
-            let m = mgroup.len();
-            let mut w = vec![0.0f32; m * d];
-            for (j, &p) in mgroup.iter().enumerate() {
-                w[j * d..(j + 1) * d].copy_from_slice(self.store.freshest(p));
-            }
-            let mut counts = vec![0.0f64; m];
-            let mut row = 0;
-            while row < n_test {
-                let rows = EVAL_CHUNK.min(n_test - row);
-                xchunk.resize(rows * d, 0.0);
-                let mut ychunk = vec![0.0f32; rows];
-                for i in 0..rows {
-                    self.data
-                        .test
-                        .row(row + i)
-                        .write_dense(&mut xchunk[i * d..(i + 1) * d]);
-                    ychunk[i] = self.data.test_y[row + i];
-                }
-                let c = self
-                    .backend
-                    .error_counts(&xchunk, &ychunk, rows, d, &w, m)?;
-                for (acc, v) in counts.iter_mut().zip(&c) {
-                    *acc += *v as f64;
-                }
-                row += rows;
-            }
-            for (j, c) in counts.iter().enumerate() {
-                errs[group_idx * EVAL_MODELS + j] = c / n_test as f64;
-            }
-        }
-        Ok(errs)
+        eval_peer_errors(
+            &self.store,
+            eval_peers,
+            &mut *self.backend,
+            &self.data.test,
+            &self.data.test_y,
+        )
     }
 }
 

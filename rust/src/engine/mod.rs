@@ -18,7 +18,9 @@ pub mod batched;
 pub mod native;
 pub mod pjrt;
 
+use crate::data::dataset::Examples;
 use crate::gossip::create_model::Variant;
+use crate::gossip::state::ModelStore;
 use crate::learning::Learner;
 use anyhow::Result;
 
@@ -26,6 +28,12 @@ use anyhow::Result;
 /// bucket.  Shared by the cycle-synchronous driver and the event-driven
 /// micro-batch flush so both chunk identically.
 pub const MAX_BATCH_ROWS: usize = 1024;
+
+/// Test-set rows per batched-evaluation chunk (matches the eval artifact
+/// bucket).
+pub const EVAL_CHUNK: usize = 1024;
+/// Models per batched-evaluation call (matches the eval artifact bucket).
+pub const EVAL_MODELS: usize = 128;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum LearnerKind {
@@ -68,6 +76,17 @@ impl StepOp {
 
 /// Reusable batch buffers (flat row-major `[b, d]` matrices plus `[b]`
 /// vectors). `w2`/`t2` are ignored for the RW variant.
+///
+/// Two layouts share the struct (DESIGN.md §7):
+///
+/// * **Dense** (`resize`): examples live in the dense `x` buffer, scales are
+///   all 1, and the backend writes results to `out_w`/`out_t`.
+/// * **Sparse** (`resize_for(.., true)` + `push_sparse_x_row`): examples are
+///   staged as a CSR payload (`x_indptr`/`x_indices`/`x_values`), model rows
+///   carry per-row lazy scales `s1`/`s2` (effective weights are `s * w`),
+///   and the O(nnz) kernels update `w1` **in place**, returning the final
+///   scale in `out_s` and the counter in `out_t` (`w2` is clobbered as
+///   scratch by the UM variant; `x`/`out_w` are unused and kept empty).
 #[derive(Clone, Debug, Default)]
 pub struct StepBatch {
     pub b: usize,
@@ -80,10 +99,21 @@ pub struct StepBatch {
     pub y: Vec<f32>,
     pub out_w: Vec<f32>,
     pub out_t: Vec<f32>,
+    /// per-row lazy scale of `w1` rows (sparse layout; 1.0 otherwise)
+    pub s1: Vec<f32>,
+    /// per-row lazy scale of `w2` rows (sparse layout; 1.0 otherwise)
+    pub s2: Vec<f32>,
+    /// per-row result scale written by sparse kernels (result = out_s * w1)
+    pub out_s: Vec<f32>,
+    /// CSR row pointers of the sparse example payload (`b + 1` entries when
+    /// staged; empty in the dense layout)
+    pub x_indptr: Vec<usize>,
+    pub x_indices: Vec<u32>,
+    pub x_values: Vec<f32>,
 }
 
 impl StepBatch {
-    /// Resize the buffers for a `[b, d]` batch.
+    /// Resize the buffers for a dense `[b, d]` batch.
     ///
     /// Callers always refill `w1`/`t1`/`x`/`y` for every live row, but `w2`/
     /// `t2` are only filled for merge variants and `out_*` only written by
@@ -94,23 +124,105 @@ impl StepBatch {
     /// observe stale data through an unfilled optional input or a read-back
     /// of an unwritten output row.
     pub fn resize(&mut self, b: usize, d: usize) {
+        self.resize_for(b, d, false);
+    }
+
+    /// Resize for a `[b, d]` batch in the dense or sparse layout.
+    ///
+    /// The CSR payload is reset on every call: sparse callers follow up with
+    /// one [`StepBatch::push_sparse_x_row`] per row, in row order.  In the
+    /// sparse layout the dense `x`/`out_w` buffers are released to zero
+    /// length — at Reuters scale (d = 9947) they would otherwise pin tens of
+    /// megabytes that the O(nnz) path never touches.
+    pub fn resize_for(&mut self, b: usize, d: usize, sparse: bool) {
         let changed = self.b != b || self.d != d;
         self.b = b;
         self.d = d;
+        let dense_len = if sparse { 0 } else { b * d };
         self.w1.resize(b * d, 0.0);
         self.w2.resize(b * d, 0.0);
-        self.x.resize(b * d, 0.0);
+        self.x.resize(dense_len, 0.0);
         self.t1.resize(b, 0.0);
         self.t2.resize(b, 0.0);
         self.y.resize(b, 0.0);
-        self.out_w.resize(b * d, 0.0);
+        self.out_w.resize(dense_len, 0.0);
         self.out_t.resize(b, 0.0);
+        self.s1.resize(b, 1.0);
+        self.s2.resize(b, 1.0);
+        self.out_s.resize(b, 1.0);
+        self.x_indptr.clear();
+        self.x_indices.clear();
+        self.x_values.clear();
+        if sparse {
+            self.x_indptr.push(0);
+        }
         if changed {
             self.w2.fill(0.0);
             self.t2.fill(0.0);
             self.out_w.fill(0.0);
             self.out_t.fill(0.0);
+            self.s1.fill(1.0);
+            self.s2.fill(1.0);
+            self.out_s.fill(1.0);
         }
+    }
+
+    /// Append the next row's sparse example (sorted column indices + values)
+    /// to the CSR payload.
+    pub fn push_sparse_x_row(&mut self, idx: &[u32], val: &[f32]) {
+        debug_assert_eq!(idx.len(), val.len());
+        debug_assert!(!self.x_indptr.is_empty(), "resize_for(.., true) first");
+        debug_assert!(self.x_indptr.len() <= self.b, "more sparse rows than b");
+        self.x_indices.extend_from_slice(idx);
+        self.x_values.extend_from_slice(val);
+        self.x_indptr.push(self.x_indices.len());
+    }
+
+    /// Row `i` of the CSR example payload.
+    #[inline]
+    pub fn sparse_x_row(&self, i: usize) -> (&[u32], &[f32]) {
+        let (a, b) = (self.x_indptr[i], self.x_indptr[i + 1]);
+        (&self.x_indices[a..b], &self.x_values[a..b])
+    }
+
+    /// Whether a complete sparse example payload is staged (one CSR row per
+    /// batch row).
+    #[inline]
+    pub fn is_sparse_x(&self) -> bool {
+        self.x_indptr.len() == self.b + 1
+    }
+
+    /// Convert a staged sparse batch to the dense layout: scatter the CSR
+    /// payload into `x` and fold the lazy scales into the `w1`/`w2` rows.
+    /// Used by backends whose compiled graphs are dense (the PJRT shape
+    /// buckets); afterwards the batch is a plain dense batch with scales 1.
+    pub fn densify(&mut self) {
+        let (b, d) = (self.b, self.d);
+        self.x.resize(b * d, 0.0);
+        self.x.fill(0.0);
+        self.out_w.resize(b * d, 0.0);
+        self.out_w.fill(0.0);
+        for i in 0..b {
+            let (lo, hi) = (self.x_indptr[i], self.x_indptr[i + 1]);
+            for (&j, &v) in self.x_indices[lo..hi].iter().zip(&self.x_values[lo..hi]) {
+                self.x[i * d + j as usize] = v;
+            }
+            if self.s1[i] != 1.0 {
+                for w in &mut self.w1[i * d..(i + 1) * d] {
+                    *w *= self.s1[i];
+                }
+                self.s1[i] = 1.0;
+            }
+            if self.s2[i] != 1.0 {
+                for w in &mut self.w2[i * d..(i + 1) * d] {
+                    *w *= self.s2[i];
+                }
+                self.s2[i] = 1.0;
+            }
+        }
+        self.x_indptr.clear();
+        self.x_indices.clear();
+        self.x_values.clear();
     }
 }
 
@@ -118,12 +230,28 @@ impl StepBatch {
 pub trait Backend {
     fn name(&self) -> &'static str;
 
-    /// Apply `op` to every row of the batch, writing `out_w`/`out_t`.
+    /// Apply `op` to every row of the batch.
+    ///
+    /// Dense layout: results are written to `out_w`/`out_t`.  Sparse layout
+    /// (`batch.is_sparse_x()`): result weights land **in place** in `w1`
+    /// with their lazy scale in `out_s` and the counter in `out_t`; backends
+    /// without sparse kernels may [`StepBatch::densify`] first and copy
+    /// `out_w` back into `w1` to honor the same contract.
     fn step(&mut self, op: &StepOp, batch: &mut StepBatch) -> Result<()>;
+
+    /// Whether this backend executes CSR-staged batches with true O(nnz)
+    /// kernels.  `false` means sparse batches are densified on entry
+    /// ([`StepBatch::densify`]) — correct but strictly slower than plain
+    /// dense staging, so automatic dispatch should only pick the sparse
+    /// path when this returns `true`.
+    fn supports_sparse(&self) -> bool {
+        false
+    }
 
     /// Misclassification counts: `x` is a dense `[n, d]` test chunk with
     /// labels `y` (0 = padding row), `w` a `[m, d]` model batch; returns the
-    /// per-model count of rows with `y * <w, x> <= 0`.
+    /// per-model count of misclassified rows under the repo-wide
+    /// sign(0) = -1 convention (a zero margin errs on positives only).
     fn error_counts(
         &mut self,
         x: &[f32],
@@ -133,6 +261,70 @@ pub trait Backend {
         w: &[f32],
         m: usize,
     ) -> Result<Vec<f32>>;
+
+    /// Misclassification counts of `m` models (`w` is `[m, d]` materialized
+    /// weights) over a whole test set, chunked into [`EVAL_CHUNK`]-row
+    /// engine passes.
+    ///
+    /// The default implementation densifies each chunk and calls
+    /// [`Backend::error_counts`] — what the PJRT backend's dense shape
+    /// buckets need.  The native backend overrides it with a zero-copy dense
+    /// pass / O(nnz) sparse-dot pass per storage kind.
+    fn error_counts_examples(
+        &mut self,
+        test: &Examples,
+        y: &[f32],
+        w: &[f32],
+        m: usize,
+    ) -> Result<Vec<f32>> {
+        let (n, d) = (test.n(), test.d());
+        let mut counts = vec![0.0f32; m];
+        let mut xchunk = vec![0.0f32; EVAL_CHUNK.min(n) * d];
+        let mut row = 0;
+        while row < n {
+            let rows = EVAL_CHUNK.min(n - row);
+            xchunk.resize(rows * d, 0.0);
+            for i in 0..rows {
+                test.row(row + i).write_dense(&mut xchunk[i * d..(i + 1) * d]);
+            }
+            let c = self.error_counts(&xchunk, &y[row..row + rows], rows, d, w, m)?;
+            for (acc, v) in counts.iter_mut().zip(&c) {
+                *acc += v;
+            }
+            row += rows;
+        }
+        Ok(counts)
+    }
+}
+
+/// 0-1 error of each listed peer's freshest model over the whole test set,
+/// via the backend's sparse-aware chunked evaluator: peers are staged as
+/// `[m, d]` batches of materialized weights ([`EVAL_MODELS`] per engine
+/// call).  Shared by the event-driven (`gossip/protocol.rs`) and
+/// cycle-synchronous (`engine/batched.rs`) drivers so their measurement
+/// semantics cannot drift.
+pub fn eval_peer_errors<B: Backend + ?Sized>(
+    store: &ModelStore,
+    peers: &[usize],
+    backend: &mut B,
+    test: &Examples,
+    y: &[f32],
+) -> Result<Vec<f64>> {
+    let d = store.d();
+    let n_test = test.n().max(1);
+    let mut errs = Vec::with_capacity(peers.len());
+    let mut w = Vec::new();
+    for group in peers.chunks(EVAL_MODELS) {
+        let m = group.len();
+        w.clear();
+        w.resize(m * d, 0.0);
+        for (j, &p) in group.iter().enumerate() {
+            store.write_freshest_into(p, &mut w[j * d..(j + 1) * d]);
+        }
+        let counts = backend.error_counts_examples(test, y, &w, m)?;
+        errs.extend(counts.iter().map(|&c| c as f64 / n_test as f64));
+    }
+    Ok(errs)
 }
 
 #[cfg(test)]
@@ -175,6 +367,44 @@ mod tests {
         sb.resize(2, 2); // no-op geometry: caller-visible state preserved
         assert!(sb.w1.iter().all(|&v| v == 3.0));
         assert!(sb.w2.iter().all(|&v| v == 3.0));
+    }
+
+    #[test]
+    fn sparse_layout_stages_csr_and_flips_back_to_dense() {
+        let mut sb = StepBatch::default();
+        sb.resize_for(2, 4, true);
+        assert!(sb.x.is_empty() && sb.out_w.is_empty());
+        assert!(!sb.is_sparse_x(), "payload not staged yet");
+        sb.push_sparse_x_row(&[1, 3], &[2.0, -1.0]);
+        sb.push_sparse_x_row(&[0], &[5.0]);
+        assert!(sb.is_sparse_x());
+        assert_eq!(sb.sparse_x_row(0), (&[1u32, 3][..], &[2.0f32, -1.0][..]));
+        assert_eq!(sb.sparse_x_row(1), (&[0u32][..], &[5.0f32][..]));
+        assert_eq!(sb.s1, vec![1.0, 1.0]);
+        // same geometry, dense layout: buffers come back, payload resets
+        sb.resize(2, 4);
+        assert!(!sb.is_sparse_x());
+        assert_eq!(sb.x.len(), 8);
+        assert_eq!(sb.out_w.len(), 8);
+    }
+
+    #[test]
+    fn densify_scatters_x_and_folds_scales() {
+        let mut sb = StepBatch::default();
+        sb.resize_for(2, 3, true);
+        sb.w1.copy_from_slice(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        sb.w2.copy_from_slice(&[1.0; 6]);
+        sb.s1[0] = 0.5;
+        sb.s2[1] = 2.0;
+        sb.push_sparse_x_row(&[2], &[7.0]);
+        sb.push_sparse_x_row(&[0, 1], &[1.0, -1.0]);
+        sb.densify();
+        assert!(!sb.is_sparse_x());
+        assert_eq!(sb.x, vec![0.0, 0.0, 7.0, 1.0, -1.0, 0.0]);
+        assert_eq!(sb.w1, vec![0.5, 1.0, 1.5, 4.0, 5.0, 6.0]);
+        assert_eq!(sb.w2, vec![1.0, 1.0, 1.0, 2.0, 2.0, 2.0]);
+        assert_eq!(sb.s1, vec![1.0, 1.0]);
+        assert_eq!(sb.s2, vec![1.0, 1.0]);
     }
 
     #[test]

@@ -1,8 +1,19 @@
 //! Native (pure Rust) batched backend — the written-down semantics of the
 //! hot path, mirroring python/compile/kernels/ref.py line for line.
+//!
+//! Two kernel families (DESIGN.md §7):
+//!
+//! * **Dense** rows: one pass over all `d` coordinates per update, exactly
+//!   ref.py's math (decay computed as `1 - ηλ`).
+//! * **Sparse** rows (CSR-staged batches): O(nnz) kernels that mirror the
+//!   scalar lazy-scale path of `learning/` op for op — the `1 - ηλ = 1 - 1/t`
+//!   decay folds into the per-row scale (O(1), with the shared `SCALE_FLOOR`
+//!   re-materialization) and the example touches only non-zero coordinates.
 
+use crate::data::dataset::{sparse_dot, Examples};
 use crate::engine::{Backend, LearnerKind, StepBatch, StepOp};
 use crate::gossip::create_model::Variant;
+use crate::learning::linear::{add_scaled_sparse_in_place, scale_in_place};
 use anyhow::Result;
 
 #[derive(Debug, Default)]
@@ -65,6 +76,138 @@ impl NativeBackend {
             LearnerKind::LogReg => Self::logreg_row(w, x, y, t, op.hp),
         }
     }
+
+    /// Pegasos on one lazy-scaled row, O(nnz): mirrors
+    /// `learning::pegasos::Pegasos::update` op for op.
+    fn pegasos_row_sparse(
+        w: &mut [f32],
+        s: &mut f32,
+        idx: &[u32],
+        val: &[f32],
+        y: f32,
+        t: &mut f32,
+        lam: f32,
+    ) {
+        *t += 1.0;
+        let eta = 1.0 / (lam * *t);
+        let margin = y * (*s * sparse_dot(idx, val, w));
+        scale_in_place(w, s, 1.0 - 1.0 / *t);
+        if margin < 1.0 {
+            add_scaled_sparse_in_place(w, s, eta * y, idx, val);
+        }
+    }
+
+    /// Adaline on one lazy-scaled row, O(nnz): mirrors
+    /// `learning::adaline::Adaline::update` (no decay; the scale only changes
+    /// through the dead-model reset).
+    fn adaline_row_sparse(
+        w: &mut [f32],
+        s: &mut f32,
+        idx: &[u32],
+        val: &[f32],
+        y: f32,
+        t: &mut f32,
+        eta: f32,
+    ) {
+        let err = y - *s * sparse_dot(idx, val, w);
+        add_scaled_sparse_in_place(w, s, eta * err, idx, val);
+        *t += 1.0;
+    }
+
+    /// Logistic regression on one lazy-scaled row, O(nnz): mirrors
+    /// `learning::logreg::LogReg::update` op for op.
+    fn logreg_row_sparse(
+        w: &mut [f32],
+        s: &mut f32,
+        idx: &[u32],
+        val: &[f32],
+        y: f32,
+        t: &mut f32,
+        lam: f32,
+    ) {
+        *t += 1.0;
+        let eta = 1.0 / (lam * *t);
+        let z = *s * sparse_dot(idx, val, w);
+        let p = 1.0 / (1.0 + (-z).exp());
+        let y01 = (y + 1.0) * 0.5;
+        scale_in_place(w, s, 1.0 - 1.0 / *t);
+        add_scaled_sparse_in_place(w, s, eta * (y01 - p), idx, val);
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn update_row_sparse(
+        op: &StepOp,
+        w: &mut [f32],
+        s: &mut f32,
+        idx: &[u32],
+        val: &[f32],
+        y: f32,
+        t: &mut f32,
+    ) {
+        match op.learner {
+            LearnerKind::Pegasos => Self::pegasos_row_sparse(w, s, idx, val, y, t, op.hp),
+            LearnerKind::Adaline => Self::adaline_row_sparse(w, s, idx, val, y, t, op.hp),
+            LearnerKind::LogReg => Self::logreg_row_sparse(w, s, idx, val, y, t, op.hp),
+        }
+    }
+
+    /// The O(nnz) execution of a CSR-staged batch (see the sparse contract on
+    /// [`Backend::step`]): per row, only the scale, the counter, and the
+    /// example's non-zero coordinates are touched for RW; the merge variants
+    /// additionally pay one O(d) averaging pass (models are dense, so
+    /// averaging two of them is inherently O(d)).
+    fn step_sparse(&mut self, op: &StepOp, batch: &mut StepBatch) -> Result<()> {
+        let (b, d) = (batch.b, batch.d);
+        for i in 0..b {
+            let r = i * d..(i + 1) * d;
+            let (lo, hi) = (batch.x_indptr[i], batch.x_indptr[i + 1]);
+            let idx = &batch.x_indices[lo..hi];
+            let val = &batch.x_values[lo..hi];
+            let y = batch.y[i];
+            match op.variant {
+                Variant::Rw => {
+                    let w = &mut batch.w1[r];
+                    let mut s = batch.s1[i];
+                    let mut t = batch.t1[i];
+                    Self::update_row_sparse(op, w, &mut s, idx, val, y, &mut t);
+                    batch.out_s[i] = s;
+                    batch.out_t[i] = t;
+                }
+                Variant::Mu => {
+                    // merge in place: w1 <- (s1*w1 + s2*w2)/2, then update
+                    let w = &mut batch.w1[r.clone()];
+                    let w2 = &batch.w2[r];
+                    let (s1, s2) = (batch.s1[i], batch.s2[i]);
+                    for (a, &bb) in w.iter_mut().zip(w2) {
+                        *a = 0.5 * (s1 * *a + s2 * bb);
+                    }
+                    let mut s = 1.0f32;
+                    let mut t = batch.t1[i].max(batch.t2[i]);
+                    Self::update_row_sparse(op, w, &mut s, idx, val, y, &mut t);
+                    batch.out_s[i] = s;
+                    batch.out_t[i] = t;
+                }
+                Variant::Um => {
+                    // update both rows in place with the same local example,
+                    // then average into w1 (w2 is scratch per the contract)
+                    let w1 = &mut batch.w1[r.clone()];
+                    let mut s1 = batch.s1[i];
+                    let mut t1 = batch.t1[i];
+                    Self::update_row_sparse(op, w1, &mut s1, idx, val, y, &mut t1);
+                    let w2 = &mut batch.w2[r];
+                    let mut s2 = batch.s2[i];
+                    let mut t2 = batch.t2[i];
+                    Self::update_row_sparse(op, w2, &mut s2, idx, val, y, &mut t2);
+                    for (a, &bb) in w1.iter_mut().zip(w2.iter()) {
+                        *a = 0.5 * (s1 * *a + s2 * bb);
+                    }
+                    batch.out_s[i] = 1.0;
+                    batch.out_t[i] = t1.max(t2);
+                }
+            }
+        }
+        Ok(())
+    }
 }
 
 #[inline]
@@ -77,7 +220,14 @@ impl Backend for NativeBackend {
         "native"
     }
 
+    fn supports_sparse(&self) -> bool {
+        true
+    }
+
     fn step(&mut self, op: &StepOp, batch: &mut StepBatch) -> Result<()> {
+        if batch.is_sparse_x() {
+            return self.step_sparse(op, batch);
+        }
         let (b, d) = (batch.b, batch.d);
         for i in 0..b {
             let r = i * d..(i + 1) * d;
@@ -138,13 +288,56 @@ impl Backend for NativeBackend {
             }
             let xi = &x[i * d..(i + 1) * d];
             for (j, c) in counts.iter_mut().enumerate() {
-                let margin = y[i] * dot(&w[j * d..(j + 1) * d], xi);
-                if margin <= 0.0 {
+                let z = dot(&w[j * d..(j + 1) * d], xi);
+                if miss(y[i], z) {
                     *c += 1.0;
                 }
             }
         }
         Ok(counts)
+    }
+
+    /// Sparse-aware batched evaluation: a dense test set is scored zero-copy
+    /// straight off its `[n, d]` storage; a sparse one through O(nnz)
+    /// sparse dots per (row, model) pair — no chunk densification either way.
+    fn error_counts_examples(
+        &mut self,
+        test: &Examples,
+        y: &[f32],
+        w: &[f32],
+        m: usize,
+    ) -> Result<Vec<f32>> {
+        let d = test.d();
+        match test {
+            Examples::Dense(mat) => self.error_counts(mat.as_slice(), y, mat.rows, d, w, m),
+            Examples::Sparse(csr) => {
+                let mut counts = vec![0.0f32; m];
+                for i in 0..csr.rows {
+                    if y[i] == 0.0 {
+                        continue;
+                    }
+                    let (idx, val) = csr.row(i);
+                    for (j, c) in counts.iter_mut().enumerate() {
+                        let z = sparse_dot(idx, val, &w[j * d..(j + 1) * d]);
+                        if miss(y[i], z) {
+                            *c += 1.0;
+                        }
+                    }
+                }
+                Ok(counts)
+            }
+        }
+    }
+}
+
+/// The repo-wide 0-1 convention (eval/metrics.rs): sign(0) = -1, so a zero
+/// margin errs on positive examples only.
+#[inline]
+fn miss(y: f32, dot: f32) -> bool {
+    if y > 0.0 {
+        dot <= 0.0
+    } else {
+        dot > 0.0
     }
 }
 
@@ -245,5 +438,91 @@ mod tests {
         let w = vec![1.0, 0.0, /* model 0: perfect */ -1.0, 0.0 /* model 1: inverted */];
         let c = be.error_counts(&x, &y, 3, 2, &w, 2).unwrap();
         assert_eq!(c, vec![0.0, 2.0]);
+    }
+
+    #[test]
+    fn error_counts_zero_margin_follows_sign_convention() {
+        // sign(0) = -1: the zero model is correct on negatives, wrong on
+        // positives — pinned against eval::zero_one_error semantics.
+        let mut be = NativeBackend::new();
+        let x = vec![1.0, 0.0, -1.0, 0.0];
+        let y = vec![1.0, -1.0];
+        let w = vec![0.0, 0.0];
+        let c = be.error_counts(&x, &y, 2, 2, &w, 1).unwrap();
+        assert_eq!(c, vec![1.0]);
+    }
+
+    #[test]
+    fn sparse_rw_step_exactly_matches_scalar_lazy_scale_path() {
+        // The O(nnz) kernels mirror learning/'s lazy-scale ops one for one,
+        // so a chained in-place RW run is bit-for-bit the scalar path.
+        let mut rng = Rng::new(21);
+        let d = 23;
+        for (op, learner) in [
+            (
+                StepOp { learner: LearnerKind::Pegasos, variant: Variant::Rw, hp: 0.05 },
+                Learner::pegasos(0.05),
+            ),
+            (
+                StepOp { learner: LearnerKind::Adaline, variant: Variant::Rw, hp: 0.1 },
+                Learner::adaline(0.1),
+            ),
+            (
+                StepOp { learner: LearnerKind::LogReg, variant: Variant::Rw, hp: 0.05 },
+                Learner::logreg(0.05),
+            ),
+        ] {
+            let mut be = NativeBackend::new();
+            let mut sb = StepBatch::default();
+            let mut model = LinearModel::zeros(d);
+            sb.resize_for(1, d, true);
+            for _ in 0..60 {
+                let mut idx: Vec<u32> = (0..4).map(|_| rng.below(d as u64) as u32).collect();
+                idx.sort_unstable();
+                idx.dedup();
+                let val: Vec<f32> = idx.iter().map(|_| rng.normal() as f32).collect();
+                let y = rng.sign();
+                sb.resize_for(1, d, true); // keeps w1/s1/t1, resets the CSR payload
+                sb.push_sparse_x_row(&idx, &val);
+                sb.y[0] = y;
+                be.step(&op, &mut sb).unwrap();
+                // chain: carry the in-place result forward as the next input
+                sb.s1[0] = sb.out_s[0];
+                sb.t1[0] = sb.out_t[0];
+                learner.update(&mut model, &Row::Sparse(&idx, &val), y);
+            }
+            let eff: Vec<f32> = sb.w1.iter().map(|&w| w * sb.s1[0]).collect();
+            assert_eq!(eff, model.weights(), "{:?}", op.learner);
+            assert_eq!(sb.t1[0], model.t as f32, "{:?}", op.learner);
+        }
+    }
+
+    #[test]
+    fn error_counts_examples_sparse_matches_dense_storage() {
+        use crate::data::matrix::Matrix;
+        use crate::data::sparse::Csr;
+        let mut rng = Rng::new(22);
+        let (n, d, m) = (40, 12, 5);
+        let mut csr = Csr::new(d);
+        let mut dense = vec![0.0f32; n * d];
+        for i in 0..n {
+            let mut entries: Vec<(u32, f32)> = Vec::new();
+            for j in 0..d {
+                if rng.below(3) == 0 {
+                    let v = rng.normal() as f32;
+                    entries.push((j as u32, v));
+                    dense[i * d + j] = v;
+                }
+            }
+            csr.push_row(&entries);
+        }
+        let y: Vec<f32> = (0..n).map(|_| rng.sign()).collect();
+        let w: Vec<f32> = (0..m * d).map(|_| rng.normal() as f32).collect();
+        let mut be = NativeBackend::new();
+        let ds = Examples::Dense(Matrix::from_vec(n, d, dense));
+        let sp = Examples::Sparse(csr);
+        let a = be.error_counts_examples(&ds, &y, &w, m).unwrap();
+        let b = be.error_counts_examples(&sp, &y, &w, m).unwrap();
+        assert_eq!(a, b);
     }
 }

@@ -2,6 +2,12 @@
 //! inside) through the XLA CPU client.  Requests are padded up to the
 //! compiled shape buckets with mask rows; padding rows pass through
 //! unchanged and are never read back.
+//!
+//! The compiled buckets are dense, so CSR-staged sparse batches (DESIGN.md
+//! §7) are transparently densified on entry — lazy scales fold into the
+//! weight rows, the example payload scatters into `x` — and the dense
+//! results are copied back into `w1`/`out_s` to honor the sparse in-place
+//! contract of [`Backend::step`].
 
 use crate::engine::{Backend, StepBatch, StepOp};
 use crate::gossip::create_model::Variant;
@@ -57,6 +63,12 @@ impl Backend for PjrtBackend {
     }
 
     fn step(&mut self, op: &StepOp, batch: &mut StepBatch) -> Result<()> {
+        // dense compiled buckets: densify sparse batches on entry, restore
+        // the sparse in-place result contract on exit
+        let was_sparse = batch.is_sparse_x();
+        if was_sparse {
+            batch.densify();
+        }
         let (b, d) = (batch.b, batch.d);
         let (name, params) = self
             .rt
@@ -114,6 +126,15 @@ impl Backend for PjrtBackend {
             batch.out_w[i * d..(i + 1) * d]
                 .copy_from_slice(&w_out[i * pd..i * pd + d]);
             batch.out_t[i] = t_out[i];
+        }
+        if was_sparse {
+            // sparse callers read results from (w1, out_s, out_t)
+            for i in 0..b {
+                let r = i * d..(i + 1) * d;
+                let (w1, out_w) = (&mut batch.w1, &batch.out_w);
+                w1[r.clone()].copy_from_slice(&out_w[r]);
+                batch.out_s[i] = 1.0;
+            }
         }
         Ok(())
     }

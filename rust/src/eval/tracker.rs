@@ -5,8 +5,13 @@
 use crate::util::stats;
 
 /// Log-spaced cycle grid: 1..10 by 1, 10..100 by 10, 100..1000 by 100, ...
-/// always including `max_cycle`.
+/// always including `max_cycle`.  A zero-cycle run measures nothing — the
+/// grid is empty (cycle 0 is the un-run initial state, not a measurement
+/// point).
 pub fn log_spaced_cycles(max_cycle: u64) -> Vec<u64> {
+    if max_cycle == 0 {
+        return Vec::new();
+    }
     let mut pts = Vec::new();
     let mut step = 1u64;
     let mut c = 1u64;
@@ -111,6 +116,13 @@ mod tests {
     fn log_grid_includes_max_when_off_grid() {
         let g = log_spaced_cycles(137);
         assert_eq!(*g.last().unwrap(), 137);
+    }
+
+    #[test]
+    fn log_grid_zero_cycles_is_empty() {
+        // regression: this used to emit a bogus cycle-0 measurement point
+        assert!(log_spaced_cycles(0).is_empty());
+        assert_eq!(log_spaced_cycles(1), vec![1]);
     }
 
     #[test]

@@ -18,7 +18,7 @@
 use crate::eval::tracker::Curve;
 use crate::experiments::common::datasets;
 use crate::gossip::create_model::Variant;
-use crate::gossip::protocol::{run, ExecMode, ProtocolConfig, RunStats};
+use crate::gossip::protocol::{run, ExecMode, ExecPath, ProtocolConfig, RunStats};
 use crate::learning::Learner;
 use crate::util::rng::derive_seed;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -115,6 +115,8 @@ pub struct SweepConfig {
     pub base_seed: u64,
     pub eval_peers: usize,
     pub exec: ExecMode,
+    /// dense vs. O(nnz) sparse kernel dispatch (auto = density-based)
+    pub path: ExecPath,
     pub threads: usize,
 }
 
@@ -131,6 +133,7 @@ impl SweepConfig {
             base_seed,
             eval_peers: 100,
             exec: ExecMode::default(),
+            path: ExecPath::default(),
             threads: thread_count(),
         }
     }
@@ -193,6 +196,7 @@ pub fn run_grid(cfg: &SweepConfig) -> Vec<SweepCell> {
         pc.eval.n_peers = cfg.eval_peers;
         pc.seed = seed;
         pc.exec = cfg.exec;
+        pc.path = cfg.path;
         if jd.failures {
             pc = pc.with_extreme_failures();
         }

@@ -9,8 +9,12 @@ use crate::sim::event::NodeId;
 #[derive(Clone, Debug)]
 pub struct ModelMsg {
     pub src: NodeId,
-    /// materialized model weights
+    /// model weights; the semantically transmitted model is `scale * w`
     pub w: Vec<f32>,
+    /// lazy scale of `w` (1.0 on the dense execution path).  This is a
+    /// simulator-internal compute representation — a real deployment sends
+    /// the materialized product, so the wire format is unchanged.
+    pub scale: f32,
     /// Pegasos update counter
     pub t: u64,
     /// piggybacked peer-sampling descriptors (empty for oracle samplers)
@@ -20,7 +24,8 @@ pub struct ModelMsg {
 impl ModelMsg {
     /// Wire size in bytes: weights + counter + descriptors
     /// (d * 4 + 8 + |view| * 16).  Used by the message-complexity metrics
-    /// (the paper's cost analysis in Section IV).
+    /// (the paper's cost analysis in Section IV).  The lazy `scale` does not
+    /// count: it is folded into the weights on a real wire.
     pub fn wire_bytes(&self) -> usize {
         self.w.len() * 4 + 8 + self.view.len() * 16
     }
@@ -35,6 +40,7 @@ mod tests {
         let msg = ModelMsg {
             src: 0,
             w: vec![0.0; 10],
+            scale: 1.0,
             t: 3,
             view: vec![Descriptor { node: 1, ts: 2 }; 20],
         };

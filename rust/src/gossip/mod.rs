@@ -12,6 +12,7 @@ pub use cache::ModelCache;
 pub use create_model::{create_model, Variant};
 pub use predict::Predictor;
 pub use protocol::{
-    run, run_with_backend, EvalConfig, ExecMode, GossipSim, ProtocolConfig, RunResult, RunStats,
+    run, run_with_backend, EvalConfig, ExecMode, ExecPath, GossipSim, ProtocolConfig, RunResult,
+    RunStats,
 };
 pub use state::ModelStore;

@@ -2,6 +2,12 @@
 //! zero communication cost — either with the freshest model, or by majority
 //! voting over the cached models, or by the margin-weighted vote of Eq. (7)
 //! (which for linear models equals prediction by the averaged model).
+//!
+//! Margins are sparse-aware: `raw_margin` goes through [`Row::dot`], which
+//! routes sparse test rows through the shared `data::dataset::sparse_dot`
+//! (O(nnz) per vote instead of O(d); DESIGN.md §7).  Bulk freshest-model
+//! evaluation over a whole test set uses the batched
+//! `engine::Backend::error_counts_examples` path instead of per-row calls.
 
 use crate::data::dataset::Row;
 use crate::gossip::cache::ModelCache;

@@ -9,10 +9,15 @@
 //!
 //! `ModelStore` is the single representation: flat row-major `[n, d]` weight
 //! matrices plus `[n]` update-counter vectors, with node ids as row handles.
-//! Rows are always materialized (no lazy scale), so they can be memcpy'd
-//! straight into [`crate::engine::StepBatch`] buffers and back — which is
-//! what lets the event-driven hot path run through the same vectorized
-//! backends as the batched driver.
+//! Each weight row additionally carries a lazy scale factor in a `[n]`
+//! column (effective weights are `scale * w`): the dense execution path
+//! keeps every scale at 1.0, so rows memcpy straight into
+//! [`crate::engine::StepBatch`] buffers and back, while the O(nnz) sparse
+//! path (DESIGN.md §7) carries the Pegasos decay in the scale and
+//! materializes only at the evaluation/cache boundary
+//! ([`ModelStore::freshest_model`], [`ModelStore::write_freshest_into`]).
+//! The scale semantics — including the `SCALE_FLOOR` re-materialization —
+//! live in `learning/linear.rs` and are shared with the engine kernels.
 //!
 //! The update counter `t` is f32 to match the engine's `StepBatch`/kernel
 //! representation: exact up to 2^24 (~16.7M) updates per node, far beyond
@@ -28,20 +33,24 @@ pub struct ModelStore {
     n: usize,
     d: usize,
     freshest_w: Vec<f32>,
+    freshest_s: Vec<f32>,
     freshest_t: Vec<f32>,
     last_w: Vec<f32>,
+    last_s: Vec<f32>,
     last_t: Vec<f32>,
 }
 
 impl ModelStore {
-    /// INITMODEL (Algorithm 3) for every node: zero weights, t = 0.
+    /// INITMODEL (Algorithm 3) for every node: zero weights, scale 1, t = 0.
     pub fn new(n: usize, d: usize) -> Self {
         ModelStore {
             n,
             d,
             freshest_w: vec![0.0; n * d],
+            freshest_s: vec![1.0; n],
             freshest_t: vec![0.0; n],
             last_w: vec![0.0; n * d],
+            last_s: vec![1.0; n],
             last_t: vec![0.0; n],
         }
     }
@@ -60,10 +69,17 @@ impl ModelStore {
         i * self.d..(i + 1) * self.d
     }
 
-    /// Weight row of the freshest model created at node `i`.
+    /// Unscaled weight row of the freshest model created at node `i`
+    /// (effective weights are `freshest_scale(i) * freshest(i)`; the scale
+    /// is 1.0 on the dense execution path).
     #[inline]
     pub fn freshest(&self, i: usize) -> &[f32] {
         &self.freshest_w[self.row(i)]
+    }
+
+    #[inline]
+    pub fn freshest_scale(&self, i: usize) -> f32 {
+        self.freshest_s[i]
     }
 
     #[inline]
@@ -71,10 +87,16 @@ impl ModelStore {
         self.freshest_t[i]
     }
 
-    /// Weight row of the last model received at node `i` (`lastModel`).
+    /// Unscaled weight row of the last model received at node `i`
+    /// (`lastModel`).
     #[inline]
     pub fn last(&self, i: usize) -> &[f32] {
         &self.last_w[self.row(i)]
+    }
+
+    #[inline]
+    pub fn last_scale(&self, i: usize) -> f32 {
+        self.last_s[i]
     }
 
     #[inline]
@@ -82,17 +104,33 @@ impl ModelStore {
         self.last_t[i]
     }
 
+    /// Store materialized weights (scale resets to 1.0) — the dense path.
     #[inline]
     pub fn set_freshest(&mut self, i: usize, w: &[f32], t: f32) {
+        self.set_freshest_scaled(i, w, 1.0, t);
+    }
+
+    /// Store a lazily-scaled row — the sparse path.
+    #[inline]
+    pub fn set_freshest_scaled(&mut self, i: usize, w: &[f32], s: f32, t: f32) {
         let r = self.row(i);
         self.freshest_w[r].copy_from_slice(w);
+        self.freshest_s[i] = s;
         self.freshest_t[i] = t;
     }
 
+    /// Store materialized weights (scale resets to 1.0) — the dense path.
     #[inline]
     pub fn set_last(&mut self, i: usize, w: &[f32], t: f32) {
+        self.set_last_scaled(i, w, 1.0, t);
+    }
+
+    /// Store a lazily-scaled row — the sparse path.
+    #[inline]
+    pub fn set_last_scaled(&mut self, i: usize, w: &[f32], s: f32, t: f32) {
         let r = self.row(i);
         self.last_w[r].copy_from_slice(w);
+        self.last_s[i] = s;
         self.last_t[i] = t;
     }
 
@@ -102,14 +140,34 @@ impl ModelStore {
         let r = self.row(i);
         self.freshest_w[r.clone()].fill(0.0);
         self.last_w[r].fill(0.0);
+        self.freshest_s[i] = 1.0;
+        self.last_s[i] = 1.0;
         self.freshest_t[i] = 0.0;
         self.last_t[i] = 0.0;
+    }
+
+    /// Write node `i`'s **materialized** freshest weights into `out` (the
+    /// lazy scale folds during the copy; no allocation).  Evaluation staging
+    /// uses this to build `[m, d]` model batches.
+    pub fn write_freshest_into(&self, i: usize, out: &mut [f32]) {
+        let r = self.row(i);
+        let w = &self.freshest_w[r];
+        let s = self.freshest_s[i];
+        if s == 1.0 {
+            out.copy_from_slice(w);
+        } else {
+            for (o, &v) in out.iter_mut().zip(w) {
+                *o = v * s;
+            }
+        }
     }
 
     /// Materialize node `i`'s freshest model as a [`LinearModel`] (evaluation
     /// and cache paths; allocates one weight vector).
     pub fn freshest_model(&self, i: usize) -> LinearModel {
-        LinearModel::from_weights(self.freshest(i).to_vec(), self.freshest_t(i) as u64)
+        let mut w = vec![0.0f32; self.d];
+        self.write_freshest_into(i, &mut w);
+        LinearModel::from_weights(w, self.freshest_t(i) as u64)
     }
 }
 
@@ -165,5 +223,29 @@ mod tests {
         let m = s.freshest_model(0);
         assert_eq!(m.weights(), vec![0.5, -0.5, 1.0]);
         assert_eq!(m.t, 7);
+    }
+
+    #[test]
+    fn scaled_rows_materialize_at_the_eval_boundary() {
+        let mut s = ModelStore::new(2, 2);
+        s.set_freshest_scaled(0, &[4.0, -8.0], 0.25, 9.0);
+        s.set_last_scaled(0, &[2.0, 2.0], 0.5, 3.0);
+        assert_eq!(s.freshest(0), &[4.0, -8.0]); // raw row stays unscaled
+        assert_eq!(s.freshest_scale(0), 0.25);
+        assert_eq!(s.last_scale(0), 0.5);
+        let mut out = vec![0.0; 2];
+        s.write_freshest_into(0, &mut out);
+        assert_eq!(out, vec![1.0, -2.0]);
+        let m = s.freshest_model(0);
+        assert_eq!(m.weights(), vec![1.0, -2.0]);
+        assert_eq!(m.t, 9);
+        // a dense-path store resets the scale
+        s.set_freshest(0, &[1.0, 1.0], 1.0);
+        assert_eq!(s.freshest_scale(0), 1.0);
+        // reset restores scale 1
+        s.set_freshest_scaled(1, &[1.0, 1.0], 0.5, 2.0);
+        s.reset(1);
+        assert_eq!(s.freshest_scale(1), 1.0);
+        assert_eq!(s.last_scale(1), 1.0);
     }
 }

@@ -19,7 +19,48 @@ pub struct LinearModel {
 }
 
 /// Below this scale the weights are re-materialized to avoid f32 underflow.
-const SCALE_FLOOR: f32 = 1e-20;
+///
+/// Shared by [`LinearModel`] and the engine's sparse row kernels
+/// (`engine/native.rs`) through [`scale_in_place`] so the two lazy-scale
+/// implementations stay pinned to the same semantics.
+pub const SCALE_FLOOR: f32 = 1e-20;
+
+/// `(v, scale) *= c` with the [`SCALE_FLOOR`] re-materialization: when the
+/// scale drifts below the floor (including the exact-zero Pegasos first
+/// step), it is folded into the weights and reset to 1.
+///
+/// This free-function form of [`LinearModel::scale_by`] is the single
+/// implementation of the lazy-scale decay; the engine's O(nnz) sparse
+/// kernels call it on `StepBatch` rows.
+#[inline]
+pub fn scale_in_place(v: &mut [f32], scale: &mut f32, c: f32) {
+    *scale *= c;
+    if scale.abs() < SCALE_FLOOR {
+        let s = *scale;
+        for w in v.iter_mut() {
+            *w *= s;
+        }
+        *scale = 1.0;
+    }
+}
+
+/// `(v, scale) += c * x` for a sparse `x` given as (indices, values) —
+/// touches only the non-zero coordinates.  Mirrors
+/// [`LinearModel::add_scaled`] (including the dead-model reset at scale 0)
+/// so chained engine-kernel updates are bit-for-bit identical to the scalar
+/// lazy-scale path.
+#[inline]
+pub fn add_scaled_sparse_in_place(v: &mut [f32], scale: &mut f32, c: f32, idx: &[u32], val: &[f32]) {
+    if *scale == 0.0 {
+        // dead model: reset to exact zeros
+        v.fill(0.0);
+        *scale = 1.0;
+    }
+    let coef = c / *scale;
+    for (&j, &x) in idx.iter().zip(val) {
+        v[j as usize] += coef * x;
+    }
+}
 
 impl LinearModel {
     pub fn zeros(d: usize) -> Self {
@@ -53,10 +94,7 @@ impl LinearModel {
     /// w *= c (lazy, O(1)).
     #[inline]
     pub fn scale_by(&mut self, c: f32) {
-        self.scale *= c;
-        if self.scale.abs() < SCALE_FLOOR {
-            self.materialize();
-        }
+        scale_in_place(&mut self.v, &mut self.scale, c);
     }
 
     /// w += c * x.
@@ -215,6 +253,27 @@ mod tests {
         assert!((LinearModel::cosine(&a, &b) - 1.0).abs() < 1e-6);
         assert!((LinearModel::cosine(&a, &c) + 1.0).abs() < 1e-6);
         assert_eq!(LinearModel::cosine(&a, &z), 0.0);
+    }
+
+    #[test]
+    fn in_place_helpers_match_model_methods_bitwise() {
+        // The engine's sparse kernels run on (slice, scale) pairs through
+        // scale_in_place / add_scaled_sparse_in_place; they must stay pinned
+        // bit-for-bit to the LinearModel lazy-scale ops.
+        let idx = [1u32, 3];
+        let val = [0.5f32, -2.0];
+        let mut m = LinearModel::from_weights(vec![1.0, -2.0, 3.0, 0.25], 0);
+        let mut v = vec![1.0f32, -2.0, 3.0, 0.25];
+        let mut s = 1.0f32;
+        for step in 0..300 {
+            let c = if step % 7 == 0 { 0.0 } else { 1.0 - 1.0 / (step as f32 + 2.0) };
+            m.scale_by(c);
+            scale_in_place(&mut v, &mut s, c);
+            m.add_scaled(0.1, &Row::Sparse(&idx, &val));
+            add_scaled_sparse_in_place(&mut v, &mut s, 0.1, &idx, &val);
+        }
+        let eff: Vec<f32> = v.iter().map(|&w| w * s).collect();
+        assert_eq!(eff, m.weights());
     }
 
     #[test]

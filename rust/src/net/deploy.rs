@@ -181,6 +181,7 @@ fn node_main(
             let msg = ModelMsg {
                 src: me,
                 w: freshest.weights(),
+                scale: 1.0,
                 t: freshest.t,
                 view: Vec::new(),
             };

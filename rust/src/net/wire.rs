@@ -28,8 +28,9 @@ pub fn encode(msg: &ModelMsg) -> Vec<u8> {
     buf.extend_from_slice(&(msg.src as u64).to_le_bytes());
     buf.extend_from_slice(&msg.t.to_le_bytes());
     buf.extend_from_slice(&(msg.w.len() as u32).to_le_bytes());
+    // the wire carries the materialized model: any lazy scale folds here
     for &w in &msg.w {
-        buf.extend_from_slice(&w.to_le_bytes());
+        buf.extend_from_slice(&(w * msg.scale).to_le_bytes());
     }
     buf.extend_from_slice(&(msg.view.len() as u16).to_le_bytes());
     for d in &msg.view {
@@ -125,7 +126,7 @@ pub fn decode_body(body: &[u8]) -> Result<ModelMsg, WireError> {
         let ts = c.u64()?;
         view.push(Descriptor { node, ts });
     }
-    Ok(ModelMsg { src, w, t, view })
+    Ok(ModelMsg { src, w, scale: 1.0, t, view })
 }
 
 /// Blocking framed read from a stream.
@@ -155,6 +156,7 @@ mod tests {
         ModelMsg {
             src: 7,
             w: (0..d).map(|i| i as f32 * 0.5 - 1.0).collect(),
+            scale: 1.0,
             t: 99,
             view: (0..nv).map(|i| Descriptor { node: i, ts: i as u64 * 3 }).collect(),
         }

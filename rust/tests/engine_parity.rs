@@ -7,14 +7,15 @@
 //! `make artifacts` first).
 
 use golf::config::ExperimentSpec;
-use golf::data::synthetic::{spambase_like, urls_like, Scale};
+use golf::data::synthetic::{reuters_like, spambase_like, urls_like, Scale};
 use golf::engine::batched::run_batched;
 use golf::engine::native::NativeBackend;
 use golf::engine::pjrt::PjrtBackend;
 use golf::engine::{Backend, LearnerKind, StepBatch, StepOp};
 use golf::experiments::sweep;
 use golf::gossip::create_model::Variant;
-use golf::gossip::protocol::{run, ExecMode, ProtocolConfig, RunResult};
+use golf::gossip::protocol::{run, ExecMode, ExecPath, ProtocolConfig, RunResult};
+use golf::learning::Learner;
 use golf::util::rng::Rng;
 
 fn pjrt() -> Option<PjrtBackend> {
@@ -242,6 +243,167 @@ fn sweep_parallel_bitwise_equals_serial() {
         }
         assert_eq!(a.stats.messages_sent, b.stats.messages_sent);
     }
+}
+
+// ---------------------------------------------------------------------------
+// Sparse-vs-dense execution path parity (DESIGN.md §7): the O(nnz)
+// lazy-scale kernels against the dense `[b, d]` kernels, for every learner
+// and CREATEMODEL variant.
+
+/// Build a dense-layout batch plus its CSR-staged twin over the same rows.
+fn dense_and_sparse_twin(
+    rng: &mut Rng,
+    b: usize,
+    d: usize,
+    nnz: usize,
+) -> (StepBatch, StepBatch) {
+    let mut dense = StepBatch::default();
+    dense.resize(b, d);
+    for v in dense.w1.iter_mut().chain(&mut dense.w2) {
+        *v = rng.normal() as f32;
+    }
+    let mut idxs: Vec<Vec<u32>> = Vec::with_capacity(b);
+    let mut vals: Vec<Vec<f32>> = Vec::with_capacity(b);
+    for i in 0..b {
+        dense.y[i] = rng.sign();
+        dense.t1[i] = rng.below(50) as f32;
+        dense.t2[i] = rng.below(50) as f32;
+        let mut idx: Vec<u32> = (0..nnz).map(|_| rng.below(d as u64) as u32).collect();
+        idx.sort_unstable();
+        idx.dedup();
+        let val: Vec<f32> = idx.iter().map(|_| rng.normal() as f32).collect();
+        for (&j, &v) in idx.iter().zip(&val) {
+            dense.x[i * d + j as usize] = v;
+        }
+        idxs.push(idx);
+        vals.push(val);
+    }
+    let mut sparse = dense.clone();
+    sparse.resize_for(b, d, true);
+    for i in 0..b {
+        sparse.push_sparse_x_row(&idxs[i], &vals[i]);
+    }
+    (dense, sparse)
+}
+
+/// Per-coordinate agreement of the sparse and dense kernels on one step, for
+/// all three learners × RW/MU/UM.  Lazy scaling legitimately reorders float
+/// ops (scale product vs. per-coordinate decay, sparse vs. 4-lane dense
+/// dots), so agreement is within a small tolerance rather than exact.
+#[test]
+fn sparse_kernels_match_dense_per_coordinate_all_learners_and_variants() {
+    let mut nat = NativeBackend::new();
+    let mut rng = Rng::new(71);
+    let (b, d, nnz) = (16, 37, 6);
+    for learner in [LearnerKind::Pegasos, LearnerKind::Adaline, LearnerKind::LogReg] {
+        for variant in [Variant::Rw, Variant::Mu, Variant::Um] {
+            let op = StepOp { learner, variant, hp: 0.05 };
+            let (mut dense, mut sparse) = dense_and_sparse_twin(&mut rng, b, d, nnz);
+            nat.step(&op, &mut dense).unwrap();
+            nat.step(&op, &mut sparse).unwrap();
+            for i in 0..b {
+                let s = sparse.out_s[i];
+                for j in 0..d {
+                    let a = dense.out_w[i * d + j];
+                    let e = sparse.w1[i * d + j] * s;
+                    assert!(
+                        (a - e).abs() < 1e-3 + 1e-3 * a.abs().max(e.abs()),
+                        "{learner:?}/{variant:?} row {i} coord {j}: dense {a} vs sparse {e}"
+                    );
+                }
+                assert_eq!(
+                    dense.out_t[i], sparse.out_t[i],
+                    "{learner:?}/{variant:?} row {i} out_t"
+                );
+            }
+        }
+    }
+}
+
+/// Exact equality: the sparse kernels mirror the scalar lazy-scale path of
+/// `learning/` op for op, so a chained RW run through the engine is
+/// bit-for-bit the `Learner::update` sequence on a `LinearModel` — on a run
+/// short enough that the scale never reaches the `SCALE_FLOOR`
+/// re-materialization.
+#[test]
+fn sparse_kernel_chain_exactly_matches_scalar_learner() {
+    use golf::data::dataset::Row;
+    use golf::learning::LinearModel;
+    let d = 41;
+    for (kind, learner) in [
+        (LearnerKind::Pegasos, Learner::pegasos(0.02)),
+        (LearnerKind::Adaline, Learner::adaline(0.1)),
+        (LearnerKind::LogReg, Learner::logreg(0.02)),
+    ] {
+        let op = StepOp::for_protocol(&learner, Variant::Rw);
+        assert_eq!(op.learner, kind);
+        let mut rng = Rng::new(72);
+        let mut nat = NativeBackend::new();
+        let mut sb = StepBatch::default();
+        sb.resize_for(1, d, true);
+        let mut model = LinearModel::zeros(d);
+        for _ in 0..100 {
+            let mut idx: Vec<u32> = (0..5).map(|_| rng.below(d as u64) as u32).collect();
+            idx.sort_unstable();
+            idx.dedup();
+            let val: Vec<f32> = idx.iter().map(|_| rng.normal() as f32).collect();
+            let y = rng.sign();
+            sb.resize_for(1, d, true); // keeps w1/s1/t1, resets the payload
+            sb.push_sparse_x_row(&idx, &val);
+            sb.y[0] = y;
+            nat.step(&op, &mut sb).unwrap();
+            sb.s1[0] = sb.out_s[0];
+            sb.t1[0] = sb.out_t[0];
+            learner.update(&mut model, &Row::Sparse(&idx, &val), y);
+        }
+        let eff: Vec<f32> = sb.w1.iter().map(|&w| w * sb.s1[0]).collect();
+        assert_eq!(eff, model.weights(), "{kind:?} weights diverged");
+        assert_eq!(sb.t1[0], model.t as f32, "{kind:?} counter diverged");
+    }
+}
+
+/// Full-run parity on the sparse Reuters-like set: same seed, forced dense
+/// vs. forced sparse path, all three learners × RW/MU/UM.  The schedules are
+/// identical (dispatch touches only kernel execution), so curves must agree
+/// up to f32 kernel noise on the small test set.
+#[test]
+fn sparse_run_matches_dense_run_all_learners_and_variants() {
+    let ds = reuters_like(73, Scale(0.02));
+    for learner in [Learner::pegasos(1e-2), Learner::adaline(1e-3), Learner::logreg(1e-2)] {
+        for variant in [Variant::Rw, Variant::Mu, Variant::Um] {
+            let mut cfg = ProtocolConfig::paper_default(6);
+            cfg.learner = learner;
+            cfg.variant = variant;
+            cfg.eval.n_peers = 10;
+            cfg.seed = 73;
+            cfg.path = ExecPath::Dense;
+            let a = run(cfg.clone(), &ds);
+            cfg.path = ExecPath::Sparse;
+            let b = run(cfg, &ds);
+            assert_eq!(a.stats.sparse_rows, 0);
+            assert!(b.stats.sparse_rows > 0, "sparse path did not engage");
+            // identical schedules: rng-driven counters match exactly
+            assert_eq!(a.stats.messages_sent, b.stats.messages_sent);
+            assert_eq!(a.stats.updates_applied, b.stats.updates_applied);
+            assert_eq!(a.curve.points.len(), b.curve.points.len());
+            for (pa, pb) in a.curve.points.iter().zip(&b.curve.points) {
+                assert_eq!(pa.cycle, pb.cycle);
+                assert!(
+                    (pa.err_mean - pb.err_mean).abs() < 0.1,
+                    "{}/{}: cycle {} dense {} vs sparse {}",
+                    cfg_label(&b),
+                    variant.name(),
+                    pa.cycle,
+                    pa.err_mean,
+                    pb.err_mean
+                );
+            }
+        }
+    }
+}
+
+fn cfg_label(r: &RunResult) -> &str {
+    &r.curve.label
 }
 
 #[test]
