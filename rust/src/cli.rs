@@ -6,6 +6,7 @@
 //! golf table1 [--scale S] [--seed N]           reproduce Table I
 //! golf fig1|fig2|fig3 [--scale S] [--cycles N] reproduce a figure
 //! golf sweep [--scale S] [--replicates K]      parallel grid sweep
+//! golf deploy [--config FILE] [--key value ..] real localhost-TCP run
 //! golf info                                    artifact/runtime info
 //! ```
 //!
@@ -67,6 +68,11 @@ USAGE:
   golf sweep  [--scale S] [--cycles N] [--seed N] [--threads T]
               [--replicates K] [--mode microbatch|scalar] [--coalesce TICKS]
               [--exec auto|dense|sparse] [--out-dir DIR]
+  golf deploy [--config FILE] [--dataset D] [--scale S] [--cycles N]
+              [--variant rw|mu|um] [--learner pegasos|adaline|logreg]
+              [--failures none|extreme] [--sampler newscast|oracle]
+              [--nodes N] [--delta_ms MS] [--eval_peers K] [--seed N]
+              [--compare-sim] [--out FILE.csv]
   golf info"
 }
 
@@ -116,11 +122,11 @@ fn run_spec(spec: &ExperimentSpec) -> Result<RunResult, String> {
     }
 }
 
-fn print_curve(res: &RunResult) {
+fn print_points(curve: &crate::eval::tracker::Curve) {
     let mut t = crate::util::benchkit::Table::new(&[
         "cycle", "err", "±std", "vote", "similarity", "msgs",
     ]);
-    for p in &res.curve.points {
+    for p in &curve.points {
         t.row(&[
             p.cycle.to_string(),
             format!("{:.4}", p.err_mean),
@@ -131,9 +137,14 @@ fn print_curve(res: &RunResult) {
         ]);
     }
     t.print();
+}
+
+fn print_curve(res: &RunResult) {
+    print_points(&res.curve);
     eprintln!(
-        "sent={} dropped={} lost_offline={} updates={}",
+        "sent={} delivered={} dropped={} lost_offline={} updates={}",
         res.stats.messages_sent,
+        res.stats.messages_delivered,
         res.stats.messages_dropped,
         res.stats.messages_lost_offline,
         res.stats.updates_applied
@@ -279,6 +290,78 @@ fn run_command(parsed: &ParsedArgs) -> Result<(), String> {
             eprintln!("wrote {} sweep cells to {}", cells.len(), a.out.display());
             Ok(())
         }
+        "deploy" => {
+            let mut flags = parsed.flags.clone();
+            let compare_sim = flags.remove("compare-sim").is_some();
+            let out = flags.remove("out");
+            let mut spec = if let Some(path) = flags.remove("config") {
+                let text =
+                    std::fs::read_to_string(&path).map_err(|e| format!("{path}: {e}"))?;
+                crate::config::DeploySpec::from_ini(&text)?
+            } else {
+                crate::config::DeploySpec::default()
+            };
+            spec.apply(&flags)?;
+            let ds = spec.experiment.build_dataset()?;
+            let cfg = spec.deploy_config(&ds)?;
+            eprintln!(
+                "deploying {} {} nodes on {} (d={}) for {} cycles of {:?} [{} sampling{}]",
+                cfg.n_nodes,
+                cfg.variant.name(),
+                ds.name,
+                ds.d(),
+                cfg.cycles,
+                cfg.delta,
+                cfg.sampler.name(),
+                if cfg.churn.is_some() { ", churn+drop/delay" } else { "" },
+            );
+            if compare_sim && cfg.n_nodes != ds.n_train() {
+                eprintln!(
+                    "warning: --compare-sim with nodes = {} but {} training rows — \
+                     the simulator always runs one node per row",
+                    cfg.n_nodes,
+                    ds.n_train()
+                );
+            }
+            let report =
+                crate::coordinator::run_deployment(&cfg, &ds).map_err(|e| e.to_string())?;
+            print_points(&report.curve);
+            let s = &report.stats;
+            eprintln!(
+                "sent={} received={} bytes={} sim_dropped={} backlog_lost={} \
+                 io_errors={} decode_errors={} conns={}",
+                s.messages_sent,
+                s.messages_received,
+                s.bytes_sent,
+                s.sim_dropped,
+                s.backlog_lost,
+                s.io_errors,
+                s.decode_errors,
+                s.conns_accepted,
+            );
+            eprintln!(
+                "final error {:.4} (mean model t {:.1})",
+                report.final_error, report.mean_model_t
+            );
+            let mut curves = vec![report.curve.clone()];
+            if compare_sim {
+                let sim_cfg = crate::coordinator::matched_sim_config(&cfg);
+                let sim = crate::gossip::run(sim_cfg, &ds);
+                eprintln!(
+                    "matched simulator final {:.4} (deploy {:.4}, gap {:+.4})",
+                    sim.curve.final_error(),
+                    report.curve.final_error(),
+                    report.curve.final_error() - sim.curve.final_error(),
+                );
+                curves.push(sim.curve);
+            }
+            if let Some(out) = out {
+                crate::eval::csv::write_curves(std::path::Path::new(&out), &curves)
+                    .map_err(|e| e.to_string())?;
+                eprintln!("wrote {out}");
+            }
+            Ok(())
+        }
         "info" => {
             let dir = PjrtBackend::default_dir();
             match crate::runtime::Runtime::load(&dir) {
@@ -373,6 +456,23 @@ mod tests {
         ]))
         .unwrap();
         run_command(&p).unwrap();
+    }
+
+    #[test]
+    fn deployment_flag_errors_rejected() {
+        // spec-level failures surface before any socket is opened (the
+        // end-to-end `golf deploy` run lives in tests/deployment.rs, where
+        // the socket-heavy tests are serialized)
+        let p = parse_args(&s(&["deploy", "--delta_ms", "zero"])).unwrap();
+        assert!(run_command(&p).is_err());
+        let p = parse_args(&s(&["deploy", "--bogus_key", "1"])).unwrap();
+        assert!(run_command(&p).is_err());
+        // more nodes than training rows
+        let p = parse_args(&s(&[
+            "deploy", "--dataset", "urls", "--scale", "0.002", "--nodes", "21",
+        ]))
+        .unwrap();
+        assert!(run_command(&p).is_err());
     }
 
     #[test]

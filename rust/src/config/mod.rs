@@ -21,6 +21,10 @@
 //! mode = microbatch       ; microbatch | scalar (event-driven stepping)
 //! coalesce = 0            ; micro-batch coalescing window in ticks
 //! exec = auto             ; auto | dense | sparse (kernel family dispatch)
+//!
+//! [deploy]                ; `golf deploy` only (real localhost-TCP run)
+//! delta_ms = 30           ; wall-clock gossip period in milliseconds
+//! nodes = 0               ; node count; 0 = one node per training row
 //! ```
 
 use crate::data::dataset::Dataset;
@@ -224,6 +228,107 @@ impl ExperimentSpec {
     }
 }
 
+/// Configuration of a `golf deploy` run: the shared experiment keys plus
+/// the deployment-only wall-clock mapping.  Parsed from the same INI files
+/// (`[experiment]` + `[deploy]` sections) and the same CLI flag map.
+#[derive(Clone, Debug)]
+pub struct DeploySpec {
+    pub experiment: ExperimentSpec,
+    /// wall-clock gossip period Δ in milliseconds
+    pub delta_ms: u64,
+    /// node count; 0 = one node per training row (required for parity with
+    /// a matched simulator run)
+    pub nodes: usize,
+}
+
+impl Default for DeploySpec {
+    fn default() -> Self {
+        DeploySpec { experiment: ExperimentSpec::default(), delta_ms: 30, nodes: 0 }
+    }
+}
+
+impl DeploySpec {
+    /// Apply a key=value map: deployment keys are handled here, everything
+    /// else is delegated to the embedded [`ExperimentSpec`].
+    pub fn apply(&mut self, kv: &HashMap<String, String>) -> Result<(), String> {
+        let mut rest = HashMap::new();
+        for (k, v) in kv {
+            match k.as_str() {
+                "delta_ms" => self.delta_ms = parse(v, k)?,
+                "nodes" => self.nodes = parse(v, k)?,
+                _ => {
+                    rest.insert(k.clone(), v.clone());
+                }
+            }
+        }
+        self.experiment.apply(&rest)
+    }
+
+    /// Parse an INI file's `[experiment]` and `[deploy]` sections.
+    pub fn from_ini(text: &str) -> Result<Self, String> {
+        let doc = ini::parse(text)?;
+        let mut spec = DeploySpec::default();
+        if let Some(kv) = doc.get("experiment") {
+            spec.experiment.apply(kv)?;
+        }
+        if let Some(kv) = doc.get("deploy") {
+            spec.apply(kv)?;
+        }
+        Ok(spec)
+    }
+
+    /// Resolve against a dataset into the runtime configuration.
+    pub fn deploy_config(
+        &self,
+        data: &Dataset,
+    ) -> Result<crate::net::deploy::DeployConfig, String> {
+        use crate::net::deploy::DeployConfig;
+        let e = &self.experiment;
+        let n = if self.nodes == 0 { data.n_train() } else { self.nodes };
+        if n < 2 {
+            return Err(format!("need at least 2 nodes, got {n}"));
+        }
+        if n > data.n_train() {
+            return Err(format!(
+                "nodes = {n} exceeds the {} training rows of {}",
+                data.n_train(),
+                data.name
+            ));
+        }
+        if n > crate::net::deploy::MAX_DEPLOY_NODES {
+            // one OS thread + one listener per node: an unscaled dataset
+            // must not silently become 10,000 threads
+            return Err(format!(
+                "deployment would spawn {n} node threads (max {}); \
+                 pass nodes = N or a smaller scale",
+                crate::net::deploy::MAX_DEPLOY_NODES
+            ));
+        }
+        if e.sampler == SamplerConfig::Matching {
+            // PERFECT MATCHING needs a globally consistent partner table per
+            // cycle; per-node sampler instances in a real deployment cannot
+            // provide that (it is a simulator-only baseline)
+            return Err("sampler = matching is not supported in deployment".into());
+        }
+        let mut cfg = DeployConfig {
+            n_nodes: n,
+            delta: std::time::Duration::from_millis(self.delta_ms.max(1)),
+            cycles: e.cycles,
+            variant: e.variant,
+            learner: e.learner()?,
+            cache_size: e.cache,
+            sampler: e.sampler,
+            eval_peers: e.eval_peers,
+            seed: e.seed,
+            ..Default::default()
+        };
+        if e.failures {
+            cfg = cfg.with_extreme_failures();
+        }
+        Ok(cfg)
+    }
+}
+
 fn parse<T: std::str::FromStr>(v: &str, k: &str) -> Result<T, String> {
     v.parse().map_err(|_| format!("bad value for {k}: {v:?}"))
 }
@@ -325,6 +430,69 @@ backend = batched-native
         let mut kv = HashMap::new();
         kv.insert("exec".to_string(), "warp".to_string());
         assert!(spec.apply(&kv).is_err());
+    }
+
+    #[test]
+    fn deployment_spec_ini_and_flags() {
+        let text = "
+[experiment]
+dataset = urls
+scale = 0.01
+cycles = 12
+variant = um
+failures = extreme
+
+[deploy]
+delta_ms = 25
+nodes = 40
+";
+        let spec = DeploySpec::from_ini(text).unwrap();
+        assert_eq!(spec.delta_ms, 25);
+        assert_eq!(spec.nodes, 40);
+        assert_eq!(spec.experiment.cycles, 12);
+        let ds = spec.experiment.build_dataset().unwrap();
+        let cfg = spec.deploy_config(&ds).unwrap();
+        assert_eq!(cfg.n_nodes, 40);
+        assert_eq!(cfg.delta, std::time::Duration::from_millis(25));
+        assert_eq!(cfg.cycles, 12);
+        assert_eq!(cfg.variant, Variant::Um);
+        assert!(cfg.churn.is_some(), "failures = extreme must enable churn");
+
+        // flags: deploy keys + experiment keys in one map
+        let mut spec = DeploySpec::default();
+        let mut kv = HashMap::new();
+        kv.insert("delta_ms".to_string(), "15".to_string());
+        kv.insert("cycles".to_string(), "7".to_string());
+        spec.apply(&kv).unwrap();
+        assert_eq!(spec.delta_ms, 15);
+        assert_eq!(spec.experiment.cycles, 7);
+        let mut kv = HashMap::new();
+        kv.insert("bogus".to_string(), "1".to_string());
+        assert!(spec.apply(&kv).is_err());
+    }
+
+    #[test]
+    fn deployment_spec_node_count_defaults_and_bounds() {
+        let mut spec = DeploySpec::default();
+        spec.experiment.scale = 0.005; // urls: 50 training rows
+        let ds = spec.experiment.build_dataset().unwrap();
+        let cfg = spec.deploy_config(&ds).unwrap();
+        assert_eq!(cfg.n_nodes, ds.n_train(), "nodes = 0 means one per row");
+        spec.nodes = ds.n_train() + 1;
+        assert!(spec.deploy_config(&ds).is_err());
+        spec.nodes = 1;
+        assert!(spec.deploy_config(&ds).is_err());
+        // the simulator-only PERFECT MATCHING baseline cannot deploy
+        spec.nodes = 0;
+        spec.experiment.sampler = SamplerConfig::Matching;
+        assert!(spec.deploy_config(&ds).is_err());
+        // one-thread-per-node runtime refuses implausible node counts
+        // (urls at scale 0.06 -> 600 training rows > MAX_DEPLOY_NODES)
+        let mut spec = DeploySpec::default();
+        spec.experiment.scale = 0.06;
+        let big = spec.experiment.build_dataset().unwrap();
+        assert!(big.n_train() > crate::net::deploy::MAX_DEPLOY_NODES);
+        assert!(spec.deploy_config(&big).is_err());
     }
 
     #[test]

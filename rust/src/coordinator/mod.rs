@@ -1,1 +1,274 @@
-// paper's L3 coordination contribution
+//! Deployment run orchestration (L3, DESIGN.md §10): bind one listener per
+//! node, generate the shared wall-clock failure schedules, spawn one OS
+//! thread per node (`net/deploy.rs`), run the periodic evaluation loop on
+//! the coordinating thread, then raise the stop flag and collect per-node
+//! stats plus the convergence [`Curve`].
+//!
+//! The point of the coordinator is *parity*: [`run_deployment`] and a
+//! `GossipSim` run built from [`matched_sim_config`] share the failure
+//! models, the RNG fork order (churn schedule, evaluation-peer sample), the
+//! measurement grid, and the curve format — so a deployment over real
+//! sockets and a simulation of the same configuration produce curves on the
+//! same axes, directly comparable point by point.
+
+use crate::data::dataset::Dataset;
+use crate::eval::tracker::{point_from_errors, Curve};
+use crate::eval::zero_one_error;
+use crate::gossip::protocol::ProtocolConfig;
+use crate::net::deploy::{node_main, DeployConfig, NodeCtx, NodeStats, SharedRun, SIM_DELTA};
+use crate::sim::churn::ChurnSchedule;
+use crate::util::rng::Rng;
+use crate::util::stats::mean;
+use std::net::{SocketAddr, TcpListener};
+use std::sync::atomic::Ordering;
+use std::time::Instant;
+
+/// Aggregate counters of one deployment run (sums of [`NodeStats`]).
+#[derive(Clone, Debug, Default)]
+pub struct DeployStats {
+    pub messages_sent: u64,
+    pub messages_received: u64,
+    pub bytes_sent: u64,
+    pub sim_dropped: u64,
+    pub backlog_lost: u64,
+    pub io_errors: u64,
+    pub decode_errors: u64,
+    pub conns_accepted: u64,
+}
+
+/// Result of one deployment run: the same curve shape a `GossipSim` run
+/// produces, plus deployment-side accounting.
+#[derive(Clone, Debug)]
+pub struct DeployReport {
+    pub curve: Curve,
+    /// mean 0-1 error of every node's freshest model at shutdown
+    pub final_error: f64,
+    /// mean freshest-model update counter (≈ learning absorbed per node)
+    pub mean_model_t: f64,
+    pub stats: DeployStats,
+    pub per_node: Vec<NodeStats>,
+}
+
+/// The simulator configuration whose run is directly comparable to a
+/// deployment of `cfg`: same protocol, failure models, seed, and
+/// measurement grid, with the wall-clock Δ mapped back to [`SIM_DELTA`]
+/// ticks.  Because the coordinator replicates `GossipSim`'s RNG fork order,
+/// the two runs also share the churn schedule and the evaluation-peer
+/// sample.
+pub fn matched_sim_config(cfg: &DeployConfig) -> ProtocolConfig {
+    let mut sim = ProtocolConfig::paper_default(cfg.cycles);
+    sim.variant = cfg.variant;
+    sim.learner = cfg.learner;
+    sim.cache_size = cfg.cache_size;
+    sim.delta = SIM_DELTA;
+    sim.sampler = cfg.sampler;
+    sim.network = cfg.network;
+    sim.churn = cfg.churn;
+    sim.seed = cfg.seed;
+    sim.eval.n_peers = cfg.eval_peers;
+    // the *resolved* grid, so a pathological eval_at_cycles (unsorted,
+    // duplicated, out of range) still yields curves on identical axes
+    sim.eval.at_cycles = cfg.eval_grid();
+    sim
+}
+
+/// Run a real localhost deployment: spawn `cfg.n_nodes` peer threads, drive
+/// churn and drop/delay injection from the simulator's models, sample the
+/// evaluation peers at every measurement cycle, and shut down after the
+/// last cycle.  `data.train` must have at least `n_nodes` rows; node i owns
+/// row i.
+pub fn run_deployment(cfg: &DeployConfig, data: &Dataset) -> std::io::Result<DeployReport> {
+    assert!(cfg.n_nodes >= 2, "need at least two nodes");
+    assert!(data.n_train() >= cfg.n_nodes, "need one training example per node");
+    assert!(cfg.cycles >= 1, "need at least one cycle");
+    let n = cfg.n_nodes;
+    let d = data.d();
+
+    // ---- shared failure schedule + evaluation peers, in GossipSim's exact
+    // RNG fork order so a matched simulator run sees the same draws
+    let mut rng = Rng::new(cfg.seed);
+    let horizon = SIM_DELTA * (cfg.cycles + 1);
+    let churn = cfg.churn.as_ref().map(|c| {
+        let mut crng = rng.fork();
+        ChurnSchedule::generate(c, n, horizon, &mut crng)
+    });
+    let _sampler_rng = rng.fork(); // the simulator's sampler stream (deployment samplers are per-node)
+    let mut eval_rng = rng.fork();
+    let eval_peers = eval_rng.sample_indices(n, cfg.eval_peers.min(n));
+
+    // ---- bind all listeners first so every peer knows every address
+    let listeners: Vec<TcpListener> = (0..n)
+        .map(|_| {
+            let l = TcpListener::bind(("127.0.0.1", 0))?;
+            l.set_nonblocking(true)?;
+            Ok(l)
+        })
+        .collect::<std::io::Result<_>>()?;
+    let addrs: Vec<SocketAddr> =
+        listeners.iter().map(|l| l.local_addr()).collect::<std::io::Result<_>>()?;
+
+    let shared = SharedRun::new(n, d);
+    let start = Instant::now();
+
+    let (curve, per_node) = std::thread::scope(|scope| {
+        let handles: Vec<_> = listeners
+            .into_iter()
+            .enumerate()
+            .map(|(i, listener)| {
+                let ctx = NodeCtx {
+                    me: i,
+                    listener,
+                    addrs: &addrs,
+                    cfg,
+                    data,
+                    churn: churn.as_ref(),
+                    start,
+                    shared: &shared,
+                };
+                scope.spawn(move || node_main(ctx))
+            })
+            .collect();
+
+        // ---- evaluation loop on the coordinating thread
+        let curve = eval_loop(cfg, data, &eval_peers, &shared, start);
+
+        // the run length is cfg.cycles regardless of the measurement grid
+        // (a sparse eval_at_cycles must not truncate the deployment)
+        let end = start + cfg.cycle_offset(cfg.cycles);
+        let now = Instant::now();
+        if end > now {
+            std::thread::sleep(end - now);
+        }
+
+        // ---- shutdown and collect
+        shared.stop.store(true, Ordering::SeqCst);
+        let per_node: Vec<NodeStats> =
+            handles.into_iter().map(|h| h.join().expect("node thread panicked")).collect();
+        (curve, per_node)
+    });
+
+    // ---- final sweep over every node's published model
+    let mut errs = Vec::with_capacity(n);
+    for slot in &shared.models {
+        let m = slot.lock().unwrap().clone();
+        errs.push(zero_one_error(&m, &data.test, &data.test_y));
+    }
+
+    let mut stats = DeployStats::default();
+    for s in &per_node {
+        stats.messages_sent += s.sent;
+        stats.messages_received += s.received;
+        stats.bytes_sent += s.bytes_sent;
+        stats.sim_dropped += s.sim_dropped;
+        stats.backlog_lost += s.backlog_lost;
+        stats.io_errors += s.io_errors;
+        stats.decode_errors += s.decode_errors;
+        stats.conns_accepted += s.conns_accepted;
+    }
+    let mean_model_t = mean(&per_node.iter().map(|s| s.model_t as f64).collect::<Vec<_>>());
+
+    Ok(DeployReport {
+        curve,
+        final_error: mean(&errs),
+        mean_model_t,
+        stats,
+        per_node,
+    })
+}
+
+/// Sleep to each measurement-cycle boundary, sample the evaluation peers'
+/// published models, and emit the same `EvalPoint`s a simulator run
+/// produces (mean/std 0-1 error over the sampled peers, network-wide send
+/// count).
+fn eval_loop(
+    cfg: &DeployConfig,
+    data: &Dataset,
+    eval_peers: &[usize],
+    shared: &SharedRun,
+    start: Instant,
+) -> Curve {
+    let cycles = cfg.eval_grid();
+    let mut curve = Curve::new(format!(
+        "{}-{}-{}-deploy",
+        cfg.learner.name(),
+        cfg.variant.name(),
+        cfg.sampler.name()
+    ));
+    for &c in &cycles {
+        let due = start + cfg.cycle_offset(c);
+        let now = Instant::now();
+        if due > now {
+            std::thread::sleep(due - now);
+        }
+        let errs: Vec<f64> = eval_peers
+            .iter()
+            .map(|&p| {
+                let m = shared.models[p].lock().unwrap().clone();
+                zero_one_error(&m, &data.test, &data.test_y)
+            })
+            .collect();
+        curve.push(point_from_errors(
+            c,
+            &errs,
+            None,
+            None,
+            shared.messages_sent.load(Ordering::Relaxed),
+        ));
+    }
+    curve
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gossip::create_model::Variant;
+    use crate::p2p::overlay::SamplerConfig;
+    use crate::sim::network::NetworkConfig;
+
+    #[test]
+    fn matched_sim_config_mirrors_deployment() {
+        let dcfg = DeployConfig {
+            n_nodes: 10,
+            cycles: 17,
+            variant: Variant::Um,
+            cache_size: 5,
+            sampler: SamplerConfig::Oracle,
+            eval_peers: 7,
+            eval_at_cycles: vec![1, 5, 17],
+            seed: 99,
+            ..Default::default()
+        }
+        .with_extreme_failures();
+        let sim = matched_sim_config(&dcfg);
+        assert_eq!(sim.cycles, 17);
+        assert_eq!(sim.variant, Variant::Um);
+        assert_eq!(sim.cache_size, 5);
+        assert_eq!(sim.delta, SIM_DELTA);
+        assert_eq!(sim.sampler, SamplerConfig::Oracle);
+        assert_eq!(sim.seed, 99);
+        assert_eq!(sim.eval.n_peers, 7);
+        assert_eq!(sim.eval.at_cycles, vec![1, 5, 17]);
+        assert!(sim.churn.is_some(), "churn model must carry over");
+        assert_eq!(sim.network.drop_prob, NetworkConfig::extreme(SIM_DELTA).drop_prob);
+    }
+
+    /// The coordinator must derive the same evaluation peers a matched
+    /// simulator run samples (same seed, same fork order).
+    #[test]
+    fn eval_peer_sample_matches_sim_fork_order() {
+        let seed = 4242u64;
+        let n = 50;
+        let n_peers = 12;
+        // coordinator's derivation, churn disabled (no churn fork)
+        let mut rng = Rng::new(seed);
+        let _sampler = rng.fork();
+        let mut eval_rng = rng.fork();
+        let ours = eval_rng.sample_indices(n, n_peers);
+        // GossipSim::with_backend's derivation for churn = None
+        let mut sim_rng = Rng::new(seed);
+        let _sim_sampler = sim_rng.fork();
+        let mut sim_eval = sim_rng.fork();
+        let sims = sim_eval.sample_indices(n, n_peers);
+        assert_eq!(ours, sims);
+    }
+}

@@ -115,7 +115,10 @@ impl<'a, B: Backend> BatchedSim<'a, B> {
                     continue;
                 };
                 self.stats.messages_sent += 1;
-                self.stats.bytes_sent += (d * 4 + 8) as u64;
+                // full frame size; the cycle-synchronous driver piggybacks
+                // no NEWSCAST views, so there are no descriptor bytes
+                self.stats.bytes_sent +=
+                    (crate::gossip::message::WIRE_FRAME_OVERHEAD + d * 4) as u64;
                 if self.cfg.network.drop_prob > 0.0
                     && self.rng.chance(self.cfg.network.drop_prob)
                 {
@@ -163,6 +166,7 @@ impl<'a, B: Backend> BatchedSim<'a, B> {
                     false
                 }
             });
+            self.stats.messages_delivered += due.len() as u64;
 
             // single pass: per-node chaining is wired through the previous
             // message's weights, so rows stay independent within a batch

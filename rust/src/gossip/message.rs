@@ -21,13 +21,21 @@ pub struct ModelMsg {
     pub view: Vec<Descriptor>,
 }
 
+/// Fixed per-frame overhead of the deployment wire format (net/wire.rs):
+/// u32 length prefix + u8 version + u64 src + u64 t + u32 weight count +
+/// u16 view count = 27 bytes.  Shared with the simulator's byte accounting
+/// so `RunStats::bytes_sent` matches what `net/wire::encode` actually puts
+/// on a socket.
+pub const WIRE_FRAME_OVERHEAD: usize = 4 + 1 + 8 + 8 + 4 + 2;
+
 impl ModelMsg {
-    /// Wire size in bytes: weights + counter + descriptors
-    /// (d * 4 + 8 + |view| * 16).  Used by the message-complexity metrics
-    /// (the paper's cost analysis in Section IV).  The lazy `scale` does not
-    /// count: it is folded into the weights on a real wire.
+    /// Wire size in bytes of the full encoded frame:
+    /// `WIRE_FRAME_OVERHEAD + d * 4 + |view| * 16`.  Used by the
+    /// message-complexity metrics (the paper's cost analysis in Section IV)
+    /// and pinned to `net/wire::encode(&m).len()` exactly by test.  The lazy
+    /// `scale` does not count: it is folded into the weights on a real wire.
     pub fn wire_bytes(&self) -> usize {
-        self.w.len() * 4 + 8 + self.view.len() * 16
+        WIRE_FRAME_OVERHEAD + self.w.len() * 4 + self.view.len() * 16
     }
 }
 
@@ -36,7 +44,7 @@ mod tests {
     use super::*;
 
     #[test]
-    fn wire_size_counts_all_fields() {
+    fn wire_size_counts_all_fields_and_framing() {
         let msg = ModelMsg {
             src: 0,
             w: vec![0.0; 10],
@@ -44,6 +52,9 @@ mod tests {
             t: 3,
             view: vec![Descriptor { node: 1, ts: 2 }; 20],
         };
-        assert_eq!(msg.wire_bytes(), 40 + 8 + 320);
+        // regression: the old estimate (4d + 8) omitted the length prefix,
+        // version byte, src, and the d/view count fields — 19 bytes/message
+        assert_eq!(WIRE_FRAME_OVERHEAD, 27);
+        assert_eq!(msg.wire_bytes(), 27 + 40 + 320);
     }
 }

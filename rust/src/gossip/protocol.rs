@@ -208,6 +208,9 @@ pub struct RunStats {
     pub messages_sent: u64,
     pub messages_dropped: u64,
     pub messages_lost_offline: u64,
+    /// messages actually applied at a receiver; `sent - dropped -
+    /// lost_offline - delivered` is the in-flight count at the horizon
+    pub messages_delivered: u64,
     pub bytes_sent: u64,
     pub updates_applied: u64,
     /// engine calls made by the micro-batched path (batching effectiveness =
@@ -452,6 +455,8 @@ impl<'a> GossipSim<'a> {
         }
         self.flush()?;
 
+        // single source of truth: the Network tracks actual deliveries
+        self.stats.messages_delivered = self.network.delivered();
         Ok(RunResult { curve, stats: self.stats })
     }
 
@@ -499,6 +504,7 @@ impl<'a> GossipSim<'a> {
                 continue;
             }
             self.sampler.on_receive(dst, &msg.view);
+            self.network.note_delivered();
             live.push((dst, msg));
         }
         let per_msg_updates: u64 = match self.cfg.variant {

@@ -11,6 +11,9 @@
 //! * [`p2p`] — NEWSCAST gossip-based peer sampling.
 //! * [`gossip`] — the gossip-learning protocol (Algorithms 1, 2, 4).
 //! * [`engine`] — compute backends: native Rust and batched PJRT.
+//! * [`net`] / [`coordinator`] — deployment runtime: persistent-TCP peers
+//!   over the framed wire format, orchestrated into simulator-comparable
+//!   runs.
 //! * [`runtime`] — XLA/PJRT artifact loading and execution.
 //! * [`baselines`] — sequential Pegasos, weighted bagging, perfect matching.
 //! * [`eval`] — 0-1 error tracking, model similarity, CSV output.
@@ -20,6 +23,7 @@
 pub mod baselines;
 pub mod cli;
 pub mod config;
+pub mod coordinator;
 pub mod data;
 pub mod engine;
 pub mod eval;

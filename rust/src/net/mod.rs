@@ -1,7 +1,12 @@
-//! Real-deployment layer: framed wire format + a threaded localhost-TCP
-//! runner that executes the gossip protocol as actual concurrent peers
-//! (validating the asynchronous message path outside the simulator).
+//! Real-deployment layer (DESIGN.md §10): the framed wire format with an
+//! incremental multi-frame decoder (`wire`), and the per-node deployment
+//! runtime (`deploy`) — persistent localhost-TCP peers executing the gossip
+//! protocol with NEWSCAST views piggybacked over the wire and the
+//! simulator's churn/drop/delay models injected on wall clock.  Run
+//! orchestration (spawn/evaluate/shutdown/collect) lives in
+//! `crate::coordinator`.
 pub mod deploy;
 pub mod wire;
 
-pub use deploy::{run_deployment, DeployConfig, DeployResult};
+pub use crate::coordinator::{run_deployment, DeployReport, DeployStats};
+pub use deploy::{DeployConfig, NodeStats, SIM_DELTA};

@@ -46,6 +46,9 @@ pub enum WireError {
     BadVersion(u8),
     BadLength(u32),
     Truncated,
+    /// The declared counts do not account for the whole body: a well-formed
+    /// frame must be consumed exactly.
+    TrailingBytes(usize),
 }
 
 impl std::fmt::Display for WireError {
@@ -55,6 +58,7 @@ impl std::fmt::Display for WireError {
             WireError::BadVersion(v) => write!(f, "bad wire version {v}"),
             WireError::BadLength(n) => write!(f, "bad frame length {n}"),
             WireError::Truncated => write!(f, "truncated frame"),
+            WireError::TrailingBytes(n) => write!(f, "{n} trailing bytes after frame"),
         }
     }
 }
@@ -112,7 +116,13 @@ pub fn decode_body(body: &[u8]) -> Result<ModelMsg, WireError> {
     let src = c.u64()? as usize;
     let t = c.u64()?;
     let d = c.u32()? as usize;
-    if d * 4 > body.len() {
+    // checked: `d * 4` overflows a 32-bit usize for d >= 2^30, which would
+    // bypass the bound check and feed a huge d into Vec::with_capacity
+    let need = d
+        .checked_mul(4)
+        .and_then(|b| b.checked_add(2)) // the u16 view count must follow
+        .ok_or(WireError::Truncated)?;
+    if need > body.len() - c.pos {
         return Err(WireError::Truncated);
     }
     let mut w = Vec::with_capacity(d);
@@ -120,11 +130,15 @@ pub fn decode_body(body: &[u8]) -> Result<ModelMsg, WireError> {
         w.push(c.f32()?);
     }
     let nv = c.u16()? as usize;
-    let mut view = Vec::with_capacity(nv);
+    let mut view = Vec::with_capacity(nv.min(1024));
     for _ in 0..nv {
         let node = c.u64()? as usize;
         let ts = c.u64()?;
         view.push(Descriptor { node, ts });
+    }
+    // the declared counts must consume the body exactly
+    if c.pos != body.len() {
+        return Err(WireError::TrailingBytes(body.len() - c.pos));
     }
     Ok(ModelMsg { src, w, scale: 1.0, t, view })
 }
@@ -146,6 +160,55 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<ModelMsg, WireError> {
 pub fn write_frame<W: Write>(w: &mut W, msg: &ModelMsg) -> Result<(), WireError> {
     w.write_all(&encode(msg))?;
     Ok(())
+}
+
+/// Incremental frame extractor for a nonblocking byte stream: append raw
+/// bytes as they arrive (`extend`), then pull every complete frame out per
+/// wake (`next_frame`).  This is what lets the deployment runtime keep one
+/// persistent connection per peer and drain an arbitrary number of frames
+/// per poll instead of one frame per fresh connection.
+#[derive(Debug, Default)]
+pub struct FrameBuf {
+    buf: Vec<u8>,
+    /// consumed prefix of `buf` (compacted on the next `extend`)
+    pos: usize,
+}
+
+impl FrameBuf {
+    pub fn extend(&mut self, bytes: &[u8]) {
+        if self.pos > 0 {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes buffered but not yet returned as complete frames.
+    pub fn pending(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Extract the next complete frame, if one is fully buffered.
+    /// `Some(Err(_))` means the stream is poisoned (bad length header or
+    /// malformed body) — framing cannot resynchronize, so the caller should
+    /// drop the connection.
+    pub fn next_frame(&mut self) -> Option<Result<ModelMsg, WireError>> {
+        let avail = &self.buf[self.pos..];
+        if avail.len() < 4 {
+            return None;
+        }
+        let len = u32::from_le_bytes(avail[..4].try_into().unwrap());
+        if len == 0 || len > MAX_FRAME {
+            return Some(Err(WireError::BadLength(len)));
+        }
+        let len = len as usize;
+        if avail.len() < 4 + len {
+            return None;
+        }
+        let res = decode_body(&avail[4..4 + len]);
+        self.pos += 4 + len;
+        Some(res)
+    }
 }
 
 #[cfg(test)]
@@ -211,9 +274,82 @@ mod tests {
     }
 
     #[test]
-    fn frame_size_matches_wire_bytes_estimate() {
-        let m = sample(57, 20);
-        // encode adds len+version+src+counts framing over the estimate
-        assert!(encode(&m).len() as i64 - m.wire_bytes() as i64 <= 32);
+    fn frame_size_matches_wire_bytes_exactly() {
+        // regression: wire_bytes used to omit the 19 bytes of framing
+        // (length prefix, version, src, d/view counts)
+        for (d, nv) in [(0, 0), (1, 1), (57, 20), (9947, 20)] {
+            let m = sample(d, nv);
+            assert_eq!(encode(&m).len(), m.wire_bytes(), "d={d} nv={nv}");
+        }
+    }
+
+    #[test]
+    fn rejects_overflowing_weight_count() {
+        // a frame declaring d near u32::MAX: `d * 4` wraps on 32-bit targets,
+        // which used to bypass the bound check before Vec::with_capacity(d)
+        let mut body = vec![WIRE_VERSION];
+        body.extend_from_slice(&7u64.to_le_bytes()); // src
+        body.extend_from_slice(&9u64.to_le_bytes()); // t
+        body.extend_from_slice(&u32::MAX.to_le_bytes()); // absurd d
+        body.extend_from_slice(&[0u8; 8]); // a few bytes of "weights"
+        assert!(matches!(decode_body(&body), Err(WireError::Truncated)));
+        // d = 2^30: d * 4 == 2^32 wraps to 0 on 32-bit usize
+        body.truncate(17); // keep version + src + t, drop the d field
+        body.extend_from_slice(&(1u32 << 30).to_le_bytes());
+        body.extend_from_slice(&[0u8; 8]);
+        assert!(matches!(decode_body(&body), Err(WireError::Truncated)));
+    }
+
+    #[test]
+    fn rejects_inexact_body_fit() {
+        // declared counts must consume the body exactly — trailing garbage
+        // (e.g. a d that undercounts the weights present) is rejected
+        let m = sample(4, 1);
+        let mut enc = encode(&m);
+        enc.extend_from_slice(&[0xAB; 3]);
+        assert!(matches!(
+            decode_body(&enc[4..]),
+            Err(WireError::TrailingBytes(3))
+        ));
+    }
+
+    #[test]
+    fn frame_buf_drains_multiple_frames_per_extend() {
+        let mut fb = FrameBuf::default();
+        let mut bytes = Vec::new();
+        for d in [3, 5, 7] {
+            bytes.extend_from_slice(&encode(&sample(d, 2)));
+        }
+        fb.extend(&bytes);
+        let dims: Vec<usize> = std::iter::from_fn(|| fb.next_frame())
+            .map(|r| r.unwrap().w.len())
+            .collect();
+        assert_eq!(dims, vec![3, 5, 7]);
+        assert_eq!(fb.pending(), 0);
+    }
+
+    #[test]
+    fn frame_buf_handles_byte_by_byte_arrival() {
+        let m = sample(6, 3);
+        let enc = encode(&m);
+        let mut fb = FrameBuf::default();
+        for (i, &b) in enc.iter().enumerate() {
+            fb.extend(&[b]);
+            if i + 1 < enc.len() {
+                assert!(fb.next_frame().is_none(), "partial frame at byte {i}");
+            }
+        }
+        let got = fb.next_frame().unwrap().unwrap();
+        assert_eq!(got.w, m.w);
+        assert_eq!(got.view, m.view);
+        assert!(fb.next_frame().is_none());
+    }
+
+    #[test]
+    fn frame_buf_poisons_on_bad_header() {
+        let mut fb = FrameBuf::default();
+        fb.extend(&(MAX_FRAME + 1).to_le_bytes());
+        fb.extend(&[0u8; 32]);
+        assert!(matches!(fb.next_frame(), Some(Err(WireError::BadLength(_)))));
     }
 }

@@ -43,6 +43,24 @@ impl Newscast {
         Newscast { views, view_size }
     }
 
+    /// Bootstrap a *single* node's view in an otherwise empty state: used by
+    /// the deployment runtime, where each node owns a sampler instance and
+    /// only ever touches its own slot.  Keeps per-node cost O(view_size)
+    /// instead of O(n · view_size) (which would be O(n²) across a
+    /// deployment).
+    pub fn bootstrap_node(me: NodeId, n: usize, view_size: usize, rng: &mut Rng) -> Self {
+        let mut views = vec![Vec::new(); n];
+        let mut v = Vec::with_capacity(view_size);
+        while v.len() < view_size.min(n.saturating_sub(1)) {
+            let peer = rng.below_usize(n);
+            if peer != me && !v.iter().any(|d: &Descriptor| d.node == peer) {
+                v.push(Descriptor { node: peer, ts: 0 });
+            }
+        }
+        views[me] = v;
+        Newscast { views, view_size }
+    }
+
     /// SELECTPEER: uniform draw from the local view.
     pub fn select(&self, node: NodeId, rng: &mut Rng) -> Option<NodeId> {
         let v = &self.views[node];
@@ -104,6 +122,27 @@ mod tests {
             ids.dedup();
             assert_eq!(ids.len(), 20, "duplicate descriptors");
         }
+    }
+
+    #[test]
+    fn bootstrap_node_fills_only_own_slot() {
+        let mut rng = Rng::new(6);
+        let nc = Newscast::bootstrap_node(7, 50, 20, &mut rng);
+        let v = nc.view(7);
+        assert_eq!(v.len(), 20);
+        assert!(v.iter().all(|d| d.node != 7 && d.node < 50));
+        let mut ids: Vec<_> = v.iter().map(|d| d.node).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), 20, "duplicate descriptors");
+        // every other slot stays empty (and unallocated beyond the Vec)
+        for me in 0..50 {
+            if me != 7 {
+                assert!(nc.view(me).is_empty());
+            }
+        }
+        // the node's own slot behaves like a normal newscast view
+        assert!(nc.select(7, &mut rng).is_some());
     }
 
     #[test]

@@ -62,6 +62,20 @@ impl PeerSampler {
         }
     }
 
+    /// A sampler for one node of a real deployment: only `me`'s view slot is
+    /// populated (NEWSCAST) since each deployed node owns its own sampler
+    /// instance and never reads another node's state.  Matching is not
+    /// meaningful per-node (it needs a globally consistent partner table)
+    /// and must be rejected by the deployment configuration.
+    pub fn new_local(cfg: SamplerConfig, me: NodeId, n: usize, delta: Ticks, rng: &mut Rng) -> Self {
+        match cfg {
+            SamplerConfig::Newscast { view_size } => {
+                PeerSampler::Newscast(Newscast::bootstrap_node(me, n, view_size, rng))
+            }
+            other => PeerSampler::new(other, n, delta, rng),
+        }
+    }
+
     /// SELECTPEER for `node` at `now`. `online` gives current liveness (the
     /// oracle and matching samplers restrict to online peers; newscast may
     /// return an offline peer — the message is then simply lost, as in a
@@ -183,6 +197,25 @@ mod tests {
             .filter(|&i| s.select(i, 0, &online, &mut rng).is_none())
             .count();
         assert_eq!(unmatched, 1);
+    }
+
+    #[test]
+    fn local_sampler_uses_single_view_slot() {
+        let mut rng = Rng::new(9);
+        let mut s = PeerSampler::new_local(
+            SamplerConfig::Newscast { view_size: 5 },
+            3,
+            20,
+            1000,
+            &mut rng,
+        );
+        let online = vec![true; 20];
+        let p = s.select(3, 0, &online, &mut rng).unwrap();
+        assert!(p != 3 && p < 20);
+        let payload = s.payload(3, 10);
+        assert_eq!(payload[0].node, 3);
+        assert_eq!(payload.len(), 6); // own descriptor + 5 view entries
+        s.on_receive(3, &[Descriptor { node: 11, ts: 99 }]);
     }
 
     #[test]

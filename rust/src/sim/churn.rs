@@ -67,8 +67,15 @@ impl ChurnSchedule {
                 t = end;
                 online = false;
             } else {
+                // already partway through an offline gap: the residual of one
+                // gap remains, and the *next* phase is the first online
+                // session.  (Leaving `online = false` here made the loop draw
+                // a second full offline gap on top of the residual, so ~10%
+                // of nodes joined far later than the stationary model
+                // predicts — see the stationary-start regression tests.)
                 let len = cfg.draw_offline(rng);
                 t = len - rng.below(len.max(1));
+                online = true;
             }
             while t < horizon {
                 if online {
@@ -174,6 +181,54 @@ mod tests {
                 assert_ne!(w[0], w[1], "node {node} transitions must alternate");
             }
         }
+    }
+
+    /// Regression (stationary start): a node that begins offline must join
+    /// after the *residual* of a single offline gap (mean ≈ E[gap]/2), not
+    /// after residual + another full gap as the old code did.
+    #[test]
+    fn offline_starters_join_within_one_residual_gap() {
+        let cfg = ChurnConfig::paper_default(1000);
+        // E[offline gap] = E[lognormal(mu, sigma)] * (1-f)/f
+        let scale = (1.0 - cfg.online_fraction) / cfg.online_fraction;
+        let e_gap = (cfg.mu + cfg.sigma * cfg.sigma / 2.0).exp() * scale;
+        let mut rng = Rng::new(11);
+        let sched = ChurnSchedule::generate(&cfg, 3000, 2_000_000, &mut rng);
+        let first_joins: Vec<f64> = sched
+            .intervals
+            .iter()
+            .filter_map(|iv| iv.first().map(|&(s, _)| s))
+            .filter(|&s| s > 0) // offline starters only
+            .map(|s| s as f64)
+            .collect();
+        assert!(first_joins.len() > 150, "expected ~10% offline starters");
+        let mean = first_joins.iter().sum::<f64>() / first_joins.len() as f64;
+        // with the fix the mean residual is ~E[gap]/2; the old double-gap
+        // draw put it near 1.5 * E[gap]
+        assert!(
+            mean < e_gap,
+            "mean first join {mean:.0} vs single-gap mean {e_gap:.0}"
+        );
+    }
+
+    /// Regression (stationary start): the online fraction must hold the
+    /// ~90% target from the very beginning of the run, not dip while the
+    /// offline starters sit out a spurious extra gap.
+    #[test]
+    fn early_window_online_fraction_stays_at_target() {
+        let cfg = ChurnConfig::paper_default(1000);
+        let mut rng = Rng::new(12);
+        let n = 3000;
+        let sched = ChurnSchedule::generate(&cfg, n, 2_000_000, &mut rng);
+        let window = 20_000; // 20 cycles at delta = 1000 ticks
+        let online_time: u64 = sched
+            .intervals
+            .iter()
+            .flat_map(|iv| iv.iter().map(|&(s, e)| e.min(window).saturating_sub(s)))
+            .sum();
+        let f = online_time as f64 / (window as f64 * n as f64);
+        assert!(f > 0.86, "early-window online fraction {f}");
+        assert!(f < 0.95, "early-window online fraction {f}");
     }
 
     #[test]

@@ -62,11 +62,12 @@ pub struct Network {
     pub sent: u64,
     pub dropped: u64,
     pub lost_offline: u64,
+    delivered: u64,
 }
 
 impl Network {
     pub fn new(cfg: NetworkConfig) -> Self {
-        Network { cfg, sent: 0, dropped: 0, lost_offline: 0 }
+        Network { cfg, sent: 0, dropped: 0, lost_offline: 0, delivered: 0 }
     }
 
     /// Returns `Some(delivery_delay)` or `None` if the message is dropped.
@@ -84,8 +85,21 @@ impl Network {
         self.lost_offline += 1;
     }
 
+    /// Record an actual delivery (the receiver applied the message).
+    pub fn note_delivered(&mut self) {
+        self.delivered += 1;
+    }
+
+    /// Messages actually handed to a receiver.  Tracked explicitly:
+    /// the old derivation `sent - dropped - lost_offline` silently counted
+    /// messages still in flight at the horizon as delivered.
     pub fn delivered(&self) -> u64 {
-        self.sent - self.dropped - self.lost_offline
+        self.delivered
+    }
+
+    /// Messages sent but neither dropped, lost to churn, nor delivered yet.
+    pub fn in_flight(&self) -> u64 {
+        self.sent - self.dropped - self.lost_offline - self.delivered
     }
 }
 
@@ -99,9 +113,11 @@ mod tests {
         let mut rng = Rng::new(1);
         for _ in 0..1000 {
             assert_eq!(net.transmit(&mut rng), Some(10));
+            net.note_delivered();
         }
         assert_eq!(net.dropped, 0);
         assert_eq!(net.delivered(), 1000);
+        assert_eq!(net.in_flight(), 0);
     }
 
     #[test]
@@ -138,5 +154,22 @@ mod tests {
         net.transmit(&mut rng);
         net.note_lost_offline();
         assert_eq!(net.delivered(), 0);
+        assert_eq!(net.in_flight(), 0);
+    }
+
+    /// Regression: messages still in flight at the horizon were counted as
+    /// delivered by the old `sent - dropped - lost_offline` derivation.
+    #[test]
+    fn in_flight_messages_are_not_counted_delivered() {
+        let mut net = Network::new(NetworkConfig::reliable());
+        let mut rng = Rng::new(5);
+        for _ in 0..3 {
+            net.transmit(&mut rng); // scheduled but never applied
+        }
+        assert_eq!(net.delivered(), 0, "in-flight must not count as delivered");
+        assert_eq!(net.in_flight(), 3);
+        net.note_delivered();
+        assert_eq!(net.delivered(), 1);
+        assert_eq!(net.in_flight(), 2);
     }
 }

@@ -1,0 +1,176 @@
+//! Deployment-runtime integration tests (DESIGN.md §10): a real ≥64-node
+//! localhost-TCP deployment with NEWSCAST sampling and churn injection must
+//! produce a convergence curve on the same axes as — and within tolerance
+//! of — a matched-config simulator run.
+//!
+//! These tests open hundreds of sockets and time gossip on the wall clock,
+//! so they serialize through one mutex (and CI additionally runs this
+//! binary with `--test-threads=1`) to avoid contending for ports and CPU.
+
+use golf::coordinator::{matched_sim_config, run_deployment};
+use golf::data::synthetic::{urls_like, Scale};
+use golf::gossip::protocol::run;
+use golf::net::deploy::DeployConfig;
+use golf::p2p::overlay::SamplerConfig;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// The acceptance test: 80 real nodes, NEWSCAST peer sampling over the
+/// wire, churn injected from the simulator's schedule — and the resulting
+/// curve comparable point-for-point with a matched `GossipSim` run.
+#[test]
+fn deploy_parity_with_matched_simulator() {
+    let _g = serial();
+    let ds = urls_like(5, Scale(0.008)); // 80 training rows -> 80 nodes
+    let mut cfg = DeployConfig {
+        n_nodes: ds.n_train(),
+        delta: Duration::from_millis(40),
+        cycles: 40,
+        sampler: SamplerConfig::Newscast { view_size: 20 },
+        eval_peers: 20,
+        seed: 7,
+        ..Default::default()
+    };
+    // churn only: the paper's schedule at 90% online.  (Drop/delay are
+    // exercised by deploy_under_extreme_failures_smoke; keeping them off
+    // here keeps the wall-clock run tight enough for a sharp tolerance.)
+    cfg.churn = Some(golf::sim::churn::ChurnConfig::paper_default(
+        golf::net::deploy::SIM_DELTA,
+    ));
+    assert!(cfg.n_nodes >= 64, "acceptance requires a 64+ node deployment");
+
+    let report = run_deployment(&cfg, &ds).expect("deployment failed");
+    let sim = run(matched_sim_config(&cfg), &ds);
+
+    // same measurement grid: the curves share their x axis
+    let deploy_cycles: Vec<u64> = report.curve.points.iter().map(|p| p.cycle).collect();
+    let sim_cycles: Vec<u64> = sim.curve.points.iter().map(|p| p.cycle).collect();
+    assert_eq!(deploy_cycles, sim_cycles, "curves must share the cycle grid");
+
+    // the deployment really gossiped
+    assert!(report.stats.messages_received > cfg.n_nodes as u64);
+    assert!(report.mean_model_t > 1.0, "models never updated");
+
+    // curve shape: converging from the zero-model plateau
+    let first = report.curve.points.first().unwrap().err_mean;
+    let last = report.curve.final_error();
+    assert!(last < first - 0.05, "deployment must converge: {first} -> {last}");
+
+    // final-error parity with the matched simulator run
+    let gap = (last - sim.curve.final_error()).abs();
+    assert!(
+        gap < 0.15,
+        "deploy {last:.4} vs sim {:.4}: gap {gap:.4} out of tolerance",
+        sim.curve.final_error()
+    );
+}
+
+/// Smoke test under the full Section VI-A(i) failure set: 64 nodes with
+/// 50% drop, [Δ,10Δ] delay, and churn, all injected on the wall clock.
+#[test]
+fn deploy_under_extreme_failures_smoke() {
+    let _g = serial();
+    let ds = urls_like(6, Scale(0.0064)); // 64 training rows
+    let cfg = DeployConfig {
+        n_nodes: ds.n_train(),
+        delta: Duration::from_millis(25),
+        cycles: 16,
+        eval_peers: 12,
+        seed: 11,
+        ..Default::default()
+    }
+    .with_extreme_failures();
+    assert_eq!(cfg.n_nodes, 64);
+
+    let report = run_deployment(&cfg, &ds).expect("deployment failed");
+    let s = &report.stats;
+    assert!(s.messages_sent > 0);
+    assert!(s.sim_dropped > 0, "the 50% drop model must engage");
+    assert!(s.messages_received > 0, "some messages must still get through");
+    // delivered + injected losses never exceed what was sent (delayed
+    // messages still in flight at shutdown are simply lost)
+    assert!(s.messages_received + s.sim_dropped + s.backlog_lost <= s.messages_sent);
+    assert!(
+        !report.curve.points.is_empty(),
+        "failure injection must not stall the evaluation loop"
+    );
+    assert!(report.final_error <= 0.5, "error {}", report.final_error);
+}
+
+/// De-flaked successor of the old `tcp_deployment_learns`: a short run must
+/// show a learning signal, but the absolute-error bar is generous and the
+/// primary assertions are relative, so a slow CI machine that processes
+/// fewer wall-clock cycles still passes.
+#[test]
+fn deploy_short_run_learns() {
+    let _g = serial();
+    let ds = urls_like(5, Scale(0.0024)); // 24 training rows
+    let cfg = DeployConfig {
+        n_nodes: ds.n_train(),
+        delta: Duration::from_millis(25),
+        cycles: 30,
+        eval_peers: 12,
+        seed: 3,
+        ..Default::default()
+    };
+    let report = run_deployment(&cfg, &ds).expect("deployment failed");
+    assert!(report.stats.messages_sent > cfg.n_nodes as u64);
+    assert!(report.stats.messages_received > 0, "received 0");
+    assert!(report.mean_model_t > 1.0, "models never updated");
+    let first = report.curve.points.first().unwrap().err_mean;
+    let last = report.curve.final_error();
+    // relative: never worse than the start; absolute: strictly below the
+    // ~0.33 predict-all-negative plateau, with slack for loaded machines
+    assert!(last <= first + 1e-9, "error rose: {first} -> {last}");
+    assert!(last < 0.32, "no learning signal: final error {last}");
+}
+
+/// `golf deploy` end to end through the CLI: tiny run, `--compare-sim`,
+/// CSV output.
+#[test]
+fn deploy_cli_end_to_end() {
+    let _g = serial();
+    // 0.002 scale -> 20 urls nodes; a handful of 10 ms cycles keeps the
+    // socket run well under a second
+    let out = std::env::temp_dir().join("golf_cli_deployment_test.csv");
+    let args: Vec<String> = [
+        "deploy", "--dataset", "urls", "--scale", "0.002", "--cycles", "4",
+        "--delta_ms", "10", "--eval_peers", "6", "--compare-sim",
+        "--out", out.to_str().unwrap(),
+    ]
+    .iter()
+    .map(|a| a.to_string())
+    .collect();
+    assert_eq!(golf::cli::dispatch(&args), 0);
+    assert!(out.exists());
+    std::fs::remove_file(&out).ok();
+}
+
+/// Shutdown is prompt: the coordinator stops after the last measurement
+/// cycle and every node thread exits on the stop flag.
+#[test]
+fn deploy_respects_stop_flag_quickly() {
+    let _g = serial();
+    let ds = urls_like(6, Scale(0.001)); // tiny: 10 nodes
+    let cfg = DeployConfig {
+        n_nodes: ds.n_train(),
+        delta: Duration::from_millis(15),
+        cycles: 8,
+        eval_peers: 5,
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let report = run_deployment(&cfg, &ds).expect("deployment failed");
+    assert!(
+        t0.elapsed() < Duration::from_secs(20),
+        "run took {:?}",
+        t0.elapsed()
+    );
+    assert_eq!(report.per_node.len(), cfg.n_nodes);
+}

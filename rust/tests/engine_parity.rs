@@ -138,6 +138,7 @@ fn assert_runs_identical(a: &RunResult, b: &RunResult, what: &str) {
     assert_eq!(a.stats.messages_sent, b.stats.messages_sent, "{what}");
     assert_eq!(a.stats.messages_dropped, b.stats.messages_dropped, "{what}");
     assert_eq!(a.stats.messages_lost_offline, b.stats.messages_lost_offline, "{what}");
+    assert_eq!(a.stats.messages_delivered, b.stats.messages_delivered, "{what}");
     assert_eq!(a.stats.updates_applied, b.stats.updates_applied, "{what}");
 }
 

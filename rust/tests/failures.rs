@@ -96,6 +96,14 @@ fn message_loss_accounting_consistent() {
     let s = &res.stats;
     assert!(s.messages_dropped + s.messages_lost_offline < s.messages_sent);
     assert!(s.updates_applied <= s.messages_sent - s.messages_dropped - s.messages_lost_offline);
+    // MU applies exactly one update per delivered message
+    assert_eq!(s.updates_applied, s.messages_delivered);
+    // regression: with [Δ, 10Δ] delays, last-cycle sends are still in flight
+    // at the horizon and must not be counted as delivered
+    assert!(
+        s.messages_delivered < s.messages_sent - s.messages_dropped - s.messages_lost_offline,
+        "in-flight messages counted as delivered"
+    );
     // drop rate near the configured 0.5
     let rate = s.messages_dropped as f64 / s.messages_sent as f64;
     assert!((rate - 0.5).abs() < 0.05, "drop rate {rate}");

@@ -25,11 +25,12 @@ fn cost_model_one_message_per_node_per_cycle() {
     let res = run(cfg(25, 1), &ds);
     let per = res.stats.messages_sent as f64 / (n * 25.0);
     assert!((per - 1.0).abs() < 0.05, "messages per node-cycle {per}");
-    // message size: d*4 + 8 + view bytes (~20 descriptors)
+    // message size: full frame = 27-byte overhead + d*4 weights + view
+    // bytes (NEWSCAST payload = own descriptor + up to 20 view entries)
     let bytes_per_msg = res.stats.bytes_sent as f64 / res.stats.messages_sent as f64;
     let d = ds.d() as f64;
-    assert!(bytes_per_msg >= d * 4.0 + 8.0);
-    assert!(bytes_per_msg <= d * 4.0 + 8.0 + 21.0 * 16.0);
+    assert!(bytes_per_msg >= 27.0 + d * 4.0);
+    assert!(bytes_per_msg <= 27.0 + d * 4.0 + 21.0 * 16.0);
 }
 
 #[test]
