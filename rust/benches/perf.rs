@@ -269,6 +269,40 @@ fn main() {
         &kjson,
     );
 
+    // ---- scenario library sweep (DESIGN.md §11): event-driven runs of
+    // every built-in timeline on one urls-like network, tracking how much
+    // protocol throughput each failure script costs ---------------------
+    println!("\n--- scenario library: event-driven run of every built-in");
+    {
+        let mut sjson: Vec<(String, f64)> = Vec::new();
+        let ds = urls_like(4, Scale(0.02)); // 200 nodes, >= trace coverage
+        for &name in golf::scenario::builtin_names() {
+            let scn = golf::scenario::builtin(name).expect("built-in");
+            let cycles = scn.cycles_hint.unwrap_or(200);
+            scn.validate(ds.n_train(), cycles).expect("built-in fits its hint");
+            let mut updates = 0u64;
+            let mut blocked = 0u64;
+            let r = bench(&format!("scenario {name}: urls 200 nodes"), 0, 2, || {
+                let mut cfg = ProtocolConfig::paper_default(cycles);
+                cfg.eval.n_peers = 0;
+                cfg.eval.at_cycles = vec![cycles];
+                cfg.seed = 4;
+                cfg.scenario = Some(scn.clone());
+                let res = run(cfg, &ds);
+                updates = res.stats.updates_applied;
+                blocked = res.stats.messages_blocked;
+            });
+            let per_s = r.throughput(updates as f64);
+            println!(
+                "    -> {:.2} M applied updates/s ({} partition-blocked)",
+                per_s / 1e6,
+                blocked
+            );
+            sjson.push((name.replace('-', "_"), per_s));
+        }
+        write_bench_json("scenarios", "applied_updates_per_s", &sjson);
+    }
+
     println!("\n--- native backend: batched MU step");
     let op = StepOp { learner: LearnerKind::Pegasos, variant: Variant::Mu, hp: 0.01 };
     let mut native = NativeBackend::new();

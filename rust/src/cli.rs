@@ -6,6 +6,8 @@
 //! golf table1 [--scale S] [--seed N]           reproduce Table I
 //! golf fig1|fig2|fig3 [--scale S] [--cycles N] reproduce a figure
 //! golf sweep [--scale S] [--replicates K]      parallel grid sweep
+//! golf scenario <name|file.scn> [--key value]  scripted failure timeline
+//! golf scenario --list                         built-in scenario library
 //! golf deploy [--config FILE] [--key value ..] real localhost-TCP run
 //! golf info                                    artifact/runtime info
 //! ```
@@ -67,7 +69,11 @@ USAGE:
   golf fig3   [--scale S] [--cycles N] [--seed N] [--threads T] [--out-dir DIR]
   golf sweep  [--scale S] [--cycles N] [--seed N] [--threads T]
               [--replicates K] [--mode microbatch|scalar] [--coalesce TICKS]
-              [--exec auto|dense|sparse] [--out-dir DIR]
+              [--exec auto|dense|sparse] [--scenarios a,b,c] [--out-dir DIR]
+  golf scenario <name|file.scn> [--dataset D] [--scale S] [--cycles N]
+              [--backend event|batched-native] [--deploy [--compare-sim]]
+              [--seed N] [--eval_peers K] [--out FILE.csv]
+  golf scenario --list
   golf deploy [--config FILE] [--dataset D] [--scale S] [--cycles N]
               [--variant rw|mu|um] [--learner pegasos|adaline|logreg]
               [--failures none|extreme] [--sampler newscast|oracle]
@@ -92,6 +98,9 @@ fn spec_from_flags(flags: &HashMap<String, String>) -> Result<ExperimentSpec, St
 
 fn run_spec(spec: &ExperimentSpec) -> Result<RunResult, String> {
     let ds = spec.build_dataset()?;
+    // scenarios must fit this run's node count and horizon before a
+    // simulator may compile them
+    spec.validate_scenario(ds.n_train())?;
     let cfg = spec.protocol_config()?;
     eprintln!(
         "running {} on {} ({} nodes, d={}) for {} cycles [{}]",
@@ -120,6 +129,78 @@ fn run_spec(spec: &ExperimentSpec) -> Result<RunResult, String> {
             run_batched(cfg, &ds, &mut be).map_err(|e| format!("{e:#}"))
         }
     }
+}
+
+/// Resolve a deployment spec against its dataset, run it, print the report,
+/// and optionally run the matched simulator comparison / write CSV output.
+/// Shared by `golf deploy` and `golf scenario --deploy`.
+fn deploy_and_report(
+    spec: &crate::config::DeploySpec,
+    compare_sim: bool,
+    out: Option<&str>,
+) -> Result<(), String> {
+    let ds = spec.experiment.build_dataset()?;
+    let cfg = spec.deploy_config(&ds)?;
+    eprintln!(
+        "deploying {} {} nodes on {} (d={}) for {} cycles of {:?} [{} sampling{}{}]",
+        cfg.n_nodes,
+        cfg.variant.name(),
+        ds.name,
+        ds.d(),
+        cfg.cycles,
+        cfg.delta,
+        cfg.sampler.name(),
+        if cfg.churn.is_some() { ", churn+drop/delay" } else { "" },
+        cfg.scenario
+            .as_ref()
+            .map_or(String::new(), |s| format!(", scenario {:?}", s.name)),
+    );
+    if compare_sim && cfg.n_nodes != ds.n_train() {
+        eprintln!(
+            "warning: --compare-sim with nodes = {} but {} training rows — \
+             the simulator always runs one node per row",
+            cfg.n_nodes,
+            ds.n_train()
+        );
+    }
+    let report = crate::coordinator::run_deployment(&cfg, &ds).map_err(|e| e.to_string())?;
+    print_points(&report.curve);
+    let s = &report.stats;
+    eprintln!(
+        "sent={} received={} bytes={} sim_dropped={} blocked={} backlog_lost={} \
+         io_errors={} decode_errors={} conns={}",
+        s.messages_sent,
+        s.messages_received,
+        s.bytes_sent,
+        s.sim_dropped,
+        s.partition_blocked,
+        s.backlog_lost,
+        s.io_errors,
+        s.decode_errors,
+        s.conns_accepted,
+    );
+    eprintln!(
+        "final error {:.4} (mean model t {:.1})",
+        report.final_error, report.mean_model_t
+    );
+    let mut curves = vec![report.curve.clone()];
+    if compare_sim {
+        let sim_cfg = crate::coordinator::matched_sim_config(&cfg);
+        let sim = crate::gossip::run(sim_cfg, &ds);
+        eprintln!(
+            "matched simulator final {:.4} (deploy {:.4}, gap {:+.4})",
+            sim.curve.final_error(),
+            report.curve.final_error(),
+            report.curve.final_error() - sim.curve.final_error(),
+        );
+        curves.push(sim.curve);
+    }
+    if let Some(out) = out {
+        crate::eval::csv::write_curves(std::path::Path::new(out), &curves)
+            .map_err(|e| e.to_string())?;
+        eprintln!("wrote {out}");
+    }
+    Ok(())
 }
 
 fn print_points(curve: &crate::eval::tracker::Curve) {
@@ -153,7 +234,18 @@ fn print_curve(res: &RunResult) {
 
 /// Entry point used by main.rs; returns a process exit code.
 pub fn dispatch(args: &[String]) -> i32 {
-    let parsed = match parse_args(args) {
+    // `golf scenario <name|file>` takes one positional argument; splice it
+    // into the flag map so the strict `--flag value` parser stays strict
+    // for every other command
+    let mut args = args.to_vec();
+    if args.first().map(String::as_str) == Some("scenario")
+        && args.get(1).map_or(false, |a| !a.starts_with("--"))
+    {
+        let name = args.remove(1);
+        args.insert(1, "--name".to_string());
+        args.insert(2, name);
+    }
+    let parsed = match parse_args(&args) {
         Ok(p) => p,
         Err(e) => {
             eprintln!("error: {e}\n\n{}", usage());
@@ -263,22 +355,32 @@ fn run_command(parsed: &ParsedArgs) -> Result<(), String> {
                 None => ExecPath::Auto,
                 Some(s) => ExecPath::parse(s).ok_or(format!("bad exec {s:?}"))?,
             };
+            if let Some(list) = parsed.flags.get("scenarios") {
+                // names and timelines are validated against the grid's
+                // actual datasets by run_grid before any job is dispatched
+                cfg.scenarios =
+                    list.split(',').map(|s| s.trim().to_string()).collect();
+            }
             eprintln!(
-                "sweep: 3 datasets x {} variants x {} scenarios x {} replicates on {} threads",
+                "sweep: 3 datasets x {} variants x {} failure modes x {} scenarios x {} \
+                 replicates on {} threads",
                 cfg.variants.len(),
                 cfg.failures.len(),
+                cfg.scenarios.len(),
                 cfg.replicates,
                 cfg.threads
             );
-            let cells = sweep::run_grid(&cfg);
+            let cells = sweep::run_grid(&cfg)?;
             let mut t = crate::util::benchkit::Table::new(&[
-                "dataset", "variant", "failures", "rep", "seed", "final err", "msgs",
+                "dataset", "variant", "failures", "scenario", "rep", "seed", "final err",
+                "msgs",
             ]);
             for c in &cells {
                 t.row(&[
                     c.dataset.clone(),
                     c.variant.name().to_string(),
                     if c.failures { "extreme" } else { "none" }.to_string(),
+                    c.scenario.clone(),
                     c.replicate.to_string(),
                     format!("{:#x}", c.seed),
                     format!("{:.4}", c.curve.final_error()),
@@ -302,61 +404,74 @@ fn run_command(parsed: &ParsedArgs) -> Result<(), String> {
                 crate::config::DeploySpec::default()
             };
             spec.apply(&flags)?;
-            let ds = spec.experiment.build_dataset()?;
-            let cfg = spec.deploy_config(&ds)?;
-            eprintln!(
-                "deploying {} {} nodes on {} (d={}) for {} cycles of {:?} [{} sampling{}]",
-                cfg.n_nodes,
-                cfg.variant.name(),
-                ds.name,
-                ds.d(),
-                cfg.cycles,
-                cfg.delta,
-                cfg.sampler.name(),
-                if cfg.churn.is_some() { ", churn+drop/delay" } else { "" },
-            );
-            if compare_sim && cfg.n_nodes != ds.n_train() {
-                eprintln!(
-                    "warning: --compare-sim with nodes = {} but {} training rows — \
-                     the simulator always runs one node per row",
-                    cfg.n_nodes,
-                    ds.n_train()
+            deploy_and_report(&spec, compare_sim, out.as_deref())
+        }
+        "scenario" => {
+            if parsed.flags.contains_key("list") {
+                let mut t = crate::util::benchkit::Table::new(&["name", "cycles", "summary"]);
+                for &name in crate::scenario::builtin_names() {
+                    let s = crate::scenario::builtin(name).map_err(|e| e.to_string())?;
+                    t.row(&[
+                        name.to_string(),
+                        s.cycles_hint.map_or("-".into(), |c| c.to_string()),
+                        s.summary.clone(),
+                    ]);
+                }
+                t.print();
+                return Ok(());
+            }
+            let mut flags = parsed.flags.clone();
+            let name = flags
+                .remove("name")
+                .ok_or("scenario: pass a built-in name or a .scn file (or --list)")?;
+            let deploy = flags.remove("deploy").is_some();
+            let compare_sim = flags.remove("compare-sim").is_some();
+            let out = flags.remove("out");
+            // a path (or anything ending in .scn) loads a scenario file —
+            // which may bundle [experiment]/[deploy] sections; anything else
+            // names a built-in
+            let is_file = name.ends_with(".scn") || std::path::Path::new(&name).exists();
+            let mut spec = if is_file {
+                let text =
+                    std::fs::read_to_string(&name).map_err(|e| format!("{name}: {e}"))?;
+                let spec = crate::config::DeploySpec::from_ini(&text)?;
+                if spec.experiment.scenario.is_none() {
+                    return Err(format!("{name}: no [scenario] section"));
+                }
+                spec
+            } else {
+                let scn = crate::scenario::builtin(&name).map_err(|e| e.to_string())?;
+                let mut spec = crate::config::DeploySpec::default();
+                // built-ins carry a suggested run length; --cycles overrides
+                if let Some(hint) = scn.cycles_hint {
+                    spec.experiment.cycles = hint;
+                }
+                spec.experiment.scenario = Some(scn);
+                spec
+            };
+            spec.apply(&flags)?;
+            let scn_name = spec.experiment.scenario.as_ref().unwrap().name.clone();
+            if deploy {
+                eprintln!("scenario {scn_name:?} on the socket deployment runtime");
+                return deploy_and_report(&spec, compare_sim, out.as_deref());
+            }
+            if compare_sim {
+                // a simulator run has nothing to compare itself against;
+                // never let the flag be silently ignored
+                return Err(
+                    "scenario: --compare-sim compares a deployment against the \
+                     matched simulator; combine it with --deploy"
+                        .into(),
                 );
             }
-            let report =
-                crate::coordinator::run_deployment(&cfg, &ds).map_err(|e| e.to_string())?;
-            print_points(&report.curve);
-            let s = &report.stats;
-            eprintln!(
-                "sent={} received={} bytes={} sim_dropped={} backlog_lost={} \
-                 io_errors={} decode_errors={} conns={}",
-                s.messages_sent,
-                s.messages_received,
-                s.bytes_sent,
-                s.sim_dropped,
-                s.backlog_lost,
-                s.io_errors,
-                s.decode_errors,
-                s.conns_accepted,
-            );
-            eprintln!(
-                "final error {:.4} (mean model t {:.1})",
-                report.final_error, report.mean_model_t
-            );
-            let mut curves = vec![report.curve.clone()];
-            if compare_sim {
-                let sim_cfg = crate::coordinator::matched_sim_config(&cfg);
-                let sim = crate::gossip::run(sim_cfg, &ds);
-                eprintln!(
-                    "matched simulator final {:.4} (deploy {:.4}, gap {:+.4})",
-                    sim.curve.final_error(),
-                    report.curve.final_error(),
-                    report.curve.final_error() - sim.curve.final_error(),
-                );
-                curves.push(sim.curve);
+            eprintln!("scenario {scn_name:?} [{}]", spec.experiment.backend.name());
+            let res = run_spec(&spec.experiment)?;
+            print_curve(&res);
+            if res.stats.messages_blocked > 0 {
+                eprintln!("partition-blocked={}", res.stats.messages_blocked);
             }
             if let Some(out) = out {
-                crate::eval::csv::write_curves(std::path::Path::new(&out), &curves)
+                crate::eval::csv::write_curves(std::path::Path::new(&out), &[res.curve.clone()])
                     .map_err(|e| e.to_string())?;
                 eprintln!("wrote {out}");
             }
@@ -470,6 +585,62 @@ mod tests {
         // more nodes than training rows
         let p = parse_args(&s(&[
             "deploy", "--dataset", "urls", "--scale", "0.002", "--nodes", "21",
+        ]))
+        .unwrap();
+        assert!(run_command(&p).is_err());
+    }
+
+    #[test]
+    fn scenario_list_and_unknown_name() {
+        assert_eq!(dispatch(&s(&["scenario", "--list"])), 0);
+        assert_eq!(dispatch(&s(&["scenario", "no-such-scenario"])), 1);
+        // no positional and no --list is an error with guidance
+        assert_eq!(dispatch(&s(&["scenario"])), 1);
+        // --compare-sim only makes sense against a deployment
+        assert_eq!(dispatch(&s(&["scenario", "paper-fig3", "--compare-sim"])), 1);
+    }
+
+    #[test]
+    fn tiny_scenario_builtin_run() {
+        // positional splicing + built-in lookup + override of the hint
+        assert_eq!(
+            dispatch(&s(&[
+                "scenario", "paper-fig3", "--dataset", "urls", "--scale", "0.005",
+                "--cycles", "6", "--eval_peers", "5",
+            ])),
+            0
+        );
+        // a timeline that cannot fit the overridden horizon is rejected
+        assert_eq!(
+            dispatch(&s(&[
+                "scenario", "partition-heal", "--scale", "0.005", "--cycles", "6",
+            ])),
+            1
+        );
+    }
+
+    #[test]
+    fn tiny_scenario_file_run() {
+        let path = std::env::temp_dir().join("golf_cli_scenario_test.scn");
+        std::fs::write(
+            &path,
+            "[experiment]\ndataset = urls\nscale = 0.005\ncycles = 8\neval_peers = 5\n\n\
+             [scenario]\nname = file-blip\n\n[phase.blip]\nfrom = 2\nto = 5\ndrop = 0.9\n",
+        )
+        .unwrap();
+        assert_eq!(dispatch(&s(&["scenario", path.to_str().unwrap()])), 0);
+        // a file without a [scenario] section is rejected
+        let bare = std::env::temp_dir().join("golf_cli_scenario_bare.scn");
+        std::fs::write(&bare, "[experiment]\ndataset = urls\n").unwrap();
+        assert_eq!(dispatch(&s(&["scenario", bare.to_str().unwrap()])), 1);
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&bare).ok();
+    }
+
+    #[test]
+    fn sweep_scenarios_flag_rejects_unknown() {
+        let p = parse_args(&s(&[
+            "sweep", "--scale", "0.005", "--cycles", "3", "--scenarios", "warp",
         ]))
         .unwrap();
         assert!(run_command(&p).is_err());

@@ -21,11 +21,16 @@
 //! mode = microbatch       ; microbatch | scalar (event-driven stepping)
 //! coalesce = 0            ; micro-batch coalescing window in ticks
 //! exec = auto             ; auto | dense | sparse (kernel family dispatch)
+//! scenario = paper-fig3   ; named built-in scenario (see `golf scenario --list`)
 //!
 //! [deploy]                ; `golf deploy` only (real localhost-TCP run)
 //! delta_ms = 30           ; wall-clock gossip period in milliseconds
 //! nodes = 0               ; node count; 0 = one node per training row
 //! ```
+//!
+//! A `[scenario]` section (plus `[phase.*]` / `[event.*]` sections — the
+//! standalone `.scn` format, `crate::scenario`) may be embedded in the same
+//! file; it overrides any `scenario =` built-in reference.
 
 use crate::data::dataset::Dataset;
 use crate::data::synthetic::{reuters_like, spambase_like, urls_like, Scale};
@@ -33,6 +38,7 @@ use crate::gossip::create_model::Variant;
 use crate::gossip::protocol::{ExecMode, ExecPath, ProtocolConfig};
 use crate::learning::Learner;
 use crate::p2p::overlay::SamplerConfig;
+use crate::scenario::Scenario;
 use std::collections::HashMap;
 
 pub mod ini;
@@ -90,6 +96,9 @@ pub struct ExperimentSpec {
     pub coalesce: u64,
     /// kernel-family dispatch: auto (density-based), dense, or sparse
     pub exec_path: ExecPath,
+    /// failure/workload timeline: a named built-in (`scenario =` key) or an
+    /// embedded/standalone `[scenario]` definition
+    pub scenario: Option<Scenario>,
 }
 
 impl Default for ExperimentSpec {
@@ -113,6 +122,7 @@ impl Default for ExperimentSpec {
             mode: "microbatch".into(),
             coalesce: 0,
             exec_path: ExecPath::Auto,
+            scenario: None,
         }
     }
 }
@@ -170,6 +180,14 @@ impl ExperimentSpec {
                     self.exec_path =
                         ExecPath::parse(v).ok_or(format!("bad exec {v:?}"))?
                 }
+                "scenario" => {
+                    self.scenario = match v.as_str() {
+                        "none" => None,
+                        name => Some(
+                            crate::scenario::builtin(name).map_err(|e| e.to_string())?,
+                        ),
+                    }
+                }
                 _ => return Err(format!("unknown key {k:?}")),
             }
         }
@@ -214,18 +232,42 @@ impl ExperimentSpec {
         if self.failures {
             cfg = cfg.with_extreme_failures();
         }
+        cfg.scenario = self.scenario.clone();
         Ok(cfg)
     }
 
-    /// Parse an INI file's `[experiment]` section.
+    /// Validate the attached scenario (if any) against a concrete dataset:
+    /// the simulators require a validated timeline.
+    pub fn validate_scenario(&self, n_nodes: usize) -> Result<(), String> {
+        if let Some(s) = &self.scenario {
+            s.validate(n_nodes, self.cycles)
+                .map_err(|e| format!("scenario {:?}: {e}", s.name))?;
+        }
+        Ok(())
+    }
+
+    /// Parse an INI file's `[experiment]` section, plus any embedded
+    /// `[scenario]` / `[phase.*]` / `[event.*]` sections (which take
+    /// precedence over a `scenario =` built-in reference).
     pub fn from_ini(text: &str) -> Result<Self, String> {
         let doc = ini::parse(text)?;
         let mut spec = ExperimentSpec::default();
         if let Some(kv) = doc.get("experiment") {
             spec.apply(kv)?;
         }
+        if has_scenario_sections(&doc) {
+            spec.scenario = Some(Scenario::from_ini_doc(&doc).map_err(|e| e.to_string())?);
+        }
         Ok(spec)
     }
+}
+
+/// Does an INI document define a scenario?  `[phase.*]` / `[event.*]`
+/// sections count even without a `[scenario]` header (which the grammar
+/// makes optional) — a timeline must never be silently dropped.
+fn has_scenario_sections(doc: &ini::Document) -> bool {
+    doc.keys()
+        .any(|k| k == "scenario" || k.starts_with("phase.") || k.starts_with("event."))
 }
 
 /// Configuration of a `golf deploy` run: the shared experiment keys plus
@@ -264,7 +306,8 @@ impl DeploySpec {
         self.experiment.apply(&rest)
     }
 
-    /// Parse an INI file's `[experiment]` and `[deploy]` sections.
+    /// Parse an INI file's `[experiment]` and `[deploy]` sections, plus any
+    /// embedded scenario definition.
     pub fn from_ini(text: &str) -> Result<Self, String> {
         let doc = ini::parse(text)?;
         let mut spec = DeploySpec::default();
@@ -273,6 +316,10 @@ impl DeploySpec {
         }
         if let Some(kv) = doc.get("deploy") {
             spec.apply(kv)?;
+        }
+        if has_scenario_sections(&doc) {
+            spec.experiment.scenario =
+                Some(Scenario::from_ini_doc(&doc).map_err(|e| e.to_string())?);
         }
         Ok(spec)
     }
@@ -310,6 +357,11 @@ impl DeploySpec {
             // provide that (it is a simulator-only baseline)
             return Err("sampler = matching is not supported in deployment".into());
         }
+        if let Some(s) = &e.scenario {
+            // the deployment compiles the timeline over its node universe
+            s.validate(n, e.cycles)
+                .map_err(|err| format!("scenario {:?}: {err}", s.name))?;
+        }
         let mut cfg = DeployConfig {
             n_nodes: n,
             delta: std::time::Duration::from_millis(self.delta_ms.max(1)),
@@ -320,6 +372,7 @@ impl DeploySpec {
             sampler: e.sampler,
             eval_peers: e.eval_peers,
             seed: e.seed,
+            scenario: e.scenario.clone(),
             ..Default::default()
         };
         if e.failures {
@@ -493,6 +546,91 @@ nodes = 40
         let big = spec.experiment.build_dataset().unwrap();
         assert!(big.n_train() > crate::net::deploy::MAX_DEPLOY_NODES);
         assert!(spec.deploy_config(&big).is_err());
+    }
+
+    #[test]
+    fn scenario_key_and_embedded_section() {
+        // named built-in via the `scenario =` key
+        let mut kv = HashMap::new();
+        kv.insert("scenario".to_string(), "paper-fig3".to_string());
+        let mut spec = ExperimentSpec { scale: 0.01, ..Default::default() };
+        spec.apply(&kv).unwrap();
+        assert_eq!(spec.scenario.as_ref().unwrap().name, "paper-fig3");
+        assert!(spec.protocol_config().unwrap().scenario.is_some());
+        // `scenario = none` clears it; unknown names are rejected
+        let mut kv = HashMap::new();
+        kv.insert("scenario".to_string(), "none".to_string());
+        spec.apply(&kv).unwrap();
+        assert!(spec.scenario.is_none());
+        let mut kv = HashMap::new();
+        kv.insert("scenario".to_string(), "warp".to_string());
+        assert!(ExperimentSpec::default().apply(&kv).is_err());
+        // an embedded [scenario] section wins over the key
+        let text = "
+[experiment]
+dataset = urls
+scenario = paper-fig3
+
+[scenario]
+name = inline
+drop = 0.3
+";
+        let spec = ExperimentSpec::from_ini(text).unwrap();
+        assert_eq!(spec.scenario.as_ref().unwrap().name, "inline");
+        // regression: a timeline given only as [phase.*]/[event.*] sections
+        // (the [scenario] header is optional) must not be silently dropped
+        let text = "
+[experiment]
+dataset = urls
+
+[phase.outage]
+from = 10
+to = 50
+drop = 0.9
+";
+        let spec = ExperimentSpec::from_ini(text).unwrap();
+        let scn = spec.scenario.as_ref().expect("headerless timeline must attach");
+        assert_eq!(scn.phases.len(), 1);
+        assert_eq!(scn.phases[0].drop, Some(0.9));
+        // validation catches timelines that do not fit the run
+        let mut spec = ExperimentSpec::default();
+        spec.cycles = 10;
+        spec.scenario = Some(crate::scenario::builtin("partition-heal").unwrap());
+        assert!(
+            spec.validate_scenario(100).is_err(),
+            "a cycle-120 phase end cannot fit a 10-cycle run"
+        );
+        spec.cycles = 200;
+        spec.validate_scenario(100).unwrap();
+    }
+
+    #[test]
+    fn deploy_spec_carries_scenario() {
+        let text = "
+[experiment]
+dataset = urls
+scale = 0.01
+cycles = 50
+
+[deploy]
+delta_ms = 20
+
+[scenario]
+name = blip
+[phase.out]
+from = 5
+to = 10
+drop = 0.9
+";
+        let spec = DeploySpec::from_ini(text).unwrap();
+        assert_eq!(spec.experiment.scenario.as_ref().unwrap().name, "blip");
+        let ds = spec.experiment.build_dataset().unwrap();
+        let cfg = spec.deploy_config(&ds).unwrap();
+        assert_eq!(cfg.scenario.as_ref().unwrap().name, "blip");
+        // an infeasible timeline is rejected at deploy-config time
+        let mut bad = spec.clone();
+        bad.experiment.cycles = 7;
+        assert!(bad.deploy_config(&ds).is_err());
     }
 
     #[test]

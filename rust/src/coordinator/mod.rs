@@ -16,7 +16,7 @@ use crate::eval::tracker::{point_from_errors, Curve};
 use crate::eval::zero_one_error;
 use crate::gossip::protocol::ProtocolConfig;
 use crate::net::deploy::{node_main, DeployConfig, NodeCtx, NodeStats, SharedRun, SIM_DELTA};
-use crate::sim::churn::ChurnSchedule;
+use crate::scenario::driver::{resolve_churn_schedule, CompiledScenario, Mutation};
 use crate::util::rng::Rng;
 use crate::util::stats::mean;
 use std::net::{SocketAddr, TcpListener};
@@ -30,6 +30,7 @@ pub struct DeployStats {
     pub messages_received: u64,
     pub bytes_sent: u64,
     pub sim_dropped: u64,
+    pub partition_blocked: u64,
     pub backlog_lost: u64,
     pub io_errors: u64,
     pub decode_errors: u64,
@@ -69,6 +70,10 @@ pub fn matched_sim_config(cfg: &DeployConfig) -> ProtocolConfig {
     // the *resolved* grid, so a pathological eval_at_cycles (unsorted,
     // duplicated, out of range) still yields curves on identical axes
     sim.eval.at_cycles = cfg.eval_grid();
+    // one shared scenario definition drives both runs: the simulator
+    // compiles it at delta = SIM_DELTA, exactly the scale the deployment's
+    // tick→wall-clock mapping uses
+    sim.scenario = cfg.scenario.clone();
     sim
 }
 
@@ -84,17 +89,30 @@ pub fn run_deployment(cfg: &DeployConfig, data: &Dataset) -> std::io::Result<Dep
     let n = cfg.n_nodes;
     let d = data.d();
 
+    // ---- compiled scenario timeline (one definition shared by the node
+    // threads, the evaluation loop, and any matched simulator run)
+    let compiled = cfg.scenario.as_ref().map(|s| {
+        CompiledScenario::compile(s, n, SIM_DELTA, cfg.cycles, cfg.seed, cfg.network)
+            .expect("scenario must be validated before the deployment runs")
+    });
+    let initial = compiled.as_ref().map_or(n, |c| c.initial);
+
     // ---- shared failure schedule + evaluation peers, in GossipSim's exact
     // RNG fork order so a matched simulator run sees the same draws
     let mut rng = Rng::new(cfg.seed);
     let horizon = SIM_DELTA * (cfg.cycles + 1);
-    let churn = cfg.churn.as_ref().map(|c| {
-        let mut crng = rng.fork();
-        ChurnSchedule::generate(c, n, horizon, &mut crng)
-    });
+    let churn = resolve_churn_schedule(
+        cfg.churn.as_ref(),
+        compiled.as_ref(),
+        n,
+        SIM_DELTA,
+        horizon,
+        &mut rng,
+    );
     let _sampler_rng = rng.fork(); // the simulator's sampler stream (deployment samplers are per-node)
     let mut eval_rng = rng.fork();
-    let eval_peers = eval_rng.sample_indices(n, cfg.eval_peers.min(n));
+    // the simulator samples evaluation peers over its *initial* membership
+    let eval_peers = eval_rng.sample_indices(initial, cfg.eval_peers.min(initial));
 
     // ---- bind all listeners first so every peer knows every address
     let listeners: Vec<TcpListener> = (0..n)
@@ -122,6 +140,7 @@ pub fn run_deployment(cfg: &DeployConfig, data: &Dataset) -> std::io::Result<Dep
                     cfg,
                     data,
                     churn: churn.as_ref(),
+                    scn: compiled.as_ref(),
                     start,
                     shared: &shared,
                 };
@@ -130,7 +149,7 @@ pub fn run_deployment(cfg: &DeployConfig, data: &Dataset) -> std::io::Result<Dep
             .collect();
 
         // ---- evaluation loop on the coordinating thread
-        let curve = eval_loop(cfg, data, &eval_peers, &shared, start);
+        let curve = eval_loop(cfg, data, &eval_peers, compiled.as_ref(), &shared, start);
 
         // the run length is cfg.cycles regardless of the measurement grid
         // (a sparse eval_at_cycles must not truncate the deployment)
@@ -147,11 +166,21 @@ pub fn run_deployment(cfg: &DeployConfig, data: &Dataset) -> std::io::Result<Dep
         (curve, per_node)
     });
 
-    // ---- final sweep over every node's published model
-    let mut errs = Vec::with_capacity(n);
-    for slot in &shared.models {
+    // ---- final sweep over every *member* node's published model (nodes a
+    // scenario never grew into stay out of the average), against the test
+    // labels of the concept in force at the horizon
+    let members = compiled.as_ref().map_or(n, |c| c.final_membership().min(n));
+    let flipped;
+    let final_y: &[f32] = if drift_sign_at(compiled.as_ref(), horizon) < 0.0 {
+        flipped = crate::eval::flipped_labels(&data.test_y);
+        &flipped
+    } else {
+        &data.test_y
+    };
+    let mut errs = Vec::with_capacity(members);
+    for slot in &shared.models[..members] {
         let m = slot.lock().unwrap().clone();
-        errs.push(zero_one_error(&m, &data.test, &data.test_y));
+        errs.push(zero_one_error(&m, &data.test, final_y));
     }
 
     let mut stats = DeployStats::default();
@@ -160,6 +189,7 @@ pub fn run_deployment(cfg: &DeployConfig, data: &Dataset) -> std::io::Result<Dep
         stats.messages_received += s.received;
         stats.bytes_sent += s.bytes_sent;
         stats.sim_dropped += s.sim_dropped;
+        stats.partition_blocked += s.partition_blocked;
         stats.backlog_lost += s.backlog_lost;
         stats.io_errors += s.io_errors;
         stats.decode_errors += s.decode_errors;
@@ -176,14 +206,31 @@ pub fn run_deployment(cfg: &DeployConfig, data: &Dataset) -> std::io::Result<Dep
     })
 }
 
+/// The concept's label sign after every scenario drift at or before `now`
+/// (+1.0 with no scenario or an even number of drifts).
+fn drift_sign_at(scn: Option<&CompiledScenario>, now: crate::sim::event::Ticks) -> f32 {
+    let mut sign = 1.0f32;
+    if let Some(c) = scn {
+        for (t, m) in &c.muts {
+            if *t <= now && matches!(m, Mutation::Drift) {
+                sign = -sign;
+            }
+        }
+    }
+    sign
+}
+
 /// Sleep to each measurement-cycle boundary, sample the evaluation peers'
 /// published models, and emit the same `EvalPoint`s a simulator run
 /// produces (mean/std 0-1 error over the sampled peers, network-wide send
-/// count).
+/// count).  Under a scenario with concept drift, each point scores against
+/// the labels of the concept in force at that cycle — matching the
+/// simulator's drift-aware measurement.
 fn eval_loop(
     cfg: &DeployConfig,
     data: &Dataset,
     eval_peers: &[usize],
+    scn: Option<&CompiledScenario>,
     shared: &SharedRun,
     start: Instant,
 ) -> Curve {
@@ -194,17 +241,23 @@ fn eval_loop(
         cfg.variant.name(),
         cfg.sampler.name()
     ));
+    let mut flipped: Option<Vec<f32>> = None;
     for &c in &cycles {
         let due = start + cfg.cycle_offset(c);
         let now = Instant::now();
         if due > now {
             std::thread::sleep(due - now);
         }
+        let y: &[f32] = if drift_sign_at(scn, c * SIM_DELTA) < 0.0 {
+            flipped.get_or_insert_with(|| crate::eval::flipped_labels(&data.test_y))
+        } else {
+            &data.test_y
+        };
         let errs: Vec<f64> = eval_peers
             .iter()
             .map(|&p| {
                 let m = shared.models[p].lock().unwrap().clone();
-                zero_one_error(&m, &data.test, &data.test_y)
+                zero_one_error(&m, &data.test, y)
             })
             .collect();
         curve.push(point_from_errors(

@@ -21,7 +21,10 @@ use crate::eval::{self};
 use crate::gossip::protocol::{ProtocolConfig, RunResult, RunStats};
 use crate::gossip::state::ModelStore;
 use crate::p2p::overlay::PeerSampler;
-use crate::sim::churn::ChurnSchedule;
+use crate::scenario::driver::{
+    resolve_churn_schedule, CompiledScenario, Mutation, ScenarioDriver,
+};
+use crate::sim::network::{Fate, Network};
 use crate::util::rng::Rng;
 use anyhow::Result;
 use std::collections::HashMap;
@@ -41,25 +44,44 @@ pub struct BatchedSim<'a, B: Backend> {
     op: StepOp,
     /// unified SoA per-node model state, shared with the event-driven path
     store: ModelStore,
-    dense_x: Vec<f32>, // local examples, densified once
+    dense_x: Vec<f32>, // local examples, densified once (full universe)
+    /// drop/delay/partition models, scenario-mutable at cycle boundaries
+    network: Network,
+    /// compiled scenario timeline cursor, if any
+    scn: Option<ScenarioDriver>,
+    /// scenario mass-leave overlay (ANDed with the churn schedule)
+    forced_off: Vec<bool>,
+    /// +1.0 normally; -1.0 after an odd number of concept-drift events
+    drift_sign: f32,
+    flipped_test_y: Option<Vec<f32>>,
     rng: Rng,
     stats: RunStats,
 }
 
 impl<'a, B: Backend> BatchedSim<'a, B> {
     pub fn new(cfg: ProtocolConfig, data: &'a Dataset, backend: &'a mut B) -> Self {
-        let n = data.n_train();
+        let n_univ = data.n_train();
         let d = data.d();
         let op = StepOp::for_protocol(&cfg.learner, cfg.variant);
-        let mut dense_x = vec![0.0f32; n * d];
-        for i in 0..n {
+        let mut dense_x = vec![0.0f32; n_univ * d];
+        for i in 0..n_univ {
             data.train.row(i).write_dense(&mut dense_x[i * d..(i + 1) * d]);
         }
+        let compiled = cfg.scenario.as_ref().map(|s| {
+            CompiledScenario::compile(s, n_univ, cfg.delta, cfg.cycles, cfg.seed, cfg.network)
+                .expect("scenario must be validated before the batched driver runs")
+        });
+        let n0 = compiled.as_ref().map_or(n_univ, |c| c.initial);
         let rng = Rng::new(cfg.seed);
         BatchedSim {
             op,
-            store: ModelStore::new(n, d),
+            store: ModelStore::new(n0, d),
             dense_x,
+            network: Network::new(cfg.network),
+            scn: compiled.map(ScenarioDriver::new),
+            forced_off: vec![false; n_univ],
+            drift_sign: 1.0,
+            flipped_test_y: None,
             rng,
             stats: RunStats::default(),
             cfg,
@@ -68,20 +90,58 @@ impl<'a, B: Backend> BatchedSim<'a, B> {
         }
     }
 
+    /// Apply every scenario mutation due at or before `now` — the batched
+    /// driver's tick boundaries are its cycle boundaries, so mutations land
+    /// between the previous cycle's deliveries and this cycle's sends.
+    fn apply_scenario(&mut self, now: u64, sampler: &mut PeerSampler) {
+        while let Some(m) = self.scn.as_mut().and_then(|d| d.pop_due(now)) {
+            match m {
+                Mutation::SetDrop(p) => self.network.cfg.drop_prob = p,
+                Mutation::SetDelay(model) => self.network.cfg.delay = model,
+                Mutation::SetPartition(c) => self.network.set_partition(Some(c)),
+                Mutation::Heal => self.network.set_partition(None),
+                Mutation::Drift => self.drift_sign = -self.drift_sign,
+                Mutation::ForceOffline(ids) => {
+                    for i in ids {
+                        self.forced_off[i] = true;
+                    }
+                }
+                Mutation::Restore(ids) => {
+                    for i in ids {
+                        self.forced_off[i] = false;
+                    }
+                }
+                Mutation::Grow(k) => {
+                    let old = self.store.n();
+                    let newn = (old + k).min(self.data.n_train());
+                    self.store.grow(newn - old);
+                    sampler.grow(newn, &mut self.rng);
+                }
+            }
+        }
+    }
+
     pub fn run(mut self) -> Result<RunResult> {
-        let n = self.data.n_train();
+        let n_univ = self.data.n_train();
         let d = self.data.d();
         let delta = self.cfg.delta;
         let horizon = delta * (self.cfg.cycles + 1);
 
-        let churn = self.cfg.churn.as_ref().map(|c| {
-            let mut crng = self.rng.fork();
-            ChurnSchedule::generate(c, n, horizon, &mut crng)
-        });
+        // same churn resolution (and RNG fork discipline) as the
+        // event-driven simulator; the schedule covers the full universe
+        let churn = resolve_churn_schedule(
+            self.cfg.churn.as_ref(),
+            self.scn.as_ref().map(|d| d.compiled()),
+            n_univ,
+            delta,
+            horizon,
+            &mut self.rng,
+        );
+        let n0 = self.store.n();
         let mut sampler_rng = self.rng.fork();
-        let mut sampler = PeerSampler::new(self.cfg.sampler, n, delta, &mut sampler_rng);
+        let mut sampler = PeerSampler::new(self.cfg.sampler, n0, delta, &mut sampler_rng);
         let mut eval_rng = self.rng.fork();
-        let eval_peers = eval_rng.sample_indices(n, self.cfg.eval.n_peers.min(n));
+        let eval_peers = eval_rng.sample_indices(n0, self.cfg.eval.n_peers.min(n0));
 
         let eval_cycles: std::collections::BTreeSet<u64> = if self.cfg.eval.at_cycles.is_empty() {
             eval::log_spaced_cycles(self.cfg.cycles).into_iter().collect()
@@ -102,12 +162,23 @@ impl<'a, B: Backend> BatchedSim<'a, B> {
 
         for cycle in 1..=self.cfg.cycles {
             let now = cycle * delta;
-            let online: Vec<bool> = (0..n)
-                .map(|i| churn.as_ref().map_or(true, |c| c.is_online(i, now)))
+            // scenario mutations apply at the cycle boundary, before the
+            // cycle's sends and deliveries
+            self.apply_scenario(now, &mut sampler);
+            // effective liveness over the whole universe: a node must be a
+            // member (flash crowds grow the store), up per the churn
+            // schedule, and not forced offline by a scenario leave wave
+            let n_active = self.store.n();
+            let online: Vec<bool> = (0..n_univ)
+                .map(|i| {
+                    i < n_active
+                        && churn.as_ref().map_or(true, |c| c.is_online(i, now))
+                        && !self.forced_off[i]
+                })
                 .collect();
 
             // -------- sends (synchronized at the cycle boundary)
-            for node in 0..n {
+            for node in 0..n_active {
                 if !online[node] {
                     continue;
                 }
@@ -119,13 +190,18 @@ impl<'a, B: Backend> BatchedSim<'a, B> {
                 // no NEWSCAST views, so there are no descriptor bytes
                 self.stats.bytes_sent +=
                     (crate::gossip::message::WIRE_FRAME_OVERHEAD + d * 4) as u64;
-                if self.cfg.network.drop_prob > 0.0
-                    && self.rng.chance(self.cfg.network.drop_prob)
-                {
-                    self.stats.messages_dropped += 1;
-                    continue;
-                }
-                let delay_ticks = self.cfg.network.delay.sample(&mut self.rng);
+                let delay_ticks =
+                    match self.network.transmit_between(node, dst, &mut self.rng) {
+                        Fate::Dropped => {
+                            self.stats.messages_dropped += 1;
+                            continue;
+                        }
+                        Fate::Blocked => {
+                            self.stats.messages_blocked += 1;
+                            continue;
+                        }
+                        Fate::Deliver(t) => t,
+                    };
                 let delay_cycles = delay_ticks / delta; // quantized
                 pending.push(PendingMsg {
                     dst,
@@ -192,7 +268,9 @@ impl<'a, B: Backend> BatchedSim<'a, B> {
                         }
                     }
                     batch.x[r].copy_from_slice(&self.dense_x[dst * d..(dst + 1) * d]);
-                    batch.y[i] = self.data.train_y[dst];
+                    // concept drift re-labels: the sign flips with the
+                    // scenario
+                    batch.y[i] = self.drift_sign * self.data.train_y[dst];
                 }
                 self.backend.step(&self.op, &mut batch)?;
                 self.stats.engine_calls += 1;
@@ -229,13 +307,17 @@ impl<'a, B: Backend> BatchedSim<'a, B> {
     /// sparse ones through O(nnz) sparse dots, and the PJRT backend
     /// densifies per chunk into its compiled buckets.
     fn measure_errors(&mut self, eval_peers: &[usize]) -> Result<Vec<f64>> {
-        eval_peer_errors(
-            &self.store,
-            eval_peers,
-            &mut *self.backend,
-            &self.data.test,
-            &self.data.test_y,
-        )
+        // drift evaluation matches the event-driven simulator: while the
+        // drift sign is negative, score against sign-flipped test labels
+        if self.drift_sign < 0.0 && self.flipped_test_y.is_none() {
+            self.flipped_test_y = Some(eval::flipped_labels(&self.data.test_y));
+        }
+        let y: &[f32] = if self.drift_sign < 0.0 {
+            self.flipped_test_y.as_ref().unwrap()
+        } else {
+            &self.data.test_y
+        };
+        eval_peer_errors(&self.store, eval_peers, &mut *self.backend, &self.data.test, y)
     }
 }
 

@@ -6,6 +6,14 @@ use crate::gossip::cache::ModelCache;
 use crate::gossip::predict::Predictor;
 use crate::learning::linear::LinearModel;
 
+/// Sign-flipped copy of a label vector: the evaluation target after a
+/// scenario concept drift inverts the concept (DESIGN.md §11).  One shared
+/// definition so the simulators and the deployment coordinator cannot
+/// drift apart in how they re-label.
+pub fn flipped_labels(y: &[f32]) -> Vec<f32> {
+    y.iter().map(|&v| -v).collect()
+}
+
 /// 0-1 error of a single model. The zero model (margin 0) counts every
 /// positive example as a miss — sign(0) is treated as -1 throughout.
 pub fn zero_one_error(m: &LinearModel, test: &Examples, y: &[f32]) -> f64 {

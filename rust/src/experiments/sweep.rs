@@ -99,7 +99,8 @@ pub fn run_grouped<'a, M, T: Send>(
 }
 
 /// One sweep grid: the three Table-I datasets crossed with CREATEMODEL
-/// variants, failure scenarios and seed replicates.
+/// variants, failure scenarios, scripted scenario timelines, and seed
+/// replicates.
 #[derive(Clone, Debug)]
 pub struct SweepConfig {
     /// dataset size multiplier (1.0 = Table-I sizes)
@@ -110,6 +111,9 @@ pub struct SweepConfig {
     /// failure scenarios: `false` = no failures, `true` = Section VI-A(i)
     /// "all failures"
     pub failures: Vec<bool>,
+    /// scripted scenario axis: built-in timeline names, with `"none"` as
+    /// the baseline cell (DESIGN.md §11).  Timelines must fit `cycles`.
+    pub scenarios: Vec<String>,
     /// independent repetitions per cell
     pub replicates: u64,
     pub base_seed: u64,
@@ -122,13 +126,14 @@ pub struct SweepConfig {
 
 impl SweepConfig {
     /// The paper's Section-VI grid shape: RW + MU, with and without the
-    /// extreme failure scenario, one replicate.
+    /// extreme failure scenario, one replicate, no scripted timelines.
     pub fn paper_grid(scale: f64, cycles: u64, base_seed: u64) -> Self {
         SweepConfig {
             scale,
             cycles,
             variants: vec![Variant::Rw, Variant::Mu],
             failures: vec![false, true],
+            scenarios: vec!["none".into()],
             replicates: 1,
             base_seed,
             eval_peers: 100,
@@ -145,6 +150,8 @@ pub struct SweepCell {
     pub dataset: String,
     pub variant: Variant,
     pub failures: bool,
+    /// scripted scenario name ("none" = baseline)
+    pub scenario: String,
     pub replicate: u64,
     /// the derived per-run seed actually used
     pub seed: u64,
@@ -153,43 +160,89 @@ pub struct SweepCell {
 }
 
 /// Deterministic per-cell seed: independent of job scheduling and thread
-/// count.
+/// count.  Scenario-free cells keep the pre-scenario tag format, so
+/// historical sweep seeds are reproducible.
 pub fn cell_seed(
     base: u64,
     dataset: &str,
     variant: Variant,
     failures: bool,
+    scenario: &str,
     replicate: u64,
 ) -> u64 {
-    derive_seed(base, &format!("{dataset}/{}/{failures}/r{replicate}", variant.name()))
+    let tag = if scenario == "none" {
+        format!("{dataset}/{}/{failures}/r{replicate}", variant.name())
+    } else {
+        format!("{dataset}/{}/{failures}/{scenario}/r{replicate}", variant.name())
+    };
+    derive_seed(base, &tag)
 }
 
 /// Run the full grid in parallel.  Cells are returned in deterministic
-/// (dataset, variant, failures, replicate) order.
-pub fn run_grid(cfg: &SweepConfig) -> Vec<SweepCell> {
+/// (dataset, variant, failures, scenario, replicate) order.
+///
+/// Errors (before any job is dispatched) if a scenario name is not a
+/// built-in, or its timeline does not fit `cfg.cycles` or one of the
+/// grid's datasets — worker threads never see an invalid timeline.
+pub fn run_grid(cfg: &SweepConfig) -> Result<Vec<SweepCell>, String> {
     struct JobDesc {
         ds_idx: usize,
         variant: Variant,
         failures: bool,
+        scenario: usize,
         replicate: u64,
     }
 
+    // resolve the scenario axis once; every cell clones its timeline
+    let scenarios: Vec<(String, Option<crate::scenario::Scenario>)> = cfg
+        .scenarios
+        .iter()
+        .map(|name| {
+            let s = if name == "none" {
+                None
+            } else {
+                Some(crate::scenario::builtin(name).map_err(|e| e.to_string())?)
+            };
+            Ok((name.clone(), s))
+        })
+        .collect::<Result<_, String>>()?;
+
     let sets = datasets(cfg.base_seed, cfg.scale);
+    // every (scenario × dataset) pairing must fit before any run starts
+    for (name, s) in &scenarios {
+        if let Some(s) = s {
+            for e in &sets {
+                s.validate(e.ds.n_train(), cfg.cycles).map_err(|err| {
+                    format!("scenario {name:?} on {}: {err}", e.ds.name)
+                })?;
+            }
+        }
+    }
     let mut descs = Vec::new();
     for ds_idx in 0..sets.len() {
         for &variant in &cfg.variants {
             for &failures in &cfg.failures {
-                for replicate in 0..cfg.replicates {
-                    descs.push(JobDesc { ds_idx, variant, failures, replicate });
+                for scenario in 0..scenarios.len() {
+                    for replicate in 0..cfg.replicates {
+                        descs.push(JobDesc { ds_idx, variant, failures, scenario, replicate });
+                    }
                 }
             }
         }
     }
 
-    run_indexed(descs.len(), cfg.threads, |i| {
+    Ok(run_indexed(descs.len(), cfg.threads, |i| {
         let jd = &descs[i];
         let e = &sets[jd.ds_idx];
-        let seed = cell_seed(cfg.base_seed, &e.ds.name, jd.variant, jd.failures, jd.replicate);
+        let (scn_name, scn) = &scenarios[jd.scenario];
+        let seed = cell_seed(
+            cfg.base_seed,
+            &e.ds.name,
+            jd.variant,
+            jd.failures,
+            scn_name,
+            jd.replicate,
+        );
         let mut pc = ProtocolConfig::paper_default(cfg.cycles);
         pc.variant = jd.variant;
         pc.learner = Learner::pegasos(e.lambda);
@@ -200,33 +253,46 @@ pub fn run_grid(cfg: &SweepConfig) -> Vec<SweepCell> {
         if jd.failures {
             pc = pc.with_extreme_failures();
         }
+        pc.scenario = scn.clone();
         let res = run(pc, &e.ds);
         SweepCell {
             dataset: e.ds.name.clone(),
             variant: jd.variant,
             failures: jd.failures,
+            scenario: scn_name.clone(),
             replicate: jd.replicate,
             seed,
             curve: res.curve,
             stats: res.stats,
         }
-    })
+    }))
 }
 
-/// Write sweep results as CSV, one file per (dataset, failure scenario).
+/// Write sweep results as CSV, one file per (dataset, failure scenario,
+/// scripted scenario).  Scenario-free groups keep the historical
+/// `sweep_<dataset>_<failures>.csv` names.
 pub fn to_csv(cells: &[SweepCell], dir: &std::path::Path) -> std::io::Result<()> {
     use std::collections::BTreeMap;
-    let mut groups: BTreeMap<(String, bool), Vec<Curve>> = BTreeMap::new();
+    let mut groups: BTreeMap<(String, bool, String), Vec<Curve>> = BTreeMap::new();
     for c in cells {
         let mut curve = c.curve.clone();
-        curve.label = format!("p2pegasos-{}-r{}", c.variant.name(), c.replicate);
-        groups.entry((c.dataset.clone(), c.failures)).or_default().push(curve);
+        curve.label = if c.scenario == "none" {
+            format!("p2pegasos-{}-r{}", c.variant.name(), c.replicate)
+        } else {
+            format!("p2pegasos-{}-{}-r{}", c.variant.name(), c.scenario, c.replicate)
+        };
+        groups
+            .entry((c.dataset.clone(), c.failures, c.scenario.clone()))
+            .or_default()
+            .push(curve);
     }
-    for ((dataset, failures), curves) in groups {
-        let f = dir.join(format!(
-            "sweep_{dataset}_{}.csv",
-            if failures { "af" } else { "nofail" }
-        ));
+    for ((dataset, failures, scenario), curves) in groups {
+        let fail = if failures { "af" } else { "nofail" };
+        let f = if scenario == "none" {
+            dir.join(format!("sweep_{dataset}_{fail}.csv"))
+        } else {
+            dir.join(format!("sweep_{dataset}_{fail}_{scenario}.csv"))
+        };
         crate::eval::csv::write_curves(&f, &curves)?;
     }
     Ok(())
@@ -271,7 +337,7 @@ mod tests {
         cfg.replicates = 2;
         cfg.eval_peers = 5;
         cfg.threads = 2;
-        let cells = run_grid(&cfg);
+        let cells = run_grid(&cfg).unwrap();
         assert_eq!(cells.len(), 3 * 2); // 3 datasets x 2 replicates
         assert_eq!(cells[0].dataset, "reuters");
         assert_eq!(cells[0].replicate, 0);
@@ -279,12 +345,42 @@ mod tests {
         assert_eq!(cells[2].dataset, "spambase");
         for c in &cells {
             assert!(!c.curve.points.is_empty());
+            assert_eq!(c.scenario, "none");
             assert_eq!(
                 c.seed,
-                cell_seed(7, &c.dataset, c.variant, c.failures, c.replicate)
+                cell_seed(7, &c.dataset, c.variant, c.failures, &c.scenario, c.replicate)
             );
         }
         // replicates are genuinely independent runs
         assert_ne!(cells[0].seed, cells[1].seed);
+    }
+
+    #[test]
+    fn scenario_axis_enumerates_and_derives_distinct_seeds() {
+        let mut cfg = SweepConfig::paper_grid(0.01, 8, 5);
+        cfg.variants = vec![Variant::Mu];
+        cfg.failures = vec![false];
+        cfg.scenarios = vec!["none".into(), "paper-fig3".into()];
+        cfg.replicates = 1;
+        cfg.eval_peers = 5;
+        cfg.threads = 2;
+        let cells = run_grid(&cfg).unwrap();
+        assert_eq!(cells.len(), 3 * 2); // 3 datasets x 2 scenarios
+        assert_eq!(cells[0].scenario, "none");
+        assert_eq!(cells[1].scenario, "paper-fig3");
+        assert_ne!(cells[0].seed, cells[1].seed);
+        // the "none" tag is unchanged from the pre-scenario format
+        assert_eq!(
+            cells[0].seed,
+            crate::util::rng::derive_seed(5, "reuters/mu/false/r0")
+        );
+        // the scripted cell really injected failures
+        assert!(cells[1].stats.messages_dropped > 0);
+        // unknown names and timelines that cannot fit error up front
+        // instead of panicking inside a worker thread
+        cfg.scenarios = vec!["warp".into()];
+        assert!(run_grid(&cfg).is_err());
+        cfg.scenarios = vec!["partition-heal".into()]; // needs >= 120 cycles
+        assert!(run_grid(&cfg).is_err(), "8-cycle grid cannot fit a cycle-120 phase");
     }
 }

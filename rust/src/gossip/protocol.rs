@@ -38,9 +38,11 @@ use crate::gossip::state::ModelStore;
 use crate::learning::adaline::Learner;
 use crate::learning::linear::LinearModel;
 use crate::p2p::overlay::{PeerSampler, SamplerConfig};
+use crate::scenario::driver::{resolve_churn_schedule, CompiledScenario, Mutation, ScenarioDriver};
+use crate::scenario::Scenario;
 use crate::sim::churn::{ChurnConfig, ChurnSchedule};
 use crate::sim::event::{Event, EventQueue, NodeId, Ticks};
-use crate::sim::network::{Network, NetworkConfig};
+use crate::sim::network::{Fate, Network, NetworkConfig};
 use crate::util::rng::Rng;
 use anyhow::Result;
 use std::collections::HashMap;
@@ -170,6 +172,10 @@ pub struct ProtocolConfig {
     pub exec: ExecMode,
     /// dense vs. O(nnz) sparse kernels (density-dispatched by default).
     pub path: ExecPath,
+    /// declarative failure/workload timeline (DESIGN.md §11).  Must be
+    /// validated against (n, cycles) by the configuration layer; the
+    /// simulators compile it into tick-indexed mutations at construction.
+    pub scenario: Option<Scenario>,
 }
 
 impl ProtocolConfig {
@@ -191,6 +197,7 @@ impl ProtocolConfig {
             restart_every: None,
             exec: ExecMode::default(),
             path: ExecPath::default(),
+            scenario: None,
         }
     }
 
@@ -207,6 +214,8 @@ impl ProtocolConfig {
 pub struct RunStats {
     pub messages_sent: u64,
     pub messages_dropped: u64,
+    /// sends blocked by an active scenario partition (cross-component)
+    pub messages_blocked: u64,
     pub messages_lost_offline: u64,
     /// messages actually applied at a receiver; `sent - dropped -
     /// lost_offline - delivered` is the in-flight count at the horizon
@@ -240,7 +249,21 @@ pub struct GossipSim<'a> {
     caches: Vec<Option<ModelCache>>,
     /// last cycle at which each node executed a scheduled restart
     last_restart: Vec<u64>,
+    /// effective liveness per node: churn state AND NOT forced offline
+    /// (sized for the full universe; nodes beyond the current membership
+    /// never send or receive)
     online: Vec<bool>,
+    /// churn-model liveness (before the scenario's forced-offline overlay)
+    churn_online: Vec<bool>,
+    /// scenario mass-leave overlay
+    forced_off: Vec<bool>,
+    /// compiled scenario timeline cursor, if any
+    scn: Option<ScenarioDriver>,
+    /// +1.0 normally; -1.0 after an odd number of concept-drift events
+    /// (training and test labels flip sign)
+    drift_sign: f32,
+    /// lazily built sign-flipped test labels (drift evaluation)
+    flipped_test_y: Option<Vec<f32>>,
     queue: EventQueue,
     network: Network,
     sampler: PeerSampler,
@@ -287,15 +310,29 @@ impl<'a> GossipSim<'a> {
 
     /// Build the simulator on an explicit compute backend (native or PJRT).
     pub fn with_backend(cfg: ProtocolConfig, data: &'a Dataset, backend: Box<dyn Backend>) -> Self {
-        let n = data.n_train();
-        assert!(n >= 2, "need at least two nodes");
+        // the node *universe* is one per training row; a scenario may start
+        // with a smaller initial membership and grow into the universe
+        let n_univ = data.n_train();
+        assert!(n_univ >= 2, "need at least two nodes");
+        let compiled = cfg.scenario.as_ref().map(|s| {
+            CompiledScenario::compile(s, n_univ, cfg.delta, cfg.cycles, cfg.seed, cfg.network)
+                .expect("scenario must be validated before the simulator runs")
+        });
+        let n = compiled.as_ref().map_or(n_univ, |c| c.initial);
         let mut rng = Rng::new(cfg.seed);
         let horizon = cfg.delta * (cfg.cycles + 1);
 
-        let churn = cfg.churn.as_ref().map(|c| {
-            let mut crng = rng.fork();
-            ChurnSchedule::generate(c, n, horizon, &mut crng)
-        });
+        // the schedule covers the whole universe so flash-crowd joiners
+        // have churn state waiting for them; fork order is unchanged when
+        // no scenario overrides churn (resolve_churn_schedule docs)
+        let churn = resolve_churn_schedule(
+            cfg.churn.as_ref(),
+            compiled.as_ref(),
+            n_univ,
+            cfg.delta,
+            horizon,
+            &mut rng,
+        );
 
         let mut sampler_rng = rng.fork();
         let sampler = PeerSampler::new(cfg.sampler, n, cfg.delta, &mut sampler_rng);
@@ -304,10 +341,12 @@ impl<'a> GossipSim<'a> {
         let eval_peers = eval_rng.sample_indices(n, cfg.eval.n_peers.min(n));
 
         let d = data.d();
-        let online: Vec<bool> =
-            (0..n).map(|i| churn.as_ref().map_or(true, |ch| ch.is_online(i, 0))).collect();
+        let churn_online: Vec<bool> = (0..n_univ)
+            .map(|i| churn.as_ref().map_or(true, |ch| ch.is_online(i, 0)))
+            .collect();
+        let online = churn_online.clone();
 
-        let mut caches: Vec<Option<ModelCache>> = vec![None; n];
+        let mut caches: Vec<Option<ModelCache>> = vec![None; n_univ];
         if cfg.eval.voting {
             for &p in &eval_peers {
                 // INITMODEL (Algorithm 3): seeded cache at evaluation peers.
@@ -332,8 +371,10 @@ impl<'a> GossipSim<'a> {
                 Examples::Dense(_) => Staged::CsrOwned(data.train.to_csr()),
             }
         } else {
-            let mut dense_x = vec![0.0f32; n * d];
-            for i in 0..n {
+            // stage the whole universe: flash-crowd joiners beyond the
+            // initial membership already have their rows waiting
+            let mut dense_x = vec![0.0f32; n_univ * d];
+            for i in 0..n_univ {
                 data.train.row(i).write_dense(&mut dense_x[i * d..(i + 1) * d]);
             }
             Staged::Dense(dense_x)
@@ -345,8 +386,13 @@ impl<'a> GossipSim<'a> {
             network: Network::new(cfg.network),
             store: ModelStore::new(n, d),
             caches,
-            last_restart: vec![0; n],
+            last_restart: vec![0; n_univ],
             online,
+            churn_online,
+            forced_off: vec![false; n_univ],
+            scn: compiled.map(ScenarioDriver::new),
+            drift_sign: 1.0,
+            flipped_test_y: None,
             queue: EventQueue::new(),
             sampler,
             churn,
@@ -422,6 +468,14 @@ impl<'a> GossipSim<'a> {
                 self.flush()?;
                 break;
             }
+            // scenario mutations apply at tick boundaries, before any event
+            // of that tick — with pending micro-batches flushed first, so
+            // scalar and micro-batched execution observe mutations at
+            // identical points (pinned in tests/engine_parity.rs)
+            if self.scn.as_ref().map_or(false, |d| d.has_due(t)) {
+                self.flush()?;
+                self.apply_scenario(t);
+            }
             self.now = t;
             match ev {
                 Event::Deliver { dst, msg } => {
@@ -439,10 +493,12 @@ impl<'a> GossipSim<'a> {
                 }
                 Event::Join { node } => {
                     self.flush()?;
-                    self.online[node] = true;
+                    self.churn_online[node] = true;
+                    self.online[node] = !self.forced_off[node];
                 }
                 Event::Leave { node } => {
                     self.flush()?;
+                    self.churn_online[node] = false;
                     self.online[node] = false;
                 }
                 Event::Eval => {
@@ -458,6 +514,49 @@ impl<'a> GossipSim<'a> {
         // single source of truth: the Network tracks actual deliveries
         self.stats.messages_delivered = self.network.delivered();
         Ok(RunResult { curve, stats: self.stats })
+    }
+
+    /// Apply every scenario mutation due at or before `now` (pending
+    /// deliveries are already flushed).  Mutations touch the network models
+    /// in place, toggle the drift sign, maintain the forced-offline overlay,
+    /// and grow membership for flash crowds.
+    fn apply_scenario(&mut self, now: Ticks) {
+        while let Some(m) = self.scn.as_mut().and_then(|d| d.pop_due(now)) {
+            match m {
+                Mutation::SetDrop(p) => self.network.cfg.drop_prob = p,
+                Mutation::SetDelay(model) => self.network.cfg.delay = model,
+                Mutation::SetPartition(components) => {
+                    self.network.set_partition(Some(components))
+                }
+                Mutation::Heal => self.network.set_partition(None),
+                Mutation::Drift => self.drift_sign = -self.drift_sign,
+                Mutation::ForceOffline(ids) => {
+                    for i in ids {
+                        self.forced_off[i] = true;
+                        self.online[i] = false;
+                    }
+                }
+                Mutation::Restore(ids) => {
+                    for i in ids {
+                        self.forced_off[i] = false;
+                        self.online[i] = self.churn_online[i];
+                    }
+                }
+                Mutation::Grow(k) => {
+                    let old = self.store.n();
+                    let newn = (old + k).min(self.data.n_train());
+                    self.store.grow(newn - old);
+                    self.sampler.grow(newn, &mut self.rng);
+                    for node in old..newn {
+                        // arrivals adopt the universe-wide churn state and
+                        // enter the active loop on a fresh jittered period
+                        self.online[node] = self.churn_online[node] && !self.forced_off[node];
+                        let p = self.next_period();
+                        self.queue.push(now + p, Event::GossipTick { node });
+                    }
+                }
+            }
+        }
     }
 
     /// Keep accumulating while the next event is another delivery at the same
@@ -546,7 +645,8 @@ impl<'a> GossipSim<'a> {
                         self.batch.push_sparse_x_row(idx, val);
                     }
                 }
-                self.batch.y[row] = self.data.train_y[dst];
+                // concept drift re-labels: the sign flips with the scenario
+                self.batch.y[row] = self.drift_sign * self.data.train_y[dst];
             }
             self.backend.step(&self.op, &mut self.batch)?;
             self.stats.engine_calls += 1;
@@ -618,12 +718,13 @@ impl<'a> GossipSim<'a> {
         };
         self.stats.messages_sent += 1;
         self.stats.bytes_sent += msg.wire_bytes() as u64;
-        match self.network.transmit(&mut self.rng) {
-            Some(delay) => {
+        match self.network.transmit_between(node, dst, &mut self.rng) {
+            Fate::Deliver(delay) => {
                 let at = self.arrival_time(self.now + delay);
                 self.queue.push(at, Event::Deliver { dst, msg });
             }
-            None => self.stats.messages_dropped += 1,
+            Fate::Dropped => self.stats.messages_dropped += 1,
+            Fate::Blocked => self.stats.messages_blocked += 1,
         }
     }
 
@@ -640,8 +741,18 @@ impl<'a> GossipSim<'a> {
     /// python/compile/model.py differ on zero-margin negative rows until
     /// regenerated.
     fn measure(&mut self, cycle: u64) -> Result<eval::EvalPoint> {
+        // under concept drift the *current* concept is what peers must
+        // predict: evaluate against sign-flipped test labels (built lazily,
+        // once) while the drift sign is negative
+        if self.drift_sign < 0.0 && self.flipped_test_y.is_none() {
+            self.flipped_test_y = Some(eval::flipped_labels(&self.data.test_y));
+        }
         let test = &self.data.test;
-        let y = &self.data.test_y;
+        let y: &[f32] = if self.drift_sign < 0.0 {
+            self.flipped_test_y.as_ref().unwrap()
+        } else {
+            &self.data.test_y
+        };
         let errs =
             eval_peer_errors(&self.store, &self.eval_peers, &mut *self.backend, test, y)?;
         let vote_errs: Option<Vec<f64>> = self.cfg.eval.voting.then(|| {

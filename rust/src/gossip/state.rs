@@ -134,6 +134,20 @@ impl ModelStore {
         self.last_t[i] = t;
     }
 
+    /// Append `k` new nodes in INITMODEL state (zero weights, scale 1,
+    /// t = 0) — dynamic membership growth for scenario flash crowds
+    /// (DESIGN.md §11).  Existing rows keep their ids and contents; the new
+    /// nodes take ids `n..n+k`.
+    pub fn grow(&mut self, k: usize) {
+        self.n += k;
+        self.freshest_w.resize(self.n * self.d, 0.0);
+        self.freshest_s.resize(self.n, 1.0);
+        self.freshest_t.resize(self.n, 0.0);
+        self.last_w.resize(self.n * self.d, 0.0);
+        self.last_s.resize(self.n, 1.0);
+        self.last_t.resize(self.n, 0.0);
+    }
+
     /// Reset node `i` back to INITMODEL state (restart schedules, churn with
     /// state loss, drifting-concept experiments).
     pub fn reset(&mut self, i: usize) {
@@ -214,6 +228,27 @@ mod tests {
         assert_eq!(s.freshest_t(1), 0.0);
         assert_eq!(s.freshest(0), &[1.0, 1.0]);
         assert_eq!(s.freshest_t(0), 3.0);
+    }
+
+    #[test]
+    fn grow_appends_init_rows_and_keeps_existing() {
+        let mut s = ModelStore::new(2, 3);
+        s.set_freshest(1, &[1.0, 2.0, 3.0], 4.0);
+        s.set_last_scaled(0, &[5.0, 6.0, 7.0], 0.5, 2.0);
+        s.grow(3);
+        assert_eq!(s.n(), 5);
+        assert_eq!(s.freshest(1), &[1.0, 2.0, 3.0]);
+        assert_eq!(s.last(0), &[5.0, 6.0, 7.0]);
+        assert_eq!(s.last_scale(0), 0.5);
+        for i in 2..5 {
+            assert!(s.freshest(i).iter().all(|&v| v == 0.0));
+            assert_eq!(s.freshest_scale(i), 1.0);
+            assert_eq!(s.freshest_t(i), 0.0);
+            assert_eq!(s.last_scale(i), 1.0);
+        }
+        // grown rows are fully functional
+        s.set_freshest(4, &[9.0, 9.0, 9.0], 1.0);
+        assert_eq!(s.freshest_model(4).weights(), vec![9.0, 9.0, 9.0]);
     }
 
     #[test]

@@ -16,6 +16,8 @@
 //!   runs.
 //! * [`runtime`] — XLA/PJRT artifact loading and execution.
 //! * [`baselines`] — sequential Pegasos, weighted bagging, perfect matching.
+//! * [`scenario`] — declarative phased failure/workload timelines driven
+//!   uniformly through the simulators and the deployment.
 //! * [`eval`] — 0-1 error tracking, model similarity, CSV output.
 //! * [`experiments`] — drivers regenerating every paper table/figure.
 //! * [`config`] / [`cli`] — experiment configuration and the `golf` binary.
@@ -33,5 +35,6 @@ pub mod learning;
 pub mod net;
 pub mod p2p;
 pub mod runtime;
+pub mod scenario;
 pub mod sim;
 pub mod util;

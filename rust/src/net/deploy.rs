@@ -32,9 +32,11 @@ use crate::learning::linear::LinearModel;
 use crate::learning::Learner;
 use crate::net::wire::{self, FrameBuf};
 use crate::p2p::overlay::{PeerSampler, SamplerConfig};
+use crate::scenario::driver::{CompiledScenario, Mutation, ScenarioDriver};
+use crate::scenario::Scenario;
 use crate::sim::churn::{ChurnConfig, ChurnSchedule};
 use crate::sim::event::Ticks;
-use crate::sim::network::{Network, NetworkConfig};
+use crate::sim::network::{Fate, Network, NetworkConfig};
 use crate::util::rng::Rng;
 use std::collections::HashMap;
 use std::io::{self, Read, Write};
@@ -82,6 +84,12 @@ pub struct DeployConfig {
     /// cycles at which to measure; empty = log-spaced over the run
     pub eval_at_cycles: Vec<u64>,
     pub seed: u64,
+    /// declarative failure/workload timeline (DESIGN.md §11), compiled at
+    /// [`SIM_DELTA`] ticks per cycle so one scenario file drives the
+    /// simulator and the deployment identically.  Flash-crowd joiners idle
+    /// (threads up, protocol silent) until their join tick — the wall-clock
+    /// analogue of the simulator's model-store growth.
+    pub scenario: Option<Scenario>,
 }
 
 impl Default for DeployConfig {
@@ -99,6 +107,7 @@ impl Default for DeployConfig {
             eval_peers: 16,
             eval_at_cycles: Vec::new(),
             seed: 42,
+            scenario: None,
         }
     }
 }
@@ -162,6 +171,8 @@ pub struct NodeStats {
     pub received: u64,
     /// sends lost to the injected drop model before reaching a socket
     pub sim_dropped: u64,
+    /// sends blocked by an active scenario partition
+    pub partition_blocked: u64,
     /// frames discarded because the node was offline (churn backlog)
     pub backlog_lost: u64,
     /// connect/write failures — real message loss the protocol tolerates
@@ -204,6 +215,8 @@ pub(crate) struct NodeCtx<'a> {
     pub(crate) cfg: &'a DeployConfig,
     pub(crate) data: &'a Dataset,
     pub(crate) churn: Option<&'a ChurnSchedule>,
+    /// compiled scenario timeline; every node drives its own cursor
+    pub(crate) scn: Option<&'a CompiledScenario>,
     pub(crate) start: Instant,
     pub(crate) shared: &'a SharedRun,
 }
@@ -349,11 +362,18 @@ pub(crate) fn node_main(ctx: NodeCtx<'_>) -> NodeStats {
     let mut last_recv = LinearModel::zeros(d);
     let mut stats = NodeStats::default();
     let x = ctx.data.train.row(me);
-    let y = ctx.data.train_y[me];
+    let base_y = ctx.data.train_y[me];
 
     let mut in_conns: Vec<InConn> = Vec::new();
     let mut out = OutConns::new(OUT_CONN_CAP);
     let mut delayed: Vec<DelayedSend> = Vec::new();
+
+    // scenario timeline: every node drives its own cursor over the shared
+    // compiled mutation list (seed-deterministic, so all nodes agree)
+    let mut scn_drv = ctx.scn.map(|c| ScenarioDriver::new(c.clone()));
+    let join_tick = ctx.scn.map_or(0, |c| c.join_tick(me));
+    let mut forced_off = false;
+    let mut drift_sign = 1.0f32;
 
     let horizon = SIM_DELTA * (cfg.cycles + 1);
     let poll = poll_interval(cfg.delta);
@@ -364,7 +384,29 @@ pub(crate) fn node_main(ctx: NodeCtx<'_>) -> NodeStats {
         let now_ticks = cfg
             .wall_to_ticks(now.saturating_duration_since(ctx.start))
             .min(horizon - 1);
-        let online = ctx.churn.map_or(true, |ch| ch.is_online(me, now_ticks));
+        // apply scenario mutations whose tick boundary has passed: network
+        // models mutate in place, drift flips the local label, leave waves
+        // force this node offline until restored
+        while let Some(m) = scn_drv.as_mut().and_then(|d| d.pop_due(now_ticks)) {
+            match m {
+                Mutation::SetDrop(p) => net.cfg.drop_prob = p,
+                Mutation::SetDelay(model) => net.cfg.delay = model,
+                Mutation::SetPartition(c) => net.set_partition(Some(c)),
+                Mutation::Heal => net.set_partition(None),
+                Mutation::Drift => drift_sign = -drift_sign,
+                Mutation::ForceOffline(ids) => forced_off |= ids.contains(&me),
+                Mutation::Restore(ids) => {
+                    if ids.contains(&me) {
+                        forced_off = false;
+                    }
+                }
+                // membership growth is precomputed per node via join_tick
+                Mutation::Grow(_) => {}
+            }
+        }
+        let online = now_ticks >= join_tick
+            && !forced_off
+            && ctx.churn.map_or(true, |ch| ch.is_online(me, now_ticks));
 
         // ---- accept new inbound connections (kept until EOF)
         loop {
@@ -406,8 +448,16 @@ pub(crate) fn node_main(ctx: NodeCtx<'_>) -> NodeStats {
                 sampler.on_receive(me, &msg.view);
                 // the wire carries materialized weights (scale folded)
                 let incoming = LinearModel::from_weights(msg.w, msg.t);
-                let created =
-                    create_model_step(cfg.variant, &cfg.learner, incoming, &mut last_recv, &x, y);
+                // concept drift re-labels the local example with the
+                // scenario's current sign
+                let created = create_model_step(
+                    cfg.variant,
+                    &cfg.learner,
+                    incoming,
+                    &mut last_recv,
+                    &x,
+                    drift_sign * base_y,
+                );
                 publish(&ctx.shared.models[me], &created);
                 cache.add(created);
             }
@@ -453,9 +503,10 @@ pub(crate) fn node_main(ctx: NodeCtx<'_>) -> NodeStats {
                     stats.sent += 1;
                     stats.bytes_sent += msg.wire_bytes() as u64;
                     ctx.shared.messages_sent.fetch_add(1, Ordering::Relaxed);
-                    match net.transmit(&mut rng) {
-                        None => stats.sim_dropped += 1,
-                        Some(delay_ticks) => {
+                    match net.transmit_between(me, dst, &mut rng) {
+                        Fate::Dropped => stats.sim_dropped += 1,
+                        Fate::Blocked => stats.partition_blocked += 1,
+                        Fate::Deliver(delay_ticks) => {
                             let bytes = wire::encode(&msg);
                             let due = now + cfg.ticks_to_wall(delay_ticks);
                             delayed.push(DelayedSend { due, dst, bytes });

@@ -61,6 +61,25 @@ impl Newscast {
         Newscast { views, view_size }
     }
 
+    /// Grow the overlay to `n_new` nodes (scenario flash crowds): each new
+    /// node bootstraps a fresh view over the *enlarged* universe, as if the
+    /// rendezvous service seeded it on arrival.  Existing views are left
+    /// alone — descriptors of the newcomers spread organically once they
+    /// start gossiping (their payloads lead with their own descriptor).
+    pub fn grow(&mut self, n_new: usize, rng: &mut Rng) {
+        let old = self.views.len();
+        for me in old..n_new {
+            let mut v = Vec::with_capacity(self.view_size);
+            while v.len() < self.view_size.min(n_new.saturating_sub(1)) {
+                let peer = rng.below_usize(n_new);
+                if peer != me && !v.iter().any(|d: &Descriptor| d.node == peer) {
+                    v.push(Descriptor { node: peer, ts: 0 });
+                }
+            }
+            self.views.push(v);
+        }
+    }
+
     /// SELECTPEER: uniform draw from the local view.
     pub fn select(&self, node: NodeId, rng: &mut Rng) -> Option<NodeId> {
         let v = &self.views[node];

@@ -107,6 +107,24 @@ impl PeerSampler {
         }
     }
 
+    /// Grow the sampling universe to `n_new` nodes (scenario flash crowds):
+    /// the oracle widens its range, NEWSCAST bootstraps views for the new
+    /// arrivals, and the matching baseline enlarges (and invalidates) its
+    /// partner table.
+    pub fn grow(&mut self, n_new: usize, rng: &mut Rng) {
+        match self {
+            PeerSampler::Oracle { n } => *n = (*n).max(n_new),
+            PeerSampler::Newscast(nc) => nc.grow(n_new, rng),
+            PeerSampler::Matching(st) => {
+                if n_new > st.n {
+                    st.n = n_new;
+                    st.partner.resize(n_new, None);
+                    st.cycle = u64::MAX; // force a refresh with the new nodes
+                }
+            }
+        }
+    }
+
     /// Piggyback payload for an outgoing message (newscast only).
     pub fn payload(&self, node: NodeId, now: Ticks) -> Vec<Descriptor> {
         match self {
@@ -216,6 +234,47 @@ mod tests {
         assert_eq!(payload[0].node, 3);
         assert_eq!(payload.len(), 6); // own descriptor + 5 view entries
         s.on_receive(3, &[Descriptor { node: 11, ts: 99 }]);
+    }
+
+    #[test]
+    fn grow_extends_every_sampler_kind() {
+        let mut rng = Rng::new(12);
+        // oracle: range widens
+        let mut s = PeerSampler::new(SamplerConfig::Oracle, 4, 1000, &mut rng);
+        s.grow(8, &mut rng);
+        let online = vec![true; 8];
+        let mut seen_new = false;
+        for _ in 0..200 {
+            if s.select(0, 0, &online, &mut rng).unwrap() >= 4 {
+                seen_new = true;
+            }
+        }
+        assert!(seen_new, "oracle must sample grown nodes");
+        // newscast: new nodes get bootstrapped views, old views untouched
+        let mut s = PeerSampler::new(
+            SamplerConfig::Newscast { view_size: 5 },
+            10,
+            1000,
+            &mut rng,
+        );
+        s.grow(14, &mut rng);
+        for node in 10..14 {
+            let p = s.select(node, 0, &online, &mut rng);
+            assert!(p.is_some(), "grown node {node} has an empty view");
+            assert!(p.unwrap() < 14);
+            let payload = s.payload(node, 5);
+            assert_eq!(payload[0].node, node);
+        }
+        // matching: partner table covers the grown universe
+        let mut s = PeerSampler::new(SamplerConfig::Matching, 4, 100, &mut rng);
+        s.grow(6, &mut rng);
+        let online = vec![true; 6];
+        let partners: Vec<_> = (0..6).map(|i| s.select(i, 0, &online, &mut rng)).collect();
+        for (i, p) in partners.iter().enumerate() {
+            if let Some(p) = p {
+                assert_eq!(partners[*p], Some(i));
+            }
+        }
     }
 
     #[test]

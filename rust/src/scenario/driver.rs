@@ -1,0 +1,535 @@
+//! Scenario compilation and driving (DESIGN.md §11).
+//!
+//! A validated [`Scenario`] compiles into a [`CompiledScenario`]: a sorted
+//! list of `(tick, Mutation)` pairs plus the resolved churn directive and
+//! initial membership.  Compilation is **seed-deterministic and
+//! order-independent**: the node subsets behind mass-leave waves are drawn
+//! from per-event derived RNG streams (`derive_seed` over
+//! `scenario/<name>/<event>@<cycle>`), never from a shared sequential
+//! stream, so two compilations of the same scenario — in the simulator, the
+//! batched engine, a deployment coordinator, or all 512 nodes of a
+//! deployment — agree mutation for mutation.
+//!
+//! Execution paths hold a [`ScenarioDriver`] cursor and call
+//! [`ScenarioDriver::pop_due`] at tick boundaries, applying each
+//! [`Mutation`] to their own state (the event-driven simulator flushes any
+//! pending micro-batch first, so scalar and micro-batched execution see
+//! mutations at identical points — pinned bit-for-bit in
+//! tests/engine_parity.rs).  Phase ends revert to the scenario baseline
+//! (drop/delay), heal partitions, and restore forced leavers; point events
+//! are one-way.
+
+use crate::scenario::{
+    ChurnSpec, Membership, PointAction, Scenario, ScenarioError, TraceEntry,
+};
+use crate::sim::churn::{ChurnConfig, ChurnSchedule};
+use crate::sim::event::Ticks;
+use crate::sim::network::{DelayModel, NetworkConfig};
+use crate::util::rng::{derive_seed, Rng};
+
+/// One tick-indexed state change.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Mutation {
+    /// set the message-drop probability
+    SetDrop(f64),
+    /// set the message-delay model (already resolved to ticks)
+    SetDelay(DelayModel),
+    /// install a partition: per-node component ids over the full universe;
+    /// cross-component sends are blocked until [`Mutation::Heal`]
+    SetPartition(Vec<u32>),
+    Heal,
+    /// toggle the concept: training and test labels flip sign
+    Drift,
+    /// flash crowd: `k` new nodes join (ids continue from the current
+    /// membership; the model store grows by `k` SoA rows)
+    Grow(usize),
+    /// force the listed nodes offline (scenario overlay on top of churn)
+    ForceOffline(Vec<usize>),
+    /// lift the forced-offline overlay for the listed nodes
+    Restore(Vec<usize>),
+}
+
+/// The resolved churn directive of a compiled scenario.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CompiledChurn {
+    /// keep whatever the base configuration says
+    Inherit,
+    Off,
+    /// the paper's lognormal model at the run's Δ
+    Paper,
+    /// replayed availability intervals (still in cycles; resolved against
+    /// Δ and the horizon by [`resolve_churn_schedule`])
+    Trace(Vec<TraceEntry>),
+}
+
+/// A [`Scenario`] resolved against a concrete run: `n` nodes, gossip period
+/// `delta` ticks, `cycles` horizon, base network config and seed.
+#[derive(Clone, Debug)]
+pub struct CompiledScenario {
+    pub name: String,
+    /// tick-sorted mutations (stable order on ties: baseline, then phases
+    /// by start cycle, then events)
+    pub muts: Vec<(Ticks, Mutation)>,
+    /// membership at tick 0 (grows via [`Mutation::Grow`])
+    pub initial: usize,
+    pub churn: CompiledChurn,
+    pub delta: Ticks,
+}
+
+impl CompiledScenario {
+    /// Compile a **validated** scenario (callers run
+    /// [`Scenario::validate`] first; compilation re-validates and surfaces
+    /// the same typed errors).
+    pub fn compile(
+        s: &Scenario,
+        n: usize,
+        delta: Ticks,
+        cycles: u64,
+        seed: u64,
+        base_net: NetworkConfig,
+    ) -> Result<CompiledScenario, ScenarioError> {
+        s.validate(n, cycles)?;
+        let n0 = s.initial_nodes(n);
+        let tick = |c: u64| c * delta;
+        // the baseline the phase ends revert to: the run's network config
+        // with the scenario-level overrides folded in
+        let mut base = base_net;
+        let mut muts: Vec<(Ticks, Mutation)> = Vec::new();
+        if let Some(p) = s.drop {
+            base.drop_prob = p;
+            muts.push((0, Mutation::SetDrop(p)));
+        }
+        if let Some(d) = s.delay {
+            base.delay = d.to_model(delta);
+            muts.push((0, Mutation::SetDelay(base.delay)));
+        }
+
+        // per-wave leave selections come from derived streams keyed by the
+        // wave's identity, so compilation order can never change them
+        let leave_ids = |what: &str, at: u64, membership: usize, frac: f64| -> Vec<usize> {
+            let k = ((membership as f64 * frac).round() as usize).clamp(1, membership);
+            let mut rng =
+                Rng::new(derive_seed(seed, &format!("scenario/{}/{what}@{at}", s.name)));
+            let mut ids = rng.sample_indices(membership, k);
+            ids.sort_unstable();
+            ids
+        };
+
+        // membership as of a phase start: the initial population plus every
+        // join event strictly before it (same-tick Grow mutations apply
+        // *after* phase-start mutations, so `<` matches the runtime order) —
+        // a leave wave after a flash crowd must sample the grown network,
+        // not the founding nodes only
+        let membership_at = |cycle: u64| -> usize {
+            let mut m = n0;
+            for e in &s.events {
+                if e.at < cycle {
+                    if let PointAction::Join(j) = &e.action {
+                        m += resolve_join(*j, n0);
+                    }
+                }
+            }
+            m
+        };
+
+        for p in &s.phases {
+            if let Some(d) = p.drop {
+                muts.push((tick(p.from), Mutation::SetDrop(d)));
+                muts.push((tick(p.to), Mutation::SetDrop(base.drop_prob)));
+            }
+            if let Some(d) = p.delay {
+                muts.push((tick(p.from), Mutation::SetDelay(d.to_model(delta))));
+                muts.push((tick(p.to), Mutation::SetDelay(base.delay)));
+            }
+            if let Some(spec) = &p.partition {
+                muts.push((tick(p.from), Mutation::SetPartition(spec.components(n))));
+                muts.push((tick(p.to), Mutation::Heal));
+            }
+            if let Some(f) = p.leave {
+                let ids = leave_ids(&p.name, p.from, membership_at(p.from), f);
+                muts.push((tick(p.from), Mutation::ForceOffline(ids.clone())));
+                muts.push((tick(p.to), Mutation::Restore(ids)));
+            }
+        }
+        // events run in sorted (at, name) order, which is exactly the order
+        // their mutations apply at runtime, so a running membership counter
+        // is correct here
+        let mut membership = n0;
+        for e in &s.events {
+            let m = match &e.action {
+                PointAction::Drift => Mutation::Drift,
+                PointAction::Heal => Mutation::Heal,
+                PointAction::Drop(p) => Mutation::SetDrop(*p),
+                PointAction::Delay(d) => Mutation::SetDelay(d.to_model(delta)),
+                PointAction::Partition(spec) => Mutation::SetPartition(spec.components(n)),
+                PointAction::Leave(f) => {
+                    Mutation::ForceOffline(leave_ids(&e.name, e.at, membership, *f))
+                }
+                PointAction::Join(m) => {
+                    let k = resolve_join(*m, n0);
+                    membership += k;
+                    Mutation::Grow(k)
+                }
+            };
+            muts.push((tick(e.at), m));
+        }
+        // stable by tick: baseline first, then phases (already sorted by
+        // start), then events (already sorted by at)
+        muts.sort_by_key(|&(t, _)| t);
+        let churn = match &s.churn {
+            None => CompiledChurn::Inherit,
+            Some(ChurnSpec::Off) => CompiledChurn::Off,
+            Some(ChurnSpec::Paper) => CompiledChurn::Paper,
+            Some(ChurnSpec::Trace(e)) => CompiledChurn::Trace(e.clone()),
+        };
+        Ok(CompiledScenario { name: s.name.clone(), muts, initial: n0, churn, delta })
+    }
+
+    /// The tick at which `node` becomes a member: 0 for the initial
+    /// population, the matching [`Mutation::Grow`] tick for flash-crowd
+    /// joiners, `Ticks::MAX` for ids never reached.
+    pub fn join_tick(&self, node: usize) -> Ticks {
+        if node < self.initial {
+            return 0;
+        }
+        let mut next = self.initial;
+        for (t, m) in &self.muts {
+            if let Mutation::Grow(k) = m {
+                next += k;
+                if node < next {
+                    return *t;
+                }
+            }
+        }
+        Ticks::MAX
+    }
+
+    /// Total membership after every join wave.
+    pub fn final_membership(&self) -> usize {
+        self.initial
+            + self
+                .muts
+                .iter()
+                .map(|(_, m)| if let Mutation::Grow(k) = m { *k } else { 0 })
+                .sum::<usize>()
+    }
+}
+
+/// Join waves: fractions are relative to the *initial* membership
+/// ("join:3.0" quadruples a flash-crowd run), counts are absolute.
+fn resolve_join(m: Membership, initial: usize) -> usize {
+    m.resolve(initial).max(1)
+}
+
+/// Cursor over a compiled timeline.  Each execution context owns one (the
+/// two simulators, the deployment coordinator, and every deployment node
+/// thread) and applies mutations to its own state as ticks pass.
+#[derive(Clone, Debug)]
+pub struct ScenarioDriver {
+    compiled: CompiledScenario,
+    cursor: usize,
+}
+
+impl ScenarioDriver {
+    pub fn new(compiled: CompiledScenario) -> Self {
+        ScenarioDriver { compiled, cursor: 0 }
+    }
+
+    pub fn compiled(&self) -> &CompiledScenario {
+        &self.compiled
+    }
+
+    /// Is a mutation due at or before `now`?
+    pub fn has_due(&self, now: Ticks) -> bool {
+        self.compiled
+            .muts
+            .get(self.cursor)
+            .map_or(false, |&(t, _)| t <= now)
+    }
+
+    /// Pop the next mutation due at or before `now`, if any.
+    pub fn pop_due(&mut self, now: Ticks) -> Option<Mutation> {
+        if self.has_due(now) {
+            let m = self.compiled.muts[self.cursor].1.clone();
+            self.cursor += 1;
+            Some(m)
+        } else {
+            None
+        }
+    }
+}
+
+/// Resolve the churn schedule for a run, honoring a scenario's churn
+/// directive while reproducing `GossipSim`'s historical RNG fork order:
+/// exactly one fork is consumed when (and only when) a lognormal schedule
+/// is generated, so matched simulator/deployment runs draw identical
+/// schedules and scenario-free runs are bit-for-bit unchanged.  Trace
+/// replay is deterministic and consumes no fork.
+pub fn resolve_churn_schedule(
+    base: Option<&ChurnConfig>,
+    scn: Option<&CompiledScenario>,
+    n: usize,
+    delta: Ticks,
+    horizon: Ticks,
+    rng: &mut Rng,
+) -> Option<ChurnSchedule> {
+    match scn.map(|c| &c.churn) {
+        Some(CompiledChurn::Off) => None,
+        Some(CompiledChurn::Paper) => {
+            let cfg = ChurnConfig::paper_default(delta);
+            let mut crng = rng.fork();
+            Some(ChurnSchedule::generate(&cfg, n, horizon, &mut crng))
+        }
+        Some(CompiledChurn::Trace(entries)) => {
+            Some(trace_schedule(entries, n, delta, horizon))
+        }
+        Some(CompiledChurn::Inherit) | None => base.map(|c| {
+            let mut crng = rng.fork();
+            ChurnSchedule::generate(c, n, horizon, &mut crng)
+        }),
+    }
+}
+
+/// Build a [`ChurnSchedule`] from replayed availability intervals: trace
+/// entries are per-node `[from, to)` *cycles*, mapped to ticks and clamped
+/// to the horizon; nodes without entries stay online for the whole run.
+pub fn trace_schedule(
+    entries: &[TraceEntry],
+    n: usize,
+    delta: Ticks,
+    horizon: Ticks,
+) -> ChurnSchedule {
+    let mut intervals: Vec<Vec<(Ticks, Ticks)>> = vec![Vec::new(); n];
+    let mut mentioned = vec![false; n];
+    for e in entries {
+        if e.node >= n {
+            continue; // validated earlier; never panic on a stale trace
+        }
+        mentioned[e.node] = true;
+        let s = (e.from * delta).min(horizon);
+        let t = (e.to * delta).min(horizon);
+        if s < t {
+            intervals[e.node].push((s, t));
+        }
+    }
+    for (node, iv) in intervals.iter_mut().enumerate() {
+        if !mentioned[node] {
+            iv.push((0, horizon));
+        } else {
+            iv.sort_unstable();
+        }
+    }
+    ChurnSchedule::from_intervals(intervals, horizon)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::{builtin, DelaySpec, PartitionSpec, Phase, PointEvent};
+
+    fn net() -> NetworkConfig {
+        NetworkConfig::reliable()
+    }
+
+    #[test]
+    fn compile_orders_and_reverts_phases() {
+        let mut s = Scenario::empty("t");
+        s.drop = Some(0.1);
+        s.phases.push(Phase {
+            name: "storm".into(),
+            from: 10,
+            to: 20,
+            drop: Some(0.9),
+            delay: Some(DelaySpec::Uniform(1.0, 2.0)),
+            partition: Some(PartitionSpec::Halves),
+            leave: Some(0.5),
+        });
+        let c = CompiledScenario::compile(&s, 10, 1000, 50, 7, net()).unwrap();
+        assert_eq!(c.initial, 10);
+        let ticks: Vec<Ticks> = c.muts.iter().map(|&(t, _)| t).collect();
+        assert!(ticks.windows(2).all(|w| w[0] <= w[1]), "{ticks:?}");
+        // baseline drop at 0; phase start at 10_000; revert at 20_000
+        assert_eq!(c.muts[0], (0, Mutation::SetDrop(0.1)));
+        assert!(c
+            .muts
+            .iter()
+            .any(|m| *m == (10_000, Mutation::SetDrop(0.9))));
+        assert!(c.muts.iter().any(|m| *m == (20_000, Mutation::SetDrop(0.1))));
+        assert!(c.muts.iter().any(|m| matches!(m, (20_000, Mutation::Heal))));
+        // revert of the delay goes back to the reliable baseline
+        assert!(c
+            .muts
+            .iter()
+            .any(|m| *m == (20_000, Mutation::SetDelay(DelayModel::Fixed(10)))));
+        // forced leavers are restored with the same ids
+        let off: Vec<_> = c
+            .muts
+            .iter()
+            .filter_map(|(t, m)| match m {
+                Mutation::ForceOffline(ids) => Some((*t, ids.clone())),
+                _ => None,
+            })
+            .collect();
+        let on: Vec<_> = c
+            .muts
+            .iter()
+            .filter_map(|(t, m)| match m {
+                Mutation::Restore(ids) => Some((*t, ids.clone())),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(off.len(), 1);
+        assert_eq!(off[0].1.len(), 5);
+        assert_eq!(on[0].1, off[0].1);
+        assert_eq!((off[0].0, on[0].0), (10_000, 20_000));
+    }
+
+    #[test]
+    fn compile_is_seed_deterministic() {
+        let mut s = Scenario::empty("det");
+        s.phases.push(Phase {
+            name: "out".into(),
+            from: 5,
+            to: 9,
+            drop: None,
+            delay: None,
+            partition: None,
+            leave: Some(0.3),
+        });
+        let a = CompiledScenario::compile(&s, 40, 1000, 20, 42, net()).unwrap();
+        let b = CompiledScenario::compile(&s, 40, 1000, 20, 42, net()).unwrap();
+        assert_eq!(a.muts, b.muts);
+        let c = CompiledScenario::compile(&s, 40, 1000, 20, 43, net()).unwrap();
+        assert_ne!(a.muts, c.muts, "leave subsets must depend on the seed");
+    }
+
+    /// Regression: a leave wave scheduled after a flash-crowd join must
+    /// sample the *grown* membership, not the founding nodes only.
+    #[test]
+    fn phase_leave_after_join_samples_grown_membership() {
+        let mut s = Scenario::empty("late-outage");
+        s.initial = Some(crate::scenario::Membership::Fraction(0.25));
+        s.events.push(PointEvent {
+            name: "crowd".into(),
+            at: 10,
+            action: PointAction::Join(crate::scenario::Membership::Fraction(3.0)),
+        });
+        s.phases.push(Phase {
+            name: "out".into(),
+            from: 20,
+            to: 30,
+            drop: None,
+            delay: None,
+            partition: None,
+            leave: Some(0.5),
+        });
+        let c = CompiledScenario::compile(&s, 100, 1000, 40, 3, net()).unwrap();
+        let off: Vec<&Vec<usize>> = c
+            .muts
+            .iter()
+            .filter_map(|(_, m)| match m {
+                Mutation::ForceOffline(ids) => Some(ids),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(off.len(), 1);
+        // half of the post-join membership (100), not half of the 25 founders
+        assert_eq!(off[0].len(), 50);
+        assert!(
+            off[0].iter().any(|&i| i >= 25),
+            "the wave must be able to hit flash-crowd joiners"
+        );
+    }
+
+    #[test]
+    fn join_tick_and_membership_accounting() {
+        let s = builtin("flash-crowd").unwrap();
+        let c = CompiledScenario::compile(&s, 100, 1000, 300, 1, net()).unwrap();
+        assert_eq!(c.initial, 25);
+        assert_eq!(c.final_membership(), 100);
+        assert_eq!(c.join_tick(0), 0);
+        assert_eq!(c.join_tick(24), 0);
+        assert_eq!(c.join_tick(25), 100 * 1000);
+        assert_eq!(c.join_tick(99), 100 * 1000);
+        assert_eq!(c.join_tick(100), Ticks::MAX);
+    }
+
+    #[test]
+    fn driver_pops_in_order_once() {
+        let mut s = Scenario::empty("d");
+        s.drop = Some(0.2);
+        s.events.push(PointEvent {
+            name: "x".into(),
+            at: 3,
+            action: PointAction::Drift,
+        });
+        let c = CompiledScenario::compile(&s, 10, 100, 10, 1, net()).unwrap();
+        let mut d = ScenarioDriver::new(c);
+        assert!(d.has_due(0));
+        assert_eq!(d.pop_due(0), Some(Mutation::SetDrop(0.2)));
+        assert_eq!(d.pop_due(0), None, "drift at tick 300 is not due yet");
+        assert!(!d.has_due(299));
+        assert_eq!(d.pop_due(300), Some(Mutation::Drift));
+        assert_eq!(d.pop_due(10_000), None, "timeline exhausted");
+    }
+
+    #[test]
+    fn trace_schedule_replays_intervals() {
+        let entries = vec![
+            TraceEntry { node: 0, from: 0, to: 5 },
+            TraceEntry { node: 0, from: 8, to: 12 },
+            TraceEntry { node: 2, from: 3, to: 4 },
+        ];
+        let sched = trace_schedule(&entries, 4, 100, 1000);
+        assert!(sched.is_online(0, 0));
+        assert!(sched.is_online(0, 499));
+        assert!(!sched.is_online(0, 600));
+        assert!(sched.is_online(0, 900));
+        assert!(!sched.is_online(2, 0));
+        assert!(sched.is_online(2, 350));
+        // untouched nodes stay online the whole run
+        assert!(sched.is_online(1, 0) && sched.is_online(1, 999));
+        assert!(sched.is_online(3, 500));
+        // clamped to the horizon
+        let far = vec![TraceEntry { node: 0, from: 5, to: 99 }];
+        let sched = trace_schedule(&far, 2, 100, 1000);
+        assert!(sched.is_online(0, 999));
+        assert!(!sched.is_online(0, 400));
+    }
+
+    #[test]
+    fn resolve_churn_preserves_fork_order() {
+        // no scenario + base config == Paper override at the same seed
+        let base = ChurnConfig::paper_default(1000);
+        let mut rng1 = Rng::new(9);
+        let a = resolve_churn_schedule(Some(&base), None, 20, 1000, 50_000, &mut rng1).unwrap();
+        let s = builtin("paper-fig3").unwrap();
+        let c = CompiledScenario::compile(&s, 20, 1000, 40, 9, net()).unwrap();
+        let mut rng2 = Rng::new(9);
+        let b =
+            resolve_churn_schedule(None, Some(&c), 20, 1000, 50_000, &mut rng2).unwrap();
+        assert_eq!(a.intervals, b.intervals);
+        // both consumed exactly one fork: the parent streams stay in step
+        assert_eq!(rng1.next_u64(), rng2.next_u64());
+        // Off yields no schedule and consumes nothing
+        let mut s_off = Scenario::empty("off");
+        s_off.churn = Some(ChurnSpec::Off);
+        let c = CompiledScenario::compile(&s_off, 20, 1000, 40, 9, net()).unwrap();
+        let mut rng3 = Rng::new(9);
+        assert!(resolve_churn_schedule(Some(&base), Some(&c), 20, 1000, 50_000, &mut rng3)
+            .is_none());
+    }
+
+    #[test]
+    fn paper_fig3_compiles_to_the_extreme_constants() {
+        let s = builtin("paper-fig3").unwrap();
+        let c = CompiledScenario::compile(&s, 50, 1000, 100, 42, net()).unwrap();
+        assert_eq!(c.churn, CompiledChurn::Paper);
+        assert_eq!(c.muts.len(), 2);
+        assert_eq!(c.muts[0], (0, Mutation::SetDrop(0.5)));
+        assert_eq!(
+            c.muts[1],
+            (0, Mutation::SetDelay(DelayModel::Uniform { lo: 1000, hi: 10_000 }))
+        );
+    }
+}

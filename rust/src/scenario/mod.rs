@@ -1,0 +1,1000 @@
+//! Scenario engine (DESIGN.md §11): declarative, phased failure/workload
+//! timelines driven uniformly through the event-driven simulator, the
+//! cycle-synchronous batched engine, and the socket deployment runtime.
+//!
+//! The paper's robustness claims rest on a *single* extreme-failure setup
+//! (fixed churn model, constant 50% drop, uniform delay).  A [`Scenario`]
+//! generalizes that to a timeline: ordered [`Phase`]s (interval conditions
+//! that revert to the baseline when the phase ends) plus point
+//! [`PointEvent`]s (one-way mutations), over the failure axes
+//!
+//! * message **drop** probability and **delay** model (expressed in gossip
+//!   cycles, so one scenario file works at any tick scale),
+//! * **partitions** over node predicates (halves, modulo classes, a leading
+//!   fraction, or an explicit id list) with later healing,
+//! * **mass leave / flash-crowd join** membership waves (joins grow the
+//!   model store; leaves reuse the churn pause machinery),
+//! * **concept drift** (label re-labeling: the synthetic concept inverts,
+//!   models must re-converge),
+//! * **churn source**: the paper's lognormal model, none, or a replayed
+//!   availability **trace** (per-node up/down intervals).
+//!
+//! Scenarios parse from the `[scenario]` / `[phase.*]` / `[event.*]`
+//! sections of the INI format (`config/ini.rs`), either embedded in an
+//! experiment config or as a standalone `.scn` file, and validate at parse
+//! time with typed [`ScenarioError`]s (overlapping phases, events past the
+//! horizon, partitions of unknown node ids, infeasible joins).  A validated
+//! scenario compiles ([`driver::CompiledScenario`]) into a seed-deterministic
+//! list of tick-indexed [`driver::Mutation`]s that every execution path
+//! applies at tick boundaries.  A library of named built-ins
+//! ([`builtin`], [`builtin_names`]) backs `golf scenario` and the sweep
+//! grid's scenario axis.
+
+use crate::config::ini::{self, Document, Section};
+use std::fmt;
+
+pub mod driver;
+
+pub use driver::{
+    resolve_churn_schedule, CompiledChurn, CompiledScenario, Mutation, ScenarioDriver,
+};
+
+/// Typed scenario parse/validation error: every rejection names what was
+/// wrong instead of silently misbehaving at run time.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ScenarioError {
+    /// the underlying INI text failed to parse
+    Ini(String),
+    UnknownKey { section: String, key: String },
+    BadValue { section: String, key: String, value: String },
+    MissingKey { section: String, key: String },
+    /// a phase with `from >= to`
+    EmptyPhase { phase: String },
+    /// two phases share cycles — reverting to the baseline would be
+    /// ambiguous, so overlap is rejected outright
+    OverlappingPhases { a: String, b: String },
+    /// a phase end or event lies beyond the run horizon
+    PastHorizon { what: String, at: u64, cycles: u64 },
+    /// a partition or trace names a node id the run does not have
+    UnknownNode { what: String, node: usize, n: usize },
+    /// initial membership or a join/leave wave is infeasible
+    BadMembership { what: String, detail: String },
+    /// a churn trace entry is malformed (order, overlap)
+    BadTrace { detail: String },
+    UnknownBuiltin { name: String },
+    Io { path: String, detail: String },
+}
+
+impl fmt::Display for ScenarioError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ScenarioError::Ini(e) => write!(f, "scenario ini: {e}"),
+            ScenarioError::UnknownKey { section, key } => {
+                write!(f, "[{section}]: unknown key {key:?}")
+            }
+            ScenarioError::BadValue { section, key, value } => {
+                write!(f, "[{section}]: bad value for {key}: {value:?}")
+            }
+            ScenarioError::MissingKey { section, key } => {
+                write!(f, "[{section}]: missing required key {key:?}")
+            }
+            ScenarioError::EmptyPhase { phase } => {
+                write!(f, "phase {phase:?}: `from` must be strictly before `to`")
+            }
+            ScenarioError::OverlappingPhases { a, b } => {
+                write!(f, "phases {a:?} and {b:?} overlap")
+            }
+            ScenarioError::PastHorizon { what, at, cycles } => {
+                write!(f, "{what} at cycle {at} lies past the {cycles}-cycle horizon")
+            }
+            ScenarioError::UnknownNode { what, node, n } => {
+                write!(f, "{what} names node {node}, but the run has only {n} nodes")
+            }
+            ScenarioError::BadMembership { what, detail } => {
+                write!(f, "{what}: {detail}")
+            }
+            ScenarioError::BadTrace { detail } => write!(f, "churn trace: {detail}"),
+            ScenarioError::UnknownBuiltin { name } => {
+                write!(
+                    f,
+                    "unknown built-in scenario {name:?} (try `golf scenario --list`)"
+                )
+            }
+            ScenarioError::Io { path, detail } => write!(f, "{path}: {detail}"),
+        }
+    }
+}
+
+impl std::error::Error for ScenarioError {}
+
+/// Where a run's churn comes from when a scenario overrides it.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ChurnSpec {
+    /// disable churn regardless of the base configuration
+    Off,
+    /// the paper's lognormal model at the run's Δ
+    Paper,
+    /// replay per-node (up_cycle, down_cycle) availability intervals; nodes
+    /// without entries stay online for the whole run
+    Trace(Vec<TraceEntry>),
+}
+
+/// One availability interval of a churn trace: `node` is online during
+/// `[from, to)` gossip cycles.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceEntry {
+    pub node: usize,
+    pub from: u64,
+    pub to: u64,
+}
+
+/// Message delay expressed in fractional gossip cycles, so scenario files
+/// are independent of the tick scale (1 cycle = Δ ticks).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum DelaySpec {
+    Fixed(f64),
+    Uniform(f64, f64),
+}
+
+impl DelaySpec {
+    /// Resolve to the simulator's tick-based delay model.
+    pub fn to_model(self, delta: crate::sim::event::Ticks) -> crate::sim::network::DelayModel {
+        use crate::sim::network::DelayModel;
+        let t = |c: f64| (c * delta as f64).round().max(0.0) as crate::sim::event::Ticks;
+        match self {
+            DelaySpec::Fixed(c) => DelayModel::Fixed(t(c)),
+            DelaySpec::Uniform(lo, hi) => DelayModel::Uniform { lo: t(lo), hi: t(hi).max(t(lo) + 1) },
+        }
+    }
+}
+
+/// A node count expressed either as an absolute count or relative fraction.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Membership {
+    /// fraction of a reference population (initial membership for joins,
+    /// the full universe for `initial_nodes`)
+    Fraction(f64),
+    Count(usize),
+}
+
+impl Membership {
+    pub fn resolve(self, reference: usize) -> usize {
+        match self {
+            Membership::Fraction(f) => (reference as f64 * f).round() as usize,
+            Membership::Count(k) => k,
+        }
+    }
+}
+
+/// How a partition assigns nodes to components (cross-component messages
+/// are blocked until healed).
+#[derive(Clone, Debug, PartialEq)]
+pub enum PartitionSpec {
+    /// first half vs second half
+    Halves,
+    /// component = node id mod k
+    Mod(u32),
+    /// the leading `f` fraction of ids vs the rest
+    First(f64),
+    /// the listed nodes vs everyone else
+    Nodes(Vec<usize>),
+}
+
+impl PartitionSpec {
+    /// Per-node component ids over an `n`-node universe.
+    pub fn components(&self, n: usize) -> Vec<u32> {
+        match self {
+            PartitionSpec::Halves => (0..n).map(|i| u32::from(i >= n / 2)).collect(),
+            PartitionSpec::Mod(k) => (0..n).map(|i| (i as u32) % k.max(1)).collect(),
+            PartitionSpec::First(f) => {
+                let cut = (n as f64 * f).round() as usize;
+                (0..n).map(|i| u32::from(i >= cut)).collect()
+            }
+            PartitionSpec::Nodes(ids) => {
+                let mut c = vec![0u32; n];
+                for &i in ids {
+                    if i < n {
+                        c[i] = 1;
+                    }
+                }
+                c
+            }
+        }
+    }
+
+    fn validate(&self, what: &str, n: usize) -> Result<(), ScenarioError> {
+        if let PartitionSpec::Nodes(ids) = self {
+            for &i in ids {
+                if i >= n {
+                    return Err(ScenarioError::UnknownNode {
+                        what: what.to_string(),
+                        node: i,
+                        n,
+                    });
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// An interval condition over `[from, to)` cycles.  Conditions set at
+/// `from` revert to the scenario baseline at `to` (partitions heal, forced
+/// leavers rejoin).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Phase {
+    pub name: String,
+    pub from: u64,
+    pub to: u64,
+    pub drop: Option<f64>,
+    pub delay: Option<DelaySpec>,
+    pub partition: Option<PartitionSpec>,
+    /// fraction of the current membership forced offline for the phase
+    pub leave: Option<f64>,
+}
+
+/// A one-way mutation at a single cycle boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PointEvent {
+    pub name: String,
+    pub at: u64,
+    pub action: PointAction,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum PointAction {
+    /// invert the concept: training and test labels flip sign (a second
+    /// drift flips back)
+    Drift,
+    /// flash crowd: grow membership by `Membership` (fractions are relative
+    /// to the *initial* membership)
+    Join(Membership),
+    /// force a fraction of the current membership offline permanently
+    /// (use a phase `leave` for a bounded outage)
+    Leave(f64),
+    Drop(f64),
+    Delay(DelaySpec),
+    Partition(PartitionSpec),
+    Heal,
+}
+
+/// A declarative failure/workload timeline.  See the module docs for the
+/// INI surface and [`driver::CompiledScenario`] for execution.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Scenario {
+    pub name: String,
+    /// one-line description shown by `golf scenario --list`
+    pub summary: String,
+    /// suggested run length; `golf scenario` uses it when `--cycles` is
+    /// not given (phases/events must fit the actual horizon)
+    pub cycles_hint: Option<u64>,
+    /// churn override; `None` inherits the base configuration's churn
+    pub churn: Option<ChurnSpec>,
+    /// baseline drop probability applied from cycle 0 (None = inherit)
+    pub drop: Option<f64>,
+    /// baseline delay model applied from cycle 0 (None = inherit)
+    pub delay: Option<DelaySpec>,
+    /// initial membership; `None` = every node from the start
+    pub initial: Option<Membership>,
+    pub phases: Vec<Phase>,
+    pub events: Vec<PointEvent>,
+}
+
+impl Scenario {
+    /// A do-nothing timeline (baseline run under a scenario harness).
+    pub fn empty(name: &str) -> Self {
+        Scenario {
+            name: name.to_string(),
+            summary: String::new(),
+            cycles_hint: None,
+            churn: None,
+            drop: None,
+            delay: None,
+            initial: None,
+            phases: Vec::new(),
+            events: Vec::new(),
+        }
+    }
+
+    /// Parse the `[scenario]` / `[phase.*]` / `[event.*]` sections of an
+    /// INI document (other sections, e.g. `[experiment]`, are ignored —
+    /// scenarios embed in experiment configs).
+    pub fn from_ini_doc(doc: &Document) -> Result<Self, ScenarioError> {
+        let empty = Section::new();
+        let head = doc.get("scenario").unwrap_or(&empty);
+        let mut s = Scenario::empty("unnamed");
+        for (k, v) in head {
+            let bad = || ScenarioError::BadValue {
+                section: "scenario".into(),
+                key: k.clone(),
+                value: v.clone(),
+            };
+            match k.as_str() {
+                "name" => s.name = v.clone(),
+                "summary" => s.summary = v.clone(),
+                "cycles_hint" => s.cycles_hint = Some(v.parse().map_err(|_| bad())?),
+                "churn" => s.churn = Some(parse_churn(v, k)?),
+                "drop" => s.drop = Some(parse_prob(v).ok_or_else(bad)?),
+                "delay" => s.delay = Some(parse_delay(v).ok_or_else(bad)?),
+                "initial_nodes" => s.initial = Some(parse_membership(v).ok_or_else(bad)?),
+                _ => {
+                    return Err(ScenarioError::UnknownKey {
+                        section: "scenario".into(),
+                        key: k.clone(),
+                    })
+                }
+            }
+        }
+        // HashMap iteration order is arbitrary: collect prefixed sections
+        // and sort by name so parsing (and therefore compilation, including
+        // its derived-seed draws) is deterministic.
+        let mut phase_names: Vec<&String> = doc
+            .keys()
+            .filter(|k| k.strip_prefix("phase.").is_some())
+            .collect();
+        phase_names.sort();
+        for full in phase_names {
+            let name = full.strip_prefix("phase.").unwrap().to_string();
+            s.phases.push(parse_phase(&name, full, &doc[full])?);
+        }
+        let mut event_names: Vec<&String> = doc
+            .keys()
+            .filter(|k| k.strip_prefix("event.").is_some())
+            .collect();
+        event_names.sort();
+        for full in event_names {
+            let name = full.strip_prefix("event.").unwrap().to_string();
+            s.events.push(parse_event(&name, full, &doc[full])?);
+        }
+        // deterministic timeline order: phases by (from, name), events by
+        // (at, name) — file order never matters
+        s.phases.sort_by(|a, b| (a.from, &a.name).cmp(&(b.from, &b.name)));
+        s.events.sort_by(|a, b| (a.at, &a.name).cmp(&(b.at, &b.name)));
+        Ok(s)
+    }
+
+    /// Parse a scenario from raw INI text (the standalone `.scn` format).
+    pub fn from_ini(text: &str) -> Result<Self, ScenarioError> {
+        let doc = ini::parse(text).map_err(ScenarioError::Ini)?;
+        Self::from_ini_doc(&doc)
+    }
+
+    /// Read and parse a `.scn` file (resolving any `churn = trace:FILE`
+    /// reference relative to the current directory).
+    pub fn from_file(path: &str) -> Result<Self, ScenarioError> {
+        let text = std::fs::read_to_string(path).map_err(|e| ScenarioError::Io {
+            path: path.to_string(),
+            detail: e.to_string(),
+        })?;
+        Self::from_ini(&text)
+    }
+
+    /// Resolve the initial membership against an `n`-node universe.
+    pub fn initial_nodes(&self, n: usize) -> usize {
+        self.initial.map_or(n, |m| m.resolve(n)).min(n)
+    }
+
+    /// Validate the timeline against a concrete run: `n` nodes,
+    /// `cycles`-cycle horizon.  Called by the configuration layer before a
+    /// scenario reaches a simulator or the deployment.
+    pub fn validate(&self, n: usize, cycles: u64) -> Result<(), ScenarioError> {
+        let n0 = self.initial_nodes(n);
+        if n0 < 2 {
+            return Err(ScenarioError::BadMembership {
+                what: "initial_nodes".into(),
+                detail: format!("resolves to {n0} nodes; need at least 2"),
+            });
+        }
+        // phases: ordered, non-empty, inside the horizon, pairwise disjoint
+        for p in &self.phases {
+            if p.from >= p.to {
+                return Err(ScenarioError::EmptyPhase { phase: p.name.clone() });
+            }
+            if p.to > cycles {
+                return Err(ScenarioError::PastHorizon {
+                    what: format!("phase {:?} end", p.name),
+                    at: p.to,
+                    cycles,
+                });
+            }
+            if let Some(spec) = &p.partition {
+                spec.validate(&format!("phase {:?} partition", p.name), n)?;
+            }
+        }
+        // overlap check on a sorted view (parsing sorts phases, but
+        // programmatically built scenarios need not be ordered)
+        let mut order: Vec<&Phase> = self.phases.iter().collect();
+        order.sort_by_key(|p| p.from);
+        for w in order.windows(2) {
+            if w[1].from < w[0].to {
+                return Err(ScenarioError::OverlappingPhases {
+                    a: w[0].name.clone(),
+                    b: w[1].name.clone(),
+                });
+            }
+        }
+        // events: inside the horizon, feasible membership arithmetic
+        let mut membership = n0;
+        for e in &self.events {
+            if e.at > cycles {
+                return Err(ScenarioError::PastHorizon {
+                    what: format!("event {:?}", e.name),
+                    at: e.at,
+                    cycles,
+                });
+            }
+            match &e.action {
+                PointAction::Join(m) => {
+                    let k = m.resolve(n0);
+                    if k == 0 || membership + k > n {
+                        return Err(ScenarioError::BadMembership {
+                            what: format!("event {:?} join", e.name),
+                            detail: format!(
+                                "{k} joiners on top of {membership} exceed the \
+                                 {n}-node universe (one training row per node)"
+                            ),
+                        });
+                    }
+                    membership += k;
+                }
+                PointAction::Partition(spec) => {
+                    spec.validate(&format!("event {:?} partition", e.name), n)?;
+                }
+                _ => {}
+            }
+        }
+        if let Some(ChurnSpec::Trace(entries)) = &self.churn {
+            validate_trace(entries, n)?;
+        }
+        Ok(())
+    }
+}
+
+fn validate_trace(entries: &[TraceEntry], n: usize) -> Result<(), ScenarioError> {
+    let mut per_node: std::collections::HashMap<usize, Vec<(u64, u64)>> =
+        std::collections::HashMap::new();
+    for e in entries {
+        if e.node >= n {
+            return Err(ScenarioError::UnknownNode {
+                what: "churn trace".into(),
+                node: e.node,
+                n,
+            });
+        }
+        if e.from >= e.to {
+            return Err(ScenarioError::BadTrace {
+                detail: format!("node {}: interval [{}, {}) is empty", e.node, e.from, e.to),
+            });
+        }
+        per_node.entry(e.node).or_default().push((e.from, e.to));
+    }
+    for (node, mut iv) in per_node {
+        iv.sort_unstable();
+        for w in iv.windows(2) {
+            if w[1].0 < w[0].1 {
+                return Err(ScenarioError::BadTrace {
+                    detail: format!("node {node}: overlapping intervals {w:?}"),
+                });
+            }
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// value parsers
+
+fn parse_prob(v: &str) -> Option<f64> {
+    let p: f64 = v.parse().ok()?;
+    (0.0..=1.0).contains(&p).then_some(p)
+}
+
+fn parse_delay(v: &str) -> Option<DelaySpec> {
+    let mut it = v.split(':');
+    match it.next()? {
+        "fixed" => {
+            let c: f64 = it.next()?.parse().ok()?;
+            (it.next().is_none() && c >= 0.0).then_some(DelaySpec::Fixed(c))
+        }
+        "uniform" => {
+            let lo: f64 = it.next()?.parse().ok()?;
+            let hi: f64 = it.next()?.parse().ok()?;
+            (it.next().is_none() && lo >= 0.0 && hi > lo).then_some(DelaySpec::Uniform(lo, hi))
+        }
+        _ => None,
+    }
+}
+
+/// `"0.25"` → fraction, `"64"` → absolute count (integers without a dot
+/// are counts, everything else a fraction — `join:3.0` means 3× initial).
+fn parse_membership(v: &str) -> Option<Membership> {
+    if !v.contains('.') {
+        let k: usize = v.parse().ok()?;
+        return (k > 0).then_some(Membership::Count(k));
+    }
+    let f: f64 = v.parse().ok()?;
+    (f > 0.0).then_some(Membership::Fraction(f))
+}
+
+fn parse_partition(v: &str) -> Option<PartitionSpec> {
+    match v.split_once(':') {
+        None if v == "halves" => Some(PartitionSpec::Halves),
+        Some(("mod", k)) => {
+            let k: u32 = k.parse().ok()?;
+            (k >= 2).then_some(PartitionSpec::Mod(k))
+        }
+        Some(("first", f)) => {
+            let f: f64 = f.parse().ok()?;
+            (f > 0.0 && f < 1.0).then_some(PartitionSpec::First(f))
+        }
+        Some(("nodes", ids)) => {
+            let ids: Option<Vec<usize>> =
+                ids.split(',').map(|s| s.trim().parse().ok()).collect();
+            let ids = ids?;
+            (!ids.is_empty()).then_some(PartitionSpec::Nodes(ids))
+        }
+        _ => None,
+    }
+}
+
+fn parse_fraction(v: &str) -> Option<f64> {
+    let f: f64 = v.parse().ok()?;
+    (f > 0.0 && f <= 1.0).then_some(f)
+}
+
+fn parse_churn(v: &str, key: &str) -> Result<ChurnSpec, ScenarioError> {
+    match v {
+        "none" | "off" => Ok(ChurnSpec::Off),
+        "paper" => Ok(ChurnSpec::Paper),
+        other => match other.strip_prefix("trace:") {
+            Some(path) => {
+                let text = std::fs::read_to_string(path).map_err(|e| ScenarioError::Io {
+                    path: path.to_string(),
+                    detail: e.to_string(),
+                })?;
+                Ok(ChurnSpec::Trace(parse_trace_text(&text)?))
+            }
+            None => Err(ScenarioError::BadValue {
+                section: "scenario".into(),
+                key: key.to_string(),
+                value: v.to_string(),
+            }),
+        },
+    }
+}
+
+/// Availability trace text: one `node from_cycle to_cycle` triple per line,
+/// `#`/`;` comments and blank lines allowed.
+pub fn parse_trace_text(text: &str) -> Result<Vec<TraceEntry>, ScenarioError> {
+    let mut out = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw
+            .split(|c| c == '#' || c == ';')
+            .next()
+            .unwrap_or("")
+            .trim();
+        if line.is_empty() {
+            continue;
+        }
+        let parse3 = |line: &str| -> Option<TraceEntry> {
+            let mut it = line.split_whitespace();
+            let node = it.next()?.parse().ok()?;
+            let from = it.next()?.parse().ok()?;
+            let to = it.next()?.parse().ok()?;
+            it.next().is_none().then_some(TraceEntry { node, from, to })
+        };
+        match parse3(line) {
+            Some(e) => out.push(e),
+            None => {
+                return Err(ScenarioError::BadTrace {
+                    detail: format!(
+                        "line {}: expected `node from_cycle to_cycle`, got {line:?}",
+                        lineno + 1
+                    ),
+                })
+            }
+        }
+    }
+    Ok(out)
+}
+
+fn parse_phase(name: &str, section: &str, kv: &Section) -> Result<Phase, ScenarioError> {
+    let need = |key: &str| -> Result<u64, ScenarioError> {
+        let v = kv.get(key).ok_or_else(|| ScenarioError::MissingKey {
+            section: section.to_string(),
+            key: key.to_string(),
+        })?;
+        v.parse().map_err(|_| ScenarioError::BadValue {
+            section: section.to_string(),
+            key: key.to_string(),
+            value: v.clone(),
+        })
+    };
+    let mut p = Phase {
+        name: name.to_string(),
+        from: need("from")?,
+        to: need("to")?,
+        drop: None,
+        delay: None,
+        partition: None,
+        leave: None,
+    };
+    for (k, v) in kv {
+        let bad = || ScenarioError::BadValue {
+            section: section.to_string(),
+            key: k.clone(),
+            value: v.clone(),
+        };
+        match k.as_str() {
+            "from" | "to" => {}
+            "drop" => p.drop = Some(parse_prob(v).ok_or_else(bad)?),
+            "delay" => p.delay = Some(parse_delay(v).ok_or_else(bad)?),
+            "partition" => p.partition = Some(parse_partition(v).ok_or_else(bad)?),
+            "leave" => p.leave = Some(parse_fraction(v).ok_or_else(bad)?),
+            _ => {
+                return Err(ScenarioError::UnknownKey {
+                    section: section.to_string(),
+                    key: k.clone(),
+                })
+            }
+        }
+    }
+    Ok(p)
+}
+
+fn parse_event(name: &str, section: &str, kv: &Section) -> Result<PointEvent, ScenarioError> {
+    let at_v = kv.get("at").ok_or_else(|| ScenarioError::MissingKey {
+        section: section.to_string(),
+        key: "at".into(),
+    })?;
+    let at: u64 = at_v.parse().map_err(|_| ScenarioError::BadValue {
+        section: section.to_string(),
+        key: "at".into(),
+        value: at_v.clone(),
+    })?;
+    let action_v = kv.get("action").ok_or_else(|| ScenarioError::MissingKey {
+        section: section.to_string(),
+        key: "action".into(),
+    })?;
+    for k in kv.keys() {
+        if k != "at" && k != "action" {
+            return Err(ScenarioError::UnknownKey {
+                section: section.to_string(),
+                key: k.clone(),
+            });
+        }
+    }
+    let bad = || ScenarioError::BadValue {
+        section: section.to_string(),
+        key: "action".into(),
+        value: action_v.clone(),
+    };
+    let action = match action_v.split_once(':') {
+        None if action_v == "drift" => PointAction::Drift,
+        None if action_v == "heal" => PointAction::Heal,
+        Some(("join", m)) => PointAction::Join(parse_membership(m).ok_or_else(bad)?),
+        Some(("leave", f)) => PointAction::Leave(parse_fraction(f).ok_or_else(bad)?),
+        Some(("drop", p)) => PointAction::Drop(parse_prob(p).ok_or_else(bad)?),
+        Some(("delay", d)) => PointAction::Delay(parse_delay(d).ok_or_else(bad)?),
+        Some(("partition", s)) => PointAction::Partition(parse_partition(s).ok_or_else(bad)?),
+        _ => return Err(bad()),
+    };
+    Ok(PointEvent { name: name.to_string(), at, action })
+}
+
+// ---------------------------------------------------------------------------
+// built-in library
+
+/// Names of the built-in scenario library, in display order.
+pub fn builtin_names() -> &'static [&'static str] {
+    &[
+        "paper-fig3",
+        "partition-heal",
+        "flash-crowd",
+        "trace-replay",
+        "drift",
+        "delay-spike",
+    ]
+}
+
+/// Look up a built-in scenario by name.
+pub fn builtin(name: &str) -> Result<Scenario, ScenarioError> {
+    let mut s = Scenario::empty(name);
+    match name {
+        // The paper's Section VI-A(i) "all failures" setup as a constant
+        // timeline: reproduces `with_extreme_failures()` bit-for-bit.
+        "paper-fig3" => {
+            s.summary = "paper Fig. 3 extreme failures: 50% drop, [Δ,10Δ] delay, churn".into();
+            s.cycles_hint = Some(200);
+            s.churn = Some(ChurnSpec::Paper);
+            s.drop = Some(0.5);
+            s.delay = Some(DelaySpec::Uniform(1.0, 10.0));
+        }
+        "partition-heal" => {
+            s.summary = "network splits into halves at cycle 40, heals at cycle 120".into();
+            s.cycles_hint = Some(200);
+            s.phases.push(Phase {
+                name: "split".into(),
+                from: 40,
+                to: 120,
+                drop: None,
+                delay: None,
+                partition: Some(PartitionSpec::Halves),
+                leave: None,
+            });
+        }
+        "flash-crowd" => {
+            s.summary = "start at 25% membership, 4x flash-crowd join at cycle 100".into();
+            s.cycles_hint = Some(300);
+            s.initial = Some(Membership::Fraction(0.25));
+            s.events.push(PointEvent {
+                name: "crowd".into(),
+                at: 100,
+                action: PointAction::Join(Membership::Fraction(3.0)),
+            });
+        }
+        // Deterministic staggered availability windows over the first 16
+        // nodes (everyone else stays online): the replayed-trace churn
+        // path without an external file.  Needs a >=16-node run.
+        "trace-replay" => {
+            s.summary = "replay a staggered 16-node availability trace as churn".into();
+            s.cycles_hint = Some(200);
+            let mut entries = Vec::new();
+            for i in 0..16u64 {
+                entries.push(TraceEntry {
+                    node: i as usize,
+                    from: 0,
+                    to: 40 + 5 * i,
+                });
+                entries.push(TraceEntry {
+                    node: i as usize,
+                    from: 100 + 3 * i,
+                    to: 200,
+                });
+            }
+            s.churn = Some(ChurnSpec::Trace(entries));
+        }
+        "drift" => {
+            s.summary = "concept inverts at cycle 100: labels flip, models re-learn".into();
+            s.cycles_hint = Some(300);
+            s.events.push(PointEvent {
+                name: "invert".into(),
+                at: 100,
+                action: PointAction::Drift,
+            });
+        }
+        "delay-spike" => {
+            s.summary = "delay spikes to uniform [5Δ, 20Δ] during cycles 60..120".into();
+            s.cycles_hint = Some(200);
+            s.phases.push(Phase {
+                name: "spike".into(),
+                from: 60,
+                to: 120,
+                drop: None,
+                delay: Some(DelaySpec::Uniform(5.0, 20.0)),
+                partition: None,
+                leave: None,
+            });
+        }
+        other => {
+            return Err(ScenarioError::UnknownBuiltin { name: other.to_string() })
+        }
+    }
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_library_is_complete_and_valid() {
+        assert!(builtin_names().len() >= 6);
+        for &name in builtin_names() {
+            let s = builtin(name).unwrap();
+            assert_eq!(s.name, name);
+            assert!(!s.summary.is_empty(), "{name} needs a summary");
+            let cycles = s.cycles_hint.expect("built-ins carry a cycles hint");
+            s.validate(100, cycles).unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+        assert!(matches!(
+            builtin("bogus"),
+            Err(ScenarioError::UnknownBuiltin { .. })
+        ));
+    }
+
+    #[test]
+    fn ini_roundtrip_full_surface() {
+        let text = "
+[scenario]
+name = storm
+summary = a bit of everything
+cycles_hint = 200
+churn = paper
+drop = 0.1
+delay = fixed:0.01
+initial_nodes = 0.5
+
+[phase.split]
+from = 20
+to = 60
+partition = halves
+
+[phase.storm]
+from = 80
+to = 120
+drop = 0.8
+delay = uniform:1.0:10.0
+leave = 0.25
+
+[event.crowd]
+at = 150
+action = join:1.0
+
+[event.invert]
+at = 160
+action = drift
+";
+        let s = Scenario::from_ini(text).unwrap();
+        assert_eq!(s.name, "storm");
+        assert_eq!(s.cycles_hint, Some(200));
+        assert_eq!(s.churn, Some(ChurnSpec::Paper));
+        assert_eq!(s.drop, Some(0.1));
+        assert_eq!(s.delay, Some(DelaySpec::Fixed(0.01)));
+        assert_eq!(s.initial, Some(Membership::Fraction(0.5)));
+        assert_eq!(s.phases.len(), 2);
+        assert_eq!(s.phases[0].name, "split"); // sorted by from
+        assert_eq!(s.phases[1].drop, Some(0.8));
+        assert_eq!(s.phases[1].leave, Some(0.25));
+        assert_eq!(s.events.len(), 2);
+        assert_eq!(s.events[0].action, PointAction::Join(Membership::Fraction(1.0)));
+        assert_eq!(s.events[1].action, PointAction::Drift);
+        s.validate(100, 200).unwrap();
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_bad_values() {
+        let e = Scenario::from_ini("[scenario]\nbogus = 1").unwrap_err();
+        assert!(matches!(e, ScenarioError::UnknownKey { .. }), "{e}");
+        let e = Scenario::from_ini("[scenario]\ndrop = 1.5").unwrap_err();
+        assert!(matches!(e, ScenarioError::BadValue { .. }), "{e}");
+        let e = Scenario::from_ini("[scenario]\ndelay = uniform:5.0:2.0").unwrap_err();
+        assert!(matches!(e, ScenarioError::BadValue { .. }), "{e}");
+        let e = Scenario::from_ini("[phase.x]\nfrom = 1").unwrap_err();
+        assert!(matches!(e, ScenarioError::MissingKey { .. }), "{e}");
+        let e = Scenario::from_ini("[event.x]\nat = 1\naction = warp:9").unwrap_err();
+        assert!(matches!(e, ScenarioError::BadValue { .. }), "{e}");
+        let e = Scenario::from_ini("[event.x]\nat = 1\naction = drift\nextra = 1").unwrap_err();
+        assert!(matches!(e, ScenarioError::UnknownKey { .. }), "{e}");
+    }
+
+    #[test]
+    fn validation_rejects_empty_and_overlapping_phases() {
+        let s = Scenario::from_ini("[phase.a]\nfrom = 10\nto = 10").unwrap();
+        assert!(matches!(
+            s.validate(50, 100),
+            Err(ScenarioError::EmptyPhase { .. })
+        ));
+        let s = Scenario::from_ini(
+            "[phase.a]\nfrom = 10\nto = 30\ndrop = 0.5\n[phase.b]\nfrom = 20\nto = 40\ndrop = 0.1",
+        )
+        .unwrap();
+        assert!(matches!(
+            s.validate(50, 100),
+            Err(ScenarioError::OverlappingPhases { .. })
+        ));
+        // touching phases are fine
+        let s = Scenario::from_ini(
+            "[phase.a]\nfrom = 10\nto = 20\ndrop = 0.5\n[phase.b]\nfrom = 20\nto = 40\ndrop = 0.1",
+        )
+        .unwrap();
+        s.validate(50, 100).unwrap();
+    }
+
+    #[test]
+    fn validation_rejects_past_horizon() {
+        let s = Scenario::from_ini("[phase.a]\nfrom = 10\nto = 120\ndrop = 0.5").unwrap();
+        assert!(matches!(
+            s.validate(50, 100),
+            Err(ScenarioError::PastHorizon { .. })
+        ));
+        let s = Scenario::from_ini("[event.late]\nat = 101\naction = drift").unwrap();
+        assert!(matches!(
+            s.validate(50, 100),
+            Err(ScenarioError::PastHorizon { .. })
+        ));
+        s.validate(50, 101).unwrap();
+    }
+
+    #[test]
+    fn validation_rejects_unknown_partition_nodes() {
+        let s =
+            Scenario::from_ini("[phase.p]\nfrom = 1\nto = 5\npartition = nodes:1,2,99").unwrap();
+        let e = s.validate(50, 100).unwrap_err();
+        assert_eq!(
+            e,
+            ScenarioError::UnknownNode {
+                what: "phase \"p\" partition".into(),
+                node: 99,
+                n: 50
+            }
+        );
+        // the same list is fine on a big enough run
+        s.validate(100, 100).unwrap();
+    }
+
+    #[test]
+    fn validation_rejects_infeasible_membership() {
+        // joins beyond the universe (one training row per node)
+        let s = Scenario::from_ini(
+            "[scenario]\ninitial_nodes = 0.5\n[event.j]\nat = 10\naction = join:2.0",
+        )
+        .unwrap();
+        assert!(matches!(
+            s.validate(100, 50),
+            Err(ScenarioError::BadMembership { .. })
+        ));
+        // 0.5 + 0.5x joins fits
+        let s = Scenario::from_ini(
+            "[scenario]\ninitial_nodes = 0.5\n[event.j]\nat = 10\naction = join:1.0",
+        )
+        .unwrap();
+        s.validate(100, 50).unwrap();
+        // initial membership below 2
+        let s = Scenario::from_ini("[scenario]\ninitial_nodes = 1").unwrap();
+        assert!(matches!(
+            s.validate(100, 50),
+            Err(ScenarioError::BadMembership { .. })
+        ));
+    }
+
+    #[test]
+    fn trace_text_parses_and_validates() {
+        let entries = parse_trace_text("# trace\n0 0 10\n1 5 20 ; tail\n\n0 15 30\n").unwrap();
+        assert_eq!(entries.len(), 3);
+        assert_eq!(entries[0], TraceEntry { node: 0, from: 0, to: 10 });
+        validate_trace(&entries, 10).unwrap();
+        // unknown node id
+        let e = validate_trace(&entries, 1).unwrap_err();
+        assert!(matches!(e, ScenarioError::UnknownNode { .. }), "{e}");
+        // overlapping intervals for one node
+        let bad = parse_trace_text("0 0 10\n0 5 15").unwrap();
+        assert!(matches!(
+            validate_trace(&bad, 10),
+            Err(ScenarioError::BadTrace { .. })
+        ));
+        // malformed line
+        assert!(matches!(
+            parse_trace_text("0 1"),
+            Err(ScenarioError::BadTrace { .. })
+        ));
+        // empty interval
+        assert!(matches!(
+            validate_trace(&parse_trace_text("0 5 5").unwrap(), 10),
+            Err(ScenarioError::BadTrace { .. })
+        ));
+    }
+
+    #[test]
+    fn partition_components_cover_every_spec() {
+        assert_eq!(PartitionSpec::Halves.components(4), vec![0, 0, 1, 1]);
+        assert_eq!(PartitionSpec::Mod(3).components(5), vec![0, 1, 2, 0, 1]);
+        assert_eq!(PartitionSpec::First(0.25).components(4), vec![0, 1, 1, 1]);
+        assert_eq!(
+            PartitionSpec::Nodes(vec![0, 3]).components(4),
+            vec![1, 0, 0, 1]
+        );
+    }
+
+    #[test]
+    fn membership_and_delay_resolution() {
+        assert_eq!(Membership::Fraction(0.25).resolve(100), 25);
+        assert_eq!(Membership::Count(64).resolve(100), 64);
+        use crate::sim::network::DelayModel;
+        assert_eq!(DelaySpec::Fixed(0.01).to_model(1000), DelayModel::Fixed(10));
+        assert_eq!(
+            DelaySpec::Uniform(1.0, 10.0).to_model(1000),
+            DelayModel::Uniform { lo: 1000, hi: 10_000 }
+        );
+    }
+}

@@ -11,6 +11,25 @@
 use crate::sim::event::{NodeId, Ticks};
 use crate::util::rng::Rng;
 
+/// Upper bound on a single drawn online/offline interval, in ticks
+/// (2^40 ticks ≈ 349 years at Δ = 1000 ticks = 10 s).  Lognormal draws have
+/// unbounded support: an extreme sigma produces values that overflow `f64 →
+/// u64` casts (`exp(…) = inf` saturates to `u64::MAX`) and then overflow
+/// the `t + len` interval arithmetic in [`ChurnSchedule::generate`].  Every
+/// draw is clamped here instead — far beyond any plausible horizon, so the
+/// clamp never distorts a realistic schedule.
+pub const MAX_SESSION_TICKS: Ticks = 1 << 40;
+
+/// Clamp a lognormal draw into `[1, MAX_SESSION_TICKS]` ticks, mapping
+/// non-finite values (overflowed `exp`) to the cap.
+fn clamp_session(x: f64) -> Ticks {
+    if x.is_finite() {
+        x.clamp(1.0, MAX_SESSION_TICKS as f64) as Ticks
+    } else {
+        MAX_SESSION_TICKS
+    }
+}
+
 #[derive(Clone, Copy, Debug)]
 pub struct ChurnConfig {
     /// lognormal mu of the online-session length (ln ticks)
@@ -32,13 +51,13 @@ impl ChurnConfig {
     }
 
     fn draw_online(&self, rng: &mut Rng) -> Ticks {
-        rng.lognormal(self.mu, self.sigma).max(1.0) as Ticks
+        clamp_session(rng.lognormal(self.mu, self.sigma))
     }
 
     fn draw_offline(&self, rng: &mut Rng) -> Ticks {
         // E[offline] = E[online] * (1-f)/f gives the target online fraction.
         let scale = (1.0 - self.online_fraction) / self.online_fraction;
-        (rng.lognormal(self.mu, self.sigma) * scale).max(1.0) as Ticks
+        clamp_session(rng.lognormal(self.mu, self.sigma) * scale)
     }
 }
 
@@ -80,14 +99,25 @@ impl ChurnSchedule {
             while t < horizon {
                 if online {
                     let len = cfg.draw_online(rng);
-                    node_iv.push((t, (t + len).min(horizon)));
-                    t += len;
+                    node_iv.push((t, t.saturating_add(len).min(horizon)));
+                    t = t.saturating_add(len);
                 } else {
-                    t += cfg.draw_offline(rng);
+                    t = t.saturating_add(cfg.draw_offline(rng));
                 }
                 online = !online;
             }
         }
+        ChurnSchedule { intervals, horizon }
+    }
+
+    /// Build a schedule from explicit per-node online intervals (scenario
+    /// trace replay; `crate::scenario::driver::trace_schedule`).  Intervals
+    /// must be sorted and pairwise disjoint per node — the scenario layer
+    /// validates this before compiling.
+    pub fn from_intervals(intervals: Vec<Vec<(Ticks, Ticks)>>, horizon: Ticks) -> Self {
+        debug_assert!(intervals.iter().all(|iv| {
+            iv.windows(2).all(|w| w[0].1 <= w[1].0) && iv.iter().all(|&(s, e)| s < e)
+        }));
         ChurnSchedule { intervals, horizon }
     }
 
@@ -229,6 +259,49 @@ mod tests {
         let f = online_time as f64 / (window as f64 * n as f64);
         assert!(f > 0.86, "early-window online fraction {f}");
         assert!(f < 0.95, "early-window online fraction {f}");
+    }
+
+    /// Regression: a pathological sigma used to saturate the `f64 → u64`
+    /// cast (`exp(…) = inf` → `u64::MAX`) and then overflow the interval
+    /// arithmetic.  Draws now clamp to `MAX_SESSION_TICKS` and the schedule
+    /// stays well-formed.
+    #[test]
+    fn pathological_sigma_clamps_instead_of_overflowing() {
+        let cfg = ChurnConfig { mu: 10.0, sigma: 500.0, online_fraction: 0.9 };
+        let mut rng = Rng::new(21);
+        let horizon = 1_000_000;
+        let sched = ChurnSchedule::generate(&cfg, 200, horizon, &mut rng);
+        for iv in &sched.intervals {
+            for &(s, e) in iv {
+                assert!(s < e, "empty/inverted interval ({s}, {e})");
+                assert!(e <= horizon);
+            }
+            for w in iv.windows(2) {
+                assert!(w[0].1 <= w[1].0, "overlap {w:?}");
+            }
+        }
+        // the clamp itself: direct draws never exceed the cap
+        for _ in 0..1000 {
+            assert!(cfg.draw_online(&mut rng) <= MAX_SESSION_TICKS);
+            assert!(cfg.draw_offline(&mut rng) >= 1);
+        }
+    }
+
+    #[test]
+    fn from_intervals_replays_exactly() {
+        let sched = ChurnSchedule::from_intervals(
+            vec![vec![(0, 10), (20, 30)], vec![(5, 40)]],
+            40,
+        );
+        assert!(sched.is_online(0, 0));
+        assert!(!sched.is_online(0, 15));
+        assert!(sched.is_online(0, 25));
+        assert!(!sched.is_online(1, 0));
+        assert!(sched.is_online(1, 39));
+        let ev = sched.events();
+        // node 0: leave@10, join@20, leave@30; node 1: join@5 (end at
+        // horizon emits no event)
+        assert_eq!(ev.len(), 4);
     }
 
     #[test]

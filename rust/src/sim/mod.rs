@@ -6,4 +6,4 @@ pub mod network;
 
 pub use churn::{ChurnConfig, ChurnSchedule};
 pub use event::{Event, EventQueue, NodeId, Ticks};
-pub use network::{DelayModel, Network, NetworkConfig};
+pub use network::{DelayModel, Fate, Network, NetworkConfig};

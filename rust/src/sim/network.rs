@@ -55,29 +55,90 @@ impl NetworkConfig {
     }
 }
 
+/// What the network decided for one transmitted message.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fate {
+    /// delivered after this many ticks
+    Deliver(Ticks),
+    /// lost to the random drop model
+    Dropped,
+    /// blocked by an active partition (src and dst in different components)
+    Blocked,
+}
+
 /// Network instance: decides per-message fate and counts outcomes.
+///
+/// Partitions (scenario engine, DESIGN.md §11) are a per-node component-id
+/// map installed via [`Network::set_partition`]: a send whose endpoints sit
+/// in different components is blocked **at send time**, before the drop
+/// roll, consuming no RNG draws — so a partition-free run is bit-for-bit
+/// identical to one where partitions were never configured.  Messages
+/// already in flight when a partition starts (or heals) keep their decided
+/// fate: fate is sealed at send, which keeps the
+/// `sent = dropped + blocked + lost_offline + delivered + in_flight`
+/// accounting exact across partition/heal transitions.
 #[derive(Debug)]
 pub struct Network {
     pub cfg: NetworkConfig,
+    /// active partition: component id per node (None = fully connected)
+    partition: Option<Vec<u32>>,
     pub sent: u64,
     pub dropped: u64,
+    /// sends blocked by an active partition
+    pub blocked: u64,
     pub lost_offline: u64,
     delivered: u64,
 }
 
 impl Network {
     pub fn new(cfg: NetworkConfig) -> Self {
-        Network { cfg, sent: 0, dropped: 0, lost_offline: 0, delivered: 0 }
+        Network {
+            cfg,
+            partition: None,
+            sent: 0,
+            dropped: 0,
+            blocked: 0,
+            lost_offline: 0,
+            delivered: 0,
+        }
     }
 
-    /// Returns `Some(delivery_delay)` or `None` if the message is dropped.
-    pub fn transmit(&mut self, rng: &mut Rng) -> Option<Ticks> {
+    /// Install (or heal, with `None`) a partition: component id per node.
+    pub fn set_partition(&mut self, components: Option<Vec<u32>>) {
+        self.partition = components;
+    }
+
+    pub fn partitioned(&self) -> bool {
+        self.partition.is_some()
+    }
+
+    /// Decide the fate of a message from `src` to `dst`.  Partition checks
+    /// precede (and draw nothing from) the RNG-based drop/delay models.
+    pub fn transmit_between(&mut self, src: usize, dst: usize, rng: &mut Rng) -> Fate {
         self.sent += 1;
+        if let Some(p) = &self.partition {
+            // nodes beyond the compiled universe default to component 0
+            let cs = p.get(src).copied().unwrap_or(0);
+            let cd = p.get(dst).copied().unwrap_or(0);
+            if cs != cd {
+                self.blocked += 1;
+                return Fate::Blocked;
+            }
+        }
         if self.cfg.drop_prob > 0.0 && rng.chance(self.cfg.drop_prob) {
             self.dropped += 1;
-            None
+            Fate::Dropped
         } else {
-            Some(self.cfg.delay.sample(rng))
+            Fate::Deliver(self.cfg.delay.sample(rng))
+        }
+    }
+
+    /// Returns `Some(delivery_delay)` or `None` if the message is dropped
+    /// (partition-unaware legacy surface; see [`Network::transmit_between`]).
+    pub fn transmit(&mut self, rng: &mut Rng) -> Option<Ticks> {
+        match self.transmit_between(0, 0, rng) {
+            Fate::Deliver(d) => Some(d),
+            _ => None,
         }
     }
 
@@ -97,9 +158,10 @@ impl Network {
         self.delivered
     }
 
-    /// Messages sent but neither dropped, lost to churn, nor delivered yet.
+    /// Messages sent but neither dropped, blocked, lost to churn, nor
+    /// delivered yet.
     pub fn in_flight(&self) -> u64 {
-        self.sent - self.dropped - self.lost_offline - self.delivered
+        self.sent - self.dropped - self.blocked - self.lost_offline - self.delivered
     }
 }
 
@@ -154,6 +216,54 @@ mod tests {
         net.transmit(&mut rng);
         net.note_lost_offline();
         assert_eq!(net.delivered(), 0);
+        assert_eq!(net.in_flight(), 0);
+    }
+
+    /// Partitions block cross-component sends without consuming RNG draws,
+    /// so the surviving stream is bit-for-bit what an unpartitioned network
+    /// would have produced for the same-component sends.
+    #[test]
+    fn partition_blocks_cross_component_without_rng_draws() {
+        let mut a = Network::new(NetworkConfig::extreme(1000));
+        let mut b = Network::new(NetworkConfig::extreme(1000));
+        b.set_partition(Some(vec![0, 0, 1, 1]));
+        assert!(b.partitioned());
+        let mut ra = Rng::new(8);
+        let mut rb = Rng::new(8);
+        let pairs = [(0, 1), (0, 2), (2, 3), (3, 1), (1, 0)];
+        for &(s, d) in &pairs {
+            let fb = b.transmit_between(s, d, &mut rb);
+            if s / 2 != d / 2 {
+                assert_eq!(fb, Fate::Blocked);
+            } else {
+                // same-component fate matches the unpartitioned network's
+                // stream exactly: blocks drew nothing
+                assert_eq!(fb, a.transmit_between(s, d, &mut ra));
+            }
+        }
+        assert_eq!(b.blocked, 2);
+        assert_eq!(b.sent, pairs.len() as u64);
+        // heal: everything flows again
+        b.set_partition(None);
+        assert!(!b.partitioned());
+        assert_ne!(b.transmit_between(0, 3, &mut rb), Fate::Blocked);
+        // ids beyond the component map default to component 0
+        b.set_partition(Some(vec![1]));
+        assert_eq!(b.transmit_between(0, 7, &mut rb), Fate::Blocked);
+        assert_ne!(b.transmit_between(7, 9, &mut rb), Fate::Blocked);
+    }
+
+    /// Accounting stays exact when partitions block sends.
+    #[test]
+    fn partition_blocked_accounting() {
+        let mut net = Network::new(NetworkConfig::reliable());
+        net.set_partition(Some(vec![0, 1]));
+        let mut rng = Rng::new(10);
+        assert_eq!(net.transmit_between(0, 1, &mut rng), Fate::Blocked);
+        assert_eq!(net.transmit_between(0, 0, &mut rng), Fate::Deliver(10));
+        net.note_delivered();
+        assert_eq!(net.blocked, 1);
+        assert_eq!(net.delivered(), 1);
         assert_eq!(net.in_flight(), 0);
     }
 

@@ -71,6 +71,65 @@ fn deploy_parity_with_matched_simulator() {
     );
 }
 
+/// Scenario parity (DESIGN.md §11): one partition-heal timeline drives a
+/// 64-node socket deployment and a matched `GossipSim` run from the same
+/// definition; the curves share their grid, the partition blocks real
+/// traffic in both, and final errors agree within the PR 3 tolerance.
+#[test]
+fn deploy_partition_heal_scenario_parity_with_sim() {
+    use golf::scenario::{PartitionSpec, Phase, Scenario};
+    let _g = serial();
+    let ds = urls_like(7, Scale(0.0064)); // 64 training rows -> 64 nodes
+    let mut scn = Scenario::empty("partition-heal-small");
+    scn.phases.push(Phase {
+        name: "split".into(),
+        from: 8,
+        to: 22,
+        drop: None,
+        delay: None,
+        partition: Some(PartitionSpec::Halves),
+        leave: None,
+    });
+    scn.validate(ds.n_train(), 40).unwrap();
+    let cfg = DeployConfig {
+        n_nodes: ds.n_train(),
+        delta: Duration::from_millis(40),
+        cycles: 40,
+        sampler: SamplerConfig::Newscast { view_size: 20 },
+        eval_peers: 20,
+        seed: 13,
+        scenario: Some(scn),
+        ..Default::default()
+    };
+
+    let report = run_deployment(&cfg, &ds).expect("deployment failed");
+    let sim = run(matched_sim_config(&cfg), &ds);
+
+    // one shared definition: the simulator's compiled timeline blocked
+    // messages and so did the real sockets
+    assert!(sim.stats.messages_blocked > 0, "sim partition must engage");
+    assert!(
+        report.stats.partition_blocked > 0,
+        "deployment partition must engage"
+    );
+
+    // same measurement grid
+    let deploy_cycles: Vec<u64> = report.curve.points.iter().map(|p| p.cycle).collect();
+    let sim_cycles: Vec<u64> = sim.curve.points.iter().map(|p| p.cycle).collect();
+    assert_eq!(deploy_cycles, sim_cycles, "curves must share the cycle grid");
+
+    // both converge after the heal, and land within the parity tolerance
+    let first = report.curve.points.first().unwrap().err_mean;
+    let last = report.curve.final_error();
+    assert!(last < first - 0.05, "deployment must converge: {first} -> {last}");
+    let gap = (last - sim.curve.final_error()).abs();
+    assert!(
+        gap < 0.15,
+        "deploy {last:.4} vs sim {:.4}: gap {gap:.4} out of tolerance",
+        sim.curve.final_error()
+    );
+}
+
 /// Smoke test under the full Section VI-A(i) failure set: 64 nodes with
 /// 50% drop, [Δ,10Δ] delay, and churn, all injected on the wall clock.
 #[test]

@@ -137,6 +137,7 @@ fn assert_runs_identical(a: &RunResult, b: &RunResult, what: &str) {
     }
     assert_eq!(a.stats.messages_sent, b.stats.messages_sent, "{what}");
     assert_eq!(a.stats.messages_dropped, b.stats.messages_dropped, "{what}");
+    assert_eq!(a.stats.messages_blocked, b.stats.messages_blocked, "{what}");
     assert_eq!(a.stats.messages_lost_offline, b.stats.messages_lost_offline, "{what}");
     assert_eq!(a.stats.messages_delivered, b.stats.messages_delivered, "{what}");
     assert_eq!(a.stats.updates_applied, b.stats.updates_applied, "{what}");
@@ -194,6 +195,50 @@ fn event_microbatch_bitwise_equals_scalar_all_datasets() {
     }
 }
 
+/// Scenario timelines (DESIGN.md §11) mutate network/liveness/labels at
+/// tick boundaries with pending micro-batches flushed first, so a scripted
+/// drift + partition + leave run must stay bit-for-bit identical between
+/// scalar and micro-batched stepping — for every CREATEMODEL variant.
+#[test]
+fn scenario_timeline_scalar_equals_microbatch_all_variants() {
+    use golf::scenario::{
+        DelaySpec, PartitionSpec, Phase, PointAction, PointEvent, Scenario,
+    };
+    let ds = urls_like(65, Scale(0.02));
+    let mut scn = Scenario::empty("parity-timeline");
+    scn.drop = Some(0.2);
+    scn.phases.push(Phase {
+        name: "split".into(),
+        from: 5,
+        to: 14,
+        drop: None,
+        delay: Some(DelaySpec::Uniform(0.5, 3.0)),
+        partition: Some(PartitionSpec::Halves),
+        leave: Some(0.2),
+    });
+    scn.events.push(PointEvent {
+        name: "invert".into(),
+        at: 18,
+        action: PointAction::Drift,
+    });
+    scn.validate(ds.n_train(), 30).unwrap();
+    for variant in [Variant::Rw, Variant::Mu, Variant::Um] {
+        let mut cfg = ProtocolConfig::paper_default(30);
+        cfg.variant = variant;
+        cfg.eval.n_peers = 12;
+        cfg.seed = 65;
+        cfg.scenario = Some(scn.clone());
+        let mut scalar_cfg = cfg.clone();
+        scalar_cfg.exec = ExecMode::Scalar;
+        let mut micro_cfg = cfg;
+        micro_cfg.exec = ExecMode::MicroBatch { coalesce: 0 };
+        let a = run(scalar_cfg, &ds);
+        let b = run(micro_cfg, &ds);
+        assert!(a.stats.messages_blocked > 0, "{variant:?}: partition must engage");
+        assert_runs_identical(&a, &b, &format!("scenario scalar vs microbatch {variant:?}"));
+    }
+}
+
 /// Window coalescing quantizes delivery times (a bounded, documented timing
 /// approximation) — convergence must stay in the same regime as window 0.
 #[test]
@@ -225,7 +270,7 @@ fn sweep_parallel_bitwise_equals_serial() {
         cfg.replicates = 2;
         cfg.eval_peers = 10;
         cfg.threads = threads;
-        sweep::run_grid(&cfg)
+        sweep::run_grid(&cfg).unwrap()
     };
     let serial = mk(1);
     let parallel = mk(4);

@@ -1,0 +1,370 @@
+//! Scenario-engine integration tests (DESIGN.md §11): the declarative
+//! timelines must drive the event-driven simulator and the cycle-synchronous
+//! batched engine from one shared definition, the `paper-fig3` built-in must
+//! reproduce the hand-wired extreme-failure configuration bit-for-bit, and
+//! scenario sweep grids must be thread-count independent.
+
+use golf::data::synthetic::{urls_like, Scale};
+use golf::engine::batched::run_batched;
+use golf::engine::native::NativeBackend;
+use golf::experiments::sweep;
+use golf::gossip::create_model::Variant;
+use golf::gossip::protocol::{run, ExecMode, ProtocolConfig, RunResult};
+use golf::scenario::{
+    builtin, ChurnSpec, DelaySpec, Membership, PartitionSpec, Phase, PointAction, PointEvent,
+    Scenario, TraceEntry,
+};
+
+fn assert_runs_identical(a: &RunResult, b: &RunResult, what: &str) {
+    assert_eq!(a.curve.points.len(), b.curve.points.len(), "{what}: point counts");
+    for (pa, pb) in a.curve.points.iter().zip(&b.curve.points) {
+        assert_eq!(pa.cycle, pb.cycle, "{what}");
+        assert_eq!(pa.err_mean, pb.err_mean, "{what} @ cycle {}", pa.cycle);
+        assert_eq!(pa.err_std, pb.err_std, "{what} @ cycle {}", pa.cycle);
+        assert_eq!(pa.messages_sent, pb.messages_sent, "{what} @ cycle {}", pa.cycle);
+    }
+    assert_eq!(a.stats.messages_sent, b.stats.messages_sent, "{what}");
+    assert_eq!(a.stats.messages_dropped, b.stats.messages_dropped, "{what}");
+    assert_eq!(a.stats.messages_blocked, b.stats.messages_blocked, "{what}");
+    assert_eq!(a.stats.messages_lost_offline, b.stats.messages_lost_offline, "{what}");
+    assert_eq!(a.stats.messages_delivered, b.stats.messages_delivered, "{what}");
+    assert_eq!(a.stats.updates_applied, b.stats.updates_applied, "{what}");
+}
+
+/// Acceptance: the `paper-fig3` built-in reproduces the hand-wired
+/// `with_extreme_failures()` run bit-for-bit — same churn schedule, same
+/// drop/delay draws, same curve — in scalar mode and micro-batched mode.
+#[test]
+fn paper_fig3_scenario_bitwise_matches_extreme_failures() {
+    let ds = urls_like(31, Scale(0.02));
+    for exec in [ExecMode::Scalar, ExecMode::MicroBatch { coalesce: 0 }] {
+        let mut base = ProtocolConfig::paper_default(40).with_extreme_failures();
+        base.eval.n_peers = 15;
+        base.seed = 31;
+        base.exec = exec;
+        let mut scripted = ProtocolConfig::paper_default(40);
+        scripted.eval.n_peers = 15;
+        scripted.seed = 31;
+        scripted.exec = exec;
+        scripted.scenario = Some(builtin("paper-fig3").unwrap());
+        let a = run(base, &ds);
+        let b = run(scripted, &ds);
+        assert!(b.stats.messages_dropped > 0, "the scripted drop model must engage");
+        assert_runs_identical(&a, &b, &format!("fig3 vs scenario ({})", exec.name()));
+    }
+}
+
+/// A partition blocks cross-component gossip; after healing the network
+/// converges again.  Same definition through both execution engines.
+#[test]
+fn partition_heal_blocks_then_reconverges() {
+    let ds = urls_like(32, Scale(0.005)); // 50 nodes
+    let scn = builtin("partition-heal").unwrap();
+    let cycles = scn.cycles_hint.unwrap();
+    let mut cfg = ProtocolConfig::paper_default(cycles);
+    cfg.eval.n_peers = 15;
+    cfg.seed = 32;
+    cfg.scenario = Some(scn.clone());
+    let res = run(cfg.clone(), &ds);
+    assert!(res.stats.messages_blocked > 0, "the split must block messages");
+    // accounting stays exact under block/heal transitions
+    assert!(
+        res.stats.messages_delivered
+            + res.stats.messages_dropped
+            + res.stats.messages_blocked
+            + res.stats.messages_lost_offline
+            <= res.stats.messages_sent
+    );
+    let first = res.curve.points.first().unwrap().err_mean;
+    let last = res.curve.final_error();
+    assert!(last < first && last < 0.25, "post-heal convergence: {first} -> {last}");
+    // the same scenario drives the cycle-synchronous engine
+    let mut be = NativeBackend::new();
+    let batched = run_batched(cfg, &ds, &mut be).unwrap();
+    assert!(batched.stats.messages_blocked > 0);
+    assert!(batched.curve.final_error() < first);
+}
+
+/// Concept drift re-labels the stream: the error measured against the
+/// current concept spikes at the drift and then recovers as models re-learn.
+#[test]
+fn drift_spikes_error_then_recovers() {
+    let ds = urls_like(33, Scale(0.005));
+    let mut scn = Scenario::empty("drift-test");
+    scn.events.push(PointEvent {
+        name: "invert".into(),
+        at: 30,
+        action: PointAction::Drift,
+    });
+    let mut cfg = ProtocolConfig::paper_default(90);
+    cfg.eval.n_peers = 15;
+    cfg.seed = 33;
+    cfg.eval.at_cycles = (1..=90).step_by(3).collect();
+    cfg.scenario = Some(scn);
+    let res = run(cfg, &ds);
+    let err_at = |c: u64| {
+        res.curve
+            .points
+            .iter()
+            .find(|p| p.cycle == c)
+            .unwrap_or_else(|| panic!("no point at cycle {c}"))
+            .err_mean
+    };
+    let before = err_at(28);
+    let after = err_at(34);
+    let final_err = res.curve.final_error();
+    assert!(
+        after > before + 0.2,
+        "drift must spike the error: {before} -> {after}"
+    );
+    assert!(
+        final_err < after - 0.2,
+        "models must re-learn the inverted concept: {after} -> {final_err}"
+    );
+}
+
+/// Flash crowd: a run that starts at half membership and doubles at cycle 10
+/// sends measurably more traffic than one that stays at half, and the grown
+/// nodes integrate (the run still converges).
+#[test]
+fn flash_crowd_grows_membership_and_traffic() {
+    let ds = urls_like(34, Scale(0.004)); // 40-node universe
+    let mut scn = Scenario::empty("crowd");
+    scn.initial = Some(Membership::Fraction(0.5));
+    scn.events.push(PointEvent {
+        name: "crowd".into(),
+        at: 10,
+        action: PointAction::Join(Membership::Fraction(1.0)),
+    });
+    let mut cfg = ProtocolConfig::paper_default(30);
+    cfg.eval.n_peers = 10;
+    cfg.seed = 34;
+    cfg.scenario = Some(scn);
+    let grown = run(cfg.clone(), &ds);
+
+    let mut half = Scenario::empty("half");
+    half.initial = Some(Membership::Fraction(0.5));
+    cfg.scenario = Some(half);
+    let stayed = run(cfg, &ds);
+
+    // ~20 nodes * 30 cycles vs 20*10 + 40*20: a clear margin, loosely bound
+    assert!(
+        grown.stats.messages_sent as f64 > stayed.stats.messages_sent as f64 * 1.3,
+        "grown {} vs stayed {}",
+        grown.stats.messages_sent,
+        stayed.stats.messages_sent
+    );
+    let first = grown.curve.points.first().unwrap().err_mean;
+    assert!(grown.curve.final_error() < first, "flash crowd must still converge");
+}
+
+/// A mass-leave phase forces nodes offline (messages to them are lost) and
+/// restores them when the phase ends.
+#[test]
+fn mass_leave_phase_pauses_and_restores() {
+    let ds = urls_like(35, Scale(0.004));
+    let mut scn = Scenario::empty("outage");
+    scn.phases.push(Phase {
+        name: "out".into(),
+        from: 5,
+        to: 15,
+        drop: None,
+        delay: None,
+        partition: None,
+        leave: Some(0.5),
+    });
+    let mut cfg = ProtocolConfig::paper_default(40);
+    cfg.eval.n_peers = 10;
+    cfg.seed = 35;
+    cfg.scenario = Some(scn);
+    let res = run(cfg, &ds);
+    assert!(
+        res.stats.messages_lost_offline > 0,
+        "messages to forced-offline nodes must be lost"
+    );
+    let first = res.curve.points.first().unwrap().err_mean;
+    let last = res.curve.final_error();
+    assert!(last < first && last < 0.25, "{first} -> {last}");
+}
+
+/// Replayed availability traces drive churn: nodes go down exactly in their
+/// scripted windows, and messages addressed to them during an outage are
+/// lost offline.
+#[test]
+fn trace_replay_controls_availability() {
+    let ds = urls_like(36, Scale(0.002)); // 20 nodes >= the 16 traced
+    let scn = builtin("trace-replay").unwrap();
+    let cycles = scn.cycles_hint.unwrap();
+    let mut cfg = ProtocolConfig::paper_default(cycles);
+    cfg.eval.n_peers = 8;
+    cfg.seed = 36;
+    cfg.scenario = Some(scn.clone());
+    let res = run(cfg, &ds);
+    assert!(
+        res.stats.messages_lost_offline > 0,
+        "traced outages must lose some deliveries"
+    );
+    assert!(!res.curve.points.is_empty());
+    // the trace windows really are what the schedule replays
+    if let Some(ChurnSpec::Trace(entries)) = &scn.churn {
+        let sched = golf::scenario::driver::trace_schedule(entries, 20, 1000, cycles * 1000);
+        assert!(sched.is_online(0, 10_000)); // cycle 10: first window
+        assert!(!sched.is_online(0, 70_000)); // cycle 70: between windows
+        assert!(sched.is_online(0, 150_000)); // cycle 150: second window
+        assert!(sched.is_online(19, 70_000), "untraced nodes stay online");
+    } else {
+        panic!("trace-replay must carry a trace churn spec");
+    }
+}
+
+/// The delay-spike built-in runs end to end and still converges (delays are
+/// reordering, not loss).
+#[test]
+fn delay_spike_builtin_converges() {
+    let ds = urls_like(37, Scale(0.005));
+    let scn = builtin("delay-spike").unwrap();
+    let cycles = scn.cycles_hint.unwrap();
+    let mut cfg = ProtocolConfig::paper_default(cycles);
+    cfg.eval.n_peers = 10;
+    cfg.seed = 37;
+    cfg.scenario = Some(scn);
+    let res = run(cfg, &ds);
+    assert_eq!(res.stats.messages_blocked, 0);
+    let first = res.curve.points.first().unwrap().err_mean;
+    let last = res.curve.final_error();
+    assert!(last < first && last < 0.25, "{first} -> {last}");
+}
+
+/// Every built-in runs end to end through BOTH engines from the one shared
+/// definition (the ≤128-node deployment leg lives in tests/deployment.rs).
+#[test]
+fn builtin_library_runs_in_both_engines() {
+    let ds = urls_like(38, Scale(0.002)); // 20 nodes (>= 16 for the trace)
+    for &name in golf::scenario::builtin_names() {
+        let scn = builtin(name).unwrap();
+        // validated against this dataset + its own suggested horizon, but
+        // run shorter where the timeline allows it (phases must fit)
+        let cycles = scn.cycles_hint.unwrap();
+        scn.validate(ds.n_train(), cycles).unwrap_or_else(|e| panic!("{name}: {e}"));
+        let mut cfg = ProtocolConfig::paper_default(cycles);
+        cfg.eval.n_peers = 6;
+        cfg.eval.at_cycles = vec![1, cycles / 2, cycles];
+        cfg.seed = 38;
+        cfg.scenario = Some(scn);
+        let ev = run(cfg.clone(), &ds);
+        assert_eq!(ev.curve.points.len(), 3, "{name}: event-driven curve");
+        let mut be = NativeBackend::new();
+        let bt = run_batched(cfg, &ds, &mut be).unwrap();
+        assert_eq!(bt.curve.points.len(), 3, "{name}: batched curve");
+    }
+}
+
+/// Acceptance: scenario grids through `run_grid` are bit-for-bit identical
+/// in parallel and serial execution.
+#[test]
+fn scenario_sweep_parallel_bitwise_equals_serial() {
+    let mk = |threads: usize| {
+        let mut cfg = sweep::SweepConfig::paper_grid(0.01, 8, 77);
+        cfg.variants = vec![Variant::Mu];
+        cfg.failures = vec![false];
+        cfg.scenarios = vec!["none".into(), "paper-fig3".into(), "drift".into()];
+        cfg.cycles = 120; // fits the drift event at cycle 100
+        cfg.replicates = 1;
+        cfg.eval_peers = 8;
+        cfg.threads = threads;
+        sweep::run_grid(&cfg).unwrap()
+    };
+    let serial = mk(1);
+    let parallel = mk(4);
+    assert_eq!(serial.len(), parallel.len());
+    assert_eq!(serial.len(), 3 * 3); // three datasets x three scenarios
+    for (a, b) in serial.iter().zip(&parallel) {
+        assert_eq!(a.dataset, b.dataset);
+        assert_eq!(a.scenario, b.scenario);
+        assert_eq!(a.seed, b.seed);
+        assert_eq!(a.curve.points.len(), b.curve.points.len());
+        for (pa, pb) in a.curve.points.iter().zip(&b.curve.points) {
+            assert_eq!(pa.cycle, pb.cycle);
+            assert_eq!(
+                pa.err_mean, pb.err_mean,
+                "{}/{} parallel != serial",
+                a.dataset, a.scenario
+            );
+        }
+        assert_eq!(a.stats.messages_sent, b.stats.messages_sent);
+    }
+}
+
+/// One timeline definition exercising several axes at once (partition +
+/// drop phase + drift + leave), sanity-run through the event engine with a
+/// few assertions about which machinery engaged.
+#[test]
+fn combined_timeline_engages_every_axis() {
+    let ds = urls_like(39, Scale(0.004));
+    let mut scn = Scenario::empty("combined");
+    scn.drop = Some(0.1);
+    scn.delay = Some(DelaySpec::Fixed(0.01));
+    scn.phases.push(Phase {
+        name: "split".into(),
+        from: 5,
+        to: 12,
+        drop: None,
+        delay: None,
+        partition: Some(PartitionSpec::Mod(2)),
+        leave: None,
+    });
+    scn.phases.push(Phase {
+        name: "storm".into(),
+        from: 15,
+        to: 22,
+        drop: Some(0.8),
+        delay: Some(DelaySpec::Uniform(1.0, 4.0)),
+        partition: None,
+        leave: Some(0.25),
+    });
+    scn.events.push(PointEvent {
+        name: "invert".into(),
+        at: 28,
+        action: PointAction::Drift,
+    });
+    scn.validate(ds.n_train(), 40).unwrap();
+    let mut cfg = ProtocolConfig::paper_default(40);
+    cfg.eval.n_peers = 10;
+    cfg.seed = 39;
+    cfg.scenario = Some(scn);
+    let res = run(cfg, &ds);
+    assert!(res.stats.messages_blocked > 0, "partition phase");
+    assert!(res.stats.messages_dropped > 0, "baseline + storm drop");
+    assert!(res.stats.messages_lost_offline > 0, "leave wave");
+    assert!(!res.curve.points.is_empty());
+}
+
+/// Trace validation end to end through a real (temp) trace file referenced
+/// from a .scn document.
+#[test]
+fn scn_file_with_trace_churn_file() {
+    let dir = std::env::temp_dir();
+    let trace_path = dir.join("golf_scenario_trace_test.trace");
+    std::fs::write(&trace_path, "# node from to\n0 0 5\n1 2 9\n").unwrap();
+    let scn_text = format!(
+        "[scenario]\nname = traced\nchurn = trace:{}\n",
+        trace_path.display()
+    );
+    let scn = Scenario::from_ini(&scn_text).unwrap();
+    match &scn.churn {
+        Some(ChurnSpec::Trace(entries)) => {
+            assert_eq!(
+                entries,
+                &vec![
+                    TraceEntry { node: 0, from: 0, to: 5 },
+                    TraceEntry { node: 1, from: 2, to: 9 },
+                ]
+            );
+        }
+        other => panic!("expected trace churn, got {other:?}"),
+    }
+    // unknown node ids in the trace are caught at validation
+    assert!(scn.validate(1, 20).is_err());
+    scn.validate(5, 20).unwrap();
+    std::fs::remove_file(&trace_path).ok();
+}
