@@ -1,23 +1,22 @@
 //! End-to-end driver: exercises the FULL three-layer stack on a real small
 //! workload, proving the layers compose:
 //!
-//!   L3 rust coordinator (this binary, batched driver)
+//!   L3 rust api::Session (this binary, batched target)
 //!     -> runtime/ (PJRT CPU client)
 //!       -> artifacts/*.hlo.txt  (L2 JAX graphs, AOT-lowered)
 //!         -> Pallas kernels     (L1, interpret-mode, inside the HLO)
 //!
 //! Workload: the Malicious-URLs-like dataset at 1000 nodes, P2PegasosMU,
-//! 100 cycles — the paper's headline experiment shape — run twice: once on
-//! the native backend and once through PJRT, with the loss curves compared
-//! and throughput reported.  Results are recorded in EXPERIMENTS.md.
+//! 100 cycles — the paper's headline experiment shape — run twice through
+//! one `RunSpec` diff: once on the native backend and once through PJRT,
+//! with the loss curves compared and throughput reported.  Results are
+//! recorded in EXPERIMENTS.md.
 //!
 //!     make artifacts && cargo run --release --example e2e_full
 
+use golf::api::{NullObserver, RunSpec};
+use golf::config::BackendChoice;
 use golf::data::synthetic::{urls_like, Scale};
-use golf::engine::batched::run_batched;
-use golf::engine::native::NativeBackend;
-use golf::engine::pjrt::PjrtBackend;
-use golf::gossip::protocol::ProtocolConfig;
 use golf::util::benchkit::Table;
 use std::time::Instant;
 
@@ -33,29 +32,26 @@ fn main() -> anyhow::Result<()> {
         cycles
     );
 
-    let cfg = || {
-        let mut c = ProtocolConfig::paper_default(cycles);
-        c.eval.n_peers = 100;
-        c
-    };
+    // one spec, two backends: the only diff between the runs
+    let spec = |backend| RunSpec::new("urls").cycles(cycles).backend(backend);
 
     // --- native backend
     let t0 = Instant::now();
-    let mut native = NativeBackend::new();
-    let res_native = run_batched(cfg(), &dataset, &mut native)?;
+    let res_native = spec(BackendChoice::BatchedNative)
+        .build_with(&dataset)?
+        .run(&mut NullObserver)?
+        .into_run()
+        .expect("batched outcome");
     let dt_native = t0.elapsed();
 
     // --- PJRT backend (AOT artifacts)
-    let dir = PjrtBackend::default_dir();
-    let mut pjrt = PjrtBackend::new(&dir)?;
     let t0 = Instant::now();
-    let res_pjrt = run_batched(cfg(), &dataset, &mut pjrt)?;
+    let res_pjrt = spec(BackendChoice::BatchedPjrt)
+        .build_with(&dataset)?
+        .run(&mut NullObserver)?
+        .into_run()
+        .expect("batched outcome");
     let dt_pjrt = t0.elapsed();
-    println!(
-        "runtime platform: {}, {} executables compiled\n",
-        pjrt.runtime().platform(),
-        pjrt.runtime().compiled_count()
-    );
 
     // --- loss curves side by side
     let mut t = Table::new(&["cycle", "err (native)", "err (pjrt)", "|diff|"]);

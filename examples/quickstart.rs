@@ -1,37 +1,48 @@
 //! Quickstart: run gossip learning (P2PegasosMU) on a small synthetic
-//! Malicious-URLs-like workload and print the convergence curve.
+//! Malicious-URLs-like workload through the `golf::api` facade and print the
+//! convergence curve as it streams.
 //!
 //!     cargo run --release --example quickstart
 
-use golf::data::synthetic::{urls_like, Scale};
-use golf::gossip::protocol::{run, ProtocolConfig};
+use golf::api::{CurveRecorder, GolfError, RunSpec};
 
-fn main() {
-    // 1. A fully distributed dataset: one training example per network node.
-    let dataset = urls_like(42, Scale(0.05)); // 500 nodes, d = 10
+fn main() -> Result<(), GolfError> {
+    // 1. One validated spec: dataset selection, protocol parameters, and
+    //    execution target in a single builder (paper defaults are
+    //    P2PegasosMU with a 10-deep model cache and NEWSCAST sampling).
+    let session = RunSpec::new("urls")
+        .scale(0.05) // 500 nodes, d = 10 — one training example per node
+        .cycles(200)
+        .seed(42)
+        .build()?;
+
+    let ds = session.data().expect("a single-run session owns its dataset");
     println!(
         "dataset: {} — {} nodes, {} test examples, {} features",
-        dataset.name,
-        dataset.n_train(),
-        dataset.n_test(),
-        dataset.d()
+        ds.name,
+        ds.n_train(),
+        ds.n_test(),
+        ds.d()
     );
 
-    // 2. Protocol configuration: paper defaults are P2PegasosMU with a
-    //    10-deep model cache and NEWSCAST peer sampling.
-    let mut cfg = ProtocolConfig::paper_default(200);
-    cfg.eval.n_peers = 100;
+    // 2. Run it, capturing the typed progress stream (a CLI would pass
+    //    ProgressObserver for live output instead).
+    let mut recorder = CurveRecorder::new();
+    let outcome = session.run(&mut recorder)?;
 
-    // 3. Run the simulation and inspect the error curve.
-    let result = run(cfg, &dataset);
+    // 3. The streamed eval points are exactly the returned curve.
     println!("\ncycle   mean 0-1 error (over 100 sampled peers)");
-    for p in &result.curve.points {
+    for p in recorder.eval_points() {
         println!("{:>5}   {:.4}  {}", p.cycle, p.err_mean, bar(p.err_mean));
     }
+    let stats = outcome.run_stats().expect("sim outcome carries run stats");
     println!(
         "\n{} messages sent total ({} bytes), {} model updates applied",
-        result.stats.messages_sent, result.stats.bytes_sent, result.stats.updates_applied
+        stats.messages_sent,
+        outcome.bytes_sent(),
+        stats.updates_applied
     );
+    Ok(())
 }
 
 fn bar(err: f64) -> String {

@@ -1,18 +1,20 @@
 //! Spambase scenario: the paper's spam-filtering motivation — every mailbox
 //! (node) holds one labeled message vector; gossip learning trains a shared
 //! spam model with no raw data movement.  Compares RW / MU / UM variants
-//! against the sequential Pegasos baseline.
+//! against the sequential Pegasos baseline; the gossip runs share one
+//! pre-built dataset through `RunSpec::build_with`.
 //!
 //!     cargo run --release --example spambase_gossip
 
+use golf::api::{GolfError, NullObserver, RunSpec};
 use golf::baselines::sequential;
 use golf::data::synthetic::{spambase_like, Scale};
 use golf::gossip::create_model::Variant;
-use golf::gossip::protocol::{run, ProtocolConfig};
 use golf::learning::Learner;
 use golf::util::benchkit::Table;
 
-fn main() {
+fn main() -> Result<(), GolfError> {
+    // one dataset shared by the baseline and all three gossip runs
     let dataset = spambase_like(7, Scale(0.5)); // 2070 mailboxes
     let cycles = 300;
     println!(
@@ -29,11 +31,14 @@ fn main() {
         c
     }];
     for variant in [Variant::Rw, Variant::Mu, Variant::Um] {
-        let mut cfg = ProtocolConfig::paper_default(cycles);
-        cfg.variant = variant;
-        cfg.learner = learner;
-        cfg.eval.n_peers = 100;
-        let mut c = run(cfg, &dataset).curve;
+        let outcome = RunSpec::new("spambase")
+            .seed(7)
+            .cycles(cycles)
+            .variant(variant)
+            .lambda(1e-2)
+            .build_with(&dataset)?
+            .run(&mut NullObserver)?;
+        let mut c = outcome.into_run().expect("sim outcome").curve;
         c.label = format!("p2pegasos-{}", variant.name());
         curves.push(c);
     }
@@ -58,4 +63,5 @@ fn main() {
     }
     t.print();
     println!("\n(model merging should dominate: mu/um reach low error orders of magnitude\n earlier than the single-model baselines — paper Fig. 1 middle column)");
+    Ok(())
 }

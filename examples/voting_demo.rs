@@ -4,25 +4,23 @@
 //!
 //!     cargo run --release --example voting_demo
 
-use golf::data::synthetic::{spambase_like, Scale};
+use golf::api::{GolfError, NullObserver, RunSpec};
 use golf::gossip::create_model::Variant;
-use golf::gossip::protocol::{run, ProtocolConfig};
 use golf::util::benchkit::Table;
 
-fn main() {
-    let dataset = spambase_like(3, Scale(0.5));
-    let cycles = 200;
-    println!(
-        "spambase-like: {} nodes; cache size 10; predictions over 100 peers\n",
-        dataset.n_train()
-    );
+fn main() -> Result<(), GolfError> {
+    println!("spambase-like network; cache size 10; predictions over 100 peers\n");
 
     for variant in [Variant::Rw, Variant::Mu] {
-        let mut cfg = ProtocolConfig::paper_default(cycles);
-        cfg.variant = variant;
-        cfg.eval.n_peers = 100;
-        cfg.eval.voting = true;
-        let res = run(cfg, &dataset);
+        let outcome = RunSpec::new("spambase")
+            .scale(0.5) // 2070 mailboxes
+            .seed(3)
+            .cycles(200)
+            .variant(variant)
+            .voting(true)
+            .build()?
+            .run(&mut NullObserver)?;
+        let res = outcome.run_result().expect("sim outcome");
 
         println!("p2pegasos-{}", variant.name());
         let mut t = Table::new(&["cycle", "freshest-model err", "voted err", "gain"]);
@@ -42,4 +40,5 @@ fn main() {
         println!();
     }
     println!("(paper Fig. 3: voting is \"for free\" — same message complexity — and helps\n most where merging is absent; early cycles may degrade slightly since cached\n models are staler than the freshest one)");
+    Ok(())
 }

@@ -7,6 +7,8 @@
 //!
 //!     cargo bench --bench perf
 
+
+#![allow(deprecated)] // this suite pins the legacy shims (run/run_batched/run_deployment) bit-for-bit
 use golf::data::synthetic::{reuters_like, spambase_like, urls_like, Scale};
 use golf::engine::native::NativeBackend;
 use golf::engine::pjrt::PjrtBackend;

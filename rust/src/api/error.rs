@@ -1,0 +1,190 @@
+//! [`GolfError`] — the crate's single typed error surface (DESIGN.md §12).
+//!
+//! Before the facade every layer grew its own error convention: `config/`,
+//! `cli.rs` and `experiments/sweep.rs` returned `Result<_, String>`, the
+//! coordinator returned `io::Error`, the engines `anyhow::Error`, and only
+//! the scenario layer had a typed error.  `GolfError` unifies them: one enum,
+//! one `Display`, source chaining where a typed source exists, and a stable
+//! [`GolfError::exit_code`] mapping so `golf` CLI failures are scriptable.
+
+use crate::net::wire::WireError;
+use crate::scenario::ScenarioError;
+use std::fmt;
+
+/// Typed error for everything the public [`crate::api`] surface can reject.
+///
+/// Each variant maps to a distinct process exit code in the `golf` binary
+/// (see [`GolfError::exit_code`]), so scripts can tell a bad flag (2) from a
+/// missing dataset (3) from a filesystem failure (4) without parsing stderr.
+#[derive(Debug)]
+pub enum GolfError {
+    /// Invalid configuration: unknown key, bad value, duplicate CLI flag,
+    /// or an inconsistent [`crate::api::RunSpec`] combination.
+    Config(String),
+    /// Dataset selection or dataset/topology mismatch (unknown dataset
+    /// name, more deployment nodes than training rows, too few nodes).
+    Data(String),
+    /// Scenario parse or validation failure (typed source preserved, plus
+    /// optional "which scenario / which dataset" context).
+    Scenario { context: String, source: ScenarioError },
+    /// Compute-backend construction or execution failure (e.g. missing
+    /// PJRT artifacts, engine step errors).
+    Backend(String),
+    /// Filesystem or socket I/O failure, with the path/operation context.
+    Io { context: String, source: std::io::Error },
+    /// Wire-format encode/decode failure (typed source preserved).
+    Wire(WireError),
+}
+
+impl GolfError {
+    pub fn config(msg: impl Into<String>) -> Self {
+        GolfError::Config(msg.into())
+    }
+
+    pub fn data(msg: impl Into<String>) -> Self {
+        GolfError::Data(msg.into())
+    }
+
+    pub fn backend(msg: impl Into<String>) -> Self {
+        GolfError::Backend(msg.into())
+    }
+
+    pub fn io(context: impl Into<String>, source: std::io::Error) -> Self {
+        GolfError::Io { context: context.into(), source }
+    }
+
+    /// A scenario error with "which scenario / which dataset" context.
+    pub fn scenario_in(context: impl Into<String>, source: ScenarioError) -> Self {
+        GolfError::Scenario { context: context.into(), source }
+    }
+
+    /// The process exit code the `golf` binary uses for this variant.
+    /// Pinned by test: 0 is success, 1 is reserved (legacy catch-all), and
+    /// each variant gets its own code so failures are scriptable.
+    pub fn exit_code(&self) -> i32 {
+        match self {
+            GolfError::Config(_) => 2,
+            GolfError::Data(_) => 3,
+            GolfError::Io { .. } => 4,
+            GolfError::Scenario { .. } => 5,
+            GolfError::Backend(_) => 6,
+            GolfError::Wire(_) => 7,
+        }
+    }
+
+    /// Short machine-readable variant name (error tables, telemetry).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            GolfError::Config(_) => "config",
+            GolfError::Data(_) => "data",
+            GolfError::Scenario { .. } => "scenario",
+            GolfError::Backend(_) => "backend",
+            GolfError::Io { .. } => "io",
+            GolfError::Wire(_) => "wire",
+        }
+    }
+}
+
+impl fmt::Display for GolfError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            GolfError::Config(m) => write!(f, "{m}"),
+            GolfError::Data(m) => write!(f, "{m}"),
+            GolfError::Scenario { context, source } => {
+                if context.is_empty() {
+                    write!(f, "{source}")
+                } else {
+                    write!(f, "{context}: {source}")
+                }
+            }
+            GolfError::Backend(m) => write!(f, "backend: {m}"),
+            GolfError::Io { context, source } => {
+                if context.is_empty() {
+                    write!(f, "{source}")
+                } else {
+                    write!(f, "{context}: {source}")
+                }
+            }
+            GolfError::Wire(e) => write!(f, "wire: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for GolfError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            GolfError::Scenario { source, .. } => Some(source),
+            GolfError::Io { source, .. } => Some(source),
+            GolfError::Wire(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<ScenarioError> for GolfError {
+    fn from(e: ScenarioError) -> Self {
+        GolfError::Scenario { context: String::new(), source: e }
+    }
+}
+
+impl From<std::io::Error> for GolfError {
+    fn from(e: std::io::Error) -> Self {
+        GolfError::Io { context: String::new(), source: e }
+    }
+}
+
+impl From<WireError> for GolfError {
+    fn from(e: WireError) -> Self {
+        GolfError::Wire(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The CLI contract: one stable exit code per variant (satellite pin).
+    #[test]
+    fn exit_codes_are_distinct_and_stable() {
+        let io = GolfError::io("x", std::io::Error::new(std::io::ErrorKind::Other, "y"));
+        let cases: Vec<(GolfError, i32)> = vec![
+            (GolfError::config("bad flag"), 2),
+            (GolfError::data("no such dataset"), 3),
+            (io, 4),
+            (
+                GolfError::from(ScenarioError::UnknownBuiltin { name: "x".into() }),
+                5,
+            ),
+            (GolfError::backend("no artifacts"), 6),
+            (GolfError::Wire(WireError::Truncated), 7),
+        ];
+        let mut seen = std::collections::HashSet::new();
+        for (e, code) in &cases {
+            assert_eq!(e.exit_code(), *code, "{}", e.kind());
+            assert!(*code > 1, "codes 0/1 are reserved");
+            assert!(seen.insert(*code), "duplicate exit code {code}");
+        }
+    }
+
+    #[test]
+    fn display_and_source_chain() {
+        let e = GolfError::from(ScenarioError::UnknownBuiltin { name: "warp".into() });
+        assert!(e.to_string().contains("warp"));
+        assert!(std::error::Error::source(&e).is_some());
+        // contextful scenario errors name the failing pairing
+        let e = GolfError::scenario_in(
+            "scenario \"x\" on reuters",
+            ScenarioError::UnknownBuiltin { name: "x".into() },
+        );
+        assert!(e.to_string().starts_with("scenario \"x\" on reuters: "), "{e}");
+        assert_eq!(e.exit_code(), 5);
+        let e = GolfError::io(
+            "config.ini",
+            std::io::Error::new(std::io::ErrorKind::NotFound, "gone"),
+        );
+        assert!(e.to_string().starts_with("config.ini: "));
+        assert!(std::error::Error::source(&e).is_some());
+        let e = GolfError::config("bad value");
+        assert!(std::error::Error::source(&e).is_none());
+    }
+}

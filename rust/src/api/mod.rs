@@ -1,0 +1,54 @@
+//! The crate's single typed entry point (DESIGN.md §12): one `RunSpec →
+//! Session → Outcome` pipeline over every execution regime the paper's
+//! protocol runs under.
+//!
+//! The paper's contribution is *one* protocol observed under many regimes —
+//! random walk vs. merge variants, failure scenarios, network sizes, real
+//! sockets vs. simulation.  This module is the front door that keeps it one
+//! protocol in code, too:
+//!
+//! * [`RunSpec`] — a validating builder unifying dataset selection, protocol
+//!   parameters, execution mode/path, backend choice, scenario timelines,
+//!   deployment ([`Target::Deploy`]), and sweep axes ([`SweepAxes`]);
+//!   bidirectional with the INI layer ([`RunSpec::from_ini`] /
+//!   [`RunSpec::to_ini`]).
+//! * [`GolfError`] — the typed error enum every facade operation returns,
+//!   with a stable per-variant CLI exit code ([`GolfError::exit_code`]).
+//! * [`Session`] / [`Observer`] — `spec.build()? -> Session`,
+//!   `session.run(&mut obs)? -> Outcome`; the observer receives typed
+//!   [`RunEvent`]s (cycle boundaries, eval points, scenario mutations, node
+//!   stats) streamed live from all three drivers.
+//! * [`Outcome`] — one result type over single runs, deployments, and
+//!   sweeps, with uniform curve/stats/wire-cost accessors.
+//!
+//! ```
+//! use golf::api::{CurveRecorder, RunSpec};
+//!
+//! # fn main() -> Result<(), golf::api::GolfError> {
+//! let mut rec = CurveRecorder::new();
+//! let outcome = RunSpec::new("urls")
+//!     .scale(0.005)
+//!     .cycles(3)
+//!     .eval_peers(5)
+//!     .build()?
+//!     .run(&mut rec)?;
+//! // the streamed eval points are exactly the returned curve
+//! assert_eq!(rec.eval_points().len(), outcome.curve().unwrap().points.len());
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! The legacy free functions (`gossip::run`, `gossip::run_with_backend`,
+//! `engine::batched::run_batched`, `coordinator::run_deployment`) remain as
+//! thin deprecated shims so existing parity pins stay bit-for-bit; new code
+//! should construct runs here.
+
+pub mod error;
+pub mod observer;
+pub mod session;
+pub mod spec;
+
+pub use error::GolfError;
+pub use observer::{CurveRecorder, NullObserver, Observer, ProgressObserver, RunEvent};
+pub use session::{run_matched_sim, Outcome, Session};
+pub use spec::{RunSpec, SweepAxes, Target};

@@ -1,0 +1,181 @@
+//! [`Observer`] — typed progress events streamed from a running
+//! [`crate::api::Session`] (DESIGN.md §12).
+//!
+//! All three drivers (event-driven simulator, cycle-synchronous batched
+//! engine, socket deployment) emit the same [`RunEvent`] stream while they
+//! execute: gossip-cycle boundaries, convergence-curve points as they are
+//! measured, scenario mutations as they are applied, and per-node accounting
+//! (deployment).  Observation is strictly passive — no observer call touches
+//! RNG or protocol state, so an observed run is bit-for-bit identical to an
+//! unobserved one (pinned in tests/api.rs).
+//!
+//! Three implementations are provided: [`NullObserver`] (discard),
+//! [`ProgressObserver`] (live stderr lines, used by the `golf` CLI), and
+//! [`CurveRecorder`] (capture for tests, dashboards, early stopping).
+
+use crate::eval::tracker::EvalPoint;
+
+/// One typed progress event of a running session.
+#[derive(Clone, Debug)]
+pub enum RunEvent {
+    /// A gossip-cycle boundary was crossed.  The event-driven simulator
+    /// emits every integer boundary its event stream passes; the batched
+    /// driver emits every cycle; the deployment emits measurement cycles.
+    Cycle { cycle: u64 },
+    /// One measured convergence-curve point, exactly as it lands in the
+    /// returned [`crate::api::Outcome`]'s curve.
+    Eval { point: EvalPoint },
+    /// A scenario mutation was applied at a cycle boundary.
+    Scenario { cycle: u64, mutation: String },
+    /// Per-node accounting (deployment: one event per node at shutdown).
+    NodeStats { node: usize, sent: u64, received: u64, bytes_sent: u64 },
+}
+
+/// Receives the [`RunEvent`] stream of a session.  Implementations must be
+/// cheap and side-effect-free with respect to the run itself.
+pub trait Observer {
+    fn on_event(&mut self, event: &RunEvent);
+}
+
+/// Discards every event (the default for headless runs).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NullObserver;
+
+impl Observer for NullObserver {
+    fn on_event(&mut self, _event: &RunEvent) {}
+}
+
+/// Streams progress to stderr as the run executes — the `golf` CLI's live
+/// output.  Cycle boundaries are silent (too chatty); eval points, scenario
+/// mutations, and node stats print one line each.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ProgressObserver {
+    /// also print per-node stats lines (deployment runs)
+    pub verbose_nodes: bool,
+}
+
+impl ProgressObserver {
+    pub fn stderr() -> Self {
+        ProgressObserver { verbose_nodes: false }
+    }
+}
+
+impl Observer for ProgressObserver {
+    fn on_event(&mut self, event: &RunEvent) {
+        match event {
+            RunEvent::Cycle { .. } => {}
+            RunEvent::Eval { point: p } => {
+                let vote = p
+                    .err_vote
+                    .map_or(String::new(), |v| format!("  vote {v:.4}"));
+                let sim = p
+                    .similarity
+                    .map_or(String::new(), |s| format!("  sim {s:.4}"));
+                eprintln!(
+                    "cycle {:>6}  err {:.4} ±{:.4}{vote}{sim}  (msgs {})",
+                    p.cycle, p.err_mean, p.err_std, p.messages_sent
+                );
+            }
+            RunEvent::Scenario { cycle, mutation } => {
+                eprintln!("scenario @ cycle {cycle}: {mutation}");
+            }
+            RunEvent::NodeStats { node, sent, received, bytes_sent } => {
+                if self.verbose_nodes {
+                    eprintln!(
+                        "node {node:>4}: sent {sent} received {received} bytes {bytes_sent}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Records the full event stream (and the eval points in order) for later
+/// inspection — the hook tests and dashboards build on.
+#[derive(Clone, Debug, Default)]
+pub struct CurveRecorder {
+    pub events: Vec<RunEvent>,
+}
+
+impl CurveRecorder {
+    pub fn new() -> Self {
+        CurveRecorder::default()
+    }
+
+    /// The eval points observed so far, in emission order.
+    pub fn eval_points(&self) -> Vec<&EvalPoint> {
+        self.events
+            .iter()
+            .filter_map(|e| match e {
+                RunEvent::Eval { point } => Some(point),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// The cycle boundaries observed so far.
+    pub fn cycles(&self) -> Vec<u64> {
+        self.events
+            .iter()
+            .filter_map(|e| match e {
+                RunEvent::Cycle { cycle } => Some(*cycle),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// `(cycle, description)` of every scenario mutation observed so far.
+    pub fn mutations(&self) -> Vec<(u64, &str)> {
+        self.events
+            .iter()
+            .filter_map(|e| match e {
+                RunEvent::Scenario { cycle, mutation } => Some((*cycle, mutation.as_str())),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// `(node, sent, received)` of every node-stats event observed so far.
+    pub fn node_stats(&self) -> Vec<(usize, u64, u64)> {
+        self.events
+            .iter()
+            .filter_map(|e| match e {
+                RunEvent::NodeStats { node, sent, received, .. } => {
+                    Some((*node, *sent, *received))
+                }
+                _ => None,
+            })
+            .collect()
+    }
+}
+
+impl Observer for CurveRecorder {
+    fn on_event(&mut self, event: &RunEvent) {
+        self.events.push(event.clone());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::tracker::point_from_errors;
+
+    #[test]
+    fn recorder_filters_by_event_kind() {
+        let mut r = CurveRecorder::new();
+        r.on_event(&RunEvent::Cycle { cycle: 1 });
+        r.on_event(&RunEvent::Eval { point: point_from_errors(1, &[0.5], None, None, 10) });
+        r.on_event(&RunEvent::Scenario { cycle: 1, mutation: "drop -> 0.5".into() });
+        r.on_event(&RunEvent::NodeStats { node: 3, sent: 7, received: 6, bytes_sent: 99 });
+        assert_eq!(r.cycles(), vec![1]);
+        assert_eq!(r.eval_points().len(), 1);
+        assert_eq!(r.eval_points()[0].messages_sent, 10);
+        assert_eq!(r.mutations(), vec![(1, "drop -> 0.5")]);
+        assert_eq!(r.node_stats(), vec![(3, 7, 6)]);
+        // the null observer accepts everything silently
+        let mut n = NullObserver;
+        for e in &r.events {
+            n.on_event(e);
+        }
+    }
+}

@@ -1,0 +1,321 @@
+//! [`Session`] and [`Outcome`] — the execution half of the facade
+//! (DESIGN.md §12).
+//!
+//! `RunSpec::build()? -> Session`, `session.run(&mut impl Observer)? ->
+//! Outcome`: one pipeline over every execution target.  The session owns (or
+//! borrows) the resolved dataset, dispatches to the right driver, streams
+//! [`crate::api::RunEvent`]s to the observer while the run executes, and
+//! wraps the result in one [`Outcome`] type with uniform accessors for the
+//! convergence curve, run statistics, and wire-cost totals.
+
+use crate::api::error::GolfError;
+use crate::api::observer::Observer;
+use crate::api::spec::{RunSpec, Target};
+use crate::config::BackendChoice;
+use crate::coordinator::DeployReport;
+use crate::data::dataset::Dataset;
+use crate::engine::batched::BatchedSim;
+use crate::engine::native::NativeBackend;
+use crate::engine::pjrt::PjrtBackend;
+use crate::eval::tracker::Curve;
+use crate::experiments::sweep::{self, SweepCell, SweepConfig};
+use crate::gossip::protocol::{GossipSim, ProtocolConfig, RunResult, RunStats};
+use crate::net::deploy::DeployConfig;
+
+/// The dataset a session runs against: built by [`RunSpec::build`] or
+/// borrowed via [`RunSpec::build_with`].
+enum Data<'d> {
+    Owned(Dataset),
+    Borrowed(&'d Dataset),
+    /// sweep sessions build the three-dataset registry inside the grid
+    /// runner instead
+    Registry,
+}
+
+/// A validated, runnable configuration bound to its dataset.
+pub struct Session<'d> {
+    spec: RunSpec,
+    data: Data<'d>,
+    /// the resolved deployment configuration, validated once at build time
+    /// ([`Target::Deploy`] only)
+    deploy: Option<DeployConfig>,
+}
+
+impl Session<'static> {
+    pub(crate) fn create_owned(spec: RunSpec) -> Result<Self, GolfError> {
+        if spec.sweep.is_some() {
+            return Ok(Session { spec, data: Data::Registry, deploy: None });
+        }
+        let data = spec.experiment.build_dataset()?;
+        let deploy = check_against(&spec, &data)?;
+        Ok(Session { spec, data: Data::Owned(data), deploy })
+    }
+}
+
+impl<'d> Session<'d> {
+    pub(crate) fn create_borrowed(spec: RunSpec, data: &'d Dataset) -> Result<Self, GolfError> {
+        if spec.sweep.is_some() {
+            return Err(GolfError::config(
+                "a sweep builds its own dataset registry; use RunSpec::build"
+                    .to_string(),
+            ));
+        }
+        let deploy = check_against(&spec, data)?;
+        Ok(Session { spec, data: Data::Borrowed(data), deploy })
+    }
+
+    /// The validated spec this session will execute.
+    pub fn spec(&self) -> &RunSpec {
+        &self.spec
+    }
+
+    /// The resolved dataset (`None` for sweep sessions, which run the
+    /// three-dataset registry).
+    pub fn data(&self) -> Option<&Dataset> {
+        match &self.data {
+            Data::Owned(d) => Some(d),
+            Data::Borrowed(d) => Some(d),
+            Data::Registry => None,
+        }
+    }
+
+    /// The deployment configuration this session resolved at build time
+    /// ([`Target::Deploy`] sessions only).
+    pub fn deploy_config(&self) -> Option<&DeployConfig> {
+        self.deploy.as_ref()
+    }
+
+    /// Execute the run, streaming progress events to `obs`.  Observation is
+    /// passive: an observed run is bit-for-bit identical to an unobserved
+    /// one.  Sweep sessions fan their cells across worker threads, so their
+    /// per-cell events are not streamed — inspect the returned cells.
+    pub fn run(&self, obs: &mut dyn Observer) -> Result<Outcome, GolfError> {
+        if self.spec.sweep.is_some() {
+            return self.run_sweep();
+        }
+        let data = self.data().expect("non-sweep sessions hold a dataset");
+        match self.spec.target {
+            Target::Sim => {
+                let cfg = self.spec.experiment.protocol_config()?;
+                let res = match self.spec.experiment.backend {
+                    BackendChoice::Event => GossipSim::new(cfg, data)
+                        .try_run_observed(obs)
+                        .map_err(|e| GolfError::backend(format!("{e:#}")))?,
+                    _ => {
+                        let be = pjrt_backend()?;
+                        GossipSim::with_backend(cfg, data, Box::new(be))
+                            .try_run_observed(obs)
+                            .map_err(|e| GolfError::backend(format!("{e:#}")))?
+                    }
+                };
+                Ok(Outcome::Run(res))
+            }
+            Target::Batched => {
+                let cfg = self.spec.experiment.protocol_config()?;
+                let res = match self.spec.experiment.backend {
+                    BackendChoice::BatchedPjrt => {
+                        let mut be = pjrt_backend()?;
+                        BatchedSim::new(cfg, data, &mut be)
+                            .run_observed(obs)
+                            .map_err(|e| GolfError::backend(format!("{e:#}")))?
+                    }
+                    _ => {
+                        let mut be = NativeBackend::new();
+                        BatchedSim::new(cfg, data, &mut be)
+                            .run_observed(obs)
+                            .map_err(|e| GolfError::backend(format!("{e:#}")))?
+                    }
+                };
+                Ok(Outcome::Run(res))
+            }
+            Target::Deploy => {
+                let dcfg = self
+                    .deploy
+                    .as_ref()
+                    .expect("deploy sessions resolve their config at build time");
+                let report = crate::coordinator::run_deployment_observed(dcfg, data, obs)
+                    .map_err(|e| GolfError::io("deployment", e))?;
+                Ok(Outcome::Deploy(report))
+            }
+        }
+    }
+
+    fn run_sweep(&self) -> Result<Outcome, GolfError> {
+        let axes = self.spec.sweep.as_ref().expect("run_sweep needs axes");
+        let e = &self.spec.experiment;
+        let cfg = SweepConfig {
+            scale: e.scale,
+            cycles: e.cycles,
+            variants: axes.variants.clone(),
+            failures: axes.failures.clone(),
+            scenarios: axes.scenarios.clone(),
+            replicates: axes.replicates,
+            base_seed: e.seed,
+            eval_peers: e.eval_peers,
+            exec: e.exec_mode()?,
+            path: e.exec_path,
+            threads: axes.threads,
+        };
+        Ok(Outcome::Sweep(sweep::run_grid(&cfg)?))
+    }
+}
+
+/// Dataset-dependent half of the single validation pass.  For deployments
+/// the resolved [`DeployConfig`] is returned so the session (and its
+/// callers) never re-derive it.
+fn check_against(spec: &RunSpec, data: &Dataset) -> Result<Option<DeployConfig>, GolfError> {
+    if data.name != spec.experiment.dataset {
+        return Err(GolfError::data(format!(
+            "spec names dataset {:?} but the provided dataset is {:?}",
+            spec.experiment.dataset, data.name
+        )));
+    }
+    if data.n_train() < 2 {
+        return Err(GolfError::data(format!(
+            "{} has {} training rows at scale {}; a gossip network needs at least 2 nodes",
+            data.name,
+            data.n_train(),
+            spec.experiment.scale
+        )));
+    }
+    match spec.target {
+        Target::Deploy => {
+            // deploy_config performs the full deployment validation: node
+            // bounds, sampler feasibility, scenario fit
+            Ok(Some(spec.to_deploy_spec().deploy_config(data)?))
+        }
+        _ => {
+            spec.experiment.validate_scenario(data.n_train())?;
+            Ok(None)
+        }
+    }
+}
+
+fn pjrt_backend() -> Result<PjrtBackend, GolfError> {
+    PjrtBackend::new(&PjrtBackend::default_dir())
+        .map_err(|e| GolfError::backend(format!("{e:#}")))
+}
+
+/// Run the simulator configuration matched to a deployment (same failure
+/// models, RNG fork order, and measurement grid — see
+/// [`crate::coordinator::matched_sim_config`]), observed.  Backs the CLI's
+/// `--compare-sim`.
+pub fn run_matched_sim(
+    cfg: &DeployConfig,
+    data: &Dataset,
+    obs: &mut dyn Observer,
+) -> Result<RunResult, GolfError> {
+    let sim_cfg: ProtocolConfig = crate::coordinator::matched_sim_config(cfg);
+    GossipSim::new(sim_cfg, data)
+        .try_run_observed(obs)
+        .map_err(|e| GolfError::backend(format!("{e:#}")))
+}
+
+/// The one result type of the facade: whichever driver ran, the outcome
+/// exposes the convergence curve(s), statistics, and wire-cost totals
+/// through the same accessors.
+#[derive(Clone, Debug)]
+pub enum Outcome {
+    /// a single simulated run (event-driven or batched)
+    Run(RunResult),
+    /// a socket deployment run
+    Deploy(DeployReport),
+    /// a grid sweep, one cell per (dataset × variant × failures × scenario
+    /// × replicate)
+    Sweep(Vec<SweepCell>),
+}
+
+impl Outcome {
+    /// The primary convergence curve: the run's curve, the deployment's
+    /// curve, or the first sweep cell's curve (`None` only for an empty
+    /// sweep).
+    pub fn curve(&self) -> Option<&Curve> {
+        match self {
+            Outcome::Run(r) => Some(&r.curve),
+            Outcome::Deploy(d) => Some(&d.curve),
+            Outcome::Sweep(cells) => cells.first().map(|c| &c.curve),
+        }
+    }
+
+    /// Every curve this outcome holds.
+    pub fn curves(&self) -> Vec<&Curve> {
+        match self {
+            Outcome::Run(r) => vec![&r.curve],
+            Outcome::Deploy(d) => vec![&d.curve],
+            Outcome::Sweep(cells) => cells.iter().map(|c| &c.curve).collect(),
+        }
+    }
+
+    /// Final mean 0-1 error of the primary curve.
+    pub fn final_error(&self) -> Option<f64> {
+        self.curve().map(|c| c.final_error())
+    }
+
+    /// Total protocol messages sent (summed over sweep cells).
+    pub fn messages_sent(&self) -> u64 {
+        match self {
+            Outcome::Run(r) => r.stats.messages_sent,
+            Outcome::Deploy(d) => d.stats.messages_sent,
+            Outcome::Sweep(cells) => cells.iter().map(|c| c.stats.messages_sent).sum(),
+        }
+    }
+
+    /// Total wire cost in bytes (summed over sweep cells).
+    pub fn bytes_sent(&self) -> u64 {
+        match self {
+            Outcome::Run(r) => r.stats.bytes_sent,
+            Outcome::Deploy(d) => d.stats.bytes_sent,
+            Outcome::Sweep(cells) => cells.iter().map(|c| c.stats.bytes_sent).sum(),
+        }
+    }
+
+    /// Simulation statistics, when this outcome is a single simulated run.
+    pub fn run_stats(&self) -> Option<&RunStats> {
+        match self {
+            Outcome::Run(r) => Some(&r.stats),
+            _ => None,
+        }
+    }
+
+    pub fn run_result(&self) -> Option<&RunResult> {
+        match self {
+            Outcome::Run(r) => Some(r),
+            _ => None,
+        }
+    }
+
+    pub fn deploy_report(&self) -> Option<&DeployReport> {
+        match self {
+            Outcome::Deploy(d) => Some(d),
+            _ => None,
+        }
+    }
+
+    pub fn sweep_cells(&self) -> Option<&[SweepCell]> {
+        match self {
+            Outcome::Sweep(cells) => Some(cells),
+            _ => None,
+        }
+    }
+
+    pub fn into_run(self) -> Option<RunResult> {
+        match self {
+            Outcome::Run(r) => Some(r),
+            _ => None,
+        }
+    }
+
+    pub fn into_deploy(self) -> Option<DeployReport> {
+        match self {
+            Outcome::Deploy(d) => Some(d),
+            _ => None,
+        }
+    }
+
+    pub fn into_sweep(self) -> Option<Vec<SweepCell>> {
+        match self {
+            Outcome::Sweep(cells) => Some(cells),
+            _ => None,
+        }
+    }
+}

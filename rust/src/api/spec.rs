@@ -1,0 +1,638 @@
+//! [`RunSpec`] — the crate's one validated description of a run
+//! (DESIGN.md §12).
+//!
+//! A `RunSpec` unifies what used to live in four parallel config structs:
+//! dataset selection and protocol parameters ([`ExperimentSpec`]), execution
+//! mode/path and backend choice, an optional scenario timeline, deployment
+//! parameters ([`Target::Deploy`]), and sweep axes ([`SweepAxes`]).  It is
+//! bidirectional with the INI layer — [`RunSpec::from_ini`] and
+//! [`RunSpec::to_ini`] round-trip — so config files, CLI flags, and
+//! programmatic use share one schema with one validation pass
+//! ([`RunSpec::build`]).
+
+use crate::api::error::GolfError;
+use crate::api::session::Session;
+use crate::config::{ini, BackendChoice, DeploySpec, ExperimentSpec};
+use crate::data::dataset::Dataset;
+use crate::gossip::create_model::Variant;
+use crate::gossip::protocol::ExecPath;
+use crate::p2p::overlay::SamplerConfig;
+use crate::scenario::Scenario;
+
+/// Which execution substrate runs the protocol.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Target {
+    /// The event-driven simulator (`backend = event | event-pjrt`): faithful
+    /// per-message timing, jitter, churn — the paper's semantics.
+    #[default]
+    Sim,
+    /// The cycle-synchronous batched engine
+    /// (`backend = batched-native | batched-pjrt`): maximally vectorized,
+    /// timing quantized to whole cycles.
+    Batched,
+    /// The real localhost-TCP deployment runtime (`[deploy]` section).
+    Deploy,
+}
+
+impl Target {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Target::Sim => "sim",
+            Target::Batched => "batched",
+            Target::Deploy => "deploy",
+        }
+    }
+
+    /// The target a backend choice implies (deployment is orthogonal to the
+    /// backend key and selected by [`RunSpec::deploy`] / a `[deploy]`
+    /// section instead).
+    pub fn for_backend(backend: BackendChoice) -> Target {
+        match backend {
+            BackendChoice::Event | BackendChoice::EventPjrt => Target::Sim,
+            BackendChoice::BatchedNative | BackendChoice::BatchedPjrt => Target::Batched,
+        }
+    }
+}
+
+/// The grid axes of a parameter sweep over the three Table-I datasets
+/// (`[sweep]` INI section).  Scale, cycles, seed, eval peers, and execution
+/// mode/path come from the embedded experiment; the axes below are crossed
+/// with the dataset registry exactly as [`crate::experiments::sweep::run_grid`]
+/// does.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SweepAxes {
+    pub variants: Vec<Variant>,
+    /// `false` = no failures, `true` = Section VI-A(i) "all failures"
+    pub failures: Vec<bool>,
+    /// scripted scenario axis; `"none"` is the baseline cell
+    pub scenarios: Vec<String>,
+    pub replicates: u64,
+    pub threads: usize,
+}
+
+impl Default for SweepAxes {
+    fn default() -> Self {
+        SweepAxes {
+            variants: vec![Variant::Rw, Variant::Mu],
+            failures: vec![false, true],
+            scenarios: vec!["none".into()],
+            replicates: 1,
+            threads: crate::experiments::sweep::thread_count(),
+        }
+    }
+}
+
+impl SweepAxes {
+    fn from_section(kv: &ini::Section) -> Result<Self, GolfError> {
+        let mut axes = SweepAxes::default();
+        for (k, v) in kv {
+            match k.as_str() {
+                "variants" => {
+                    axes.variants = v
+                        .split(',')
+                        .map(|s| {
+                            Variant::parse(s.trim())
+                                .ok_or_else(|| GolfError::config(format!("bad variant {s:?}")))
+                        })
+                        .collect::<Result<_, _>>()?;
+                }
+                "failures" => {
+                    axes.failures = v
+                        .split(',')
+                        .map(|s| match s.trim() {
+                            "none" => Ok(false),
+                            "extreme" => Ok(true),
+                            other => {
+                                Err(GolfError::config(format!("bad failures {other:?}")))
+                            }
+                        })
+                        .collect::<Result<_, _>>()?;
+                }
+                "scenarios" => {
+                    axes.scenarios = v.split(',').map(|s| s.trim().to_string()).collect();
+                }
+                "replicates" => {
+                    axes.replicates = v.parse().map_err(|_| {
+                        GolfError::config(format!("bad replicates {v:?}"))
+                    })?;
+                }
+                "threads" => {
+                    axes.threads = v
+                        .parse()
+                        .map_err(|_| GolfError::config(format!("bad threads {v:?}")))?;
+                }
+                other => {
+                    return Err(GolfError::config(format!("[sweep]: unknown key {other:?}")))
+                }
+            }
+        }
+        Ok(axes)
+    }
+
+    fn to_ini_section(&self) -> String {
+        let variants: Vec<&str> = self.variants.iter().map(|v| v.name()).collect();
+        let failures: Vec<&str> = self
+            .failures
+            .iter()
+            .map(|&f| if f { "extreme" } else { "none" })
+            .collect();
+        format!(
+            "[sweep]\nvariants = {}\nfailures = {}\nscenarios = {}\nreplicates = {}\nthreads = {}\n",
+            variants.join(","),
+            failures.join(","),
+            self.scenarios.join(","),
+            self.replicates,
+            self.threads
+        )
+    }
+}
+
+/// The single front door: a validating description of one run (or one sweep
+/// grid) over any execution target.
+///
+/// ```
+/// use golf::api::{NullObserver, RunSpec};
+///
+/// # fn main() -> Result<(), golf::api::GolfError> {
+/// let session = RunSpec::new("urls")
+///     .scale(0.005)          // 50 nodes — a smoke-test sized network
+///     .cycles(3)
+///     .eval_peers(5)
+///     .build()?;             // one validation pass, dataset built
+/// let outcome = session.run(&mut NullObserver)?;
+/// assert_eq!(outcome.curve().unwrap().points.len(), 3);
+/// # Ok(())
+/// # }
+/// ```
+///
+/// The same schema round-trips through the INI layer:
+///
+/// ```
+/// use golf::api::{RunSpec, Target};
+///
+/// # fn main() -> Result<(), golf::api::GolfError> {
+/// let spec = RunSpec::from_ini("[experiment]\ndataset = spambase\ncycles = 9\n")?;
+/// assert_eq!(spec.experiment.cycles, 9);
+/// assert_eq!(spec.target, Target::Sim);
+/// assert_eq!(RunSpec::from_ini(&spec.to_ini())?, spec);
+/// # Ok(())
+/// # }
+/// ```
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunSpec {
+    /// dataset selection, protocol parameters, backend, exec mode/path,
+    /// scenario — the shared schema of every target
+    pub experiment: ExperimentSpec,
+    pub target: Target,
+    /// wall-clock gossip period Δ in milliseconds ([`Target::Deploy`] only)
+    pub delta_ms: u64,
+    /// deployment node count; 0 = one node per training row
+    pub nodes: usize,
+    /// grid axes; `Some` turns the spec into a sweep over the dataset
+    /// registry (requires `target = Sim` on the native event backend)
+    pub sweep: Option<SweepAxes>,
+}
+
+impl Default for RunSpec {
+    fn default() -> Self {
+        RunSpec::from_spec(ExperimentSpec::default())
+    }
+}
+
+impl RunSpec {
+    /// A spec for `dataset` with paper-default protocol parameters.
+    pub fn new(dataset: &str) -> Self {
+        let mut spec = RunSpec::from_spec(ExperimentSpec::default());
+        spec.experiment.dataset = dataset.to_string();
+        spec
+    }
+
+    /// Wrap an [`ExperimentSpec`]; the target follows the backend choice.
+    pub fn from_spec(experiment: ExperimentSpec) -> Self {
+        RunSpec {
+            target: Target::for_backend(experiment.backend),
+            experiment,
+            delta_ms: DeploySpec::default().delta_ms,
+            nodes: 0,
+            sweep: None,
+        }
+    }
+
+    /// The embedded experiment schema (inverse of [`RunSpec::from_spec`]).
+    pub fn to_spec(&self) -> ExperimentSpec {
+        self.experiment.clone()
+    }
+
+    /// Wrap a [`DeploySpec`] as a [`Target::Deploy`] run.
+    pub fn from_deploy_spec(spec: DeploySpec) -> Self {
+        RunSpec {
+            experiment: spec.experiment,
+            target: Target::Deploy,
+            delta_ms: spec.delta_ms,
+            nodes: spec.nodes,
+            sweep: None,
+        }
+    }
+
+    /// The deployment view of this spec (inverse of
+    /// [`RunSpec::from_deploy_spec`]).
+    pub fn to_deploy_spec(&self) -> DeploySpec {
+        DeploySpec {
+            experiment: self.experiment.clone(),
+            delta_ms: self.delta_ms,
+            nodes: self.nodes,
+        }
+    }
+
+    // ---- chainable builder surface -------------------------------------
+
+    pub fn scale(mut self, scale: f64) -> Self {
+        self.experiment.scale = scale;
+        self
+    }
+
+    pub fn cycles(mut self, cycles: u64) -> Self {
+        self.experiment.cycles = cycles;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.experiment.seed = seed;
+        self
+    }
+
+    pub fn variant(mut self, variant: Variant) -> Self {
+        self.experiment.variant = variant;
+        self
+    }
+
+    /// Select the learner by name (`pegasos` | `adaline` | `logreg`);
+    /// validated at [`RunSpec::build`].
+    pub fn learner(mut self, name: &str) -> Self {
+        self.experiment.learner_name = name.to_string();
+        self
+    }
+
+    pub fn lambda(mut self, lambda: f32) -> Self {
+        self.experiment.lambda = lambda;
+        self
+    }
+
+    pub fn cache(mut self, cache: usize) -> Self {
+        self.experiment.cache = cache;
+        self
+    }
+
+    pub fn sampler(mut self, sampler: SamplerConfig) -> Self {
+        self.experiment.sampler = sampler;
+        self
+    }
+
+    /// Enable the Section VI-A(i) "all failures" setup (50% drop, [Δ,10Δ]
+    /// delay, churn).
+    pub fn failures(mut self, on: bool) -> Self {
+        self.experiment.failures = on;
+        self
+    }
+
+    pub fn voting(mut self, on: bool) -> Self {
+        self.experiment.voting = on;
+        self
+    }
+
+    pub fn similarity(mut self, on: bool) -> Self {
+        self.experiment.similarity = on;
+        self
+    }
+
+    pub fn eval_peers(mut self, n: usize) -> Self {
+        self.experiment.eval_peers = n;
+        self
+    }
+
+    /// Pick the compute backend; the target follows (event backends run the
+    /// event-driven simulator, batched backends the cycle-synchronous
+    /// driver) unless the spec is a deployment.
+    pub fn backend(mut self, backend: BackendChoice) -> Self {
+        self.experiment.backend = backend;
+        if self.target != Target::Deploy {
+            self.target = Target::for_backend(backend);
+        }
+        self
+    }
+
+    /// Debug/parity stepping: one engine call per delivery.
+    pub fn scalar_mode(mut self) -> Self {
+        self.experiment.mode = "scalar".into();
+        self
+    }
+
+    /// Micro-batch coalescing window in ticks (0 = exact-timestamp).
+    pub fn coalesce(mut self, ticks: u64) -> Self {
+        self.experiment.mode = "microbatch".into();
+        self.experiment.coalesce = ticks;
+        self
+    }
+
+    pub fn exec(mut self, path: ExecPath) -> Self {
+        self.experiment.exec_path = path;
+        self
+    }
+
+    /// Attach a scenario timeline.
+    pub fn scenario(mut self, scenario: Scenario) -> Self {
+        self.experiment.scenario = Some(scenario);
+        self
+    }
+
+    /// Attach a built-in scenario by name (`golf scenario --list`).
+    pub fn builtin_scenario(mut self, name: &str) -> Result<Self, GolfError> {
+        self.experiment.scenario = Some(crate::scenario::builtin(name)?);
+        Ok(self)
+    }
+
+    /// Turn the spec into a real localhost-TCP deployment: wall-clock Δ in
+    /// milliseconds and the node count (0 = one node per training row).
+    pub fn deploy(mut self, delta_ms: u64, nodes: usize) -> Self {
+        self.target = Target::Deploy;
+        self.delta_ms = delta_ms;
+        self.nodes = nodes;
+        self
+    }
+
+    /// Turn the spec into a grid sweep over the dataset registry.
+    pub fn sweep(mut self, axes: SweepAxes) -> Self {
+        self.sweep = Some(axes);
+        self
+    }
+
+    // ---- INI bidirectionality ------------------------------------------
+
+    /// Parse the full schema from INI text: `[experiment]` (plus embedded
+    /// scenario sections), an optional `[deploy]` section (which selects
+    /// [`Target::Deploy`]), and an optional `[sweep]` section.  Unknown
+    /// sections are rejected — one schema, one validation pass.
+    pub fn from_ini(text: &str) -> Result<Self, GolfError> {
+        let doc = ini::parse(text)?;
+        for section in doc.keys() {
+            let known = matches!(section.as_str(), "experiment" | "deploy" | "sweep" | "scenario")
+                || section.starts_with("phase.")
+                || section.starts_with("event.");
+            if !known && !(section.is_empty() && doc[section].is_empty()) {
+                if section.is_empty() {
+                    return Err(GolfError::config(
+                        "top-level keys outside a section (expected [experiment], \
+                         [deploy], [sweep], or scenario sections)"
+                            .to_string(),
+                    ));
+                }
+                return Err(GolfError::config(format!("unknown section [{section}]")));
+            }
+        }
+        let mut experiment = ExperimentSpec::default();
+        if let Some(kv) = doc.get("experiment") {
+            experiment.apply(kv)?;
+        }
+        if crate::config::has_scenario_sections(&doc) {
+            experiment.scenario = Some(Scenario::from_ini_doc(&doc)?);
+        }
+        let mut spec = if let Some(kv) = doc.get("deploy") {
+            let mut d = DeploySpec { experiment, ..Default::default() };
+            for (k, v) in kv {
+                // strict: only deployment keys belong in [deploy]
+                if !d.apply_deploy_key(k, v)? {
+                    return Err(GolfError::config(format!("[deploy]: unknown key {k:?}")));
+                }
+            }
+            RunSpec::from_deploy_spec(d)
+        } else {
+            RunSpec::from_spec(experiment)
+        };
+        if let Some(kv) = doc.get("sweep") {
+            spec.sweep = Some(SweepAxes::from_section(kv)?);
+        }
+        Ok(spec)
+    }
+
+    /// Read and parse a config file.
+    pub fn from_ini_file(path: &str) -> Result<Self, GolfError> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| GolfError::io(path.to_string(), e))?;
+        Self::from_ini(&text)
+    }
+
+    /// Serialize the full schema back to INI text.  `from_ini(to_ini(s))`
+    /// reconstructs an equal spec: every `[experiment]`/`[deploy]`/`[sweep]`
+    /// key is emitted explicitly, and an attached scenario is written either
+    /// as a `scenario = <builtin>` reference (when it is exactly a built-in)
+    /// or as embedded `[scenario]`/`[phase.*]`/`[event.*]` sections.  One
+    /// caveat inherits from the INI grammar: scenario/phase/event names and
+    /// summaries containing the comment/section characters `;`, `#`, `[`,
+    /// `]` are sanitized on emission (see [`Scenario::to_ini_sections`]),
+    /// so such programmatically built names round-trip to their sanitized
+    /// form.
+    pub fn to_ini(&self) -> String {
+        let e = &self.experiment;
+        let mut out = String::from("[experiment]\n");
+        let mut kv = |k: &str, v: String| {
+            out.push_str(k);
+            out.push_str(" = ");
+            out.push_str(&v);
+            out.push('\n');
+        };
+        kv("dataset", e.dataset.clone());
+        kv("scale", e.scale.to_string());
+        kv("cycles", e.cycles.to_string());
+        kv("variant", e.variant.name().to_string());
+        kv("learner", e.learner_name.clone());
+        kv("lambda", e.lambda.to_string());
+        kv("eta", e.eta.to_string());
+        kv("cache", e.cache.to_string());
+        kv("sampler", e.sampler.name().to_string());
+        if let SamplerConfig::Newscast { view_size } = e.sampler {
+            kv("view", view_size.to_string());
+        }
+        kv("failures", if e.failures { "extreme" } else { "none" }.to_string());
+        kv("seed", e.seed.to_string());
+        kv("eval_peers", e.eval_peers.to_string());
+        kv("voting", e.voting.to_string());
+        kv("similarity", e.similarity.to_string());
+        kv("backend", e.backend.name().to_string());
+        kv("mode", e.mode.clone());
+        kv("coalesce", e.coalesce.to_string());
+        kv("exec", e.exec_path.name().to_string());
+        // a scenario that is exactly a built-in round-trips by name; any
+        // other timeline embeds as full sections
+        let mut scenario_sections = None;
+        if let Some(s) = &e.scenario {
+            match crate::scenario::builtin(&s.name) {
+                Ok(b) if &b == s => kv("scenario", s.name.clone()),
+                _ => scenario_sections = Some(s.to_ini_sections()),
+            }
+        }
+        if self.target == Target::Deploy {
+            out.push_str(&format!(
+                "\n[deploy]\ndelta_ms = {}\nnodes = {}\n",
+                self.delta_ms, self.nodes
+            ));
+        }
+        if let Some(axes) = &self.sweep {
+            out.push('\n');
+            out.push_str(&axes.to_ini_section());
+        }
+        if let Some(sections) = scenario_sections {
+            out.push('\n');
+            out.push_str(&sections);
+        }
+        out
+    }
+
+    // ---- validation and session construction ---------------------------
+
+    /// Dataset-independent validation: learner/mode well-formed, the
+    /// backend matches the target, sweep axes are usable.  [`RunSpec::build`]
+    /// runs this plus the dataset-dependent checks.
+    pub fn validate(&self) -> Result<(), GolfError> {
+        self.experiment.learner()?;
+        self.experiment.exec_mode()?;
+        match self.target {
+            Target::Sim => {
+                if !matches!(
+                    self.experiment.backend,
+                    BackendChoice::Event | BackendChoice::EventPjrt
+                ) {
+                    return Err(GolfError::config(format!(
+                        "target sim needs an event backend, got {:?}",
+                        self.experiment.backend.name()
+                    )));
+                }
+            }
+            Target::Batched => {
+                if !matches!(
+                    self.experiment.backend,
+                    BackendChoice::BatchedNative | BackendChoice::BatchedPjrt
+                ) {
+                    return Err(GolfError::config(format!(
+                        "target batched needs a batched backend, got {:?}",
+                        self.experiment.backend.name()
+                    )));
+                }
+                if self.experiment.voting || self.experiment.similarity {
+                    return Err(GolfError::config(
+                        "voting/similarity measurement needs the event-driven \
+                         simulator (they would be silently ignored by the \
+                         batched driver)"
+                            .to_string(),
+                    ));
+                }
+            }
+            Target::Deploy => {
+                if self.experiment.backend != BackendChoice::Event {
+                    return Err(GolfError::config(format!(
+                        "the deployment runtime executes the protocol natively \
+                         inside each node thread; backend {} does not apply \
+                         under target deploy",
+                        self.experiment.backend.name()
+                    )));
+                }
+                if self.experiment.voting || self.experiment.similarity {
+                    return Err(GolfError::config(
+                        "voting/similarity measurement needs the event-driven \
+                         simulator (the deployment evaluates freshest models \
+                         only)"
+                            .to_string(),
+                    ));
+                }
+            }
+        }
+        if let Some(axes) = &self.sweep {
+            if self.target != Target::Sim || self.experiment.backend != BackendChoice::Event {
+                return Err(GolfError::config(format!(
+                    "sweep axes run on the native event-driven simulator \
+                     (target sim, backend event); got target {} on backend {}",
+                    self.target.name(),
+                    self.experiment.backend.name()
+                )));
+            }
+            if self.experiment.scenario.is_some() {
+                return Err(GolfError::config(
+                    "a sweep takes its scenario axis from `[sweep] scenarios = \
+                     <built-in names>`; an attached scenario timeline would be \
+                     silently ignored by the grid"
+                        .to_string(),
+                ));
+            }
+            if self.experiment.voting || self.experiment.similarity {
+                return Err(GolfError::config(
+                    "voting/similarity measurement is not available on the \
+                     sweep grid"
+                        .to_string(),
+                ));
+            }
+            // the grid consumes scale/cycles/seed/eval_peers/mode/coalesce/
+            // exec from the experiment; every other per-run key is fixed by
+            // the grid itself (3-dataset registry, per-dataset pegasos λ,
+            // paper cache/sampler, variants and failure modes from the
+            // axes) and must not be silently dropped
+            let d = ExperimentSpec::default();
+            let e = &self.experiment;
+            // any registry dataset is fine as a starting point (the grid
+            // always runs all three); a non-registry name is a real override
+            let dataset_in_registry =
+                matches!(e.dataset.as_str(), "reuters" | "spambase" | "urls");
+            let overridden = [
+                ("dataset", !dataset_in_registry),
+                ("variant", e.variant != d.variant),
+                ("learner", e.learner_name != d.learner_name),
+                ("lambda", e.lambda != d.lambda),
+                ("eta", e.eta != d.eta),
+                ("cache", e.cache != d.cache),
+                ("sampler", e.sampler != d.sampler),
+                ("failures", e.failures != d.failures),
+            ];
+            if let Some((key, _)) = overridden.iter().find(|(_, changed)| *changed) {
+                return Err(GolfError::config(format!(
+                    "sweep: `{key}` is fixed by the grid (the 3-dataset \
+                     registry runs pegasos with per-dataset λ; variants and \
+                     failure modes come from the [sweep] axes) — remove it \
+                     or use `golf run`"
+                )));
+            }
+            if axes.variants.is_empty() || axes.failures.is_empty() || axes.scenarios.is_empty()
+            {
+                return Err(GolfError::config(
+                    "sweep axes must be non-empty (variants, failures, scenarios)"
+                        .to_string(),
+                ));
+            }
+            if axes.replicates == 0 {
+                return Err(GolfError::config("sweep needs replicates >= 1".to_string()));
+            }
+            for name in &axes.scenarios {
+                if name != "none" {
+                    // full per-dataset timeline validation happens in
+                    // run_grid; resolve the name up front
+                    crate::scenario::builtin(name)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// One validation pass, then build the dataset and return a runnable
+    /// [`Session`].  Sweep specs validate their axes here and build their
+    /// datasets lazily inside the grid runner.
+    pub fn build(self) -> Result<Session<'static>, GolfError> {
+        self.validate()?;
+        Session::create_owned(self)
+    }
+
+    /// Like [`RunSpec::build`], but run against an already-built dataset
+    /// (the experiment drivers share one dataset across many runs; the
+    /// dataset's generation seed need not equal the protocol seed).  The
+    /// dataset's name must match `experiment.dataset`.
+    pub fn build_with(self, data: &Dataset) -> Result<Session<'_>, GolfError> {
+        self.validate()?;
+        Session::create_borrowed(self, data)
+    }
+}

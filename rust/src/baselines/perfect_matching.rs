@@ -5,13 +5,13 @@
 //! Fig. 2 to probe the model-diversity hypothesis.
 
 use crate::data::dataset::Dataset;
-use crate::gossip::protocol::{run, ProtocolConfig, RunResult};
+use crate::gossip::protocol::{GossipSim, ProtocolConfig, RunResult};
 use crate::p2p::overlay::SamplerConfig;
 
 /// Run the given configuration with the matching sampler swapped in.
 pub fn run_perfect_matching(mut cfg: ProtocolConfig, data: &Dataset) -> RunResult {
     cfg.sampler = SamplerConfig::Matching;
-    run(cfg, data)
+    GossipSim::new(cfg, data).run()
 }
 
 #[cfg(test)]

@@ -12,16 +12,22 @@
 //! golf info                                    artifact/runtime info
 //! ```
 //!
-//! `--key value` flags mirror the INI keys of config::ExperimentSpec.  Figure
-//! and sweep commands fan independent runs across threads (`--threads N`,
-//! default: all cores).
+//! `--key value` flags mirror the INI keys of `config::ExperimentSpec`; a
+//! repeated flag is a configuration error, never silently last-wins.  Every
+//! command constructs its runs through the [`crate::api`] facade
+//! (`RunSpec → Session → Outcome`), streams progress live via
+//! [`ProgressObserver`], and maps failures to distinct exit codes per
+//! [`GolfError`] variant (config=2, data=3, io=4, scenario=5, backend=6,
+//! wire=7).  Figure and sweep commands fan independent runs across threads
+//! (`--threads N`, default: all cores).
 
-use crate::config::{BackendChoice, ExperimentSpec};
-use crate::engine::batched::run_batched;
-use crate::engine::native::NativeBackend;
+use crate::api::{
+    GolfError, NullObserver, ProgressObserver, RunSpec, Session, SweepAxes, Target,
+};
+use crate::config::ExperimentSpec;
 use crate::engine::pjrt::PjrtBackend;
 use crate::experiments::{self, common, sweep};
-use crate::gossip::protocol::{ExecMode, ExecPath, RunResult};
+use crate::gossip::protocol::RunStats;
 use std::collections::HashMap;
 
 pub struct ParsedArgs {
@@ -29,9 +35,11 @@ pub struct ParsedArgs {
     pub flags: HashMap<String, String>,
 }
 
-/// Parse `--key value` pairs after the subcommand. Bare `--flag` followed by
-/// another flag (or end) gets value "true".
-pub fn parse_args(args: &[String]) -> Result<ParsedArgs, String> {
+/// Parse `--key value` pairs after the subcommand.  Bare `--flag` followed
+/// by another flag (or end) gets value "true".  A repeated flag is a typed
+/// configuration error — `--cycles 10 --cycles 20` must never silently pick
+/// one of the two.
+pub fn parse_args(args: &[String]) -> Result<ParsedArgs, GolfError> {
     let command = args.first().cloned().unwrap_or_else(|| "help".to_string());
     let mut flags = HashMap::new();
     let mut i = 1;
@@ -39,14 +47,20 @@ pub fn parse_args(args: &[String]) -> Result<ParsedArgs, String> {
         let a = &args[i];
         let key = a
             .strip_prefix("--")
-            .ok_or(format!("expected --flag, got {a:?}"))?;
+            .ok_or_else(|| GolfError::config(format!("expected --flag, got {a:?}")))?;
         let next_is_value = args.get(i + 1).map_or(false, |n| !n.starts_with("--"));
-        if next_is_value {
-            flags.insert(key.to_string(), args[i + 1].clone());
+        let value = if next_is_value {
+            let v = args[i + 1].clone();
             i += 2;
+            v
         } else {
-            flags.insert(key.to_string(), "true".to_string());
             i += 1;
+            "true".to_string()
+        };
+        if flags.insert(key.to_string(), value).is_some() {
+            return Err(GolfError::config(format!(
+                "duplicate flag --{key} (each flag may be given once)"
+            )));
         }
     }
     Ok(ParsedArgs { command, flags })
@@ -67,7 +81,7 @@ USAGE:
   golf fig1   [--scale S] [--cycles N] [--seed N] [--threads T] [--out-dir DIR]
   golf fig2   [--scale S] [--cycles N] [--seed N] [--threads T] [--out-dir DIR]
   golf fig3   [--scale S] [--cycles N] [--seed N] [--threads T] [--out-dir DIR]
-  golf sweep  [--scale S] [--cycles N] [--seed N] [--threads T]
+  golf sweep  [--config FILE] [--scale S] [--cycles N] [--seed N] [--threads T]
               [--replicates K] [--mode microbatch|scalar] [--coalesce TICKS]
               [--exec auto|dense|sparse] [--scenarios a,b,c] [--out-dir DIR]
   golf scenario <name|file.scn> [--dataset D] [--scale S] [--cycles N]
@@ -79,92 +93,151 @@ USAGE:
               [--failures none|extreme] [--sampler newscast|oracle]
               [--nodes N] [--delta_ms MS] [--eval_peers K] [--seed N]
               [--compare-sim] [--out FILE.csv]
-  golf info"
+  golf info
+
+EXIT CODES: 0 ok, 2 config, 3 data, 4 io, 5 scenario, 6 backend, 7 wire"
 }
 
-fn spec_from_flags(flags: &HashMap<String, String>) -> Result<ExperimentSpec, String> {
+/// Reject a parsed config whose bundled sections belong to another
+/// subcommand — nothing from a one-schema INI is ever silently ignored.
+fn reject_bundled_sections(
+    spec: &RunSpec,
+    origin: &str,
+    allow_deploy: bool,
+    allow_sweep: bool,
+) -> Result<(), GolfError> {
+    if !allow_deploy && spec.target == Target::Deploy {
+        return Err(GolfError::config(format!(
+            "{origin}: bundles a [deploy] section; run it with `golf deploy --config`"
+        )));
+    }
+    if !allow_sweep && spec.sweep.is_some() {
+        return Err(GolfError::config(format!(
+            "{origin}: bundles a [sweep] section; run it with `golf sweep --config`"
+        )));
+    }
+    Ok(())
+}
+
+/// Build the spec for `golf run`: the strict full-schema parser, restricted
+/// to what a single run can execute — a config bundling `[deploy]` or
+/// `[sweep]` sections is redirected to the right command instead of having
+/// parts of it silently ignored.
+fn run_spec_from_flags(flags: &HashMap<String, String>) -> Result<RunSpec, GolfError> {
     let mut spec = if let Some(path) = flags.get("config") {
-        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
-        ExperimentSpec::from_ini(&text)?
+        let spec = RunSpec::from_ini_file(path)?;
+        reject_bundled_sections(&spec, path, false, false)?;
+        spec
     } else {
-        ExperimentSpec::default()
+        RunSpec::default()
     };
     let mut kv = flags.clone();
     kv.remove("config");
     kv.remove("out");
-    spec.apply(&kv)?;
+    spec.experiment.apply(&kv)?;
+    spec.target = Target::for_backend(spec.experiment.backend);
     Ok(spec)
 }
 
-fn run_spec(spec: &ExperimentSpec) -> Result<RunResult, String> {
-    let ds = spec.build_dataset()?;
-    // scenarios must fit this run's node count and horizon before a
-    // simulator may compile them
-    spec.validate_scenario(ds.n_train())?;
-    let cfg = spec.protocol_config()?;
-    eprintln!(
-        "running {} on {} ({} nodes, d={}) for {} cycles [{}]",
-        cfg.variant.name(),
-        ds.name,
-        ds.n_train(),
-        ds.d(),
-        cfg.cycles,
-        spec.backend.name()
-    );
-    match spec.backend {
-        BackendChoice::Event => Ok(crate::gossip::run(cfg, &ds)),
-        BackendChoice::EventPjrt => {
-            let be = PjrtBackend::new(&PjrtBackend::default_dir())
-                .map_err(|e| format!("{e:#}"))?;
-            crate::gossip::run_with_backend(cfg, &ds, Box::new(be))
-                .map_err(|e| format!("{e:#}"))
+/// Apply `--key value` flags onto a full [`RunSpec`]: deployment keys go
+/// through the shared [`crate::config::DeploySpec::apply_deploy_key`],
+/// everything else delegates to the experiment schema.  The target
+/// re-follows the backend unless the spec is already a deployment.
+fn apply_flags(spec: &mut RunSpec, flags: &HashMap<String, String>) -> Result<(), GolfError> {
+    let mut d = spec.to_deploy_spec();
+    let mut rest = HashMap::new();
+    for (k, v) in flags {
+        if !d.apply_deploy_key(k, v)? {
+            rest.insert(k.clone(), v.clone());
         }
-        BackendChoice::BatchedNative => {
-            let mut be = NativeBackend::new();
-            run_batched(cfg, &ds, &mut be).map_err(|e| e.to_string())
-        }
-        BackendChoice::BatchedPjrt => {
-            let mut be = PjrtBackend::new(&PjrtBackend::default_dir())
-                .map_err(|e| format!("{e:#}"))?;
-            run_batched(cfg, &ds, &mut be).map_err(|e| format!("{e:#}"))
-        }
+    }
+    d.experiment.apply(&rest)?;
+    spec.experiment = d.experiment;
+    spec.delta_ms = d.delta_ms;
+    spec.nodes = d.nodes;
+    if spec.target != Target::Deploy {
+        spec.target = Target::for_backend(spec.experiment.backend);
+    }
+    Ok(())
+}
+
+fn announce(session: &Session<'_>) {
+    let spec = session.spec();
+    if let Some(ds) = session.data() {
+        eprintln!(
+            "running {} on {} ({} nodes, d={}) for {} cycles [{}]",
+            spec.experiment.variant.name(),
+            ds.name,
+            ds.n_train(),
+            ds.d(),
+            spec.experiment.cycles,
+            spec.experiment.backend.name()
+        );
     }
 }
 
-/// Resolve a deployment spec against its dataset, run it, print the report,
-/// and optionally run the matched simulator comparison / write CSV output.
-/// Shared by `golf deploy` and `golf scenario --deploy`.
+fn print_run_stats(s: &RunStats) {
+    eprintln!(
+        "sent={} delivered={} dropped={} lost_offline={} updates={}",
+        s.messages_sent,
+        s.messages_delivered,
+        s.messages_dropped,
+        s.messages_lost_offline,
+        s.updates_applied
+    );
+    if s.messages_blocked > 0 {
+        eprintln!("partition-blocked={}", s.messages_blocked);
+    }
+}
+
+fn write_csv(path: &str, curves: &[crate::eval::tracker::Curve]) -> Result<(), GolfError> {
+    crate::eval::csv::write_curves(std::path::Path::new(path), curves)
+        .map_err(|e| GolfError::io(path.to_string(), e))?;
+    eprintln!("wrote {path}");
+    Ok(())
+}
+
+/// Build and run a deployment session, print the report, and optionally run
+/// the matched simulator comparison / write CSV output.  Shared by
+/// `golf deploy` and `golf scenario --deploy`.
 fn deploy_and_report(
-    spec: &crate::config::DeploySpec,
+    mut spec: RunSpec,
     compare_sim: bool,
     out: Option<&str>,
-) -> Result<(), String> {
-    let ds = spec.experiment.build_dataset()?;
-    let cfg = spec.deploy_config(&ds)?;
+) -> Result<(), GolfError> {
+    spec.target = Target::Deploy;
+    let session = spec.build()?;
+    let ds = session.data().expect("a deployment session owns its dataset");
+    // the one config the session resolved at build time backs the banner,
+    // the run, and the matched-sim comparison
+    let dcfg = session
+        .deploy_config()
+        .expect("deploy sessions resolve their config at build time");
     eprintln!(
         "deploying {} {} nodes on {} (d={}) for {} cycles of {:?} [{} sampling{}{}]",
-        cfg.n_nodes,
-        cfg.variant.name(),
+        dcfg.n_nodes,
+        dcfg.variant.name(),
         ds.name,
         ds.d(),
-        cfg.cycles,
-        cfg.delta,
-        cfg.sampler.name(),
-        if cfg.churn.is_some() { ", churn+drop/delay" } else { "" },
-        cfg.scenario
+        dcfg.cycles,
+        dcfg.delta,
+        dcfg.sampler.name(),
+        if dcfg.churn.is_some() { ", churn+drop/delay" } else { "" },
+        dcfg.scenario
             .as_ref()
             .map_or(String::new(), |s| format!(", scenario {:?}", s.name)),
     );
-    if compare_sim && cfg.n_nodes != ds.n_train() {
+    if compare_sim && dcfg.n_nodes != ds.n_train() {
         eprintln!(
             "warning: --compare-sim with nodes = {} but {} training rows — \
              the simulator always runs one node per row",
-            cfg.n_nodes,
+            dcfg.n_nodes,
             ds.n_train()
         );
     }
-    let report = crate::coordinator::run_deployment(&cfg, &ds).map_err(|e| e.to_string())?;
-    print_points(&report.curve);
+    let mut obs = ProgressObserver::stderr();
+    let outcome = session.run(&mut obs)?;
+    let report = outcome.deploy_report().expect("deploy target yields a report");
     let s = &report.stats;
     eprintln!(
         "sent={} received={} bytes={} sim_dropped={} blocked={} backlog_lost={} \
@@ -185,8 +258,7 @@ fn deploy_and_report(
     );
     let mut curves = vec![report.curve.clone()];
     if compare_sim {
-        let sim_cfg = crate::coordinator::matched_sim_config(&cfg);
-        let sim = crate::gossip::run(sim_cfg, &ds);
+        let sim = crate::api::run_matched_sim(dcfg, ds, &mut NullObserver)?;
         eprintln!(
             "matched simulator final {:.4} (deploy {:.4}, gap {:+.4})",
             sim.curve.final_error(),
@@ -196,43 +268,13 @@ fn deploy_and_report(
         curves.push(sim.curve);
     }
     if let Some(out) = out {
-        crate::eval::csv::write_curves(std::path::Path::new(out), &curves)
-            .map_err(|e| e.to_string())?;
-        eprintln!("wrote {out}");
+        write_csv(out, &curves)?;
     }
     Ok(())
 }
 
-fn print_points(curve: &crate::eval::tracker::Curve) {
-    let mut t = crate::util::benchkit::Table::new(&[
-        "cycle", "err", "±std", "vote", "similarity", "msgs",
-    ]);
-    for p in &curve.points {
-        t.row(&[
-            p.cycle.to_string(),
-            format!("{:.4}", p.err_mean),
-            format!("{:.4}", p.err_std),
-            p.err_vote.map_or("-".into(), |v| format!("{v:.4}")),
-            p.similarity.map_or("-".into(), |v| format!("{v:.4}")),
-            p.messages_sent.to_string(),
-        ]);
-    }
-    t.print();
-}
-
-fn print_curve(res: &RunResult) {
-    print_points(&res.curve);
-    eprintln!(
-        "sent={} delivered={} dropped={} lost_offline={} updates={}",
-        res.stats.messages_sent,
-        res.stats.messages_delivered,
-        res.stats.messages_dropped,
-        res.stats.messages_lost_offline,
-        res.stats.updates_applied
-    );
-}
-
-/// Entry point used by main.rs; returns a process exit code.
+/// Entry point used by main.rs; returns a process exit code — 0 on success,
+/// otherwise the failing [`GolfError`]'s distinct per-variant code.
 pub fn dispatch(args: &[String]) -> i32 {
     // `golf scenario <name|file>` takes one positional argument; splice it
     // into the flag map so the strict `--flag value` parser stays strict
@@ -249,14 +291,14 @@ pub fn dispatch(args: &[String]) -> i32 {
         Ok(p) => p,
         Err(e) => {
             eprintln!("error: {e}\n\n{}", usage());
-            return 2;
+            return e.exit_code();
         }
     };
     match run_command(&parsed) {
         Ok(()) => 0,
         Err(e) => {
             eprintln!("error: {e}");
-            1
+            e.exit_code()
         }
     }
 }
@@ -269,19 +311,44 @@ struct FigArgs {
     out: std::path::PathBuf,
 }
 
-fn fig_args(flags: &HashMap<String, String>) -> Result<FigArgs, String> {
+/// The figure/table commands take exactly the [`FigArgs`] flags; anything
+/// else (e.g. a per-run key like `--dataset`) is rejected instead of
+/// vanishing silently.
+fn check_fig_flags(flags: &HashMap<String, String>) -> Result<(), GolfError> {
+    for k in flags.keys() {
+        match k.as_str() {
+            "scale" | "cycles" | "seed" | "threads" | "out-dir" => {}
+            other => {
+                return Err(GolfError::config(format!(
+                    "unknown flag --{other} (figure commands take \
+                     --scale/--cycles/--seed/--threads/--out-dir; per-run \
+                     keys belong to `golf run`)"
+                )))
+            }
+        }
+    }
+    Ok(())
+}
+
+fn fig_args(flags: &HashMap<String, String>) -> Result<FigArgs, GolfError> {
     let scale: f64 = flags.get("scale").map_or(Ok(common::env_scale()), |s| {
-        s.parse().map_err(|_| format!("bad scale {s:?}"))
+        s.parse()
+            .map_err(|_| GolfError::config(format!("bad scale {s:?}")))
     })?;
     let cycles: Option<u64> = match flags.get("cycles") {
-        Some(s) => Some(s.parse().map_err(|_| format!("bad cycles {s:?}"))?),
+        Some(s) => Some(
+            s.parse()
+                .map_err(|_| GolfError::config(format!("bad cycles {s:?}")))?,
+        ),
         None => None,
     };
     let seed: u64 = flags.get("seed").map_or(Ok(42), |s| {
-        s.parse().map_err(|_| format!("bad seed {s:?}"))
+        s.parse()
+            .map_err(|_| GolfError::config(format!("bad seed {s:?}")))
     })?;
     let threads: usize = flags.get("threads").map_or(Ok(sweep::thread_count()), |s| {
-        s.parse().map_err(|_| format!("bad threads {s:?}"))
+        s.parse()
+            .map_err(|_| GolfError::config(format!("bad threads {s:?}")))
     })?;
     let out: std::path::PathBuf = flags
         .get("out-dir")
@@ -290,20 +357,24 @@ fn fig_args(flags: &HashMap<String, String>) -> Result<FigArgs, String> {
     Ok(FigArgs { scale, cycles, seed, threads, out })
 }
 
-fn run_command(parsed: &ParsedArgs) -> Result<(), String> {
+fn run_command(parsed: &ParsedArgs) -> Result<(), GolfError> {
     match parsed.command.as_str() {
         "run" => {
-            let spec = spec_from_flags(&parsed.flags)?;
-            let res = run_spec(&spec)?;
-            print_curve(&res);
+            let spec = run_spec_from_flags(&parsed.flags)?;
+            let session = spec.build()?;
+            announce(&session);
+            let outcome = session.run(&mut ProgressObserver::stderr())?;
+            if let Some(stats) = outcome.run_stats() {
+                print_run_stats(stats);
+            }
             if let Some(out) = parsed.flags.get("out") {
-                crate::eval::csv::write_curves(std::path::Path::new(out), &[res.curve.clone()])
-                    .map_err(|e| e.to_string())?;
-                eprintln!("wrote {out}");
+                let curve = outcome.curve().expect("single run has a curve");
+                write_csv(out, std::slice::from_ref(curve))?;
             }
             Ok(())
         }
         "table1" => {
+            check_fig_flags(&parsed.flags)?;
             let a = fig_args(&parsed.flags)?;
             let sets = experiments::datasets(a.seed, a.scale);
             let rows = experiments::table1::run_threads(&sets, a.seed, a.threads);
@@ -311,71 +382,111 @@ fn run_command(parsed: &ParsedArgs) -> Result<(), String> {
             Ok(())
         }
         "fig1" => {
+            check_fig_flags(&parsed.flags)?;
             let a = fig_args(&parsed.flags)?;
             let sets = experiments::datasets(a.seed, a.scale);
             let panels = experiments::fig1::run_figure_threads(&sets, a.cycles, a.seed, a.threads);
-            experiments::fig1::to_csv(&panels, &a.out).map_err(|e| e.to_string())?;
+            experiments::fig1::to_csv(&panels, &a.out)
+                .map_err(|e| GolfError::io(a.out.display().to_string(), e))?;
             eprintln!("wrote {} panels to {}", panels.len(), a.out.display());
             Ok(())
         }
         "fig2" => {
+            check_fig_flags(&parsed.flags)?;
             let a = fig_args(&parsed.flags)?;
             let sets = experiments::datasets(a.seed, a.scale);
             let panels = experiments::fig2::run_figure_threads(&sets, a.cycles, a.seed, a.threads);
-            experiments::fig2::to_csv(&panels, &a.out).map_err(|e| e.to_string())?;
+            experiments::fig2::to_csv(&panels, &a.out)
+                .map_err(|e| GolfError::io(a.out.display().to_string(), e))?;
             eprintln!("wrote {} panels to {}", panels.len(), a.out.display());
             Ok(())
         }
         "fig3" => {
+            check_fig_flags(&parsed.flags)?;
             let a = fig_args(&parsed.flags)?;
             let sets = experiments::datasets(a.seed, a.scale);
             let panels = experiments::fig3::run_figure_threads(&sets, a.cycles, a.seed, a.threads);
-            experiments::fig3::to_csv(&panels, &a.out).map_err(|e| e.to_string())?;
+            experiments::fig3::to_csv(&panels, &a.out)
+                .map_err(|e| GolfError::io(a.out.display().to_string(), e))?;
             eprintln!("wrote {} panels to {}", panels.len(), a.out.display());
             Ok(())
         }
         "sweep" => {
-            let a = fig_args(&parsed.flags)?;
-            let replicates: u64 = parsed.flags.get("replicates").map_or(Ok(1), |s| {
-                s.parse().map_err(|_| format!("bad replicates {s:?}"))
-            })?;
-            let coalesce: u64 = parsed.flags.get("coalesce").map_or(Ok(0), |s| {
-                s.parse().map_err(|_| format!("bad coalesce {s:?}"))
-            })?;
-            let mut cfg =
-                sweep::SweepConfig::paper_grid(a.scale, a.cycles.unwrap_or(200), a.seed);
-            cfg.replicates = replicates.max(1);
-            cfg.threads = a.threads;
-            cfg.exec = match parsed.flags.get("mode").map(String::as_str) {
-                None | Some("microbatch") => ExecMode::MicroBatch { coalesce },
-                Some("scalar") => ExecMode::Scalar,
-                Some(other) => return Err(format!("bad mode {other:?}")),
+            // strict flag set: anything else (e.g. --dataset, a per-run key)
+            // would otherwise vanish silently
+            for k in parsed.flags.keys() {
+                match k.as_str() {
+                    "config" | "scale" | "cycles" | "seed" | "threads" | "out-dir"
+                    | "replicates" | "mode" | "coalesce" | "exec" | "scenarios" => {}
+                    other => {
+                        return Err(GolfError::config(format!(
+                            "sweep: unknown flag --{other} (the grid always runs \
+                             the 3-dataset registry; per-run keys belong to \
+                             `golf run` or the [experiment] section of --config)"
+                        )))
+                    }
+                }
+            }
+            // --config FILE may carry the full one-schema INI, including a
+            // [sweep] section; explicit flags override it
+            let (mut exp, mut axes) = match parsed.flags.get("config") {
+                Some(path) => {
+                    let mut spec = RunSpec::from_ini_file(path)?;
+                    reject_bundled_sections(&spec, path, false, true)?;
+                    let axes = spec.sweep.take().unwrap_or_default();
+                    (spec.experiment, axes)
+                }
+                None => (
+                    ExperimentSpec { scale: common::env_scale(), ..Default::default() },
+                    SweepAxes::default(),
+                ),
             };
-            cfg.path = match parsed.flags.get("exec") {
-                None => ExecPath::Auto,
-                Some(s) => ExecPath::parse(s).ok_or(format!("bad exec {s:?}"))?,
-            };
+            // experiment-schema flags route through the one parser
+            let mut kv = HashMap::new();
+            for key in ["scale", "cycles", "seed", "mode", "coalesce", "exec"] {
+                if let Some(v) = parsed.flags.get(key) {
+                    kv.insert(key.to_string(), v.clone());
+                }
+            }
+            exp.apply(&kv)?;
+            if let Some(s) = parsed.flags.get("threads") {
+                axes.threads = s
+                    .parse()
+                    .map_err(|_| GolfError::config(format!("bad threads {s:?}")))?;
+            }
+            let out_dir: std::path::PathBuf = parsed
+                .flags
+                .get("out-dir")
+                .map(Into::into)
+                .unwrap_or_else(common::results_dir);
+            if let Some(s) = parsed.flags.get("replicates") {
+                // 0 is rejected by RunSpec::validate, same as the INI key
+                axes.replicates = s
+                    .parse()
+                    .map_err(|_| GolfError::config(format!("bad replicates {s:?}")))?;
+            }
             if let Some(list) = parsed.flags.get("scenarios") {
                 // names and timelines are validated against the grid's
                 // actual datasets by run_grid before any job is dispatched
-                cfg.scenarios =
-                    list.split(',').map(|s| s.trim().to_string()).collect();
+                axes.scenarios = list.split(',').map(|s| s.trim().to_string()).collect();
             }
             eprintln!(
                 "sweep: 3 datasets x {} variants x {} failure modes x {} scenarios x {} \
                  replicates on {} threads",
-                cfg.variants.len(),
-                cfg.failures.len(),
-                cfg.scenarios.len(),
-                cfg.replicates,
-                cfg.threads
+                axes.variants.len(),
+                axes.failures.len(),
+                axes.scenarios.len(),
+                axes.replicates,
+                axes.threads
             );
-            let cells = sweep::run_grid(&cfg)?;
+            let session = RunSpec::from_spec(exp).sweep(axes).build()?;
+            let outcome = session.run(&mut NullObserver)?;
+            let cells = outcome.sweep_cells().expect("sweep target yields cells");
             let mut t = crate::util::benchkit::Table::new(&[
                 "dataset", "variant", "failures", "scenario", "rep", "seed", "final err",
                 "msgs",
             ]);
-            for c in &cells {
+            for c in cells {
                 t.row(&[
                     c.dataset.clone(),
                     c.variant.name().to_string(),
@@ -388,8 +499,9 @@ fn run_command(parsed: &ParsedArgs) -> Result<(), String> {
                 ]);
             }
             t.print();
-            sweep::to_csv(&cells, &a.out).map_err(|e| e.to_string())?;
-            eprintln!("wrote {} sweep cells to {}", cells.len(), a.out.display());
+            sweep::to_csv(cells, &out_dir)
+                .map_err(|e| GolfError::io(out_dir.display().to_string(), e))?;
+            eprintln!("wrote {} sweep cells to {}", cells.len(), out_dir.display());
             Ok(())
         }
         "deploy" => {
@@ -397,20 +509,21 @@ fn run_command(parsed: &ParsedArgs) -> Result<(), String> {
             let compare_sim = flags.remove("compare-sim").is_some();
             let out = flags.remove("out");
             let mut spec = if let Some(path) = flags.remove("config") {
-                let text =
-                    std::fs::read_to_string(&path).map_err(|e| format!("{path}: {e}"))?;
-                crate::config::DeploySpec::from_ini(&text)?
+                let spec = RunSpec::from_ini_file(&path)?;
+                reject_bundled_sections(&spec, &path, true, false)?;
+                spec
             } else {
-                crate::config::DeploySpec::default()
+                RunSpec::default()
             };
-            spec.apply(&flags)?;
-            deploy_and_report(&spec, compare_sim, out.as_deref())
+            spec.target = Target::Deploy;
+            apply_flags(&mut spec, &flags)?;
+            deploy_and_report(spec, compare_sim, out.as_deref())
         }
         "scenario" => {
             if parsed.flags.contains_key("list") {
                 let mut t = crate::util::benchkit::Table::new(&["name", "cycles", "summary"]);
                 for &name in crate::scenario::builtin_names() {
-                    let s = crate::scenario::builtin(name).map_err(|e| e.to_string())?;
+                    let s = crate::scenario::builtin(name)?;
                     t.row(&[
                         name.to_string(),
                         s.cycles_hint.map_or("-".into(), |c| c.to_string()),
@@ -421,9 +534,11 @@ fn run_command(parsed: &ParsedArgs) -> Result<(), String> {
                 return Ok(());
             }
             let mut flags = parsed.flags.clone();
-            let name = flags
-                .remove("name")
-                .ok_or("scenario: pass a built-in name or a .scn file (or --list)")?;
+            let name = flags.remove("name").ok_or_else(|| {
+                GolfError::config(
+                    "scenario: pass a built-in name or a .scn file (or --list)".to_string(),
+                )
+            })?;
             let deploy = flags.remove("deploy").is_some();
             let compare_sim = flags.remove("compare-sim").is_some();
             let out = flags.remove("out");
@@ -432,16 +547,16 @@ fn run_command(parsed: &ParsedArgs) -> Result<(), String> {
             // names a built-in
             let is_file = name.ends_with(".scn") || std::path::Path::new(&name).exists();
             let mut spec = if is_file {
-                let text =
-                    std::fs::read_to_string(&name).map_err(|e| format!("{name}: {e}"))?;
-                let spec = crate::config::DeploySpec::from_ini(&text)?;
+                let spec = RunSpec::from_ini_file(&name)?;
                 if spec.experiment.scenario.is_none() {
-                    return Err(format!("{name}: no [scenario] section"));
+                    return Err(GolfError::config(format!("{name}: no [scenario] section")));
                 }
+                // a bundled [deploy] section is fine here (--deploy uses it)
+                reject_bundled_sections(&spec, &name, true, false)?;
                 spec
             } else {
-                let scn = crate::scenario::builtin(&name).map_err(|e| e.to_string())?;
-                let mut spec = crate::config::DeploySpec::default();
+                let scn = crate::scenario::builtin(&name)?;
+                let mut spec = RunSpec::default();
                 // built-ins carry a suggested run length; --cycles overrides
                 if let Some(hint) = scn.cycles_hint {
                     spec.experiment.cycles = hint;
@@ -449,31 +564,48 @@ fn run_command(parsed: &ParsedArgs) -> Result<(), String> {
                 spec.experiment.scenario = Some(scn);
                 spec
             };
-            spec.apply(&flags)?;
+            if !deploy {
+                // deployment flags without --deploy would be silently
+                // swallowed by the simulator path; probe the authoritative
+                // key set so this guard can never drift from it
+                let mut probe = spec.to_deploy_spec();
+                for (k, v) in &flags {
+                    if !matches!(probe.apply_deploy_key(k, v), Ok(false)) {
+                        return Err(GolfError::config(format!(
+                            "scenario: --{k} configures the socket deployment; \
+                             combine it with --deploy"
+                        )));
+                    }
+                }
+            }
+            apply_flags(&mut spec, &flags)?;
             let scn_name = spec.experiment.scenario.as_ref().unwrap().name.clone();
             if deploy {
                 eprintln!("scenario {scn_name:?} on the socket deployment runtime");
-                return deploy_and_report(&spec, compare_sim, out.as_deref());
+                return deploy_and_report(spec, compare_sim, out.as_deref());
             }
             if compare_sim {
                 // a simulator run has nothing to compare itself against;
                 // never let the flag be silently ignored
-                return Err(
+                return Err(GolfError::config(
                     "scenario: --compare-sim compares a deployment against the \
                      matched simulator; combine it with --deploy"
-                        .into(),
-                );
+                        .to_string(),
+                ));
             }
+            // a bundled [deploy] section without --deploy still runs the
+            // simulator, exactly as before the facade
+            spec.target = Target::for_backend(spec.experiment.backend);
             eprintln!("scenario {scn_name:?} [{}]", spec.experiment.backend.name());
-            let res = run_spec(&spec.experiment)?;
-            print_curve(&res);
-            if res.stats.messages_blocked > 0 {
-                eprintln!("partition-blocked={}", res.stats.messages_blocked);
+            let session = spec.build()?;
+            announce(&session);
+            let outcome = session.run(&mut ProgressObserver::stderr())?;
+            if let Some(stats) = outcome.run_stats() {
+                print_run_stats(stats);
             }
             if let Some(out) = out {
-                crate::eval::csv::write_curves(std::path::Path::new(&out), &[res.curve.clone()])
-                    .map_err(|e| e.to_string())?;
-                eprintln!("wrote {out}");
+                let curve = outcome.curve().expect("single run has a curve");
+                write_csv(&out, std::slice::from_ref(curve))?;
             }
             Ok(())
         }
@@ -496,7 +628,10 @@ fn run_command(parsed: &ParsedArgs) -> Result<(), String> {
             println!("{}", usage());
             Ok(())
         }
-        other => Err(format!("unknown command {other:?}\n\n{}", usage())),
+        other => Err(GolfError::config(format!(
+            "unknown command {other:?}\n\n{}",
+            usage()
+        ))),
     }
 }
 
@@ -522,18 +657,107 @@ mod tests {
         assert!(parse_args(&s(&["run", "oops"])).is_err());
     }
 
+    /// Satellite pin: a repeated flag is a typed config error, never a
+    /// silent last-wins.
+    #[test]
+    fn duplicate_flag_is_config_error() {
+        let e = parse_args(&s(&["run", "--cycles", "10", "--cycles", "20"])).unwrap_err();
+        assert!(matches!(e, GolfError::Config(_)), "{e}");
+        assert!(e.to_string().contains("duplicate flag --cycles"), "{e}");
+        assert_eq!(e.exit_code(), 2);
+        // repeated bare flags are duplicates too
+        let e = parse_args(&s(&["run", "--voting", "--voting"])).unwrap_err();
+        assert!(matches!(e, GolfError::Config(_)), "{e}");
+        // ... and the whole dispatch exits with the config code
+        assert_eq!(dispatch(&s(&["run", "--seed", "1", "--seed", "2"])), 2);
+    }
+
     #[test]
     fn spec_from_flags_applies_overrides() {
         let p = parse_args(&s(&["run", "--dataset", "spambase", "--cycles", "5"])).unwrap();
-        let spec = spec_from_flags(&p.flags).unwrap();
-        assert_eq!(spec.dataset, "spambase");
-        assert_eq!(spec.cycles, 5);
+        let spec = run_spec_from_flags(&p.flags).unwrap();
+        assert_eq!(spec.experiment.dataset, "spambase");
+        assert_eq!(spec.experiment.cycles, 5);
+    }
+
+    /// `golf run --config` uses the strict full-schema parser: a config
+    /// whose sections belong to another command is redirected, never
+    /// silently half-applied.
+    #[test]
+    fn run_config_redirects_deploy_and_sweep_sections() {
+        let dir = std::env::temp_dir();
+        let dpath = dir.join("golf_cli_run_deploy.ini");
+        std::fs::write(&dpath, "[experiment]\ndataset = urls\n\n[deploy]\nnodes = 8\n").unwrap();
+        let e = run_spec_from_flags(
+            &parse_args(&s(&["run", "--config", dpath.to_str().unwrap()]))
+                .unwrap()
+                .flags,
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("golf deploy"), "{e}");
+        let spath = dir.join("golf_cli_run_sweep.ini");
+        std::fs::write(
+            &spath,
+            "[experiment]\ndataset = urls\n\n[sweep]\nvariants = mu\n",
+        )
+        .unwrap();
+        let e = run_spec_from_flags(
+            &parse_args(&s(&["run", "--config", spath.to_str().unwrap()]))
+                .unwrap()
+                .flags,
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("golf sweep"), "{e}");
+        // a typo'd section is a hard error, not a silently ignored block
+        let tpath = dir.join("golf_cli_run_typo.ini");
+        std::fs::write(&tpath, "[expermient]\ndataset = urls\n").unwrap();
+        assert_eq!(dispatch(&s(&["run", "--config", tpath.to_str().unwrap()])), 2);
+        std::fs::remove_file(&dpath).ok();
+        std::fs::remove_file(&spath).ok();
+        std::fs::remove_file(&tpath).ok();
+    }
+
+    /// `golf sweep --config` consumes a one-schema INI with a [sweep]
+    /// section end to end.
+    #[test]
+    fn tiny_sweep_from_config_file() {
+        let path = std::env::temp_dir().join("golf_cli_sweep_config.ini");
+        std::fs::write(
+            &path,
+            "[experiment]\nscale = 0.005\ncycles = 3\neval_peers = 5\n\n\
+             [sweep]\nvariants = mu\nfailures = none\nthreads = 2\n",
+        )
+        .unwrap();
+        let dir = std::env::temp_dir().join("golf_cli_sweep_config_out");
+        let p = parse_args(&s(&[
+            "sweep", "--config", path.to_str().unwrap(),
+            "--out-dir", dir.to_str().unwrap(),
+        ]))
+        .unwrap();
+        run_command(&p).unwrap();
+        assert!(dir.join("sweep_urls_nofail.csv").exists());
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
     fn unknown_command_errors() {
         let p = parse_args(&s(&["frobnicate"])).unwrap();
         assert!(run_command(&p).is_err());
+        assert_eq!(dispatch(&s(&["frobnicate"])), 2);
+    }
+
+    /// Satellite pin: each GolfError variant surfaces as its own exit code.
+    #[test]
+    fn exit_codes_map_error_variants() {
+        // config error (bad flag value)
+        assert_eq!(dispatch(&s(&["run", "--variant", "xx"])), 2);
+        // data error (unknown dataset)
+        assert_eq!(dispatch(&s(&["run", "--dataset", "nope"])), 3);
+        // io error (missing config file)
+        assert_eq!(dispatch(&s(&["run", "--config", "/no/such/file.ini"])), 4);
+        // scenario error (unknown built-in)
+        assert_eq!(dispatch(&s(&["run", "--scenario", "warp"])), 5);
     }
 
     #[test]
@@ -582,22 +806,27 @@ mod tests {
         assert!(run_command(&p).is_err());
         let p = parse_args(&s(&["deploy", "--bogus_key", "1"])).unwrap();
         assert!(run_command(&p).is_err());
-        // more nodes than training rows
-        let p = parse_args(&s(&[
-            "deploy", "--dataset", "urls", "--scale", "0.002", "--nodes", "21",
-        ]))
-        .unwrap();
-        assert!(run_command(&p).is_err());
+        // more nodes than training rows is a data error (exit code 3)
+        assert_eq!(
+            dispatch(&s(&[
+                "deploy", "--dataset", "urls", "--scale", "0.002", "--nodes", "21",
+            ])),
+            3
+        );
     }
 
     #[test]
     fn scenario_list_and_unknown_name() {
         assert_eq!(dispatch(&s(&["scenario", "--list"])), 0);
-        assert_eq!(dispatch(&s(&["scenario", "no-such-scenario"])), 1);
-        // no positional and no --list is an error with guidance
-        assert_eq!(dispatch(&s(&["scenario"])), 1);
+        // unknown built-in -> scenario error code
+        assert_eq!(dispatch(&s(&["scenario", "no-such-scenario"])), 5);
+        // no positional and no --list is a config error with guidance
+        assert_eq!(dispatch(&s(&["scenario"])), 2);
         // --compare-sim only makes sense against a deployment
-        assert_eq!(dispatch(&s(&["scenario", "paper-fig3", "--compare-sim"])), 1);
+        assert_eq!(dispatch(&s(&["scenario", "paper-fig3", "--compare-sim"])), 2);
+        // ... and so do the deployment flags (never silently swallowed)
+        assert_eq!(dispatch(&s(&["scenario", "paper-fig3", "--nodes", "64"])), 2);
+        assert_eq!(dispatch(&s(&["scenario", "paper-fig3", "--delta_ms", "30"])), 2);
     }
 
     #[test]
@@ -610,12 +839,13 @@ mod tests {
             ])),
             0
         );
-        // a timeline that cannot fit the overridden horizon is rejected
+        // a timeline that cannot fit the overridden horizon is a scenario
+        // error (exit code 5)
         assert_eq!(
             dispatch(&s(&[
                 "scenario", "partition-heal", "--scale", "0.005", "--cycles", "6",
             ])),
-            1
+            5
         );
     }
 
@@ -629,10 +859,10 @@ mod tests {
         )
         .unwrap();
         assert_eq!(dispatch(&s(&["scenario", path.to_str().unwrap()])), 0);
-        // a file without a [scenario] section is rejected
+        // a file without a [scenario] section is a config error
         let bare = std::env::temp_dir().join("golf_cli_scenario_bare.scn");
         std::fs::write(&bare, "[experiment]\ndataset = urls\n").unwrap();
-        assert_eq!(dispatch(&s(&["scenario", bare.to_str().unwrap()])), 1);
+        assert_eq!(dispatch(&s(&["scenario", bare.to_str().unwrap()])), 2);
         std::fs::remove_file(&path).ok();
         std::fs::remove_file(&bare).ok();
     }

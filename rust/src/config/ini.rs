@@ -1,12 +1,16 @@
 //! Tiny INI parser: `[section]` headers, `key = value` pairs, `;`/`#`
 //! comments, blank lines.  Values keep internal whitespace.
 
+use crate::api::GolfError;
 use std::collections::HashMap;
 
 pub type Section = HashMap<String, String>;
 pub type Document = HashMap<String, Section>;
 
-pub fn parse(text: &str) -> Result<Document, String> {
+pub fn parse(text: &str) -> Result<Document, GolfError> {
+    let bad = |lineno: usize, what: &str| {
+        GolfError::config(format!("line {}: {what}", lineno + 1))
+    };
     let mut doc: Document = HashMap::new();
     let mut current = String::from("");
     for (lineno, raw) in text.lines().enumerate() {
@@ -17,23 +21,29 @@ pub fn parse(text: &str) -> Result<Document, String> {
         if let Some(name) = line.strip_prefix('[') {
             let name = name
                 .strip_suffix(']')
-                .ok_or(format!("line {}: unterminated section", lineno + 1))?
+                .ok_or_else(|| bad(lineno, "unterminated section"))?
                 .trim();
             if name.is_empty() {
-                return Err(format!("line {}: empty section name", lineno + 1));
+                return Err(bad(lineno, "empty section name"));
             }
             current = name.to_string();
             doc.entry(current.clone()).or_default();
         } else if let Some((k, v)) = line.split_once('=') {
             let (k, v) = (k.trim(), v.trim());
             if k.is_empty() {
-                return Err(format!("line {}: empty key", lineno + 1));
+                return Err(bad(lineno, "empty key"));
             }
-            doc.entry(current.clone())
+            let prev = doc
+                .entry(current.clone())
                 .or_default()
                 .insert(k.to_string(), v.to_string());
+            if prev.is_some() {
+                // same contract as repeated CLI flags: never silently
+                // last-wins
+                return Err(bad(lineno, &format!("duplicate key {k:?}")));
+            }
         } else {
-            return Err(format!("line {}: expected `key = value`", lineno + 1));
+            return Err(bad(lineno, "expected `key = value`"));
         }
     }
     Ok(doc)
@@ -75,9 +85,23 @@ mod tests {
 
     #[test]
     fn errors_are_reported_with_lines() {
-        assert!(parse("[unterminated").unwrap_err().contains("line 1"));
-        assert!(parse("[s]\nnonsense").unwrap_err().contains("line 2"));
-        assert!(parse("= v").unwrap_err().contains("empty key"));
-        assert!(parse("[]").unwrap_err().contains("empty section"));
+        let msg = |t: &str| parse(t).unwrap_err().to_string();
+        assert!(msg("[unterminated").contains("line 1"));
+        assert!(msg("[s]\nnonsense").contains("line 2"));
+        assert!(msg("= v").contains("empty key"));
+        assert!(msg("[]").contains("empty section"));
+        // every parse failure is a typed Config error (exit code 2)
+        assert_eq!(parse("[oops").unwrap_err().exit_code(), 2);
+    }
+
+    #[test]
+    fn duplicate_keys_are_errors_not_last_wins() {
+        let e = parse("[s]\ncycles = 10\ncycles = 20").unwrap_err().to_string();
+        assert!(e.contains("duplicate key"), "{e}");
+        assert!(e.contains("line 3"), "{e}");
+        // the same key in different sections is fine
+        parse("[a]\nk = 1\n[b]\nk = 2").unwrap();
+        // ... but a re-opened section with a repeated key is caught
+        assert!(parse("[a]\nk = 1\n[b]\nx = 1\n[a]\nk = 2").is_err());
     }
 }

@@ -32,6 +32,7 @@
 //! standalone `.scn` format, `crate::scenario`) may be embedded in the same
 //! file; it overrides any `scenario =` built-in reference.
 
+use crate::api::GolfError;
 use crate::data::dataset::Dataset;
 use crate::data::synthetic::{reuters_like, spambase_like, urls_like, Scale};
 use crate::gossip::create_model::Variant;
@@ -73,7 +74,7 @@ impl BackendChoice {
     }
 }
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct ExperimentSpec {
     pub dataset: String,
     pub scale: f64,
@@ -129,38 +130,48 @@ impl Default for ExperimentSpec {
 
 impl ExperimentSpec {
     /// Apply a parsed key=value map (e.g. from an INI section or CLI flags).
-    pub fn apply(&mut self, kv: &HashMap<String, String>) -> Result<(), String> {
+    ///
+    /// `sampler` is applied before every other key: `view` edits the
+    /// NEWSCAST sampler in place, and the map's iteration order is
+    /// arbitrary, so without the pre-pass `sampler = newscast` could reset a
+    /// `view` that happened to be applied first.
+    pub fn apply(&mut self, kv: &HashMap<String, String>) -> Result<(), GolfError> {
+        if let Some(v) = kv.get("sampler") {
+            self.sampler = match v.as_str() {
+                "newscast" => SamplerConfig::Newscast { view_size: 20 },
+                "oracle" => SamplerConfig::Oracle,
+                "matching" => SamplerConfig::Matching,
+                _ => return Err(GolfError::config(format!("bad sampler {v:?}"))),
+            };
+        }
         for (k, v) in kv {
             match k.as_str() {
+                "sampler" => {} // applied above
                 "dataset" => self.dataset = v.clone(),
                 "scale" => self.scale = parse(v, k)?,
                 "cycles" => self.cycles = parse(v, k)?,
                 "variant" => {
-                    self.variant =
-                        Variant::parse(v).ok_or(format!("bad variant {v:?}"))?
+                    self.variant = Variant::parse(v)
+                        .ok_or_else(|| GolfError::config(format!("bad variant {v:?}")))?
                 }
                 "learner" => self.learner_name = v.clone(),
                 "lambda" => self.lambda = parse(v, k)?,
                 "eta" => self.eta = parse(v, k)?,
                 "cache" => self.cache = parse(v, k)?,
-                "sampler" => {
-                    self.sampler = match v.as_str() {
-                        "newscast" => SamplerConfig::Newscast { view_size: 20 },
-                        "oracle" => SamplerConfig::Oracle,
-                        "matching" => SamplerConfig::Matching,
-                        _ => return Err(format!("bad sampler {v:?}")),
+                "view" => match &mut self.sampler {
+                    SamplerConfig::Newscast { view_size } => *view_size = parse(v, k)?,
+                    other => {
+                        return Err(GolfError::config(format!(
+                            "view requires sampler = newscast (got {})",
+                            other.name()
+                        )))
                     }
-                }
-                "view" => {
-                    if let SamplerConfig::Newscast { view_size } = &mut self.sampler {
-                        *view_size = parse(v, k)?;
-                    }
-                }
+                },
                 "failures" => {
                     self.failures = match v.as_str() {
                         "none" => false,
                         "extreme" => true,
-                        _ => return Err(format!("bad failures {v:?}")),
+                        _ => return Err(GolfError::config(format!("bad failures {v:?}"))),
                     }
                 }
                 "seed" => self.seed = parse(v, k)?,
@@ -169,51 +180,58 @@ impl ExperimentSpec {
                 "similarity" => self.similarity = parse_bool(v, k)?,
                 "backend" => {
                     self.backend = BackendChoice::parse(v)
-                        .ok_or(format!("bad backend {v:?}"))?
+                        .ok_or_else(|| GolfError::config(format!("bad backend {v:?}")))?
                 }
                 "mode" => match v.as_str() {
                     "scalar" | "microbatch" => self.mode = v.clone(),
-                    _ => return Err(format!("bad mode {v:?}")),
+                    _ => return Err(GolfError::config(format!("bad mode {v:?}"))),
                 },
                 "coalesce" => self.coalesce = parse(v, k)?,
                 "exec" => {
-                    self.exec_path =
-                        ExecPath::parse(v).ok_or(format!("bad exec {v:?}"))?
+                    self.exec_path = ExecPath::parse(v)
+                        .ok_or_else(|| GolfError::config(format!("bad exec {v:?}")))?
                 }
                 "scenario" => {
                     self.scenario = match v.as_str() {
                         "none" => None,
-                        name => Some(
-                            crate::scenario::builtin(name).map_err(|e| e.to_string())?,
-                        ),
+                        name => Some(crate::scenario::builtin(name)?),
                     }
                 }
-                _ => return Err(format!("unknown key {k:?}")),
+                _ => return Err(GolfError::config(format!("unknown key {k:?}"))),
             }
         }
         Ok(())
     }
 
-    pub fn learner(&self) -> Result<Learner, String> {
+    pub fn learner(&self) -> Result<Learner, GolfError> {
         match self.learner_name.as_str() {
             "pegasos" => Ok(Learner::pegasos(self.lambda)),
             "adaline" => Ok(Learner::adaline(self.eta)),
             "logreg" => Ok(Learner::logreg(self.lambda)),
-            other => Err(format!("unknown learner {other:?}")),
+            other => Err(GolfError::config(format!("unknown learner {other:?}"))),
         }
     }
 
-    pub fn build_dataset(&self) -> Result<Dataset, String> {
+    pub fn build_dataset(&self) -> Result<Dataset, GolfError> {
         let s = Scale(self.scale);
         match self.dataset.as_str() {
             "reuters" => Ok(reuters_like(self.seed, s)),
             "spambase" => Ok(spambase_like(self.seed, s)),
             "urls" => Ok(urls_like(self.seed, s)),
-            other => Err(format!("unknown dataset {other:?}")),
+            other => Err(GolfError::data(format!("unknown dataset {other:?}"))),
         }
     }
 
-    pub fn protocol_config(&self) -> Result<ProtocolConfig, String> {
+    /// The event-driven stepping mode the `mode`/`coalesce` keys select.
+    pub fn exec_mode(&self) -> Result<ExecMode, GolfError> {
+        match self.mode.as_str() {
+            "scalar" => Ok(ExecMode::Scalar),
+            "microbatch" => Ok(ExecMode::MicroBatch { coalesce: self.coalesce }),
+            other => Err(GolfError::config(format!("bad mode {other:?}"))),
+        }
+    }
+
+    pub fn protocol_config(&self) -> Result<ProtocolConfig, GolfError> {
         let mut cfg = ProtocolConfig::paper_default(self.cycles);
         cfg.variant = self.variant;
         cfg.learner = self.learner()?;
@@ -223,11 +241,7 @@ impl ExperimentSpec {
         cfg.eval.n_peers = self.eval_peers;
         cfg.eval.voting = self.voting;
         cfg.eval.similarity = self.similarity;
-        cfg.exec = match self.mode.as_str() {
-            "scalar" => ExecMode::Scalar,
-            "microbatch" => ExecMode::MicroBatch { coalesce: self.coalesce },
-            other => return Err(format!("bad mode {other:?}")),
-        };
+        cfg.exec = self.exec_mode()?;
         cfg.path = self.exec_path;
         if self.failures {
             cfg = cfg.with_extreme_failures();
@@ -238,34 +252,44 @@ impl ExperimentSpec {
 
     /// Validate the attached scenario (if any) against a concrete dataset:
     /// the simulators require a validated timeline.
-    pub fn validate_scenario(&self, n_nodes: usize) -> Result<(), String> {
+    pub fn validate_scenario(&self, n_nodes: usize) -> Result<(), GolfError> {
         if let Some(s) = &self.scenario {
-            s.validate(n_nodes, self.cycles)
-                .map_err(|e| format!("scenario {:?}: {e}", s.name))?;
+            s.validate(n_nodes, self.cycles).map_err(|e| {
+                GolfError::scenario_in(format!("scenario {:?}", s.name), e)
+            })?;
         }
         Ok(())
     }
 
-    /// Parse an INI file's `[experiment]` section, plus any embedded
-    /// `[scenario]` / `[phase.*]` / `[event.*]` sections (which take
-    /// precedence over a `scenario =` built-in reference).
-    pub fn from_ini(text: &str) -> Result<Self, String> {
-        let doc = ini::parse(text)?;
-        let mut spec = ExperimentSpec::default();
-        if let Some(kv) = doc.get("experiment") {
-            spec.apply(kv)?;
+    /// Parse the `[experiment]` schema (plus any embedded scenario
+    /// sections) from INI text.  Delegates to the strict full-schema parser
+    /// (`api::RunSpec::from_ini`); nothing is silently ignored — unknown
+    /// sections are rejected, and a config bundling `[deploy]` or `[sweep]`
+    /// sections must go through `RunSpec::from_ini` instead.
+    pub fn from_ini(text: &str) -> Result<Self, GolfError> {
+        let spec = crate::api::RunSpec::from_ini(text)?;
+        if spec.target == crate::api::Target::Deploy {
+            return Err(GolfError::config(
+                "config bundles a [deploy] section; parse it with \
+                 DeploySpec::from_ini or api::RunSpec::from_ini"
+                    .to_string(),
+            ));
         }
-        if has_scenario_sections(&doc) {
-            spec.scenario = Some(Scenario::from_ini_doc(&doc).map_err(|e| e.to_string())?);
+        if spec.sweep.is_some() {
+            return Err(GolfError::config(
+                "config bundles a [sweep] section; parse it with \
+                 api::RunSpec::from_ini"
+                    .to_string(),
+            ));
         }
-        Ok(spec)
+        Ok(spec.experiment)
     }
 }
 
 /// Does an INI document define a scenario?  `[phase.*]` / `[event.*]`
 /// sections count even without a `[scenario]` header (which the grammar
 /// makes optional) — a timeline must never be silently dropped.
-fn has_scenario_sections(doc: &ini::Document) -> bool {
+pub(crate) fn has_scenario_sections(doc: &ini::Document) -> bool {
     doc.keys()
         .any(|k| k == "scenario" || k.starts_with("phase.") || k.starts_with("event."))
 }
@@ -273,7 +297,7 @@ fn has_scenario_sections(doc: &ini::Document) -> bool {
 /// Configuration of a `golf deploy` run: the shared experiment keys plus
 /// the deployment-only wall-clock mapping.  Parsed from the same INI files
 /// (`[experiment]` + `[deploy]` sections) and the same CLI flag map.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct DeploySpec {
     pub experiment: ExperimentSpec,
     /// wall-clock gossip period Δ in milliseconds
@@ -290,77 +314,94 @@ impl Default for DeploySpec {
 }
 
 impl DeploySpec {
+    /// Apply one deployment-only key=value pair; `Ok(false)` means the key
+    /// is not a deployment key (callers route it to the experiment schema
+    /// or reject it).  The single source of `delta_ms`/`nodes` parsing —
+    /// [`DeploySpec::apply`], the CLI flag map, and `RunSpec::from_ini`'s
+    /// `[deploy]` section all come through here.
+    pub fn apply_deploy_key(&mut self, k: &str, v: &str) -> Result<bool, GolfError> {
+        match k {
+            "delta_ms" => {
+                self.delta_ms = parse(v, k)?;
+                Ok(true)
+            }
+            "nodes" => {
+                self.nodes = parse(v, k)?;
+                Ok(true)
+            }
+            _ => Ok(false),
+        }
+    }
+
     /// Apply a key=value map: deployment keys are handled here, everything
     /// else is delegated to the embedded [`ExperimentSpec`].
-    pub fn apply(&mut self, kv: &HashMap<String, String>) -> Result<(), String> {
+    pub fn apply(&mut self, kv: &HashMap<String, String>) -> Result<(), GolfError> {
         let mut rest = HashMap::new();
         for (k, v) in kv {
-            match k.as_str() {
-                "delta_ms" => self.delta_ms = parse(v, k)?,
-                "nodes" => self.nodes = parse(v, k)?,
-                _ => {
-                    rest.insert(k.clone(), v.clone());
-                }
+            if !self.apply_deploy_key(k, v)? {
+                rest.insert(k.clone(), v.clone());
             }
         }
         self.experiment.apply(&rest)
     }
 
-    /// Parse an INI file's `[experiment]` and `[deploy]` sections, plus any
-    /// embedded scenario definition.
-    pub fn from_ini(text: &str) -> Result<Self, String> {
-        let doc = ini::parse(text)?;
-        let mut spec = DeploySpec::default();
-        if let Some(kv) = doc.get("experiment") {
-            spec.experiment.apply(kv)?;
+    /// Parse the `[experiment]` and `[deploy]` sections (plus any embedded
+    /// scenario definition) from INI text.  Delegates to the strict
+    /// full-schema parser (`api::RunSpec::from_ini`): unknown sections,
+    /// non-deployment keys inside `[deploy]`, and bundled `[sweep]`
+    /// sections are rejected.
+    pub fn from_ini(text: &str) -> Result<Self, GolfError> {
+        let spec = crate::api::RunSpec::from_ini(text)?;
+        if spec.sweep.is_some() {
+            return Err(GolfError::config(
+                "config bundles a [sweep] section; parse it with \
+                 api::RunSpec::from_ini"
+                    .to_string(),
+            ));
         }
-        if let Some(kv) = doc.get("deploy") {
-            spec.apply(kv)?;
-        }
-        if has_scenario_sections(&doc) {
-            spec.experiment.scenario =
-                Some(Scenario::from_ini_doc(&doc).map_err(|e| e.to_string())?);
-        }
-        Ok(spec)
+        Ok(spec.to_deploy_spec())
     }
 
     /// Resolve against a dataset into the runtime configuration.
     pub fn deploy_config(
         &self,
         data: &Dataset,
-    ) -> Result<crate::net::deploy::DeployConfig, String> {
+    ) -> Result<crate::net::deploy::DeployConfig, GolfError> {
         use crate::net::deploy::DeployConfig;
         let e = &self.experiment;
         let n = if self.nodes == 0 { data.n_train() } else { self.nodes };
         if n < 2 {
-            return Err(format!("need at least 2 nodes, got {n}"));
+            return Err(GolfError::data(format!("need at least 2 nodes, got {n}")));
         }
         if n > data.n_train() {
-            return Err(format!(
+            return Err(GolfError::data(format!(
                 "nodes = {n} exceeds the {} training rows of {}",
                 data.n_train(),
                 data.name
-            ));
+            )));
         }
         if n > crate::net::deploy::MAX_DEPLOY_NODES {
             // one OS thread + one listener per node: an unscaled dataset
             // must not silently become 10,000 threads
-            return Err(format!(
+            return Err(GolfError::config(format!(
                 "deployment would spawn {n} node threads (max {}); \
                  pass nodes = N or a smaller scale",
                 crate::net::deploy::MAX_DEPLOY_NODES
-            ));
+            )));
         }
         if e.sampler == SamplerConfig::Matching {
             // PERFECT MATCHING needs a globally consistent partner table per
             // cycle; per-node sampler instances in a real deployment cannot
             // provide that (it is a simulator-only baseline)
-            return Err("sampler = matching is not supported in deployment".into());
+            return Err(GolfError::config(
+                "sampler = matching is not supported in deployment".to_string(),
+            ));
         }
         if let Some(s) = &e.scenario {
             // the deployment compiles the timeline over its node universe
-            s.validate(n, e.cycles)
-                .map_err(|err| format!("scenario {:?}: {err}", s.name))?;
+            s.validate(n, e.cycles).map_err(|err| {
+                GolfError::scenario_in(format!("scenario {:?}", s.name), err)
+            })?;
         }
         let mut cfg = DeployConfig {
             n_nodes: n,
@@ -382,15 +423,16 @@ impl DeploySpec {
     }
 }
 
-fn parse<T: std::str::FromStr>(v: &str, k: &str) -> Result<T, String> {
-    v.parse().map_err(|_| format!("bad value for {k}: {v:?}"))
+fn parse<T: std::str::FromStr>(v: &str, k: &str) -> Result<T, GolfError> {
+    v.parse()
+        .map_err(|_| GolfError::config(format!("bad value for {k}: {v:?}")))
 }
 
-fn parse_bool(v: &str, k: &str) -> Result<bool, String> {
+fn parse_bool(v: &str, k: &str) -> Result<bool, GolfError> {
     match v {
         "true" | "1" | "yes" => Ok(true),
         "false" | "0" | "no" => Ok(false),
-        _ => Err(format!("bad bool for {k}: {v:?}")),
+        _ => Err(GolfError::config(format!("bad bool for {k}: {v:?}"))),
     }
 }
 

@@ -11,6 +11,7 @@
 //! sockets and a simulation of the same configuration produce curves on the
 //! same axes, directly comparable point by point.
 
+use crate::api::{NullObserver, Observer, RunEvent};
 use crate::data::dataset::Dataset;
 use crate::eval::tracker::{point_from_errors, Curve};
 use crate::eval::zero_one_error;
@@ -82,7 +83,26 @@ pub fn matched_sim_config(cfg: &DeployConfig) -> ProtocolConfig {
 /// evaluation peers at every measurement cycle, and shut down after the
 /// last cycle.  `data.train` must have at least `n_nodes` rows; node i owns
 /// row i.
+#[deprecated(
+    since = "0.2.0",
+    note = "construct runs through api::RunSpec / api::Session (kept as a \
+            thin shim so deployment-parity pins stay bit-for-bit)"
+)]
 pub fn run_deployment(cfg: &DeployConfig, data: &Dataset) -> std::io::Result<DeployReport> {
+    run_deployment_observed(cfg, data, &mut NullObserver)
+}
+
+/// [`run_deployment`] with typed progress streaming: the coordinating
+/// thread emits a [`RunEvent::Cycle`] + [`RunEvent::Eval`] pair per
+/// measurement cycle (plus any compiled scenario mutations whose due time
+/// has passed, observed from the coordinator's wall clock), and one
+/// [`RunEvent::NodeStats`] per node at shutdown.  Observation is passive —
+/// node threads are never touched by the observer.
+pub fn run_deployment_observed(
+    cfg: &DeployConfig,
+    data: &Dataset,
+    obs: &mut dyn Observer,
+) -> std::io::Result<DeployReport> {
     assert!(cfg.n_nodes >= 2, "need at least two nodes");
     assert!(data.n_train() >= cfg.n_nodes, "need one training example per node");
     assert!(cfg.cycles >= 1, "need at least one cycle");
@@ -149,7 +169,8 @@ pub fn run_deployment(cfg: &DeployConfig, data: &Dataset) -> std::io::Result<Dep
             .collect();
 
         // ---- evaluation loop on the coordinating thread
-        let curve = eval_loop(cfg, data, &eval_peers, compiled.as_ref(), &shared, start);
+        let curve =
+            eval_loop(cfg, data, &eval_peers, compiled.as_ref(), &shared, start, &mut *obs);
 
         // the run length is cfg.cycles regardless of the measurement grid
         // (a sparse eval_at_cycles must not truncate the deployment)
@@ -181,6 +202,15 @@ pub fn run_deployment(cfg: &DeployConfig, data: &Dataset) -> std::io::Result<Dep
     for slot in &shared.models[..members] {
         let m = slot.lock().unwrap().clone();
         errs.push(zero_one_error(&m, &data.test, final_y));
+    }
+
+    for (node, s) in per_node.iter().enumerate() {
+        obs.on_event(&RunEvent::NodeStats {
+            node,
+            sent: s.sent,
+            received: s.received,
+            bytes_sent: s.bytes_sent,
+        });
     }
 
     let mut stats = DeployStats::default();
@@ -233,6 +263,7 @@ fn eval_loop(
     scn: Option<&CompiledScenario>,
     shared: &SharedRun,
     start: Instant,
+    obs: &mut dyn Observer,
 ) -> Curve {
     let cycles = cfg.eval_grid();
     let mut curve = Curve::new(format!(
@@ -242,12 +273,26 @@ fn eval_loop(
         cfg.sampler.name()
     ));
     let mut flipped: Option<Vec<f32>> = None;
+    // scenario mutations are applied inside the node threads; the
+    // coordinator streams them as their due times pass its wall clock
+    let mut next_mut = 0usize;
     for &c in &cycles {
         let due = start + cfg.cycle_offset(c);
         let now = Instant::now();
         if due > now {
             std::thread::sleep(due - now);
         }
+        if let Some(scn) = scn {
+            while next_mut < scn.muts.len() && scn.muts[next_mut].0 <= c * SIM_DELTA {
+                let (t, m) = &scn.muts[next_mut];
+                obs.on_event(&RunEvent::Scenario {
+                    cycle: t / SIM_DELTA,
+                    mutation: m.describe(),
+                });
+                next_mut += 1;
+            }
+        }
+        obs.on_event(&RunEvent::Cycle { cycle: c });
         let y: &[f32] = if drift_sign_at(scn, c * SIM_DELTA) < 0.0 {
             flipped.get_or_insert_with(|| crate::eval::flipped_labels(&data.test_y))
         } else {
@@ -260,13 +305,28 @@ fn eval_loop(
                 zero_one_error(&m, &data.test, y)
             })
             .collect();
-        curve.push(point_from_errors(
+        let pt = point_from_errors(
             c,
             &errs,
             None,
             None,
             shared.messages_sent.load(Ordering::Relaxed),
-        ));
+        );
+        obs.on_event(&RunEvent::Eval { point: pt.clone() });
+        curve.push(pt);
+    }
+    // mutations due after the last measurement cycle still apply inside the
+    // node threads before shutdown — stream them too, so the Deploy target's
+    // scenario-event stream covers the whole timeline like Sim/Batched
+    if let Some(scn) = scn {
+        while next_mut < scn.muts.len() && scn.muts[next_mut].0 <= cfg.cycles * SIM_DELTA {
+            let (t, m) = &scn.muts[next_mut];
+            obs.on_event(&RunEvent::Scenario {
+                cycle: t / SIM_DELTA,
+                mutation: m.describe(),
+            });
+            next_mut += 1;
+        }
     }
     curve
 }

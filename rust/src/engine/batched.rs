@@ -14,6 +14,7 @@
 //! engine-parity tests pin native and PJRT backends to each other on
 //! identical schedules.
 
+use crate::api::{NullObserver, Observer, RunEvent};
 use crate::data::dataset::Dataset;
 use crate::engine::{eval_peer_errors, Backend, StepBatch, StepOp, MAX_BATCH_ROWS};
 use crate::eval::tracker::{point_from_errors, Curve};
@@ -93,8 +94,12 @@ impl<'a, B: Backend> BatchedSim<'a, B> {
     /// Apply every scenario mutation due at or before `now` — the batched
     /// driver's tick boundaries are its cycle boundaries, so mutations land
     /// between the previous cycle's deliveries and this cycle's sends.
-    fn apply_scenario(&mut self, now: u64, sampler: &mut PeerSampler) {
+    fn apply_scenario(&mut self, now: u64, sampler: &mut PeerSampler, obs: &mut dyn Observer) {
         while let Some(m) = self.scn.as_mut().and_then(|d| d.pop_due(now)) {
+            obs.on_event(&RunEvent::Scenario {
+                cycle: now / self.cfg.delta,
+                mutation: m.describe(),
+            });
             match m {
                 Mutation::SetDrop(p) => self.network.cfg.drop_prob = p,
                 Mutation::SetDelay(model) => self.network.cfg.delay = model,
@@ -121,7 +126,16 @@ impl<'a, B: Backend> BatchedSim<'a, B> {
         }
     }
 
-    pub fn run(mut self) -> Result<RunResult> {
+    pub fn run(self) -> Result<RunResult> {
+        self.run_observed(&mut NullObserver)
+    }
+
+    /// Run to completion, streaming typed progress events
+    /// ([`crate::api::RunEvent`]) to `obs`: every cycle boundary, every
+    /// measured curve point, and every scenario mutation as it is applied.
+    /// Observation is passive — an observed run is bit-for-bit identical to
+    /// an unobserved one.
+    pub fn run_observed(mut self, obs: &mut dyn Observer) -> Result<RunResult> {
         let n_univ = self.data.n_train();
         let d = self.data.d();
         let delta = self.cfg.delta;
@@ -162,9 +176,10 @@ impl<'a, B: Backend> BatchedSim<'a, B> {
 
         for cycle in 1..=self.cfg.cycles {
             let now = cycle * delta;
+            obs.on_event(&RunEvent::Cycle { cycle });
             // scenario mutations apply at the cycle boundary, before the
             // cycle's sends and deliveries
-            self.apply_scenario(now, &mut sampler);
+            self.apply_scenario(now, &mut sampler, obs);
             // effective liveness over the whole universe: a node must be a
             // member (flash crowds grow the store), up per the churn
             // schedule, and not forced offline by a scenario leave wave
@@ -288,13 +303,15 @@ impl<'a, B: Backend> BatchedSim<'a, B> {
             // -------- measurement
             if eval_cycles.contains(&cycle) {
                 let errs = self.measure_errors(&eval_peers)?;
-                curve.push(point_from_errors(
+                let pt = point_from_errors(
                     cycle,
                     &errs,
                     None,
                     None,
                     self.stats.messages_sent,
-                ));
+                );
+                obs.on_event(&RunEvent::Eval { point: pt.clone() });
+                curve.push(pt);
             }
         }
 
@@ -322,6 +339,11 @@ impl<'a, B: Backend> BatchedSim<'a, B> {
 }
 
 /// Run the batched driver with the given backend.
+#[deprecated(
+    since = "0.2.0",
+    note = "construct runs through api::RunSpec / api::Session (kept as a \
+            thin shim so engine-parity pins stay bit-for-bit)"
+)]
 pub fn run_batched<B: Backend>(
     cfg: ProtocolConfig,
     data: &Dataset,
@@ -331,6 +353,7 @@ pub fn run_batched<B: Backend>(
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // the parity suite exercises the legacy shim directly
 mod tests {
     use super::*;
     use crate::data::synthetic::{urls_like, Scale};

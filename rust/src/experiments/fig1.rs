@@ -5,15 +5,16 @@
 //! All curves of the figure are independent simulation runs; they execute in
 //! parallel through the [`sweep`] job pool.
 
+use crate::api::{NullObserver, RunSpec};
 use crate::baselines::{
     sequential,
     weighted_bagging::{self, Bagging},
 };
+use crate::config::ExperimentSpec;
 use crate::eval::tracker::Curve;
 use crate::experiments::common::ExpDataset;
 use crate::experiments::sweep;
 use crate::gossip::create_model::Variant;
-use crate::gossip::protocol::{run, ProtocolConfig};
 use crate::learning::Learner;
 
 pub struct Fig1Panel {
@@ -22,21 +23,24 @@ pub struct Fig1Panel {
     pub curves: Vec<Curve>,
 }
 
-fn gossip_cfg(
+/// The gossip runs of the figure go through the `api::RunSpec` facade, one
+/// spec per curve, against the shared pre-built dataset.
+fn gossip_spec(
     e: &ExpDataset,
     variant: Variant,
     cycles: u64,
     failures: bool,
     seed: u64,
-) -> ProtocolConfig {
-    let mut cfg = ProtocolConfig::paper_default(cycles);
-    cfg.variant = variant;
-    cfg.learner = Learner::pegasos(e.lambda);
-    cfg.seed = seed;
-    if failures {
-        cfg = cfg.with_extreme_failures();
+) -> ExperimentSpec {
+    ExperimentSpec {
+        dataset: e.ds.name.clone(),
+        cycles,
+        variant,
+        lambda: e.lambda,
+        seed,
+        failures,
+        ..Default::default()
     }
-    cfg
 }
 
 type CurveJob<'a> = Box<dyn Fn() -> Curve + Sync + 'a>;
@@ -71,8 +75,12 @@ fn curve_jobs<'a>(
     }));
     for variant in [Variant::Rw, Variant::Mu] {
         jobs.push(Box::new(move || {
-            let res = run(gossip_cfg(e, variant, cycles, failures, seed), &e.ds);
-            let mut c = res.curve;
+            let outcome = RunSpec::from_spec(gossip_spec(e, variant, cycles, failures, seed))
+                .build_with(&e.ds)
+                .expect("figure spec is valid")
+                .run(&mut NullObserver)
+                .expect("native event-driven run");
+            let mut c = outcome.into_run().expect("sim outcome").curve;
             c.label = format!("p2pegasos-{}", variant.name());
             c
         }));

@@ -2,12 +2,14 @@
 //! error (upper row) and mean pairwise cosine model similarity (lower row),
 //! failure-free.  Runs execute in parallel through the [`sweep`] job pool.
 
+use crate::api::{NullObserver, RunSpec};
 use crate::baselines::perfect_matching::run_perfect_matching;
+use crate::config::ExperimentSpec;
 use crate::eval::tracker::Curve;
 use crate::experiments::common::ExpDataset;
 use crate::experiments::sweep;
 use crate::gossip::create_model::Variant;
-use crate::gossip::protocol::{run, ProtocolConfig};
+use crate::gossip::protocol::ProtocolConfig;
 use crate::learning::Learner;
 
 pub struct Fig2Panel {
@@ -15,9 +17,24 @@ pub struct Fig2Panel {
     pub curves: Vec<Curve>,
 }
 
-fn cfg(e: &ExpDataset, variant: Variant, cycles: u64, seed: u64) -> ProtocolConfig {
+/// The facade spec of one gossip curve (similarity measurement on).
+fn spec(e: &ExpDataset, variant: Variant, cycles: u64, seed: u64) -> ExperimentSpec {
+    ExperimentSpec {
+        dataset: e.ds.name.clone(),
+        cycles,
+        variant,
+        lambda: e.lambda,
+        similarity: true,
+        seed,
+        ..Default::default()
+    }
+}
+
+/// The PERFECT MATCHING baseline keeps its dedicated driver; this is its
+/// protocol configuration (same parameters as [`spec`]).
+fn matching_cfg(e: &ExpDataset, cycles: u64, seed: u64) -> ProtocolConfig {
     let mut cfg = ProtocolConfig::paper_default(cycles);
-    cfg.variant = variant;
+    cfg.variant = Variant::Mu;
     cfg.learner = Learner::pegasos(e.lambda);
     cfg.eval.similarity = true;
     cfg.seed = seed;
@@ -31,14 +48,18 @@ fn curve_jobs<'a>(e: &'a ExpDataset, cycles: u64, seed: u64) -> Vec<CurveJob<'a>
     let mut jobs: Vec<CurveJob<'a>> = Vec::new();
     for variant in [Variant::Mu, Variant::Um] {
         jobs.push(Box::new(move || {
-            let res = run(cfg(e, variant, cycles, seed), &e.ds);
-            let mut c = res.curve;
+            let outcome = RunSpec::from_spec(spec(e, variant, cycles, seed))
+                .build_with(&e.ds)
+                .expect("figure spec is valid")
+                .run(&mut NullObserver)
+                .expect("native event-driven run");
+            let mut c = outcome.into_run().expect("sim outcome").curve;
             c.label = format!("p2pegasos-{}", variant.name());
             c
         }));
     }
     jobs.push(Box::new(move || {
-        let res = run_perfect_matching(cfg(e, Variant::Mu, cycles, seed), &e.ds);
+        let res = run_perfect_matching(matching_cfg(e, cycles, seed), &e.ds);
         let mut c = res.curve;
         c.label = "p2pegasos-mu-matching".into();
         c

@@ -4,12 +4,12 @@
 //! freshest-model error (err_mean) and the voted error (err_vote).
 //! Runs execute in parallel through the [`sweep`] job pool.
 
+use crate::api::{NullObserver, RunSpec};
+use crate::config::ExperimentSpec;
 use crate::eval::tracker::Curve;
 use crate::experiments::common::ExpDataset;
 use crate::experiments::sweep;
 use crate::gossip::create_model::Variant;
-use crate::gossip::protocol::{run, ProtocolConfig};
-use crate::learning::Learner;
 
 pub struct Fig3Panel {
     pub dataset: String,
@@ -31,17 +31,23 @@ fn curve_jobs<'a>(
         .into_iter()
         .map(|variant| -> CurveJob<'a> {
             Box::new(move || {
-                let mut cfg = ProtocolConfig::paper_default(cycles);
-                cfg.variant = variant;
-                cfg.learner = Learner::pegasos(e.lambda);
-                cfg.cache_size = cache_size;
-                cfg.eval.voting = true;
-                cfg.seed = seed;
-                if failures {
-                    cfg = cfg.with_extreme_failures();
-                }
-                let res = run(cfg, &e.ds);
-                let mut c = res.curve;
+                let spec = ExperimentSpec {
+                    dataset: e.ds.name.clone(),
+                    cycles,
+                    variant,
+                    lambda: e.lambda,
+                    cache: cache_size,
+                    voting: true,
+                    seed,
+                    failures,
+                    ..Default::default()
+                };
+                let outcome = RunSpec::from_spec(spec)
+                    .build_with(&e.ds)
+                    .expect("figure spec is valid")
+                    .run(&mut NullObserver)
+                    .expect("native event-driven run");
+                let mut c = outcome.into_run().expect("sim outcome").curve;
                 c.label = format!("p2pegasos-{}", variant.name());
                 c
             })

@@ -15,11 +15,12 @@
 //!
 //! fig1/fig2/fig3/table1 and the CLI all route their runs through this pool.
 
+use crate::api::{GolfError, NullObserver, RunSpec};
+use crate::config::ExperimentSpec;
 use crate::eval::tracker::Curve;
 use crate::experiments::common::datasets;
 use crate::gossip::create_model::Variant;
-use crate::gossip::protocol::{run, ExecMode, ExecPath, ProtocolConfig, RunStats};
-use crate::learning::Learner;
+use crate::gossip::protocol::{ExecMode, ExecPath, RunStats};
 use crate::util::rng::derive_seed;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -179,12 +180,15 @@ pub fn cell_seed(
 }
 
 /// Run the full grid in parallel.  Cells are returned in deterministic
-/// (dataset, variant, failures, scenario, replicate) order.
+/// (dataset, variant, failures, scenario, replicate) order.  Every cell is
+/// constructed through the [`crate::api::RunSpec`] facade (native
+/// event-driven simulator), so the grid and a hand-built single run share
+/// one configuration path.
 ///
 /// Errors (before any job is dispatched) if a scenario name is not a
 /// built-in, or its timeline does not fit `cfg.cycles` or one of the
 /// grid's datasets — worker threads never see an invalid timeline.
-pub fn run_grid(cfg: &SweepConfig) -> Result<Vec<SweepCell>, String> {
+pub fn run_grid(cfg: &SweepConfig) -> Result<Vec<SweepCell>, GolfError> {
     struct JobDesc {
         ds_idx: usize,
         variant: Variant,
@@ -201,19 +205,35 @@ pub fn run_grid(cfg: &SweepConfig) -> Result<Vec<SweepCell>, String> {
             let s = if name == "none" {
                 None
             } else {
-                Some(crate::scenario::builtin(name).map_err(|e| e.to_string())?)
+                Some(crate::scenario::builtin(name)?)
             };
             Ok((name.clone(), s))
         })
-        .collect::<Result<_, String>>()?;
+        .collect::<Result<_, GolfError>>()?;
 
     let sets = datasets(cfg.base_seed, cfg.scale);
+    // everything the per-cell RunSpec::build_with validates must hold
+    // before dispatch — worker threads never see an invalid cell
+    for e in &sets {
+        if e.ds.n_train() < 2 {
+            return Err(GolfError::data(format!(
+                "{} has {} training rows at scale {}; a gossip network needs \
+                 at least 2 nodes",
+                e.ds.name,
+                e.ds.n_train(),
+                cfg.scale
+            )));
+        }
+    }
     // every (scenario × dataset) pairing must fit before any run starts
     for (name, s) in &scenarios {
         if let Some(s) = s {
             for e in &sets {
                 s.validate(e.ds.n_train(), cfg.cycles).map_err(|err| {
-                    format!("scenario {name:?} on {}: {err}", e.ds.name)
+                    GolfError::scenario_in(
+                        format!("scenario {name:?} on {}", e.ds.name),
+                        err,
+                    )
                 })?;
             }
         }
@@ -231,6 +251,12 @@ pub fn run_grid(cfg: &SweepConfig) -> Result<Vec<SweepCell>, String> {
         }
     }
 
+    // exec-mode keys for the per-cell specs (shared by every cell)
+    let (mode, coalesce) = match cfg.exec {
+        ExecMode::Scalar => ("scalar", 0),
+        ExecMode::MicroBatch { coalesce } => ("microbatch", coalesce),
+    };
+
     Ok(run_indexed(descs.len(), cfg.threads, |i| {
         let jd = &descs[i];
         let e = &sets[jd.ds_idx];
@@ -243,18 +269,29 @@ pub fn run_grid(cfg: &SweepConfig) -> Result<Vec<SweepCell>, String> {
             scn_name,
             jd.replicate,
         );
-        let mut pc = ProtocolConfig::paper_default(cfg.cycles);
-        pc.variant = jd.variant;
-        pc.learner = Learner::pegasos(e.lambda);
-        pc.eval.n_peers = cfg.eval_peers;
-        pc.seed = seed;
-        pc.exec = cfg.exec;
-        pc.path = cfg.path;
-        if jd.failures {
-            pc = pc.with_extreme_failures();
-        }
-        pc.scenario = scn.clone();
-        let res = run(pc, &e.ds);
+        let spec = ExperimentSpec {
+            dataset: e.ds.name.clone(),
+            scale: cfg.scale,
+            cycles: cfg.cycles,
+            variant: jd.variant,
+            learner_name: "pegasos".into(),
+            lambda: e.lambda,
+            eval_peers: cfg.eval_peers,
+            seed,
+            mode: mode.into(),
+            coalesce,
+            exec_path: cfg.path,
+            failures: jd.failures,
+            scenario: scn.clone(),
+            ..Default::default()
+        };
+        let res = RunSpec::from_spec(spec)
+            .build_with(&e.ds)
+            .expect("cell spec validated before dispatch")
+            .run(&mut NullObserver)
+            .expect("native event-driven run")
+            .into_run()
+            .expect("sim target yields a run result");
         SweepCell {
             dataset: e.ds.name.clone(),
             variant: jd.variant,

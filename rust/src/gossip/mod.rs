@@ -11,8 +11,9 @@ pub mod state;
 pub use cache::ModelCache;
 pub use create_model::{create_model, Variant};
 pub use predict::Predictor;
+#[allow(deprecated)] // the shims stay re-exported for downstream callers
+pub use protocol::{run, run_with_backend};
 pub use protocol::{
-    run, run_with_backend, EvalConfig, ExecMode, ExecPath, GossipSim, ProtocolConfig, RunResult,
-    RunStats,
+    EvalConfig, ExecMode, ExecPath, GossipSim, ProtocolConfig, RunResult, RunStats,
 };
 pub use state::ModelStore;

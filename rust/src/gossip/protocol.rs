@@ -22,6 +22,7 @@
 //! Reuters — CSR-staged batches through the O(nnz) lazy-scale kernels, with
 //! evaluation batched through the same sparse-aware backend.
 
+use crate::api::{NullObserver, Observer, RunEvent};
 use crate::data::dataset::{Dataset, Examples};
 use crate::data::sparse::Csr;
 use crate::engine::native::NativeBackend;
@@ -425,7 +426,16 @@ impl<'a> GossipSim<'a> {
     }
 
     /// Run to completion, returning the convergence curve and stats.
-    pub fn try_run(mut self) -> Result<RunResult> {
+    pub fn try_run(self) -> Result<RunResult> {
+        self.try_run_observed(&mut NullObserver)
+    }
+
+    /// Run to completion, streaming typed progress events
+    /// ([`crate::api::RunEvent`]) to `obs`: every gossip-cycle boundary the
+    /// event stream crosses, every measured curve point, and every scenario
+    /// mutation as it is applied.  Observation is passive — an observed run
+    /// is bit-for-bit identical to an unobserved one.
+    pub fn try_run_observed(mut self, obs: &mut dyn Observer) -> Result<RunResult> {
         let n = self.store.n();
         let horizon = self.cfg.delta * self.cfg.cycles;
 
@@ -462,11 +472,19 @@ impl<'a> GossipSim<'a> {
             self.cfg.sampler.name()
         ));
 
+        let mut observed_cycle = 0u64;
         while let Some((t, ev)) = self.queue.pop() {
             if t > horizon {
                 // deliveries due at or before the horizon still apply
                 self.flush()?;
                 break;
+            }
+            // cycle-boundary progress events: every integer boundary the
+            // event stream crosses, emitted once, in order
+            let cycle_now = t / self.cfg.delta;
+            while observed_cycle < cycle_now {
+                observed_cycle += 1;
+                obs.on_event(&RunEvent::Cycle { cycle: observed_cycle });
             }
             // scenario mutations apply at tick boundaries, before any event
             // of that tick — with pending micro-batches flushed first, so
@@ -474,7 +492,7 @@ impl<'a> GossipSim<'a> {
             // identical points (pinned in tests/engine_parity.rs)
             if self.scn.as_ref().map_or(false, |d| d.has_due(t)) {
                 self.flush()?;
-                self.apply_scenario(t);
+                self.apply_scenario(t, obs);
             }
             self.now = t;
             match ev {
@@ -505,6 +523,7 @@ impl<'a> GossipSim<'a> {
                     self.flush()?;
                     let cycle = (t / self.cfg.delta).max(1);
                     let pt = self.measure(cycle)?;
+                    obs.on_event(&RunEvent::Eval { point: pt.clone() });
                     curve.push(pt);
                 }
             }
@@ -520,8 +539,12 @@ impl<'a> GossipSim<'a> {
     /// deliveries are already flushed).  Mutations touch the network models
     /// in place, toggle the drift sign, maintain the forced-offline overlay,
     /// and grow membership for flash crowds.
-    fn apply_scenario(&mut self, now: Ticks) {
+    fn apply_scenario(&mut self, now: Ticks, obs: &mut dyn Observer) {
         while let Some(m) = self.scn.as_mut().and_then(|d| d.pop_due(now)) {
+            obs.on_event(&RunEvent::Scenario {
+                cycle: now / self.cfg.delta,
+                mutation: m.describe(),
+            });
             match m {
                 Mutation::SetDrop(p) => self.network.cfg.drop_prob = p,
                 Mutation::SetDelay(model) => self.network.cfg.delay = model,
@@ -780,12 +803,22 @@ impl<'a> GossipSim<'a> {
 
 /// Convenience: run one configuration against a dataset on the native
 /// backend.
+#[deprecated(
+    since = "0.2.0",
+    note = "construct runs through api::RunSpec / api::Session (kept as a \
+            thin shim so engine-parity pins stay bit-for-bit)"
+)]
 pub fn run(cfg: ProtocolConfig, data: &Dataset) -> RunResult {
     GossipSim::new(cfg, data).run()
 }
 
 /// Run the event-driven simulator on an explicit backend (e.g. PJRT), with
 /// backend errors surfaced.
+#[deprecated(
+    since = "0.2.0",
+    note = "construct runs through api::RunSpec / api::Session (kept as a \
+            thin shim so engine-parity pins stay bit-for-bit)"
+)]
 pub fn run_with_backend(
     cfg: ProtocolConfig,
     data: &Dataset,
@@ -795,6 +828,7 @@ pub fn run_with_backend(
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // the parity suite exercises the legacy shims directly
 mod tests {
     use super::*;
     use crate::data::synthetic::{spambase_like, urls_like, Scale};

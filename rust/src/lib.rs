@@ -21,7 +21,12 @@
 //! * [`eval`] — 0-1 error tracking, model similarity, CSV output.
 //! * [`experiments`] — drivers regenerating every paper table/figure.
 //! * [`config`] / [`cli`] — experiment configuration and the `golf` binary.
+//! * [`api`] — **the public front door**: `RunSpec → Session → Outcome` with
+//!   typed [`api::GolfError`]s and live [`api::Observer`] progress streaming,
+//!   unifying the simulators, the deployment, and the sweep grid behind one
+//!   validated schema.
 
+pub mod api;
 pub mod baselines;
 pub mod cli;
 pub mod config;

@@ -8,5 +8,7 @@
 pub mod deploy;
 pub mod wire;
 
-pub use crate::coordinator::{run_deployment, DeployReport, DeployStats};
+#[allow(deprecated)] // the shim stays re-exported for downstream callers
+pub use crate::coordinator::run_deployment;
+pub use crate::coordinator::{run_deployment_observed, DeployReport, DeployStats};
 pub use deploy::{DeployConfig, NodeStats, SIM_DELTA};

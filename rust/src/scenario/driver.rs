@@ -49,6 +49,26 @@ pub enum Mutation {
     Restore(Vec<usize>),
 }
 
+impl Mutation {
+    /// Human-readable one-liner for progress streaming
+    /// ([`crate::api::RunEvent::Scenario`]).
+    pub fn describe(&self) -> String {
+        match self {
+            Mutation::SetDrop(p) => format!("drop probability -> {p}"),
+            Mutation::SetDelay(m) => format!("delay model -> {m:?}"),
+            Mutation::SetPartition(components) => {
+                let k = components.iter().copied().max().map_or(1, |m| m + 1);
+                format!("partition into {k} components")
+            }
+            Mutation::Heal => "partition healed".to_string(),
+            Mutation::Drift => "concept drift: labels invert".to_string(),
+            Mutation::Grow(k) => format!("{k} nodes join"),
+            Mutation::ForceOffline(ids) => format!("{} nodes forced offline", ids.len()),
+            Mutation::Restore(ids) => format!("{} nodes restored", ids.len()),
+        }
+    }
+}
+
 /// The resolved churn directive of a compiled scenario.
 #[derive(Clone, Debug, PartialEq)]
 pub enum CompiledChurn {

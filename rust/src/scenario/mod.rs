@@ -59,6 +59,9 @@ pub enum ScenarioError {
     UnknownNode { what: String, node: usize, n: usize },
     /// initial membership or a join/leave wave is infeasible
     BadMembership { what: String, detail: String },
+    /// two phases (or two events) share a name — their INI sections would
+    /// collide, so serialization could not round-trip
+    DuplicateName { what: String, name: String },
     /// a churn trace entry is malformed (order, overlap)
     BadTrace { detail: String },
     UnknownBuiltin { name: String },
@@ -92,6 +95,9 @@ impl fmt::Display for ScenarioError {
             }
             ScenarioError::BadMembership { what, detail } => {
                 write!(f, "{what}: {detail}")
+            }
+            ScenarioError::DuplicateName { what, name } => {
+                write!(f, "two {what} sections share the name {name:?}")
             }
             ScenarioError::BadTrace { detail } => write!(f, "churn trace: {detail}"),
             ScenarioError::UnknownBuiltin { name } => {
@@ -355,8 +361,65 @@ impl Scenario {
 
     /// Parse a scenario from raw INI text (the standalone `.scn` format).
     pub fn from_ini(text: &str) -> Result<Self, ScenarioError> {
-        let doc = ini::parse(text).map_err(ScenarioError::Ini)?;
+        let doc = ini::parse(text).map_err(|e| ScenarioError::Ini(e.to_string()))?;
         Self::from_ini_doc(&doc)
+    }
+
+    /// Serialize back to the `[scenario]` / `[phase.*]` / `[event.*]` INI
+    /// sections — the inverse of [`Scenario::from_ini_doc`].
+    /// `from_ini(to_ini_sections())` reconstructs an equal scenario, up to
+    /// the parser's canonical ordering (phases by `(from, name)`, events by
+    /// `(at, name)`) and comment-character sanitization of the summary.
+    pub fn to_ini_sections(&self) -> String {
+        let mut out = String::from("[scenario]\n");
+        out.push_str(&format!("name = {}\n", sanitize(&self.name)));
+        if !self.summary.is_empty() {
+            out.push_str(&format!("summary = {}\n", sanitize(&self.summary)));
+        }
+        if let Some(c) = self.cycles_hint {
+            out.push_str(&format!("cycles_hint = {c}\n"));
+        }
+        if let Some(ch) = &self.churn {
+            out.push_str(&format!("churn = {}\n", fmt_churn(ch)));
+        }
+        if let Some(p) = self.drop {
+            out.push_str(&format!("drop = {p}\n"));
+        }
+        if let Some(d) = &self.delay {
+            out.push_str(&format!("delay = {}\n", fmt_delay(d)));
+        }
+        if let Some(m) = &self.initial {
+            out.push_str(&format!("initial_nodes = {}\n", fmt_membership(m)));
+        }
+        for p in &self.phases {
+            out.push_str(&format!(
+                "\n[phase.{}]\nfrom = {}\nto = {}\n",
+                sanitize(&p.name),
+                p.from,
+                p.to
+            ));
+            if let Some(d) = p.drop {
+                out.push_str(&format!("drop = {d}\n"));
+            }
+            if let Some(d) = &p.delay {
+                out.push_str(&format!("delay = {}\n", fmt_delay(d)));
+            }
+            if let Some(spec) = &p.partition {
+                out.push_str(&format!("partition = {}\n", fmt_partition(spec)));
+            }
+            if let Some(f) = p.leave {
+                out.push_str(&format!("leave = {f}\n"));
+            }
+        }
+        for e in &self.events {
+            out.push_str(&format!(
+                "\n[event.{}]\nat = {}\naction = {}\n",
+                sanitize(&e.name),
+                e.at,
+                fmt_action(&e.action)
+            ));
+        }
+        out
     }
 
     /// Read and parse a `.scn` file (resolving any `churn = trace:FILE`
@@ -384,6 +447,27 @@ impl Scenario {
                 what: "initial_nodes".into(),
                 detail: format!("resolves to {n0} nodes; need at least 2"),
             });
+        }
+        // names must be unique per kind *after* INI sanitization:
+        // `[phase.X]`/`[event.X]` sections collide otherwise and the
+        // timeline could not serialize
+        let mut names = std::collections::HashSet::new();
+        for p in &self.phases {
+            if !names.insert(sanitize(&p.name)) {
+                return Err(ScenarioError::DuplicateName {
+                    what: "phase".into(),
+                    name: p.name.clone(),
+                });
+            }
+        }
+        names.clear();
+        for e in &self.events {
+            if !names.insert(sanitize(&e.name)) {
+                return Err(ScenarioError::DuplicateName {
+                    what: "event".into(),
+                    name: e.name.clone(),
+                });
+            }
         }
         // phases: ordered, non-empty, inside the horizon, pairwise disjoint
         for p in &self.phases {
@@ -482,6 +566,70 @@ fn validate_trace(entries: &[TraceEntry], n: usize) -> Result<(), ScenarioError>
 }
 
 // ---------------------------------------------------------------------------
+// value serializers (inverse of the parsers below; used by to_ini_sections)
+
+/// Section/name and summary text must survive the INI lexer: `;`/`#` start
+/// comments and `[`/`]` delimit sections, so they are replaced on emission.
+fn sanitize(s: &str) -> String {
+    s.replace([';', '#', '[', ']'], "-")
+}
+
+fn fmt_delay(d: &DelaySpec) -> String {
+    match d {
+        DelaySpec::Fixed(c) => format!("fixed:{c}"),
+        DelaySpec::Uniform(lo, hi) => format!("uniform:{lo}:{hi}"),
+    }
+}
+
+/// Fractions must keep a decimal point (`parse_membership` reads an
+/// integer-looking value as an absolute count).
+fn fmt_membership(m: &Membership) -> String {
+    match m {
+        Membership::Count(k) => k.to_string(),
+        Membership::Fraction(f) if f.fract() == 0.0 => format!("{f:.1}"),
+        Membership::Fraction(f) => f.to_string(),
+    }
+}
+
+fn fmt_partition(p: &PartitionSpec) -> String {
+    match p {
+        PartitionSpec::Halves => "halves".to_string(),
+        PartitionSpec::Mod(k) => format!("mod:{k}"),
+        PartitionSpec::First(f) => format!("first:{f}"),
+        PartitionSpec::Nodes(ids) => {
+            let ids: Vec<String> = ids.iter().map(|i| i.to_string()).collect();
+            format!("nodes:{}", ids.join(","))
+        }
+    }
+}
+
+fn fmt_churn(c: &ChurnSpec) -> String {
+    match c {
+        ChurnSpec::Off => "none".to_string(),
+        ChurnSpec::Paper => "paper".to_string(),
+        ChurnSpec::Trace(entries) => {
+            let entries: Vec<String> = entries
+                .iter()
+                .map(|e| format!("{} {} {}", e.node, e.from, e.to))
+                .collect();
+            format!("inline:{}", entries.join(","))
+        }
+    }
+}
+
+fn fmt_action(a: &PointAction) -> String {
+    match a {
+        PointAction::Drift => "drift".to_string(),
+        PointAction::Heal => "heal".to_string(),
+        PointAction::Join(m) => format!("join:{}", fmt_membership(m)),
+        PointAction::Leave(f) => format!("leave:{f}"),
+        PointAction::Drop(p) => format!("drop:{p}"),
+        PointAction::Delay(d) => format!("delay:{}", fmt_delay(d)),
+        PointAction::Partition(p) => format!("partition:{}", fmt_partition(p)),
+    }
+}
+
+// ---------------------------------------------------------------------------
 // value parsers
 
 fn parse_prob(v: &str) -> Option<f64> {
@@ -546,20 +694,29 @@ fn parse_churn(v: &str, key: &str) -> Result<ChurnSpec, ScenarioError> {
     match v {
         "none" | "off" => Ok(ChurnSpec::Off),
         "paper" => Ok(ChurnSpec::Paper),
-        other => match other.strip_prefix("trace:") {
-            Some(path) => {
+        other => {
+            if let Some(path) = other.strip_prefix("trace:") {
                 let text = std::fs::read_to_string(path).map_err(|e| ScenarioError::Io {
                     path: path.to_string(),
                     detail: e.to_string(),
                 })?;
-                Ok(ChurnSpec::Trace(parse_trace_text(&text)?))
+                return Ok(ChurnSpec::Trace(parse_trace_text(&text)?));
             }
-            None => Err(ScenarioError::BadValue {
+            if let Some(entries) = other.strip_prefix("inline:") {
+                // file-free trace form (`to_ini_sections` emits it): comma-
+                // separated `node from to` triples on one line
+                let text: String = entries
+                    .split(',')
+                    .collect::<Vec<_>>()
+                    .join("\n");
+                return Ok(ChurnSpec::Trace(parse_trace_text(&text)?));
+            }
+            Err(ScenarioError::BadValue {
                 section: "scenario".into(),
                 key: key.to_string(),
                 value: v.to_string(),
-            }),
-        },
+            })
+        }
     }
 }
 
@@ -996,5 +1153,119 @@ action = drift
             DelaySpec::Uniform(1.0, 10.0).to_model(1000),
             DelayModel::Uniform { lo: 1000, hi: 10_000 }
         );
+    }
+
+    /// `to_ini_sections` is the exact inverse of `from_ini` for every
+    /// built-in — including trace-replay, whose churn trace serializes to
+    /// the file-free `inline:` form.
+    #[test]
+    fn ini_serialization_roundtrips_every_builtin() {
+        for &name in builtin_names() {
+            let s = builtin(name).unwrap();
+            let text = s.to_ini_sections();
+            let back = Scenario::from_ini(&text)
+                .unwrap_or_else(|e| panic!("{name}: reparse failed: {e}\n{text}"));
+            assert_eq!(back, s, "{name} did not round-trip:\n{text}");
+        }
+    }
+
+    #[test]
+    fn ini_serialization_roundtrips_full_surface() {
+        // every phase/event field populated at once (the "storm" scenario of
+        // ini_roundtrip_full_surface, plus inline-trace churn and explicit
+        // partitions/membership forms)
+        let mut s = Scenario::empty("storm");
+        s.summary = "a bit of everything".into();
+        s.cycles_hint = Some(200);
+        s.churn = Some(ChurnSpec::Trace(vec![
+            TraceEntry { node: 0, from: 0, to: 10 },
+            TraceEntry { node: 1, from: 5, to: 20 },
+        ]));
+        s.drop = Some(0.1);
+        s.delay = Some(DelaySpec::Fixed(0.01));
+        s.initial = Some(Membership::Fraction(0.5));
+        s.phases.push(Phase {
+            name: "split".into(),
+            from: 20,
+            to: 60,
+            drop: None,
+            delay: None,
+            partition: Some(PartitionSpec::Nodes(vec![1, 2, 3])),
+            leave: None,
+        });
+        s.phases.push(Phase {
+            name: "storm".into(),
+            from: 80,
+            to: 120,
+            drop: Some(0.8),
+            delay: Some(DelaySpec::Uniform(1.0, 10.0)),
+            partition: None,
+            leave: Some(0.25),
+        });
+        s.events.push(PointEvent {
+            name: "crowd".into(),
+            at: 150,
+            // a whole-number fraction must keep its decimal point
+            action: PointAction::Join(Membership::Fraction(3.0)),
+        });
+        s.events.push(PointEvent {
+            name: "invert".into(),
+            at: 160,
+            action: PointAction::Drift,
+        });
+        s.events.push(PointEvent {
+            name: "zmod".into(),
+            at: 170,
+            action: PointAction::Partition(PartitionSpec::Mod(4)),
+        });
+        let back = Scenario::from_ini(&s.to_ini_sections()).unwrap();
+        assert_eq!(back, s, "\n{}", s.to_ini_sections());
+    }
+
+    #[test]
+    fn duplicate_phase_or_event_names_rejected() {
+        // only reachable programmatically: the INI parser already rejects
+        // colliding sections via its duplicate-key rule
+        let mut s = Scenario::empty("dup");
+        let phase = |name: &str, from: u64, to: u64| Phase {
+            name: name.into(),
+            from,
+            to,
+            drop: Some(0.5),
+            delay: None,
+            partition: None,
+            leave: None,
+        };
+        s.phases.push(phase("outage", 1, 5));
+        s.phases.push(phase("outage", 10, 15));
+        assert!(matches!(
+            s.validate(50, 100),
+            Err(ScenarioError::DuplicateName { .. })
+        ));
+        s.phases[1].name = "outage2".into();
+        s.validate(50, 100).unwrap();
+        s.events.push(PointEvent { name: "e".into(), at: 20, action: PointAction::Drift });
+        s.events.push(PointEvent { name: "e".into(), at: 30, action: PointAction::Drift });
+        assert!(matches!(
+            s.validate(50, 100),
+            Err(ScenarioError::DuplicateName { .. })
+        ));
+    }
+
+    #[test]
+    fn inline_churn_trace_parses() {
+        let s = Scenario::from_ini("[scenario]\nchurn = inline:0 0 10,1 5 20\n").unwrap();
+        assert_eq!(
+            s.churn,
+            Some(ChurnSpec::Trace(vec![
+                TraceEntry { node: 0, from: 0, to: 10 },
+                TraceEntry { node: 1, from: 5, to: 20 },
+            ]))
+        );
+        // malformed triples are rejected with the usual trace error
+        assert!(matches!(
+            Scenario::from_ini("[scenario]\nchurn = inline:0 0\n"),
+            Err(ScenarioError::BadTrace { .. })
+        ));
     }
 }

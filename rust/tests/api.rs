@@ -1,0 +1,439 @@
+//! Facade acceptance tests (DESIGN.md §12): the `RunSpec → Session →
+//! Outcome` pipeline, the INI bidirectionality, the typed-rejection matrix,
+//! and the live `Observer` stream from the Sim and Batched targets (the
+//! Deploy target's stream is pinned in tests/deployment.rs, where socket
+//! tests are serialized).
+
+use golf::api::{CurveRecorder, GolfError, NullObserver, RunSpec, SweepAxes, Target};
+use golf::config::{BackendChoice, DeploySpec, ExperimentSpec};
+use golf::data::synthetic::{spambase_like, urls_like, Scale};
+use golf::gossip::create_model::Variant;
+use golf::p2p::overlay::SamplerConfig;
+
+// ---------------------------------------------------------------------------
+// INI bidirectionality
+
+/// Every `[experiment]` key, set to a non-default value, survives
+/// INI → RunSpec → INI → RunSpec.
+#[test]
+fn ini_roundtrip_every_experiment_key() {
+    let text = "
+[experiment]
+dataset = spambase
+scale = 0.02
+cycles = 9
+variant = um
+learner = adaline
+lambda = 0.5
+eta = 0.01
+cache = 5
+sampler = newscast
+view = 30
+failures = extreme
+seed = 7
+eval_peers = 11
+voting = true
+similarity = true
+backend = event
+mode = scalar
+coalesce = 3
+exec = dense
+scenario = paper-fig3
+";
+    let spec = RunSpec::from_ini(text).unwrap();
+    // the keys landed
+    let e = &spec.experiment;
+    assert_eq!(e.dataset, "spambase");
+    assert_eq!(e.scale, 0.02);
+    assert_eq!(e.cycles, 9);
+    assert_eq!(e.variant, Variant::Um);
+    assert_eq!(e.learner_name, "adaline");
+    assert_eq!(e.lambda, 0.5);
+    assert_eq!(e.eta, 0.01);
+    assert_eq!(e.cache, 5);
+    assert_eq!(e.sampler, SamplerConfig::Newscast { view_size: 30 });
+    assert!(e.failures);
+    assert_eq!(e.seed, 7);
+    assert_eq!(e.eval_peers, 11);
+    assert!(e.voting && e.similarity);
+    assert_eq!(e.backend, BackendChoice::Event);
+    assert_eq!(e.mode, "scalar");
+    assert_eq!(e.coalesce, 3);
+    assert_eq!(e.scenario.as_ref().unwrap().name, "paper-fig3");
+    assert_eq!(spec.target, Target::Sim);
+    // ... and round-trip exactly
+    let round = RunSpec::from_ini(&spec.to_ini()).unwrap();
+    assert_eq!(round, spec, "\n{}", spec.to_ini());
+    // non-newscast samplers round-trip without a view key
+    let mut oracle = spec.clone();
+    oracle.experiment.sampler = SamplerConfig::Oracle;
+    let round = RunSpec::from_ini(&oracle.to_ini()).unwrap();
+    assert_eq!(round, oracle);
+}
+
+/// `sampler` + `view` land deterministically regardless of the map's
+/// iteration order (regression: `sampler = newscast` used to be able to
+/// reset an already-applied `view`).
+#[test]
+fn sampler_and_view_apply_in_fixed_order() {
+    for _ in 0..32 {
+        let mut kv = std::collections::HashMap::new();
+        kv.insert("view".to_string(), "30".to_string());
+        kv.insert("sampler".to_string(), "newscast".to_string());
+        let mut spec = ExperimentSpec::default();
+        spec.apply(&kv).unwrap();
+        assert_eq!(spec.sampler, SamplerConfig::Newscast { view_size: 30 });
+    }
+    // view without a newscast sampler is a typed config error now
+    let mut kv = std::collections::HashMap::new();
+    kv.insert("sampler".to_string(), "oracle".to_string());
+    kv.insert("view".to_string(), "30".to_string());
+    let e = ExperimentSpec::default().apply(&kv).unwrap_err();
+    assert!(matches!(e, GolfError::Config(_)), "{e}");
+}
+
+/// Every `[deploy]` key round-trips, and a `[deploy]` section selects
+/// `Target::Deploy`.
+#[test]
+fn ini_roundtrip_deploy_keys() {
+    let text = "
+[experiment]
+dataset = urls
+scale = 0.01
+cycles = 12
+
+[deploy]
+delta_ms = 25
+nodes = 40
+";
+    let spec = RunSpec::from_ini(text).unwrap();
+    assert_eq!(spec.target, Target::Deploy);
+    assert_eq!(spec.delta_ms, 25);
+    assert_eq!(spec.nodes, 40);
+    let round = RunSpec::from_ini(&spec.to_ini()).unwrap();
+    assert_eq!(round, spec, "\n{}", spec.to_ini());
+}
+
+/// Every `[sweep]` key round-trips.
+#[test]
+fn ini_roundtrip_sweep_axes() {
+    let text = "
+[experiment]
+scale = 0.01
+cycles = 4
+seed = 5
+
+[sweep]
+variants = rw,mu,um
+failures = none,extreme
+scenarios = none,paper-fig3
+replicates = 2
+threads = 3
+";
+    let spec = RunSpec::from_ini(text).unwrap();
+    let axes = spec.sweep.as_ref().unwrap();
+    assert_eq!(axes.variants, vec![Variant::Rw, Variant::Mu, Variant::Um]);
+    assert_eq!(axes.failures, vec![false, true]);
+    assert_eq!(axes.scenarios, vec!["none", "paper-fig3"]);
+    assert_eq!(axes.replicates, 2);
+    assert_eq!(axes.threads, 3);
+    let round = RunSpec::from_ini(&spec.to_ini()).unwrap();
+    assert_eq!(round, spec, "\n{}", spec.to_ini());
+}
+
+/// A custom (non-built-in) scenario embeds as full sections and survives
+/// the round trip.
+#[test]
+fn ini_roundtrip_embedded_scenario() {
+    let text = "
+[experiment]
+dataset = urls
+scale = 0.01
+cycles = 60
+
+[scenario]
+name = blip
+drop = 0.1
+
+[phase.outage]
+from = 10
+to = 30
+drop = 0.9
+
+[event.invert]
+at = 40
+action = drift
+";
+    let spec = RunSpec::from_ini(text).unwrap();
+    let scn = spec.experiment.scenario.as_ref().unwrap();
+    assert_eq!(scn.name, "blip");
+    assert_eq!(scn.phases.len(), 1);
+    assert_eq!(scn.events.len(), 1);
+    let ini = spec.to_ini();
+    assert!(ini.contains("[phase.outage]"), "\n{ini}");
+    let round = RunSpec::from_ini(&ini).unwrap();
+    assert_eq!(round, spec, "\n{ini}");
+}
+
+/// from_spec/to_spec and from_deploy_spec/to_deploy_spec are inverses.
+#[test]
+fn spec_conversions_are_inverses() {
+    let exp = ExperimentSpec {
+        backend: BackendChoice::BatchedNative,
+        cycles: 17,
+        ..Default::default()
+    };
+    let spec = RunSpec::from_spec(exp.clone());
+    assert_eq!(spec.target, Target::Batched);
+    assert_eq!(spec.to_spec(), exp);
+
+    let dspec = DeploySpec { experiment: exp, delta_ms: 77, nodes: 9 };
+    let spec = RunSpec::from_deploy_spec(dspec.clone());
+    assert_eq!(spec.target, Target::Deploy);
+    assert_eq!(spec.to_deploy_spec(), dspec);
+}
+
+/// Unknown sections and top-level keys are typed config errors — one
+/// schema, nothing silently ignored.
+#[test]
+fn ini_rejects_unknown_sections_and_stray_keys() {
+    let e = RunSpec::from_ini("[expermient]\ndataset = urls\n").unwrap_err();
+    assert!(matches!(e, GolfError::Config(_)), "{e}");
+    let e = RunSpec::from_ini("dataset = urls\n").unwrap_err();
+    assert!(matches!(e, GolfError::Config(_)), "{e}");
+}
+
+// ---------------------------------------------------------------------------
+// validation matrix
+
+fn kind(e: &GolfError) -> &'static str {
+    e.kind()
+}
+
+#[test]
+fn rejects_invalid_combinations_with_typed_errors() {
+    // Target::Deploy + sampler = matching (simulator-only baseline)
+    let e = RunSpec::new("urls")
+        .scale(0.005)
+        .sampler(SamplerConfig::Matching)
+        .deploy(10, 0)
+        .build()
+        .unwrap_err();
+    assert_eq!(kind(&e), "config", "{e}");
+
+    // sweep axes on a deployment
+    let e = RunSpec::new("urls")
+        .deploy(10, 0)
+        .sweep(SweepAxes::default())
+        .build()
+        .unwrap_err();
+    assert_eq!(kind(&e), "config", "{e}");
+
+    // sweep axes on a batched backend
+    let e = RunSpec::new("urls")
+        .backend(BackendChoice::BatchedNative)
+        .sweep(SweepAxes::default())
+        .build()
+        .unwrap_err();
+    assert_eq!(kind(&e), "config", "{e}");
+
+    // sweep with an unknown scenario name
+    let axes = SweepAxes { scenarios: vec!["warp".into()], ..Default::default() };
+    let e = RunSpec::new("urls").sweep(axes).build().unwrap_err();
+    assert_eq!(kind(&e), "scenario", "{e}");
+
+    // sweep with an attached scenario timeline (the grid takes its scenario
+    // axis from the [sweep] section; a timeline would be silently dropped)
+    let e = RunSpec::new("urls")
+        .builtin_scenario("paper-fig3")
+        .unwrap()
+        .sweep(SweepAxes::default())
+        .build()
+        .unwrap_err();
+    assert_eq!(kind(&e), "config", "{e}");
+
+    // a deployment has no compute backend (DeployConfig runs natively);
+    // a batched/PJRT backend must not be silently ignored
+    let e = RunSpec::new("urls")
+        .scale(0.005)
+        .backend(BackendChoice::BatchedNative)
+        .deploy(10, 0)
+        .build()
+        .unwrap_err();
+    assert_eq!(kind(&e), "config", "{e}");
+
+    // unknown dataset
+    let e = RunSpec::new("nope").build().unwrap_err();
+    assert_eq!(kind(&e), "data", "{e}");
+
+    // bad stepping mode
+    let mut spec = RunSpec::new("urls").scale(0.005);
+    spec.experiment.mode = "warp".into(); // the builder only offers valid modes
+    let e = spec.build().unwrap_err();
+    assert_eq!(kind(&e), "config", "{e}");
+
+    // voting needs the event-driven simulator
+    let e = RunSpec::new("urls")
+        .scale(0.005)
+        .backend(BackendChoice::BatchedNative)
+        .voting(true)
+        .build()
+        .unwrap_err();
+    assert_eq!(kind(&e), "config", "{e}");
+
+    // more deployment nodes than training rows
+    let e = RunSpec::new("urls")
+        .scale(0.005)
+        .deploy(10, 2000)
+        .build()
+        .unwrap_err();
+    assert_eq!(kind(&e), "data", "{e}");
+
+    // a scenario whose timeline cannot fit the horizon
+    let e = RunSpec::new("urls")
+        .scale(0.005)
+        .cycles(6)
+        .builtin_scenario("partition-heal")
+        .unwrap()
+        .build()
+        .unwrap_err();
+    assert_eq!(kind(&e), "scenario", "{e}");
+
+    // build_with against a differently named dataset
+    let ds = spambase_like(1, Scale(0.01));
+    let e = RunSpec::new("urls").build_with(&ds).unwrap_err();
+    assert_eq!(kind(&e), "data", "{e}");
+}
+
+// ---------------------------------------------------------------------------
+// observer streaming (Sim and Batched targets)
+
+/// Sim target: the streamed eval points are exactly the returned curve,
+/// cycle boundaries are strictly increasing within the horizon, scenario
+/// mutations stream as they apply — and observation is passive (an observed
+/// run equals an unobserved one bit for bit).
+#[test]
+fn observer_stream_matches_outcome_sim() {
+    let spec = || {
+        RunSpec::new("urls")
+            .scale(0.005)
+            .cycles(8)
+            .eval_peers(5)
+            .seed(3)
+            .builtin_scenario("paper-fig3")
+            .unwrap()
+    };
+    let mut rec = CurveRecorder::new();
+    let observed = spec().build().unwrap().run(&mut rec).unwrap();
+    let curve = &observed.run_result().unwrap().curve;
+
+    let streamed = rec.eval_points();
+    assert_eq!(streamed.len(), curve.points.len());
+    for (s, p) in streamed.iter().zip(&curve.points) {
+        assert_eq!(s.cycle, p.cycle);
+        assert_eq!(s.err_mean, p.err_mean);
+        assert_eq!(s.err_std, p.err_std);
+        assert_eq!(s.messages_sent, p.messages_sent);
+    }
+    let cycles = rec.cycles();
+    assert!(!cycles.is_empty());
+    assert!(cycles.windows(2).all(|w| w[0] < w[1]), "{cycles:?}");
+    assert!(*cycles.last().unwrap() <= 8);
+    // paper-fig3 applies its baseline failure models as mutations at cycle 0
+    assert!(!rec.mutations().is_empty());
+    assert!(rec.mutations().iter().all(|(c, _)| *c <= 8));
+
+    // passivity: unobserved run is identical
+    let unobserved = spec().build().unwrap().run(&mut NullObserver).unwrap();
+    let a: Vec<f64> = curve.points.iter().map(|p| p.err_mean).collect();
+    let b: Vec<f64> = unobserved
+        .run_result()
+        .unwrap()
+        .curve
+        .points
+        .iter()
+        .map(|p| p.err_mean)
+        .collect();
+    assert_eq!(a, b, "observation must not perturb the run");
+}
+
+/// Batched target: one Cycle event per cycle, eval events == curve.
+#[test]
+fn observer_stream_matches_outcome_batched() {
+    let mut rec = CurveRecorder::new();
+    let outcome = RunSpec::new("urls")
+        .scale(0.005)
+        .cycles(6)
+        .eval_peers(5)
+        .backend(BackendChoice::BatchedNative)
+        .build()
+        .unwrap()
+        .run(&mut rec)
+        .unwrap();
+    let curve = &outcome.run_result().unwrap().curve;
+    assert_eq!(rec.cycles(), (1..=6).collect::<Vec<u64>>());
+    let streamed = rec.eval_points();
+    assert_eq!(streamed.len(), curve.points.len());
+    for (s, p) in streamed.iter().zip(&curve.points) {
+        assert_eq!(s.cycle, p.cycle);
+        assert_eq!(s.err_mean, p.err_mean);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// outcomes
+
+/// The facade's sweep outcome equals the sweep the grid runner produces,
+/// and the uniform accessors see every cell.
+#[test]
+fn sweep_outcome_exposes_cells_uniformly() {
+    let axes = SweepAxes {
+        variants: vec![Variant::Mu],
+        failures: vec![false],
+        threads: 2,
+        ..Default::default()
+    };
+    let outcome = RunSpec::new("urls")
+        .scale(0.01)
+        .cycles(3)
+        .seed(7)
+        .eval_peers(5)
+        .sweep(axes)
+        .build()
+        .unwrap()
+        .run(&mut NullObserver)
+        .unwrap();
+    let cells = outcome.sweep_cells().unwrap();
+    assert_eq!(cells.len(), 3, "one cell per registry dataset");
+    assert_eq!(outcome.curves().len(), 3);
+    assert!(outcome.curve().is_some());
+    assert_eq!(
+        outcome.messages_sent(),
+        cells.iter().map(|c| c.stats.messages_sent).sum::<u64>()
+    );
+    assert!(outcome.bytes_sent() > 0);
+    // per-cell seeds still follow the historical derivation
+    assert_eq!(
+        cells[0].seed,
+        golf::experiments::sweep::cell_seed(7, "reuters", Variant::Mu, false, "none", 0)
+    );
+}
+
+/// A session can be run repeatedly (e.g. to compare observers) and a
+/// borrowed-dataset session runs against the caller's data.
+#[test]
+fn sessions_are_reusable_and_borrowable() {
+    let ds = urls_like(11, Scale(0.005));
+    let session = RunSpec::new("urls")
+        .cycles(3)
+        .eval_peers(5)
+        .build_with(&ds)
+        .unwrap();
+    assert_eq!(session.data().unwrap().name, "urls");
+    let a = session.run(&mut NullObserver).unwrap();
+    let b = session.run(&mut NullObserver).unwrap();
+    assert_eq!(
+        a.run_result().unwrap().curve.final_error(),
+        b.run_result().unwrap().curve.final_error()
+    );
+}

@@ -3,6 +3,8 @@
 //! orderings must hold (WB1 ≼ WB2 ≼ MU ≼ RW ≼ sequential in convergence
 //! speed; merging beats no merging).
 
+
+#![allow(deprecated)] // this suite pins the legacy shims (run/run_batched/run_deployment) bit-for-bit
 use golf::baselines::sequential;
 use golf::baselines::weighted_bagging::{curve as wb_curve, Bagging};
 use golf::data::synthetic::{reuters_like, spambase_like, urls_like, Scale};

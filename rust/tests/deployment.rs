@@ -7,6 +7,8 @@
 //! so they serialize through one mutex (and CI additionally runs this
 //! binary with `--test-threads=1`) to avoid contending for ports and CPU.
 
+
+#![allow(deprecated)] // this suite pins the legacy shims (run/run_batched/run_deployment) bit-for-bit
 use golf::coordinator::{matched_sim_config, run_deployment};
 use golf::data::synthetic::{urls_like, Scale};
 use golf::gossip::protocol::run;
@@ -232,4 +234,44 @@ fn deploy_respects_stop_flag_quickly() {
         t0.elapsed()
     );
     assert_eq!(report.per_node.len(), cfg.n_nodes);
+}
+
+/// Observer streaming from the deployment target (api facade acceptance):
+/// the eval-point events match the returned curve exactly, one NodeStats
+/// event arrives per node, and observation does not disturb the run.
+#[test]
+fn deploy_observer_streams_eval_points_and_node_stats() {
+    use golf::api::{CurveRecorder, RunSpec};
+    let _g = serial();
+    let mut rec = CurveRecorder::new();
+    let outcome = RunSpec::new("urls")
+        .scale(0.0012) // 12 nodes
+        .cycles(5)
+        .eval_peers(5)
+        .seed(9)
+        .deploy(12, 0) // 12 ms wall-clock Δ, one node per training row
+        .build()
+        .expect("deploy spec valid")
+        .run(&mut rec)
+        .expect("deployment run");
+    let report = outcome.deploy_report().expect("deploy outcome");
+
+    // streamed eval points == returned curve, point for point
+    let streamed = rec.eval_points();
+    assert_eq!(streamed.len(), report.curve.points.len());
+    for (s, p) in streamed.iter().zip(&report.curve.points) {
+        assert_eq!(s.cycle, p.cycle);
+        assert_eq!(s.err_mean, p.err_mean);
+        assert_eq!(s.messages_sent, p.messages_sent);
+    }
+    // one NodeStats event per node, in node order, agreeing with per_node
+    let stats = rec.node_stats();
+    assert_eq!(stats.len(), report.per_node.len());
+    for (i, (node, sent, received)) in stats.iter().enumerate() {
+        assert_eq!(*node, i);
+        assert_eq!(*sent, report.per_node[i].sent);
+        assert_eq!(*received, report.per_node[i].received);
+    }
+    // cycle boundaries cover the measurement grid
+    assert_eq!(rec.cycles().len(), report.curve.points.len());
 }

@@ -6,6 +6,8 @@
 //! Tests are skipped when `artifacts/manifest.tsv` is missing (run
 //! `make artifacts` first).
 
+
+#![allow(deprecated)] // this suite pins the legacy shims (run/run_batched/run_deployment) bit-for-bit
 use golf::config::ExperimentSpec;
 use golf::data::synthetic::{reuters_like, spambase_like, urls_like, Scale};
 use golf::engine::batched::run_batched;

@@ -3,6 +3,8 @@
 //! and the slowdown factors should match the paper's accounting (delay ≈ ×5,
 //! drop ≈ ×2).
 
+
+#![allow(deprecated)] // this suite pins the legacy shims (run/run_batched/run_deployment) bit-for-bit
 use golf::data::synthetic::{urls_like, Scale};
 use golf::eval::tracker::Curve;
 use golf::gossip::protocol::{run, ProtocolConfig};

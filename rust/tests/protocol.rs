@@ -1,6 +1,8 @@
 //! Protocol-level integration: cost model, determinism, sampler variants,
 //! local voting (Fig. 3 shape), and the UM-vs-MU relationship (Fig. 2).
 
+
+#![allow(deprecated)] // this suite pins the legacy shims (run/run_batched/run_deployment) bit-for-bit
 use golf::data::synthetic::{urls_like, Scale};
 use golf::eval::tracker::Curve;
 use golf::gossip::create_model::Variant;

@@ -4,6 +4,8 @@
 //! reproduce the hand-wired extreme-failure configuration bit-for-bit, and
 //! scenario sweep grids must be thread-count independent.
 
+
+#![allow(deprecated)] // this suite pins the legacy shims (run/run_batched/run_deployment) bit-for-bit
 use golf::data::synthetic::{urls_like, Scale};
 use golf::engine::batched::run_batched;
 use golf::engine::native::NativeBackend;
