@@ -1,0 +1,80 @@
+#!/usr/bin/env python3
+"""Compare a freshly-measured BENCH_*.json against the committed baseline.
+
+Usage: check_bench_regression.py BASELINE.json FRESH.json [--tolerance 0.20]
+
+Every BENCH file is a flat ``{"bench": ..., "unit": ..., "results": {key: value}}``
+object (see rust/benches/perf.rs).  Keys are compared only when present in
+both files; higher is better for throughput-style keys, lower is better for
+``*_walltime_s`` keys.  A relative regression beyond the tolerance on any
+shared key fails the check (exit 1).  A missing or unreadable baseline is a
+warn-pass (exit 0): the first run on a new machine commits the baseline
+instead of failing.
+
+CI-bench caveat: shared runners are noisy, so the gate only re-runs the
+cheap sections (GOLF_BENCH_SECTIONS) and uses a generous tolerance.
+"""
+
+import json
+import sys
+
+
+def load(path):
+    with open(path) as f:
+        doc = json.load(f)
+    results = doc.get("results", {})
+    if not isinstance(results, dict):
+        raise ValueError(f"{path}: 'results' is not an object")
+    return {k: float(v) for k, v in results.items()}
+
+
+def main(argv):
+    args = [a for a in argv[1:] if not a.startswith("--")]
+    tol = 0.20
+    for a in argv[1:]:
+        if a.startswith("--tolerance"):
+            tol = float(a.split("=", 1)[1] if "=" in a else argv[argv.index(a) + 1])
+    if len(args) < 2:
+        print(__doc__)
+        return 2
+    baseline_path, fresh_path = args[0], args[1]
+
+    try:
+        base = load(baseline_path)
+    except (OSError, ValueError, json.JSONDecodeError) as e:
+        print(f"WARN: no usable baseline at {baseline_path} ({e}); passing")
+        return 0
+    try:
+        fresh = load(fresh_path)
+    except (OSError, ValueError, json.JSONDecodeError) as e:
+        print(f"ERROR: fresh bench output unreadable at {fresh_path} ({e})")
+        return 1
+
+    shared = sorted(set(base) & set(fresh))
+    if not shared:
+        print("WARN: baseline and fresh results share no keys; passing")
+        return 0
+
+    failed = []
+    for k in shared:
+        b, f = base[k], fresh[k]
+        if b <= 0:
+            continue
+        lower_is_better = k.endswith("_walltime_s")
+        # regression = fresh worse than baseline by more than tol
+        ratio = (f / b) if lower_is_better else (b / f if f > 0 else float("inf"))
+        worse = ratio - 1.0
+        status = "FAIL" if worse > tol else "ok"
+        print(f"{status:>4}  {k}: baseline {b:.1f} fresh {f:.1f} ({worse:+.1%})")
+        if worse > tol:
+            failed.append(k)
+
+    if failed:
+        print(f"\n{len(failed)} key(s) regressed beyond {tol:.0%}: {', '.join(failed)}")
+        return 1
+    print(f"\nall {len(shared)} shared keys within {tol:.0%}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -74,346 +74,470 @@ fn write_bench_json(bench: &str, unit: &str, results: &[(String, f64)]) {
     }
 }
 
+/// Section filter: `GOLF_BENCH_SECTIONS=protocol,sharded` runs only the
+/// named sections (comma-separated); unset runs everything.  The CI
+/// regression gate uses this to re-run the cheap sections only.
+fn section_enabled(name: &str) -> bool {
+    match std::env::var("GOLF_BENCH_SECTIONS") {
+        Err(_) => true,
+        Ok(v) => v.split(',').any(|s| s.trim() == name),
+    }
+}
+
+/// Peak resident set size of this process in MiB (`VmHWM` from
+/// /proc/self/status), or 0.0 where procfs is unavailable.
+fn peak_rss_mib() -> f64 {
+    let Ok(s) = std::fs::read_to_string("/proc/self/status") else { return 0.0 };
+    for line in s.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: f64 = rest
+                .trim()
+                .trim_end_matches("kB")
+                .trim()
+                .parse()
+                .unwrap_or(0.0);
+            return kb / 1024.0;
+        }
+    }
+    0.0
+}
+
+/// A dense synthetic teacher problem sized for node-count scaling runs:
+/// `n` training rows (one gossip node each), a deliberately small test set,
+/// and d=10 features so walltime measures the event engine, not the kernels.
+fn scaling_dataset(seed: u64, n: usize) -> golf::data::Dataset {
+    use golf::data::{Dataset, Examples, Matrix};
+    let d = 10usize;
+    let mut rng = Rng::new(seed ^ 0x5ca1e);
+    let teacher: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+    let mut gen = |rows: usize| {
+        let mut x = Vec::with_capacity(rows * d);
+        let mut y = Vec::with_capacity(rows);
+        for _ in 0..rows {
+            let row: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            let dot: f32 = row.iter().zip(&teacher).map(|(a, b)| a * b).sum();
+            let label = if dot >= 0.0 { 1.0 } else { -1.0 };
+            y.push(if rng.chance(0.05) { -label } else { label });
+            x.extend(row);
+        }
+        (Examples::Dense(Matrix::from_vec(rows, d, x)), y)
+    };
+    let (train, train_y) = gen(n);
+    let (test, test_y) = gen(1000);
+    Dataset { name: format!("teacher{n}"), train, train_y, test, test_y }
+}
+
 fn main() {
     let mut rng = Rng::new(1);
     let mut json: Vec<(String, f64)> = Vec::new();
 
-    println!("--- L3 event-driven simulator throughput");
-    for (name, ds, cycles) in [
-        ("urls 1000 nodes d=10", urls_like(1, Scale(0.1)), 50u64),
-        ("spambase 4140 nodes d=57", spambase_like(1, Scale::FULL), 20),
-        ("reuters 500 nodes d=9947", reuters_like(1, Scale(0.25)), 10),
-    ] {
-        let mut msgs = 0u64;
-        let r = bench(&format!("event sim: {name}"), 0, 3, || {
-            let mut cfg = ProtocolConfig::paper_default(cycles);
-            cfg.eval.n_peers = 0; // isolate protocol cost from eval cost
-            cfg.eval.at_cycles = vec![cycles];
-            let res = run(cfg, &ds);
-            msgs = res.stats.messages_sent;
-        });
-        println!(
-            "    -> {:.2} M delivered messages/s",
-            r.throughput(msgs as f64) / 1e6
-        );
-    }
-
-    println!("\n--- event-driven stepping: scalar vs micro-batched (same semantics)");
-    for (key, name, ds, cycles) in [
-        ("urls", "urls 1000 nodes d=10", urls_like(1, Scale(0.1)), 40u64),
-        ("spambase", "spambase 1035 nodes d=57", spambase_like(1, Scale(0.25)), 25),
-        ("reuters", "reuters 500 nodes d=9947", reuters_like(1, Scale(0.25)), 8),
-    ] {
-        let delta = ProtocolConfig::paper_default(1).delta;
-        for (mode_key, mode_name, exec) in [
-            ("scalar", "scalar        ", ExecMode::Scalar),
-            ("microbatch", "microbatch w=0", ExecMode::MicroBatch { coalesce: 0 }),
-            (
-                "microbatch_w4",
-                "microbatch w=Δ/4",
-                ExecMode::MicroBatch { coalesce: delta / 4 },
-            ),
+    if section_enabled("protocol") {
+        println!("--- L3 event-driven simulator throughput");
+        for (name, ds, cycles) in [
+            ("urls 1000 nodes d=10", urls_like(1, Scale(0.1)), 50u64),
+            ("spambase 4140 nodes d=57", spambase_like(1, Scale::FULL), 20),
+            ("reuters 500 nodes d=9947", reuters_like(1, Scale(0.25)), 10),
         ] {
             let mut msgs = 0u64;
-            let mut calls = 0u64;
-            let r = bench(&format!("event {mode_name}: {name}"), 0, 3, || {
+            let r = bench(&format!("event sim: {name}"), 0, 3, || {
                 let mut cfg = ProtocolConfig::paper_default(cycles);
-                cfg.eval.n_peers = 0;
+                cfg.eval.n_peers = 0; // isolate protocol cost from eval cost
                 cfg.eval.at_cycles = vec![cycles];
-                cfg.exec = exec;
                 let res = run(cfg, &ds);
-                msgs = res.stats.updates_applied;
-                calls = res.stats.engine_calls;
+                msgs = res.stats.messages_sent;
             });
-            let per_s = r.throughput(msgs as f64);
             println!(
-                "    -> {:.2} M delivered messages/s  ({:.1} rows/engine-call)",
-                per_s / 1e6,
-                msgs as f64 / calls.max(1) as f64
+                "    -> {:.2} M delivered messages/s",
+                r.throughput(msgs as f64) / 1e6
             );
-            json.push((format!("event_{mode_key}_{key}"), per_s));
         }
-    }
 
-    // ---- dense vs sparse kernels (O(d) vs O(nnz); DESIGN.md §7) -----------
-    println!("\n--- kernels: dense vs O(nnz) sparse execution path");
-    let mut kjson: Vec<(String, f64)> = Vec::new();
-    {
-        let mut native = NativeBackend::new();
-        // (shape key, d, nnz, batch rows): spambase-like, reuters-like, and a
-        // URL-collection-like raw feature space
-        for (key, d, nnz, b) in [
-            ("d60", 60usize, 57usize, 256usize),
-            ("d10k", 10_000, 60, 64),
-            ("d1m", 1_000_000, 130, 4),
+        println!("\n--- event-driven stepping: scalar vs micro-batched (same semantics)");
+        for (key, name, ds, cycles) in [
+            ("urls", "urls 1000 nodes d=10", urls_like(1, Scale(0.1)), 40u64),
+            ("spambase", "spambase 1035 nodes d=57", spambase_like(1, Scale(0.25)), 25),
+            ("reuters", "reuters 500 nodes d=9947", reuters_like(1, Scale(0.25)), 8),
         ] {
-            // one set of rows, staged both ways
-            let mut idxs: Vec<Vec<u32>> = Vec::with_capacity(b);
-            let mut vals: Vec<Vec<f32>> = Vec::with_capacity(b);
-            for _ in 0..b {
-                let mut seen = std::collections::HashSet::new();
-                let mut idx: Vec<u32> = Vec::with_capacity(nnz);
-                while idx.len() < nnz {
-                    let j = rng.below(d as u64) as u32;
-                    if seen.insert(j) {
-                        idx.push(j);
-                    }
-                }
-                idx.sort_unstable();
-                vals.push(idx.iter().map(|_| rng.normal() as f32).collect());
-                idxs.push(idx);
-            }
-            let mut dense_sb = StepBatch::default();
-            dense_sb.resize(b, d);
-            for v in dense_sb.w1.iter_mut().chain(&mut dense_sb.w2) {
-                *v = rng.normal() as f32;
-            }
-            for i in 0..b {
-                dense_sb.y[i] = rng.sign();
-                dense_sb.t1[i] = 1.0 + rng.below(100) as f32;
-                dense_sb.t2[i] = 1.0 + rng.below(100) as f32;
-                for (&j, &v) in idxs[i].iter().zip(&vals[i]) {
-                    dense_sb.x[i * d + j as usize] = v;
-                }
-            }
-            let mut sparse_sb = dense_sb.clone();
-            sparse_sb.resize_for(b, d, true);
-            for i in 0..b {
-                sparse_sb.push_sparse_x_row(&idxs[i], &vals[i]);
-            }
-            let iters = if d >= 1_000_000 { 10 } else { 200 };
-            for (vkey, variant) in [("rw", Variant::Rw), ("mu", Variant::Mu)] {
-                let op = StepOp { learner: LearnerKind::Pegasos, variant, hp: 0.01 };
-                let rd = bench(&format!("dense  pegasos {vkey} {key} b={b}"), 2, iters, || {
-                    native.step(&op, &mut dense_sb).unwrap();
-                });
-                let rs = bench(&format!("sparse pegasos {vkey} {key} b={b}"), 2, iters, || {
-                    native.step(&op, &mut sparse_sb).unwrap();
-                });
-                let speedup = rd.mean_ns / rs.mean_ns;
-                println!(
-                    "    -> dense {:.0} ns/update, sparse {:.0} ns/update: speedup x{:.1}",
-                    rd.mean_ns / b as f64,
-                    rs.mean_ns / b as f64,
-                    speedup
-                );
-                kjson.push((format!("dense_{vkey}_{key}"), rd.throughput(b as f64)));
-                kjson.push((format!("sparse_{vkey}_{key}"), rs.throughput(b as f64)));
-                kjson.push((format!("speedup_{vkey}_{key}"), speedup));
-            }
-        }
-
-        // end-to-end event-driven gossip on reuters: forced dense vs sparse
-        println!("\n--- kernels: end-to-end event-driven run, --exec dense vs sparse");
-        {
-            use golf::gossip::protocol::ExecPath;
-            let ds = reuters_like(2, Scale(0.25));
-            let mut per_s = [0.0f64; 2];
-            for (slot, (pkey, path)) in
-                [("dense", ExecPath::Dense), ("sparse", ExecPath::Sparse)].iter().enumerate()
-            {
+            let delta = ProtocolConfig::paper_default(1).delta;
+            for (mode_key, mode_name, exec) in [
+                ("scalar", "scalar        ", ExecMode::Scalar),
+                ("microbatch", "microbatch w=0", ExecMode::MicroBatch { coalesce: 0 }),
+                (
+                    "microbatch_w4",
+                    "microbatch w=Δ/4",
+                    ExecMode::MicroBatch { coalesce: delta / 4 },
+                ),
+            ] {
                 let mut msgs = 0u64;
-                let r = bench(&format!("event sim reuters --exec {pkey}"), 0, 2, || {
-                    let mut cfg = ProtocolConfig::paper_default(6);
+                let mut calls = 0u64;
+                let r = bench(&format!("event {mode_name}: {name}"), 0, 3, || {
+                    let mut cfg = ProtocolConfig::paper_default(cycles);
                     cfg.eval.n_peers = 0;
-                    cfg.eval.at_cycles = vec![6];
-                    cfg.path = *path;
+                    cfg.eval.at_cycles = vec![cycles];
+                    cfg.exec = exec;
                     let res = run(cfg, &ds);
                     msgs = res.stats.updates_applied;
+                    calls = res.stats.engine_calls;
                 });
-                per_s[slot] = r.throughput(msgs as f64);
-                kjson.push((format!("protocol_{pkey}_reuters"), per_s[slot]));
+                let per_s = r.throughput(msgs as f64);
+                println!(
+                    "    -> {:.2} M delivered messages/s  ({:.1} rows/engine-call)",
+                    per_s / 1e6,
+                    msgs as f64 / calls.max(1) as f64
+                );
+                json.push((format!("event_{mode_key}_{key}"), per_s));
             }
-            println!("    -> end-to-end speedup x{:.1}", per_s[1] / per_s[0]);
-            kjson.push(("speedup_protocol_reuters".into(), per_s[1] / per_s[0]));
         }
+    }
 
-        // batched evaluation on a reuters-like sparse test set, vs the same
-        // rows densified (the pre-sparse-path evaluator's layout)
-        println!("\n--- kernels: batched evaluation, sparse vs densified test set");
+    if section_enabled("kernels") {
+        // ---- dense vs sparse kernels (O(d) vs O(nnz); DESIGN.md §7) -----------
+        println!("\n--- kernels: dense vs O(nnz) sparse execution path");
+        let mut kjson: Vec<(String, f64)> = Vec::new();
         {
-            use golf::data::dataset::Examples;
-            use golf::data::matrix::Matrix;
-            let ds = reuters_like(3, Scale(0.25));
-            let d = ds.d();
-            let n = ds.n_test();
-            let m = 100usize;
-            let w: Vec<f32> = (0..m * d).map(|_| rng.normal() as f32).collect();
-            let mut dense = vec![0.0f32; n * d];
-            for i in 0..n {
-                ds.test.row(i).write_dense(&mut dense[i * d..(i + 1) * d]);
+            let mut native = NativeBackend::new();
+            // (shape key, d, nnz, batch rows): spambase-like, reuters-like, and a
+            // URL-collection-like raw feature space
+            for (key, d, nnz, b) in [
+                ("d60", 60usize, 57usize, 256usize),
+                ("d10k", 10_000, 60, 64),
+                ("d1m", 1_000_000, 130, 4),
+            ] {
+                // one set of rows, staged both ways
+                let mut idxs: Vec<Vec<u32>> = Vec::with_capacity(b);
+                let mut vals: Vec<Vec<f32>> = Vec::with_capacity(b);
+                for _ in 0..b {
+                    let mut seen = std::collections::HashSet::new();
+                    let mut idx: Vec<u32> = Vec::with_capacity(nnz);
+                    while idx.len() < nnz {
+                        let j = rng.below(d as u64) as u32;
+                        if seen.insert(j) {
+                            idx.push(j);
+                        }
+                    }
+                    idx.sort_unstable();
+                    vals.push(idx.iter().map(|_| rng.normal() as f32).collect());
+                    idxs.push(idx);
+                }
+                let mut dense_sb = StepBatch::default();
+                dense_sb.resize(b, d);
+                for v in dense_sb.w1.iter_mut().chain(&mut dense_sb.w2) {
+                    *v = rng.normal() as f32;
+                }
+                for i in 0..b {
+                    dense_sb.y[i] = rng.sign();
+                    dense_sb.t1[i] = 1.0 + rng.below(100) as f32;
+                    dense_sb.t2[i] = 1.0 + rng.below(100) as f32;
+                    for (&j, &v) in idxs[i].iter().zip(&vals[i]) {
+                        dense_sb.x[i * d + j as usize] = v;
+                    }
+                }
+                let mut sparse_sb = dense_sb.clone();
+                sparse_sb.resize_for(b, d, true);
+                for i in 0..b {
+                    sparse_sb.push_sparse_x_row(&idxs[i], &vals[i]);
+                }
+                let iters = if d >= 1_000_000 { 10 } else { 200 };
+                for (vkey, variant) in [("rw", Variant::Rw), ("mu", Variant::Mu)] {
+                    let op = StepOp { learner: LearnerKind::Pegasos, variant, hp: 0.01 };
+                    let rd = bench(&format!("dense  pegasos {vkey} {key} b={b}"), 2, iters, || {
+                        native.step(&op, &mut dense_sb).unwrap();
+                    });
+                    let rs = bench(&format!("sparse pegasos {vkey} {key} b={b}"), 2, iters, || {
+                        native.step(&op, &mut sparse_sb).unwrap();
+                    });
+                    let speedup = rd.mean_ns / rs.mean_ns;
+                    println!(
+                        "    -> dense {:.0} ns/update, sparse {:.0} ns/update: speedup x{:.1}",
+                        rd.mean_ns / b as f64,
+                        rs.mean_ns / b as f64,
+                        speedup
+                    );
+                    kjson.push((format!("dense_{vkey}_{key}"), rd.throughput(b as f64)));
+                    kjson.push((format!("sparse_{vkey}_{key}"), rs.throughput(b as f64)));
+                    kjson.push((format!("speedup_{vkey}_{key}"), speedup));
+                }
             }
-            let dense_ex = Examples::Dense(Matrix::from_vec(n, d, dense));
-            let rd = bench(&format!("eval dense  n={n} d={d} m={m}"), 1, 5, || {
-                std::hint::black_box(
-                    native
-                        .error_counts_examples(&dense_ex, &ds.test_y, &w, m)
-                        .unwrap(),
-                );
-            });
-            let rs = bench(&format!("eval sparse n={n} d={d} m={m}"), 1, 5, || {
-                std::hint::black_box(
-                    native
-                        .error_counts_examples(&ds.test, &ds.test_y, &w, m)
-                        .unwrap(),
-                );
-            });
-            let speedup = rd.mean_ns / rs.mean_ns;
-            println!("    -> eval speedup x{speedup:.1}");
-            kjson.push(("eval_dense_reuters".into(), rd.throughput((n * m) as f64)));
-            kjson.push(("eval_sparse_reuters".into(), rs.throughput((n * m) as f64)));
-            kjson.push(("speedup_eval_reuters".into(), speedup));
+
+            // end-to-end event-driven gossip on reuters: forced dense vs sparse
+            println!("\n--- kernels: end-to-end event-driven run, --exec dense vs sparse");
+            {
+                use golf::gossip::protocol::ExecPath;
+                let ds = reuters_like(2, Scale(0.25));
+                let mut per_s = [0.0f64; 2];
+                for (slot, (pkey, path)) in
+                    [("dense", ExecPath::Dense), ("sparse", ExecPath::Sparse)].iter().enumerate()
+                {
+                    let mut msgs = 0u64;
+                    let r = bench(&format!("event sim reuters --exec {pkey}"), 0, 2, || {
+                        let mut cfg = ProtocolConfig::paper_default(6);
+                        cfg.eval.n_peers = 0;
+                        cfg.eval.at_cycles = vec![6];
+                        cfg.path = *path;
+                        let res = run(cfg, &ds);
+                        msgs = res.stats.updates_applied;
+                    });
+                    per_s[slot] = r.throughput(msgs as f64);
+                    kjson.push((format!("protocol_{pkey}_reuters"), per_s[slot]));
+                }
+                println!("    -> end-to-end speedup x{:.1}", per_s[1] / per_s[0]);
+                kjson.push(("speedup_protocol_reuters".into(), per_s[1] / per_s[0]));
+            }
+
+            // batched evaluation on a reuters-like sparse test set, vs the same
+            // rows densified (the pre-sparse-path evaluator's layout)
+            println!("\n--- kernels: batched evaluation, sparse vs densified test set");
+            {
+                use golf::data::dataset::Examples;
+                use golf::data::matrix::Matrix;
+                let ds = reuters_like(3, Scale(0.25));
+                let d = ds.d();
+                let n = ds.n_test();
+                let m = 100usize;
+                let w: Vec<f32> = (0..m * d).map(|_| rng.normal() as f32).collect();
+                let mut dense = vec![0.0f32; n * d];
+                for i in 0..n {
+                    ds.test.row(i).write_dense(&mut dense[i * d..(i + 1) * d]);
+                }
+                let dense_ex = Examples::Dense(Matrix::from_vec(n, d, dense));
+                let rd = bench(&format!("eval dense  n={n} d={d} m={m}"), 1, 5, || {
+                    std::hint::black_box(
+                        native
+                            .error_counts_examples(&dense_ex, &ds.test_y, &w, m)
+                            .unwrap(),
+                    );
+                });
+                let rs = bench(&format!("eval sparse n={n} d={d} m={m}"), 1, 5, || {
+                    std::hint::black_box(
+                        native
+                            .error_counts_examples(&ds.test, &ds.test_y, &w, m)
+                            .unwrap(),
+                    );
+                });
+                let speedup = rd.mean_ns / rs.mean_ns;
+                println!("    -> eval speedup x{speedup:.1}");
+                kjson.push(("eval_dense_reuters".into(), rd.throughput((n * m) as f64)));
+                kjson.push(("eval_sparse_reuters".into(), rs.throughput((n * m) as f64)));
+                kjson.push(("speedup_eval_reuters".into(), speedup));
+            }
         }
-    }
-    write_bench_json(
-        "kernels",
-        "row_updates_per_s (speedup_* keys: dense_ns / sparse_ns)",
-        &kjson,
-    );
-
-    // ---- scenario library sweep (DESIGN.md §11): event-driven runs of
-    // every built-in timeline on one urls-like network, tracking how much
-    // protocol throughput each failure script costs ---------------------
-    println!("\n--- scenario library: event-driven run of every built-in");
-    {
-        let mut sjson: Vec<(String, f64)> = Vec::new();
-        let ds = urls_like(4, Scale(0.02)); // 200 nodes, >= trace coverage
-        for &name in golf::scenario::builtin_names() {
-            let scn = golf::scenario::builtin(name).expect("built-in");
-            let cycles = scn.cycles_hint.unwrap_or(200);
-            scn.validate(ds.n_train(), cycles).expect("built-in fits its hint");
-            let mut updates = 0u64;
-            let mut blocked = 0u64;
-            let r = bench(&format!("scenario {name}: urls 200 nodes"), 0, 2, || {
-                let mut cfg = ProtocolConfig::paper_default(cycles);
-                cfg.eval.n_peers = 0;
-                cfg.eval.at_cycles = vec![cycles];
-                cfg.seed = 4;
-                cfg.scenario = Some(scn.clone());
-                let res = run(cfg, &ds);
-                updates = res.stats.updates_applied;
-                blocked = res.stats.messages_blocked;
-            });
-            let per_s = r.throughput(updates as f64);
-            println!(
-                "    -> {:.2} M applied updates/s ({} partition-blocked)",
-                per_s / 1e6,
-                blocked
-            );
-            sjson.push((name.replace('-', "_"), per_s));
-        }
-        write_bench_json("scenarios", "applied_updates_per_s", &sjson);
-    }
-
-    println!("\n--- native backend: batched MU step");
-    let op = StepOp { learner: LearnerKind::Pegasos, variant: Variant::Mu, hp: 0.01 };
-    let mut native = NativeBackend::new();
-    for (b, d) in [(128, 10), (1024, 10), (128, 57), (1024, 57), (128, 1024), (128, 10240)] {
-        let mut sb = batch(&mut rng, b, d);
-        let r = bench(&format!("native mu step b={b} d={d}"), 2, 10, || {
-            native.step(&op, &mut sb).unwrap();
-        });
-        println!("    -> {:.2} M row-updates/s", r.throughput(b as f64) / 1e6);
-    }
-
-    println!("\n--- native backend: eval error_counts");
-    for (n, d, m) in [(1024, 10, 100), (1024, 57, 100), (600, 9947, 100)] {
-        let x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
-        let y: Vec<f32> = (0..n).map(|_| rng.sign()).collect();
-        let w: Vec<f32> = (0..m * d).map(|_| rng.normal() as f32).collect();
-        let r = bench(&format!("native eval n={n} d={d} m={m}"), 1, 5, || {
-            std::hint::black_box(native.error_counts(&x, &y, n, d, &w, m).unwrap());
-        });
-        println!(
-            "    -> {:.2} G dot-products/s",
-            r.throughput((n * m) as f64) / 1e9
+        write_bench_json(
+            "kernels",
+            "row_updates_per_s (speedup_* keys: dense_ns / sparse_ns)",
+            &kjson,
         );
     }
 
-    let dir = PjrtBackend::default_dir();
-    if dir.join("manifest.tsv").exists() {
-        println!("\n--- PJRT backend: batched MU step (AOT artifacts, CPU client)");
-        let mut pjrt = PjrtBackend::new(&dir).expect("pjrt backend");
-        for (b, d) in [(1, 10), (16, 10), (128, 10), (1024, 10), (128, 57), (1024, 57), (128, 1024)] {
-            let mut sb = batch(&mut rng, b, d);
-            let r = bench(&format!("pjrt mu step b={b} d={d}"), 2, 10, || {
-                pjrt.step(&op, &mut sb).unwrap();
-            });
-            println!(
-                "    -> {:.3} M row-updates/s (per-call overhead amortized over {b} rows)",
-                r.throughput(b as f64) / 1e6
-            );
+    if section_enabled("scenarios") {
+        // ---- scenario library sweep (DESIGN.md §11): event-driven runs of
+        // every built-in timeline on one urls-like network, tracking how much
+        // protocol throughput each failure script costs ---------------------
+        println!("\n--- scenario library: event-driven run of every built-in");
+        {
+            let mut sjson: Vec<(String, f64)> = Vec::new();
+            let ds = urls_like(4, Scale(0.02)); // 200 nodes, >= trace coverage
+            for &name in golf::scenario::builtin_names() {
+                let scn = golf::scenario::builtin(name).expect("built-in");
+                let cycles = scn.cycles_hint.unwrap_or(200);
+                scn.validate(ds.n_train(), cycles).expect("built-in fits its hint");
+                let mut updates = 0u64;
+                let mut blocked = 0u64;
+                let r = bench(&format!("scenario {name}: urls 200 nodes"), 0, 2, || {
+                    let mut cfg = ProtocolConfig::paper_default(cycles);
+                    cfg.eval.n_peers = 0;
+                    cfg.eval.at_cycles = vec![cycles];
+                    cfg.seed = 4;
+                    cfg.scenario = Some(scn.clone());
+                    let res = run(cfg, &ds);
+                    updates = res.stats.updates_applied;
+                    blocked = res.stats.messages_blocked;
+                });
+                let per_s = r.throughput(updates as f64);
+                println!(
+                    "    -> {:.2} M applied updates/s ({} partition-blocked)",
+                    per_s / 1e6,
+                    blocked
+                );
+                sjson.push((name.replace('-', "_"), per_s));
+            }
+            write_bench_json("scenarios", "applied_updates_per_s", &sjson);
         }
-        println!("\n--- PJRT backend: eval error_counts");
-        for (n, d, m) in [(1024, 10, 100), (1024, 57, 100)] {
+    }
+
+    if section_enabled("backend") {
+        println!("\n--- native backend: batched MU step");
+        let op = StepOp { learner: LearnerKind::Pegasos, variant: Variant::Mu, hp: 0.01 };
+        let mut native = NativeBackend::new();
+        for (b, d) in [(128, 10), (1024, 10), (128, 57), (1024, 57), (128, 1024), (128, 10240)] {
+            let mut sb = batch(&mut rng, b, d);
+            let r = bench(&format!("native mu step b={b} d={d}"), 2, 10, || {
+                native.step(&op, &mut sb).unwrap();
+            });
+            println!("    -> {:.2} M row-updates/s", r.throughput(b as f64) / 1e6);
+        }
+
+        println!("\n--- native backend: eval error_counts");
+        for (n, d, m) in [(1024, 10, 100), (1024, 57, 100), (600, 9947, 100)] {
             let x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
             let y: Vec<f32> = (0..n).map(|_| rng.sign()).collect();
             let w: Vec<f32> = (0..m * d).map(|_| rng.normal() as f32).collect();
-            let r = bench(&format!("pjrt eval n={n} d={d} m={m}"), 1, 5, || {
-                std::hint::black_box(pjrt.error_counts(&x, &y, n, d, &w, m).unwrap());
+            let r = bench(&format!("native eval n={n} d={d} m={m}"), 1, 5, || {
+                std::hint::black_box(native.error_counts(&x, &y, n, d, &w, m).unwrap());
             });
             println!(
                 "    -> {:.2} G dot-products/s",
                 r.throughput((n * m) as f64) / 1e9
             );
         }
-    } else {
-        println!("\n(pjrt benches skipped: no artifacts — run `make artifacts`)");
-    }
 
-    println!("\n--- L3 hot-path optimization: CREATEMODEL before/after (perf §L3)");
-    {
-        use golf::data::dataset::Row;
-        use golf::gossip::create_model::{create_model, create_model_step};
-        use golf::learning::{Learner, LinearModel};
-        for d in [57usize, 9947] {
-            let learner = Learner::pegasos(0.01);
-            let w1: Vec<f32> = (0..d).map(|i| (i % 7) as f32).collect();
-            let w2: Vec<f32> = (0..d).map(|i| (i % 5) as f32).collect();
-            let x: Vec<f32> = (0..d).map(|i| (i % 3) as f32 * 0.1).collect();
-            // BEFORE: reference path — clone incoming + allocating merge
-            let before = bench(&format!("createModel MU reference d={d}"), 100, 2000, || {
-                let m1 = LinearModel::from_weights(w1.clone(), 10);
-                let m2 = LinearModel::from_weights(w2.clone(), 12);
-                std::hint::black_box(create_model(
-                    Variant::Mu,
-                    &learner,
-                    m1.clone(), // simulator used to clone for lastModel
-                    &m2,
-                    &Row::Dense(&x),
-                    1.0,
-                ));
+        let dir = PjrtBackend::default_dir();
+        if dir.join("manifest.tsv").exists() {
+            println!("\n--- PJRT backend: batched MU step (AOT artifacts, CPU client)");
+            let mut pjrt = PjrtBackend::new(&dir).expect("pjrt backend");
+            for (b, d) in [(1, 10), (16, 10), (128, 10), (1024, 10), (128, 57), (1024, 57), (128, 1024)] {
+                let mut sb = batch(&mut rng, b, d);
+                let r = bench(&format!("pjrt mu step b={b} d={d}"), 2, 10, || {
+                    pjrt.step(&op, &mut sb).unwrap();
+                });
+                println!(
+                    "    -> {:.3} M row-updates/s (per-call overhead amortized over {b} rows)",
+                    r.throughput(b as f64) / 1e6
+                );
+            }
+            println!("\n--- PJRT backend: eval error_counts");
+            for (n, d, m) in [(1024, 10, 100), (1024, 57, 100)] {
+                let x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+                let y: Vec<f32> = (0..n).map(|_| rng.sign()).collect();
+                let w: Vec<f32> = (0..m * d).map(|_| rng.normal() as f32).collect();
+                let r = bench(&format!("pjrt eval n={n} d={d} m={m}"), 1, 5, || {
+                    std::hint::black_box(pjrt.error_counts(&x, &y, n, d, &w, m).unwrap());
+                });
+                println!(
+                    "    -> {:.2} G dot-products/s",
+                    r.throughput((n * m) as f64) / 1e9
+                );
+            }
+        } else {
+            println!("\n(pjrt benches skipped: no artifacts — run `make artifacts`)");
+        }
+
+        println!("\n--- L3 hot-path optimization: CREATEMODEL before/after (perf §L3)");
+        {
+            use golf::data::dataset::Row;
+            use golf::gossip::create_model::{create_model, create_model_step};
+            use golf::learning::{Learner, LinearModel};
+            for d in [57usize, 9947] {
+                let learner = Learner::pegasos(0.01);
+                let w1: Vec<f32> = (0..d).map(|i| (i % 7) as f32).collect();
+                let w2: Vec<f32> = (0..d).map(|i| (i % 5) as f32).collect();
+                let x: Vec<f32> = (0..d).map(|i| (i % 3) as f32 * 0.1).collect();
+                // BEFORE: reference path — clone incoming + allocating merge
+                let before = bench(&format!("createModel MU reference d={d}"), 100, 2000, || {
+                    let m1 = LinearModel::from_weights(w1.clone(), 10);
+                    let m2 = LinearModel::from_weights(w2.clone(), 12);
+                    std::hint::black_box(create_model(
+                        Variant::Mu,
+                        &learner,
+                        m1.clone(), // simulator used to clone for lastModel
+                        &m2,
+                        &Row::Dense(&x),
+                        1.0,
+                    ));
+                });
+                // AFTER: in-place step used by the simulator
+                let mut last = LinearModel::from_weights(w2.clone(), 12);
+                let after = bench(&format!("createModel MU step      d={d}"), 100, 2000, || {
+                    let m1 = LinearModel::from_weights(w1.clone(), 10);
+                    std::hint::black_box(create_model_step(
+                        Variant::Mu,
+                        &learner,
+                        m1,
+                        &mut last,
+                        &Row::Dense(&x),
+                        1.0,
+                    ));
+                });
+                println!(
+                    "    -> speedup x{:.2} (both include the unavoidable one message-buffer alloc)",
+                    before.mean_ns / after.mean_ns
+                );
+            }
+        }
+
+        println!("\n--- merge / model algebra");
+        {
+            use golf::learning::LinearModel;
+            let d = 9947;
+            let a = LinearModel::from_weights((0..d).map(|i| i as f32).collect(), 1);
+            let b = LinearModel::from_weights((0..d).map(|i| (d - i) as f32).collect(), 2);
+            let r = bench("merge d=9947", 10, 100, || {
+                std::hint::black_box(LinearModel::merge(&a, &b));
             });
-            // AFTER: in-place step used by the simulator
-            let mut last = LinearModel::from_weights(w2.clone(), 12);
-            let after = bench(&format!("createModel MU step      d={d}"), 100, 2000, || {
-                let m1 = LinearModel::from_weights(w1.clone(), 10);
-                std::hint::black_box(create_model_step(
-                    Variant::Mu,
-                    &learner,
-                    m1,
-                    &mut last,
-                    &Row::Dense(&x),
-                    1.0,
-                ));
-            });
-            println!(
-                "    -> speedup x{:.2} (both include the unavoidable one message-buffer alloc)",
-                before.mean_ns / after.mean_ns
-            );
+            println!("    -> {:.2} GB/s effective", r.throughput((d * 4 * 3) as f64) / 1e9);
         }
     }
 
-    println!("\n--- merge / model algebra");
-    {
-        use golf::learning::LinearModel;
-        let d = 9947;
-        let a = LinearModel::from_weights((0..d).map(|i| i as f32).collect(), 1);
-        let b = LinearModel::from_weights((0..d).map(|i| (d - i) as f32).collect(), 2);
-        let r = bench("merge d=9947", 10, 100, || {
-            std::hint::black_box(LinearModel::merge(&a, &b));
-        });
-        println!("    -> {:.2} GB/s effective", r.throughput((d * 4 * 3) as f64) / 1e9);
+    // ---- sharded executor scaling (DESIGN.md §13): same run, 1/2/4/8
+    // shards — results are bit-for-bit identical, so this measures pure
+    // execution strategy ------------------------------------------------
+    if section_enabled("sharded") {
+        println!("\n--- sharded executor: shards=1/2/4/8 on urls 10k nodes");
+        let ds = urls_like(5, Scale(1.0));
+        let cycles = 10u64;
+        let mut base_s = 0.0f64;
+        for shards in [1usize, 2, 4, 8] {
+            let mut msgs = 0u64;
+            let r = bench(&format!("event sim urls 10k --shards {shards}"), 0, 2, || {
+                let mut cfg = ProtocolConfig::paper_default(cycles);
+                cfg.eval.n_peers = 0;
+                cfg.eval.at_cycles = vec![cycles];
+                cfg.seed = 5;
+                cfg.shards = shards;
+                let res = run(cfg, &ds);
+                msgs = res.stats.messages_sent;
+            });
+            let per_s = r.throughput(msgs as f64);
+            if shards == 1 {
+                base_s = per_s;
+            }
+            println!(
+                "    -> {:.2} M messages/s (x{:.2} vs shards=1)",
+                per_s / 1e6,
+                per_s / base_s.max(1e-12)
+            );
+            json.push((format!("sharded_urls10k_s{shards}"), per_s));
+        }
+    }
+
+    // ---- node-count scaling toward 1M nodes: one >= 100k-node run with
+    // walltime + peak RSS, shards=1 vs the machine's parallelism --------
+    if section_enabled("scale") {
+        println!("\n--- node-count scaling: 100k-node event-driven run");
+        let ds = scaling_dataset(6, 100_000);
+        let shards_hi = golf::util::threads::budget().clamp(2, 8);
+        for (key, shards) in [("s1", 1usize), ("sN", shards_hi)] {
+            let t0 = std::time::Instant::now();
+            let mut cfg = ProtocolConfig::paper_default(5);
+            cfg.eval.n_peers = 0;
+            cfg.eval.at_cycles = vec![5];
+            cfg.seed = 6;
+            cfg.shards = shards;
+            let res = run(cfg, &ds);
+            let wall = t0.elapsed().as_secs_f64();
+            println!(
+                "    -> shards={shards}: {:.1}s wall, {} messages sent, peak RSS {:.0} MiB",
+                wall,
+                res.stats.messages_sent,
+                peak_rss_mib()
+            );
+            json.push((format!("scale100k_{key}_walltime_s"), wall));
+            json.push((
+                format!("scale100k_{key}_msgs_per_s"),
+                res.stats.messages_sent as f64 / wall.max(1e-12),
+            ));
+        }
+        json.push(("scale100k_shards_hi".into(), shards_hi as f64));
+        json.push(("scale100k_peak_rss_mib".into(), peak_rss_mib()));
     }
 
     write_bench_json("protocol", "delivered_messages_per_s", &json);

@@ -339,6 +339,15 @@ impl RunSpec {
         self
     }
 
+    /// Shard the event-driven simulator into `n` contiguous node ranges
+    /// (DESIGN.md §13).  `n ≥ 2` leases worker threads from the process-wide
+    /// budget and requires the native event backend; results are bit-for-bit
+    /// independent of `n`.
+    pub fn shards(mut self, n: usize) -> Self {
+        self.experiment.shards = n;
+        self
+    }
+
     /// Attach a scenario timeline.
     pub fn scenario(mut self, scenario: Scenario) -> Self {
         self.experiment.scenario = Some(scenario);
@@ -461,6 +470,7 @@ impl RunSpec {
         kv("mode", e.mode.clone());
         kv("coalesce", e.coalesce.to_string());
         kv("exec", e.exec_path.name().to_string());
+        kv("shards", e.shards.to_string());
         // a scenario that is exactly a built-in round-trips by name; any
         // other timeline embeds as full sections
         let mut scenario_sections = None;
@@ -495,6 +505,28 @@ impl RunSpec {
     pub fn validate(&self) -> Result<(), GolfError> {
         self.experiment.learner()?;
         self.experiment.exec_mode()?;
+        if self.experiment.shards == 0 {
+            return Err(GolfError::config("shards must be at least 1".to_string()));
+        }
+        if self.experiment.shards >= 2 {
+            if self.target != Target::Sim || self.experiment.backend != BackendChoice::Event {
+                return Err(GolfError::config(format!(
+                    "sharded execution (shards = {}) runs on the native \
+                     event-driven simulator (target sim, backend event); got \
+                     target {} on backend {}",
+                    self.experiment.shards,
+                    self.target.name(),
+                    self.experiment.backend.name()
+                )));
+            }
+            if self.experiment.sampler == SamplerConfig::Matching {
+                return Err(GolfError::config(
+                    "sampler = matching needs a globally consistent partner \
+                     table and only runs with shards = 1"
+                        .to_string(),
+                ));
+            }
+        }
         match self.target {
             Target::Sim => {
                 if !matches!(

@@ -75,7 +75,7 @@ USAGE:
               [--failures none|extreme]
               [--backend event|event-pjrt|batched-native|batched-pjrt]
               [--mode microbatch|scalar] [--coalesce TICKS]
-              [--exec auto|dense|sparse]
+              [--exec auto|dense|sparse] [--shards N] [--threads T]
               [--voting true] [--similarity true] [--seed N] [--out FILE.csv]
   golf table1 [--scale S] [--seed N] [--threads T]
   golf fig1   [--scale S] [--cycles N] [--seed N] [--threads T] [--out-dir DIR]
@@ -134,6 +134,17 @@ fn run_spec_from_flags(flags: &HashMap<String, String>) -> Result<RunSpec, GolfE
     let mut kv = flags.clone();
     kv.remove("config");
     kv.remove("out");
+    if let Some(s) = kv.remove("threads") {
+        // one process-wide thread budget: the sharded simulator (and any
+        // sweep running in the same process) lease workers from it
+        let t: usize = s
+            .parse()
+            .map_err(|_| GolfError::config(format!("bad threads {s:?}")))?;
+        if t == 0 {
+            return Err(GolfError::config("threads must be at least 1".to_string()));
+        }
+        crate::util::threads::set_budget(t);
+    }
     spec.experiment.apply(&kv)?;
     spec.target = Target::for_backend(spec.experiment.backend);
     Ok(spec)

@@ -21,6 +21,7 @@
 //! mode = microbatch       ; microbatch | scalar (event-driven stepping)
 //! coalesce = 0            ; micro-batch coalescing window in ticks
 //! exec = auto             ; auto | dense | sparse (kernel family dispatch)
+//! shards = 1              ; node-range shards of the event-driven simulator
 //! scenario = paper-fig3   ; named built-in scenario (see `golf scenario --list`)
 //!
 //! [deploy]                ; `golf deploy` only (real localhost-TCP run)
@@ -97,6 +98,9 @@ pub struct ExperimentSpec {
     pub coalesce: u64,
     /// kernel-family dispatch: auto (density-based), dense, or sparse
     pub exec_path: ExecPath,
+    /// node-range shards of the event-driven simulator (DESIGN.md §13);
+    /// ≥ 2 leases worker threads and requires the native event backend
+    pub shards: usize,
     /// failure/workload timeline: a named built-in (`scenario =` key) or an
     /// embedded/standalone `[scenario]` definition
     pub scenario: Option<Scenario>,
@@ -123,6 +127,7 @@ impl Default for ExperimentSpec {
             mode: "microbatch".into(),
             coalesce: 0,
             exec_path: ExecPath::Auto,
+            shards: 1,
             scenario: None,
         }
     }
@@ -191,6 +196,14 @@ impl ExperimentSpec {
                     self.exec_path = ExecPath::parse(v)
                         .ok_or_else(|| GolfError::config(format!("bad exec {v:?}")))?
                 }
+                "shards" => {
+                    self.shards = parse(v, k)?;
+                    if self.shards == 0 {
+                        return Err(GolfError::config(
+                            "shards must be at least 1".to_string(),
+                        ));
+                    }
+                }
                 "scenario" => {
                     self.scenario = match v.as_str() {
                         "none" => None,
@@ -243,6 +256,7 @@ impl ExperimentSpec {
         cfg.eval.similarity = self.similarity;
         cfg.exec = self.exec_mode()?;
         cfg.path = self.exec_path;
+        cfg.shards = self.shards;
         if self.failures {
             cfg = cfg.with_extreme_failures();
         }
@@ -673,6 +687,20 @@ drop = 0.9
         let mut bad = spec.clone();
         bad.experiment.cycles = 7;
         assert!(bad.deploy_config(&ds).is_err());
+    }
+
+    #[test]
+    fn shards_key_maps_to_protocol_config() {
+        let mut spec = ExperimentSpec { scale: 0.01, ..Default::default() };
+        assert_eq!(spec.protocol_config().unwrap().shards, 1);
+        let mut kv = HashMap::new();
+        kv.insert("shards".to_string(), "4".to_string());
+        spec.apply(&kv).unwrap();
+        assert_eq!(spec.shards, 4);
+        assert_eq!(spec.protocol_config().unwrap().shards, 4);
+        let mut kv = HashMap::new();
+        kv.insert("shards".to_string(), "0".to_string());
+        assert!(spec.apply(&kv).is_err(), "shards = 0 must be rejected");
     }
 
     #[test]

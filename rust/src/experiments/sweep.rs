@@ -25,21 +25,20 @@ use crate::util::rng::derive_seed;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-/// Worker count: `GOLF_THREADS` env override, else the machine's available
-/// parallelism.
+/// Worker count: the process-wide thread budget (`--threads` override, then
+/// `GOLF_THREADS`, then the machine's available parallelism).
 pub fn thread_count() -> usize {
-    std::env::var("GOLF_THREADS")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or_else(|| {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-        })
-        .max(1)
+    crate::util::threads::budget()
 }
 
-/// Run `f(0..n)` across `threads` workers; `results[i] == f(i)` in submission
-/// order.  Jobs are claimed from a shared atomic counter (cheap work
-/// stealing); panics in jobs propagate to the caller via the scope.
+/// Run `f(0..n)` across up to `threads` workers; `results[i] == f(i)` in
+/// submission order.  Jobs are claimed from a shared atomic counter (cheap
+/// work stealing); panics in jobs propagate to the caller via the scope.
+///
+/// Worker threads beyond the caller's own are leased from the process-wide
+/// ledger ([`crate::util::threads`]), so a sweep composed with the sharded
+/// simulator never oversubscribes the budget; a drained pool degrades to
+/// serial execution with identical results.
 pub fn run_indexed<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
 where
     T: Send,
@@ -47,6 +46,11 @@ where
 {
     let threads = threads.clamp(1, n.max(1));
     if threads <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let lease = crate::util::threads::lease(threads - 1);
+    let threads = 1 + lease.granted();
+    if threads <= 1 {
         return (0..n).map(f).collect();
     }
     let next = AtomicUsize::new(0);
@@ -364,6 +368,16 @@ mod tests {
     #[test]
     fn thread_count_positive() {
         assert!(thread_count() >= 1);
+    }
+
+    #[test]
+    fn run_indexed_respects_drained_thread_budget() {
+        // drain the process-wide ledger: run_indexed must degrade toward
+        // serial execution (never over-subscribe) with identical results
+        let hold = crate::util::threads::lease(usize::MAX / 2);
+        let out = run_indexed(16, 8, |i| i * 3);
+        drop(hold);
+        assert_eq!(out, (0..16).map(|i| i * 3).collect::<Vec<_>>());
     }
 
     #[test]

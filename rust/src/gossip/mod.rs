@@ -6,6 +6,7 @@ pub mod create_model;
 pub mod message;
 pub mod predict;
 pub mod protocol;
+pub mod sharded;
 pub mod state;
 
 pub use cache::ModelCache;

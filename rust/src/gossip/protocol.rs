@@ -8,45 +8,39 @@
 //! No synchrony and no reliability is assumed: messages can be dropped,
 //! delayed far beyond Δ, and nodes churn with state retention.
 //!
-//! Execution (DESIGN.md §2): per-node state lives in the structure-of-arrays
-//! [`ModelStore`]; `Deliver` events are drained into [`StepBatch`]
-//! micro-batches and executed through a [`Backend`], so the faithful
-//! event-driven semantics (jitter, arbitrary delay, churn, deterministic FIFO
-//! tie-breaking) run on the same vectorized kernels as the cycle-synchronous
-//! driver.  [`ExecMode::Scalar`] keeps one-delivery-at-a-time stepping as a
-//! debug/parity mode; the two modes are pinned bit-for-bit against each other
-//! in tests/engine_parity.rs.
+//! Execution (DESIGN.md §2, §13): per-node state lives in structure-of-array
+//! stores; `Deliver` events are drained into engine micro-batches, so the
+//! faithful event-driven semantics (jitter, arbitrary delay, churn,
+//! deterministic event ordering) run on the same vectorized kernels as the
+//! cycle-synchronous driver.  [`ExecMode::Scalar`] keeps
+//! one-delivery-at-a-time stepping as a debug/parity mode; the two modes are
+//! pinned bit-for-bit against each other in tests/engine_parity.rs.
 //!
 //! Orthogonally, [`ExecPath`] picks the kernel family per run (DESIGN.md §7):
 //! dense `[b, d]` rows, or — for sparse high-dimensional datasets like
 //! Reuters — CSR-staged batches through the O(nnz) lazy-scale kernels, with
 //! evaluation batched through the same sparse-aware backend.
+//!
+//! This module owns the run *configuration* and result types; the engine
+//! itself lives in [`crate::gossip::sharded`], which partitions the node
+//! universe into `shards` row ranges and runs them on leased worker
+//! threads.  `shards = 1` is the default single-runner path; any shard
+//! count yields bit-for-bit identical results (tests/engine_parity.rs).
 
-use crate::api::{NullObserver, Observer, RunEvent};
+use crate::api::{NullObserver, Observer};
 use crate::data::dataset::{Dataset, Examples};
-use crate::data::sparse::Csr;
 use crate::engine::native::NativeBackend;
-use crate::engine::{eval_peer_errors, Backend, StepBatch, StepOp, MAX_BATCH_ROWS};
-use crate::eval::{
-    self,
-    tracker::{point_from_errors, Curve},
-};
-use crate::gossip::cache::ModelCache;
+use crate::engine::Backend;
+use crate::eval::tracker::Curve;
 use crate::gossip::create_model::Variant;
-use crate::gossip::message::ModelMsg;
-use crate::gossip::predict::Predictor;
-use crate::gossip::state::ModelStore;
+use crate::gossip::sharded;
 use crate::learning::adaline::Learner;
-use crate::learning::linear::LinearModel;
-use crate::p2p::overlay::{PeerSampler, SamplerConfig};
-use crate::scenario::driver::{resolve_churn_schedule, CompiledScenario, Mutation, ScenarioDriver};
+use crate::p2p::overlay::SamplerConfig;
 use crate::scenario::Scenario;
-use crate::sim::churn::{ChurnConfig, ChurnSchedule};
-use crate::sim::event::{Event, EventQueue, NodeId, Ticks};
-use crate::sim::network::{Fate, Network, NetworkConfig};
-use crate::util::rng::Rng;
+use crate::sim::churn::ChurnConfig;
+use crate::sim::event::Ticks;
+use crate::sim::network::NetworkConfig;
 use anyhow::Result;
-use std::collections::HashMap;
 
 /// Evaluation settings (Section VI-A(h): misclassification ratio over the
 /// test set, measured at 100 randomly selected peers).
@@ -177,6 +171,11 @@ pub struct ProtocolConfig {
     /// validated against (n, cycles) by the configuration layer; the
     /// simulators compile it into tick-indexed mutations at construction.
     pub scenario: Option<Scenario>,
+    /// how many contiguous node-range shards execute the run (DESIGN.md
+    /// §13).  1 = single runner on the caller's backend; ≥ 2 leases worker
+    /// threads from [`crate::util::threads`] and requires the native
+    /// backend.  Results are bit-for-bit independent of the shard count.
+    pub shards: usize,
 }
 
 impl ProtocolConfig {
@@ -199,6 +198,7 @@ impl ProtocolConfig {
             exec: ExecMode::default(),
             path: ExecPath::default(),
             scenario: None,
+            shards: 1,
         }
     }
 
@@ -239,69 +239,17 @@ pub struct RunResult {
     pub stats: RunStats,
 }
 
+/// The event-driven simulator, configured and ready to run.
+///
+/// This is a thin handle: all execution lives in the sharded engine
+/// ([`sharded::run_sharded`]), which `try_run_observed` delegates to.  With
+/// the default `shards = 1` a single full-range runner executes inline on
+/// the configured backend; higher shard counts partition the node universe
+/// and lease worker threads, with bit-for-bit identical results.
 pub struct GossipSim<'a> {
     cfg: ProtocolConfig,
     data: &'a Dataset,
-    /// unified SoA per-node model state (freshest + lastModel rows)
-    store: ModelStore,
-    /// full model caches, materialized only at evaluation peers when voting
-    /// is measured (memory: Reuters models are 40 KB each — 10-deep caches at
-    /// all 2000 nodes would be ~800 MB)
-    caches: Vec<Option<ModelCache>>,
-    /// last cycle at which each node executed a scheduled restart
-    last_restart: Vec<u64>,
-    /// effective liveness per node: churn state AND NOT forced offline
-    /// (sized for the full universe; nodes beyond the current membership
-    /// never send or receive)
-    online: Vec<bool>,
-    /// churn-model liveness (before the scenario's forced-offline overlay)
-    churn_online: Vec<bool>,
-    /// scenario mass-leave overlay
-    forced_off: Vec<bool>,
-    /// compiled scenario timeline cursor, if any
-    scn: Option<ScenarioDriver>,
-    /// +1.0 normally; -1.0 after an odd number of concept-drift events
-    /// (training and test labels flip sign)
-    drift_sign: f32,
-    /// lazily built sign-flipped test labels (drift evaluation)
-    flipped_test_y: Option<Vec<f32>>,
-    queue: EventQueue,
-    network: Network,
-    sampler: PeerSampler,
-    churn: Option<ChurnSchedule>,
-    rng: Rng,
-    eval_peers: Vec<NodeId>,
-    stats: RunStats,
-    now: Ticks,
     backend: Box<dyn Backend>,
-    op: StepOp,
-    batch: StepBatch,
-    /// deliveries awaiting the next flush, in FIFO (seq) order
-    pending: Vec<(NodeId, ModelMsg)>,
-    batch_start: Ticks,
-    /// local examples staged once for batch filling, in the layout the
-    /// resolved [`ExecPath`] wants
-    staged: Staged<'a>,
-}
-
-/// Per-node local examples in batch-staging form.
-enum Staged<'a> {
-    /// densified `[n, d]` (dense execution path)
-    Dense(Vec<f32>),
-    /// sparse training storage borrowed as-is (sparse path; no copy)
-    Csr(&'a Csr),
-    /// CSR copy built when the sparse path is forced on dense storage
-    CsrOwned(Csr),
-}
-
-impl Staged<'_> {
-    fn csr(&self) -> &Csr {
-        match self {
-            Staged::Csr(c) => c,
-            Staged::CsrOwned(c) => c,
-            Staged::Dense(_) => unreachable!("dense staging has no CSR"),
-        }
-    }
 }
 
 impl<'a> GossipSim<'a> {
@@ -311,112 +259,10 @@ impl<'a> GossipSim<'a> {
 
     /// Build the simulator on an explicit compute backend (native or PJRT).
     pub fn with_backend(cfg: ProtocolConfig, data: &'a Dataset, backend: Box<dyn Backend>) -> Self {
-        // the node *universe* is one per training row; a scenario may start
-        // with a smaller initial membership and grow into the universe
-        let n_univ = data.n_train();
-        assert!(n_univ >= 2, "need at least two nodes");
-        let compiled = cfg.scenario.as_ref().map(|s| {
-            CompiledScenario::compile(s, n_univ, cfg.delta, cfg.cycles, cfg.seed, cfg.network)
-                .expect("scenario must be validated before the simulator runs")
-        });
-        let n = compiled.as_ref().map_or(n_univ, |c| c.initial);
-        let mut rng = Rng::new(cfg.seed);
-        let horizon = cfg.delta * (cfg.cycles + 1);
-
-        // the schedule covers the whole universe so flash-crowd joiners
-        // have churn state waiting for them; fork order is unchanged when
-        // no scenario overrides churn (resolve_churn_schedule docs)
-        let churn = resolve_churn_schedule(
-            cfg.churn.as_ref(),
-            compiled.as_ref(),
-            n_univ,
-            cfg.delta,
-            horizon,
-            &mut rng,
-        );
-
-        let mut sampler_rng = rng.fork();
-        let sampler = PeerSampler::new(cfg.sampler, n, cfg.delta, &mut sampler_rng);
-
-        let mut eval_rng = rng.fork();
-        let eval_peers = eval_rng.sample_indices(n, cfg.eval.n_peers.min(n));
-
-        let d = data.d();
-        let churn_online: Vec<bool> = (0..n_univ)
-            .map(|i| churn.as_ref().map_or(true, |ch| ch.is_online(i, 0)))
-            .collect();
-        let online = churn_online.clone();
-
-        let mut caches: Vec<Option<ModelCache>> = vec![None; n_univ];
-        if cfg.eval.voting {
-            for &p in &eval_peers {
-                // INITMODEL (Algorithm 3): seeded cache at evaluation peers.
-                let mut c = ModelCache::new(cfg.cache_size);
-                c.add(LinearModel::zeros(d));
-                caches[p] = Some(c);
-            }
-        }
-
-        // Auto dispatch only picks the sparse layout when the backend has
-        // true O(nnz) kernels — a densifying backend (PJRT) would pay CSR
-        // staging plus a densify pass for nothing.  Forcing `--exec sparse`
-        // still stages sparse on any backend (the densify fallback keeps it
-        // correct).
-        let sparse = match cfg.path {
-            ExecPath::Sparse => true,
-            _ => backend.supports_sparse() && cfg.path.use_sparse(&data.train),
-        };
-        let staged = if sparse {
-            match &data.train {
-                Examples::Sparse(csr) => Staged::Csr(csr),
-                Examples::Dense(_) => Staged::CsrOwned(data.train.to_csr()),
-            }
-        } else {
-            // stage the whole universe: flash-crowd joiners beyond the
-            // initial membership already have their rows waiting
-            let mut dense_x = vec![0.0f32; n_univ * d];
-            for i in 0..n_univ {
-                data.train.row(i).write_dense(&mut dense_x[i * d..(i + 1) * d]);
-            }
-            Staged::Dense(dense_x)
-        };
-
-        let op = StepOp::for_protocol(&cfg.learner, cfg.variant);
-
-        GossipSim {
-            network: Network::new(cfg.network),
-            store: ModelStore::new(n, d),
-            caches,
-            last_restart: vec![0; n_univ],
-            online,
-            churn_online,
-            forced_off: vec![false; n_univ],
-            scn: compiled.map(ScenarioDriver::new),
-            drift_sign: 1.0,
-            flipped_test_y: None,
-            queue: EventQueue::new(),
-            sampler,
-            churn,
-            rng,
-            eval_peers,
-            stats: RunStats::default(),
-            now: 0,
-            backend,
-            op,
-            batch: StepBatch::default(),
-            pending: Vec::new(),
-            batch_start: 0,
-            cfg,
-            data,
-            staged,
-        }
-    }
-
-    /// Jittered per-iteration gossip period: N(Δ, Δ/10), clipped positive.
-    fn next_period(&mut self) -> Ticks {
-        let d = self.cfg.delta as f64;
-        let p = self.rng.normal_scaled(d, d / 10.0);
-        p.max(1.0) as Ticks
+        // the node universe is one per training row; fail early here so
+        // misconfigured callers hear about it at construction
+        assert!(data.n_train() >= 2, "need at least two nodes");
+        GossipSim { cfg, data, backend }
     }
 
     /// Run to completion, panicking on backend errors (the native backend is
@@ -431,373 +277,12 @@ impl<'a> GossipSim<'a> {
     }
 
     /// Run to completion, streaming typed progress events
-    /// ([`crate::api::RunEvent`]) to `obs`: every gossip-cycle boundary the
-    /// event stream crosses, every measured curve point, and every scenario
-    /// mutation as it is applied.  Observation is passive — an observed run
-    /// is bit-for-bit identical to an unobserved one.
-    pub fn try_run_observed(mut self, obs: &mut dyn Observer) -> Result<RunResult> {
-        let n = self.store.n();
-        let horizon = self.cfg.delta * self.cfg.cycles;
-
-        // synchronized start (Section IV): first tick after one period
-        for node in 0..n {
-            let p = self.next_period();
-            self.queue.push(p, Event::GossipTick { node });
-        }
-        // churn transitions
-        if let Some(ch) = &self.churn {
-            for (t, node, up) in ch.events() {
-                if t <= horizon {
-                    self.queue.push(
-                        t,
-                        if up { Event::Join { node } } else { Event::Leave { node } },
-                    );
-                }
-            }
-        }
-        // measurement probes at cycle boundaries
-        let eval_cycles = if self.cfg.eval.at_cycles.is_empty() {
-            eval::log_spaced_cycles(self.cfg.cycles)
-        } else {
-            self.cfg.eval.at_cycles.clone()
-        };
-        for &c in &eval_cycles {
-            self.queue.push(c * self.cfg.delta, Event::Eval);
-        }
-
-        let mut curve = Curve::new(format!(
-            "{}-{}-{}",
-            self.cfg.learner.name(),
-            self.cfg.variant.name(),
-            self.cfg.sampler.name()
-        ));
-
-        let mut observed_cycle = 0u64;
-        while let Some((t, ev)) = self.queue.pop() {
-            if t > horizon {
-                // deliveries due at or before the horizon still apply
-                self.flush()?;
-                break;
-            }
-            // cycle-boundary progress events: every integer boundary the
-            // event stream crosses, emitted once, in order
-            let cycle_now = t / self.cfg.delta;
-            while observed_cycle < cycle_now {
-                observed_cycle += 1;
-                obs.on_event(&RunEvent::Cycle { cycle: observed_cycle });
-            }
-            // scenario mutations apply at tick boundaries, before any event
-            // of that tick — with pending micro-batches flushed first, so
-            // scalar and micro-batched execution observe mutations at
-            // identical points (pinned in tests/engine_parity.rs)
-            if self.scn.as_ref().map_or(false, |d| d.has_due(t)) {
-                self.flush()?;
-                self.apply_scenario(t, obs);
-            }
-            self.now = t;
-            match ev {
-                Event::Deliver { dst, msg } => {
-                    if self.pending.is_empty() {
-                        self.batch_start = t;
-                    }
-                    self.pending.push((dst, msg));
-                    if self.should_flush() {
-                        self.flush()?;
-                    }
-                }
-                Event::GossipTick { node } => {
-                    self.flush()?;
-                    self.on_tick(node);
-                }
-                Event::Join { node } => {
-                    self.flush()?;
-                    self.churn_online[node] = true;
-                    self.online[node] = !self.forced_off[node];
-                }
-                Event::Leave { node } => {
-                    self.flush()?;
-                    self.churn_online[node] = false;
-                    self.online[node] = false;
-                }
-                Event::Eval => {
-                    self.flush()?;
-                    let cycle = (t / self.cfg.delta).max(1);
-                    let pt = self.measure(cycle)?;
-                    obs.on_event(&RunEvent::Eval { point: pt.clone() });
-                    curve.push(pt);
-                }
-            }
-        }
-        self.flush()?;
-
-        // single source of truth: the Network tracks actual deliveries
-        self.stats.messages_delivered = self.network.delivered();
-        Ok(RunResult { curve, stats: self.stats })
-    }
-
-    /// Apply every scenario mutation due at or before `now` (pending
-    /// deliveries are already flushed).  Mutations touch the network models
-    /// in place, toggle the drift sign, maintain the forced-offline overlay,
-    /// and grow membership for flash crowds.
-    fn apply_scenario(&mut self, now: Ticks, obs: &mut dyn Observer) {
-        while let Some(m) = self.scn.as_mut().and_then(|d| d.pop_due(now)) {
-            obs.on_event(&RunEvent::Scenario {
-                cycle: now / self.cfg.delta,
-                mutation: m.describe(),
-            });
-            match m {
-                Mutation::SetDrop(p) => self.network.cfg.drop_prob = p,
-                Mutation::SetDelay(model) => self.network.cfg.delay = model,
-                Mutation::SetPartition(components) => {
-                    self.network.set_partition(Some(components))
-                }
-                Mutation::Heal => self.network.set_partition(None),
-                Mutation::Drift => self.drift_sign = -self.drift_sign,
-                Mutation::ForceOffline(ids) => {
-                    for i in ids {
-                        self.forced_off[i] = true;
-                        self.online[i] = false;
-                    }
-                }
-                Mutation::Restore(ids) => {
-                    for i in ids {
-                        self.forced_off[i] = false;
-                        self.online[i] = self.churn_online[i];
-                    }
-                }
-                Mutation::Grow(k) => {
-                    let old = self.store.n();
-                    let newn = (old + k).min(self.data.n_train());
-                    self.store.grow(newn - old);
-                    self.sampler.grow(newn, &mut self.rng);
-                    for node in old..newn {
-                        // arrivals adopt the universe-wide churn state and
-                        // enter the active loop on a fresh jittered period
-                        self.online[node] = self.churn_online[node] && !self.forced_off[node];
-                        let p = self.next_period();
-                        self.queue.push(now + p, Event::GossipTick { node });
-                    }
-                }
-            }
-        }
-    }
-
-    /// Keep accumulating while the next event is another delivery at the same
-    /// (possibly window-quantized) timestamp — any other event must observe
-    /// fully applied state, so it forces a flush first.
-    fn should_flush(&self) -> bool {
-        match self.cfg.exec {
-            ExecMode::Scalar => true,
-            ExecMode::MicroBatch { .. } => match self.queue.peek() {
-                Some((t, Event::Deliver { .. })) => t != self.batch_start,
-                _ => true,
-            },
-        }
-    }
-
-    /// Quantize a delivery time up to the coalescing-window boundary.
-    fn arrival_time(&self, at: Ticks) -> Ticks {
-        match self.cfg.exec {
-            ExecMode::MicroBatch { coalesce } if coalesce > 0 => {
-                ((at + coalesce - 1) / coalesce) * coalesce
-            }
-            _ => at,
-        }
-    }
-
-    /// Apply the pending deliveries: FIFO ordering, offline losses, NEWSCAST
-    /// view merges, then all CREATEMODEL steps as engine micro-batches.
-    ///
-    /// Rows are independent even when one node receives several messages in a
-    /// flush: message k's `m2` input is message k-1's *weights* (Algorithm 1
-    /// line 9 assigns `lastModel <- m`, not the created model), which is known
-    /// before any stepping.  Per-node chaining is wired through `prev_in_flush`.
-    fn flush(&mut self) -> Result<()> {
-        if self.pending.is_empty() {
-            return Ok(());
-        }
-        let d = self.store.d();
-        let pending = std::mem::take(&mut self.pending);
-        let mut live: Vec<(NodeId, ModelMsg)> = Vec::with_capacity(pending.len());
-        for (dst, msg) in pending {
-            if !self.online[dst] {
-                self.network.note_lost_offline();
-                self.stats.messages_lost_offline += 1;
-                continue;
-            }
-            self.sampler.on_receive(dst, &msg.view);
-            self.network.note_delivered();
-            live.push((dst, msg));
-        }
-        let per_msg_updates: u64 = match self.cfg.variant {
-            Variant::Um => 2,
-            _ => 1,
-        };
-        let sparse = !matches!(self.staged, Staged::Dense(_));
-        let mut prev_in_flush: HashMap<NodeId, usize> = HashMap::new();
-        let mut start = 0;
-        while start < live.len() {
-            let end = (start + MAX_BATCH_ROWS).min(live.len());
-            let b = end - start;
-            self.batch.resize_for(b, d, sparse);
-            for (row, (dst, msg)) in live[start..end].iter().enumerate() {
-                let dst = *dst;
-                let r = row * d..(row + 1) * d;
-                self.batch.w1[r.clone()].copy_from_slice(&msg.w);
-                self.batch.s1[row] = msg.scale;
-                self.batch.t1[row] = msg.t as f32;
-                match prev_in_flush.insert(dst, start + row) {
-                    Some(prev) => {
-                        let pm = &live[prev].1;
-                        self.batch.w2[r.clone()].copy_from_slice(&pm.w);
-                        self.batch.s2[row] = pm.scale;
-                        self.batch.t2[row] = pm.t as f32;
-                    }
-                    None => {
-                        self.batch.w2[r.clone()].copy_from_slice(self.store.last(dst));
-                        self.batch.s2[row] = self.store.last_scale(dst);
-                        self.batch.t2[row] = self.store.last_t(dst);
-                    }
-                }
-                match &self.staged {
-                    Staged::Dense(dx) => {
-                        self.batch.x[r].copy_from_slice(&dx[dst * d..(dst + 1) * d]);
-                    }
-                    s => {
-                        let (idx, val) = s.csr().row(dst);
-                        self.batch.push_sparse_x_row(idx, val);
-                    }
-                }
-                // concept drift re-labels: the sign flips with the scenario
-                self.batch.y[row] = self.drift_sign * self.data.train_y[dst];
-            }
-            self.backend.step(&self.op, &mut self.batch)?;
-            self.stats.engine_calls += 1;
-            self.stats.updates_applied += per_msg_updates * b as u64;
-            if sparse {
-                self.stats.sparse_rows += b as u64;
-            }
-            for (row, (dst, msg)) in live[start..end].iter().enumerate() {
-                let dst = *dst;
-                let r = row * d..(row + 1) * d;
-                // sparse results land in place in w1 (scale in out_s); dense
-                // results in out_w — see the Backend::step contract
-                let (out, out_s) = if sparse {
-                    (&self.batch.w1[r], self.batch.out_s[row])
-                } else {
-                    (&self.batch.out_w[r], 1.0)
-                };
-                let out_t = self.batch.out_t[row];
-                if let Some(cache) = &mut self.caches[dst] {
-                    let mut w = out.to_vec();
-                    if out_s != 1.0 {
-                        for v in &mut w {
-                            *v *= out_s;
-                        }
-                    }
-                    cache.add(LinearModel::from_weights(w, out_t as u64));
-                }
-                self.store.set_freshest_scaled(dst, out, out_s, out_t);
-                // lastModel <- incoming (Algorithm 1 line 9)
-                self.store.set_last_scaled(dst, &msg.w, msg.scale, msg.t as f32);
-            }
-            start = end;
-        }
-        Ok(())
-    }
-
-    /// Active loop body (Algorithm 1 lines 3-5).
-    fn on_tick(&mut self, node: NodeId) {
-        // always schedule the next iteration (the loop runs forever; an
-        // offline node simply skips the send)
-        let p = self.next_period();
-        self.queue.push(self.now + p, Event::GossipTick { node });
-
-        if !self.online[node] {
-            return;
-        }
-        // scheduled model restart (drifting-concept support, DESIGN.md §8)
-        if let Some(k) = self.cfg.restart_every {
-            let cycle = self.now / self.cfg.delta;
-            if k > 0 && cycle > 0 && cycle % k == 0 && self.last_restart[node] != cycle {
-                self.last_restart[node] = cycle;
-                self.store.reset(node);
-                if let Some(c) = &mut self.caches[node] {
-                    *c = ModelCache::new(self.cfg.cache_size);
-                    c.add(LinearModel::zeros(self.data.d()));
-                }
-            }
-        }
-        let Some(dst) = self.sampler.select(node, self.now, &self.online, &mut self.rng) else {
-            return;
-        };
-
-        let msg = ModelMsg {
-            src: node,
-            w: self.store.freshest(node).to_vec(),
-            scale: self.store.freshest_scale(node),
-            t: self.store.freshest_t(node) as u64,
-            view: self.sampler.payload(node, self.now),
-        };
-        self.stats.messages_sent += 1;
-        self.stats.bytes_sent += msg.wire_bytes() as u64;
-        match self.network.transmit_between(node, dst, &mut self.rng) {
-            Fate::Deliver(delay) => {
-                let at = self.arrival_time(self.now + delay);
-                self.queue.push(at, Event::Deliver { dst, msg });
-            }
-            Fate::Dropped => self.stats.messages_dropped += 1,
-            Fate::Blocked => self.stats.messages_blocked += 1,
-        }
-    }
-
-    /// Measure the error curve point at `cycle` over the evaluation peers.
-    ///
-    /// The freshest-model sweep runs as chunked engine passes through the
-    /// backend's sparse-aware [`Backend::error_counts_examples`] (shared
-    /// with the cycle-synchronous driver via `engine::eval_peer_errors`):
-    /// `[m, d]` batches of materialized peer models against the whole test
-    /// set, O(nnz) per (row, model) pair on sparse test sets.  Counts are
-    /// exact small integers, so on the native backend this is
-    /// value-identical to the scalar per-peer `zero_one_error` loop it
-    /// replaces; PJRT artifacts compiled before the sign(0) = -1 fix in
-    /// python/compile/model.py differ on zero-margin negative rows until
-    /// regenerated.
-    fn measure(&mut self, cycle: u64) -> Result<eval::EvalPoint> {
-        // under concept drift the *current* concept is what peers must
-        // predict: evaluate against sign-flipped test labels (built lazily,
-        // once) while the drift sign is negative
-        if self.drift_sign < 0.0 && self.flipped_test_y.is_none() {
-            self.flipped_test_y = Some(eval::flipped_labels(&self.data.test_y));
-        }
-        let test = &self.data.test;
-        let y: &[f32] = if self.drift_sign < 0.0 {
-            self.flipped_test_y.as_ref().unwrap()
-        } else {
-            &self.data.test_y
-        };
-        let errs =
-            eval_peer_errors(&self.store, &self.eval_peers, &mut *self.backend, test, y)?;
-        let vote_errs: Option<Vec<f64>> = self.cfg.eval.voting.then(|| {
-            self.eval_peers
-                .iter()
-                .filter_map(|&p| self.caches[p].as_ref())
-                .map(|c| eval::cache_error(c, Predictor::MajorityVote, test, y))
-                .collect()
-        });
-        let similarity = self.cfg.eval.similarity.then(|| {
-            let models: Vec<LinearModel> =
-                self.eval_peers.iter().map(|&p| self.store.freshest_model(p)).collect();
-            let refs: Vec<&LinearModel> = models.iter().collect();
-            eval::mean_pairwise_cosine(&refs)
-        });
-        Ok(point_from_errors(
-            cycle,
-            &errs,
-            vote_errs.as_deref(),
-            similarity,
-            self.stats.messages_sent,
-        ))
+    /// ([`crate::api::RunEvent`]) to `obs`: every gossip-cycle boundary, every
+    /// measured curve point, and every scenario mutation as it is applied.
+    /// Observation is passive — an observed run is bit-for-bit identical to
+    /// an unobserved one.
+    pub fn try_run_observed(self, obs: &mut dyn Observer) -> Result<RunResult> {
+        sharded::run_sharded(self.cfg, self.data, self.backend, obs)
     }
 }
 
@@ -831,6 +316,7 @@ pub fn run_with_backend(
 #[allow(deprecated)] // the parity suite exercises the legacy shims directly
 mod tests {
     use super::*;
+    use crate::engine::{StepBatch, StepOp};
     use crate::data::synthetic::{spambase_like, urls_like, Scale};
 
     fn quick_cfg(cycles: u64) -> ProtocolConfig {

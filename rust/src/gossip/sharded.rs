@@ -1,0 +1,1079 @@
+//! Sharded execution engine for the event-driven simulator (DESIGN.md §13).
+//!
+//! The node universe is partitioned into `shards` contiguous ranges; each
+//! range is owned by a [`Runner`] with its own keyed event queue, SoA
+//! [`ModelStore`] rows, step batches, network instance, and backend.
+//! Cross-shard deliveries travel as [`Envelope`]s over mpsc lanes.  A
+//! coordinator drives everything in *windows* bounded by conservative
+//! lookahead: with `L` the minimum delivery delay any installed delay model
+//! can produce (floored at one tick), every message sent inside a window
+//! `[S, E)` with `E − S ≤ L` arrives at or after `E` — so runners never
+//! need to see each other's sends mid-window, and the whole window can run
+//! in parallel.
+//!
+//! Determinism does not come from synchronization but from a *keyed total
+//! order* ([`EventKey`]): every event's heap position is a pure function of
+//! its content — `(time, class, src, per-source send counter)` for
+//! deliveries, `(time, class, node)` for gossip ticks — so the pop order is
+//! independent of envelope arrival order, thread interleaving, and shard
+//! count.  Per-node RNG streams (`derive_stream(seed, "node", i)`) are
+//! consumed only by node `i`'s own events, which the keyed order sequences
+//! identically for any sharding; NEWSCAST bootstrap draws from per-node
+//! `"newscast"` streams the same way.  The result: `shards = k` is
+//! bit-for-bit identical to `shards = 1` (pinned in
+//! tests/engine_parity.rs), and the thread count only changes wall-clock.
+//!
+//! Shared state that mutations touch (churn liveness, forced-offline
+//! overlays, membership, network drop/delay/partition models) is
+//! *replicated* per runner and advanced from the same compiled schedules at
+//! the same ticks: churn via a cursor over one sorted transition list
+//! (transitions at time ≤ t are visible to every event processed at t),
+//! scenario mutations at window starts (every mutation tick is a barrier).
+//! Evaluation happens at barriers: each runner measures its slice of the
+//! evaluation peers through the same chunked backend kernels (per-model
+//! counts are grouping-independent), and the coordinator reassembles the
+//! curve point in global peer order.
+
+use crate::api::{Observer, RunEvent};
+use crate::data::dataset::{Dataset, Examples};
+use crate::data::sparse::Csr;
+use crate::engine::native::NativeBackend;
+use crate::engine::{eval_peer_errors, Backend, StepBatch, StepOp, MAX_BATCH_ROWS};
+use crate::eval::{
+    self,
+    tracker::{point_from_errors, Curve},
+};
+use crate::gossip::cache::ModelCache;
+use crate::gossip::create_model::Variant;
+use crate::gossip::message::ModelMsg;
+use crate::gossip::predict::Predictor;
+use crate::gossip::protocol::{ExecMode, ProtocolConfig, RunResult, RunStats};
+use crate::gossip::state::ModelStore;
+use crate::learning::linear::LinearModel;
+use crate::p2p::overlay::{PeerSampler, SamplerConfig};
+use crate::scenario::driver::{resolve_churn_schedule, CompiledScenario, Mutation, ScenarioDriver};
+use crate::sim::event::{EventKey, KeyedQueue, NodeId, Ticks};
+use crate::sim::network::{Fate, Network};
+use crate::util::rng::{derive_stream, Rng};
+use crate::util::threads;
+use anyhow::{anyhow, bail, Result};
+use std::collections::{BTreeSet, HashMap};
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+/// A cross-shard delivery in flight: the message plus the key material that
+/// fixes its position in the receiver's total order.
+struct Envelope {
+    at: Ticks,
+    dst: NodeId,
+    src: NodeId,
+    seq: u64,
+    msg: ModelMsg,
+}
+
+/// Events a runner's keyed queue holds.  Churn is not queued (cursor over
+/// the shared transition list); evaluation is coordinator-driven.
+enum REvent {
+    /// Gossip tick; the node is the key's `a` component.
+    Tick,
+    Deliver { dst: NodeId, msg: ModelMsg },
+}
+
+/// Read-only state shared by every runner and the coordinator.
+struct Shared<'a> {
+    cfg: &'a ProtocolConfig,
+    data: &'a Dataset,
+    compiled: Option<CompiledScenario>,
+    /// sorted (time, node, joined) churn transitions within the horizon
+    churn_events: Vec<(Ticks, NodeId, bool)>,
+    /// churn liveness at tick 0, over the full universe
+    churn_online0: Vec<bool>,
+    /// global evaluation peers, in measurement order
+    eval_peers: Vec<NodeId>,
+    /// sign-flipped test labels, precomputed iff the scenario can drift
+    flipped_y: Option<Vec<f32>>,
+    /// CSR copy when the sparse path is forced on densely stored data
+    owned_csr: Option<Csr>,
+    sparse: bool,
+    op: StepOp,
+    members0: usize,
+    n_univ: usize,
+    /// shard range bounds: shard `i` owns nodes `[bounds[i], bounds[i+1])`
+    bounds: Vec<usize>,
+}
+
+impl<'a> Shared<'a> {
+    fn csr(&self) -> &Csr {
+        if let Some(c) = &self.owned_csr {
+            return c;
+        }
+        match &self.data.train {
+            Examples::Sparse(c) => c,
+            Examples::Dense(_) => unreachable!("dense staging has no CSR"),
+        }
+    }
+
+    fn shard_of(&self, node: NodeId) -> usize {
+        self.bounds.partition_point(|&b| b <= node) - 1
+    }
+}
+
+/// Per-runner evaluation slice, tagged with each peer's position in the
+/// global `eval_peers` order so the coordinator can reassemble.
+struct EvalOut {
+    errs: Vec<(usize, f64)>,
+    votes: Vec<(usize, f64)>,
+    models: Vec<(usize, LinearModel)>,
+    sent: u64,
+}
+
+/// One shard's worth of simulation state: nodes `[lo, hi)`.
+struct Runner<'a, B: Backend> {
+    lo: NodeId,
+    hi: NodeId,
+    sh: &'a Shared<'a>,
+    /// SoA rows for the own range only (local index = node − lo)
+    store: ModelStore,
+    caches: Vec<Option<ModelCache>>,
+    last_restart: Vec<u64>,
+    /// full-universe liveness replicas (the oracle sampler and send/receive
+    /// checks index arbitrary nodes)
+    online: Vec<bool>,
+    churn_online: Vec<bool>,
+    forced_off: Vec<bool>,
+    /// replicated membership counter (grows with scenario flash crowds)
+    members: usize,
+    scn: Option<ScenarioDriver>,
+    drift_sign: f32,
+    queue: KeyedQueue<REvent>,
+    network: Network,
+    sampler: PeerSampler,
+    /// per-node streams for own-range nodes: period jitter, peer selection,
+    /// transmission fate — consumed in node-local event order
+    node_rngs: Vec<Rng>,
+    /// per-source send counters (the delivery key's tie-breaker)
+    send_seq: Vec<u64>,
+    churn_cursor: usize,
+    /// (global position, node) for own-range evaluation peers
+    my_eval: Vec<(usize, NodeId)>,
+    stats: RunStats,
+    backend: B,
+    batch: StepBatch,
+    pending: Vec<(NodeId, ModelMsg)>,
+    batch_start: Ticks,
+    /// own-range dense staging (None on the sparse path)
+    dense_x: Option<Vec<f32>>,
+    inbox: Receiver<Envelope>,
+    lanes: Vec<Sender<Envelope>>,
+}
+
+impl<'a, B: Backend> Runner<'a, B> {
+    fn new(
+        sh: &'a Shared<'a>,
+        shard: usize,
+        backend: B,
+        inbox: Receiver<Envelope>,
+        lanes: Vec<Sender<Envelope>>,
+    ) -> Self {
+        let (lo, hi) = (sh.bounds[shard], sh.bounds[shard + 1]);
+        let d = sh.data.d();
+        let rows = hi - lo;
+        let my_eval: Vec<(usize, NodeId)> = sh
+            .eval_peers
+            .iter()
+            .enumerate()
+            .filter(|&(_, &p)| lo <= p && p < hi)
+            .map(|(pos, &p)| (pos, p))
+            .collect();
+        let mut caches: Vec<Option<ModelCache>> = vec![None; rows];
+        if sh.cfg.eval.voting {
+            for &(_, p) in &my_eval {
+                // INITMODEL (Algorithm 3): seeded cache at evaluation peers
+                let mut c = ModelCache::new(sh.cfg.cache_size);
+                c.add(LinearModel::zeros(d));
+                caches[p - lo] = Some(c);
+            }
+        }
+        let dense_x = (!sh.sparse).then(|| {
+            let mut dx = vec![0.0f32; rows * d];
+            for i in lo..hi {
+                sh.data.train.row(i).write_dense(&mut dx[(i - lo) * d..(i - lo + 1) * d]);
+            }
+            dx
+        });
+        let mut r = Runner {
+            lo,
+            hi,
+            sh,
+            store: ModelStore::new(rows, d),
+            caches,
+            last_restart: vec![0; rows],
+            online: sh.churn_online0.clone(),
+            churn_online: sh.churn_online0.clone(),
+            forced_off: vec![false; sh.n_univ],
+            members: sh.members0,
+            scn: sh.compiled.clone().map(ScenarioDriver::new),
+            drift_sign: 1.0,
+            queue: KeyedQueue::new(),
+            network: Network::new(sh.cfg.network),
+            sampler: PeerSampler::new_range(
+                sh.cfg.sampler,
+                lo,
+                hi,
+                sh.members0,
+                sh.cfg.delta,
+                sh.cfg.seed,
+            ),
+            node_rngs: (lo..hi).map(|n| derive_stream(sh.cfg.seed, "node", n as u64)).collect(),
+            send_seq: vec![0; rows],
+            churn_cursor: 0,
+            my_eval,
+            stats: RunStats::default(),
+            backend,
+            batch: StepBatch::default(),
+            pending: Vec::new(),
+            batch_start: 0,
+            dense_x,
+            inbox,
+            lanes,
+        };
+        // synchronized start (Section IV): first tick after one jittered
+        // period, drawn from each member node's own stream
+        for node in r.lo..r.hi.min(sh.members0.max(r.lo)) {
+            let p = r.next_period(node);
+            r.queue.push(EventKey::tick(p, node), REvent::Tick);
+        }
+        r
+    }
+
+    /// Jittered per-iteration gossip period N(Δ, Δ/10), clipped positive —
+    /// from the node's own stream.
+    fn next_period(&mut self, node: NodeId) -> Ticks {
+        let d = self.sh.cfg.delta as f64;
+        let p = self.node_rngs[node - self.lo].normal_scaled(d, d / 10.0);
+        p.max(1.0) as Ticks
+    }
+
+    /// Make every churn transition with time ≤ `t` visible (flushing any
+    /// pending micro-batch first so deliveries precede later toggles).
+    fn advance_churn(&mut self, t: Ticks) -> Result<()> {
+        let ev = &self.sh.churn_events;
+        if self.churn_cursor < ev.len() && ev[self.churn_cursor].0 <= t {
+            self.flush()?;
+            while self.churn_cursor < ev.len() && ev[self.churn_cursor].0 <= t {
+                let (_, node, up) = ev[self.churn_cursor];
+                self.churn_cursor += 1;
+                self.churn_online[node] = up;
+                self.online[node] = up && !self.forced_off[node];
+            }
+        }
+        Ok(())
+    }
+
+    /// Apply every scenario mutation due at or before `now` to the
+    /// replicated state.  Called at window starts only — every mutation tick
+    /// is a barrier, so `now` is exactly the mutation's tick.
+    fn apply_scenario(&mut self, now: Ticks) {
+        while let Some(m) = self.scn.as_mut().and_then(|d| d.pop_due(now)) {
+            match m {
+                Mutation::SetDrop(p) => self.network.cfg.drop_prob = p,
+                Mutation::SetDelay(model) => self.network.cfg.delay = model,
+                Mutation::SetPartition(components) => {
+                    self.network.set_partition(Some(components))
+                }
+                Mutation::Heal => self.network.set_partition(None),
+                Mutation::Drift => self.drift_sign = -self.drift_sign,
+                Mutation::ForceOffline(ids) => {
+                    for i in ids {
+                        self.forced_off[i] = true;
+                        self.online[i] = false;
+                    }
+                }
+                Mutation::Restore(ids) => {
+                    for i in ids {
+                        self.forced_off[i] = false;
+                        self.online[i] = self.churn_online[i];
+                    }
+                }
+                Mutation::Grow(k) => {
+                    let old = self.members;
+                    let newn = (old + k).min(self.sh.n_univ);
+                    self.members = newn;
+                    self.sampler.grow_range(old, newn, self.sh.cfg.seed);
+                    // liveness flags are full-universe replicas
+                    for node in old..newn {
+                        self.online[node] = self.churn_online[node] && !self.forced_off[node];
+                    }
+                    // arrivals in the own range enter the active loop on a
+                    // fresh jittered period from their own streams
+                    for node in old.max(self.lo)..newn.min(self.hi) {
+                        let p = self.next_period(node);
+                        self.queue.push(EventKey::tick(now + p, node), REvent::Tick);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Run one window `[start, end)`: drain the envelope inbox, catch up
+    /// churn and scenario state to `start`, then process every queued event
+    /// with time < `end` in keyed order.
+    fn step_window(&mut self, start: Ticks, end: Ticks) -> Result<()> {
+        while let Ok(env) = self.inbox.try_recv() {
+            debug_assert!(env.at >= start, "envelope violates the lookahead bound");
+            self.queue.push(
+                EventKey::deliver(env.at, env.src, env.seq),
+                REvent::Deliver { dst: env.dst, msg: env.msg },
+            );
+        }
+        self.advance_churn(start)?;
+        self.apply_scenario(start);
+        while let Some(key) = self.queue.peek_key() {
+            if key.time >= end {
+                break;
+            }
+            self.advance_churn(key.time)?;
+            let (key, ev) = self.queue.pop().expect("peeked");
+            match ev {
+                REvent::Deliver { dst, msg } => {
+                    if self.pending.is_empty() {
+                        self.batch_start = key.time;
+                    }
+                    self.pending.push((dst, msg));
+                    if self.should_flush() {
+                        self.flush()?;
+                    }
+                }
+                REvent::Tick => {
+                    self.flush()?;
+                    self.on_tick(key.a as NodeId, key.time);
+                }
+            }
+        }
+        self.flush()
+    }
+
+    /// Keep accumulating while the next event is another delivery at the
+    /// same (possibly window-quantized) timestamp.
+    fn should_flush(&self) -> bool {
+        match self.sh.cfg.exec {
+            ExecMode::Scalar => true,
+            ExecMode::MicroBatch { .. } => match self.queue.peek() {
+                Some((k, REvent::Deliver { .. })) => k.time != self.batch_start,
+                _ => true,
+            },
+        }
+    }
+
+    /// Quantize a delivery time up to the coalescing-window boundary
+    /// (quantizing up only *increases* arrival times, so the lookahead
+    /// bound survives coalescing).
+    fn arrival_time(&self, at: Ticks) -> Ticks {
+        match self.sh.cfg.exec {
+            ExecMode::MicroBatch { coalesce } if coalesce > 0 => {
+                ((at + coalesce - 1) / coalesce) * coalesce
+            }
+            _ => at,
+        }
+    }
+
+    /// Active loop body (Algorithm 1 lines 3-5) at `now`.
+    fn on_tick(&mut self, node: NodeId, now: Ticks) {
+        // always reschedule (the loop runs forever; an offline node simply
+        // skips the send) — key uniqueness holds because each node has at
+        // most one pending tick
+        let p = self.next_period(node);
+        self.queue.push(EventKey::tick(now + p, node), REvent::Tick);
+
+        if !self.online[node] {
+            return;
+        }
+        let li = node - self.lo;
+        // scheduled model restart (drifting-concept support, DESIGN.md §8)
+        if let Some(k) = self.sh.cfg.restart_every {
+            let cycle = now / self.sh.cfg.delta;
+            if k > 0 && cycle > 0 && cycle % k == 0 && self.last_restart[li] != cycle {
+                self.last_restart[li] = cycle;
+                self.store.reset(li);
+                if let Some(c) = &mut self.caches[li] {
+                    *c = ModelCache::new(self.sh.cfg.cache_size);
+                    c.add(LinearModel::zeros(self.sh.data.d()));
+                }
+            }
+        }
+        let rng = &mut self.node_rngs[li];
+        let Some(dst) = self.sampler.select(node, now, &self.online, rng) else {
+            return;
+        };
+
+        let msg = ModelMsg {
+            src: node,
+            w: self.store.freshest(li).to_vec(),
+            scale: self.store.freshest_scale(li),
+            t: self.store.freshest_t(li) as u64,
+            view: self.sampler.payload(node, now),
+        };
+        self.stats.messages_sent += 1;
+        self.stats.bytes_sent += msg.wire_bytes() as u64;
+        let seq = self.send_seq[li];
+        self.send_seq[li] += 1;
+        let rng = &mut self.node_rngs[li];
+        match self.network.transmit_between(node, dst, rng) {
+            Fate::Deliver(delay) => {
+                // the one-tick floor keeps arrivals strictly after the send
+                // and is what makes the conservative lookahead ≥ 1
+                let at = self.arrival_time(now + delay.max(1));
+                if self.lo <= dst && dst < self.hi {
+                    self.queue
+                        .push(EventKey::deliver(at, node, seq), REvent::Deliver { dst, msg });
+                } else {
+                    // a failed send here means teardown is in progress
+                    let _ = self.lanes[self.sh.shard_of(dst)].send(Envelope {
+                        at,
+                        dst,
+                        src: node,
+                        seq,
+                        msg,
+                    });
+                }
+            }
+            Fate::Dropped => self.stats.messages_dropped += 1,
+            Fate::Blocked => self.stats.messages_blocked += 1,
+        }
+    }
+
+    /// Apply the pending deliveries: keyed ordering, offline losses,
+    /// NEWSCAST view merges, then all CREATEMODEL steps as engine
+    /// micro-batches.  Identical to the unsharded flush except that store,
+    /// cache, and staging indices are range-local.
+    fn flush(&mut self) -> Result<()> {
+        if self.pending.is_empty() {
+            return Ok(());
+        }
+        let d = self.store.d();
+        let lo = self.lo;
+        let pending = std::mem::take(&mut self.pending);
+        let mut live: Vec<(NodeId, ModelMsg)> = Vec::with_capacity(pending.len());
+        for (dst, msg) in pending {
+            if !self.online[dst] {
+                self.network.note_lost_offline();
+                self.stats.messages_lost_offline += 1;
+                continue;
+            }
+            self.sampler.on_receive(dst, &msg.view);
+            self.network.note_delivered();
+            live.push((dst, msg));
+        }
+        let per_msg_updates: u64 = match self.sh.cfg.variant {
+            Variant::Um => 2,
+            _ => 1,
+        };
+        let sparse = self.sh.sparse;
+        let mut prev_in_flush: HashMap<NodeId, usize> = HashMap::new();
+        let mut start = 0;
+        while start < live.len() {
+            let end = (start + MAX_BATCH_ROWS).min(live.len());
+            let b = end - start;
+            self.batch.resize_for(b, d, sparse);
+            for (row, (dst, msg)) in live[start..end].iter().enumerate() {
+                let dst = *dst;
+                let r = row * d..(row + 1) * d;
+                self.batch.w1[r.clone()].copy_from_slice(&msg.w);
+                self.batch.s1[row] = msg.scale;
+                self.batch.t1[row] = msg.t as f32;
+                match prev_in_flush.insert(dst, start + row) {
+                    Some(prev) => {
+                        let pm = &live[prev].1;
+                        self.batch.w2[r.clone()].copy_from_slice(&pm.w);
+                        self.batch.s2[row] = pm.scale;
+                        self.batch.t2[row] = pm.t as f32;
+                    }
+                    None => {
+                        self.batch.w2[r.clone()].copy_from_slice(self.store.last(dst - lo));
+                        self.batch.s2[row] = self.store.last_scale(dst - lo);
+                        self.batch.t2[row] = self.store.last_t(dst - lo);
+                    }
+                }
+                match &self.dense_x {
+                    Some(dx) => {
+                        let li = dst - lo;
+                        self.batch.x[r].copy_from_slice(&dx[li * d..(li + 1) * d]);
+                    }
+                    None => {
+                        let (idx, val) = self.sh.csr().row(dst);
+                        self.batch.push_sparse_x_row(idx, val);
+                    }
+                }
+                // concept drift re-labels: the sign flips with the scenario
+                self.batch.y[row] = self.drift_sign * self.sh.data.train_y[dst];
+            }
+            self.backend.step(&self.sh.op, &mut self.batch)?;
+            self.stats.engine_calls += 1;
+            self.stats.updates_applied += per_msg_updates * b as u64;
+            if sparse {
+                self.stats.sparse_rows += b as u64;
+            }
+            for (row, (dst, msg)) in live[start..end].iter().enumerate() {
+                let li = *dst - lo;
+                let r = row * d..(row + 1) * d;
+                // sparse results land in place in w1 (scale in out_s); dense
+                // results in out_w — see the Backend::step contract
+                let (out, out_s) = if sparse {
+                    (&self.batch.w1[r], self.batch.out_s[row])
+                } else {
+                    (&self.batch.out_w[r], 1.0)
+                };
+                let out_t = self.batch.out_t[row];
+                if let Some(cache) = &mut self.caches[li] {
+                    let mut w = out.to_vec();
+                    if out_s != 1.0 {
+                        for v in &mut w {
+                            *v *= out_s;
+                        }
+                    }
+                    cache.add(LinearModel::from_weights(w, out_t as u64));
+                }
+                self.store.set_freshest_scaled(li, out, out_s, out_t);
+                // lastModel <- incoming (Algorithm 1 line 9)
+                self.store.set_last_scaled(li, &msg.w, msg.scale, msg.t as f32);
+            }
+            start = end;
+        }
+        Ok(())
+    }
+
+    /// Measure this runner's slice of the evaluation peers.  Counts are
+    /// per-model and grouping-independent, so the reassembled values are
+    /// bit-for-bit what a full-range runner would compute.
+    fn eval(&mut self, flipped: bool) -> Result<EvalOut> {
+        let test = &self.sh.data.test;
+        let y: &[f32] = if flipped {
+            self.sh.flipped_y.as_deref().expect("flipped labels precomputed at setup")
+        } else {
+            &self.sh.data.test_y
+        };
+        let lo = self.lo;
+        let local: Vec<usize> = self.my_eval.iter().map(|&(_, p)| p - lo).collect();
+        let errs = eval_peer_errors(&self.store, &local, &mut self.backend, test, y)?;
+        let errs = self.my_eval.iter().map(|&(pos, _)| pos).zip(errs).collect();
+        let votes = if self.sh.cfg.eval.voting {
+            self.my_eval
+                .iter()
+                .filter_map(|&(pos, p)| {
+                    self.caches[p - lo]
+                        .as_ref()
+                        .map(|c| (pos, eval::cache_error(c, Predictor::MajorityVote, test, y)))
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+        let models = if self.sh.cfg.eval.similarity {
+            self.my_eval
+                .iter()
+                .map(|&(pos, p)| (pos, self.store.freshest_model(p - lo)))
+                .collect()
+        } else {
+            Vec::new()
+        };
+        Ok(EvalOut { errs, votes, models, sent: self.stats.messages_sent })
+    }
+
+    /// Final flush; hand back this runner's counters.
+    fn finish(&mut self) -> Result<RunStats> {
+        self.flush()?;
+        let mut stats = std::mem::take(&mut self.stats);
+        stats.messages_delivered = self.network.delivered();
+        Ok(stats)
+    }
+}
+
+/// The coordinator's view of a set of runners — direct calls (serial /
+/// multiplexed) or channel commands (worker threads).
+trait Pool {
+    fn window(&mut self, start: Ticks, end: Ticks) -> Result<()>;
+    fn eval(&mut self, flipped: bool) -> Result<Vec<EvalOut>>;
+    fn finish(&mut self) -> Result<RunStats>;
+}
+
+/// All runners on the calling thread, stepped in shard order.  Results are
+/// identical to the threaded pool by the keyed-order argument, so the
+/// thread budget only affects wall-clock.
+struct SerialPool<'a, B: Backend> {
+    runners: Vec<Runner<'a, B>>,
+}
+
+impl<B: Backend> Pool for SerialPool<'_, B> {
+    fn window(&mut self, start: Ticks, end: Ticks) -> Result<()> {
+        for r in &mut self.runners {
+            r.step_window(start, end)?;
+        }
+        Ok(())
+    }
+
+    fn eval(&mut self, flipped: bool) -> Result<Vec<EvalOut>> {
+        self.runners.iter_mut().map(|r| r.eval(flipped)).collect()
+    }
+
+    fn finish(&mut self) -> Result<RunStats> {
+        let mut total = RunStats::default();
+        for r in &mut self.runners {
+            merge_stats(&mut total, r.finish()?);
+        }
+        Ok(total)
+    }
+}
+
+#[derive(Clone)]
+enum Cmd {
+    Window { start: Ticks, end: Ticks },
+    Eval { flipped: bool },
+    Finish,
+}
+
+enum Reply {
+    Window(Result<()>),
+    Eval(Result<EvalOut>),
+    Finish(Result<RunStats>),
+}
+
+/// Coordinator handle to worker threads, each multiplexing a chunk of
+/// runners.  Every worker answers one reply per runner per command, so the
+/// coordinator always collects exactly `n_runners` replies per phase.
+struct ThreadPool {
+    cmds: Vec<Sender<Cmd>>,
+    replies: Receiver<Reply>,
+    n_runners: usize,
+}
+
+impl ThreadPool {
+    fn broadcast(&self, cmd: Cmd) {
+        for tx in &self.cmds {
+            // a closed worker channel means a worker panicked; the missing
+            // replies surface below as a recv error
+            let _ = tx.send(cmd.clone());
+        }
+    }
+
+    fn collect<T>(&mut self, pick: impl Fn(Reply) -> Result<T>) -> Result<Vec<T>> {
+        let mut out = Vec::with_capacity(self.n_runners);
+        let mut first_err = None;
+        for _ in 0..self.n_runners {
+            let reply = self
+                .replies
+                .recv()
+                .map_err(|_| anyhow!("shard worker exited unexpectedly"))?;
+            match pick(reply) {
+                Ok(v) => out.push(v),
+                Err(e) if first_err.is_none() => first_err = Some(e),
+                Err(_) => {}
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(out),
+        }
+    }
+}
+
+impl Pool for ThreadPool {
+    fn window(&mut self, start: Ticks, end: Ticks) -> Result<()> {
+        self.broadcast(Cmd::Window { start, end });
+        self.collect(|r| match r {
+            Reply::Window(res) => res,
+            _ => Err(anyhow!("out-of-phase shard reply")),
+        })?;
+        Ok(())
+    }
+
+    fn eval(&mut self, flipped: bool) -> Result<Vec<EvalOut>> {
+        self.broadcast(Cmd::Eval { flipped });
+        self.collect(|r| match r {
+            Reply::Eval(res) => res,
+            _ => Err(anyhow!("out-of-phase shard reply")),
+        })
+    }
+
+    fn finish(&mut self) -> Result<RunStats> {
+        self.broadcast(Cmd::Finish);
+        let all = self.collect(|r| match r {
+            Reply::Finish(res) => res,
+            _ => Err(anyhow!("out-of-phase shard reply")),
+        })?;
+        let mut total = RunStats::default();
+        for s in all {
+            merge_stats(&mut total, s);
+        }
+        Ok(total)
+    }
+}
+
+fn worker_loop<B: Backend>(
+    runners: &mut [Runner<'_, B>],
+    cmds: Receiver<Cmd>,
+    replies: Sender<Reply>,
+) {
+    while let Ok(cmd) = cmds.recv() {
+        let done = matches!(cmd, Cmd::Finish);
+        for r in runners.iter_mut() {
+            let reply = match cmd {
+                Cmd::Window { start, end } => Reply::Window(r.step_window(start, end)),
+                Cmd::Eval { flipped } => Reply::Eval(r.eval(flipped)),
+                Cmd::Finish => Reply::Finish(r.finish()),
+            };
+            if replies.send(reply).is_err() {
+                return; // coordinator gone (error teardown)
+            }
+        }
+        if done {
+            return;
+        }
+    }
+}
+
+fn merge_stats(total: &mut RunStats, s: RunStats) {
+    total.messages_sent += s.messages_sent;
+    total.messages_dropped += s.messages_dropped;
+    total.messages_blocked += s.messages_blocked;
+    total.messages_lost_offline += s.messages_lost_offline;
+    total.messages_delivered += s.messages_delivered;
+    total.bytes_sent += s.bytes_sent;
+    total.updates_applied += s.updates_applied;
+    total.engine_calls += s.engine_calls;
+    total.sparse_rows += s.sparse_rows;
+}
+
+/// The barrier/window plan for one run.
+struct Plan {
+    /// sorted unique ticks where the coordinator takes control: tick 0,
+    /// every cycle boundary, every scenario mutation tick, every eval tick,
+    /// and the horizon
+    barriers: Vec<Ticks>,
+    /// sorted eval ticks (duplicates preserved: one curve point each)
+    eval_ticks: Vec<Ticks>,
+    /// conservative lookahead: no window is longer than this
+    lookahead: Ticks,
+    horizon: Ticks,
+    label: String,
+}
+
+fn build_plan(cfg: &ProtocolConfig, compiled: Option<&CompiledScenario>) -> Plan {
+    let horizon = cfg.delta * cfg.cycles;
+    // minimum delay any installed model can sample; the send-time
+    // `delay.max(1)` floor makes 1 the effective lower bound
+    let mut min_d = cfg.network.delay.min_delay();
+    if let Some(c) = compiled {
+        for (_, m) in &c.muts {
+            if let Mutation::SetDelay(dm) = m {
+                min_d = min_d.min(dm.min_delay());
+            }
+        }
+    }
+    let lookahead = min_d.max(1);
+
+    let eval_cycles = if cfg.eval.at_cycles.is_empty() {
+        eval::log_spaced_cycles(cfg.cycles)
+    } else {
+        cfg.eval.at_cycles.clone()
+    };
+    let mut eval_ticks: Vec<Ticks> = eval_cycles
+        .iter()
+        .map(|&c| c * cfg.delta)
+        .filter(|&t| t <= horizon)
+        .collect();
+    eval_ticks.sort_unstable();
+
+    let mut set: BTreeSet<Ticks> = BTreeSet::new();
+    set.insert(0);
+    set.insert(horizon);
+    for c in 1..=cfg.cycles {
+        set.insert(c * cfg.delta);
+    }
+    for &t in &eval_ticks {
+        set.insert(t);
+    }
+    if let Some(c) = compiled {
+        for &(t, _) in &c.muts {
+            if t <= horizon {
+                set.insert(t);
+            }
+        }
+    }
+    Plan {
+        barriers: set.into_iter().collect(),
+        eval_ticks,
+        lookahead,
+        horizon,
+        label: format!("{}-{}-{}", cfg.learner.name(), cfg.variant.name(), cfg.sampler.name()),
+    }
+}
+
+/// Drive the barrier schedule over a pool of runners: windows up to each
+/// barrier, then cycle/scenario observer events and due measurements.
+fn drive(
+    pool: &mut dyn Pool,
+    sh: &Shared<'_>,
+    plan: &Plan,
+    obs: &mut dyn Observer,
+) -> Result<RunResult> {
+    let delta = sh.cfg.delta;
+    let mut curve = Curve::new(plan.label.clone());
+    // the coordinator's mirror of the scenario timeline: drift bookkeeping
+    // for eval labels plus the observer's mutation events
+    let mut mirror = sh.compiled.clone().map(ScenarioDriver::new);
+    let mut drift = 1.0f32;
+    let mut observed_cycle = 0u64;
+    let mut ei = 0usize;
+    let mut cur: Ticks = 0;
+    for &b in &plan.barriers {
+        while cur < b {
+            let end = (cur + plan.lookahead).min(b);
+            pool.window(cur, end)?;
+            cur = end;
+        }
+        while observed_cycle < b / delta {
+            observed_cycle += 1;
+            obs.on_event(&RunEvent::Cycle { cycle: observed_cycle });
+        }
+        while let Some(m) = mirror.as_mut().and_then(|d| d.pop_due(b)) {
+            if matches!(m, Mutation::Drift) {
+                drift = -drift;
+            }
+            obs.on_event(&RunEvent::Scenario { cycle: b / delta, mutation: m.describe() });
+        }
+        while ei < plan.eval_ticks.len() && plan.eval_ticks[ei] == b {
+            ei += 1;
+            let outs = pool.eval(drift < 0.0)?;
+            let pt = assemble_point(sh, (b / delta).max(1), outs);
+            obs.on_event(&RunEvent::Eval { point: pt.clone() });
+            curve.push(pt);
+        }
+    }
+    // events at exactly the horizon still apply (legacy `t <= horizon`
+    // semantics); their effects land in the final stats, after the last
+    // measurement
+    pool.window(plan.horizon, plan.horizon + 1)?;
+    let stats = pool.finish()?;
+    Ok(RunResult { curve, stats })
+}
+
+/// Reassemble per-runner eval slices into one curve point in global
+/// evaluation-peer order.
+fn assemble_point(sh: &Shared<'_>, cycle: u64, outs: Vec<EvalOut>) -> eval::EvalPoint {
+    let mut errs = vec![0.0f64; sh.eval_peers.len()];
+    let mut votes: Vec<(usize, f64)> = Vec::new();
+    let mut models: Vec<(usize, LinearModel)> = Vec::new();
+    let mut sent = 0u64;
+    for out in outs {
+        for (pos, e) in out.errs {
+            errs[pos] = e;
+        }
+        votes.extend(out.votes);
+        models.extend(out.models);
+        sent += out.sent;
+    }
+    let vote_errs: Option<Vec<f64>> = sh.cfg.eval.voting.then(|| {
+        votes.sort_by_key(|&(pos, _)| pos);
+        votes.iter().map(|&(_, v)| v).collect()
+    });
+    let similarity = sh.cfg.eval.similarity.then(|| {
+        models.sort_by_key(|&(pos, _)| pos);
+        let refs: Vec<&LinearModel> = models.iter().map(|(_, m)| m).collect();
+        eval::mean_pairwise_cosine(&refs)
+    });
+    point_from_errors(cycle, &errs, vote_errs.as_deref(), similarity, sent)
+}
+
+/// Build the shared setup for a run: compiled scenario, churn schedule,
+/// evaluation peers, kernel-path resolution, shard ranges.
+fn build_shared<'a>(
+    cfg: &'a ProtocolConfig,
+    data: &'a Dataset,
+    backend_supports_sparse: bool,
+    shards: usize,
+) -> Shared<'a> {
+    let n_univ = data.n_train();
+    assert!(n_univ >= 2, "need at least two nodes");
+    let compiled = cfg.scenario.as_ref().map(|s| {
+        CompiledScenario::compile(s, n_univ, cfg.delta, cfg.cycles, cfg.seed, cfg.network)
+            .expect("scenario must be validated before the simulator runs")
+    });
+    let members0 = compiled.as_ref().map_or(n_univ, |c| c.initial);
+    let mut rng = Rng::new(cfg.seed);
+    // the schedule horizon covers one period past the run so in-flight
+    // sessions do not truncate at the boundary (legacy constant)
+    let sched_horizon = cfg.delta * (cfg.cycles + 1);
+    let churn = resolve_churn_schedule(
+        cfg.churn.as_ref(),
+        compiled.as_ref(),
+        n_univ,
+        cfg.delta,
+        sched_horizon,
+        &mut rng,
+    );
+    // fork-order preservation: the sampler fork predates per-node streams
+    // and keeps the eval-peer draw on its historical stream
+    let _sampler_rng = rng.fork();
+    let mut eval_rng = rng.fork();
+    let eval_peers = eval_rng.sample_indices(members0, cfg.eval.n_peers.min(members0));
+
+    let run_horizon = cfg.delta * cfg.cycles;
+    let churn_online0: Vec<bool> = (0..n_univ)
+        .map(|i| churn.as_ref().map_or(true, |ch| ch.is_online(i, 0)))
+        .collect();
+    let churn_events: Vec<(Ticks, NodeId, bool)> = churn
+        .as_ref()
+        .map(|ch| ch.events().into_iter().filter(|&(t, _, _)| t <= run_horizon).collect())
+        .unwrap_or_default();
+
+    let flipped_y = compiled
+        .as_ref()
+        .map_or(false, |c| c.muts.iter().any(|(_, m)| matches!(m, Mutation::Drift)))
+        .then(|| eval::flipped_labels(&data.test_y));
+
+    let sparse = match cfg.path {
+        crate::gossip::protocol::ExecPath::Sparse => true,
+        _ => backend_supports_sparse && cfg.path.use_sparse(&data.train),
+    };
+    let owned_csr = (sparse && matches!(data.train, Examples::Dense(_)))
+        .then(|| data.train.to_csr());
+
+    let bounds: Vec<usize> = (0..=shards).map(|i| i * n_univ / shards).collect();
+
+    Shared {
+        cfg,
+        data,
+        compiled,
+        churn_events,
+        churn_online0,
+        eval_peers,
+        flipped_y,
+        owned_csr,
+        sparse,
+        op: StepOp::for_protocol(&cfg.learner, cfg.variant),
+        members0,
+        n_univ,
+        bounds,
+    }
+}
+
+/// Thin adapter so a caller-supplied `Box<dyn Backend>` can drive the
+/// generic runner (single-shard path only; worker threads build their own
+/// [`NativeBackend`]s).
+struct BoxedBackend(Box<dyn Backend>);
+
+impl Backend for BoxedBackend {
+    fn name(&self) -> &'static str {
+        self.0.name()
+    }
+    fn step(&mut self, op: &StepOp, batch: &mut StepBatch) -> Result<()> {
+        self.0.step(op, batch)
+    }
+    fn supports_sparse(&self) -> bool {
+        self.0.supports_sparse()
+    }
+    fn error_counts(
+        &mut self,
+        x: &[f32],
+        y: &[f32],
+        n: usize,
+        d: usize,
+        w: &[f32],
+        m: usize,
+    ) -> Result<Vec<f32>> {
+        self.0.error_counts(x, y, n, d, w, m)
+    }
+    fn error_counts_examples(
+        &mut self,
+        test: &Examples,
+        y: &[f32],
+        w: &[f32],
+        m: usize,
+    ) -> Result<Vec<f32>> {
+        // forward so a sparse-capable inner backend keeps its O(nnz) eval
+        self.0.error_counts_examples(test, y, w, m)
+    }
+}
+
+/// Run the event-driven protocol, sharded `cfg.shards` ways.
+///
+/// `shards = 1` runs a single full-range runner inline on the caller's
+/// backend (any backend, PJRT included).  `shards ≥ 2` requires the native
+/// backend and a non-MATCHING sampler; it leases worker threads from the
+/// process-wide [`threads`] budget — a drained budget degrades to
+/// single-thread multiplexing with identical results.
+pub fn run_sharded(
+    cfg: ProtocolConfig,
+    data: &Dataset,
+    backend: Box<dyn Backend>,
+    obs: &mut dyn Observer,
+) -> Result<RunResult> {
+    let shards = cfg.shards.max(1).min(data.n_train());
+    if shards >= 2 {
+        if backend.name() != "native" {
+            bail!(
+                "sharded execution (shards = {shards}) requires the native backend; \
+                 backend '{}' can only run with shards = 1",
+                backend.name()
+            );
+        }
+        if matches!(cfg.sampler, SamplerConfig::Matching) {
+            bail!("the MATCHING sampler needs a global partner table; use shards = 1");
+        }
+    }
+    let sh = build_shared(&cfg, data, backend.supports_sparse(), shards);
+    let plan = build_plan(&cfg, sh.compiled.as_ref());
+
+    // one mpsc lane per runner; every runner can send to every other
+    let (txs, rxs): (Vec<Sender<Envelope>>, Vec<Receiver<Envelope>>) =
+        (0..shards).map(|_| channel()).unzip();
+
+    if shards == 1 {
+        let inbox = rxs.into_iter().next().expect("one lane");
+        let runner = Runner::new(&sh, 0, BoxedBackend(backend), inbox, txs);
+        let mut pool = SerialPool { runners: vec![runner] };
+        return drive(&mut pool, &sh, &plan, obs);
+    }
+
+    // shards ≥ 2: lease extra worker threads; the caller's thread drives
+    // the coordinator (and all runners, if the budget is drained)
+    let lease = threads::lease(shards - 1);
+    let workers = (1 + lease.granted()).min(shards);
+    let mut runners: Vec<Runner<'_, NativeBackend>> = Vec::with_capacity(shards);
+    let mut rx_iter = rxs.into_iter();
+    for i in 0..shards {
+        let inbox = rx_iter.next().expect("one lane per runner");
+        runners.push(Runner::new(&sh, i, NativeBackend::new(), inbox, txs.clone()));
+    }
+    drop(txs);
+
+    if workers == 1 {
+        let mut pool = SerialPool { runners };
+        return drive(&mut pool, &sh, &plan, obs);
+    }
+
+    std::thread::scope(|scope| {
+        let (reply_tx, reply_rx) = channel::<Reply>();
+        let mut cmd_txs = Vec::with_capacity(workers);
+        // contiguous chunks of runners per worker; chunk sizes only affect
+        // scheduling, never results
+        let mut chunks: Vec<Vec<Runner<'_, NativeBackend>>> = Vec::with_capacity(workers);
+        let total = runners.len();
+        for w in (0..workers).rev() {
+            let at = w * total / workers;
+            chunks.push(runners.split_off(at));
+        }
+        for mut chunk in chunks {
+            let (cmd_tx, cmd_rx) = channel::<Cmd>();
+            cmd_txs.push(cmd_tx);
+            let reply_tx = reply_tx.clone();
+            scope.spawn(move || worker_loop(&mut chunk, cmd_rx, reply_tx));
+        }
+        drop(reply_tx);
+        let mut pool = ThreadPool { cmds: cmd_txs, replies: reply_rx, n_runners: shards };
+        let out = drive(&mut pool, &sh, &plan, obs);
+        // dropping the pool closes the command channels; workers exit and
+        // the scope joins them
+        drop(pool);
+        out
+    })
+}

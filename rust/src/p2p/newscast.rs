@@ -19,10 +19,17 @@ pub struct Descriptor {
 
 /// The full network's newscast state (per-node views), owned by the
 /// simulator.
+///
+/// A `Newscast` can also be a *range view* over nodes `[base, base + len)`
+/// (sharded simulator, DESIGN.md §13): each shard runner owns the views of
+/// its contiguous node range only, so S shards hold the same total view
+/// memory as one full instance instead of S replicas.  All node-indexed
+/// methods take global node ids and subtract `base`.
 #[derive(Debug)]
 pub struct Newscast {
     views: Vec<Vec<Descriptor>>,
     pub view_size: usize,
+    base: NodeId,
 }
 
 impl Newscast {
@@ -40,7 +47,7 @@ impl Newscast {
             }
             views.push(v);
         }
-        Newscast { views, view_size }
+        Newscast { views, view_size, base: 0 }
     }
 
     /// Bootstrap a *single* node's view in an otherwise empty state: used by
@@ -58,7 +65,60 @@ impl Newscast {
             }
         }
         views[me] = v;
-        Newscast { views, view_size }
+        Newscast { views, view_size, base: 0 }
+    }
+
+    /// Range view for the sharded simulator: views for nodes
+    /// `[lo, hi)` only, each bootstrapped from its own order-independent
+    /// stream `derive_stream(seed, "newscast", node)` over the current
+    /// membership `members`.  Nodes at or beyond `members` (scenario
+    /// latecomers) start with empty views and are seeded by
+    /// [`Newscast::grow_range`] when they join.  Because every node's view
+    /// comes from its own stream, the result is identical however nodes are
+    /// grouped into shards.
+    pub fn bootstrap_range(
+        lo: NodeId,
+        hi: NodeId,
+        members: usize,
+        view_size: usize,
+        seed: u64,
+    ) -> Self {
+        let views = (lo..hi)
+            .map(|me| {
+                if me < members {
+                    Self::boot_view(me, members, view_size, seed)
+                } else {
+                    Vec::new()
+                }
+            })
+            .collect();
+        Newscast { views, view_size, base: lo }
+    }
+
+    /// One node's bootstrap view over a `members`-node universe, drawn from
+    /// the node's own derived stream.
+    fn boot_view(me: NodeId, members: usize, view_size: usize, seed: u64) -> Vec<Descriptor> {
+        let mut rng = crate::util::rng::derive_stream(seed, "newscast", me as u64);
+        let mut v = Vec::with_capacity(view_size);
+        while v.len() < view_size.min(members.saturating_sub(1)) {
+            let peer = rng.below_usize(members);
+            if peer != me && !v.iter().any(|d: &Descriptor| d.node == peer) {
+                v.push(Descriptor { node: peer, ts: 0 });
+            }
+        }
+        v
+    }
+
+    /// Range-view counterpart of [`Newscast::grow`]: activate nodes in
+    /// `[old_members, new_members)` that fall inside this view's range,
+    /// bootstrapping each over the *enlarged* universe from its own stream.
+    pub fn grow_range(&mut self, old_members: usize, new_members: usize, seed: u64) {
+        let lo = self.base.max(old_members);
+        let hi = (self.base + self.views.len()).min(new_members);
+        for me in lo..hi {
+            self.views[me - self.base] =
+                Self::boot_view(me, new_members, self.view_size, seed);
+        }
     }
 
     /// Grow the overlay to `n_new` nodes (scenario flash crowds): each new
@@ -82,7 +142,7 @@ impl Newscast {
 
     /// SELECTPEER: uniform draw from the local view.
     pub fn select(&self, node: NodeId, rng: &mut Rng) -> Option<NodeId> {
-        let v = &self.views[node];
+        let v = &self.views[node - self.base];
         if v.is_empty() {
             None
         } else {
@@ -93,9 +153,10 @@ impl Newscast {
     /// Payload to piggyback on an outgoing message: own view + own fresh
     /// descriptor.
     pub fn payload(&self, node: NodeId, now: Ticks) -> Vec<Descriptor> {
-        let mut p = Vec::with_capacity(self.views[node].len() + 1);
+        let v = &self.views[node - self.base];
+        let mut p = Vec::with_capacity(v.len() + 1);
         p.push(Descriptor { node, ts: now });
-        p.extend_from_slice(&self.views[node]);
+        p.extend_from_slice(v);
         p
     }
 
@@ -103,7 +164,7 @@ impl Newscast {
     /// keeping the freshest timestamp, drop self, keep the `view_size`
     /// freshest.
     pub fn merge(&mut self, node: NodeId, payload: &[Descriptor]) {
-        let view = &mut self.views[node];
+        let view = &mut self.views[node - self.base];
         for &d in payload {
             if d.node == node {
                 continue;
@@ -119,7 +180,7 @@ impl Newscast {
     }
 
     pub fn view(&self, node: NodeId) -> &[Descriptor] {
-        &self.views[node]
+        &self.views[node - self.base]
     }
 }
 
@@ -162,6 +223,39 @@ mod tests {
         }
         // the node's own slot behaves like a normal newscast view
         assert!(nc.select(7, &mut rng).is_some());
+    }
+
+    /// Range views are sharding-invariant: splitting [0, n) into any set of
+    /// ranges yields exactly the views of the full-range bootstrap, because
+    /// each node draws from its own derived stream.
+    #[test]
+    fn bootstrap_range_is_grouping_independent() {
+        let (n, seed) = (24, 99);
+        let full = Newscast::bootstrap_range(0, n, n, 6, seed);
+        for (lo, hi) in [(0usize, 7usize), (7, 16), (16, 24)] {
+            let shard = Newscast::bootstrap_range(lo, hi, n, 6, seed);
+            for me in lo..hi {
+                assert_eq!(shard.view(me), full.view(me), "node {me}");
+                assert!(shard.view(me).iter().all(|d| d.node != me && d.node < n));
+            }
+        }
+        // grow: latecomers start empty, then bootstrap over the new universe
+        let mut shard = Newscast::bootstrap_range(8, 16, 12, 6, seed);
+        assert!(shard.view(13).is_empty());
+        shard.grow_range(12, 20, seed);
+        assert!(!shard.view(13).is_empty());
+        let mut full2 = Newscast::bootstrap_range(0, 20, 12, 6, seed);
+        full2.grow_range(12, 20, seed);
+        for me in 8..16 {
+            assert_eq!(shard.view(me), full2.view(me), "grown node {me}");
+        }
+        // payload/merge/select work through the base offset
+        let mut rng = Rng::new(1);
+        let p = shard.payload(9, 50);
+        assert_eq!(p[0].node, 9);
+        shard.merge(9, &[Descriptor { node: 17, ts: 80 }]);
+        assert!(shard.view(9).iter().any(|d| d.node == 17));
+        assert!(shard.select(9, &mut rng).is_some());
     }
 
     #[test]

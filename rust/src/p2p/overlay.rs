@@ -62,6 +62,59 @@ impl PeerSampler {
         }
     }
 
+    /// A sampler for one shard runner of the sharded simulator (DESIGN.md
+    /// §13), covering nodes `[lo, hi)` of a `members`-node universe.
+    /// Construction consumes no shared RNG: NEWSCAST views come from
+    /// per-node derived streams (`Newscast::bootstrap_range`), so the
+    /// result is identical however nodes are grouped into shards.  The
+    /// oracle is replicated state (`n = members`); MATCHING needs a
+    /// globally consistent partner table and is only valid when a single
+    /// runner covers the whole range (`shards = 1` — enforced upstream by
+    /// spec validation).
+    pub fn new_range(
+        cfg: SamplerConfig,
+        lo: NodeId,
+        hi: NodeId,
+        members: usize,
+        delta: Ticks,
+        seed: u64,
+    ) -> Self {
+        match cfg {
+            SamplerConfig::Oracle => PeerSampler::Oracle { n: members },
+            SamplerConfig::Newscast { view_size } => PeerSampler::Newscast(
+                Newscast::bootstrap_range(lo, hi, members, view_size, seed),
+            ),
+            SamplerConfig::Matching => {
+                debug_assert!(lo == 0, "matching requires a full-range runner");
+                PeerSampler::Matching(MatchingState {
+                    n: members,
+                    delta,
+                    cycle: u64::MAX,
+                    partner: vec![None; hi.max(members)],
+                })
+            }
+        }
+    }
+
+    /// Range-aware counterpart of [`PeerSampler::grow`]: activate the
+    /// membership step `[old_members, new_members)` using per-node derived
+    /// streams instead of a shared RNG (shard-grouping independent).
+    pub fn grow_range(&mut self, old_members: usize, new_members: usize, seed: u64) {
+        match self {
+            PeerSampler::Oracle { n } => *n = (*n).max(new_members),
+            PeerSampler::Newscast(nc) => nc.grow_range(old_members, new_members, seed),
+            PeerSampler::Matching(st) => {
+                if new_members > st.n {
+                    st.n = new_members;
+                    if st.partner.len() < new_members {
+                        st.partner.resize(new_members, None);
+                    }
+                    st.cycle = u64::MAX; // force a refresh with the new nodes
+                }
+            }
+        }
+    }
+
     /// A sampler for one node of a real deployment: only `me`'s view slot is
     /// populated (NEWSCAST) since each deployed node owns its own sampler
     /// instance and never reads another node's state.  Matching is not
@@ -275,6 +328,52 @@ mod tests {
                 assert_eq!(partners[*p], Some(i));
             }
         }
+    }
+
+    #[test]
+    fn range_sampler_matches_full_range_views() {
+        // the NEWSCAST range sampler is grouping-independent: a [5,10)
+        // shard sees exactly the views the full-range sampler holds
+        let seed = 42;
+        // universe of 20 rows, 15 initially in the overlay
+        let full = PeerSampler::new_range(
+            SamplerConfig::Newscast { view_size: 4 },
+            0,
+            20,
+            15,
+            1000,
+            seed,
+        );
+        let mut shard = PeerSampler::new_range(
+            SamplerConfig::Newscast { view_size: 4 },
+            5,
+            10,
+            15,
+            1000,
+            seed,
+        );
+        for me in 5..10 {
+            assert_eq!(shard.payload(me, 0), full.payload(me, 0), "node {me}");
+        }
+        // grow through the range API keeps them aligned too
+        let mut full = full;
+        full.grow_range(15, 20, seed);
+        shard.grow_range(15, 20, seed);
+        for me in 5..10 {
+            assert_eq!(shard.payload(me, 0), full.payload(me, 0), "grown {me}");
+        }
+        // oracle range sampler widens like the legacy one
+        let mut o = PeerSampler::new_range(SamplerConfig::Oracle, 5, 10, 15, 1000, seed);
+        o.grow_range(15, 20, seed);
+        let online = vec![true; 20];
+        let mut rng = Rng::new(3);
+        let mut seen_new = false;
+        for _ in 0..200 {
+            if o.select(6, 0, &online, &mut rng).unwrap() >= 15 {
+                seen_new = true;
+            }
+        }
+        assert!(seen_new, "grown oracle must sample new nodes");
     }
 
     #[test]

@@ -92,6 +92,100 @@ impl EventQueue {
     }
 }
 
+/// Total-order key for the sharded simulator's per-shard queues
+/// (DESIGN.md §13).  Unlike [`EventQueue`]'s `(time, insertion-seq)`
+/// ordering, a `KeyedQueue`'s order is a *pure function of event content*:
+/// `(time, class, a, b)` where the class ranks event kinds at equal time
+/// (churn < delivery < tick) and `(a, b)` uniquely identify the event
+/// within its class — `(src, per-source send counter)` for deliveries,
+/// `(node, 0)` for gossip ticks.  Because every key is unique by
+/// construction, the pop order is independent of insertion order, which is
+/// exactly what makes cross-shard envelope arrival order irrelevant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct EventKey {
+    pub time: Ticks,
+    pub class: u8,
+    pub a: u64,
+    pub b: u64,
+}
+
+impl EventKey {
+    /// Delivery of the `seq`-th send from `src` (class 2).
+    pub fn deliver(time: Ticks, src: NodeId, seq: u64) -> Self {
+        Self { time, class: 2, a: src as u64, b: seq }
+    }
+
+    /// Gossip tick at `node` (class 3; at most one pending per node).
+    pub fn tick(time: Ticks, node: NodeId) -> Self {
+        Self { time, class: 3, a: node as u64, b: 0 }
+    }
+}
+
+#[derive(Debug)]
+struct Keyed<E> {
+    key: EventKey,
+    event: E,
+}
+
+impl<E> PartialEq for Keyed<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.key == other.key
+    }
+}
+impl<E> Eq for Keyed<E> {}
+impl<E> PartialOrd for Keyed<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Keyed<E> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.key.cmp(&other.key)
+    }
+}
+
+/// Min-heap ordered solely by [`EventKey`] — insertion order never matters.
+#[derive(Debug)]
+pub struct KeyedQueue<E> {
+    heap: BinaryHeap<Reverse<Keyed<E>>>,
+}
+
+impl<E> Default for KeyedQueue<E> {
+    fn default() -> Self {
+        Self { heap: BinaryHeap::new() }
+    }
+}
+
+impl<E> KeyedQueue<E> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, key: EventKey, event: E) {
+        self.heap.push(Reverse(Keyed { key, event }));
+    }
+
+    pub fn pop(&mut self) -> Option<(EventKey, E)> {
+        self.heap.pop().map(|Reverse(k)| (k.key, k.event))
+    }
+
+    pub fn peek_key(&self) -> Option<EventKey> {
+        self.heap.peek().map(|Reverse(k)| k.key)
+    }
+
+    pub fn peek(&self) -> Option<(EventKey, &E)> {
+        self.heap.peek().map(|Reverse(k)| (k.key, &k.event))
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -117,6 +211,55 @@ mod tests {
             order.push(node);
         }
         assert_eq!(order, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn keyed_queue_order_is_insertion_independent() {
+        let keys = vec![
+            EventKey::tick(5, 3),
+            EventKey::deliver(5, 1, 0),
+            EventKey::deliver(5, 0, 2),
+            EventKey::deliver(5, 0, 1),
+            EventKey::tick(4, 9),
+            EventKey::deliver(7, 2, 0),
+        ];
+        // forward insertion vs reversed insertion: identical pop order
+        let mut fwd = KeyedQueue::new();
+        for &k in &keys {
+            fwd.push(k, ());
+        }
+        let mut rev = KeyedQueue::new();
+        for &k in keys.iter().rev() {
+            rev.push(k, ());
+        }
+        let a: Vec<EventKey> = std::iter::from_fn(|| fwd.pop().map(|(k, _)| k)).collect();
+        let b: Vec<EventKey> = std::iter::from_fn(|| rev.pop().map(|(k, _)| k)).collect();
+        assert_eq!(a, b);
+        // and the order itself: time, then class (deliver < tick), then src, then seq
+        assert_eq!(
+            a,
+            vec![
+                EventKey::tick(4, 9),
+                EventKey::deliver(5, 0, 1),
+                EventKey::deliver(5, 0, 2),
+                EventKey::deliver(5, 1, 0),
+                EventKey::tick(5, 3),
+                EventKey::deliver(7, 2, 0),
+            ]
+        );
+    }
+
+    #[test]
+    fn keyed_queue_peek_matches_pop() {
+        let mut q = KeyedQueue::new();
+        q.push(EventKey::tick(10, 0), "tick");
+        q.push(EventKey::deliver(10, 4, 7), "msg");
+        assert_eq!(q.peek_key(), Some(EventKey::deliver(10, 4, 7)));
+        assert!(matches!(q.peek(), Some((_, &"msg"))));
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop().map(|(_, e)| e), Some("msg"));
+        assert_eq!(q.pop().map(|(_, e)| e), Some("tick"));
+        assert!(q.is_empty());
     }
 
     #[test]

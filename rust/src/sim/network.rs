@@ -31,6 +31,17 @@ impl DelayModel {
             DelayModel::Uniform { lo, hi } => (lo + hi) as f64 / 2.0,
         }
     }
+
+    /// Smallest delay this model can ever sample.  The sharded simulator's
+    /// conservative lookahead (DESIGN.md §13) windows event processing by
+    /// the minimum over all delay models a run can install, so a message
+    /// sent inside a window always arrives at or after the window's end.
+    pub fn min_delay(&self) -> Ticks {
+        match *self {
+            DelayModel::Fixed(d) => d,
+            DelayModel::Uniform { lo, .. } => lo,
+        }
+    }
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -207,6 +218,17 @@ mod tests {
         }
         let mean = sum / n as f64;
         assert!((mean - cfg.delay.mean()).abs() < 100.0, "mean {mean}");
+    }
+
+    #[test]
+    fn min_delay_bounds_samples() {
+        assert_eq!(DelayModel::Fixed(10).min_delay(), 10);
+        let u = DelayModel::Uniform { lo: 1000, hi: 10_000 };
+        assert_eq!(u.min_delay(), 1000);
+        let mut rng = Rng::new(6);
+        for _ in 0..1000 {
+            assert!(u.sample(&mut rng) >= u.min_delay());
+        }
     }
 
     #[test]

@@ -5,3 +5,4 @@ pub mod benchkit;
 pub mod check;
 pub mod rng;
 pub mod stats;
+pub mod threads;

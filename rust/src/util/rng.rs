@@ -35,6 +35,28 @@ pub fn derive_seed(base: u64, tag: &str) -> u64 {
     splitmix64(&mut s)
 }
 
+/// Order-independent per-entity stream derivation: an [`Rng`] that depends
+/// only on `(base, domain, idx)` — not on how many other streams were
+/// derived first, nor on which thread derives it.  This is the allocation-
+/// free indexed analogue of [`derive_seed`] (no `format!("{domain}/{idx}")`
+/// on the hot path): the domain hashes once through FNV-1a, the index mixes
+/// in through two splitmix64 rounds.
+///
+/// The sharded simulator (DESIGN.md §13) gives every node its own stream
+/// `derive_stream(seed, "node", id)`, so a node's draw sequence — gossip-
+/// period jitter, SELECTPEER, drop/delay fate — is a pure function of the
+/// run seed and the node id, identical under any shard count.
+pub fn derive_stream(base: u64, domain: &str, idx: u64) -> Rng {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    for b in domain.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    let mut s = (base ^ h).wrapping_add(idx.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    let _ = splitmix64(&mut s);
+    Rng::new(splitmix64(&mut s))
+}
+
 impl Rng {
     pub fn new(seed: u64) -> Self {
         let mut sm = seed;
@@ -293,6 +315,34 @@ mod tests {
         assert_ne!(a, derive_seed(42, "urls/mu/true/r1"));
         assert_ne!(a, derive_seed(42, "urls/rw/true/r0"));
         assert_ne!(a, derive_seed(43, "urls/mu/true/r0"));
+    }
+
+    #[test]
+    fn derive_stream_pure_and_index_sensitive() {
+        // pure function of (base, domain, idx): derivation order and thread
+        // placement cannot matter because there is no shared state at all
+        let mut a = derive_stream(42, "node", 7);
+        let mut b = derive_stream(42, "node", 7);
+        for _ in 0..64 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = derive_stream(42, "node", 8);
+        let mut d = derive_stream(42, "newscast", 7);
+        let mut e = derive_stream(43, "node", 7);
+        let mut a = derive_stream(42, "node", 7);
+        let first = a.next_u64();
+        assert_ne!(first, c.next_u64());
+        assert_ne!(first, d.next_u64());
+        assert_ne!(first, e.next_u64());
+    }
+
+    #[test]
+    fn derive_stream_neighbor_indices_uncorrelated() {
+        // adjacent node ids must not produce visibly related streams
+        let mut a = derive_stream(1, "node", 0);
+        let mut b = derive_stream(1, "node", 1);
+        let same = (0..256).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
     }
 
     #[test]

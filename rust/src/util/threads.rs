@@ -1,0 +1,172 @@
+//! Process-wide thread budget shared by every scoped-thread spawner.
+//!
+//! Two layers of the crate spawn worker threads: the sweep grid
+//! (`experiments::sweep::run_indexed`) fans cells out across workers, and
+//! the sharded event simulator (`gossip::sharded`, DESIGN.md §13) fans one
+//! run's node ranges out across shard workers.  A sharded run *inside* a
+//! parallel sweep would multiply the two counts and oversubscribe the
+//! machine, so both spawners draw from this single ledger instead of
+//! consulting `available_parallelism` independently.
+//!
+//! Model: a pool of `budget()` compute tokens (set by `--threads`, the
+//! `GOLF_THREADS` environment variable, or the machine's available
+//! parallelism).  Every thread that is about to run compute holds one
+//! token.  A caller is always entitled to compute on its own thread without
+//! holding a token — [`lease`] therefore hands out *additional* worker
+//! tokens, clamped to what is left, and a grant of zero extra workers
+//! degrades the caller to serial execution rather than failing.
+//!
+//! Composition rule (documented in README/DESIGN): a sweep over `T` workers
+//! whose cells each run `S` shards never exceeds `budget()` live compute
+//! threads — the sweep leases `T` tokens up front, and each cell's sharded
+//! executor leases `S - 1` *extra* tokens (its own sweep-worker thread
+//! drives the first shard), falling back toward single-threaded shard
+//! multiplexing as the pool drains.  Results are identical either way:
+//! shard execution is deterministic by construction, so the grant size
+//! affects wall-clock only.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Explicit `--threads` override; 0 = unset (resolve from env/machine).
+static OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Extra worker tokens currently leased out process-wide.
+static LEASED: AtomicUsize = AtomicUsize::new(0);
+
+/// Set the process-wide thread budget (the CLI's `--threads` flag).  A
+/// value of 0 clears the override back to auto-detection.
+pub fn set_budget(n: usize) {
+    OVERRIDE.store(n, Ordering::SeqCst);
+}
+
+/// The total compute-thread budget: the `--threads` override if set, else
+/// `GOLF_THREADS`, else the machine's available parallelism; at least 1.
+pub fn budget() -> usize {
+    let o = OVERRIDE.load(Ordering::SeqCst);
+    if o > 0 {
+        return o;
+    }
+    std::env::var("GOLF_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        })
+        .max(1)
+}
+
+/// A granted allocation of extra worker threads.  Returns its tokens to the
+/// pool on drop — hold it for exactly as long as the workers are alive.
+#[derive(Debug)]
+pub struct Lease {
+    granted: usize,
+}
+
+impl Lease {
+    /// How many *extra* worker threads the ledger granted (possibly 0 —
+    /// run serial on the calling thread then).
+    pub fn granted(&self) -> usize {
+        self.granted
+    }
+}
+
+impl Drop for Lease {
+    fn drop(&mut self) {
+        if self.granted > 0 {
+            LEASED.fetch_sub(self.granted, Ordering::SeqCst);
+        }
+    }
+}
+
+/// Lease up to `want` extra worker tokens from the global pool.  The grant
+/// is `min(want, budget() - 1 - already_leased)` (never negative): the
+/// `- 1` reserves the caller's own thread, which is always entitled to
+/// compute without a token.
+pub fn lease(want: usize) -> Lease {
+    lease_from(&LEASED, budget(), want)
+}
+
+/// Ledger math, factored for deterministic testing: grab up to `want`
+/// tokens from `pool` given a total budget of `cap`.
+fn lease_from(pool: &AtomicUsize, cap: usize, want: usize) -> Lease {
+    if want == 0 {
+        return Lease { granted: 0 };
+    }
+    let spawnable = cap.saturating_sub(1);
+    loop {
+        let used = pool.load(Ordering::SeqCst);
+        let avail = spawnable.saturating_sub(used);
+        let grant = want.min(avail);
+        if grant == 0 {
+            return Lease { granted: 0 };
+        }
+        if pool
+            .compare_exchange(used, used + grant, Ordering::SeqCst, Ordering::SeqCst)
+            .is_ok()
+        {
+            return Lease { granted: grant };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ledger_clamps_and_returns() {
+        let pool = AtomicUsize::new(0);
+        // budget 4 => 3 spawnable extras beyond the caller
+        let a = lease_from(&pool, 4, 2);
+        assert_eq!(a.granted(), 2);
+        let b = lease_from(&pool, 4, 2);
+        assert_eq!(b.granted(), 1, "only one token left");
+        let c = lease_from(&pool, 4, 5);
+        assert_eq!(c.granted(), 0, "pool exhausted degrades to serial");
+        drop(a);
+        assert_eq!(pool.load(Ordering::SeqCst), 1);
+        let d = lease_from(&pool, 4, 8);
+        assert_eq!(d.granted(), 2, "returned tokens are reusable");
+        drop(b);
+        drop(c);
+        drop(d);
+        assert_eq!(pool.load(Ordering::SeqCst), 0, "all tokens returned");
+    }
+
+    #[test]
+    fn sweep_times_shards_respects_budget() {
+        // the composition rule as pure ledger math: a sweep leasing T
+        // workers, each cell then leasing S-1 shard extras, never exceeds
+        // the cap in total live compute threads (caller + extras).
+        let pool = AtomicUsize::new(0);
+        let cap = 8;
+        let sweep = lease_from(&pool, cap, 4); // 4 sweep workers
+        assert_eq!(sweep.granted(), 4);
+        let mut shard_leases = Vec::new();
+        for _ in 0..4 {
+            // each sweep worker asks for 4-way sharding (3 extras)
+            shard_leases.push(lease_from(&pool, cap, 3));
+        }
+        let extras: usize =
+            sweep.granted() + shard_leases.iter().map(|l| l.granted()).sum::<usize>();
+        assert!(1 + extras <= cap, "live threads {} exceed cap {cap}", 1 + extras);
+        // and the pool really drained: later cells got fewer extras
+        assert!(shard_leases.iter().any(|l| l.granted() < 3));
+    }
+
+    #[test]
+    fn zero_want_is_free() {
+        let pool = AtomicUsize::new(0);
+        let l = lease_from(&pool, 1, 0);
+        assert_eq!(l.granted(), 0);
+        // budget 1 => nothing spawnable, ever
+        let l2 = lease_from(&pool, 1, 9);
+        assert_eq!(l2.granted(), 0);
+    }
+
+    #[test]
+    fn budget_is_at_least_one() {
+        assert!(budget() >= 1);
+    }
+}

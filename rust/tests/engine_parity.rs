@@ -454,6 +454,123 @@ fn cfg_label(r: &RunResult) -> &str {
     &r.curve.label
 }
 
+// ---------------------------------------------------------------------------
+// Sharded executor parity (DESIGN.md §13): partitioning the node universe
+// into per-shard row ranges with cross-shard delivery lanes is a pure
+// execution-strategy change — every run must be bit-for-bit identical to the
+// single-queue path, for any shard count.
+
+fn run_sharded(cfg: &ProtocolConfig, ds: &golf::data::Dataset, shards: usize) -> RunResult {
+    let mut cfg = cfg.clone();
+    cfg.shards = shards;
+    run(cfg, ds)
+}
+
+/// shards >= 2 must reproduce shards = 1 exactly on every Table-I dataset
+/// and CREATEMODEL variant.
+#[test]
+fn sharded_bitwise_equals_single_all_datasets_and_variants() {
+    let sets = golf::experiments::datasets(81, 0.01);
+    for (di, e) in sets.iter().enumerate() {
+        for (vi, variant) in [Variant::Rw, Variant::Mu, Variant::Um].iter().enumerate() {
+            let mut cfg = ProtocolConfig::paper_default(8);
+            cfg.variant = *variant;
+            cfg.eval.n_peers = 8;
+            cfg.eval.voting = true;
+            cfg.eval.similarity = true;
+            cfg.seed = 81;
+            let single = run_sharded(&cfg, &e.ds, 1);
+            // rotate the shard count so the suite covers 2, 3 and 4 without
+            // tripling its wall-clock
+            let k = 2 + (di + vi) % 3;
+            let sharded = run_sharded(&cfg, &e.ds, k);
+            assert_runs_identical(
+                &single,
+                &sharded,
+                &format!("{} {:?} shards={k}", e.ds.name, variant),
+            );
+        }
+    }
+}
+
+/// The partition survives the paper's extreme failure scenario: churn,
+/// drops, and long delays all cross shard boundaries.
+#[test]
+fn sharded_bitwise_equals_single_under_extreme_failures() {
+    let ds = urls_like(82, Scale(0.02));
+    let mut cfg = ProtocolConfig::paper_default(20).with_extreme_failures();
+    cfg.eval.n_peers = 12;
+    cfg.seed = 82;
+    let single = run_sharded(&cfg, &ds, 1);
+    for k in [2, 4] {
+        let sharded = run_sharded(&cfg, &ds, k);
+        assert_runs_identical(&single, &sharded, &format!("extreme failures shards={k}"));
+    }
+}
+
+/// Scripted scenario timelines (drift, partitions, leaves, delay changes)
+/// anchor at tick barriers, which every shard observes in lockstep.
+#[test]
+fn sharded_scenario_timeline_parity() {
+    use golf::scenario::{
+        DelaySpec, PartitionSpec, Phase, PointAction, PointEvent, Scenario,
+    };
+    let ds = urls_like(83, Scale(0.02));
+    let mut scn = Scenario::empty("sharded-timeline");
+    scn.drop = Some(0.2);
+    scn.phases.push(Phase {
+        name: "split".into(),
+        from: 4,
+        to: 12,
+        drop: None,
+        delay: Some(DelaySpec::Uniform(0.5, 3.0)),
+        partition: Some(PartitionSpec::Halves),
+        leave: Some(0.2),
+    });
+    scn.events.push(PointEvent { name: "invert".into(), at: 16, action: PointAction::Drift });
+    scn.validate(ds.n_train(), 24).unwrap();
+    let mut cfg = ProtocolConfig::paper_default(24);
+    cfg.eval.n_peers = 10;
+    cfg.seed = 83;
+    cfg.scenario = Some(scn);
+    let single = run_sharded(&cfg, &ds, 1);
+    assert!(single.stats.messages_blocked > 0, "partition must engage");
+    let sharded = run_sharded(&cfg, &ds, 3);
+    assert_runs_identical(&single, &sharded, "scenario timeline shards=3");
+}
+
+/// Determinism across shard counts themselves: 2, 3 and 4 shards all agree,
+/// so results never encode the partition geometry.
+#[test]
+fn shard_count_does_not_change_results() {
+    let ds = spambase_like(84, Scale(0.02));
+    let mut cfg = ProtocolConfig::paper_default(10);
+    cfg.variant = Variant::Um;
+    cfg.eval.n_peers = 8;
+    cfg.seed = 84;
+    let two = run_sharded(&cfg, &ds, 2);
+    let three = run_sharded(&cfg, &ds, 3);
+    let four = run_sharded(&cfg, &ds, 4);
+    assert_runs_identical(&two, &three, "2 vs 3 shards");
+    assert_runs_identical(&two, &four, "2 vs 4 shards");
+}
+
+/// With the process-wide thread ledger drained, a sharded run degrades to
+/// serial shard multiplexing on the calling thread — and must still produce
+/// the same bits (the worker count is pure execution strategy too).
+#[test]
+fn sharded_run_identical_when_thread_budget_drained() {
+    let ds = reuters_like(85, Scale(0.02));
+    let mut cfg = ProtocolConfig::paper_default(8);
+    cfg.eval.n_peers = 8;
+    cfg.seed = 85;
+    let threaded = run_sharded(&cfg, &ds, 4);
+    let hold = golf::util::threads::lease(usize::MAX / 2);
+    let serial = run_sharded(&cfg, &ds, 4);
+    drop(hold);
+    assert_runs_identical(&threaded, &serial, "drained budget vs threaded");
+}
+
 #[test]
 fn cli_backend_batched_pjrt_runs() {
     if pjrt().is_none() {

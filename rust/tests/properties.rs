@@ -315,6 +315,67 @@ fn prop_event_queue_fifo_tie_breaking() {
 }
 
 #[test]
+fn prop_keyed_queue_pop_order_independent_of_arrival_order() {
+    // Cross-shard delivery correctness (DESIGN.md §13) rests on this: every
+    // event carries a globally unique (time, class, src, seq) key, so the
+    // pop order of a KeyedQueue is a pure function of the key *set* — the
+    // order in which delivery lanes happened to hand envelopes over (any
+    // permutation) cannot change what the shard processes next.
+    use golf::sim::event::{EventKey, KeyedQueue};
+    forall(
+        114,
+        80,
+        |rng| {
+            let n = 1 + rng.below_usize(120);
+            let keys: Vec<EventKey> = (0..n)
+                .map(|i| {
+                    // few distinct times and sources -> dense key collisions
+                    // everywhere except the uniqueness-carrying seq
+                    if rng.chance(0.5) {
+                        EventKey::deliver(rng.below(6), rng.below_usize(4), i as u64)
+                    } else {
+                        EventKey::tick(rng.below(6), i)
+                    }
+                })
+                .collect();
+            // a second, independently shuffled arrival order of the same set
+            let perm = rng.sample_indices(keys.len(), keys.len());
+            (keys, perm)
+        },
+        |(keys, perm)| {
+            let mut q1 = KeyedQueue::new();
+            for (i, k) in keys.iter().enumerate() {
+                q1.push(*k, i);
+            }
+            let mut q2 = KeyedQueue::new();
+            for &i in perm {
+                q2.push(keys[i], i);
+            }
+            let mut prev: Option<EventKey> = None;
+            loop {
+                match (q1.pop(), q2.pop()) {
+                    (None, None) => return Ok(()),
+                    (Some((ka, ea)), Some((kb, eb))) => {
+                        if ka != kb || ea != eb {
+                            return Err(format!(
+                                "pop diverged: {ka:?}/{ea} vs {kb:?}/{eb}"
+                            ));
+                        }
+                        if let Some(p) = prev {
+                            if !(p < ka) {
+                                return Err(format!("non-increasing keys {p:?} -> {ka:?}"));
+                            }
+                        }
+                        prev = Some(ka);
+                    }
+                    _ => return Err("queues drained at different lengths".into()),
+                }
+            }
+        },
+    );
+}
+
+#[test]
 fn prop_scale_floor_rematerialization_preserves_predictions() {
     // Repeated lazy down-scaling drives the internal scale through the
     // SCALE_FLOOR re-materialization (linear.rs).  The effective weights —
