@@ -6,7 +6,7 @@ Usage: check_bench_regression.py BASELINE.json FRESH.json [--tolerance 0.20]
 Every BENCH file is a flat ``{"bench": ..., "unit": ..., "results": {key: value}}``
 object (see rust/benches/perf.rs).  Keys are compared only when present in
 both files; higher is better for throughput-style keys, lower is better for
-``*_walltime_s`` keys.  A relative regression beyond the tolerance on any
+``*_walltime_s`` and ``*_peak_rss_mib`` keys.  A relative regression beyond the tolerance on any
 shared key fails the check (exit 1).  A missing or unreadable baseline is a
 warn-pass (exit 0): the first run on a new machine commits the baseline
 instead of failing.
@@ -60,7 +60,7 @@ def main(argv):
         b, f = base[k], fresh[k]
         if b <= 0:
             continue
-        lower_is_better = k.endswith("_walltime_s")
+        lower_is_better = k.endswith("_walltime_s") or k.endswith("_peak_rss_mib")
         # regression = fresh worse than baseline by more than tol
         ratio = (f / b) if lower_is_better else (b / f if f > 0 else float("inf"))
         worse = ratio - 1.0

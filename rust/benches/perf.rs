@@ -540,5 +540,46 @@ fn main() {
         json.push(("scale100k_peak_rss_mib".into(), peak_rss_mib()));
     }
 
+    // ---- the 1M-node target (DESIGN.md §14): one full-universe run over
+    // the memory hot path — pooled message buffers, packed liveness bitsets,
+    // chunked micro-batch kernels.  Peak RSS is the headline number: the
+    // run must fit workstation RAM, not just finish.  Named its own section
+    // so CI's cheap re-runs can exclude it ------------------------------
+    if section_enabled("scale1m") {
+        println!("\n--- node-count scaling: 1M-node event-driven run");
+        let ds = scaling_dataset(7, 1_000_000);
+        let shards = golf::util::threads::budget().clamp(2, 8);
+        let t0 = std::time::Instant::now();
+        let mut cfg = ProtocolConfig::paper_default(3);
+        cfg.eval.n_peers = 0;
+        cfg.eval.at_cycles = vec![3];
+        cfg.seed = 7;
+        cfg.shards = shards;
+        let res = run(cfg, &ds);
+        let wall = t0.elapsed().as_secs_f64();
+        let requested = res.stats.pool_hits + res.stats.pool_misses;
+        let hit_rate = res.stats.pool_hits as f64 / (requested.max(1)) as f64;
+        // NB: VmHWM is a process-wide high-water mark; when earlier sections
+        // ran in the same invocation it includes their footprint too.  Run
+        // GOLF_BENCH_SECTIONS=scale1m for a clean measurement.
+        println!(
+            "    -> shards={shards}: {:.1}s wall, {} messages sent, \
+             pool hit rate {:.3}, peak RSS {:.0} MiB",
+            wall,
+            res.stats.messages_sent,
+            hit_rate,
+            peak_rss_mib()
+        );
+        json.push(("scale1m_walltime_s".into(), wall));
+        json.push((
+            "scale1m_msgs_per_s".into(),
+            res.stats.messages_sent as f64 / wall.max(1e-12),
+        ));
+        // percent: write_bench_json keeps one decimal, so a 0..1 ratio
+        // would quantize to nothing useful
+        json.push(("scale1m_pool_hit_rate_pct".into(), hit_rate * 100.0));
+        json.push(("scale1m_peak_rss_mib".into(), peak_rss_mib()));
+    }
+
     write_bench_json("protocol", "delivered_messages_per_s", &json);
 }

@@ -112,8 +112,10 @@ pub fn run_deployment_observed(
     // ---- compiled scenario timeline (one definition shared by the node
     // threads, the evaluation loop, and any matched simulator run)
     let compiled = cfg.scenario.as_ref().map(|s| {
-        CompiledScenario::compile(s, n, SIM_DELTA, cfg.cycles, cfg.seed, cfg.network)
-            .expect("scenario must be validated before the deployment runs")
+        std::sync::Arc::new(
+            CompiledScenario::compile(s, n, SIM_DELTA, cfg.cycles, cfg.seed, cfg.network)
+                .expect("scenario must be validated before the deployment runs"),
+        )
     });
     let initial = compiled.as_ref().map_or(n, |c| c.initial);
 
@@ -123,7 +125,7 @@ pub fn run_deployment_observed(
     let horizon = SIM_DELTA * (cfg.cycles + 1);
     let churn = resolve_churn_schedule(
         cfg.churn.as_ref(),
-        compiled.as_ref(),
+        compiled.as_deref(),
         n,
         SIM_DELTA,
         horizon,
@@ -170,7 +172,7 @@ pub fn run_deployment_observed(
 
         // ---- evaluation loop on the coordinating thread
         let curve =
-            eval_loop(cfg, data, &eval_peers, compiled.as_ref(), &shared, start, &mut *obs);
+            eval_loop(cfg, data, &eval_peers, compiled.as_deref(), &shared, start, &mut *obs);
 
         // the run length is cfg.cycles regardless of the measurement grid
         // (a sparse eval_at_cycles must not truncate the deployment)
@@ -192,7 +194,7 @@ pub fn run_deployment_observed(
     // labels of the concept in force at the horizon
     let members = compiled.as_ref().map_or(n, |c| c.final_membership().min(n));
     let flipped;
-    let final_y: &[f32] = if drift_sign_at(compiled.as_ref(), horizon) < 0.0 {
+    let final_y: &[f32] = if drift_sign_at(compiled.as_deref(), horizon) < 0.0 {
         flipped = crate::eval::flipped_labels(&data.test_y);
         &flipped
     } else {

@@ -26,6 +26,7 @@ use crate::scenario::driver::{
     resolve_churn_schedule, CompiledScenario, Mutation, ScenarioDriver,
 };
 use crate::sim::network::{Fate, Network};
+use crate::util::bitset::Bitset;
 use crate::util::rng::Rng;
 use anyhow::Result;
 use std::collections::HashMap;
@@ -50,8 +51,8 @@ pub struct BatchedSim<'a, B: Backend> {
     network: Network,
     /// compiled scenario timeline cursor, if any
     scn: Option<ScenarioDriver>,
-    /// scenario mass-leave overlay (ANDed with the churn schedule)
-    forced_off: Vec<bool>,
+    /// scenario mass-leave overlay (ANDed with the churn schedule), packed
+    forced_off: Bitset,
     /// +1.0 normally; -1.0 after an odd number of concept-drift events
     drift_sign: f32,
     flipped_test_y: Option<Vec<f32>>,
@@ -79,8 +80,8 @@ impl<'a, B: Backend> BatchedSim<'a, B> {
             store: ModelStore::new(n0, d),
             dense_x,
             network: Network::new(cfg.network),
-            scn: compiled.map(ScenarioDriver::new),
-            forced_off: vec![false; n_univ],
+            scn: compiled.map(|c| ScenarioDriver::new(std::sync::Arc::new(c))),
+            forced_off: Bitset::new(n_univ),
             drift_sign: 1.0,
             flipped_test_y: None,
             rng,
@@ -108,12 +109,12 @@ impl<'a, B: Backend> BatchedSim<'a, B> {
                 Mutation::Drift => self.drift_sign = -self.drift_sign,
                 Mutation::ForceOffline(ids) => {
                     for i in ids {
-                        self.forced_off[i] = true;
+                        self.forced_off.set(i);
                     }
                 }
                 Mutation::Restore(ids) => {
                     for i in ids {
-                        self.forced_off[i] = false;
+                        self.forced_off.clear(i);
                     }
                 }
                 Mutation::Grow(k) => {
@@ -184,17 +185,15 @@ impl<'a, B: Backend> BatchedSim<'a, B> {
             // member (flash crowds grow the store), up per the churn
             // schedule, and not forced offline by a scenario leave wave
             let n_active = self.store.n();
-            let online: Vec<bool> = (0..n_univ)
-                .map(|i| {
-                    i < n_active
-                        && churn.as_ref().map_or(true, |c| c.is_online(i, now))
-                        && !self.forced_off[i]
-                })
-                .collect();
+            let online = Bitset::from_fn(n_univ, |i| {
+                i < n_active
+                    && churn.as_ref().map_or(true, |c| c.is_online(i, now))
+                    && !self.forced_off.test(i)
+            });
 
             // -------- sends (synchronized at the cycle boundary)
             for node in 0..n_active {
-                if !online[node] {
+                if !online.test(node) {
                     continue;
                 }
                 let Some(dst) = sampler.select(node, now, &online, &mut self.rng) else {
@@ -250,7 +249,7 @@ impl<'a, B: Backend> BatchedSim<'a, B> {
 
             // offline receivers lose their messages
             due.retain(|m| {
-                if online[m.dst] {
+                if online.test(m.dst) {
                     true
                 } else {
                     self.stats.messages_lost_offline += 1;

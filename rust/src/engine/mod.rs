@@ -32,6 +32,19 @@ pub const MAX_BATCH_ROWS: usize = 1024;
 /// Test-set rows per batched-evaluation chunk (matches the eval artifact
 /// bucket).
 pub const EVAL_CHUNK: usize = 1024;
+
+/// Minimum rows per chunk when the native backend splits a `StepBatch`
+/// across leased threads (DESIGN.md §14) — below this the spawn overhead
+/// dominates the row math.  Rows are independent, so chunked execution is
+/// bit-for-bit the serial loop; batches smaller than two chunks stay
+/// serial.
+pub const PAR_ROWS_MIN: usize = 128;
+
+/// Minimum total work (`b * d`) before the native backend considers
+/// parallel chunking at all: a full 1024-row batch of d=10 paper models is
+/// ~10k mul-adds — far cheaper than a thread spawn — while a d=1000 batch
+/// is worth splitting.
+pub const PAR_MIN_WORK: usize = 1 << 17;
 /// Models per batched-evaluation call (matches the eval artifact bucket).
 pub const EVAL_MODELS: usize = 128;
 

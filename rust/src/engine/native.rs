@@ -11,9 +11,10 @@
 //!   re-materialization) and the example touches only non-zero coordinates.
 
 use crate::data::dataset::{sparse_dot, Examples};
-use crate::engine::{Backend, LearnerKind, StepBatch, StepOp};
+use crate::engine::{Backend, LearnerKind, StepBatch, StepOp, PAR_MIN_WORK, PAR_ROWS_MIN};
 use crate::gossip::create_model::Variant;
 use crate::learning::linear::{add_scaled_sparse_in_place, scale_in_place};
+use crate::util::threads;
 use anyhow::Result;
 
 #[derive(Debug, Default)]
@@ -155,58 +156,230 @@ impl NativeBackend {
     /// [`Backend::step`]): per row, only the scale, the counter, and the
     /// example's non-zero coordinates are touched for RW; the merge variants
     /// additionally pay one O(d) averaging pass (models are dense, so
-    /// averaging two of them is inherently O(d)).
+    /// averaging two of them is inherently O(d)).  Large batches split into
+    /// contiguous row chunks on leased threads — rows are independent, so
+    /// the result is bit-for-bit the serial loop's.
     fn step_sparse(&mut self, op: &StepOp, batch: &mut StepBatch) -> Result<()> {
         let (b, d) = (batch.b, batch.d);
-        for i in 0..b {
-            let r = i * d..(i + 1) * d;
-            let (lo, hi) = (batch.x_indptr[i], batch.x_indptr[i + 1]);
-            let idx = &batch.x_indices[lo..hi];
-            let val = &batch.x_values[lo..hi];
-            let y = batch.y[i];
-            match op.variant {
-                Variant::Rw => {
-                    let w = &mut batch.w1[r];
-                    let mut s = batch.s1[i];
-                    let mut t = batch.t1[i];
-                    Self::update_row_sparse(op, w, &mut s, idx, val, y, &mut t);
-                    batch.out_s[i] = s;
-                    batch.out_t[i] = t;
+        let StepBatch {
+            w1,
+            w2,
+            s1,
+            s2,
+            t1,
+            t2,
+            y,
+            out_s,
+            out_t,
+            x_indptr,
+            x_indices,
+            x_values,
+            ..
+        } = batch;
+        let (s1, s2, t1, t2, y) = (&s1[..], &s2[..], &t1[..], &t2[..], &y[..]);
+        let (indptr, indices, values) = (&x_indptr[..], &x_indices[..], &x_values[..]);
+        let want = par_extra_chunks(b, d);
+        let lease = (want > 0).then(|| threads::lease(want));
+        let workers = 1 + lease.as_ref().map_or(0, |l| l.granted());
+        if workers <= 1 {
+            // serial (the common path, and the drained-budget degradation)
+            step_rows_sparse(op, d, w1, w2, s1, s2, t1, t2, y, indptr, indices, values, out_s, out_t);
+            return Ok(());
+        }
+        let rows_per = b.div_ceil(workers);
+        let mut chunks: Vec<(usize, &mut [f32], &mut [f32], &mut [f32], &mut [f32])> = w1
+            .chunks_mut(rows_per * d)
+            .zip(w2.chunks_mut(rows_per * d))
+            .zip(out_s.chunks_mut(rows_per).zip(out_t.chunks_mut(rows_per)))
+            .enumerate()
+            .map(|(k, ((w1c, w2c), (osc, otc)))| (k * rows_per, w1c, w2c, osc, otc))
+            .collect();
+        std::thread::scope(|scope| {
+            let head = chunks.remove(0);
+            for (row0, w1c, w2c, osc, otc) in chunks {
+                scope.spawn(move || {
+                    let rows = otc.len();
+                    step_rows_sparse(
+                        op,
+                        d,
+                        w1c,
+                        w2c,
+                        &s1[row0..row0 + rows],
+                        &s2[row0..row0 + rows],
+                        &t1[row0..row0 + rows],
+                        &t2[row0..row0 + rows],
+                        &y[row0..row0 + rows],
+                        // indptr offsets are absolute into the full payload
+                        &indptr[row0..row0 + rows + 1],
+                        indices,
+                        values,
+                        osc,
+                        otc,
+                    );
+                });
+            }
+            let (row0, w1c, w2c, osc, otc) = head;
+            let rows = otc.len();
+            step_rows_sparse(
+                op,
+                d,
+                w1c,
+                w2c,
+                &s1[row0..row0 + rows],
+                &s2[row0..row0 + rows],
+                &t1[row0..row0 + rows],
+                &t2[row0..row0 + rows],
+                &y[row0..row0 + rows],
+                &indptr[row0..row0 + rows + 1],
+                indices,
+                values,
+                osc,
+                otc,
+            );
+        });
+        Ok(())
+    }
+}
+
+/// Extra threads worth leasing for a `b x d` step (0 = stay serial): the
+/// batch must split into at least two [`PAR_ROWS_MIN`]-row chunks and carry
+/// [`PAR_MIN_WORK`] total coordinates before the spawn cost can pay off.
+fn par_extra_chunks(b: usize, d: usize) -> usize {
+    if b >= 2 * PAR_ROWS_MIN && b.saturating_mul(d) >= PAR_MIN_WORK {
+        b / PAR_ROWS_MIN - 1
+    } else {
+        0
+    }
+}
+
+/// One contiguous chunk of dense `StepBatch` rows (`y.len()` of them).
+/// Free function over disjoint slices so chunks can run on leased threads;
+/// `u1`/`u2` are caller-provided UM scratch, one pair per thread.  The
+/// per-row math is exactly the serial loop's, so chunked == serial
+/// bit-for-bit.
+#[allow(clippy::too_many_arguments)]
+fn step_rows_dense(
+    op: &StepOp,
+    d: usize,
+    w1: &[f32],
+    t1: &[f32],
+    w2: &[f32],
+    t2: &[f32],
+    x: &[f32],
+    y: &[f32],
+    out_w: &mut [f32],
+    out_t: &mut [f32],
+    u1: &mut Vec<f32>,
+    u2: &mut Vec<f32>,
+) {
+    for i in 0..y.len() {
+        let r = i * d..(i + 1) * d;
+        let w1r = &w1[r.clone()];
+        let w2r = &w2[r.clone()];
+        let xr = &x[r.clone()];
+        let yi = y[i];
+        let out_wr = &mut out_w[r];
+        let out_ti = &mut out_t[i];
+        match op.variant {
+            Variant::Rw => {
+                out_wr.copy_from_slice(w1r);
+                *out_ti = t1[i];
+                NativeBackend::update_row(op, out_wr, xr, yi, out_ti);
+            }
+            Variant::Mu => {
+                for (o, (&a, &bb)) in out_wr.iter_mut().zip(w1r.iter().zip(w2r)) {
+                    *o = 0.5 * (a + bb);
                 }
-                Variant::Mu => {
-                    // merge in place: w1 <- (s1*w1 + s2*w2)/2, then update
-                    let w = &mut batch.w1[r.clone()];
-                    let w2 = &batch.w2[r];
-                    let (s1, s2) = (batch.s1[i], batch.s2[i]);
-                    for (a, &bb) in w.iter_mut().zip(w2) {
-                        *a = 0.5 * (s1 * *a + s2 * bb);
-                    }
-                    let mut s = 1.0f32;
-                    let mut t = batch.t1[i].max(batch.t2[i]);
-                    Self::update_row_sparse(op, w, &mut s, idx, val, y, &mut t);
-                    batch.out_s[i] = s;
-                    batch.out_t[i] = t;
+                *out_ti = t1[i].max(t2[i]);
+                NativeBackend::update_row(op, out_wr, xr, yi, out_ti);
+            }
+            Variant::Um => {
+                // update both with the same local example, then average
+                u1.clear();
+                u1.extend_from_slice(w1r);
+                u2.clear();
+                u2.extend_from_slice(w2r);
+                let mut t1i = t1[i];
+                let mut t2i = t2[i];
+                NativeBackend::update_row(op, u1, xr, yi, &mut t1i);
+                NativeBackend::update_row(op, u2, xr, yi, &mut t2i);
+                for (o, (&a, &bb)) in out_wr.iter_mut().zip(u1.iter().zip(u2.iter())) {
+                    *o = 0.5 * (a + bb);
                 }
-                Variant::Um => {
-                    // update both rows in place with the same local example,
-                    // then average into w1 (w2 is scratch per the contract)
-                    let w1 = &mut batch.w1[r.clone()];
-                    let mut s1 = batch.s1[i];
-                    let mut t1 = batch.t1[i];
-                    Self::update_row_sparse(op, w1, &mut s1, idx, val, y, &mut t1);
-                    let w2 = &mut batch.w2[r];
-                    let mut s2 = batch.s2[i];
-                    let mut t2 = batch.t2[i];
-                    Self::update_row_sparse(op, w2, &mut s2, idx, val, y, &mut t2);
-                    for (a, &bb) in w1.iter_mut().zip(w2.iter()) {
-                        *a = 0.5 * (s1 * *a + s2 * bb);
-                    }
-                    batch.out_s[i] = 1.0;
-                    batch.out_t[i] = t1.max(t2);
-                }
+                *out_ti = t1i.max(t2i);
             }
         }
-        Ok(())
+    }
+}
+
+/// One contiguous chunk of CSR-staged `StepBatch` rows.  `indptr` is the
+/// chunk's `rows + 1` window of **absolute** offsets into the full
+/// `indices`/`values` payload slices (shared read-only across chunks);
+/// `w1`/`w2`/`out_s`/`out_t` are the chunk's disjoint mutable slices.
+#[allow(clippy::too_many_arguments)]
+fn step_rows_sparse(
+    op: &StepOp,
+    d: usize,
+    w1: &mut [f32],
+    w2: &mut [f32],
+    s1: &[f32],
+    s2: &[f32],
+    t1: &[f32],
+    t2: &[f32],
+    y: &[f32],
+    indptr: &[usize],
+    indices: &[u32],
+    values: &[f32],
+    out_s: &mut [f32],
+    out_t: &mut [f32],
+) {
+    for i in 0..y.len() {
+        let r = i * d..(i + 1) * d;
+        let (lo, hi) = (indptr[i], indptr[i + 1]);
+        let idx = &indices[lo..hi];
+        let val = &values[lo..hi];
+        let yi = y[i];
+        match op.variant {
+            Variant::Rw => {
+                let w = &mut w1[r];
+                let mut s = s1[i];
+                let mut t = t1[i];
+                NativeBackend::update_row_sparse(op, w, &mut s, idx, val, yi, &mut t);
+                out_s[i] = s;
+                out_t[i] = t;
+            }
+            Variant::Mu => {
+                // merge in place: w1 <- (s1*w1 + s2*w2)/2, then update
+                let w = &mut w1[r.clone()];
+                let w2r = &w2[r];
+                let (s1i, s2i) = (s1[i], s2[i]);
+                for (a, &bb) in w.iter_mut().zip(w2r) {
+                    *a = 0.5 * (s1i * *a + s2i * bb);
+                }
+                let mut s = 1.0f32;
+                let mut t = t1[i].max(t2[i]);
+                NativeBackend::update_row_sparse(op, w, &mut s, idx, val, yi, &mut t);
+                out_s[i] = s;
+                out_t[i] = t;
+            }
+            Variant::Um => {
+                // update both rows in place with the same local example,
+                // then average into w1 (w2 is scratch per the contract)
+                let w1r = &mut w1[r.clone()];
+                let mut s1i = s1[i];
+                let mut t1i = t1[i];
+                NativeBackend::update_row_sparse(op, w1r, &mut s1i, idx, val, yi, &mut t1i);
+                let w2r = &mut w2[r];
+                let mut s2i = s2[i];
+                let mut t2i = t2[i];
+                NativeBackend::update_row_sparse(op, w2r, &mut s2i, idx, val, yi, &mut t2i);
+                for (a, &bb) in w1r.iter_mut().zip(w2r.iter()) {
+                    *a = 0.5 * (s1i * *a + s2i * bb);
+                }
+                out_s[i] = 1.0;
+                out_t[i] = t1i.max(t2i);
+            }
+        }
     }
 }
 
@@ -229,46 +402,63 @@ impl Backend for NativeBackend {
             return self.step_sparse(op, batch);
         }
         let (b, d) = (batch.b, batch.d);
-        for i in 0..b {
-            let r = i * d..(i + 1) * d;
-            let w1 = &batch.w1[r.clone()];
-            let w2 = &batch.w2[r.clone()];
-            let x = &batch.x[r.clone()];
-            let y = batch.y[i];
-            let out_w = &mut batch.out_w[r];
-            let out_t = &mut batch.out_t[i];
-            match op.variant {
-                Variant::Rw => {
-                    out_w.copy_from_slice(w1);
-                    *out_t = batch.t1[i];
-                    Self::update_row(op, out_w, x, y, out_t);
-                }
-                Variant::Mu => {
-                    for (o, (&a, &bb)) in out_w.iter_mut().zip(w1.iter().zip(w2)) {
-                        *o = 0.5 * (a + bb);
-                    }
-                    *out_t = batch.t1[i].max(batch.t2[i]);
-                    Self::update_row(op, out_w, x, y, out_t);
-                }
-                Variant::Um => {
-                    // update both with the same local example, then average
-                    self.u1.clear();
-                    self.u1.extend_from_slice(w1);
-                    self.u2.clear();
-                    self.u2.extend_from_slice(w2);
-                    let mut t1 = batch.t1[i];
-                    let mut t2 = batch.t2[i];
-                    Self::update_row(op, &mut self.u1, x, y, &mut t1);
-                    Self::update_row(op, &mut self.u2, x, y, &mut t2);
-                    for (o, (&a, &bb)) in
-                        out_w.iter_mut().zip(self.u1.iter().zip(&self.u2))
-                    {
-                        *o = 0.5 * (a + bb);
-                    }
-                    *out_t = t1.max(t2);
-                }
-            }
+        let StepBatch { w1, w2, x, y, t1, t2, out_w, out_t, .. } = batch;
+        let (w1, w2, x, y, t1, t2) = (&w1[..], &w2[..], &x[..], &y[..], &t1[..], &t2[..]);
+        let want = par_extra_chunks(b, d);
+        let lease = (want > 0).then(|| threads::lease(want));
+        let workers = 1 + lease.as_ref().map_or(0, |l| l.granted());
+        if workers <= 1 {
+            // serial (the common path, and the drained-budget degradation)
+            step_rows_dense(op, d, w1, t1, w2, t2, x, y, out_w, out_t, &mut self.u1, &mut self.u2);
+            return Ok(());
         }
+        let rows_per = b.div_ceil(workers);
+        let mut chunks: Vec<(usize, &mut [f32], &mut [f32])> = out_w
+            .chunks_mut(rows_per * d)
+            .zip(out_t.chunks_mut(rows_per))
+            .enumerate()
+            .map(|(k, (owc, otc))| (k * rows_per, owc, otc))
+            .collect();
+        std::thread::scope(|scope| {
+            let head = chunks.remove(0);
+            for (row0, owc, otc) in chunks {
+                scope.spawn(move || {
+                    let rows = otc.len();
+                    // spawned chunks carry their own UM scratch pair
+                    let (mut u1, mut u2) = (Vec::new(), Vec::new());
+                    step_rows_dense(
+                        op,
+                        d,
+                        &w1[row0 * d..(row0 + rows) * d],
+                        &t1[row0..row0 + rows],
+                        &w2[row0 * d..(row0 + rows) * d],
+                        &t2[row0..row0 + rows],
+                        &x[row0 * d..(row0 + rows) * d],
+                        &y[row0..row0 + rows],
+                        owc,
+                        otc,
+                        &mut u1,
+                        &mut u2,
+                    );
+                });
+            }
+            let (row0, owc, otc) = head;
+            let rows = otc.len();
+            step_rows_dense(
+                op,
+                d,
+                &w1[row0 * d..(row0 + rows) * d],
+                &t1[row0..row0 + rows],
+                &w2[row0 * d..(row0 + rows) * d],
+                &t2[row0..row0 + rows],
+                &x[row0 * d..(row0 + rows) * d],
+                &y[row0..row0 + rows],
+                owc,
+                otc,
+                &mut self.u1,
+                &mut self.u2,
+            );
+        });
         Ok(())
     }
 

@@ -9,7 +9,11 @@ use crate::sim::event::NodeId;
 #[derive(Clone, Debug)]
 pub struct ModelMsg {
     pub src: NodeId,
-    /// model weights; the semantically transmitted model is `scale * w`
+    /// model weights; the semantically transmitted model is `scale * w`.
+    /// In the sharded engine this buffer is recycled through the sending
+    /// shard's [`crate::util::pool::BufPool`] once the receiver has consumed
+    /// the message (DESIGN.md §14) — every fill path overwrites all `d`
+    /// elements, so recycled contents never leak
     pub w: Vec<f32>,
     /// lazy scale of `w` (1.0 on the dense execution path).  This is a
     /// simulator-internal compute representation — a real deployment sends

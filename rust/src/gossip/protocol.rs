@@ -176,6 +176,11 @@ pub struct ProtocolConfig {
     /// threads from [`crate::util::threads`] and requires the native
     /// backend.  Results are bit-for-bit independent of the shard count.
     pub shards: usize,
+    /// recycle message weight buffers through per-shard pools (DESIGN.md
+    /// §14).  Purely an allocator-level change: pooled and unpooled runs are
+    /// bit-for-bit identical (tests/engine_parity.rs); off = every send
+    /// allocates fresh, the pre-pool behavior kept for leak triage.
+    pub pool: bool,
 }
 
 impl ProtocolConfig {
@@ -199,6 +204,7 @@ impl ProtocolConfig {
             path: ExecPath::default(),
             scenario: None,
             shards: 1,
+            pool: true,
         }
     }
 
@@ -230,6 +236,14 @@ pub struct RunStats {
     /// kernels on a sparse-capable backend, the densify fallback otherwise;
     /// 0 on the dense path.  Exposes which way the dispatch resolved.
     pub sparse_rows: u64,
+    /// message weight buffers served from a shard's recycle pool.  Unlike
+    /// the counters above, the hit/miss split is NOT independent of the
+    /// shard count (recycling happens per shard) — only `hits + misses`
+    /// (= buffers requested) is; parity tests must not compare these.
+    pub pool_hits: u64,
+    /// message weight buffers that had to be freshly allocated (pool empty,
+    /// or pooling disabled).
+    pub pool_misses: u64,
 }
 
 /// Result of one simulated run.

@@ -33,6 +33,14 @@
 //! evaluation peers through the same chunked backend kernels (per-model
 //! counts are grouping-independent), and the coordinator reassembles the
 //! curve point in global peer order.
+//!
+//! Memory hot path (DESIGN.md §14): the three full-universe liveness
+//! replicas are packed [`Bitset`]s (1 bit/node instead of 1 byte), the
+//! compiled scenario is shared behind one `Arc` instead of deep-cloned per
+//! runner, and message weight buffers recycle through per-runner
+//! [`BufPool`]s — consumed `Envelope` payloads travel back to the sending
+//! shard's free-list over dedicated recycle lanes.  All of it is
+//! allocator-level only: pooled and unpooled runs are bit-for-bit identical.
 
 use crate::api::{Observer, RunEvent};
 use crate::data::dataset::{Dataset, Examples};
@@ -54,11 +62,14 @@ use crate::p2p::overlay::{PeerSampler, SamplerConfig};
 use crate::scenario::driver::{resolve_churn_schedule, CompiledScenario, Mutation, ScenarioDriver};
 use crate::sim::event::{EventKey, KeyedQueue, NodeId, Ticks};
 use crate::sim::network::{Fate, Network};
+use crate::util::bitset::Bitset;
+use crate::util::pool::BufPool;
 use crate::util::rng::{derive_stream, Rng};
 use crate::util::threads;
 use anyhow::{anyhow, bail, Result};
 use std::collections::{BTreeSet, HashMap};
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
 
 /// A cross-shard delivery in flight: the message plus the key material that
 /// fixes its position in the receiver's total order.
@@ -82,11 +93,14 @@ enum REvent {
 struct Shared<'a> {
     cfg: &'a ProtocolConfig,
     data: &'a Dataset,
-    compiled: Option<CompiledScenario>,
+    /// shared, not replicated: runners and the coordinator mirror hold Arc
+    /// clones (a ForceOffline wave at 1M nodes carries tens of thousands of
+    /// ids — deep-cloning it per shard used to dominate setup memory)
+    compiled: Option<Arc<CompiledScenario>>,
     /// sorted (time, node, joined) churn transitions within the horizon
     churn_events: Vec<(Ticks, NodeId, bool)>,
     /// churn liveness at tick 0, over the full universe
-    churn_online0: Vec<bool>,
+    churn_online0: Bitset,
     /// global evaluation peers, in measurement order
     eval_peers: Vec<NodeId>,
     /// sign-flipped test labels, precomputed iff the scenario can drift
@@ -136,10 +150,11 @@ struct Runner<'a, B: Backend> {
     caches: Vec<Option<ModelCache>>,
     last_restart: Vec<u64>,
     /// full-universe liveness replicas (the oracle sampler and send/receive
-    /// checks index arbitrary nodes)
-    online: Vec<bool>,
-    churn_online: Vec<bool>,
-    forced_off: Vec<bool>,
+    /// checks index arbitrary nodes) — packed 1 bit/node; at 1M nodes the
+    /// three replicas cost ~375 KiB per runner instead of ~3 MiB
+    online: Bitset,
+    churn_online: Bitset,
+    forced_off: Bitset,
     /// replicated membership counter (grows with scenario flash crowds)
     members: usize,
     scn: Option<ScenarioDriver>,
@@ -164,6 +179,15 @@ struct Runner<'a, B: Backend> {
     dense_x: Option<Vec<f32>>,
     inbox: Receiver<Envelope>,
     lanes: Vec<Sender<Envelope>>,
+    /// free-list of message weight buffers for this runner's sends
+    pool: BufPool,
+    /// consumed buffers coming home from other shards
+    recycle_rx: Receiver<Vec<f32>>,
+    recycle_lanes: Vec<Sender<Vec<f32>>>,
+    /// flush staging, persistent so a 1M-node run does not realloc the
+    /// delivery vectors every window
+    live: Vec<(NodeId, ModelMsg)>,
+    prev_in_flush: HashMap<NodeId, usize>,
 }
 
 impl<'a, B: Backend> Runner<'a, B> {
@@ -173,6 +197,8 @@ impl<'a, B: Backend> Runner<'a, B> {
         backend: B,
         inbox: Receiver<Envelope>,
         lanes: Vec<Sender<Envelope>>,
+        recycle_rx: Receiver<Vec<f32>>,
+        recycle_lanes: Vec<Sender<Vec<f32>>>,
     ) -> Self {
         let (lo, hi) = (sh.bounds[shard], sh.bounds[shard + 1]);
         let d = sh.data.d();
@@ -209,8 +235,9 @@ impl<'a, B: Backend> Runner<'a, B> {
             last_restart: vec![0; rows],
             online: sh.churn_online0.clone(),
             churn_online: sh.churn_online0.clone(),
-            forced_off: vec![false; sh.n_univ],
+            forced_off: Bitset::new(sh.n_univ),
             members: sh.members0,
+            // Arc clone: every runner reads the one compiled timeline
             scn: sh.compiled.clone().map(ScenarioDriver::new),
             drift_sign: 1.0,
             queue: KeyedQueue::new(),
@@ -235,6 +262,11 @@ impl<'a, B: Backend> Runner<'a, B> {
             dense_x,
             inbox,
             lanes,
+            pool: BufPool::new(sh.cfg.pool),
+            recycle_rx,
+            recycle_lanes,
+            live: Vec::new(),
+            prev_in_flush: HashMap::new(),
         };
         // synchronized start (Section IV): first tick after one jittered
         // period, drawn from each member node's own stream
@@ -262,8 +294,8 @@ impl<'a, B: Backend> Runner<'a, B> {
             while self.churn_cursor < ev.len() && ev[self.churn_cursor].0 <= t {
                 let (_, node, up) = ev[self.churn_cursor];
                 self.churn_cursor += 1;
-                self.churn_online[node] = up;
-                self.online[node] = up && !self.forced_off[node];
+                self.churn_online.assign(node, up);
+                self.online.assign(node, up && !self.forced_off.test(node));
             }
         }
         Ok(())
@@ -284,14 +316,14 @@ impl<'a, B: Backend> Runner<'a, B> {
                 Mutation::Drift => self.drift_sign = -self.drift_sign,
                 Mutation::ForceOffline(ids) => {
                     for i in ids {
-                        self.forced_off[i] = true;
-                        self.online[i] = false;
+                        self.forced_off.set(i);
+                        self.online.clear(i);
                     }
                 }
                 Mutation::Restore(ids) => {
                     for i in ids {
-                        self.forced_off[i] = false;
-                        self.online[i] = self.churn_online[i];
+                        self.forced_off.clear(i);
+                        self.online.assign(i, self.churn_online.test(i));
                     }
                 }
                 Mutation::Grow(k) => {
@@ -301,7 +333,8 @@ impl<'a, B: Backend> Runner<'a, B> {
                     self.sampler.grow_range(old, newn, self.sh.cfg.seed);
                     // liveness flags are full-universe replicas
                     for node in old..newn {
-                        self.online[node] = self.churn_online[node] && !self.forced_off[node];
+                        self.online
+                            .assign(node, self.churn_online.test(node) && !self.forced_off.test(node));
                     }
                     // arrivals in the own range enter the active loop on a
                     // fresh jittered period from their own streams
@@ -318,6 +351,10 @@ impl<'a, B: Backend> Runner<'a, B> {
     /// churn and scenario state to `start`, then process every queued event
     /// with time < `end` in keyed order.
     fn step_window(&mut self, start: Ticks, end: Ticks) -> Result<()> {
+        // buffers consumed by other shards come home before new sends
+        while let Ok(buf) = self.recycle_rx.try_recv() {
+            self.pool.put(buf);
+        }
         while let Ok(env) = self.inbox.try_recv() {
             debug_assert!(env.at >= start, "envelope violates the lookahead bound");
             self.queue.push(
@@ -384,7 +421,7 @@ impl<'a, B: Backend> Runner<'a, B> {
         let p = self.next_period(node);
         self.queue.push(EventKey::tick(now + p, node), REvent::Tick);
 
-        if !self.online[node] {
+        if !self.online.test(node) {
             return;
         }
         let li = node - self.lo;
@@ -405,9 +442,14 @@ impl<'a, B: Backend> Runner<'a, B> {
             return;
         };
 
+        // the weight buffer comes from the pool; write_freshest_raw resizes
+        // it to d and overwrites every element, so recycled contents can
+        // never leak into a send
+        let mut w = self.pool.get(self.store.d());
+        self.store.write_freshest_raw(li, &mut w);
         let msg = ModelMsg {
             src: node,
-            w: self.store.freshest(li).to_vec(),
+            w,
             scale: self.store.freshest_scale(li),
             t: self.store.freshest_t(li) as u64,
             view: self.sampler.payload(node, now),
@@ -436,8 +478,27 @@ impl<'a, B: Backend> Runner<'a, B> {
                     });
                 }
             }
-            Fate::Dropped => self.stats.messages_dropped += 1,
-            Fate::Blocked => self.stats.messages_blocked += 1,
+            Fate::Dropped => {
+                self.stats.messages_dropped += 1;
+                self.pool.put(msg.w);
+            }
+            Fate::Blocked => {
+                self.stats.messages_blocked += 1;
+                self.pool.put(msg.w);
+            }
+        }
+    }
+
+    /// Return a consumed weight buffer to the free-list of the shard that
+    /// allocated it (local sends go straight back; foreign buffers travel
+    /// the recycle lane).  No-op with pooling off — `BufPool::put` drops,
+    /// and cross-shard sends are skipped outright.
+    fn recycle(&mut self, w: Vec<f32>, src: NodeId) {
+        if self.lo <= src && src < self.hi {
+            self.pool.put(w);
+        } else if self.sh.cfg.pool {
+            // a failed send here means teardown is in progress
+            let _ = self.recycle_lanes[self.sh.shard_of(src)].send(w);
         }
     }
 
@@ -451,24 +512,30 @@ impl<'a, B: Backend> Runner<'a, B> {
         }
         let d = self.store.d();
         let lo = self.lo;
-        let pending = std::mem::take(&mut self.pending);
-        let mut live: Vec<(NodeId, ModelMsg)> = Vec::with_capacity(pending.len());
-        for (dst, msg) in pending {
-            if !self.online[dst] {
+        // staging vectors and the duplicate-receiver map persist across
+        // flushes (drained, never dropped), so steady-state windows run
+        // without reallocating them
+        let mut pending = std::mem::take(&mut self.pending);
+        let mut live = std::mem::take(&mut self.live);
+        self.prev_in_flush.clear();
+        for (dst, msg) in pending.drain(..) {
+            if !self.online.test(dst) {
                 self.network.note_lost_offline();
                 self.stats.messages_lost_offline += 1;
+                let src = msg.src;
+                self.recycle(msg.w, src);
                 continue;
             }
             self.sampler.on_receive(dst, &msg.view);
             self.network.note_delivered();
             live.push((dst, msg));
         }
+        self.pending = pending;
         let per_msg_updates: u64 = match self.sh.cfg.variant {
             Variant::Um => 2,
             _ => 1,
         };
         let sparse = self.sh.sparse;
-        let mut prev_in_flush: HashMap<NodeId, usize> = HashMap::new();
         let mut start = 0;
         while start < live.len() {
             let end = (start + MAX_BATCH_ROWS).min(live.len());
@@ -480,7 +547,7 @@ impl<'a, B: Backend> Runner<'a, B> {
                 self.batch.w1[r.clone()].copy_from_slice(&msg.w);
                 self.batch.s1[row] = msg.scale;
                 self.batch.t1[row] = msg.t as f32;
-                match prev_in_flush.insert(dst, start + row) {
+                match self.prev_in_flush.insert(dst, start + row) {
                     Some(prev) => {
                         let pm = &live[prev].1;
                         self.batch.w2[r.clone()].copy_from_slice(&pm.w);
@@ -538,6 +605,13 @@ impl<'a, B: Backend> Runner<'a, B> {
             }
             start = end;
         }
+        // every message is fully consumed (copied into the batch and the
+        // store) — send the weight buffers back to their allocating shards
+        for (_, msg) in live.drain(..) {
+            let src = msg.src;
+            self.recycle(msg.w, src);
+        }
+        self.live = live;
         Ok(())
     }
 
@@ -583,6 +657,8 @@ impl<'a, B: Backend> Runner<'a, B> {
         self.flush()?;
         let mut stats = std::mem::take(&mut self.stats);
         stats.messages_delivered = self.network.delivered();
+        stats.pool_hits = self.pool.hits;
+        stats.pool_misses = self.pool.misses;
         Ok(stats)
     }
 }
@@ -740,6 +816,8 @@ fn merge_stats(total: &mut RunStats, s: RunStats) {
     total.updates_applied += s.updates_applied;
     total.engine_calls += s.engine_calls;
     total.sparse_rows += s.sparse_rows;
+    total.pool_hits += s.pool_hits;
+    total.pool_misses += s.pool_misses;
 }
 
 /// The barrier/window plan for one run.
@@ -894,8 +972,10 @@ fn build_shared<'a>(
     let n_univ = data.n_train();
     assert!(n_univ >= 2, "need at least two nodes");
     let compiled = cfg.scenario.as_ref().map(|s| {
-        CompiledScenario::compile(s, n_univ, cfg.delta, cfg.cycles, cfg.seed, cfg.network)
-            .expect("scenario must be validated before the simulator runs")
+        Arc::new(
+            CompiledScenario::compile(s, n_univ, cfg.delta, cfg.cycles, cfg.seed, cfg.network)
+                .expect("scenario must be validated before the simulator runs"),
+        )
     });
     let members0 = compiled.as_ref().map_or(n_univ, |c| c.initial);
     let mut rng = Rng::new(cfg.seed);
@@ -904,7 +984,7 @@ fn build_shared<'a>(
     let sched_horizon = cfg.delta * (cfg.cycles + 1);
     let churn = resolve_churn_schedule(
         cfg.churn.as_ref(),
-        compiled.as_ref(),
+        compiled.as_deref(),
         n_univ,
         cfg.delta,
         sched_horizon,
@@ -917,9 +997,8 @@ fn build_shared<'a>(
     let eval_peers = eval_rng.sample_indices(members0, cfg.eval.n_peers.min(members0));
 
     let run_horizon = cfg.delta * cfg.cycles;
-    let churn_online0: Vec<bool> = (0..n_univ)
-        .map(|i| churn.as_ref().map_or(true, |ch| ch.is_online(i, 0)))
-        .collect();
+    let churn_online0 =
+        churn.as_ref().map_or_else(|| Bitset::filled(n_univ, true), |ch| ch.online_at(0));
     let churn_events: Vec<(Ticks, NodeId, bool)> = churn
         .as_ref()
         .map(|ch| ch.events().into_iter().filter(|&(t, _, _)| t <= run_horizon).collect())
@@ -1021,15 +1100,20 @@ pub fn run_sharded(
         }
     }
     let sh = build_shared(&cfg, data, backend.supports_sparse(), shards);
-    let plan = build_plan(&cfg, sh.compiled.as_ref());
+    let plan = build_plan(&cfg, sh.compiled.as_deref());
 
-    // one mpsc lane per runner; every runner can send to every other
+    // one mpsc lane per runner; every runner can send to every other.
+    // Delivery lanes carry Envelopes out, recycle lanes carry consumed
+    // weight buffers home to the shard whose pool allocated them.
     let (txs, rxs): (Vec<Sender<Envelope>>, Vec<Receiver<Envelope>>) =
+        (0..shards).map(|_| channel()).unzip();
+    let (rtxs, rrxs): (Vec<Sender<Vec<f32>>>, Vec<Receiver<Vec<f32>>>) =
         (0..shards).map(|_| channel()).unzip();
 
     if shards == 1 {
         let inbox = rxs.into_iter().next().expect("one lane");
-        let runner = Runner::new(&sh, 0, BoxedBackend(backend), inbox, txs);
+        let recycle = rrxs.into_iter().next().expect("one lane");
+        let runner = Runner::new(&sh, 0, BoxedBackend(backend), inbox, txs, recycle, rtxs);
         let mut pool = SerialPool { runners: vec![runner] };
         return drive(&mut pool, &sh, &plan, obs);
     }
@@ -1040,11 +1124,22 @@ pub fn run_sharded(
     let workers = (1 + lease.granted()).min(shards);
     let mut runners: Vec<Runner<'_, NativeBackend>> = Vec::with_capacity(shards);
     let mut rx_iter = rxs.into_iter();
+    let mut rrx_iter = rrxs.into_iter();
     for i in 0..shards {
         let inbox = rx_iter.next().expect("one lane per runner");
-        runners.push(Runner::new(&sh, i, NativeBackend::new(), inbox, txs.clone()));
+        let recycle = rrx_iter.next().expect("one lane per runner");
+        runners.push(Runner::new(
+            &sh,
+            i,
+            NativeBackend::new(),
+            inbox,
+            txs.clone(),
+            recycle,
+            rtxs.clone(),
+        ));
     }
     drop(txs);
+    drop(rtxs);
 
     if workers == 1 {
         let mut pool = SerialPool { runners };

@@ -176,6 +176,17 @@ impl ModelStore {
         }
     }
 
+    /// Write node `i`'s **raw** (unscaled) freshest weight row into the
+    /// possibly-recycled buffer `out`, resizing it to exactly `d` first and
+    /// overwriting every element.  This is the pooled message-staging path
+    /// (DESIGN.md §14): the resize + full `copy_from_slice` together are
+    /// what make a recycled buffer safe — no stale float from a previous
+    /// message can survive, whatever length the buffer came back at.
+    pub fn write_freshest_raw(&self, i: usize, out: &mut Vec<f32>) {
+        out.resize(self.d, 0.0);
+        out.copy_from_slice(&self.freshest_w[self.row(i)]);
+    }
+
     /// Materialize node `i`'s freshest model as a [`LinearModel`] (evaluation
     /// and cache paths; allocates one weight vector).
     pub fn freshest_model(&self, i: usize) -> LinearModel {
@@ -249,6 +260,20 @@ mod tests {
         // grown rows are fully functional
         s.set_freshest(4, &[9.0, 9.0, 9.0], 1.0);
         assert_eq!(s.freshest_model(4).weights(), vec![9.0, 9.0, 9.0]);
+    }
+
+    #[test]
+    fn write_freshest_raw_overwrites_recycled_buffers() {
+        let mut s = ModelStore::new(1, 3);
+        s.set_freshest_scaled(0, &[4.0, -8.0, 2.0], 0.25, 9.0);
+        // a "recycled" buffer: wrong length, poisoned contents
+        let mut buf = vec![99.0f32; 7];
+        s.write_freshest_raw(0, &mut buf);
+        assert_eq!(buf, vec![4.0, -8.0, 2.0], "raw row, scale NOT folded");
+        // and from the short side
+        let mut short = vec![5.0f32; 1];
+        s.write_freshest_raw(0, &mut short);
+        assert_eq!(short, vec![4.0, -8.0, 2.0]);
     }
 
     #[test]

@@ -37,6 +37,7 @@ use crate::scenario::Scenario;
 use crate::sim::churn::{ChurnConfig, ChurnSchedule};
 use crate::sim::event::Ticks;
 use crate::sim::network::{Fate, Network, NetworkConfig};
+use crate::util::bitset::Bitset;
 use crate::util::rng::Rng;
 use std::collections::HashMap;
 use std::io::{self, Read, Write};
@@ -215,8 +216,9 @@ pub(crate) struct NodeCtx<'a> {
     pub(crate) cfg: &'a DeployConfig,
     pub(crate) data: &'a Dataset,
     pub(crate) churn: Option<&'a ChurnSchedule>,
-    /// compiled scenario timeline; every node drives its own cursor
-    pub(crate) scn: Option<&'a CompiledScenario>,
+    /// compiled scenario timeline; every node drives its own cursor off an
+    /// Arc clone of the one shared compilation
+    pub(crate) scn: Option<&'a std::sync::Arc<CompiledScenario>>,
     pub(crate) start: Instant,
     pub(crate) shared: &'a SharedRun,
 }
@@ -355,7 +357,7 @@ pub(crate) fn node_main(ctx: NodeCtx<'_>) -> NodeStats {
     let mut sampler = PeerSampler::new_local(cfg.sampler, me, cfg.n_nodes, SIM_DELTA, &mut rng);
     // liveness is not globally observable in a deployment; samplers treat
     // every peer as a candidate and sends to offline peers are simply lost
-    let assume_online = vec![true; cfg.n_nodes];
+    let assume_online = Bitset::filled(cfg.n_nodes, true);
     let mut net = Network::new(cfg.network);
     let mut cache = ModelCache::new(cfg.cache_size);
     cache.add(LinearModel::zeros(d));

@@ -160,6 +160,16 @@ impl Newscast {
         p
     }
 
+    /// [`Newscast::payload`] into a recycled buffer (pooled message path,
+    /// DESIGN.md §14): clears `out` and writes the identical descriptors.
+    pub fn payload_into(&self, node: NodeId, now: Ticks, out: &mut Vec<Descriptor>) {
+        let v = &self.views[node - self.base];
+        out.clear();
+        out.reserve(v.len() + 1);
+        out.push(Descriptor { node, ts: now });
+        out.extend_from_slice(v);
+    }
+
     /// Merge an incoming payload into `node`'s view: union, dedup by node id
     /// keeping the freshest timestamp, drop self, keep the `view_size`
     /// freshest.

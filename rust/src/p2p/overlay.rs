@@ -12,6 +12,7 @@
 
 use crate::p2p::newscast::{Descriptor, Newscast};
 use crate::sim::event::{NodeId, Ticks};
+use crate::util::bitset::Bitset;
 use crate::util::rng::Rng;
 
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -129,22 +130,25 @@ impl PeerSampler {
         }
     }
 
-    /// SELECTPEER for `node` at `now`. `online` gives current liveness (the
-    /// oracle and matching samplers restrict to online peers; newscast may
-    /// return an offline peer — the message is then simply lost, as in a
-    /// real deployment).
+    /// SELECTPEER for `node` at `now`. `online` gives current liveness as a
+    /// packed [`Bitset`] (the oracle and matching samplers restrict to
+    /// online peers; newscast may return an offline peer — the message is
+    /// then simply lost, as in a real deployment).  The oracle keeps its
+    /// rejection-sampling draw sequence: `Bitset::test` is an O(1) drop-in
+    /// for the old `Vec<bool>` index, so selections are bit-for-bit
+    /// unchanged.
     pub fn select(
         &mut self,
         node: NodeId,
         now: Ticks,
-        online: &[bool],
+        online: &Bitset,
         rng: &mut Rng,
     ) -> Option<NodeId> {
         match self {
             PeerSampler::Oracle { n } => {
                 for _ in 0..64 {
                     let p = rng.below_usize(*n);
-                    if p != node && online[p] {
+                    if p != node && online.test(p) {
                         return Some(p);
                     }
                 }
@@ -186,6 +190,16 @@ impl PeerSampler {
         }
     }
 
+    /// [`PeerSampler::payload`] into a recycled buffer: clears `out` and
+    /// fills it with exactly the same descriptors, so the pooled message
+    /// path (DESIGN.md §14) stages views without a per-message `Vec`.
+    pub fn payload_into(&self, node: NodeId, now: Ticks, out: &mut Vec<Descriptor>) {
+        out.clear();
+        if let PeerSampler::Newscast(nc) = self {
+            nc.payload_into(node, now, out);
+        }
+    }
+
     /// Handle the piggybacked view of a received message.
     pub fn on_receive(&mut self, dst: NodeId, view: &[Descriptor]) {
         if let PeerSampler::Newscast(nc) = self {
@@ -197,15 +211,18 @@ impl PeerSampler {
 }
 
 impl MatchingState {
-    fn refresh(&mut self, now: Ticks, online: &[bool], rng: &mut Rng) {
+    fn refresh(&mut self, now: Ticks, online: &Bitset, rng: &mut Rng) {
         let cycle = now / self.delta.max(1);
         if cycle == self.cycle {
             return;
         }
         self.cycle = cycle;
         self.partner.iter_mut().for_each(|p| *p = None);
+        // iter_ones yields increasing indices — exactly the order the old
+        // (0..n).filter(|i| online[i]) scan produced, so the shuffle sees
+        // the same input and the matching is bit-for-bit unchanged
         let mut live: Vec<NodeId> =
-            (0..self.n).filter(|&i| online[i]).collect();
+            online.iter_ones().take_while(|&i| i < self.n).collect();
         rng.shuffle(&mut live);
         for pair in live.chunks(2) {
             if let [a, b] = *pair {
@@ -223,7 +240,7 @@ mod tests {
     #[test]
     fn oracle_skips_offline_and_self() {
         let mut s = PeerSampler::new(SamplerConfig::Oracle, 4, 1000, &mut Rng::new(1));
-        let online = vec![true, false, true, true];
+        let online = Bitset::from_fn(4, |i| i != 1);
         let mut rng = Rng::new(2);
         for _ in 0..200 {
             let p = s.select(0, 0, &online, &mut rng).unwrap();
@@ -234,7 +251,7 @@ mod tests {
     #[test]
     fn oracle_gives_up_when_alone() {
         let mut s = PeerSampler::new(SamplerConfig::Oracle, 3, 1000, &mut Rng::new(1));
-        let online = vec![true, false, false];
+        let online = Bitset::from_fn(3, |i| i == 0);
         assert_eq!(s.select(0, 0, &online, &mut Rng::new(2)), None);
     }
 
@@ -242,7 +259,7 @@ mod tests {
     fn matching_is_a_perfect_matching_per_cycle() {
         let n = 10;
         let mut s = PeerSampler::new(SamplerConfig::Matching, n, 100, &mut Rng::new(3));
-        let online = vec![true; n];
+        let online = Bitset::filled(n, true);
         let mut rng = Rng::new(4);
         let partners: Vec<Option<NodeId>> =
             (0..n).map(|i| s.select(i, 50, &online, &mut rng)).collect();
@@ -262,7 +279,7 @@ mod tests {
     fn matching_leaves_odd_node_out() {
         let n = 5;
         let mut s = PeerSampler::new(SamplerConfig::Matching, n, 100, &mut Rng::new(5));
-        let online = vec![true; n];
+        let online = Bitset::filled(n, true);
         let mut rng = Rng::new(6);
         let unmatched = (0..n)
             .filter(|&i| s.select(i, 0, &online, &mut rng).is_none())
@@ -280,12 +297,16 @@ mod tests {
             1000,
             &mut rng,
         );
-        let online = vec![true; 20];
+        let online = Bitset::filled(20, true);
         let p = s.select(3, 0, &online, &mut rng).unwrap();
         assert!(p != 3 && p < 20);
         let payload = s.payload(3, 10);
         assert_eq!(payload[0].node, 3);
         assert_eq!(payload.len(), 6); // own descriptor + 5 view entries
+        // payload_into fills a recycled buffer with the identical view
+        let mut buf = vec![Descriptor { node: 99, ts: 0 }; 3];
+        s.payload_into(3, 10, &mut buf);
+        assert_eq!(buf, payload);
         s.on_receive(3, &[Descriptor { node: 11, ts: 99 }]);
     }
 
@@ -295,7 +316,7 @@ mod tests {
         // oracle: range widens
         let mut s = PeerSampler::new(SamplerConfig::Oracle, 4, 1000, &mut rng);
         s.grow(8, &mut rng);
-        let online = vec![true; 8];
+        let online = Bitset::filled(8, true);
         let mut seen_new = false;
         for _ in 0..200 {
             if s.select(0, 0, &online, &mut rng).unwrap() >= 4 {
@@ -321,7 +342,7 @@ mod tests {
         // matching: partner table covers the grown universe
         let mut s = PeerSampler::new(SamplerConfig::Matching, 4, 100, &mut rng);
         s.grow(6, &mut rng);
-        let online = vec![true; 6];
+        let online = Bitset::filled(6, true);
         let partners: Vec<_> = (0..6).map(|i| s.select(i, 0, &online, &mut rng)).collect();
         for (i, p) in partners.iter().enumerate() {
             if let Some(p) = p {
@@ -365,7 +386,7 @@ mod tests {
         // oracle range sampler widens like the legacy one
         let mut o = PeerSampler::new_range(SamplerConfig::Oracle, 5, 10, 15, 1000, seed);
         o.grow_range(15, 20, seed);
-        let online = vec![true; 20];
+        let online = Bitset::filled(20, true);
         let mut rng = Rng::new(3);
         let mut seen_new = false;
         for _ in 0..200 {
@@ -385,7 +406,7 @@ mod tests {
             1000,
             &mut rng,
         );
-        let online = vec![true; 20];
+        let online = Bitset::filled(20, true);
         let p = s.select(3, 0, &online, &mut rng);
         assert!(p.is_some());
         let payload = s.payload(3, 10);

@@ -242,16 +242,20 @@ fn resolve_join(m: Membership, initial: usize) -> usize {
 }
 
 /// Cursor over a compiled timeline.  Each execution context owns one (the
-/// two simulators, the deployment coordinator, and every deployment node
-/// thread) and applies mutations to its own state as ticks pass.
+/// two simulators, every shard runner, the deployment coordinator, and
+/// every deployment node thread) and applies mutations to its own state as
+/// ticks pass.  The compiled timeline itself is immutable and shared via
+/// `Arc` — at 1M nodes a `ForceOffline` wave can carry tens of thousands of
+/// node ids, and a per-shard deep clone of that (DESIGN.md §14) is exactly
+/// the replicated-state cost this type exists to avoid.
 #[derive(Clone, Debug)]
 pub struct ScenarioDriver {
-    compiled: CompiledScenario,
+    compiled: std::sync::Arc<CompiledScenario>,
     cursor: usize,
 }
 
 impl ScenarioDriver {
-    pub fn new(compiled: CompiledScenario) -> Self {
+    pub fn new(compiled: std::sync::Arc<CompiledScenario>) -> Self {
         ScenarioDriver { compiled, cursor: 0 }
     }
 
@@ -484,7 +488,7 @@ mod tests {
             action: PointAction::Drift,
         });
         let c = CompiledScenario::compile(&s, 10, 100, 10, 1, net()).unwrap();
-        let mut d = ScenarioDriver::new(c);
+        let mut d = ScenarioDriver::new(std::sync::Arc::new(c));
         assert!(d.has_due(0));
         assert_eq!(d.pop_due(0), Some(Mutation::SetDrop(0.2)));
         assert_eq!(d.pop_due(0), None, "drift at tick 300 is not due yet");

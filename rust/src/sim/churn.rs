@@ -9,6 +9,7 @@
 //! in the range reported for BitTorrent communities.
 
 use crate::sim::event::{NodeId, Ticks};
+use crate::util::bitset::Bitset;
 use crate::util::rng::Rng;
 
 /// Upper bound on a single drawn online/offline interval, in ticks
@@ -129,6 +130,13 @@ impl ChurnSchedule {
             Err(0) => false,
             Err(i) => time < iv[i - 1].1,
         }
+    }
+
+    /// Materialize the liveness snapshot at `time` over every scheduled
+    /// node as a packed [`Bitset`] — the replica form the simulators carry
+    /// (DESIGN.md §14: 1 bit/node instead of `Vec<bool>`'s byte).
+    pub fn online_at(&self, time: Ticks) -> Bitset {
+        Bitset::from_fn(self.intervals.len(), |i| self.is_online(i, time))
     }
 
     /// All join/leave transitions as (time, node, goes_online).
@@ -302,6 +310,21 @@ mod tests {
         // node 0: leave@10, join@20, leave@30; node 1: join@5 (end at
         // horizon emits no event)
         assert_eq!(ev.len(), 4);
+    }
+
+    #[test]
+    fn online_at_matches_per_node_queries() {
+        let cfg = ChurnConfig::paper_default(1000);
+        let mut rng = Rng::new(17);
+        let n = 80;
+        let sched = ChurnSchedule::generate(&cfg, n, 100_000, &mut rng);
+        for t in [0, 1, 999, 50_000, 99_999] {
+            let bs = sched.online_at(t);
+            assert_eq!(bs.len(), n);
+            for node in 0..n {
+                assert_eq!(bs.test(node), sched.is_online(node, t), "node {node} @ {t}");
+            }
+        }
     }
 
     #[test]

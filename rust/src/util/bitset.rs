@@ -1,0 +1,227 @@
+//! Packed liveness bitset (DESIGN.md §14): a `Vec<bool>` replacement for
+//! the full-universe online/churn/forced-off replicas every shard keeps.
+//!
+//! At the 1M-node target each `Vec<bool>` replica costs 1 MB per shard;
+//! packed into u64 words the same replica is 125 KB — 8× smaller — and
+//! word-level scans (`iter_ones`, `count_ones`) replace per-element loops
+//! in the peer-sampler filtering paths.
+//!
+//! Semantics are exactly those of a fixed-length `Vec<bool>`: `test`/`set`/
+//! `clear`/`assign` address single bits, `fill` repaints the whole set,
+//! `grow` appends `false` bits (membership growth), and `iter_ones` yields
+//! set indices in increasing order — the property `MatchingState::refresh`
+//! relies on to reproduce its historical live-node ordering bit-for-bit.
+
+/// Fixed-length packed bitset over u64 words.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Bitset {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl Bitset {
+    /// All-false bitset of `len` bits.
+    pub fn new(len: usize) -> Self {
+        Bitset { words: vec![0; len.div_ceil(64)], len }
+    }
+
+    /// Bitset of `len` bits, every bit set to `value`.
+    pub fn filled(len: usize, value: bool) -> Self {
+        let mut b = Bitset::new(len);
+        if value {
+            b.fill(true);
+        }
+        b
+    }
+
+    /// Build from a predicate over bit indices (the `Vec<bool>` collect
+    /// idiom: `(0..n).map(f).collect()`).
+    pub fn from_fn<F: FnMut(usize) -> bool>(len: usize, mut f: F) -> Self {
+        let mut b = Bitset::new(len);
+        for i in 0..len {
+            if f(i) {
+                b.set(i);
+            }
+        }
+        b
+    }
+
+    /// Number of bits.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Read bit `i` (panics when out of range, like `Vec<bool>` indexing).
+    #[inline]
+    pub fn test(&self, i: usize) -> bool {
+        assert!(i < self.len, "bit {i} out of range (len {})", self.len);
+        self.words[i / 64] >> (i % 64) & 1 != 0
+    }
+
+    /// Set bit `i` to true.
+    #[inline]
+    pub fn set(&mut self, i: usize) {
+        assert!(i < self.len, "bit {i} out of range (len {})", self.len);
+        self.words[i / 64] |= 1u64 << (i % 64);
+    }
+
+    /// Set bit `i` to false.
+    #[inline]
+    pub fn clear(&mut self, i: usize) {
+        assert!(i < self.len, "bit {i} out of range (len {})", self.len);
+        self.words[i / 64] &= !(1u64 << (i % 64));
+    }
+
+    /// Set bit `i` to `value` (the `v[i] = value` idiom).
+    #[inline]
+    pub fn assign(&mut self, i: usize, value: bool) {
+        if value {
+            self.set(i);
+        } else {
+            self.clear(i);
+        }
+    }
+
+    /// Repaint every bit to `value`.
+    pub fn fill(&mut self, value: bool) {
+        let w = if value { u64::MAX } else { 0 };
+        for word in &mut self.words {
+            *word = w;
+        }
+        self.mask_tail();
+    }
+
+    /// Append `extra` false bits (membership growth under a `Grow`
+    /// mutation — new arrivals start offline until their join tick).
+    pub fn grow(&mut self, extra: usize) {
+        self.len += extra;
+        self.words.resize(self.len.div_ceil(64), 0);
+        // the old tail word's spare bits were already zero, so nothing to
+        // clear: growth exposes zeros
+    }
+
+    /// Number of set bits (word-level popcount scan).
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Indices of set bits, in increasing order, via a word scan: each
+    /// word's set bits pop in `trailing_zeros` order, so the whole
+    /// iteration is exactly the order a `Vec<bool>` filter would produce.
+    pub fn iter_ones(&self) -> IterOnes<'_> {
+        IterOnes { words: &self.words, word_idx: 0, current: self.words.first().copied().unwrap_or(0) }
+    }
+
+    /// Zero the spare bits past `len` in the last word so popcounts and
+    /// word iteration never see phantom bits.
+    fn mask_tail(&mut self) {
+        let spare = self.words.len() * 64 - self.len;
+        if spare > 0 {
+            if let Some(last) = self.words.last_mut() {
+                *last &= u64::MAX >> spare;
+            }
+        }
+    }
+}
+
+/// Iterator over set-bit indices in increasing order.
+pub struct IterOnes<'a> {
+    words: &'a [u64],
+    word_idx: usize,
+    current: u64,
+}
+
+impl Iterator for IterOnes<'_> {
+    type Item = usize;
+
+    fn next(&mut self) -> Option<usize> {
+        while self.current == 0 {
+            self.word_idx += 1;
+            if self.word_idx >= self.words.len() {
+                return None;
+            }
+            self.current = self.words[self.word_idx];
+        }
+        let bit = self.current.trailing_zeros() as usize;
+        self.current &= self.current - 1; // clear lowest set bit
+        Some(self.word_idx * 64 + bit)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_clear_test_roundtrip() {
+        let mut b = Bitset::new(130);
+        assert_eq!(b.len(), 130);
+        for i in [0usize, 1, 63, 64, 65, 127, 128, 129] {
+            assert!(!b.test(i));
+            b.set(i);
+            assert!(b.test(i));
+        }
+        assert_eq!(b.count_ones(), 8);
+        b.clear(64);
+        assert!(!b.test(64));
+        b.assign(64, true);
+        assert!(b.test(64));
+        b.assign(64, false);
+        assert!(!b.test(64));
+    }
+
+    #[test]
+    fn filled_and_fill_mask_the_tail() {
+        let mut b = Bitset::filled(70, true);
+        assert_eq!(b.count_ones(), 70);
+        assert!(b.test(69));
+        b.fill(false);
+        assert_eq!(b.count_ones(), 0);
+        b.fill(true);
+        assert_eq!(b.count_ones(), 70);
+        assert_eq!(b.iter_ones().count(), 70);
+        assert_eq!(b.iter_ones().last(), Some(69));
+    }
+
+    #[test]
+    fn grow_appends_false_bits() {
+        let mut b = Bitset::filled(64, true);
+        b.grow(10);
+        assert_eq!(b.len(), 74);
+        assert_eq!(b.count_ones(), 64);
+        for i in 64..74 {
+            assert!(!b.test(i));
+        }
+        b.set(73);
+        assert!(b.test(73));
+    }
+
+    #[test]
+    fn iter_ones_is_increasing_and_complete() {
+        let idx = [3usize, 5, 63, 64, 100, 191, 192];
+        let mut b = Bitset::new(193);
+        for &i in &idx {
+            b.set(i);
+        }
+        let got: Vec<usize> = b.iter_ones().collect();
+        assert_eq!(got, idx);
+    }
+
+    #[test]
+    fn from_fn_matches_predicate() {
+        let b = Bitset::from_fn(129, |i| i % 3 == 0);
+        for i in 0..129 {
+            assert_eq!(b.test(i), i % 3 == 0, "bit {i}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn test_out_of_range_panics() {
+        Bitset::new(64).test(64);
+    }
+}

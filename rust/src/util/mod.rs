@@ -2,7 +2,9 @@
 //! bench harness (all built in-repo; the offline crate set has no
 //! rand/proptest/criterion).
 pub mod benchkit;
+pub mod bitset;
 pub mod check;
+pub mod pool;
 pub mod rng;
 pub mod stats;
 pub mod threads;

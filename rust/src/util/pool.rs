@@ -1,0 +1,136 @@
+//! Message-buffer pool (DESIGN.md §14): recycles the `Vec<f32>` weight
+//! buffers that gossip messages carry, so the sharded simulator's hot path
+//! (one model message per node per Δ — ~1M fresh allocations per cycle at
+//! the ROADMAP's node target) reuses buffers instead of hammering the
+//! allocator.
+//!
+//! Contract: [`BufPool::get`] always returns a buffer of **exactly** the
+//! requested length — a recycled buffer is resized before it is handed out
+//! — but its *contents* are stale garbage from the previous message.  Every
+//! fill path must overwrite every element (`ModelStore::write_freshest_raw`
+//! does this with a `copy_from_slice` of the whole row); parity of pooled
+//! vs pooling-disabled runs is pinned bit-for-bit in tests/engine_parity.rs.
+//!
+//! The free list is unbounded: its high-water mark equals the peak number
+//! of in-flight messages, which is exactly the memory a non-pooling run
+//! allocates at that same moment anyway — pooling only removes the
+//! free/realloc churn in between.
+
+/// A free-list pool of `Vec<f32>` weight buffers with hit/miss accounting.
+#[derive(Debug)]
+pub struct BufPool {
+    free: Vec<Vec<f32>>,
+    enabled: bool,
+    /// buffers served from the free list
+    pub hits: u64,
+    /// buffers served by a fresh allocation
+    pub misses: u64,
+}
+
+impl BufPool {
+    /// `enabled = false` makes `get` always allocate and `put` always drop
+    /// — the reference behavior the pooled path is pinned against.
+    pub fn new(enabled: bool) -> Self {
+        BufPool { free: Vec::new(), enabled, hits: 0, misses: 0 }
+    }
+
+    /// A buffer of exactly `d` elements.  Recycled buffers are resized to
+    /// `d` (longer ones truncated, shorter ones zero-extended) so callers
+    /// can never index past a stale shorter length; contents beyond that
+    /// guarantee are unspecified and must be fully overwritten.
+    pub fn get(&mut self, d: usize) -> Vec<f32> {
+        match self.free.pop() {
+            Some(mut buf) => {
+                buf.resize(d, 0.0);
+                self.hits += 1;
+                buf
+            }
+            None => {
+                self.misses += 1;
+                vec![0.0; d]
+            }
+        }
+    }
+
+    /// Return a consumed buffer to the free list (dropped when pooling is
+    /// disabled, preserving the no-pool allocation profile).
+    pub fn put(&mut self, buf: Vec<f32>) {
+        if self.enabled && buf.capacity() > 0 {
+            self.free.push(buf);
+        }
+    }
+
+    /// Buffers currently parked on the free list.
+    pub fn free_len(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Fraction of `get` calls served from the free list.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn get_put_recycles_and_counts() {
+        let mut p = BufPool::new(true);
+        let a = p.get(4);
+        assert_eq!(a.len(), 4);
+        assert_eq!((p.hits, p.misses), (0, 1));
+        p.put(a);
+        assert_eq!(p.free_len(), 1);
+        let b = p.get(4);
+        assert_eq!(b.len(), 4);
+        assert_eq!((p.hits, p.misses), (1, 1));
+        assert!(p.hit_rate() > 0.49 && p.hit_rate() < 0.51);
+    }
+
+    /// The stale-buffer hazard (regression in the spirit of PR 1's
+    /// `StepBatch::resize` zeroing bug): a recycled buffer must come back
+    /// at the requested length even when the previous message was a
+    /// different dimensionality, and the zero-extension must not expose
+    /// stale floats past the old length.
+    #[test]
+    fn get_guarantees_requested_length_across_dims() {
+        let mut p = BufPool::new(true);
+        let mut a = p.get(8);
+        for v in a.iter_mut() {
+            *v = 7.5; // poison: stale contents from a "previous message"
+        }
+        p.put(a);
+        let shorter = p.get(3);
+        assert_eq!(shorter.len(), 3, "recycled buffer must be resized down");
+        p.put(shorter);
+        let longer = p.get(6);
+        assert_eq!(longer.len(), 6, "recycled buffer must be resized up");
+        // elements past the old length are zero-extended, never stale
+        assert!(longer[3..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn disabled_pool_never_recycles() {
+        let mut p = BufPool::new(false);
+        let a = p.get(5);
+        p.put(a);
+        assert_eq!(p.free_len(), 0);
+        let _ = p.get(5);
+        assert_eq!((p.hits, p.misses), (0, 2));
+        assert_eq!(p.hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn zero_capacity_buffers_are_not_parked() {
+        let mut p = BufPool::new(true);
+        p.put(Vec::new());
+        assert_eq!(p.free_len(), 0);
+    }
+}

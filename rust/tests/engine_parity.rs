@@ -571,6 +571,143 @@ fn sharded_run_identical_when_thread_budget_drained() {
     assert_runs_identical(&threaded, &serial, "drained budget vs threaded");
 }
 
+// ---------------------------------------------------------------------------
+// Buffer-pool parity (DESIGN.md §14): recycling message weight buffers
+// through per-shard free-lists is an allocator-level change only — pooled and
+// unpooled runs must be bit-for-bit identical, and the pool must actually
+// cycle buffers once the first windows have seeded its free-list.
+
+/// pool on vs. pool off across RW/MU/UM under the extreme-failures scenario,
+/// rotating the shard count so cross-shard recycle lanes are exercised too.
+#[test]
+fn pooled_run_bitwise_equals_unpooled_all_variants() {
+    let ds = urls_like(86, Scale(0.02));
+    for (vi, variant) in [Variant::Rw, Variant::Mu, Variant::Um].iter().enumerate() {
+        let mut cfg = ProtocolConfig::paper_default(12).with_extreme_failures();
+        cfg.variant = *variant;
+        cfg.eval.n_peers = 10;
+        cfg.seed = 86;
+        let shards = 1 + vi; // covers 1 (local recycle only), 2 and 3
+        cfg.pool = true;
+        let pooled = run_sharded(&cfg, &ds, shards);
+        cfg.pool = false;
+        let unpooled = run_sharded(&cfg, &ds, shards);
+        assert_runs_identical(
+            &pooled,
+            &unpooled,
+            &format!("pool on/off {variant:?} shards={shards}"),
+        );
+        // every send requests exactly one buffer, as a hit or a miss
+        assert_eq!(
+            pooled.stats.pool_hits + pooled.stats.pool_misses,
+            pooled.stats.messages_sent,
+            "{variant:?} shards={shards}: pool counters must account for every send"
+        );
+        assert!(
+            pooled.stats.pool_hits > 0,
+            "{variant:?} shards={shards}: pool never recycled a buffer"
+        );
+        assert_eq!(
+            unpooled.stats.pool_hits, 0,
+            "{variant:?} shards={shards}: a disabled pool must never hit"
+        );
+    }
+}
+
+/// Scenario timelines force buffers through every fate — delivered, dropped,
+/// blocked at a partition, lost to a forced-offline node — and each fate has
+/// its own recycle path.  All of them must keep the run bit-identical.
+#[test]
+fn pooled_scenario_timeline_bitwise_equals_unpooled() {
+    use golf::scenario::{
+        DelaySpec, PartitionSpec, Phase, PointAction, PointEvent, Scenario,
+    };
+    let ds = urls_like(87, Scale(0.02));
+    let mut scn = Scenario::empty("pool-timeline");
+    scn.drop = Some(0.2);
+    scn.phases.push(Phase {
+        name: "split".into(),
+        from: 4,
+        to: 12,
+        drop: None,
+        delay: Some(DelaySpec::Uniform(0.5, 3.0)),
+        partition: Some(PartitionSpec::Halves),
+        leave: Some(0.2),
+    });
+    scn.events.push(PointEvent { name: "invert".into(), at: 16, action: PointAction::Drift });
+    scn.validate(ds.n_train(), 24).unwrap();
+    let mut cfg = ProtocolConfig::paper_default(24);
+    cfg.eval.n_peers = 10;
+    cfg.seed = 87;
+    cfg.scenario = Some(scn);
+    cfg.pool = true;
+    let pooled = run_sharded(&cfg, &ds, 3);
+    cfg.pool = false;
+    let unpooled = run_sharded(&cfg, &ds, 3);
+    assert!(pooled.stats.messages_blocked > 0, "partition must engage");
+    assert!(pooled.stats.messages_lost_offline > 0, "leaves must engage");
+    assert_runs_identical(&pooled, &unpooled, "pool on/off under scenario timeline");
+    assert!(pooled.stats.pool_hits > 0, "pool never recycled a buffer");
+}
+
+// ---------------------------------------------------------------------------
+// Chunked-row kernel parity (DESIGN.md §14): `NativeBackend::step` splits
+// large batches into contiguous row chunks on leased threads.  Rows are
+// independent by construction, so chunked execution must equal serial
+// execution bit-for-bit — not approximately.
+
+/// Dense path: run the same batch once under whatever the thread ledger
+/// grants (large enough to clear both chunking thresholds) and once with the
+/// ledger drained (forced serial); outputs must be identical bits.
+#[test]
+fn chunked_dense_step_bitwise_equals_serial() {
+    use golf::engine::{PAR_MIN_WORK, PAR_ROWS_MIN};
+    let mut nat = NativeBackend::new();
+    let mut rng = Rng::new(88);
+    let (b, d) = (4 * PAR_ROWS_MIN, 300);
+    assert!(b >= 2 * PAR_ROWS_MIN && b * d >= PAR_MIN_WORK, "batch must clear thresholds");
+    for learner in [LearnerKind::Pegasos, LearnerKind::Adaline, LearnerKind::LogReg] {
+        for variant in [Variant::Rw, Variant::Mu, Variant::Um] {
+            let op = StepOp { learner, variant, hp: 0.02 };
+            let base = random_batch(&mut rng, b, d);
+            let mut chunked = base.clone();
+            nat.step(&op, &mut chunked).unwrap();
+            let hold = golf::util::threads::lease(usize::MAX / 2);
+            let mut serial = base;
+            nat.step(&op, &mut serial).unwrap();
+            drop(hold);
+            assert_eq!(chunked.out_w, serial.out_w, "{learner:?}/{variant:?} out_w");
+            assert_eq!(chunked.out_t, serial.out_t, "{learner:?}/{variant:?} out_t");
+        }
+    }
+}
+
+/// Sparse path: same drained-vs-granted comparison over a CSR batch.  Sparse
+/// results land in-place (w1 + out_s/out_t), so those are the pinned fields.
+#[test]
+fn chunked_sparse_step_bitwise_equals_serial() {
+    use golf::engine::{PAR_MIN_WORK, PAR_ROWS_MIN};
+    let mut nat = NativeBackend::new();
+    let mut rng = Rng::new(89);
+    let (b, d, nnz) = (4 * PAR_ROWS_MIN, 300, 12);
+    assert!(b >= 2 * PAR_ROWS_MIN && b * d >= PAR_MIN_WORK, "batch must clear thresholds");
+    for learner in [LearnerKind::Pegasos, LearnerKind::Adaline, LearnerKind::LogReg] {
+        for variant in [Variant::Rw, Variant::Mu, Variant::Um] {
+            let op = StepOp { learner, variant, hp: 0.02 };
+            let (_, base) = dense_and_sparse_twin(&mut rng, b, d, nnz);
+            let mut chunked = base.clone();
+            nat.step(&op, &mut chunked).unwrap();
+            let hold = golf::util::threads::lease(usize::MAX / 2);
+            let mut serial = base;
+            nat.step(&op, &mut serial).unwrap();
+            drop(hold);
+            assert_eq!(chunked.w1, serial.w1, "{learner:?}/{variant:?} w1");
+            assert_eq!(chunked.out_s, serial.out_s, "{learner:?}/{variant:?} out_s");
+            assert_eq!(chunked.out_t, serial.out_t, "{learner:?}/{variant:?} out_t");
+        }
+    }
+}
+
 #[test]
 fn cli_backend_batched_pjrt_runs() {
     if pjrt().is_none() {

@@ -517,6 +517,80 @@ fn prop_libsvm_roundtrip() {
 }
 
 #[test]
+fn prop_bitset_matches_vec_bool_reference() {
+    // The packed liveness bitset (DESIGN.md §14) replaces the per-shard
+    // `Vec<bool>` replicas, so every observer (test/count_ones/iter_ones)
+    // must agree with a `Vec<bool>` reference model after any sequence of
+    // mutations — including `grow`, which must expose false bits only.
+    use golf::util::bitset::Bitset;
+    forall(
+        115,
+        120,
+        |rng| {
+            let len = 1 + rng.below_usize(200);
+            let init: Vec<bool> = (0..len).map(|_| rng.chance(0.5)).collect();
+            // ops: 0 set, 1 clear, 2 assign, 3 fill, 4 grow
+            let ops: Vec<(u8, usize, bool)> = (0..rng.below_usize(50))
+                .map(|_| (rng.below(5) as u8, rng.below_usize(4096), rng.chance(0.5)))
+                .collect();
+            (init, ops)
+        },
+        |(init, ops)| {
+            let mut bs = Bitset::from_fn(init.len(), |i| init[i]);
+            let mut v = init.clone();
+            for &(op, raw, val) in ops {
+                let i = raw % v.len(); // scale into the current length
+                match op {
+                    0 => {
+                        bs.set(i);
+                        v[i] = true;
+                    }
+                    1 => {
+                        bs.clear(i);
+                        v[i] = false;
+                    }
+                    2 => {
+                        bs.assign(i, val);
+                        v[i] = val;
+                    }
+                    3 => {
+                        bs.fill(val);
+                        v.iter_mut().for_each(|b| *b = val);
+                    }
+                    _ => {
+                        let extra = raw % 9;
+                        bs.grow(extra);
+                        v.resize(v.len() + extra, false);
+                    }
+                }
+                if bs.len() != v.len() {
+                    return Err(format!("len {} != {}", bs.len(), v.len()));
+                }
+                for (j, &b) in v.iter().enumerate() {
+                    if bs.test(j) != b {
+                        return Err(format!("bit {j}: {} != {b}", bs.test(j)));
+                    }
+                }
+                let ones: Vec<usize> =
+                    v.iter().enumerate().filter(|&(_, &b)| b).map(|(j, _)| j).collect();
+                if bs.count_ones() != ones.len() {
+                    return Err(format!(
+                        "count_ones {} != {}",
+                        bs.count_ones(),
+                        ones.len()
+                    ));
+                }
+                let got: Vec<usize> = bs.iter_ones().collect();
+                if got != ones {
+                    return Err(format!("iter_ones {got:?} != {ones:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_feature_projection_preserves_dots() {
     // <project(x), project(w*)> == <x restricted to kept coords, w*>
     forall(
