@@ -328,13 +328,18 @@ fn main() {
         );
     }
 
+    // `scenarios` and `node_scaling` share one BENCH_scenarios.json file,
+    // written once after both sections have had their chance to run
+    let mut sjson: Vec<(String, f64)> = Vec::new();
+    let mut sjson_touched = false;
+
     if section_enabled("scenarios") {
         // ---- scenario library sweep (DESIGN.md §11): event-driven runs of
         // every built-in timeline on one urls-like network, tracking how much
         // protocol throughput each failure script costs ---------------------
         println!("\n--- scenario library: event-driven run of every built-in");
+        sjson_touched = true;
         {
-            let mut sjson: Vec<(String, f64)> = Vec::new();
             let ds = urls_like(4, Scale(0.02)); // 200 nodes, >= trace coverage
             for &name in golf::scenario::builtin_names() {
                 let scn = golf::scenario::builtin(name).expect("built-in");
@@ -360,8 +365,59 @@ fn main() {
                 );
                 sjson.push((name.replace('-', "_"), per_s));
             }
-            write_bench_json("scenarios", "applied_updates_per_s", &sjson);
         }
+    }
+
+    // ---- node-group deployment scaling (DESIGN.md §15): real socket runs
+    // at node counts the thread-per-node runtime could not host, tracking
+    // walltime, decoded frames/s, and peak RSS, plus the group-runtime
+    // scheduling metrics (frames/wake, worst timer lag) ------------------
+    if section_enabled("node_scaling") {
+        use golf::coordinator::run_deployment;
+        use golf::net::deploy::DeployConfig;
+        println!("\n--- node-group deployment: 256 / 1k / 4k / 10k real nodes");
+        sjson_touched = true;
+        for n in [256usize, 1000, 4000, 10_000] {
+            let ds = scaling_dataset(8, n);
+            let cfg = DeployConfig {
+                n_nodes: n,
+                node_groups: 0, // auto: thread-ledger budget, floored per group cap
+                delta: std::time::Duration::from_millis(100),
+                cycles: 3,
+                eval_peers: 8,
+                eval_at_cycles: vec![3],
+                seed: 8,
+                ..Default::default()
+            };
+            let t0 = std::time::Instant::now();
+            let report = run_deployment(&cfg, &ds).expect("deployment");
+            let wall = t0.elapsed().as_secs_f64();
+            let s = &report.stats;
+            let frames_s = s.messages_received as f64 / wall.max(1e-12);
+            println!(
+                "    -> {n} nodes / {} group(s): {:.1}s wall, {} frames ({:.0}/s), \
+                 {:.2} frames/wake, reused {}, timer lag max {:.2} ms, peak RSS {:.0} MiB",
+                s.node_groups,
+                wall,
+                s.messages_received,
+                frames_s,
+                s.frames_per_wake,
+                s.conns_reused,
+                s.timer_lag_ms_max,
+                peak_rss_mib()
+            );
+            sjson.push((format!("nodes{n}_walltime_s"), wall));
+            sjson.push((format!("nodes{n}_frames_per_s"), frames_s));
+            sjson.push((format!("nodes{n}_peak_rss_mib"), peak_rss_mib()));
+        }
+    }
+
+    if sjson_touched {
+        write_bench_json(
+            "scenarios",
+            "applied_updates_per_s (nodes*_ keys: deployment node scaling)",
+            &sjson,
+        );
     }
 
     if section_enabled("backend") {

@@ -188,6 +188,8 @@ pub struct RunSpec {
     pub delta_ms: u64,
     /// deployment node count; 0 = one node per training row
     pub nodes: usize,
+    /// deployment worker threads multiplexing the nodes; 0 = auto
+    pub node_groups: usize,
     /// grid axes; `Some` turns the spec into a sweep over the dataset
     /// registry (requires `target = Sim` on the native event backend)
     pub sweep: Option<SweepAxes>,
@@ -214,6 +216,7 @@ impl RunSpec {
             experiment,
             delta_ms: DeploySpec::default().delta_ms,
             nodes: 0,
+            node_groups: 0,
             sweep: None,
         }
     }
@@ -230,6 +233,7 @@ impl RunSpec {
             target: Target::Deploy,
             delta_ms: spec.delta_ms,
             nodes: spec.nodes,
+            node_groups: spec.node_groups,
             sweep: None,
         }
     }
@@ -241,6 +245,7 @@ impl RunSpec {
             experiment: self.experiment.clone(),
             delta_ms: self.delta_ms,
             nodes: self.nodes,
+            node_groups: self.node_groups,
         }
     }
 
@@ -369,6 +374,15 @@ impl RunSpec {
         self
     }
 
+    /// Worker threads multiplexing a deployment's nodes (0 = auto: the
+    /// thread-ledger budget).  Each group hosts at most
+    /// `net::deploy::MAX_GROUP_NODES` nodes, so this also raises the
+    /// deployable node-count bound.
+    pub fn node_groups(mut self, groups: usize) -> Self {
+        self.node_groups = groups;
+        self
+    }
+
     /// Turn the spec into a grid sweep over the dataset registry.
     pub fn sweep(mut self, axes: SweepAxes) -> Self {
         self.sweep = Some(axes);
@@ -482,8 +496,8 @@ impl RunSpec {
         }
         if self.target == Target::Deploy {
             out.push_str(&format!(
-                "\n[deploy]\ndelta_ms = {}\nnodes = {}\n",
-                self.delta_ms, self.nodes
+                "\n[deploy]\ndelta_ms = {}\nnodes = {}\nnode_groups = {}\n",
+                self.delta_ms, self.nodes, self.node_groups
             ));
         }
         if let Some(axes) = &self.sweep {

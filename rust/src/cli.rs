@@ -91,8 +91,8 @@ USAGE:
   golf deploy [--config FILE] [--dataset D] [--scale S] [--cycles N]
               [--variant rw|mu|um] [--learner pegasos|adaline|logreg]
               [--failures none|extreme] [--sampler newscast|oracle]
-              [--nodes N] [--delta_ms MS] [--eval_peers K] [--seed N]
-              [--compare-sim] [--out FILE.csv]
+              [--nodes N] [--node-groups G] [--delta_ms MS] [--eval_peers K]
+              [--seed N] [--compare-sim] [--out FILE.csv]
   golf info
 
 EXIT CODES: 0 ok, 2 config, 3 data, 4 io, 5 scenario, 6 backend, 7 wire"
@@ -166,6 +166,7 @@ fn apply_flags(spec: &mut RunSpec, flags: &HashMap<String, String>) -> Result<()
     spec.experiment = d.experiment;
     spec.delta_ms = d.delta_ms;
     spec.nodes = d.nodes;
+    spec.node_groups = d.node_groups;
     if spec.target != Target::Deploy {
         spec.target = Target::for_backend(spec.experiment.backend);
     }
@@ -225,9 +226,11 @@ fn deploy_and_report(
         .deploy_config()
         .expect("deploy sessions resolve their config at build time");
     eprintln!(
-        "deploying {} {} nodes on {} (d={}) for {} cycles of {:?} [{} sampling{}{}]",
+        "deploying {} {} nodes in {} group(s) on {} (d={}) for {} cycles of {:?} \
+         [{} sampling{}{}]",
         dcfg.n_nodes,
         dcfg.variant.name(),
+        dcfg.resolved_groups(),
         ds.name,
         ds.d(),
         dcfg.cycles,
@@ -252,7 +255,7 @@ fn deploy_and_report(
     let s = &report.stats;
     eprintln!(
         "sent={} received={} bytes={} sim_dropped={} blocked={} backlog_lost={} \
-         io_errors={} decode_errors={} conns={}",
+         io_errors={} decode_errors={} conns={} reused={}",
         s.messages_sent,
         s.messages_received,
         s.bytes_sent,
@@ -262,6 +265,11 @@ fn deploy_and_report(
         s.io_errors,
         s.decode_errors,
         s.conns_accepted,
+        s.conns_reused,
+    );
+    eprintln!(
+        "groups={} frames/wake={:.2} timer_lag_max={:.2}ms",
+        s.node_groups, s.frames_per_wake, s.timer_lag_ms_max,
     );
     eprintln!(
         "final error {:.4} (mean model t {:.1})",

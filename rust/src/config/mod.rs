@@ -27,6 +27,7 @@
 //! [deploy]                ; `golf deploy` only (real localhost-TCP run)
 //! delta_ms = 30           ; wall-clock gossip period in milliseconds
 //! nodes = 0               ; node count; 0 = one node per training row
+//! node_groups = 0         ; worker threads multiplexing the nodes; 0 = auto
 //! ```
 //!
 //! A `[scenario]` section (plus `[phase.*]` / `[event.*]` sections — the
@@ -319,18 +320,27 @@ pub struct DeploySpec {
     /// node count; 0 = one node per training row (required for parity with
     /// a matched simulator run)
     pub nodes: usize,
+    /// worker threads multiplexing the nodes; 0 = auto (thread-ledger
+    /// budget, clamped to the node count)
+    pub node_groups: usize,
 }
 
 impl Default for DeploySpec {
     fn default() -> Self {
-        DeploySpec { experiment: ExperimentSpec::default(), delta_ms: 30, nodes: 0 }
+        DeploySpec {
+            experiment: ExperimentSpec::default(),
+            delta_ms: 30,
+            nodes: 0,
+            node_groups: 0,
+        }
     }
 }
 
 impl DeploySpec {
     /// Apply one deployment-only key=value pair; `Ok(false)` means the key
     /// is not a deployment key (callers route it to the experiment schema
-    /// or reject it).  The single source of `delta_ms`/`nodes` parsing —
+    /// or reject it).  The single source of `delta_ms`/`nodes`/
+    /// `node_groups` parsing —
     /// [`DeploySpec::apply`], the CLI flag map, and `RunSpec::from_ini`'s
     /// `[deploy]` section all come through here.
     pub fn apply_deploy_key(&mut self, k: &str, v: &str) -> Result<bool, GolfError> {
@@ -341,6 +351,12 @@ impl DeploySpec {
             }
             "nodes" => {
                 self.nodes = parse(v, k)?;
+                Ok(true)
+            }
+            // "node-groups" is the CLI flag spelling (--node-groups); the
+            // INI canonical form is node_groups
+            "node_groups" | "node-groups" => {
+                self.node_groups = parse(v, k)?;
                 Ok(true)
             }
             _ => Ok(false),
@@ -394,15 +410,6 @@ impl DeploySpec {
                 data.name
             )));
         }
-        if n > crate::net::deploy::MAX_DEPLOY_NODES {
-            // one OS thread + one listener per node: an unscaled dataset
-            // must not silently become 10,000 threads
-            return Err(GolfError::config(format!(
-                "deployment would spawn {n} node threads (max {}); \
-                 pass nodes = N or a smaller scale",
-                crate::net::deploy::MAX_DEPLOY_NODES
-            )));
-        }
         if e.sampler == SamplerConfig::Matching {
             // PERFECT MATCHING needs a globally consistent partner table per
             // cycle; per-node sampler instances in a real deployment cannot
@@ -419,6 +426,7 @@ impl DeploySpec {
         }
         let mut cfg = DeployConfig {
             n_nodes: n,
+            node_groups: self.node_groups,
             delta: std::time::Duration::from_millis(self.delta_ms.max(1)),
             cycles: e.cycles,
             variant: e.variant,
@@ -430,6 +438,19 @@ impl DeploySpec {
             scenario: e.scenario.clone(),
             ..Default::default()
         };
+        // group-aware node bound: each worker thread multiplexes at most
+        // MAX_GROUP_NODES peers, so the ceiling scales with the group
+        // count instead of the retired thread-per-node cap of 512
+        let cap = crate::net::deploy::max_deploy_nodes(cfg.resolved_groups());
+        if n > cap {
+            return Err(GolfError::config(format!(
+                "deployment of {n} nodes exceeds the {cap}-node bound of \
+                 {} node group(s) ({} nodes per group); raise node_groups \
+                 (--node-groups), or pass nodes = N or a smaller scale",
+                cfg.resolved_groups(),
+                crate::net::deploy::MAX_GROUP_NODES
+            )));
+        }
         if e.failures {
             cfg = cfg.with_extreme_failures();
         }
@@ -595,13 +616,20 @@ nodes = 40
         spec.nodes = 0;
         spec.experiment.sampler = SamplerConfig::Matching;
         assert!(spec.deploy_config(&ds).is_err());
-        // one-thread-per-node runtime refuses implausible node counts
-        // (urls at scale 0.06 -> 600 training rows > MAX_DEPLOY_NODES)
-        let mut spec = DeploySpec::default();
-        spec.experiment.scale = 0.06;
+        // the group-aware bound refuses node counts one group cannot
+        // multiplex (urls at scale 0.25 -> 2500 training rows, beyond one
+        // group's MAX_GROUP_NODES) and names the knob that raises it
+        let mut spec = DeploySpec { node_groups: 1, ..Default::default() };
+        spec.experiment.scale = 0.25;
         let big = spec.experiment.build_dataset().unwrap();
-        assert!(big.n_train() > crate::net::deploy::MAX_DEPLOY_NODES);
-        assert!(spec.deploy_config(&big).is_err());
+        assert!(big.n_train() > crate::net::deploy::max_deploy_nodes(1));
+        let err = spec.deploy_config(&big).unwrap_err().to_string();
+        assert!(err.contains("node_groups"), "error must name the knob: {err}");
+        // more groups raise the bound: the same dataset deploys with 2
+        spec.node_groups = 2;
+        let cfg = spec.deploy_config(&big).unwrap();
+        assert_eq!(cfg.n_nodes, big.n_train());
+        assert_eq!(cfg.resolved_groups(), 2);
     }
 
     #[test]

@@ -1,8 +1,9 @@
-//! Deployment run orchestration (L3, DESIGN.md §10): bind one listener per
-//! node, generate the shared wall-clock failure schedules, spawn one OS
-//! thread per node (`net/deploy.rs`), run the periodic evaluation loop on
-//! the coordinating thread, then raise the stop flag and collect per-node
-//! stats plus the convergence [`Curve`].
+//! Deployment run orchestration (L3, DESIGN.md §10, §15): lease worker
+//! threads from the shared ledger, bind one listener per node *group*,
+//! generate the shared wall-clock failure schedules, spawn one group
+//! thread per range of nodes (`net/deploy.rs`), run the periodic
+//! evaluation loop on the coordinating thread, then raise the stop flag
+//! and collect per-node stats plus the convergence [`Curve`].
 //!
 //! The point of the coordinator is *parity*: [`run_deployment`] and a
 //! `GossipSim` run built from [`matched_sim_config`] share the failure
@@ -16,7 +17,10 @@ use crate::data::dataset::Dataset;
 use crate::eval::tracker::{point_from_errors, Curve};
 use crate::eval::zero_one_error;
 use crate::gossip::protocol::ProtocolConfig;
-use crate::net::deploy::{node_main, DeployConfig, NodeCtx, NodeStats, SharedRun, SIM_DELTA};
+use crate::net::deploy::{
+    group_main, group_ranges, DeployConfig, GroupCtx, NodeStats, SharedRun, MAX_GROUP_NODES,
+    SIM_DELTA,
+};
 use crate::scenario::driver::{resolve_churn_schedule, CompiledScenario, Mutation};
 use crate::util::rng::Rng;
 use crate::util::stats::mean;
@@ -24,7 +28,8 @@ use std::net::{SocketAddr, TcpListener};
 use std::sync::atomic::Ordering;
 use std::time::Instant;
 
-/// Aggregate counters of one deployment run (sums of [`NodeStats`]).
+/// Aggregate counters of one deployment run: sums of [`NodeStats`] plus the
+/// group-runtime scheduling metrics (how hard the readiness loops worked).
 #[derive(Clone, Debug, Default)]
 pub struct DeployStats {
     pub messages_sent: u64,
@@ -36,6 +41,17 @@ pub struct DeployStats {
     pub io_errors: u64,
     pub decode_errors: u64,
     pub conns_accepted: u64,
+    /// sends that rode an already-open outbound connection (LRU hits)
+    pub conns_reused: u64,
+    /// worker threads the run actually used (post-lease)
+    pub node_groups: usize,
+    /// mean complete frames decoded per readiness-loop wake, across groups
+    /// — high values mean the poll interval is batching well, near-zero
+    /// means the loops are mostly idle spinning
+    pub frames_per_wake: f64,
+    /// worst observed lag between any timer's due time and its firing wake,
+    /// in milliseconds — the group-runtime analogue of missed deadlines
+    pub timer_lag_ms_max: f64,
 }
 
 /// Result of one deployment run: the same curve shape a `GossipSim` run
@@ -136,27 +152,43 @@ pub fn run_deployment_observed(
     // the simulator samples evaluation peers over its *initial* membership
     let eval_peers = eval_rng.sample_indices(initial, cfg.eval_peers.min(initial));
 
-    // ---- bind all listeners first so every peer knows every address
-    let listeners: Vec<TcpListener> = (0..n)
+    // ---- worker-thread budget: lease the resolved group count from the
+    // shared ledger so deployments compose with sweeps and shard runners.
+    // A drained ledger degrades toward fewer groups, but never below the
+    // floor that keeps every group within MAX_GROUP_NODES — the per-group
+    // fd and scan budget is a harder constraint than oversubscription.
+    let min_groups = n.div_ceil(MAX_GROUP_NODES).max(1);
+    let lease = crate::util::threads::lease(cfg.resolved_groups());
+    let groups = lease.granted().max(min_groups).min(n);
+    let ranges = group_ranges(n, groups);
+
+    // ---- bind one listener per group so every peer knows every address
+    // (a node's address is its group's listener; routed frames carry the
+    // destination id the socket no longer implies)
+    let listeners: Vec<TcpListener> = ranges
+        .iter()
         .map(|_| {
             let l = TcpListener::bind(("127.0.0.1", 0))?;
             l.set_nonblocking(true)?;
             Ok(l)
         })
         .collect::<std::io::Result<_>>()?;
-    let addrs: Vec<SocketAddr> =
-        listeners.iter().map(|l| l.local_addr()).collect::<std::io::Result<_>>()?;
+    let mut addrs: Vec<SocketAddr> = Vec::with_capacity(n);
+    for (range, l) in ranges.iter().zip(&listeners) {
+        let a = l.local_addr()?;
+        addrs.extend(std::iter::repeat(a).take(range.len()));
+    }
 
     let shared = SharedRun::new(n, d);
     let start = Instant::now();
 
-    let (curve, per_node) = std::thread::scope(|scope| {
-        let handles: Vec<_> = listeners
-            .into_iter()
-            .enumerate()
-            .map(|(i, listener)| {
-                let ctx = NodeCtx {
-                    me: i,
+    let (curve, reports) = std::thread::scope(|scope| {
+        let handles: Vec<_> = ranges
+            .iter()
+            .zip(listeners)
+            .map(|(range, listener)| {
+                let ctx = GroupCtx {
+                    nodes: range.clone(),
                     listener,
                     addrs: &addrs,
                     cfg,
@@ -166,7 +198,7 @@ pub fn run_deployment_observed(
                     start,
                     shared: &shared,
                 };
-                scope.spawn(move || node_main(ctx))
+                scope.spawn(move || group_main(ctx))
             })
             .collect();
 
@@ -184,10 +216,16 @@ pub fn run_deployment_observed(
 
         // ---- shutdown and collect
         shared.stop.store(true, Ordering::SeqCst);
-        let per_node: Vec<NodeStats> =
-            handles.into_iter().map(|h| h.join().expect("node thread panicked")).collect();
-        (curve, per_node)
+        let reports: Vec<_> =
+            handles.into_iter().map(|h| h.join().expect("group thread panicked")).collect();
+        (curve, reports)
     });
+    drop(lease);
+
+    // group ranges are contiguous and ascending, so concatenating the
+    // per-group reports restores node order 0..n
+    let per_node: Vec<NodeStats> =
+        reports.iter().flat_map(|r| r.per_node.iter().cloned()).collect();
 
     // ---- final sweep over every *member* node's published model (nodes a
     // scenario never grew into stay out of the average), against the test
@@ -225,8 +263,20 @@ pub fn run_deployment_observed(
         stats.backlog_lost += s.backlog_lost;
         stats.io_errors += s.io_errors;
         stats.decode_errors += s.decode_errors;
-        stats.conns_accepted += s.conns_accepted;
+        stats.conns_reused += s.conns_reused;
     }
+    stats.node_groups = groups;
+    let (mut wakes, mut frames) = (0u64, 0u64);
+    for r in &reports {
+        stats.conns_accepted += r.conns_accepted;
+        // poisoned streams and misrouted frames are both framing-layer
+        // failures the per-node counters cannot see
+        stats.decode_errors += r.decode_errors + r.misrouted;
+        stats.timer_lag_ms_max = stats.timer_lag_ms_max.max(r.timer_lag_max.as_secs_f64() * 1e3);
+        wakes += r.wakes;
+        frames += r.frames;
+    }
+    stats.frames_per_wake = if wakes > 0 { frames as f64 / wakes as f64 } else { 0.0 };
     let mean_model_t = mean(&per_node.iter().map(|s| s.model_t as f64).collect::<Vec<_>>());
 
     Ok(DeployReport {

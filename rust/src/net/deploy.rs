@@ -1,28 +1,34 @@
 //! Deployed gossip learning node runtime: the same protocol logic as
 //! gossip/protocol.rs, but running as real concurrent peers over localhost
-//! TCP — one thread per node, framed wire messages (net/wire.rs), wall-clock
-//! gossip periods (DESIGN.md §10).
+//! TCP — **node groups** of peers multiplexed onto worker threads, framed
+//! wire messages (net/wire.rs), wall-clock gossip periods (DESIGN.md §10,
+//! §15).
 //!
-//! Production-shaped, unlike the earlier connect-per-message toy:
+//! The thread-per-node runtime of PR 3 stopped at `512` nodes: one OS
+//! thread plus one listener per peer does not reach the paper's "millions
+//! of users" scale on one machine.  This module is its node-group
+//! replacement:
 //!
-//! * **Persistent connections, multi-frame streaming.**  Each node keeps one
-//!   outbound TCP connection per recent peer (LRU-capped) and drains *every*
-//!   complete frame from every inbound connection per wake through
-//!   [`wire::FrameBuf`], instead of accepting a fresh connection and reading
-//!   a single frame.
-//! * **NEWSCAST over the wire.**  The piggybacked views carried by the frame
-//!   format are routed through [`PeerSampler`], so a deployment does the
-//!   paper's real gossip-based peer sampling instead of oracle selection
-//!   from the bootstrap address list.
-//! * **Failure injection on wall clock.**  The simulator's tick-based models
-//!   are reused directly: a [`ChurnSchedule`] pauses/resumes nodes (state
-//!   retained, incoming frames counted as backlog losses), and the
-//!   [`Network`] drop/delay model is applied at send, with tick delays
-//!   mapped to wall time via [`SIM_DELTA`].
-//! * **Per-node receive stats** ([`NodeStats`]), aggregated by the
-//!   coordinator (`coordinator/`), which also runs the periodic evaluation
-//!   loop that emits a real [`crate::eval::tracker::Curve`] on the same
-//!   cycle axis as a matched-config `GossipSim` run.
+//! * **One worker thread per group, not per node.**  Each group owns a
+//!   contiguous node range, one shared listener, and a readiness loop that
+//!   per wake accepts new connections, drains every complete frame from
+//!   every inbound stream through [`wire::FrameBuf`], retries pending
+//!   nonblocking writes via [`wire::WriteBuf`], and fires due timers.
+//! * **A per-group timer wheel** ([`TimerWheel`]) turns everything the old
+//!   loop polled for into explicit wall-clock events: each node's jittered
+//!   gossip period, its churn pause/resume boundaries, its delayed-send due
+//!   times, and its scenario-mutation cursor.
+//! * **Routed frames.**  Nodes share their group's listener, so a frame's
+//!   destination cannot be inferred from the socket it arrived on; the
+//!   runtime speaks wire v2 ([`wire::encode_routed`]), which carries an
+//!   explicit `dst` node id.
+//! * **Per-node semantics survive the inversion of control.**  Every node
+//!   still owns its RNG (same seed derivation as thread-per-node, so RNG
+//!   draw order per node is unchanged), [`PeerSampler`], [`ModelCache`],
+//!   learner state, [`Network`] failure model, scenario cursor, LRU-capped
+//!   [`OutConns`], and [`NodeStats`] — the group thread only multiplexes.
+//! * **Failure injection on wall clock**, unchanged from PR 3: tick-based
+//!   models are reused directly with [`SIM_DELTA`] ticks mapped onto Δ.
 
 use crate::data::dataset::Dataset;
 use crate::gossip::cache::ModelCache;
@@ -30,7 +36,7 @@ use crate::gossip::create_model::{create_model_step, Variant};
 use crate::gossip::message::ModelMsg;
 use crate::learning::linear::LinearModel;
 use crate::learning::Learner;
-use crate::net::wire::{self, FrameBuf};
+use crate::net::wire::{self, FrameBuf, WriteBuf};
 use crate::p2p::overlay::{PeerSampler, SamplerConfig};
 use crate::scenario::driver::{CompiledScenario, Mutation, ScenarioDriver};
 use crate::scenario::Scenario;
@@ -40,8 +46,9 @@ use crate::sim::network::{Fate, Network, NetworkConfig};
 use crate::util::bitset::Bitset;
 use crate::util::rng::Rng;
 use std::collections::HashMap;
-use std::io::{self, Read, Write};
+use std::io::{self, Read};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::ops::Range;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
@@ -57,17 +64,47 @@ pub const SIM_DELTA: Ticks = 1000;
 /// bounds the deployment at O(n · cap) sockets instead of O(n²).
 pub const OUT_CONN_CAP: usize = 16;
 
-/// Sanity ceiling for `config::DeploySpec`-driven runs: the runtime spawns
-/// one OS thread and one listener per node, so an unscaled dataset (urls:
-/// 10,000 rows) must not silently become 10,000 threads — beyond this the
-/// configuration layer asks for an explicit `nodes` / smaller `scale`.
-pub const MAX_DEPLOY_NODES: usize = 512;
+/// Ceiling on nodes multiplexed by one group thread, enforced at config
+/// time through [`max_deploy_nodes`]: one readiness loop scanning far more
+/// nodes than this would push per-wake work past the poll quantum, and the
+/// per-node socket budget (`OUT_CONN_CAP` outbound each) past the default
+/// fd limit.  10k nodes therefore need at least 5 groups.
+pub const MAX_GROUP_NODES: usize = 2048;
+
+/// The node-count bound for a deployment running `groups` worker threads —
+/// the group-aware successor of the retired thread-per-node
+/// `MAX_DEPLOY_NODES = 512` cap.
+pub fn max_deploy_nodes(groups: usize) -> usize {
+    groups.max(1).saturating_mul(MAX_GROUP_NODES)
+}
+
+/// Contiguous node ranges for `groups` worker threads, balanced to ±1 node
+/// (the same partition shape as the sharded simulator's row ranges, so a
+/// node id maps to its group by prefix sums, never by hashing).
+pub fn group_ranges(n: usize, groups: usize) -> Vec<Range<usize>> {
+    let g = groups.clamp(1, n.max(1));
+    let base = n / g;
+    let rem = n % g;
+    let mut out = Vec::with_capacity(g);
+    let mut start = 0;
+    for i in 0..g {
+        let len = base + usize::from(i < rem);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
 
 #[derive(Clone)]
 pub struct DeployConfig {
     /// concurrent peers; node i owns training row i (needs
     /// `dataset.n_train() >= n_nodes`, and equality for simulator parity)
     pub n_nodes: usize,
+    /// worker threads multiplexing the nodes; 0 = auto (the shared thread
+    /// ledger's budget, clamped to the node count).  The coordinator leases
+    /// the resolved count from `util::threads` so deployments compose with
+    /// sweeps and shard runners without oversubscribing the machine.
+    pub node_groups: usize,
     /// wall-clock gossip period Δ (one cycle)
     pub delta: Duration,
     /// run length in cycles (wall time = cycles * delta)
@@ -88,8 +125,8 @@ pub struct DeployConfig {
     /// declarative failure/workload timeline (DESIGN.md §11), compiled at
     /// [`SIM_DELTA`] ticks per cycle so one scenario file drives the
     /// simulator and the deployment identically.  Flash-crowd joiners idle
-    /// (threads up, protocol silent) until their join tick — the wall-clock
-    /// analogue of the simulator's model-store growth.
+    /// (state resident, protocol silent) until their join tick — the
+    /// wall-clock analogue of the simulator's model-store growth.
     pub scenario: Option<Scenario>,
 }
 
@@ -97,6 +134,7 @@ impl Default for DeployConfig {
     fn default() -> Self {
         DeployConfig {
             n_nodes: 16,
+            node_groups: 0,
             delta: Duration::from_millis(30),
             cycles: 30,
             variant: Variant::Mu,
@@ -120,6 +158,20 @@ impl DeployConfig {
         self.network = NetworkConfig::extreme(SIM_DELTA);
         self.churn = Some(ChurnConfig::paper_default(SIM_DELTA));
         self
+    }
+
+    /// The worker-thread count this configuration asks for: an explicit
+    /// `node_groups`, or the shared thread-ledger budget, clamped to
+    /// `[1, n_nodes]`.  The ledger may still grant fewer at run time
+    /// (degrading toward one group) when sweeps or shard runners hold the
+    /// tokens.
+    pub fn resolved_groups(&self) -> usize {
+        let want = if self.node_groups == 0 {
+            crate::util::threads::budget()
+        } else {
+            self.node_groups
+        };
+        want.clamp(1, self.n_nodes.max(1))
     }
 
     /// Map a tick count (simulator scale) to wall time: Δ = [`SIM_DELTA`].
@@ -178,15 +230,15 @@ pub struct NodeStats {
     pub backlog_lost: u64,
     /// connect/write failures — real message loss the protocol tolerates
     pub io_errors: u64,
-    /// malformed frames (the connection is dropped after one)
+    /// malformed frames addressed to this node (wrong dimensionality)
     pub decode_errors: u64,
-    /// inbound connections accepted over the run
-    pub conns_accepted: u64,
+    /// sends that rode an already-open outbound connection (LRU hit)
+    pub conns_reused: u64,
     /// freshest model's update counter at shutdown
     pub model_t: u64,
 }
 
-/// State shared between the coordinator, the node threads, and the
+/// State shared between the coordinator, the group threads, and the
 /// evaluation loop.
 pub(crate) struct SharedRun {
     pub(crate) stop: AtomicBool,
@@ -208,10 +260,14 @@ impl SharedRun {
     }
 }
 
-/// Everything one node thread needs.
-pub(crate) struct NodeCtx<'a> {
-    pub(crate) me: usize,
+/// Everything one group thread needs.
+pub(crate) struct GroupCtx<'a> {
+    /// contiguous node range this thread multiplexes
+    pub(crate) nodes: Range<usize>,
+    /// the group's shared listener — routed (v2) frames carry the
+    /// destination node id this listener can no longer imply
     pub(crate) listener: TcpListener,
+    /// every node's address = its group's listener address
     pub(crate) addrs: &'a [SocketAddr],
     pub(crate) cfg: &'a DeployConfig,
     pub(crate) data: &'a Dataset,
@@ -222,6 +278,134 @@ pub(crate) struct NodeCtx<'a> {
     pub(crate) start: Instant,
     pub(crate) shared: &'a SharedRun,
 }
+
+/// What one group thread reports at shutdown: its nodes' counters plus the
+/// group-level scheduling and I/O pressure metrics the coordinator
+/// aggregates into `DeployStats`.
+#[derive(Debug, Default)]
+pub(crate) struct GroupReport {
+    pub(crate) per_node: Vec<NodeStats>,
+    /// readiness-loop iterations
+    pub(crate) wakes: u64,
+    /// complete frames pulled off inbound streams (before routing/gating)
+    pub(crate) frames: u64,
+    /// worst observed lag between a timer's due time and its firing wake
+    pub(crate) timer_lag_max: Duration,
+    /// inbound connections accepted on the group listener
+    pub(crate) conns_accepted: u64,
+    /// poisoned streams (bad header / malformed frame; connection dropped)
+    pub(crate) decode_errors: u64,
+    /// routed frames addressed outside this group's node range
+    pub(crate) misrouted: u64,
+}
+
+// ---- timer wheel --------------------------------------------------------
+
+/// What a due timer means for one node — the inversion of control at the
+/// heart of the node-group runtime: everything the thread-per-node loop
+/// checked by polling is an explicit wall-clock event here.
+enum TimerKind {
+    /// Algorithm-1 active gossip period; re-armed with fresh jitter on fire
+    Gossip,
+    /// a send held back by the injected delay model, carrying its frame
+    Delayed { dst: usize, bytes: Vec<u8> },
+    /// the node's next churn pause/resume boundary
+    Churn,
+    /// the node's scenario cursor has a mutation coming due
+    Scenario,
+}
+
+struct TimerEntry {
+    due: Instant,
+    node: usize,
+    kind: TimerKind,
+}
+
+/// Hashed timer wheel: fixed wall-clock slots, entries filed by due time
+/// modulo one revolution.  Entries further out than a revolution land in
+/// the farthest slot and are re-filed when it drains, so scheduling and
+/// firing stay O(1) amortized regardless of horizon — the group loop
+/// advances the wheel once per wake instead of scanning every node's
+/// timers.
+struct TimerWheel {
+    slots: Vec<Vec<TimerEntry>>,
+    /// wall time per slot
+    res: Duration,
+    /// slot index the cursor sits in
+    cur: usize,
+    /// slot-granular frontier: every whole slot before this has drained
+    cursor: Instant,
+}
+
+impl TimerWheel {
+    fn new(start: Instant, res: Duration, slots: usize) -> Self {
+        TimerWheel {
+            slots: (0..slots.max(2)).map(|_| Vec::new()).collect(),
+            res: res.max(Duration::from_micros(50)),
+            cur: 0,
+            cursor: start,
+        }
+    }
+
+    fn slot_of(&self, due: Instant) -> usize {
+        let ahead = due.saturating_duration_since(self.cursor);
+        let steps = (ahead.as_nanos() / self.res.as_nanos()) as usize;
+        (self.cur + steps.min(self.slots.len() - 1)) % self.slots.len()
+    }
+
+    fn schedule(&mut self, due: Instant, node: usize, kind: TimerKind) {
+        let due = due.max(self.cursor);
+        let slot = self.slot_of(due);
+        self.slots[slot].push(TimerEntry { due, node, kind });
+    }
+
+    /// Advance to `now`, moving every entry due at or before `now` into
+    /// `fired` (ordering is slot-granular; sub-resolution reordering sits
+    /// below the poll quantum).  Returns the worst firing lag observed.
+    fn advance(&mut self, now: Instant, fired: &mut Vec<TimerEntry>) -> Duration {
+        let mut lag = Duration::ZERO;
+        loop {
+            let slot_end = self.cursor + self.res;
+            if slot_end <= now {
+                // the whole slot is in the past: drain it, re-filing
+                // entries that belong to a later revolution
+                let entries = std::mem::take(&mut self.slots[self.cur]);
+                self.cur = (self.cur + 1) % self.slots.len();
+                self.cursor = slot_end;
+                for e in entries {
+                    if e.due <= now {
+                        lag = lag.max(now.saturating_duration_since(e.due));
+                        fired.push(e);
+                    } else {
+                        let slot = self.slot_of(e.due);
+                        self.slots[slot].push(e);
+                    }
+                }
+            } else {
+                // partial slot: fire only what is already due, keep the rest
+                let slot = &mut self.slots[self.cur];
+                let mut i = 0;
+                while i < slot.len() {
+                    if slot[i].due <= now {
+                        let e = slot.swap_remove(i);
+                        lag = lag.max(now.saturating_duration_since(e.due));
+                        fired.push(e);
+                    } else {
+                        i += 1;
+                    }
+                }
+                return lag;
+            }
+        }
+    }
+}
+
+/// Slots per group wheel.  At the default resolution (= poll interval ≈
+/// Δ/30) one revolution spans ≈ 8.5Δ, so only the tail of the extreme
+/// delay model ([Δ, 10Δ]) ever re-files.
+const WHEEL_SLOTS: usize = 256;
+
+// ---- per-connection I/O state -------------------------------------------
 
 /// One accepted inbound connection with its incremental frame buffer.
 struct InConn {
@@ -236,9 +420,9 @@ impl InConn {
     }
 
     /// Pull everything currently readable into the frame buffer and return
-    /// all complete frames.  `closed` reports EOF / error / poisoned
-    /// framing; buffered frames are still returned first.
-    fn poll(&mut self) -> (Vec<ModelMsg>, u64, bool) {
+    /// all complete routed frames as `(dst, msg)`.  `closed` reports EOF /
+    /// error / poisoned framing; buffered frames are still returned first.
+    fn poll(&mut self) -> (Vec<(usize, ModelMsg)>, u64, bool) {
         let mut tmp = [0u8; 8192];
         let mut closed = false;
         loop {
@@ -257,7 +441,7 @@ impl InConn {
         }
         let mut msgs = Vec::new();
         let mut bad = 0;
-        while let Some(res) = self.frames.next_frame() {
+        while let Some(res) = self.frames.next_routed() {
             match res {
                 Ok(m) => msgs.push(m),
                 Err(_) => {
@@ -273,16 +457,30 @@ impl InConn {
 }
 
 /// Persistent outbound connections, LRU-capped at `cap` so a large
-/// deployment does not hold O(n²) sockets.
+/// deployment does not hold O(n²) sockets.  Streams are nonblocking: a
+/// send queues the frame whole and flushes what the socket accepts;
+/// `flush_pending` resumes partial writes on later readiness passes.
+struct OutConn {
+    stream: TcpStream,
+    wbuf: WriteBuf,
+}
+
 struct OutConns {
-    conns: HashMap<usize, TcpStream>,
+    conns: HashMap<usize, OutConn>,
     order: Vec<usize>,
     cap: usize,
+    /// evictions that discarded pending bytes (counted as message loss)
+    dropped_pending: u64,
 }
 
 impl OutConns {
     fn new(cap: usize) -> Self {
-        OutConns { conns: HashMap::new(), order: Vec::new(), cap: cap.max(1) }
+        OutConns {
+            conns: HashMap::new(),
+            order: Vec::new(),
+            cap: cap.max(1),
+            dropped_pending: 0,
+        }
     }
 
     #[allow(dead_code)] // used by the connection-reuse tests
@@ -290,45 +488,98 @@ impl OutConns {
         self.conns.len()
     }
 
-    /// Write a full frame to `dst`, connecting (or reconnecting) if needed.
-    /// An error means the frame is lost — the protocol tolerates message
-    /// loss by design, so callers just count it.
-    fn send(&mut self, dst: usize, addr: SocketAddr, bytes: &[u8]) -> io::Result<()> {
-        if self.conns.contains_key(&dst) {
+    /// Queue a full frame to `dst`, connecting (or reconnecting) if needed,
+    /// and flush as much as the socket accepts now.  `Ok(reused)` reports
+    /// whether an already-open connection carried the frame (`WouldBlock`
+    /// leaves the unsent suffix pending for `flush_pending`); an error
+    /// means the frame is lost — the protocol tolerates message loss by
+    /// design, so callers just count it.
+    fn send(&mut self, dst: usize, addr: SocketAddr, bytes: &[u8]) -> io::Result<bool> {
+        let reused = if self.conns.contains_key(&dst) {
             // LRU: a reused connection moves to the back of the order
             self.order.retain(|&p| p != dst);
             self.order.push(dst);
+            true
         } else {
             if self.conns.len() >= self.cap {
                 let evict = self.order.remove(0);
-                self.conns.remove(&evict); // dropping closes the socket
+                if let Some(c) = self.conns.remove(&evict) {
+                    // dropping closes the socket; pending bytes go with it
+                    if c.wbuf.pending() > 0 {
+                        self.dropped_pending += 1;
+                    }
+                }
             }
             let stream = TcpStream::connect_timeout(&addr, Duration::from_millis(200))?;
             stream.set_nodelay(true).ok();
-            stream.set_write_timeout(Some(Duration::from_millis(100)))?;
-            self.conns.insert(dst, stream);
+            stream.set_nonblocking(true)?;
+            self.conns.insert(dst, OutConn { stream, wbuf: WriteBuf::default() });
             self.order.push(dst);
+            false
+        };
+        let conn = self.conns.get_mut(&dst).unwrap();
+        conn.wbuf.push(bytes);
+        match conn.wbuf.flush(&mut conn.stream) {
+            Ok(_) => Ok(reused),
+            Err(e) => {
+                // drop the broken connection; the next send reconnects
+                self.conns.remove(&dst);
+                self.order.retain(|&p| p != dst);
+                Err(e)
+            }
         }
-        let res = self.conns.get_mut(&dst).unwrap().write_all(bytes);
-        if res.is_err() {
-            // drop the broken connection; the next send reconnects
+    }
+
+    /// Retry partial writes left pending by `WouldBlock`; returns the
+    /// number of connections dropped on hard errors (each counts as
+    /// message loss).
+    fn flush_pending(&mut self) -> u64 {
+        let mut broken = Vec::new();
+        for (&dst, c) in self.conns.iter_mut() {
+            if c.wbuf.pending() > 0 && c.wbuf.flush(&mut c.stream).is_err() {
+                broken.push(dst);
+            }
+        }
+        let errs = broken.len() as u64;
+        for dst in broken {
             self.conns.remove(&dst);
             self.order.retain(|&p| p != dst);
         }
-        res
+        errs
     }
 }
 
-/// A send delayed by the injected network model, waiting for its due time.
-struct DelayedSend {
-    due: Instant,
-    dst: usize,
-    bytes: Vec<u8>,
+// ---- per-node protocol state --------------------------------------------
+
+/// Everything one node owns — exactly the per-node state of the retired
+/// thread-per-node runtime, minus the thread.  The group loop indexes into
+/// its `Vec<NodeState>` by `node - range.start`.
+struct NodeState {
+    rng: Rng,
+    sampler: PeerSampler,
+    net: Network,
+    cache: ModelCache,
+    last_recv: LinearModel,
+    stats: NodeStats,
+    out: OutConns,
+    scn: Option<ScenarioDriver>,
+    join_tick: Ticks,
+    forced_off: bool,
+    /// churn liveness cache, maintained by `TimerKind::Churn` events so the
+    /// hot receive path skips the per-frame binary search over the schedule
+    churn_online: bool,
+    drift_sign: f32,
 }
 
-/// Poll interval of the node event loop: fine enough that delivery latency
-/// stays well under Δ, coarse enough that hundreds of node threads do not
-/// saturate a small machine with wakeups.
+impl NodeState {
+    fn online(&self, now_ticks: Ticks) -> bool {
+        now_ticks >= self.join_tick && !self.forced_off && self.churn_online
+    }
+}
+
+/// Poll interval of the group readiness loop: fine enough that delivery
+/// latency stays well under Δ, coarse enough that a handful of group
+/// threads do not saturate a small machine with wakeups.
 fn poll_interval(delta: Duration) -> Duration {
     (delta / 30).clamp(Duration::from_micros(200), Duration::from_millis(2))
 }
@@ -344,78 +595,134 @@ fn publish(slot: &Mutex<LinearModel>, m: &LinearModel) {
     *slot.lock().unwrap() = m.clone();
 }
 
-/// One node's event loop (Algorithm 1 over real sockets).  Runs until the
-/// coordinator raises the stop flag; returns the node's counters.
-pub(crate) fn node_main(ctx: NodeCtx<'_>) -> NodeStats {
+fn send_now(st: &mut NodeState, dst: usize, addr: SocketAddr, bytes: &[u8]) {
+    match st.out.send(dst, addr, bytes) {
+        Ok(true) => st.stats.conns_reused += 1,
+        Ok(false) => {}
+        Err(_) => st.stats.io_errors += 1,
+    }
+}
+
+/// One group thread's event loop: multiplex `ctx.nodes` over a shared
+/// listener, a timer wheel, and per-node nonblocking sockets until the
+/// coordinator raises the stop flag.  Per wake it (1) fires due timers —
+/// scenario/churn state transitions first, so gating matches the head of
+/// the retired per-node loop — (2) accepts and drains inbound streams,
+/// (3) fires the buffered gossip/delayed-send events, (4) retries pending
+/// partial writes.
+pub(crate) fn group_main(ctx: GroupCtx<'_>) -> GroupReport {
     let cfg = ctx.cfg;
-    let me = ctx.me;
     let d = ctx.data.d();
-    let mut rng = Rng::new(cfg.seed ^ (me as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
-    // each node owns a sampler instance and uses only its own view slot —
-    // the same NEWSCAST code path the simulator exercises, fed here by the
-    // views that arrive piggybacked on real frames
-    let mut sampler = PeerSampler::new_local(cfg.sampler, me, cfg.n_nodes, SIM_DELTA, &mut rng);
+    let n0 = ctx.nodes.start;
+    let horizon = SIM_DELTA * (cfg.cycles + 1);
+    let poll = poll_interval(cfg.delta);
     // liveness is not globally observable in a deployment; samplers treat
     // every peer as a candidate and sends to offline peers are simply lost
     let assume_online = Bitset::filled(cfg.n_nodes, true);
-    let mut net = Network::new(cfg.network);
-    let mut cache = ModelCache::new(cfg.cache_size);
-    cache.add(LinearModel::zeros(d));
-    let mut last_recv = LinearModel::zeros(d);
-    let mut stats = NodeStats::default();
-    let x = ctx.data.train.row(me);
-    let base_y = ctx.data.train_y[me];
 
+    let mut wheel = TimerWheel::new(ctx.start, poll, WHEEL_SLOTS);
+    let mut nodes: Vec<NodeState> = Vec::with_capacity(ctx.nodes.len());
+    for me in ctx.nodes.clone() {
+        // per-node RNG stream and draw order are identical to the
+        // thread-per-node runtime: seed derivation, then sampler init, then
+        // the first gossip jitter
+        let mut rng = Rng::new(cfg.seed ^ (me as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let sampler = PeerSampler::new_local(cfg.sampler, me, cfg.n_nodes, SIM_DELTA, &mut rng);
+        let mut cache = ModelCache::new(cfg.cache_size);
+        cache.add(LinearModel::zeros(d));
+        let scn = ctx.scn.map(|c| ScenarioDriver::new(c.clone()));
+        let join_tick = ctx.scn.map_or(0, |c| c.join_tick(me));
+        let churn_online = ctx.churn.map_or(true, |ch| ch.is_online(me, 0));
+        wheel.schedule(ctx.start + jitter(cfg.delta, &mut rng), me, TimerKind::Gossip);
+        if let Some(ch) = ctx.churn {
+            if let Some((t, _)) = ch.next_transition(me, 0) {
+                wheel.schedule(ctx.start + cfg.ticks_to_wall(t), me, TimerKind::Churn);
+            }
+        }
+        if let Some(t) = scn.as_ref().and_then(|drv| drv.next_due_tick()) {
+            wheel.schedule(ctx.start + cfg.ticks_to_wall(t), me, TimerKind::Scenario);
+        }
+        nodes.push(NodeState {
+            rng,
+            sampler,
+            net: Network::new(cfg.network),
+            cache,
+            last_recv: LinearModel::zeros(d),
+            stats: NodeStats::default(),
+            out: OutConns::new(OUT_CONN_CAP),
+            scn,
+            join_tick,
+            forced_off: false,
+            churn_online,
+            drift_sign: 1.0,
+        });
+    }
+
+    let mut report = GroupReport::default();
     let mut in_conns: Vec<InConn> = Vec::new();
-    let mut out = OutConns::new(OUT_CONN_CAP);
-    let mut delayed: Vec<DelayedSend> = Vec::new();
-
-    // scenario timeline: every node drives its own cursor over the shared
-    // compiled mutation list (seed-deterministic, so all nodes agree)
-    let mut scn_drv = ctx.scn.map(|c| ScenarioDriver::new(c.clone()));
-    let join_tick = ctx.scn.map_or(0, |c| c.join_tick(me));
-    let mut forced_off = false;
-    let mut drift_sign = 1.0f32;
-
-    let horizon = SIM_DELTA * (cfg.cycles + 1);
-    let poll = poll_interval(cfg.delta);
-    let mut next_send = ctx.start + jitter(cfg.delta, &mut rng);
+    let mut fired: Vec<TimerEntry> = Vec::new();
+    let mut acts: Vec<TimerEntry> = Vec::new();
 
     while !ctx.shared.stop.load(Ordering::Relaxed) {
         let now = Instant::now();
         let now_ticks = cfg
             .wall_to_ticks(now.saturating_duration_since(ctx.start))
             .min(horizon - 1);
-        // apply scenario mutations whose tick boundary has passed: network
-        // models mutate in place, drift flips the local label, leave waves
-        // force this node offline until restored
-        while let Some(m) = scn_drv.as_mut().and_then(|d| d.pop_due(now_ticks)) {
-            match m {
-                Mutation::SetDrop(p) => net.cfg.drop_prob = p,
-                Mutation::SetDelay(model) => net.cfg.delay = model,
-                Mutation::SetPartition(c) => net.set_partition(Some(c)),
-                Mutation::Heal => net.set_partition(None),
-                Mutation::Drift => drift_sign = -drift_sign,
-                Mutation::ForceOffline(ids) => forced_off |= ids.contains(&me),
-                Mutation::Restore(ids) => {
-                    if ids.contains(&me) {
-                        forced_off = false;
+        report.wakes += 1;
+
+        // ---- timers: everything due since the last wake.  State
+        // transitions (scenario, churn) apply immediately; gossip and
+        // delayed sends are buffered to fire after this wake's receives,
+        // preserving the mutations → reads → sends order of the retired
+        // per-node loop.
+        fired.clear();
+        let lag = wheel.advance(now, &mut fired);
+        report.timer_lag_max = report.timer_lag_max.max(lag);
+        for e in fired.drain(..) {
+            let idx = e.node - n0;
+            match e.kind {
+                TimerKind::Scenario => {
+                    let st = &mut nodes[idx];
+                    while let Some(m) = st.scn.as_mut().and_then(|drv| drv.pop_due(now_ticks)) {
+                        match m {
+                            Mutation::SetDrop(p) => st.net.cfg.drop_prob = p,
+                            Mutation::SetDelay(model) => st.net.cfg.delay = model,
+                            Mutation::SetPartition(c) => st.net.set_partition(Some(c)),
+                            Mutation::Heal => st.net.set_partition(None),
+                            Mutation::Drift => st.drift_sign = -st.drift_sign,
+                            Mutation::ForceOffline(ids) => st.forced_off |= ids.contains(&e.node),
+                            Mutation::Restore(ids) => {
+                                if ids.contains(&e.node) {
+                                    st.forced_off = false;
+                                }
+                            }
+                            // membership growth is precomputed per node via
+                            // join_tick
+                            Mutation::Grow(_) => {}
+                        }
+                    }
+                    if let Some(t) = st.scn.as_ref().and_then(|drv| drv.next_due_tick()) {
+                        wheel.schedule(ctx.start + cfg.ticks_to_wall(t), e.node, TimerKind::Scenario);
                     }
                 }
-                // membership growth is precomputed per node via join_tick
-                Mutation::Grow(_) => {}
+                TimerKind::Churn => {
+                    if let Some(ch) = ctx.churn {
+                        nodes[idx].churn_online = ch.is_online(e.node, now_ticks);
+                        if let Some((t, _)) = ch.next_transition(e.node, now_ticks) {
+                            wheel.schedule(ctx.start + cfg.ticks_to_wall(t), e.node, TimerKind::Churn);
+                        }
+                    }
+                }
+                _ => acts.push(e),
             }
         }
-        let online = now_ticks >= join_tick
-            && !forced_off
-            && ctx.churn.map_or(true, |ch| ch.is_online(me, now_ticks));
 
-        // ---- accept new inbound connections (kept until EOF)
+        // ---- accept new inbound connections on the group listener
         loop {
             match ctx.listener.accept() {
                 Ok((s, _)) => {
                     if let Ok(c) = InConn::new(s) {
-                        stats.conns_accepted += 1;
+                        report.conns_accepted += 1;
                         in_conns.push(c);
                     }
                 }
@@ -424,44 +731,55 @@ pub(crate) fn node_main(ctx: NodeCtx<'_>) -> NodeStats {
             }
         }
 
-        // ---- drain every complete frame from every connection
+        // ---- drain every complete frame from every connection, routing
+        // each to its destination node's state machine
         let mut k = 0;
         while k < in_conns.len() {
             let (msgs, bad, closed) = in_conns[k].poll();
-            stats.decode_errors += bad;
-            for mut msg in msgs {
-                if !online {
+            report.frames += msgs.len() as u64;
+            report.decode_errors += bad;
+            for (dst, mut msg) in msgs {
+                if dst < ctx.nodes.start || dst >= ctx.nodes.end {
+                    // a frame for another group's node reached our
+                    // listener: sender bug — never apply it to a wrong node
+                    report.misrouted += 1;
+                    continue;
+                }
+                let st = &mut nodes[dst - n0];
+                if !st.online(now_ticks) {
                     // churn: the node is paused — the message is lost, as
                     // in the simulator's offline delivery
-                    stats.backlog_lost += 1;
+                    st.stats.backlog_lost += 1;
                     continue;
                 }
                 if msg.w.len() != d {
                     // wrong dimensionality: structurally valid frame from a
                     // confused peer — rejected like any malformed input
-                    stats.decode_errors += 1;
+                    st.stats.decode_errors += 1;
                     continue;
                 }
-                stats.received += 1;
+                st.stats.received += 1;
                 // NEWSCAST view merge rides along with learning gossip.
-                // Descriptor node ids come off the wire, so bound-check them
-                // before they can enter the view (and later index addrs).
+                // Descriptor node ids come off the wire, so bound-check
+                // them before they can enter the view (and later index
+                // addrs).
                 msg.view.retain(|desc| desc.node < cfg.n_nodes);
-                sampler.on_receive(me, &msg.view);
+                st.sampler.on_receive(dst, &msg.view);
                 // the wire carries materialized weights (scale folded)
                 let incoming = LinearModel::from_weights(msg.w, msg.t);
+                let x = ctx.data.train.row(dst);
                 // concept drift re-labels the local example with the
                 // scenario's current sign
                 let created = create_model_step(
                     cfg.variant,
                     &cfg.learner,
                     incoming,
-                    &mut last_recv,
+                    &mut st.last_recv,
                     &x,
-                    drift_sign * base_y,
+                    st.drift_sign * ctx.data.train_y[dst],
                 );
-                publish(&ctx.shared.models[me], &created);
-                cache.add(created);
+                publish(&ctx.shared.models[dst], &created);
+                st.cache.add(created);
             }
             if closed {
                 in_conns.swap_remove(k);
@@ -470,60 +788,78 @@ pub(crate) fn node_main(ctx: NodeCtx<'_>) -> NodeStats {
             }
         }
 
-        // ---- release sends whose injected delay has elapsed
-        let mut i = 0;
-        while i < delayed.len() {
-            if delayed[i].due <= now {
-                let s = delayed.swap_remove(i);
-                if out.send(s.dst, ctx.addrs[s.dst], &s.bytes).is_err() {
-                    stats.io_errors += 1;
-                }
-            } else {
-                i += 1;
-            }
-        }
-
-        // ---- Algorithm 1 active loop: periodic send of the freshest model
-        if now >= next_send {
-            next_send = now + jitter(cfg.delta, &mut rng);
-            if online {
-                // belt-and-braces: a sampler can only know ids < n_nodes
-                // (views are bound-checked on receive), but never let a bad
-                // id reach the addrs index
-                if let Some(dst) = sampler
-                    .select(me, now_ticks, &assume_online, &mut rng)
-                    .filter(|&p| p < cfg.n_nodes)
-                {
-                    let freshest = cache.freshest();
+        // ---- fire the buffered per-node events: Algorithm 1's periodic
+        // send, and delayed sends whose injected latency elapsed
+        for e in acts.drain(..) {
+            let idx = e.node - n0;
+            match e.kind {
+                TimerKind::Gossip => {
+                    // re-arm first: the jitter draw precedes the peer
+                    // selection draw, as in the retired runtime
+                    let due = now + jitter(cfg.delta, &mut nodes[idx].rng);
+                    wheel.schedule(due, e.node, TimerKind::Gossip);
+                    let st = &mut nodes[idx];
+                    if !st.online(now_ticks) {
+                        continue;
+                    }
+                    // belt-and-braces: a sampler can only know ids <
+                    // n_nodes (views are bound-checked on receive), but
+                    // never let a bad id reach the addrs index
+                    let Some(dst) = st
+                        .sampler
+                        .select(e.node, now_ticks, &assume_online, &mut st.rng)
+                        .filter(|&p| p < cfg.n_nodes)
+                    else {
+                        continue;
+                    };
+                    let freshest = st.cache.freshest();
                     let msg = ModelMsg {
-                        src: me,
+                        src: e.node,
                         w: freshest.weights(),
                         scale: 1.0,
                         t: freshest.t,
-                        view: sampler.payload(me, now_ticks),
+                        view: st.sampler.payload(e.node, now_ticks),
                     };
-                    stats.sent += 1;
-                    stats.bytes_sent += msg.wire_bytes() as u64;
+                    st.stats.sent += 1;
+                    // byte accounting stays on the v1 frame size shared
+                    // with the simulator; the +8 routing bytes are a
+                    // runtime addressing artifact, not protocol traffic
+                    st.stats.bytes_sent += msg.wire_bytes() as u64;
                     ctx.shared.messages_sent.fetch_add(1, Ordering::Relaxed);
-                    match net.transmit_between(me, dst, &mut rng) {
-                        Fate::Dropped => stats.sim_dropped += 1,
-                        Fate::Blocked => stats.partition_blocked += 1,
+                    match st.net.transmit_between(e.node, dst, &mut st.rng) {
+                        Fate::Dropped => st.stats.sim_dropped += 1,
+                        Fate::Blocked => st.stats.partition_blocked += 1,
                         Fate::Deliver(delay_ticks) => {
-                            let bytes = wire::encode(&msg);
+                            let bytes = wire::encode_routed(dst, &msg);
                             let due = now + cfg.ticks_to_wall(delay_ticks);
-                            delayed.push(DelayedSend { due, dst, bytes });
+                            wheel.schedule(due, e.node, TimerKind::Delayed { dst, bytes });
                         }
                     }
                 }
+                TimerKind::Delayed { dst, bytes } => {
+                    send_now(&mut nodes[idx], dst, ctx.addrs[dst], &bytes);
+                }
+                _ => unreachable!("state timers handled before receives"),
             }
+        }
+
+        // ---- resume partial writes left pending by WouldBlock
+        for st in nodes.iter_mut() {
+            st.stats.io_errors += st.out.flush_pending();
         }
 
         std::thread::sleep(poll);
     }
 
-    stats.model_t = cache.freshest().t;
-    publish(&ctx.shared.models[me], cache.freshest());
-    stats
+    // ---- shutdown: publish final models, collect counters
+    for (i, mut st) in nodes.into_iter().enumerate() {
+        let me = n0 + i;
+        st.stats.model_t = st.cache.freshest().t;
+        st.stats.io_errors += st.out.dropped_pending;
+        publish(&ctx.shared.models[me], st.cache.freshest());
+        report.per_node.push(st.stats);
+    }
+    report
 }
 
 #[cfg(test)]
@@ -541,22 +877,24 @@ mod tests {
         }
     }
 
-    /// The tentpole behavior: one persistent connection carries many frames,
-    /// and a single poll drains every complete frame.
+    /// The readiness-loop invariant: one persistent connection carries many
+    /// routed frames, and a single poll drains every complete frame with
+    /// its destination intact.
     #[test]
-    fn persistent_connection_drains_all_frames_per_poll() {
+    fn persistent_connection_drains_all_routed_frames_per_poll() {
         let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
         let addr = listener.local_addr().unwrap();
         let mut sender = TcpStream::connect(addr).unwrap();
         sender.set_nodelay(true).unwrap();
         for t in 0..5 {
-            wire::write_frame(&mut sender, &msg(7, t)).unwrap();
+            use std::io::Write;
+            sender.write_all(&wire::encode_routed(t as usize + 10, &msg(7, t))).unwrap();
         }
         let (stream, _) = listener.accept().unwrap();
         let mut conn = InConn::new(stream).unwrap();
         // nonblocking localhost read: poll until all five frames landed
         let deadline = Instant::now() + Duration::from_secs(5);
-        let mut got: Vec<ModelMsg> = Vec::new();
+        let mut got: Vec<(usize, ModelMsg)> = Vec::new();
         while got.len() < 5 && Instant::now() < deadline {
             let (msgs, bad, closed) = conn.poll();
             assert_eq!(bad, 0);
@@ -565,20 +903,22 @@ mod tests {
             std::thread::sleep(Duration::from_millis(1));
         }
         assert_eq!(got.len(), 5, "one wake must drain every buffered frame");
-        for (t, m) in got.iter().enumerate() {
+        for (t, (dst, m)) in got.iter().enumerate() {
+            assert_eq!(*dst, t + 10, "routing survives multiplexed streams");
             assert_eq!(m.t, t as u64);
             assert_eq!(m.w.len(), 7);
             assert_eq!(m.view.len(), 1, "views travel over the wire");
         }
         // the connection stays open: more frames flow without reconnecting
-        wire::write_frame(&mut sender, &msg(7, 99)).unwrap();
+        use std::io::Write;
+        sender.write_all(&wire::encode_routed(3, &msg(7, 99))).unwrap();
         let deadline = Instant::now() + Duration::from_secs(5);
         let mut late = Vec::new();
         while late.is_empty() && Instant::now() < deadline {
             late.extend(conn.poll().0);
             std::thread::sleep(Duration::from_millis(1));
         }
-        assert_eq!(late[0].t, 99);
+        assert_eq!(late[0].1.t, 99);
     }
 
     #[test]
@@ -586,7 +926,8 @@ mod tests {
         let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
         let addr = listener.local_addr().unwrap();
         let mut sender = TcpStream::connect(addr).unwrap();
-        wire::write_frame(&mut sender, &msg(3, 1)).unwrap();
+        use std::io::Write;
+        sender.write_all(&wire::encode_routed(0, &msg(3, 1))).unwrap();
         drop(sender);
         let (stream, _) = listener.accept().unwrap();
         let mut conn = InConn::new(stream).unwrap();
@@ -610,10 +951,10 @@ mod tests {
         let addrs: Vec<SocketAddr> =
             listeners.iter().map(|l| l.local_addr().unwrap()).collect();
         let mut out = OutConns::new(2);
-        let frame = wire::encode(&msg(2, 1));
+        let frame = wire::encode_routed(0, &msg(2, 1));
         // two sends to the same peer share one connection
-        out.send(0, addrs[0], &frame).unwrap();
-        out.send(0, addrs[0], &frame).unwrap();
+        assert!(!out.send(0, addrs[0], &frame).unwrap(), "first send connects");
+        assert!(out.send(0, addrs[0], &frame).unwrap(), "second send reuses");
         assert_eq!(out.len(), 1);
         let (first, _) = listeners[0].accept().unwrap();
         listeners[0].set_nonblocking(true).unwrap();
@@ -635,11 +976,86 @@ mod tests {
         out.send(2, addrs[2], &frame).unwrap(); // evicts 1, not 0
         assert_eq!(out.len(), 2, "LRU cap must evict");
         // peer 0's connection survived: another send opens no new connection
-        out.send(0, addrs[0], &frame).unwrap();
+        assert!(out.send(0, addrs[0], &frame).unwrap());
         assert!(
             listeners[0].accept().is_err(),
             "the hot connection must not be the one evicted"
         );
+    }
+
+    #[test]
+    fn timer_wheel_fires_due_entries_in_slot_order() {
+        let t0 = Instant::now();
+        let res = Duration::from_millis(1);
+        let mut wheel = TimerWheel::new(t0, res, 16);
+        wheel.schedule(t0 + Duration::from_millis(5), 2, TimerKind::Gossip);
+        wheel.schedule(t0 + Duration::from_millis(1), 0, TimerKind::Gossip);
+        wheel.schedule(t0 + Duration::from_millis(9), 3, TimerKind::Churn);
+        let mut fired = Vec::new();
+        // nothing before its time
+        assert_eq!(wheel.advance(t0 + Duration::from_micros(500), &mut fired), Duration::ZERO);
+        assert!(fired.is_empty());
+        // the 1 ms and 5 ms entries fire by 6 ms, oldest slot first
+        wheel.advance(t0 + Duration::from_millis(6), &mut fired);
+        let nodes: Vec<usize> = fired.iter().map(|e| e.node).collect();
+        assert_eq!(nodes, vec![0, 2]);
+        // lag is measured against the due time, not the slot boundary
+        fired.clear();
+        let lag = wheel.advance(t0 + Duration::from_millis(30), &mut fired);
+        assert_eq!(fired.len(), 1);
+        assert_eq!(fired[0].node, 3);
+        assert!(lag >= Duration::from_millis(20), "lag {lag:?}");
+        // wheel is drained
+        fired.clear();
+        wheel.advance(t0 + Duration::from_millis(40), &mut fired);
+        assert!(fired.is_empty());
+    }
+
+    #[test]
+    fn timer_wheel_refiles_entries_beyond_one_revolution() {
+        let t0 = Instant::now();
+        let res = Duration::from_millis(1);
+        // 4 slots => one revolution = 4 ms; schedule 10 ms out
+        let mut wheel = TimerWheel::new(t0, res, 4);
+        wheel.schedule(t0 + Duration::from_millis(10), 7, TimerKind::Gossip);
+        let mut fired = Vec::new();
+        for step in 1..=9 {
+            wheel.advance(t0 + Duration::from_millis(step), &mut fired);
+            assert!(fired.is_empty(), "fired early at {step} ms");
+        }
+        wheel.advance(t0 + Duration::from_millis(10), &mut fired);
+        assert_eq!(fired.len(), 1, "far-future entry fires exactly once, on time");
+        assert_eq!(fired[0].node, 7);
+    }
+
+    #[test]
+    fn group_ranges_partition_the_node_universe() {
+        for (n, g) in [(10, 3), (10_000, 8), (5, 5), (7, 1), (4, 9)] {
+            let ranges = group_ranges(n, g);
+            assert_eq!(ranges.len(), g.min(n), "n={n} g={g}");
+            assert_eq!(ranges[0].start, 0);
+            assert_eq!(ranges.last().unwrap().end, n);
+            for w in ranges.windows(2) {
+                assert_eq!(w[0].end, w[1].start, "contiguous");
+                assert!(w[0].len().abs_diff(w[1].len()) <= 1, "balanced");
+            }
+        }
+    }
+
+    #[test]
+    fn resolved_groups_and_cap_scale_together() {
+        let mut cfg = DeployConfig { n_nodes: 10_000, node_groups: 8, ..Default::default() };
+        assert_eq!(cfg.resolved_groups(), 8);
+        assert!(max_deploy_nodes(cfg.resolved_groups()) >= 10_000);
+        // auto mode never exceeds the node count
+        cfg.n_nodes = 3;
+        cfg.node_groups = 0;
+        assert!(cfg.resolved_groups() <= 3);
+        cfg.node_groups = 99;
+        assert_eq!(cfg.resolved_groups(), 3, "clamped to n_nodes");
+        // the retired fixed cap is strictly inside the 5-group bound
+        assert_eq!(max_deploy_nodes(5), 5 * MAX_GROUP_NODES);
+        assert!(max_deploy_nodes(1) > 512);
     }
 
     #[test]

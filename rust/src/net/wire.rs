@@ -11,20 +11,24 @@
 //! u16  view entry count
 //! (u64 node, u64 ts)* view entries
 //! ```
+//!
+//! Version 2 is the *routed* variant used by the node-group runtime
+//! (DESIGN.md §15): a group's nodes share one listener, so the destination
+//! can no longer be inferred from the socket a frame arrived on.  A v2
+//! frame inserts a `u64 dst` node id immediately after the version byte;
+//! everything else is identical to v1.
 
 use crate::gossip::message::ModelMsg;
 use crate::p2p::newscast::Descriptor;
 use std::io::{self, Read, Write};
 
 pub const WIRE_VERSION: u8 = 1;
+/// Frame version carrying an explicit destination node id (group routing).
+pub const ROUTED_WIRE_VERSION: u8 = 2;
 /// Hard cap against corrupt frames (largest paper model: d=9947 ≈ 40 KB).
 pub const MAX_FRAME: u32 = 64 * 1024 * 1024;
 
-pub fn encode(msg: &ModelMsg) -> Vec<u8> {
-    let body_len = 1 + 8 + 8 + 4 + msg.w.len() * 4 + 2 + msg.view.len() * 16;
-    let mut buf = Vec::with_capacity(4 + body_len);
-    buf.extend_from_slice(&(body_len as u32).to_le_bytes());
-    buf.push(WIRE_VERSION);
+fn encode_tail(buf: &mut Vec<u8>, msg: &ModelMsg) {
     buf.extend_from_slice(&(msg.src as u64).to_le_bytes());
     buf.extend_from_slice(&msg.t.to_le_bytes());
     buf.extend_from_slice(&(msg.w.len() as u32).to_le_bytes());
@@ -37,6 +41,28 @@ pub fn encode(msg: &ModelMsg) -> Vec<u8> {
         buf.extend_from_slice(&(d.node as u64).to_le_bytes());
         buf.extend_from_slice(&d.ts.to_le_bytes());
     }
+}
+
+pub fn encode(msg: &ModelMsg) -> Vec<u8> {
+    let body_len = 1 + 8 + 8 + 4 + msg.w.len() * 4 + 2 + msg.view.len() * 16;
+    let mut buf = Vec::with_capacity(4 + body_len);
+    buf.extend_from_slice(&(body_len as u32).to_le_bytes());
+    buf.push(WIRE_VERSION);
+    encode_tail(&mut buf, msg);
+    buf
+}
+
+/// Encode a v2 frame addressed to `dst` (8 bytes larger than the v1 frame
+/// of the same message; `ModelMsg::wire_bytes` stays pinned to v1, which
+/// both runtimes use for byte accounting so sim/deploy traffic metrics
+/// remain directly comparable).
+pub fn encode_routed(dst: usize, msg: &ModelMsg) -> Vec<u8> {
+    let body_len = 1 + 8 + 8 + 8 + 4 + msg.w.len() * 4 + 2 + msg.view.len() * 16;
+    let mut buf = Vec::with_capacity(4 + body_len);
+    buf.extend_from_slice(&(body_len as u32).to_le_bytes());
+    buf.push(ROUTED_WIRE_VERSION);
+    buf.extend_from_slice(&(dst as u64).to_le_bytes());
+    encode_tail(&mut buf, msg);
     buf
 }
 
@@ -113,6 +139,23 @@ pub fn decode_body(body: &[u8]) -> Result<ModelMsg, WireError> {
     if version != WIRE_VERSION {
         return Err(WireError::BadVersion(version));
     }
+    decode_fields(c)
+}
+
+/// Decode a v2 routed frame body into `(dst, msg)`.
+pub fn decode_routed_body(body: &[u8]) -> Result<(usize, ModelMsg), WireError> {
+    let mut c = Cursor { buf: body, pos: 0 };
+    let version = c.u8()?;
+    if version != ROUTED_WIRE_VERSION {
+        return Err(WireError::BadVersion(version));
+    }
+    let dst = c.u64()? as usize;
+    Ok((dst, decode_fields(c)?))
+}
+
+/// Shared v1/v2 field sequence after the version (and any routing) prefix.
+fn decode_fields(mut c: Cursor<'_>) -> Result<ModelMsg, WireError> {
+    let body = c.buf;
     let src = c.u64()? as usize;
     let t = c.u64()?;
     let d = c.u32()? as usize;
@@ -188,11 +231,8 @@ impl FrameBuf {
         self.buf.len() - self.pos
     }
 
-    /// Extract the next complete frame, if one is fully buffered.
-    /// `Some(Err(_))` means the stream is poisoned (bad length header or
-    /// malformed body) — framing cannot resynchronize, so the caller should
-    /// drop the connection.
-    pub fn next_frame(&mut self) -> Option<Result<ModelMsg, WireError>> {
+    /// Consume the next complete frame's body range, if fully buffered.
+    fn next_body_range(&mut self) -> Option<Result<std::ops::Range<usize>, WireError>> {
         let avail = &self.buf[self.pos..];
         if avail.len() < 4 {
             return None;
@@ -205,9 +245,76 @@ impl FrameBuf {
         if avail.len() < 4 + len {
             return None;
         }
-        let res = decode_body(&avail[4..4 + len]);
-        self.pos += 4 + len;
-        Some(res)
+        let start = self.pos + 4;
+        self.pos = start + len;
+        Some(Ok(start..start + len))
+    }
+
+    /// Extract the next complete frame, if one is fully buffered.
+    /// `Some(Err(_))` means the stream is poisoned (bad length header or
+    /// malformed body) — framing cannot resynchronize, so the caller should
+    /// drop the connection.
+    pub fn next_frame(&mut self) -> Option<Result<ModelMsg, WireError>> {
+        match self.next_body_range()? {
+            Ok(r) => Some(decode_body(&self.buf[r])),
+            Err(e) => Some(Err(e)),
+        }
+    }
+
+    /// [`FrameBuf::next_frame`] for v2 routed frames: the node-group
+    /// runtime's readiness loop pulls `(dst, msg)` pairs off a stream whose
+    /// destination node cannot be inferred from the shared group listener.
+    pub fn next_routed(&mut self) -> Option<Result<(usize, ModelMsg), WireError>> {
+        match self.next_body_range()? {
+            Ok(r) => Some(decode_routed_body(&self.buf[r])),
+            Err(e) => Some(Err(e)),
+        }
+    }
+}
+
+/// Pending-output buffer for a nonblocking socket: frames are queued whole,
+/// and `flush` resumes wherever the previous attempt stopped.  The
+/// node-group runtime keeps one per outbound connection, so a send that
+/// hits `WouldBlock` mid-frame never tears the stream framing — the unsent
+/// suffix simply waits for the next readiness pass (DESIGN.md §15).
+#[derive(Debug, Default)]
+pub struct WriteBuf {
+    buf: Vec<u8>,
+    /// flushed prefix of `buf` (compacted on the next `push`)
+    pos: usize,
+}
+
+impl WriteBuf {
+    /// Queue a complete frame behind whatever is still pending.
+    pub fn push(&mut self, bytes: &[u8]) {
+        if self.pos > 0 {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes queued but not yet accepted by the socket.
+    pub fn pending(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Write as much as the sink accepts.  `Ok(true)` = fully drained,
+    /// `Ok(false)` = the sink would block with bytes still pending, `Err` =
+    /// the connection is dead (its pending bytes are lost with it).
+    pub fn flush<W: Write>(&mut self, w: &mut W) -> io::Result<bool> {
+        while self.pos < self.buf.len() {
+            match w.write(&self.buf[self.pos..]) {
+                Ok(0) => return Err(io::ErrorKind::WriteZero.into()),
+                Ok(k) => self.pos += k,
+                Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => return Ok(false),
+                Err(ref e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        self.buf.clear();
+        self.pos = 0;
+        Ok(true)
     }
 }
 
@@ -351,5 +458,126 @@ mod tests {
         fb.extend(&(MAX_FRAME + 1).to_le_bytes());
         fb.extend(&[0u8; 32]);
         assert!(matches!(fb.next_frame(), Some(Err(WireError::BadLength(_)))));
+    }
+
+    #[test]
+    fn routed_roundtrip_carries_dst_and_costs_eight_bytes() {
+        for (d, nv) in [(0, 0), (1, 1), (57, 20)] {
+            let m = sample(d, nv);
+            let enc = encode_routed(31, &m);
+            assert_eq!(enc.len(), m.wire_bytes() + 8, "v2 = v1 + u64 dst");
+            let (dst, got) = decode_routed_body(&enc[4..]).unwrap();
+            assert_eq!(dst, 31);
+            assert_eq!(got.src, m.src);
+            assert_eq!(got.t, m.t);
+            assert_eq!(got.w, m.w);
+            assert_eq!(got.view, m.view);
+        }
+    }
+
+    #[test]
+    fn routed_and_plain_decoders_reject_each_other() {
+        let m = sample(4, 1);
+        assert!(matches!(
+            decode_routed_body(&encode(&m)[4..]),
+            Err(WireError::BadVersion(1))
+        ));
+        assert!(matches!(
+            decode_body(&encode_routed(0, &m)[4..]),
+            Err(WireError::BadVersion(2))
+        ));
+    }
+
+    #[test]
+    fn frame_buf_next_routed_handles_byte_by_byte_arrival() {
+        let m = sample(6, 3);
+        let enc = encode_routed(42, &m);
+        let mut fb = FrameBuf::default();
+        for (i, &b) in enc.iter().enumerate() {
+            fb.extend(&[b]);
+            if i + 1 < enc.len() {
+                assert!(fb.next_routed().is_none(), "partial frame at byte {i}");
+            }
+        }
+        let (dst, got) = fb.next_routed().unwrap().unwrap();
+        assert_eq!(dst, 42);
+        assert_eq!(got.w, m.w);
+        assert!(fb.next_routed().is_none());
+    }
+
+    /// A sink that accepts a fixed quota of bytes per flush, then blocks —
+    /// the shape of a nonblocking socket under backpressure.
+    struct Throttled {
+        accepted: Vec<u8>,
+        quota: usize,
+    }
+
+    impl Write for Throttled {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            if self.quota == 0 {
+                return Err(io::ErrorKind::WouldBlock.into());
+            }
+            let k = buf.len().min(self.quota);
+            self.quota -= k;
+            self.accepted.extend_from_slice(&buf[..k]);
+            Ok(k)
+        }
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn write_buf_resumes_partial_writes_without_tearing_frames() {
+        let f1 = encode_routed(1, &sample(5, 2));
+        let f2 = encode_routed(2, &sample(9, 0));
+        let mut wb = WriteBuf::default();
+        wb.push(&f1);
+        wb.push(&f2);
+        let total = f1.len() + f2.len();
+        assert_eq!(wb.pending(), total);
+        let mut sink = Throttled { accepted: Vec::new(), quota: 0 };
+        // dribble the stream out 7 bytes per readiness pass
+        let mut passes = 0;
+        while wb.pending() > 0 {
+            sink.quota = 7;
+            let drained = wb.flush(&mut sink).unwrap();
+            assert_eq!(drained, wb.pending() == 0);
+            passes += 1;
+            assert!(passes < 1000, "flush must make progress");
+        }
+        // the reassembled stream is byte-identical: framing survived
+        let mut expect = f1.clone();
+        expect.extend_from_slice(&f2);
+        assert_eq!(sink.accepted, expect);
+        let mut fb = FrameBuf::default();
+        fb.extend(&sink.accepted);
+        assert_eq!(fb.next_routed().unwrap().unwrap().0, 1);
+        assert_eq!(fb.next_routed().unwrap().unwrap().0, 2);
+        // pushing after a partial flush compacts, not corrupts
+        sink.quota = 3;
+        wb.push(&f1);
+        wb.flush(&mut sink).unwrap();
+        wb.push(&f2);
+        assert_eq!(wb.pending(), total - 3);
+    }
+
+    #[test]
+    fn write_buf_propagates_hard_errors() {
+        struct Dead;
+        impl Write for Dead {
+            fn write(&mut self, _: &[u8]) -> io::Result<usize> {
+                Err(io::ErrorKind::BrokenPipe.into())
+            }
+            fn flush(&mut self) -> io::Result<()> {
+                Ok(())
+            }
+        }
+        let mut wb = WriteBuf::default();
+        wb.push(&encode(&sample(2, 0)));
+        assert!(wb.flush(&mut Dead).is_err());
+        // an empty buffer flushes trivially
+        let mut wb = WriteBuf::default();
+        assert!(wb.flush(&mut Dead).unwrap());
     }
 }

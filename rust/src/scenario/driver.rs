@@ -263,6 +263,14 @@ impl ScenarioDriver {
         &self.compiled
     }
 
+    /// The tick at which this cursor's next mutation becomes due, if any
+    /// remain.  The node-group deployment runtime (DESIGN.md §15) arms a
+    /// timer at this tick's wall-clock image instead of polling `pop_due`
+    /// every wake.
+    pub fn next_due_tick(&self) -> Option<Ticks> {
+        self.compiled.muts.get(self.cursor).map(|&(t, _)| t)
+    }
+
     /// Is a mutation due at or before `now`?
     pub fn has_due(&self, now: Ticks) -> bool {
         self.compiled

@@ -132,6 +132,23 @@ impl ChurnSchedule {
         }
     }
 
+    /// The node's next pause/resume boundary strictly after `time`, as
+    /// `(tick, goes_online)`; `None` once the node's liveness no longer
+    /// changes before the horizon.  This is what lets the node-group
+    /// deployment runtime (DESIGN.md §15) schedule churn as timer-wheel
+    /// events instead of re-querying `is_online` on every wake.
+    pub fn next_transition(&self, node: NodeId, time: Ticks) -> Option<(Ticks, bool)> {
+        let iv = &self.intervals[node];
+        // first interval whose start is strictly after `time`
+        let i = iv.partition_point(|&(s, _)| s <= time);
+        if i > 0 && iv[i - 1].1 > time && iv[i - 1].1 < self.horizon {
+            // inside (or before the end of) the previous session: the next
+            // boundary is that session's end, unless it outlives the run
+            return Some((iv[i - 1].1, false));
+        }
+        iv.get(i).map(|&(s, _)| (s, true))
+    }
+
     /// Materialize the liveness snapshot at `time` over every scheduled
     /// node as a packed [`Bitset`] — the replica form the simulators carry
     /// (DESIGN.md §14: 1 bit/node instead of `Vec<bool>`'s byte).
@@ -178,6 +195,33 @@ mod tests {
         let sched = ChurnSchedule::generate(&cfg, 500, 1_000_000, &mut rng);
         let f = sched.measured_online_fraction();
         assert!((f - 0.9).abs() < 0.05, "online fraction {f}");
+    }
+
+    #[test]
+    fn next_transition_walks_the_event_sequence() {
+        let cfg = ChurnConfig::paper_default(1000);
+        let mut rng = Rng::new(11);
+        let sched = ChurnSchedule::generate(&cfg, 40, 200_000, &mut rng);
+        for node in 0..40 {
+            // walking next_transition from 0 must visit exactly this node's
+            // entries in the global event sequence, in order
+            let expect: Vec<(Ticks, bool)> = sched
+                .events()
+                .into_iter()
+                .filter(|&(t, n, _)| n == node && t > 0)
+                .map(|(t, _, on)| (t, on))
+                .collect();
+            let mut walked = Vec::new();
+            let mut t = 0;
+            while let Some((next, on)) = sched.next_transition(node, t) {
+                assert!(next > t, "transitions advance strictly");
+                assert_eq!(sched.is_online(node, next), on, "node {node} t {next}");
+                walked.push((next, on));
+                t = next;
+                assert!(walked.len() <= expect.len(), "non-terminating walk");
+            }
+            assert_eq!(walked, expect, "node {node}");
+        }
     }
 
     #[test]

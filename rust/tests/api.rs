@@ -105,11 +105,13 @@ cycles = 12
 [deploy]
 delta_ms = 25
 nodes = 40
+node_groups = 3
 ";
     let spec = RunSpec::from_ini(text).unwrap();
     assert_eq!(spec.target, Target::Deploy);
     assert_eq!(spec.delta_ms, 25);
     assert_eq!(spec.nodes, 40);
+    assert_eq!(spec.node_groups, 3);
     let round = RunSpec::from_ini(&spec.to_ini()).unwrap();
     assert_eq!(round, spec, "\n{}", spec.to_ini());
 }
@@ -187,7 +189,7 @@ fn spec_conversions_are_inverses() {
     assert_eq!(spec.target, Target::Batched);
     assert_eq!(spec.to_spec(), exp);
 
-    let dspec = DeploySpec { experiment: exp, delta_ms: 77, nodes: 9 };
+    let dspec = DeploySpec { experiment: exp, delta_ms: 77, nodes: 9, node_groups: 2 };
     let spec = RunSpec::from_deploy_spec(dspec.clone());
     assert_eq!(spec.target, Target::Deploy);
     assert_eq!(spec.to_deploy_spec(), dspec);

@@ -192,6 +192,56 @@ fn deploy_short_run_learns() {
     assert!(last < 0.32, "no learning signal: final error {last}");
 }
 
+/// Node-group scale smoke (DESIGN.md §15): 1000 real nodes — double the
+/// retired thread-per-node cap of 512 — multiplexed onto four group
+/// threads, time-bounded so CI catches a runtime that stalls or degrades
+/// to per-node threading.  Also pins the group-runtime observability:
+/// the group count lands in `DeployStats`, the readiness loops decode
+/// frames, and the LRU outbound cache produces connection reuse.
+#[test]
+fn deploy_thousand_nodes_in_four_groups() {
+    let _g = serial();
+    let ds = urls_like(8, Scale(0.1)); // 1000 training rows -> 1000 nodes
+    let cfg = DeployConfig {
+        n_nodes: ds.n_train(),
+        node_groups: 4,
+        delta: Duration::from_millis(60),
+        cycles: 5,
+        eval_peers: 8,
+        eval_at_cycles: vec![5],
+        seed: 17,
+        ..Default::default()
+    };
+    assert_eq!(cfg.n_nodes, 1000);
+    assert!(cfg.n_nodes > 512, "must exceed the retired thread-per-node cap");
+
+    let t0 = Instant::now();
+    let report = run_deployment(&cfg, &ds).expect("deployment failed");
+    let elapsed = t0.elapsed();
+    // generous wall bound: the run itself is ~0.4 s of gossip; anything
+    // near a minute means the runtime fell over at this scale
+    assert!(elapsed < Duration::from_secs(60), "1k-node run took {elapsed:?}");
+
+    let s = &report.stats;
+    // the thread ledger may grant fewer groups on a small machine, but the
+    // runtime must stay within the ask and never fall back to per-node
+    // threads
+    assert!(
+        (1..=4).contains(&s.node_groups),
+        "groups {} outside the leased range",
+        s.node_groups
+    );
+    assert_eq!(report.per_node.len(), 1000);
+    assert!(s.messages_sent > 1000, "every node gossips at least once");
+    assert!(s.messages_received > 0, "frames must flow through the groups");
+    assert!(
+        s.conns_reused > 0,
+        "repeat sends must ride the LRU outbound cache"
+    );
+    assert!(s.frames_per_wake > 0.0, "readiness loops must decode frames");
+    assert!(!report.curve.points.is_empty());
+}
+
 /// `golf deploy` end to end through the CLI: tiny run, `--compare-sim`,
 /// CSV output.
 #[test]

@@ -618,3 +618,97 @@ fn prop_feature_projection_preserves_dots() {
         },
     );
 }
+
+/// The node-group readiness loop depends on partial reads being lossless:
+/// however a routed multi-frame stream is sliced at the socket — 1-byte
+/// dribbles, reads straddling frame boundaries, a trailing partial frame —
+/// `wire::FrameBuf` must yield exactly the frames a one-shot decode of the
+/// same bytes yields, frame for frame.
+#[test]
+fn prop_frame_buf_incremental_equals_one_shot() {
+    use golf::gossip::message::ModelMsg;
+    use golf::net::wire::{self, FrameBuf};
+    use golf::p2p::newscast::Descriptor;
+
+    forall(
+        7001,
+        120,
+        |rng| {
+            let n = 1 + rng.below_usize(6);
+            let mut msgs = Vec::new();
+            for _ in 0..n {
+                let d = 1 + rng.below_usize(24);
+                let view = (0..rng.below_usize(4))
+                    .map(|_| Descriptor { node: rng.below_usize(50), ts: rng.below(1000) })
+                    .collect();
+                msgs.push((
+                    rng.below_usize(64),
+                    ModelMsg {
+                        src: rng.below_usize(64),
+                        w: rand_vec(rng, d),
+                        scale: 1.0,
+                        t: rng.below(1000),
+                        view,
+                    },
+                ));
+            }
+            // adversarial read plan: a mix of 1-byte dribbles and short
+            // random widths, so chunk edges land inside length headers,
+            // inside bodies, and exactly on frame boundaries
+            let widths: Vec<usize> = (0..48)
+                .map(|_| if rng.below_usize(3) == 0 { 1 } else { 1 + rng.below_usize(13) })
+                .collect();
+            let trailing = rng.below_usize(12);
+            (msgs, widths, trailing)
+        },
+        |(msgs, widths, trailing)| {
+            let mut stream = Vec::new();
+            for (dst, m) in msgs {
+                stream.extend_from_slice(&wire::encode_routed(*dst, m));
+            }
+            // a truncated next frame at the tail must neither yield a frame
+            // nor poison the ones before it
+            let extra = wire::encode_routed(0, &msgs[0].1);
+            let cut = (*trailing).min(extra.len() - 1);
+            stream.extend_from_slice(&extra[..cut]);
+
+            // reference: the whole stream in one extend
+            let mut oneshot = FrameBuf::default();
+            oneshot.extend(&stream);
+            let mut want = Vec::new();
+            while let Some(r) = oneshot.next_routed() {
+                want.push(r.map_err(|e| format!("one-shot decode: {e}"))?);
+            }
+            if want.len() != msgs.len() {
+                return Err(format!("one-shot got {} frames, sent {}", want.len(), msgs.len()));
+            }
+
+            // incremental: the same bytes through the adversarial read plan
+            let mut fb = FrameBuf::default();
+            let mut got = Vec::new();
+            let (mut pos, mut wi) = (0, 0);
+            while pos < stream.len() {
+                let end = (pos + widths[wi % widths.len()]).min(stream.len());
+                wi += 1;
+                fb.extend(&stream[pos..end]);
+                pos = end;
+                while let Some(r) = fb.next_routed() {
+                    got.push(r.map_err(|e| format!("incremental decode: {e}"))?);
+                }
+            }
+
+            if got.len() != want.len() {
+                return Err(format!("incremental got {} frames, want {}", got.len(), want.len()));
+            }
+            for (i, ((gd, gm), (wd, wm))) in got.iter().zip(&want).enumerate() {
+                if gd != wd || gm.src != wm.src || gm.t != wm.t || gm.view != wm.view {
+                    return Err(format!("frame {i}: header/view mismatch"));
+                }
+                if gm.w != wm.w {
+                    return Err(format!("frame {i}: weights differ"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
