@@ -368,6 +368,64 @@ fn main() {
         }
     }
 
+    // ---- topology subsystem (DESIGN.md §16): generator cost at scale and
+    // the protocol-throughput price of graph-constrained peer sampling ----
+    if section_enabled("topology") {
+        use golf::p2p::{Topology, TopologySpec};
+        println!("\n--- topology: generator build cost at 100k nodes");
+        sjson_touched = true;
+        for name in ["ring:2", "grid", "kreg:4", "ba:3"] {
+            let spec = TopologySpec::parse(name).expect("spec").expect("non-complete");
+            let n = 100_000usize;
+            let mut edges = 0usize;
+            let r = bench(&format!("topo build {name} n=100k"), 0, 3, || {
+                let t = Topology::build(&spec, n, 9).expect("build");
+                edges = t.metrics().edges;
+            });
+            println!(
+                "    -> {:.2} M edges/s ({} edges)",
+                r.throughput(edges as f64) / 1e6,
+                edges
+            );
+            sjson.push((
+                format!("topo_build_{}_eps", name.replace(':', "")),
+                r.throughput(edges as f64),
+            ));
+        }
+
+        println!("\n--- topology: graph-constrained event-driven runs, urls 1000 nodes");
+        {
+            let ds = urls_like(4, Scale(0.1)); // 1000 nodes
+            let cycles = 30u64;
+            let mut base_s = 0.0f64;
+            for name in ["complete", "ring:2", "kreg:4", "ba:3"] {
+                let mut msgs = 0u64;
+                let r = bench(&format!("event sim urls 1000 --topology {name}"), 0, 2, || {
+                    let mut cfg = ProtocolConfig::paper_default(cycles);
+                    cfg.eval.n_peers = 0;
+                    cfg.eval.at_cycles = vec![cycles];
+                    cfg.seed = 9;
+                    cfg.topology = TopologySpec::parse(name).expect("spec");
+                    let res = run(cfg, &ds);
+                    msgs = res.stats.messages_sent;
+                });
+                let per_s = r.throughput(msgs as f64);
+                if name == "complete" {
+                    base_s = per_s;
+                }
+                println!(
+                    "    -> {:.2} M delivered messages/s (x{:.2} vs complete)",
+                    per_s / 1e6,
+                    per_s / base_s.max(1e-12)
+                );
+                sjson.push((
+                    format!("topo_urls1k_{}", name.replace(':', "")),
+                    per_s,
+                ));
+            }
+        }
+    }
+
     // ---- node-group deployment scaling (DESIGN.md §15): real socket runs
     // at node counts the thread-per-node runtime could not host, tracking
     // walltime, decoded frames/s, and peak RSS, plus the group-runtime

@@ -149,6 +149,7 @@ impl<'d> Session<'d> {
             variants: axes.variants.clone(),
             failures: axes.failures.clone(),
             scenarios: axes.scenarios.clone(),
+            topologies: axes.topologies.clone(),
             replicates: axes.replicates,
             base_seed: e.seed,
             eval_peers: e.eval_peers,

@@ -66,6 +66,8 @@ pub struct SweepAxes {
     pub failures: Vec<bool>,
     /// scripted scenario axis; `"none"` is the baseline cell
     pub scenarios: Vec<String>,
+    /// gossip graph axis (DESIGN.md §16); `"complete"` is the baseline cell
+    pub topologies: Vec<String>,
     pub replicates: u64,
     pub threads: usize,
 }
@@ -76,6 +78,7 @@ impl Default for SweepAxes {
             variants: vec![Variant::Rw, Variant::Mu],
             failures: vec![false, true],
             scenarios: vec!["none".into()],
+            topologies: vec!["complete".into()],
             replicates: 1,
             threads: crate::experiments::sweep::thread_count(),
         }
@@ -111,6 +114,9 @@ impl SweepAxes {
                 "scenarios" => {
                     axes.scenarios = v.split(',').map(|s| s.trim().to_string()).collect();
                 }
+                "topologies" => {
+                    axes.topologies = v.split(',').map(|s| s.trim().to_string()).collect();
+                }
                 "replicates" => {
                     axes.replicates = v.parse().map_err(|_| {
                         GolfError::config(format!("bad replicates {v:?}"))
@@ -137,10 +143,11 @@ impl SweepAxes {
             .map(|&f| if f { "extreme" } else { "none" })
             .collect();
         format!(
-            "[sweep]\nvariants = {}\nfailures = {}\nscenarios = {}\nreplicates = {}\nthreads = {}\n",
+            "[sweep]\nvariants = {}\nfailures = {}\nscenarios = {}\ntopologies = {}\nreplicates = {}\nthreads = {}\n",
             variants.join(","),
             failures.join(","),
             self.scenarios.join(","),
+            self.topologies.join(","),
             self.replicates,
             self.threads
         )
@@ -353,6 +360,16 @@ impl RunSpec {
         self
     }
 
+    /// Constrain gossip to a graph topology (DESIGN.md §16): `ring:K`,
+    /// `grid`, `kreg:K`, `ba:M`, `graph:<file>`, `graph-inline:a-b,…`,
+    /// optionally prefixed `allow-disconnected:`.  `"complete"` / `"none"`
+    /// clear the constraint (the paper's implicit all-pairs overlay).
+    pub fn topology(mut self, spec: &str) -> Result<Self, GolfError> {
+        self.experiment.topology =
+            crate::p2p::TopologySpec::parse(spec).map_err(GolfError::config)?;
+        Ok(self)
+    }
+
     /// Attach a scenario timeline.
     pub fn scenario(mut self, scenario: Scenario) -> Self {
         self.experiment.scenario = Some(scenario);
@@ -485,6 +502,9 @@ impl RunSpec {
         kv("coalesce", e.coalesce.to_string());
         kv("exec", e.exec_path.name().to_string());
         kv("shards", e.shards.to_string());
+        if let Some(t) = &e.topology {
+            kv("topology", t.name());
+        }
         // a scenario that is exactly a built-in round-trips by name; any
         // other timeline embeds as full sections
         let mut scenario_sections = None;
@@ -537,6 +557,23 @@ impl RunSpec {
                 return Err(GolfError::config(
                     "sampler = matching needs a globally consistent partner \
                      table and only runs with shards = 1"
+                        .to_string(),
+                ));
+            }
+        }
+        if self.experiment.topology.is_some() {
+            if self.experiment.sampler == SamplerConfig::Matching {
+                return Err(GolfError::config(
+                    "sampler = matching ignores graph constraints; \
+                     drop `topology =` or pick oracle/newscast"
+                        .to_string(),
+                ));
+            }
+            if self.target == Target::Batched {
+                return Err(GolfError::config(
+                    "topology requires the event-driven simulator or \
+                     deployment (the batched driver has no per-message \
+                     peer sampling to constrain)"
                         .to_string(),
                 ));
             }
@@ -635,6 +672,7 @@ impl RunSpec {
                 ("cache", e.cache != d.cache),
                 ("sampler", e.sampler != d.sampler),
                 ("failures", e.failures != d.failures),
+                ("topology", e.topology != d.topology),
             ];
             if let Some((key, _)) = overridden.iter().find(|(_, changed)| *changed) {
                 return Err(GolfError::config(format!(
@@ -644,10 +682,14 @@ impl RunSpec {
                      or use `golf run`"
                 )));
             }
-            if axes.variants.is_empty() || axes.failures.is_empty() || axes.scenarios.is_empty()
+            if axes.variants.is_empty()
+                || axes.failures.is_empty()
+                || axes.scenarios.is_empty()
+                || axes.topologies.is_empty()
             {
                 return Err(GolfError::config(
-                    "sweep axes must be non-empty (variants, failures, scenarios)"
+                    "sweep axes must be non-empty (variants, failures, \
+                     scenarios, topologies)"
                         .to_string(),
                 ));
             }
@@ -660,6 +702,11 @@ impl RunSpec {
                     // run_grid; resolve the name up front
                     crate::scenario::builtin(name)?;
                 }
+            }
+            for t in &axes.topologies {
+                // graph construction (over each dataset's node count)
+                // happens in run_grid; reject malformed specs up front
+                crate::p2p::TopologySpec::parse(t).map_err(GolfError::config)?;
             }
         }
         Ok(())

@@ -5,6 +5,7 @@
 //! golf run [--config FILE] [--key value ...]   run one experiment
 //! golf table1 [--scale S] [--seed N]           reproduce Table I
 //! golf fig1|fig2|fig3 [--scale S] [--cycles N] reproduce a figure
+//! golf fig-topology [--scale S] [--cycles N]   convergence vs. gossip graph
 //! golf sweep [--scale S] [--replicates K]      parallel grid sweep
 //! golf scenario <name|file.scn> [--key value]  scripted failure timeline
 //! golf scenario --list                         built-in scenario library
@@ -76,23 +77,27 @@ USAGE:
               [--backend event|event-pjrt|batched-native|batched-pjrt]
               [--mode microbatch|scalar] [--coalesce TICKS]
               [--exec auto|dense|sparse] [--shards N] [--threads T]
+              [--topology complete|ring:K|grid|kreg:K|ba:M|graph:FILE]
               [--voting true] [--similarity true] [--seed N] [--out FILE.csv]
   golf table1 [--scale S] [--seed N] [--threads T]
   golf fig1   [--scale S] [--cycles N] [--seed N] [--threads T] [--out-dir DIR]
   golf fig2   [--scale S] [--cycles N] [--seed N] [--threads T] [--out-dir DIR]
   golf fig3   [--scale S] [--cycles N] [--seed N] [--threads T] [--out-dir DIR]
+  golf fig-topology [--scale S] [--cycles N] [--seed N] [--threads T]
+              [--out-dir DIR]
   golf sweep  [--config FILE] [--scale S] [--cycles N] [--seed N] [--threads T]
               [--replicates K] [--mode microbatch|scalar] [--coalesce TICKS]
-              [--exec auto|dense|sparse] [--scenarios a,b,c] [--out-dir DIR]
+              [--exec auto|dense|sparse] [--scenarios a,b,c]
+              [--topologies complete,ring:2,...] [--out-dir DIR]
   golf scenario <name|file.scn> [--dataset D] [--scale S] [--cycles N]
               [--backend event|batched-native] [--deploy [--compare-sim]]
-              [--seed N] [--eval_peers K] [--out FILE.csv]
+              [--topology SPEC] [--seed N] [--eval_peers K] [--out FILE.csv]
   golf scenario --list
   golf deploy [--config FILE] [--dataset D] [--scale S] [--cycles N]
               [--variant rw|mu|um] [--learner pegasos|adaline|logreg]
               [--failures none|extreme] [--sampler newscast|oracle]
               [--nodes N] [--node-groups G] [--delta_ms MS] [--eval_peers K]
-              [--seed N] [--compare-sim] [--out FILE.csv]
+              [--topology SPEC] [--seed N] [--compare-sim] [--out FILE.csv]
   golf info
 
 EXIT CODES: 0 ok, 2 config, 3 data, 4 io, 5 scenario, 6 backend, 7 wire"
@@ -177,13 +182,17 @@ fn announce(session: &Session<'_>) {
     let spec = session.spec();
     if let Some(ds) = session.data() {
         eprintln!(
-            "running {} on {} ({} nodes, d={}) for {} cycles [{}]",
+            "running {} on {} ({} nodes, d={}) for {} cycles [{}]{}",
             spec.experiment.variant.name(),
             ds.name,
             ds.n_train(),
             ds.d(),
             spec.experiment.cycles,
-            spec.experiment.backend.name()
+            spec.experiment.backend.name(),
+            spec.experiment
+                .topology
+                .as_ref()
+                .map_or(String::new(), |t| format!(" graph {}", t.name())),
         );
     }
 }
@@ -199,6 +208,9 @@ fn print_run_stats(s: &RunStats) {
     );
     if s.messages_blocked > 0 {
         eprintln!("partition-blocked={}", s.messages_blocked);
+    }
+    if let Some(t) = &s.topology {
+        eprintln!("topology: {}", t.summary());
     }
 }
 
@@ -227,7 +239,7 @@ fn deploy_and_report(
         .expect("deploy sessions resolve their config at build time");
     eprintln!(
         "deploying {} {} nodes in {} group(s) on {} (d={}) for {} cycles of {:?} \
-         [{} sampling{}{}]",
+         [{} sampling{}{}{}]",
         dcfg.n_nodes,
         dcfg.variant.name(),
         dcfg.resolved_groups(),
@@ -240,6 +252,9 @@ fn deploy_and_report(
         dcfg.scenario
             .as_ref()
             .map_or(String::new(), |s| format!(", scenario {:?}", s.name)),
+        dcfg.topology
+            .as_ref()
+            .map_or(String::new(), |t| format!(", graph {}", t.name())),
     );
     if compare_sim && dcfg.n_nodes != ds.n_train() {
         eprintln!(
@@ -430,13 +445,25 @@ fn run_command(parsed: &ParsedArgs) -> Result<(), GolfError> {
             eprintln!("wrote {} panels to {}", panels.len(), a.out.display());
             Ok(())
         }
+        "fig-topology" => {
+            check_fig_flags(&parsed.flags)?;
+            let a = fig_args(&parsed.flags)?;
+            let sets = experiments::datasets(a.seed, a.scale);
+            let panels =
+                experiments::fig_topology::run_figure_threads(&sets, a.cycles, a.seed, a.threads);
+            experiments::fig_topology::to_csv(&panels, &a.out)
+                .map_err(|e| GolfError::io(a.out.display().to_string(), e))?;
+            eprintln!("wrote {} panels to {}", panels.len(), a.out.display());
+            Ok(())
+        }
         "sweep" => {
             // strict flag set: anything else (e.g. --dataset, a per-run key)
             // would otherwise vanish silently
             for k in parsed.flags.keys() {
                 match k.as_str() {
                     "config" | "scale" | "cycles" | "seed" | "threads" | "out-dir"
-                    | "replicates" | "mode" | "coalesce" | "exec" | "scenarios" => {}
+                    | "replicates" | "mode" | "coalesce" | "exec" | "scenarios"
+                    | "topologies" => {}
                     other => {
                         return Err(GolfError::config(format!(
                             "sweep: unknown flag --{other} (the grid always runs \
@@ -489,12 +516,18 @@ fn run_command(parsed: &ParsedArgs) -> Result<(), GolfError> {
                 // actual datasets by run_grid before any job is dispatched
                 axes.scenarios = list.split(',').map(|s| s.trim().to_string()).collect();
             }
+            if let Some(list) = parsed.flags.get("topologies") {
+                // spec strings are parsed and their graphs built against the
+                // grid's datasets by run_grid before any job is dispatched
+                axes.topologies = list.split(',').map(|s| s.trim().to_string()).collect();
+            }
             eprintln!(
-                "sweep: 3 datasets x {} variants x {} failure modes x {} scenarios x {} \
-                 replicates on {} threads",
+                "sweep: 3 datasets x {} variants x {} failure modes x {} scenarios x \
+                 {} topologies x {} replicates on {} threads",
                 axes.variants.len(),
                 axes.failures.len(),
                 axes.scenarios.len(),
+                axes.topologies.len(),
                 axes.replicates,
                 axes.threads
             );
@@ -502,8 +535,8 @@ fn run_command(parsed: &ParsedArgs) -> Result<(), GolfError> {
             let outcome = session.run(&mut NullObserver)?;
             let cells = outcome.sweep_cells().expect("sweep target yields cells");
             let mut t = crate::util::benchkit::Table::new(&[
-                "dataset", "variant", "failures", "scenario", "rep", "seed", "final err",
-                "msgs",
+                "dataset", "variant", "failures", "scenario", "topology", "rep", "seed",
+                "final err", "msgs",
             ]);
             for c in cells {
                 t.row(&[
@@ -511,6 +544,7 @@ fn run_command(parsed: &ParsedArgs) -> Result<(), GolfError> {
                     c.variant.name().to_string(),
                     if c.failures { "extreme" } else { "none" }.to_string(),
                     c.scenario.clone(),
+                    c.topology.clone(),
                     c.replicate.to_string(),
                     format!("{:#x}", c.seed),
                     format!("{:.4}", c.curve.final_error()),
@@ -814,6 +848,32 @@ mod tests {
         ]))
         .unwrap();
         run_command(&p).unwrap();
+    }
+
+    #[test]
+    fn tiny_topology_constrained_run() {
+        assert_eq!(
+            dispatch(&s(&[
+                "run", "--dataset", "urls", "--scale", "0.005", "--cycles", "3",
+                "--eval_peers", "4", "--topology", "ring:2",
+            ])),
+            0
+        );
+        // an unparseable spec is a config error (exit code 2)...
+        assert_eq!(
+            dispatch(&s(&[
+                "run", "--dataset", "urls", "--scale", "0.005", "--topology", "warp",
+            ])),
+            2
+        );
+        // ...and so is a graph that cannot build over the node count
+        assert_eq!(
+            dispatch(&s(&[
+                "run", "--dataset", "urls", "--scale", "0.005", "--topology",
+                "kreg:100000",
+            ])),
+            2
+        );
     }
 
     #[test]

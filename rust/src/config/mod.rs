@@ -22,6 +22,8 @@
 //! coalesce = 0            ; micro-batch coalescing window in ticks
 //! exec = auto             ; auto | dense | sparse (kernel family dispatch)
 //! shards = 1              ; node-range shards of the event-driven simulator
+//! topology = complete     ; complete | ring:K | grid | kreg:K | ba:M |
+//!                         ; graph:FILE | graph-inline:A-B,... (DESIGN.md §16)
 //! scenario = paper-fig3   ; named built-in scenario (see `golf scenario --list`)
 //!
 //! [deploy]                ; `golf deploy` only (real localhost-TCP run)
@@ -105,6 +107,9 @@ pub struct ExperimentSpec {
     /// failure/workload timeline: a named built-in (`scenario =` key) or an
     /// embedded/standalone `[scenario]` definition
     pub scenario: Option<Scenario>,
+    /// gossip graph constraint (DESIGN.md §16); `None` is the implicit
+    /// complete graph of the paper setup
+    pub topology: Option<crate::p2p::TopologySpec>,
 }
 
 impl Default for ExperimentSpec {
@@ -130,6 +135,7 @@ impl Default for ExperimentSpec {
             exec_path: ExecPath::Auto,
             shards: 1,
             scenario: None,
+            topology: None,
         }
     }
 }
@@ -211,6 +217,10 @@ impl ExperimentSpec {
                         name => Some(crate::scenario::builtin(name)?),
                     }
                 }
+                "topology" => {
+                    self.topology = crate::p2p::TopologySpec::parse(v)
+                        .map_err(GolfError::config)?
+                }
                 _ => return Err(GolfError::config(format!("unknown key {k:?}"))),
             }
         }
@@ -246,6 +256,15 @@ impl ExperimentSpec {
     }
 
     pub fn protocol_config(&self) -> Result<ProtocolConfig, GolfError> {
+        if self.topology.is_some() && self.sampler == SamplerConfig::Matching {
+            // PERFECT MATCHING pairs the whole universe per cycle; a graph
+            // constraint would silently be ignored, so refuse the combination
+            return Err(GolfError::config(
+                "sampler = matching ignores graph constraints; \
+                 drop `topology =` or pick oracle/newscast"
+                    .to_string(),
+            ));
+        }
         let mut cfg = ProtocolConfig::paper_default(self.cycles);
         cfg.variant = self.variant;
         cfg.learner = self.learner()?;
@@ -262,18 +281,42 @@ impl ExperimentSpec {
             cfg = cfg.with_extreme_failures();
         }
         cfg.scenario = self.scenario.clone();
+        cfg.topology = self.topology.clone();
         Ok(cfg)
     }
 
     /// Validate the attached scenario (if any) against a concrete dataset:
-    /// the simulators require a validated timeline.
+    /// the simulators require a validated timeline.  When a topology is set
+    /// it is built here too (same `(spec, n, seed)` inputs as the run), so
+    /// bad graphs and edge events naming absent edges fail before any
+    /// simulator state exists.
     pub fn validate_scenario(&self, n_nodes: usize) -> Result<(), GolfError> {
+        let topo = self.build_topology(n_nodes)?;
         if let Some(s) = &self.scenario {
             s.validate(n_nodes, self.cycles).map_err(|e| {
                 GolfError::scenario_in(format!("scenario {:?}", s.name), e)
             })?;
+            s.validate_topology(topo.as_ref()).map_err(|e| {
+                GolfError::scenario_in(format!("scenario {:?}", s.name), e)
+            })?;
         }
         Ok(())
+    }
+
+    /// Build the configured topology over an `n_nodes` universe (`Ok(None)`
+    /// for the implicit complete graph).  Generator errors — degree-0
+    /// nodes, disconnected graphs without `allow-disconnected:`, unreadable
+    /// edge lists — surface as config errors (exit code 2).
+    pub fn build_topology(
+        &self,
+        n_nodes: usize,
+    ) -> Result<Option<crate::p2p::Topology>, GolfError> {
+        match &self.topology {
+            None => Ok(None),
+            Some(spec) => crate::p2p::Topology::build(spec, n_nodes, self.seed)
+                .map(Some)
+                .map_err(GolfError::config),
+        }
     }
 
     /// Parse the `[experiment]` schema (plus any embedded scenario
@@ -418,9 +461,15 @@ impl DeploySpec {
                 "sampler = matching is not supported in deployment".to_string(),
             ));
         }
+        // build the graph eagerly: bad topologies and edge events naming
+        // absent edges must fail before any socket is bound
+        let topo = e.build_topology(n)?;
         if let Some(s) = &e.scenario {
             // the deployment compiles the timeline over its node universe
             s.validate(n, e.cycles).map_err(|err| {
+                GolfError::scenario_in(format!("scenario {:?}", s.name), err)
+            })?;
+            s.validate_topology(topo.as_ref()).map_err(|err| {
                 GolfError::scenario_in(format!("scenario {:?}", s.name), err)
             })?;
         }
@@ -436,6 +485,7 @@ impl DeploySpec {
             eval_peers: e.eval_peers,
             seed: e.seed,
             scenario: e.scenario.clone(),
+            topology: e.topology.clone(),
             ..Default::default()
         };
         // group-aware node bound: each worker thread multiplexes at most
@@ -729,6 +779,72 @@ drop = 0.9
         let mut kv = HashMap::new();
         kv.insert("shards".to_string(), "0".to_string());
         assert!(spec.apply(&kv).is_err(), "shards = 0 must be rejected");
+    }
+
+    #[test]
+    fn topology_key_maps_to_protocol_config() {
+        use crate::p2p::topology::TopologyKind;
+        let mut spec = ExperimentSpec { scale: 0.01, ..Default::default() };
+        assert!(spec.protocol_config().unwrap().topology.is_none());
+        let mut kv = HashMap::new();
+        kv.insert("topology".to_string(), "ring:2".to_string());
+        spec.apply(&kv).unwrap();
+        let t = spec.topology.clone().expect("ring:2 must attach");
+        assert_eq!(t.kind, TopologyKind::Ring { k: 2 });
+        assert_eq!(spec.protocol_config().unwrap().topology, Some(t));
+        // `complete` (and `none`) mean the implicit complete graph
+        let mut kv = HashMap::new();
+        kv.insert("topology".to_string(), "complete".to_string());
+        spec.apply(&kv).unwrap();
+        assert!(spec.topology.is_none());
+        // unknown generators are config errors
+        let mut kv = HashMap::new();
+        kv.insert("topology".to_string(), "warp".to_string());
+        assert!(ExperimentSpec::default().apply(&kv).is_err());
+        // the simulator-only PERFECT MATCHING baseline pairs the whole
+        // universe; combining it with a graph constraint is rejected
+        let mut spec = ExperimentSpec { scale: 0.01, ..Default::default() };
+        spec.sampler = SamplerConfig::Matching;
+        spec.topology = crate::p2p::TopologySpec::parse("ring:1").unwrap();
+        assert!(spec.protocol_config().is_err());
+        // validate_scenario builds the graph: edge events against the
+        // implicit complete graph, and events naming absent edges, both fail
+        let mut spec = ExperimentSpec { scale: 0.01, ..Default::default() };
+        spec.cycles = 200;
+        spec.scenario = Some(crate::scenario::builtin("link-storm").unwrap());
+        assert!(
+            spec.validate_scenario(50).is_err(),
+            "link-storm needs a non-complete topology"
+        );
+        spec.topology = crate::p2p::TopologySpec::parse("ring:2").unwrap();
+        spec.validate_scenario(50).unwrap();
+    }
+
+    #[test]
+    fn deploy_spec_carries_topology() {
+        let text = "
+[experiment]
+dataset = urls
+scale = 0.01
+cycles = 20
+topology = ring:2
+
+[deploy]
+delta_ms = 20
+nodes = 30
+";
+        let spec = DeploySpec::from_ini(text).unwrap();
+        let ds = spec.experiment.build_dataset().unwrap();
+        let cfg = spec.deploy_config(&ds).unwrap();
+        assert_eq!(cfg.topology, spec.experiment.topology);
+        assert!(cfg.topology.is_some());
+        // a graph the generator rejects fails at deploy-config time:
+        // ring:1 over 30 nodes is fine, but an inline graph leaving node 2
+        // isolated is a config error
+        let mut bad = spec.clone();
+        bad.experiment.topology =
+            crate::p2p::TopologySpec::parse("graph-inline:0-1").unwrap();
+        assert!(bad.deploy_config(&ds).is_err());
     }
 
     #[test]

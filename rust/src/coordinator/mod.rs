@@ -91,6 +91,9 @@ pub fn matched_sim_config(cfg: &DeployConfig) -> ProtocolConfig {
     // compiles it at delta = SIM_DELTA, exactly the scale the deployment's
     // tick→wall-clock mapping uses
     sim.scenario = cfg.scenario.clone();
+    // the graph is rebuilt from (spec, n, seed) on each side, so both runs
+    // sample neighbors from the identical CSR
+    sim.topology = cfg.topology.clone();
     sim
 }
 
@@ -125,12 +128,30 @@ pub fn run_deployment_observed(
     let n = cfg.n_nodes;
     let d = data.d();
 
+    // ---- resolved gossip graph (consumes no shared RNG: generators derive
+    // private streams from (seed, "topo/…"), so the fork order below is
+    // untouched and a matched simulator builds the identical CSR)
+    let topology = cfg.topology.as_ref().map(|spec| {
+        std::sync::Arc::new(
+            crate::p2p::Topology::build(spec, n, cfg.seed)
+                .expect("topology must be validated before the deployment runs"),
+        )
+    });
+
     // ---- compiled scenario timeline (one definition shared by the node
     // threads, the evaluation loop, and any matched simulator run)
     let compiled = cfg.scenario.as_ref().map(|s| {
         std::sync::Arc::new(
-            CompiledScenario::compile(s, n, SIM_DELTA, cfg.cycles, cfg.seed, cfg.network)
-                .expect("scenario must be validated before the deployment runs"),
+            CompiledScenario::compile(
+                s,
+                n,
+                SIM_DELTA,
+                cfg.cycles,
+                cfg.seed,
+                cfg.network,
+                topology.as_deref(),
+            )
+            .expect("scenario must be validated before the deployment runs"),
         )
     });
     let initial = compiled.as_ref().map_or(n, |c| c.initial);
@@ -195,6 +216,7 @@ pub fn run_deployment_observed(
                     data,
                     churn: churn.as_ref(),
                     scn: compiled.as_ref(),
+                    topo: topology.as_ref(),
                     start,
                     shared: &shared,
                 };
@@ -401,6 +423,7 @@ mod tests {
             eval_peers: 7,
             eval_at_cycles: vec![1, 5, 17],
             seed: 99,
+            topology: crate::p2p::TopologySpec::parse("ring:2").unwrap(),
             ..Default::default()
         }
         .with_extreme_failures();
@@ -415,6 +438,7 @@ mod tests {
         assert_eq!(sim.eval.at_cycles, vec![1, 5, 17]);
         assert!(sim.churn.is_some(), "churn model must carry over");
         assert_eq!(sim.network.drop_prob, NetworkConfig::extreme(SIM_DELTA).drop_prob);
+        assert_eq!(sim.topology, dcfg.topology, "graph constraint must carry over");
     }
 
     /// The coordinator must derive the same evaluation peers a matched

@@ -69,9 +69,14 @@ impl<'a, B: Backend> BatchedSim<'a, B> {
         for i in 0..n_univ {
             data.train.row(i).write_dense(&mut dense_x[i * d..(i + 1) * d]);
         }
+        // the batched target rejects `topology` upstream (RunSpec::validate),
+        // so scenarios compile graph-free here; edge scenarios cannot reach
+        // this driver
         let compiled = cfg.scenario.as_ref().map(|s| {
-            CompiledScenario::compile(s, n_univ, cfg.delta, cfg.cycles, cfg.seed, cfg.network)
-                .expect("scenario must be validated before the batched driver runs")
+            CompiledScenario::compile(
+                s, n_univ, cfg.delta, cfg.cycles, cfg.seed, cfg.network, None,
+            )
+            .expect("scenario must be validated before the batched driver runs")
         });
         let n0 = compiled.as_ref().map_or(n_univ, |c| c.initial);
         let rng = Rng::new(cfg.seed);
@@ -105,7 +110,13 @@ impl<'a, B: Backend> BatchedSim<'a, B> {
                 Mutation::SetDrop(p) => self.network.cfg.drop_prob = p,
                 Mutation::SetDelay(model) => self.network.cfg.delay = model,
                 Mutation::SetPartition(c) => self.network.set_partition(Some(c)),
-                Mutation::Heal => self.network.set_partition(None),
+                Mutation::Heal => {
+                    self.network.set_partition(None);
+                    self.network.restore_edges(None);
+                }
+                Mutation::EdgeFail(_) | Mutation::EdgeRestore(_) => {
+                    unreachable!("edge mutations need a topology, which the batched target rejects")
+                }
                 Mutation::Drift => self.drift_sign = -self.drift_sign,
                 Mutation::ForceOffline(ids) => {
                     for i in ids {
@@ -154,7 +165,7 @@ impl<'a, B: Backend> BatchedSim<'a, B> {
         );
         let n0 = self.store.n();
         let mut sampler_rng = self.rng.fork();
-        let mut sampler = PeerSampler::new(self.cfg.sampler, n0, delta, &mut sampler_rng);
+        let mut sampler = PeerSampler::new(self.cfg.sampler, None, n0, delta, &mut sampler_rng);
         let mut eval_rng = self.rng.fork();
         let eval_peers = eval_rng.sample_indices(n0, self.cfg.eval.n_peers.min(n0));
 

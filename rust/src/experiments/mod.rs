@@ -9,6 +9,7 @@ pub mod common;
 pub mod fig1;
 pub mod fig2;
 pub mod fig3;
+pub mod fig_topology;
 pub mod sweep;
 pub mod table1;
 

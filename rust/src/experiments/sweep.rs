@@ -119,6 +119,9 @@ pub struct SweepConfig {
     /// scripted scenario axis: built-in timeline names, with `"none"` as
     /// the baseline cell (DESIGN.md §11).  Timelines must fit `cycles`.
     pub scenarios: Vec<String>,
+    /// gossip graph axis: topology spec strings (DESIGN.md §16), with
+    /// `"complete"` as the baseline cell
+    pub topologies: Vec<String>,
     /// independent repetitions per cell
     pub replicates: u64,
     pub base_seed: u64,
@@ -139,6 +142,7 @@ impl SweepConfig {
             variants: vec![Variant::Rw, Variant::Mu],
             failures: vec![false, true],
             scenarios: vec!["none".into()],
+            topologies: vec!["complete".into()],
             replicates: 1,
             base_seed,
             eval_peers: 100,
@@ -157,6 +161,8 @@ pub struct SweepCell {
     pub failures: bool,
     /// scripted scenario name ("none" = baseline)
     pub scenario: String,
+    /// topology spec string ("complete" = baseline)
+    pub topology: String,
     pub replicate: u64,
     /// the derived per-run seed actually used
     pub seed: u64,
@@ -165,26 +171,32 @@ pub struct SweepCell {
 }
 
 /// Deterministic per-cell seed: independent of job scheduling and thread
-/// count.  Scenario-free cells keep the pre-scenario tag format, so
-/// historical sweep seeds are reproducible.
+/// count.  Baseline cells keep their historical tag format — scenario-free
+/// cells the pre-scenario tag, complete-graph cells the pre-topology tag —
+/// so sweep seeds from earlier releases stay reproducible.
 pub fn cell_seed(
     base: u64,
     dataset: &str,
     variant: Variant,
     failures: bool,
     scenario: &str,
+    topology: &str,
     replicate: u64,
 ) -> u64 {
-    let tag = if scenario == "none" {
-        format!("{dataset}/{}/{failures}/r{replicate}", variant.name())
+    let mut tag = if scenario == "none" {
+        format!("{dataset}/{}/{failures}", variant.name())
     } else {
-        format!("{dataset}/{}/{failures}/{scenario}/r{replicate}", variant.name())
+        format!("{dataset}/{}/{failures}/{scenario}", variant.name())
     };
+    if topology != "complete" {
+        tag.push_str(&format!("/t={topology}"));
+    }
+    tag.push_str(&format!("/r{replicate}"));
     derive_seed(base, &tag)
 }
 
 /// Run the full grid in parallel.  Cells are returned in deterministic
-/// (dataset, variant, failures, scenario, replicate) order.  Every cell is
+/// (dataset, variant, failures, scenario, topology, replicate) order.  Every cell is
 /// constructed through the [`crate::api::RunSpec`] facade (native
 /// event-driven simulator), so the grid and a hand-built single run share
 /// one configuration path.
@@ -198,6 +210,7 @@ pub fn run_grid(cfg: &SweepConfig) -> Result<Vec<SweepCell>, GolfError> {
         variant: Variant,
         failures: bool,
         scenario: usize,
+        topology: usize,
         replicate: u64,
     }
 
@@ -212,6 +225,18 @@ pub fn run_grid(cfg: &SweepConfig) -> Result<Vec<SweepCell>, GolfError> {
                 Some(crate::scenario::builtin(name)?)
             };
             Ok((name.clone(), s))
+        })
+        .collect::<Result<_, GolfError>>()?;
+
+    // resolve the topology axis once; every cell clones its parsed spec
+    let topologies: Vec<(String, Option<crate::p2p::TopologySpec>)> = cfg
+        .topologies
+        .iter()
+        .map(|name| {
+            Ok((
+                name.clone(),
+                crate::p2p::TopologySpec::parse(name).map_err(GolfError::config)?,
+            ))
         })
         .collect::<Result<_, GolfError>>()?;
 
@@ -242,13 +267,57 @@ pub fn run_grid(cfg: &SweepConfig) -> Result<Vec<SweepCell>, GolfError> {
             }
         }
     }
+    // every (topology × dataset) graph must build, and every scenario with
+    // edge events must have a graph to mutate.  Structure checks (degree-0,
+    // connectivity, feasibility) are seed-independent for every generator
+    // except a pathological kreg realization, so validating against the
+    // base seed catches bad cells before a worker thread would panic on its
+    // derived seed.
+    for (tname, tspec) in &topologies {
+        for e in &sets {
+            let topo = match tspec {
+                None => None,
+                Some(spec) => Some(
+                    crate::p2p::Topology::build(spec, e.ds.n_train(), cfg.base_seed)
+                        .map_err(|err| {
+                            GolfError::config(format!(
+                                "topology {tname:?} on {}: {err}",
+                                e.ds.name
+                            ))
+                        })?,
+                ),
+            };
+            for (sname, s) in &scenarios {
+                if let Some(s) = s {
+                    s.validate_topology(topo.as_ref()).map_err(|err| {
+                        GolfError::scenario_in(
+                            format!(
+                                "scenario {sname:?} with topology {tname:?} on {}",
+                                e.ds.name
+                            ),
+                            err,
+                        )
+                    })?;
+                }
+            }
+        }
+    }
     let mut descs = Vec::new();
     for ds_idx in 0..sets.len() {
         for &variant in &cfg.variants {
             for &failures in &cfg.failures {
                 for scenario in 0..scenarios.len() {
-                    for replicate in 0..cfg.replicates {
-                        descs.push(JobDesc { ds_idx, variant, failures, scenario, replicate });
+                    for topology in 0..topologies.len() {
+                        for replicate in 0..cfg.replicates {
+                            descs.push(JobDesc {
+                                ds_idx,
+                                variant,
+                                failures,
+                                scenario,
+                                topology,
+                                replicate,
+                            });
+                        }
                     }
                 }
             }
@@ -265,12 +334,14 @@ pub fn run_grid(cfg: &SweepConfig) -> Result<Vec<SweepCell>, GolfError> {
         let jd = &descs[i];
         let e = &sets[jd.ds_idx];
         let (scn_name, scn) = &scenarios[jd.scenario];
+        let (topo_name, topo) = &topologies[jd.topology];
         let seed = cell_seed(
             cfg.base_seed,
             &e.ds.name,
             jd.variant,
             jd.failures,
             scn_name,
+            topo_name,
             jd.replicate,
         );
         let spec = ExperimentSpec {
@@ -287,6 +358,7 @@ pub fn run_grid(cfg: &SweepConfig) -> Result<Vec<SweepCell>, GolfError> {
             exec_path: cfg.path,
             failures: jd.failures,
             scenario: scn.clone(),
+            topology: topo.clone(),
             ..Default::default()
         };
         let res = RunSpec::from_spec(spec)
@@ -301,6 +373,7 @@ pub fn run_grid(cfg: &SweepConfig) -> Result<Vec<SweepCell>, GolfError> {
             variant: jd.variant,
             failures: jd.failures,
             scenario: scn_name.clone(),
+            topology: topo_name.clone(),
             replicate: jd.replicate,
             seed,
             curve: res.curve,
@@ -310,30 +383,45 @@ pub fn run_grid(cfg: &SweepConfig) -> Result<Vec<SweepCell>, GolfError> {
 }
 
 /// Write sweep results as CSV, one file per (dataset, failure scenario,
-/// scripted scenario).  Scenario-free groups keep the historical
-/// `sweep_<dataset>_<failures>.csv` names.
+/// scripted scenario, topology).  Baseline groups keep the historical
+/// names: scenario-free complete-graph groups write
+/// `sweep_<dataset>_<failures>.csv`, exactly as before the scenario and
+/// topology axes existed.
 pub fn to_csv(cells: &[SweepCell], dir: &std::path::Path) -> std::io::Result<()> {
     use std::collections::BTreeMap;
-    let mut groups: BTreeMap<(String, bool, String), Vec<Curve>> = BTreeMap::new();
+    let mut groups: BTreeMap<(String, bool, String, String), Vec<Curve>> = BTreeMap::new();
     for c in cells {
         let mut curve = c.curve.clone();
-        curve.label = if c.scenario == "none" {
-            format!("p2pegasos-{}-r{}", c.variant.name(), c.replicate)
-        } else {
-            format!("p2pegasos-{}-{}-r{}", c.variant.name(), c.scenario, c.replicate)
-        };
+        let mut label = format!("p2pegasos-{}", c.variant.name());
+        if c.scenario != "none" {
+            label.push_str(&format!("-{}", c.scenario));
+        }
+        if c.topology != "complete" {
+            label.push_str(&format!("-{}", c.topology));
+        }
+        label.push_str(&format!("-r{}", c.replicate));
+        curve.label = label;
         groups
-            .entry((c.dataset.clone(), c.failures, c.scenario.clone()))
+            .entry((c.dataset.clone(), c.failures, c.scenario.clone(), c.topology.clone()))
             .or_default()
             .push(curve);
     }
-    for ((dataset, failures, scenario), curves) in groups {
+    for ((dataset, failures, scenario, topology), curves) in groups {
         let fail = if failures { "af" } else { "nofail" };
-        let f = if scenario == "none" {
-            dir.join(format!("sweep_{dataset}_{fail}.csv"))
-        } else {
-            dir.join(format!("sweep_{dataset}_{fail}_{scenario}.csv"))
-        };
+        let mut stem = format!("sweep_{dataset}_{fail}");
+        if scenario != "none" {
+            stem.push_str(&format!("_{scenario}"));
+        }
+        if topology != "complete" {
+            // spec strings carry ':' and ',' (e.g. "ring:2", inline edge
+            // lists) — keep filenames portable
+            let safe: String = topology
+                .chars()
+                .map(|ch| if ch.is_ascii_alphanumeric() || ch == '-' { ch } else { '_' })
+                .collect();
+            stem.push_str(&format!("_{safe}"));
+        }
+        let f = dir.join(format!("{stem}.csv"));
         crate::eval::csv::write_curves(&f, &curves)?;
     }
     Ok(())
@@ -397,9 +485,18 @@ mod tests {
         for c in &cells {
             assert!(!c.curve.points.is_empty());
             assert_eq!(c.scenario, "none");
+            assert_eq!(c.topology, "complete");
             assert_eq!(
                 c.seed,
-                cell_seed(7, &c.dataset, c.variant, c.failures, &c.scenario, c.replicate)
+                cell_seed(
+                    7,
+                    &c.dataset,
+                    c.variant,
+                    c.failures,
+                    &c.scenario,
+                    &c.topology,
+                    c.replicate,
+                )
             );
         }
         // replicates are genuinely independent runs
@@ -433,5 +530,34 @@ mod tests {
         assert!(run_grid(&cfg).is_err());
         cfg.scenarios = vec!["partition-heal".into()]; // needs >= 120 cycles
         assert!(run_grid(&cfg).is_err(), "8-cycle grid cannot fit a cycle-120 phase");
+    }
+
+    #[test]
+    fn topology_axis_enumerates_and_derives_distinct_seeds() {
+        let mut cfg = SweepConfig::paper_grid(0.01, 3, 9);
+        cfg.variants = vec![Variant::Mu];
+        cfg.failures = vec![false];
+        cfg.topologies = vec!["complete".into(), "ring:2".into()];
+        cfg.replicates = 1;
+        cfg.eval_peers = 5;
+        cfg.threads = 2;
+        let cells = run_grid(&cfg).unwrap();
+        assert_eq!(cells.len(), 3 * 2); // 3 datasets x 2 topologies
+        assert_eq!(cells[0].topology, "complete");
+        assert_eq!(cells[1].topology, "ring:2");
+        assert_ne!(cells[0].seed, cells[1].seed);
+        // the complete-graph tag is unchanged from the pre-topology format
+        assert_eq!(
+            cells[0].seed,
+            crate::util::rng::derive_seed(9, "reuters/mu/false/r0")
+        );
+        // a graph that cannot build on a grid dataset errors before dispatch
+        cfg.topologies = vec!["kreg:100000".into()];
+        assert!(run_grid(&cfg).is_err(), "kreg degree exceeds the node count");
+        // edge-event scenarios require a graph across the whole axis
+        cfg.topologies = vec!["complete".into()];
+        cfg.cycles = 200;
+        cfg.scenarios = vec!["link-storm".into()];
+        assert!(run_grid(&cfg).is_err(), "link-storm needs a topology to mutate");
     }
 }

@@ -36,6 +36,7 @@ use crate::gossip::create_model::Variant;
 use crate::gossip::sharded;
 use crate::learning::adaline::Learner;
 use crate::p2p::overlay::SamplerConfig;
+use crate::p2p::topology::{TopologyMetrics, TopologySpec};
 use crate::scenario::Scenario;
 use crate::sim::churn::ChurnConfig;
 use crate::sim::event::Ticks;
@@ -155,6 +156,13 @@ pub struct ProtocolConfig {
     /// run length in cycles (wall time = cycles * Δ)
     pub cycles: u64,
     pub sampler: SamplerConfig,
+    /// graph constraint on who can gossip with whom (DESIGN.md §16).
+    /// `None` is the implicit complete graph — every pair may interact,
+    /// the paper's setting.  With a spec set, SELECTPEER draws only
+    /// topology neighbors (NEWSCAST views are constrained to them) and
+    /// scenarios may fail individual edges.  The graph is built
+    /// deterministically from `(spec, n, seed)` by every execution path.
+    pub topology: Option<TopologySpec>,
     pub network: NetworkConfig,
     pub churn: Option<ChurnConfig>,
     pub eval: EvalConfig,
@@ -195,6 +203,7 @@ impl ProtocolConfig {
             delta: 1000,
             cycles,
             sampler: SamplerConfig::Newscast { view_size: 20 },
+            topology: None,
             network: NetworkConfig::reliable(),
             churn: None,
             eval: EvalConfig::default(),
@@ -244,6 +253,9 @@ pub struct RunStats {
     /// message weight buffers that had to be freshly allocated (pool empty,
     /// or pooling disabled).
     pub pool_misses: u64,
+    /// structural metrics of the run's graph topology (DESIGN.md §16);
+    /// `None` on the implicit complete graph.
+    pub topology: Option<TopologyMetrics>,
 }
 
 /// Result of one simulated run.

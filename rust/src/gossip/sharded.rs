@@ -59,6 +59,7 @@ use crate::gossip::protocol::{ExecMode, ProtocolConfig, RunResult, RunStats};
 use crate::gossip::state::ModelStore;
 use crate::learning::linear::LinearModel;
 use crate::p2p::overlay::{PeerSampler, SamplerConfig};
+use crate::p2p::topology::Topology;
 use crate::scenario::driver::{resolve_churn_schedule, CompiledScenario, Mutation, ScenarioDriver};
 use crate::sim::event::{EventKey, KeyedQueue, NodeId, Ticks};
 use crate::sim::network::{Fate, Network};
@@ -97,6 +98,10 @@ struct Shared<'a> {
     /// clones (a ForceOffline wave at 1M nodes carries tens of thousands of
     /// ids — deep-cloning it per shard used to dominate setup memory)
     compiled: Option<Arc<CompiledScenario>>,
+    /// the run's graph topology (DESIGN.md §16), built once from
+    /// `(spec, n_univ, seed)` and shared read-only: samplers hold Arc
+    /// clones, edge-failure mutations reference its canonical edge list
+    topology: Option<Arc<Topology>>,
     /// sorted (time, node, joined) churn transitions within the horizon
     churn_events: Vec<(Ticks, NodeId, bool)>,
     /// churn liveness at tick 0, over the full universe
@@ -244,6 +249,7 @@ impl<'a, B: Backend> Runner<'a, B> {
             network: Network::new(sh.cfg.network),
             sampler: PeerSampler::new_range(
                 sh.cfg.sampler,
+                sh.topology.as_ref(),
                 lo,
                 hi,
                 sh.members0,
@@ -312,7 +318,12 @@ impl<'a, B: Backend> Runner<'a, B> {
                 Mutation::SetPartition(components) => {
                     self.network.set_partition(Some(components))
                 }
-                Mutation::Heal => self.network.set_partition(None),
+                Mutation::Heal => {
+                    self.network.set_partition(None);
+                    self.network.restore_edges(None);
+                }
+                Mutation::EdgeFail(edges) => self.network.fail_edges(&edges),
+                Mutation::EdgeRestore(edges) => self.network.restore_edges(edges.as_deref()),
                 Mutation::Drift => self.drift_sign = -self.drift_sign,
                 Mutation::ForceOffline(ids) => {
                     for i in ids {
@@ -930,7 +941,8 @@ fn drive(
     // semantics); their effects land in the final stats, after the last
     // measurement
     pool.window(plan.horizon, plan.horizon + 1)?;
-    let stats = pool.finish()?;
+    let mut stats = pool.finish()?;
+    stats.topology = sh.topology.as_ref().map(|t| *t.metrics());
     Ok(RunResult { curve, stats })
 }
 
@@ -971,10 +983,27 @@ fn build_shared<'a>(
 ) -> Shared<'a> {
     let n_univ = data.n_train();
     assert!(n_univ >= 2, "need at least two nodes");
+    // the graph is a pure function of (spec, n_univ, seed) — generators
+    // derive their own streams, so building it here consumes nothing from
+    // the run RNG and the fork order below stays load-bearing and intact
+    let topology = cfg.topology.as_ref().map(|spec| {
+        Arc::new(
+            Topology::build(spec, n_univ, cfg.seed)
+                .expect("topology must be validated before the simulator runs"),
+        )
+    });
     let compiled = cfg.scenario.as_ref().map(|s| {
         Arc::new(
-            CompiledScenario::compile(s, n_univ, cfg.delta, cfg.cycles, cfg.seed, cfg.network)
-                .expect("scenario must be validated before the simulator runs"),
+            CompiledScenario::compile(
+                s,
+                n_univ,
+                cfg.delta,
+                cfg.cycles,
+                cfg.seed,
+                cfg.network,
+                topology.as_deref(),
+            )
+            .expect("scenario must be validated before the simulator runs"),
         )
     });
     let members0 = compiled.as_ref().map_or(n_univ, |c| c.initial);
@@ -1022,6 +1051,7 @@ fn build_shared<'a>(
         cfg,
         data,
         compiled,
+        topology,
         churn_events,
         churn_online0,
         eval_peers,

@@ -128,6 +128,10 @@ pub struct DeployConfig {
     /// (state resident, protocol silent) until their join tick — the
     /// wall-clock analogue of the simulator's model-store growth.
     pub scenario: Option<Scenario>,
+    /// gossip graph constraint (DESIGN.md §16); the coordinator builds the
+    /// graph once from `(spec, n_nodes, seed)` and every node group samples
+    /// neighbors from the shared CSR.  `None` = the implicit complete graph.
+    pub topology: Option<crate::p2p::TopologySpec>,
 }
 
 impl Default for DeployConfig {
@@ -147,6 +151,7 @@ impl Default for DeployConfig {
             eval_at_cycles: Vec::new(),
             seed: 42,
             scenario: None,
+            topology: None,
         }
     }
 }
@@ -275,6 +280,9 @@ pub(crate) struct GroupCtx<'a> {
     /// compiled scenario timeline; every node drives its own cursor off an
     /// Arc clone of the one shared compilation
     pub(crate) scn: Option<&'a std::sync::Arc<CompiledScenario>>,
+    /// resolved gossip graph, shared read-only across groups; per-node
+    /// samplers draw neighbors from its CSR rows
+    pub(crate) topo: Option<&'a std::sync::Arc<crate::p2p::Topology>>,
     pub(crate) start: Instant,
     pub(crate) shared: &'a SharedRun,
 }
@@ -627,7 +635,8 @@ pub(crate) fn group_main(ctx: GroupCtx<'_>) -> GroupReport {
         // thread-per-node runtime: seed derivation, then sampler init, then
         // the first gossip jitter
         let mut rng = Rng::new(cfg.seed ^ (me as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
-        let sampler = PeerSampler::new_local(cfg.sampler, me, cfg.n_nodes, SIM_DELTA, &mut rng);
+        let sampler =
+            PeerSampler::new_local(cfg.sampler, ctx.topo, me, cfg.n_nodes, SIM_DELTA, &mut rng);
         let mut cache = ModelCache::new(cfg.cache_size);
         cache.add(LinearModel::zeros(d));
         let scn = ctx.scn.map(|c| ScenarioDriver::new(c.clone()));
@@ -688,7 +697,14 @@ pub(crate) fn group_main(ctx: GroupCtx<'_>) -> GroupReport {
                             Mutation::SetDrop(p) => st.net.cfg.drop_prob = p,
                             Mutation::SetDelay(model) => st.net.cfg.delay = model,
                             Mutation::SetPartition(c) => st.net.set_partition(Some(c)),
-                            Mutation::Heal => st.net.set_partition(None),
+                            Mutation::Heal => {
+                                st.net.set_partition(None);
+                                st.net.restore_edges(None);
+                            }
+                            Mutation::EdgeFail(edges) => st.net.fail_edges(&edges),
+                            Mutation::EdgeRestore(edges) => {
+                                st.net.restore_edges(edges.as_deref())
+                            }
                             Mutation::Drift => st.drift_sign = -st.drift_sign,
                             Mutation::ForceOffline(ids) => st.forced_off |= ids.contains(&e.node),
                             Mutation::Restore(ids) => {

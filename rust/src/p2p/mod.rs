@@ -1,6 +1,9 @@
-//! Peer-sampling layer: NEWSCAST plus oracle and perfect-matching baselines.
+//! Peer-sampling layer: NEWSCAST plus oracle and perfect-matching
+//! baselines, and the graph-topology constraint (DESIGN.md §16).
 pub mod newscast;
 pub mod overlay;
+pub mod topology;
 
 pub use newscast::{Descriptor, Newscast};
 pub use overlay::{PeerSampler, SamplerConfig};
+pub use topology::{Topology, TopologyKind, TopologyMetrics, TopologySpec};

@@ -5,9 +5,16 @@
 //! on receipt, the two views are merged and the freshest `c` distinct
 //! descriptors are kept.  SELECTPEER draws uniformly from the local view,
 //! which approximates a uniform random sample of the network.
+//!
+//! When a graph [`Topology`] constrains the run (DESIGN.md §16), the overlay
+//! is confined to the graph: bootstrap views draw from each node's neighbor
+//! list, and merges discard descriptors of non-neighbors (a node can learn
+//! an address from gossip, but can only *link* to peers it has an edge to).
 
+use crate::p2p::topology::Topology;
 use crate::sim::event::{NodeId, Ticks};
 use crate::util::rng::Rng;
+use std::sync::Arc;
 
 pub const DEFAULT_VIEW_SIZE: usize = 20;
 
@@ -30,24 +37,64 @@ pub struct Newscast {
     views: Vec<Vec<Descriptor>>,
     pub view_size: usize,
     base: NodeId,
+    /// Graph constraint: views only ever hold topology neighbors.
+    topo: Option<Arc<Topology>>,
+}
+
+/// One bootstrap view over a `members`-node universe: uniform rejection
+/// draws, or — under a topology — draws from `me`'s neighbor list (all
+/// neighbors when the list fits the view).  The uniform branch reproduces
+/// the historical draw sequence exactly, so topology-free runs are
+/// bit-for-bit unchanged.
+fn fill_view(
+    me: NodeId,
+    members: usize,
+    view_size: usize,
+    topo: Option<&Topology>,
+    rng: &mut Rng,
+) -> Vec<Descriptor> {
+    if let Some(t) = topo {
+        let nbrs: Vec<NodeId> = t
+            .neighbors(me)
+            .iter()
+            .map(|&w| w as usize)
+            .filter(|&w| w < members)
+            .collect();
+        if nbrs.len() <= view_size {
+            return nbrs.iter().map(|&node| Descriptor { node, ts: 0 }).collect();
+        }
+        let mut v = Vec::with_capacity(view_size);
+        while v.len() < view_size {
+            let peer = nbrs[rng.below_usize(nbrs.len())];
+            if !v.iter().any(|d: &Descriptor| d.node == peer) {
+                v.push(Descriptor { node: peer, ts: 0 });
+            }
+        }
+        return v;
+    }
+    let mut v = Vec::with_capacity(view_size);
+    while v.len() < view_size.min(members.saturating_sub(1)) {
+        let peer = rng.below_usize(members);
+        if peer != me && !v.iter().any(|d: &Descriptor| d.node == peer) {
+            v.push(Descriptor { node: peer, ts: 0 });
+        }
+    }
+    v
 }
 
 impl Newscast {
     /// Bootstrap: every node starts with `view_size` random descriptors
     /// (timestamp 0), as if a rendezvous service seeded the overlay.
-    pub fn bootstrap(n: usize, view_size: usize, rng: &mut Rng) -> Self {
-        let mut views = Vec::with_capacity(n);
-        for me in 0..n {
-            let mut v = Vec::with_capacity(view_size);
-            while v.len() < view_size.min(n.saturating_sub(1)) {
-                let peer = rng.below_usize(n);
-                if peer != me && !v.iter().any(|d: &Descriptor| d.node == peer) {
-                    v.push(Descriptor { node: peer, ts: 0 });
-                }
-            }
-            views.push(v);
-        }
-        Newscast { views, view_size, base: 0 }
+    pub fn bootstrap(
+        n: usize,
+        view_size: usize,
+        topo: Option<&Arc<Topology>>,
+        rng: &mut Rng,
+    ) -> Self {
+        let views = (0..n)
+            .map(|me| fill_view(me, n, view_size, topo.map(Arc::as_ref), rng))
+            .collect();
+        Newscast { views, view_size, base: 0, topo: topo.cloned() }
     }
 
     /// Bootstrap a *single* node's view in an otherwise empty state: used by
@@ -55,17 +102,16 @@ impl Newscast {
     /// only ever touches its own slot.  Keeps per-node cost O(view_size)
     /// instead of O(n · view_size) (which would be O(n²) across a
     /// deployment).
-    pub fn bootstrap_node(me: NodeId, n: usize, view_size: usize, rng: &mut Rng) -> Self {
+    pub fn bootstrap_node(
+        me: NodeId,
+        n: usize,
+        view_size: usize,
+        topo: Option<&Arc<Topology>>,
+        rng: &mut Rng,
+    ) -> Self {
         let mut views = vec![Vec::new(); n];
-        let mut v = Vec::with_capacity(view_size);
-        while v.len() < view_size.min(n.saturating_sub(1)) {
-            let peer = rng.below_usize(n);
-            if peer != me && !v.iter().any(|d: &Descriptor| d.node == peer) {
-                v.push(Descriptor { node: peer, ts: 0 });
-            }
-        }
-        views[me] = v;
-        Newscast { views, view_size, base: 0 }
+        views[me] = fill_view(me, n, view_size, topo.map(Arc::as_ref), rng);
+        Newscast { views, view_size, base: 0, topo: topo.cloned() }
     }
 
     /// Range view for the sharded simulator: views for nodes
@@ -82,31 +128,31 @@ impl Newscast {
         members: usize,
         view_size: usize,
         seed: u64,
+        topo: Option<&Arc<Topology>>,
     ) -> Self {
         let views = (lo..hi)
             .map(|me| {
                 if me < members {
-                    Self::boot_view(me, members, view_size, seed)
+                    Self::boot_view(me, members, view_size, seed, topo.map(Arc::as_ref))
                 } else {
                     Vec::new()
                 }
             })
             .collect();
-        Newscast { views, view_size, base: lo }
+        Newscast { views, view_size, base: lo, topo: topo.cloned() }
     }
 
     /// One node's bootstrap view over a `members`-node universe, drawn from
     /// the node's own derived stream.
-    fn boot_view(me: NodeId, members: usize, view_size: usize, seed: u64) -> Vec<Descriptor> {
+    fn boot_view(
+        me: NodeId,
+        members: usize,
+        view_size: usize,
+        seed: u64,
+        topo: Option<&Topology>,
+    ) -> Vec<Descriptor> {
         let mut rng = crate::util::rng::derive_stream(seed, "newscast", me as u64);
-        let mut v = Vec::with_capacity(view_size);
-        while v.len() < view_size.min(members.saturating_sub(1)) {
-            let peer = rng.below_usize(members);
-            if peer != me && !v.iter().any(|d: &Descriptor| d.node == peer) {
-                v.push(Descriptor { node: peer, ts: 0 });
-            }
-        }
-        v
+        fill_view(me, members, view_size, topo, &mut rng)
     }
 
     /// Range-view counterpart of [`Newscast::grow`]: activate nodes in
@@ -115,9 +161,15 @@ impl Newscast {
     pub fn grow_range(&mut self, old_members: usize, new_members: usize, seed: u64) {
         let lo = self.base.max(old_members);
         let hi = (self.base + self.views.len()).min(new_members);
+        let topo = self.topo.clone();
         for me in lo..hi {
-            self.views[me - self.base] =
-                Self::boot_view(me, new_members, self.view_size, seed);
+            self.views[me - self.base] = Self::boot_view(
+                me,
+                new_members,
+                self.view_size,
+                seed,
+                topo.as_deref(),
+            );
         }
     }
 
@@ -128,14 +180,9 @@ impl Newscast {
     /// start gossiping (their payloads lead with their own descriptor).
     pub fn grow(&mut self, n_new: usize, rng: &mut Rng) {
         let old = self.views.len();
+        let topo = self.topo.clone();
         for me in old..n_new {
-            let mut v = Vec::with_capacity(self.view_size);
-            while v.len() < self.view_size.min(n_new.saturating_sub(1)) {
-                let peer = rng.below_usize(n_new);
-                if peer != me && !v.iter().any(|d: &Descriptor| d.node == peer) {
-                    v.push(Descriptor { node: peer, ts: 0 });
-                }
-            }
+            let v = fill_view(me, n_new, self.view_size, topo.as_deref(), rng);
             self.views.push(v);
         }
     }
@@ -172,12 +219,18 @@ impl Newscast {
 
     /// Merge an incoming payload into `node`'s view: union, dedup by node id
     /// keeping the freshest timestamp, drop self, keep the `view_size`
-    /// freshest.
+    /// freshest.  Under a topology, descriptors of non-neighbors are
+    /// discarded — the overlay never links across a missing edge.
     pub fn merge(&mut self, node: NodeId, payload: &[Descriptor]) {
         let view = &mut self.views[node - self.base];
         for &d in payload {
             if d.node == node {
                 continue;
+            }
+            if let Some(t) = &self.topo {
+                if !t.has_edge(node, d.node) {
+                    continue;
+                }
             }
             match view.iter_mut().find(|e| e.node == d.node) {
                 Some(e) => e.ts = e.ts.max(d.ts),
@@ -197,12 +250,13 @@ impl Newscast {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::p2p::topology::TopologySpec;
     use crate::util::stats::chi2_uniform;
 
     #[test]
     fn bootstrap_views_valid() {
         let mut rng = Rng::new(1);
-        let nc = Newscast::bootstrap(50, 20, &mut rng);
+        let nc = Newscast::bootstrap(50, 20, None, &mut rng);
         for me in 0..50 {
             let v = nc.view(me);
             assert_eq!(v.len(), 20);
@@ -217,7 +271,7 @@ mod tests {
     #[test]
     fn bootstrap_node_fills_only_own_slot() {
         let mut rng = Rng::new(6);
-        let nc = Newscast::bootstrap_node(7, 50, 20, &mut rng);
+        let nc = Newscast::bootstrap_node(7, 50, 20, None, &mut rng);
         let v = nc.view(7);
         assert_eq!(v.len(), 20);
         assert!(v.iter().all(|d| d.node != 7 && d.node < 50));
@@ -241,20 +295,20 @@ mod tests {
     #[test]
     fn bootstrap_range_is_grouping_independent() {
         let (n, seed) = (24, 99);
-        let full = Newscast::bootstrap_range(0, n, n, 6, seed);
+        let full = Newscast::bootstrap_range(0, n, n, 6, seed, None);
         for (lo, hi) in [(0usize, 7usize), (7, 16), (16, 24)] {
-            let shard = Newscast::bootstrap_range(lo, hi, n, 6, seed);
+            let shard = Newscast::bootstrap_range(lo, hi, n, 6, seed, None);
             for me in lo..hi {
                 assert_eq!(shard.view(me), full.view(me), "node {me}");
                 assert!(shard.view(me).iter().all(|d| d.node != me && d.node < n));
             }
         }
         // grow: latecomers start empty, then bootstrap over the new universe
-        let mut shard = Newscast::bootstrap_range(8, 16, 12, 6, seed);
+        let mut shard = Newscast::bootstrap_range(8, 16, 12, 6, seed, None);
         assert!(shard.view(13).is_empty());
         shard.grow_range(12, 20, seed);
         assert!(!shard.view(13).is_empty());
-        let mut full2 = Newscast::bootstrap_range(0, 20, 12, 6, seed);
+        let mut full2 = Newscast::bootstrap_range(0, 20, 12, 6, seed, None);
         full2.grow_range(12, 20, seed);
         for me in 8..16 {
             assert_eq!(shard.view(me), full2.view(me), "grown node {me}");
@@ -271,7 +325,7 @@ mod tests {
     #[test]
     fn merge_keeps_freshest_and_bounds_size() {
         let mut rng = Rng::new(2);
-        let mut nc = Newscast::bootstrap(10, 4, &mut rng);
+        let mut nc = Newscast::bootstrap(10, 4, None, &mut rng);
         let payload = vec![
             Descriptor { node: 1, ts: 100 },
             Descriptor { node: 2, ts: 99 },
@@ -290,12 +344,39 @@ mod tests {
     #[test]
     fn merge_dedups_updating_timestamp() {
         let mut rng = Rng::new(3);
-        let mut nc = Newscast::bootstrap(5, 3, &mut rng);
+        let mut nc = Newscast::bootstrap(5, 3, None, &mut rng);
         nc.merge(0, &[Descriptor { node: 1, ts: 5 }]);
         nc.merge(0, &[Descriptor { node: 1, ts: 9 }]);
         let hits: Vec<_> = nc.view(0).iter().filter(|d| d.node == 1).collect();
         assert_eq!(hits.len(), 1);
         assert_eq!(hits[0].ts, 9);
+    }
+
+    /// Under a topology, bootstrap views hold only graph neighbors and
+    /// merges refuse descriptors across missing edges.
+    #[test]
+    fn topology_confines_views_to_neighbors() {
+        let spec = TopologySpec::parse("ring:2").unwrap().unwrap();
+        let topo = Arc::new(crate::p2p::topology::Topology::build(&spec, 20, 7).unwrap());
+        let mut rng = Rng::new(4);
+        let mut nc = Newscast::bootstrap(20, 6, Some(&topo), &mut rng);
+        for me in 0..20 {
+            let v = nc.view(me);
+            // ring:2 degree is 4 < view_size, so the view is the full list
+            assert_eq!(v.len(), 4, "node {me}");
+            assert!(v.iter().all(|d| topo.has_edge(me, d.node)));
+        }
+        // a non-neighbor descriptor is discarded, a neighbor's accepted
+        nc.merge(0, &[Descriptor { node: 10, ts: 50 }, Descriptor { node: 2, ts: 60 }]);
+        assert!(nc.view(0).iter().all(|d| d.node != 10));
+        assert!(nc.view(0).iter().any(|d| d.node == 2 && d.ts == 60));
+        // range bootstrap is grouping-independent under the constraint too
+        let full = Newscast::bootstrap_range(0, 20, 20, 3, 99, Some(&topo));
+        let shard = Newscast::bootstrap_range(5, 12, 20, 3, 99, Some(&topo));
+        for me in 5..12 {
+            assert_eq!(shard.view(me), full.view(me), "node {me}");
+            assert!(full.view(me).iter().all(|d| topo.has_edge(me, d.node)));
+        }
     }
 
     #[test]
@@ -307,7 +388,7 @@ mod tests {
         // time-averaged histogram against uniform.
         let n = 60;
         let mut rng = Rng::new(4);
-        let mut nc = Newscast::bootstrap(n, 15, &mut rng);
+        let mut nc = Newscast::bootstrap(n, 15, None, &mut rng);
         let mut counts = vec![0u64; n];
         let mut order: Vec<usize> = (0..n).collect();
         for round in 0..700u64 {

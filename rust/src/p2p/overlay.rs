@@ -1,19 +1,25 @@
 //! Peer-sampling service abstraction: the SELECTPEER placeholder of
-//! Algorithm 1.  Three implementations (Section VI-A):
+//! Algorithm 1.  Four implementations (Section VI-A + DESIGN.md §16):
 //!
 //! * `Newscast` — the paper's choice: gossip-based peer sampling with
-//!   piggybacked views (p2p/newscast.rs).
+//!   piggybacked views (p2p/newscast.rs).  Under a graph topology the
+//!   overlay is confined to topology neighbors.
 //! * `Oracle` — idealized uniform sampling over *online* nodes (baseline for
 //!   testing the NEWSCAST uniformity assumption).
+//! * `Topo` — graph-constrained oracle: uniform rejection sampling over the
+//!   node's topology neighbor list (DESIGN.md §16).  Selected when a
+//!   [`Topology`] is configured and the sampler is `oracle`.
 //! * `Matching` — PERFECT MATCHING: a fresh random perfect matching of the
 //!   online nodes each cycle, so every peer receives exactly one message
 //!   (Section VI-A(e); not practical, used as a diversity-maximizing
-//!   baseline).
+//!   baseline).  Incompatible with a topology (the matching is global).
 
 use crate::p2p::newscast::{Descriptor, Newscast};
+use crate::p2p::topology::Topology;
 use crate::sim::event::{NodeId, Ticks};
 use crate::util::bitset::Bitset;
 use crate::util::rng::Rng;
+use std::sync::Arc;
 
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum SamplerConfig {
@@ -36,7 +42,18 @@ impl SamplerConfig {
 pub enum PeerSampler {
     Oracle { n: usize },
     Newscast(Newscast),
+    Topo(TopoState),
     Matching(MatchingState),
+}
+
+/// Graph-constrained sampler state: the shared immutable graph plus the
+/// current membership bound (scenario latecomers sit beyond `members` until
+/// a grow mutation activates them; selection rejects them like offline
+/// peers).
+#[derive(Debug)]
+pub struct TopoState {
+    topo: Arc<Topology>,
+    members: usize,
 }
 
 #[derive(Debug)]
@@ -48,25 +65,42 @@ pub struct MatchingState {
 }
 
 impl PeerSampler {
-    pub fn new(cfg: SamplerConfig, n: usize, delta: Ticks, rng: &mut Rng) -> Self {
+    /// `topo` constrains sampling to a graph: `oracle` becomes the
+    /// graph-constrained `Topo` sampler, NEWSCAST views are confined to
+    /// topology neighbors, and `matching` is rejected upstream by spec
+    /// validation (a global matching has no graph-local analogue).
+    pub fn new(
+        cfg: SamplerConfig,
+        topo: Option<&Arc<Topology>>,
+        n: usize,
+        delta: Ticks,
+        rng: &mut Rng,
+    ) -> Self {
         match cfg {
-            SamplerConfig::Oracle => PeerSampler::Oracle { n },
+            SamplerConfig::Oracle => match topo {
+                Some(t) => PeerSampler::Topo(TopoState { topo: t.clone(), members: n }),
+                None => PeerSampler::Oracle { n },
+            },
             SamplerConfig::Newscast { view_size } => {
-                PeerSampler::Newscast(Newscast::bootstrap(n, view_size, rng))
+                PeerSampler::Newscast(Newscast::bootstrap(n, view_size, topo, rng))
             }
-            SamplerConfig::Matching => PeerSampler::Matching(MatchingState {
-                n,
-                delta,
-                cycle: u64::MAX,
-                partner: vec![None; n],
-            }),
+            SamplerConfig::Matching => {
+                debug_assert!(topo.is_none(), "matching/topology conflict is validated upstream");
+                PeerSampler::Matching(MatchingState {
+                    n,
+                    delta,
+                    cycle: u64::MAX,
+                    partner: vec![None; n],
+                })
+            }
         }
     }
 
     /// A sampler for one shard runner of the sharded simulator (DESIGN.md
     /// §13), covering nodes `[lo, hi)` of a `members`-node universe.
     /// Construction consumes no shared RNG: NEWSCAST views come from
-    /// per-node derived streams (`Newscast::bootstrap_range`), so the
+    /// per-node derived streams (`Newscast::bootstrap_range`), and the
+    /// topo sampler is pure replicated state over the shared graph, so the
     /// result is identical however nodes are grouped into shards.  The
     /// oracle is replicated state (`n = members`); MATCHING needs a
     /// globally consistent partner table and is only valid when a single
@@ -74,6 +108,7 @@ impl PeerSampler {
     /// spec validation).
     pub fn new_range(
         cfg: SamplerConfig,
+        topo: Option<&Arc<Topology>>,
         lo: NodeId,
         hi: NodeId,
         members: usize,
@@ -81,17 +116,25 @@ impl PeerSampler {
         seed: u64,
     ) -> Self {
         match cfg {
-            SamplerConfig::Oracle => PeerSampler::Oracle { n: members },
+            SamplerConfig::Oracle => match topo {
+                Some(t) => PeerSampler::Topo(TopoState { topo: t.clone(), members }),
+                None => PeerSampler::Oracle { n: members },
+            },
             SamplerConfig::Newscast { view_size } => PeerSampler::Newscast(
-                Newscast::bootstrap_range(lo, hi, members, view_size, seed),
+                Newscast::bootstrap_range(lo, hi, members, view_size, seed, topo),
             ),
             SamplerConfig::Matching => {
                 debug_assert!(lo == 0, "matching requires a full-range runner");
+                debug_assert!(
+                    hi == members,
+                    "matching is full-range: hi is a NodeId bound and must equal members"
+                );
+                debug_assert!(topo.is_none(), "matching/topology conflict is validated upstream");
                 PeerSampler::Matching(MatchingState {
                     n: members,
                     delta,
                     cycle: u64::MAX,
-                    partner: vec![None; hi.max(members)],
+                    partner: vec![None; members],
                 })
             }
         }
@@ -104,6 +147,7 @@ impl PeerSampler {
         match self {
             PeerSampler::Oracle { n } => *n = (*n).max(new_members),
             PeerSampler::Newscast(nc) => nc.grow_range(old_members, new_members, seed),
+            PeerSampler::Topo(st) => st.members = st.members.max(new_members),
             PeerSampler::Matching(st) => {
                 if new_members > st.n {
                     st.n = new_members;
@@ -121,22 +165,32 @@ impl PeerSampler {
     /// instance and never reads another node's state.  Matching is not
     /// meaningful per-node (it needs a globally consistent partner table)
     /// and must be rejected by the deployment configuration.
-    pub fn new_local(cfg: SamplerConfig, me: NodeId, n: usize, delta: Ticks, rng: &mut Rng) -> Self {
+    pub fn new_local(
+        cfg: SamplerConfig,
+        topo: Option<&Arc<Topology>>,
+        me: NodeId,
+        n: usize,
+        delta: Ticks,
+        rng: &mut Rng,
+    ) -> Self {
         match cfg {
             SamplerConfig::Newscast { view_size } => {
-                PeerSampler::Newscast(Newscast::bootstrap_node(me, n, view_size, rng))
+                PeerSampler::Newscast(Newscast::bootstrap_node(me, n, view_size, topo, rng))
             }
-            other => PeerSampler::new(other, n, delta, rng),
+            other => PeerSampler::new(other, topo, n, delta, rng),
         }
     }
 
     /// SELECTPEER for `node` at `now`. `online` gives current liveness as a
-    /// packed [`Bitset`] (the oracle and matching samplers restrict to
-    /// online peers; newscast may return an offline peer — the message is
-    /// then simply lost, as in a real deployment).  The oracle keeps its
+    /// packed [`Bitset`] (the oracle, topo, and matching samplers restrict
+    /// to online peers; newscast may return an offline peer — the message
+    /// is then simply lost, as in a real deployment).  The oracle keeps its
     /// rejection-sampling draw sequence: `Bitset::test` is an O(1) drop-in
     /// for the old `Vec<bool>` index, so selections are bit-for-bit
-    /// unchanged.
+    /// unchanged.  The topo sampler mirrors the oracle's bounded rejection
+    /// loop over the node's neighbor list, drawing from the caller's
+    /// per-node stream — selections are therefore shard-grouping
+    /// independent.
     pub fn select(
         &mut self,
         node: NodeId,
@@ -154,6 +208,19 @@ impl PeerSampler {
                 }
                 None
             }
+            PeerSampler::Topo(st) => {
+                let nbrs = st.topo.neighbors(node);
+                if nbrs.is_empty() {
+                    return None;
+                }
+                for _ in 0..64 {
+                    let p = nbrs[rng.below_usize(nbrs.len())] as usize;
+                    if p != node && p < st.members && online.test(p) {
+                        return Some(p);
+                    }
+                }
+                None
+            }
             PeerSampler::Newscast(nc) => {
                 nc.select(node, rng).filter(|&p| p != node)
             }
@@ -166,12 +233,14 @@ impl PeerSampler {
 
     /// Grow the sampling universe to `n_new` nodes (scenario flash crowds):
     /// the oracle widens its range, NEWSCAST bootstraps views for the new
-    /// arrivals, and the matching baseline enlarges (and invalidates) its
-    /// partner table.
+    /// arrivals, the topo sampler raises its membership bound (the graph
+    /// covers the full universe up front), and the matching baseline
+    /// enlarges (and invalidates) its partner table.
     pub fn grow(&mut self, n_new: usize, rng: &mut Rng) {
         match self {
             PeerSampler::Oracle { n } => *n = (*n).max(n_new),
             PeerSampler::Newscast(nc) => nc.grow(n_new, rng),
+            PeerSampler::Topo(st) => st.members = st.members.max(n_new),
             PeerSampler::Matching(st) => {
                 if n_new > st.n {
                     st.n = n_new;
@@ -236,10 +305,16 @@ impl MatchingState {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::p2p::topology::TopologySpec;
+
+    fn ring(n: usize, k: usize) -> Arc<Topology> {
+        let spec = TopologySpec::parse(&format!("ring:{k}")).unwrap().unwrap();
+        Arc::new(Topology::build(&spec, n, 7).unwrap())
+    }
 
     #[test]
     fn oracle_skips_offline_and_self() {
-        let mut s = PeerSampler::new(SamplerConfig::Oracle, 4, 1000, &mut Rng::new(1));
+        let mut s = PeerSampler::new(SamplerConfig::Oracle, None, 4, 1000, &mut Rng::new(1));
         let online = Bitset::from_fn(4, |i| i != 1);
         let mut rng = Rng::new(2);
         for _ in 0..200 {
@@ -250,15 +325,81 @@ mod tests {
 
     #[test]
     fn oracle_gives_up_when_alone() {
-        let mut s = PeerSampler::new(SamplerConfig::Oracle, 3, 1000, &mut Rng::new(1));
+        let mut s = PeerSampler::new(SamplerConfig::Oracle, None, 3, 1000, &mut Rng::new(1));
         let online = Bitset::from_fn(3, |i| i == 0);
         assert_eq!(s.select(0, 0, &online, &mut Rng::new(2)), None);
     }
 
     #[test]
+    fn topo_samples_only_neighbors_and_skips_offline() {
+        let topo = ring(10, 1); // node 3's neighbors: 2 and 4
+        let mut s = PeerSampler::new(SamplerConfig::Oracle, Some(&topo), 10, 1000, &mut Rng::new(1));
+        assert!(matches!(s, PeerSampler::Topo(_)));
+        let online = Bitset::filled(10, true);
+        let mut rng = Rng::new(2);
+        for _ in 0..200 {
+            let p = s.select(3, 0, &online, &mut rng).unwrap();
+            assert!(p == 2 || p == 4, "ring:1 must sample adjacent nodes, got {p}");
+        }
+        // offline neighbor is rejected; with both offline, selection fails
+        let online = Bitset::from_fn(10, |i| i != 2);
+        for _ in 0..200 {
+            assert_eq!(s.select(3, 0, &online, &mut rng), Some(4));
+        }
+        let online = Bitset::from_fn(10, |i| i != 2 && i != 4);
+        assert_eq!(s.select(3, 0, &online, &mut rng), None);
+    }
+
+    #[test]
+    fn topo_range_sampler_is_grouping_independent() {
+        // the topo sampler keeps no per-node state and draws from the
+        // caller's per-node stream, so a shard-range instance selects
+        // exactly what the full-range instance selects
+        let topo = ring(20, 3);
+        let online = Bitset::filled(20, true);
+        let mut full =
+            PeerSampler::new_range(SamplerConfig::Oracle, Some(&topo), 0, 20, 20, 1000, 42);
+        let mut shard =
+            PeerSampler::new_range(SamplerConfig::Oracle, Some(&topo), 5, 10, 20, 1000, 42);
+        for me in 5..10 {
+            let mut r1 = crate::util::rng::derive_stream(42, "node", me as u64);
+            let mut r2 = crate::util::rng::derive_stream(42, "node", me as u64);
+            for _ in 0..50 {
+                assert_eq!(
+                    full.select(me, 0, &online, &mut r1),
+                    shard.select(me, 0, &online, &mut r2),
+                    "node {me}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn topo_rejects_latecomers_until_grown() {
+        // universe of 12 nodes, 6 members: neighbors >= members are
+        // rejected like offline peers until grow_range activates them
+        let topo = ring(12, 1);
+        let online = Bitset::filled(12, true);
+        let mut s = PeerSampler::new_range(SamplerConfig::Oracle, Some(&topo), 0, 12, 6, 1000, 1);
+        let mut rng = Rng::new(3);
+        for _ in 0..100 {
+            // node 5's ring neighbors are 4 and 6; 6 is beyond membership
+            assert_eq!(s.select(5, 0, &online, &mut rng), Some(4));
+        }
+        s.grow_range(6, 12, 1);
+        let mut seen6 = false;
+        for _ in 0..200 {
+            if s.select(5, 0, &online, &mut rng) == Some(6) {
+                seen6 = true;
+            }
+        }
+        assert!(seen6, "grown topo sampler must reach activated neighbors");
+    }
+
+    #[test]
     fn matching_is_a_perfect_matching_per_cycle() {
         let n = 10;
-        let mut s = PeerSampler::new(SamplerConfig::Matching, n, 100, &mut Rng::new(3));
+        let mut s = PeerSampler::new(SamplerConfig::Matching, None, n, 100, &mut Rng::new(3));
         let online = Bitset::filled(n, true);
         let mut rng = Rng::new(4);
         let partners: Vec<Option<NodeId>> =
@@ -276,9 +417,19 @@ mod tests {
     }
 
     #[test]
+    fn matching_range_partner_table_is_member_sized() {
+        let s = PeerSampler::new_range(SamplerConfig::Matching, None, 0, 8, 8, 100, 1);
+        if let PeerSampler::Matching(st) = s {
+            assert_eq!(st.partner.len(), 8);
+        } else {
+            panic!("expected a matching sampler");
+        }
+    }
+
+    #[test]
     fn matching_leaves_odd_node_out() {
         let n = 5;
-        let mut s = PeerSampler::new(SamplerConfig::Matching, n, 100, &mut Rng::new(5));
+        let mut s = PeerSampler::new(SamplerConfig::Matching, None, n, 100, &mut Rng::new(5));
         let online = Bitset::filled(n, true);
         let mut rng = Rng::new(6);
         let unmatched = (0..n)
@@ -292,6 +443,7 @@ mod tests {
         let mut rng = Rng::new(9);
         let mut s = PeerSampler::new_local(
             SamplerConfig::Newscast { view_size: 5 },
+            None,
             3,
             20,
             1000,
@@ -314,7 +466,7 @@ mod tests {
     fn grow_extends_every_sampler_kind() {
         let mut rng = Rng::new(12);
         // oracle: range widens
-        let mut s = PeerSampler::new(SamplerConfig::Oracle, 4, 1000, &mut rng);
+        let mut s = PeerSampler::new(SamplerConfig::Oracle, None, 4, 1000, &mut rng);
         s.grow(8, &mut rng);
         let online = Bitset::filled(8, true);
         let mut seen_new = false;
@@ -327,6 +479,7 @@ mod tests {
         // newscast: new nodes get bootstrapped views, old views untouched
         let mut s = PeerSampler::new(
             SamplerConfig::Newscast { view_size: 5 },
+            None,
             10,
             1000,
             &mut rng,
@@ -340,7 +493,7 @@ mod tests {
             assert_eq!(payload[0].node, node);
         }
         // matching: partner table covers the grown universe
-        let mut s = PeerSampler::new(SamplerConfig::Matching, 4, 100, &mut rng);
+        let mut s = PeerSampler::new(SamplerConfig::Matching, None, 4, 100, &mut rng);
         s.grow(6, &mut rng);
         let online = Bitset::filled(6, true);
         let partners: Vec<_> = (0..6).map(|i| s.select(i, 0, &online, &mut rng)).collect();
@@ -359,6 +512,7 @@ mod tests {
         // universe of 20 rows, 15 initially in the overlay
         let full = PeerSampler::new_range(
             SamplerConfig::Newscast { view_size: 4 },
+            None,
             0,
             20,
             15,
@@ -367,6 +521,7 @@ mod tests {
         );
         let mut shard = PeerSampler::new_range(
             SamplerConfig::Newscast { view_size: 4 },
+            None,
             5,
             10,
             15,
@@ -384,7 +539,7 @@ mod tests {
             assert_eq!(shard.payload(me, 0), full.payload(me, 0), "grown {me}");
         }
         // oracle range sampler widens like the legacy one
-        let mut o = PeerSampler::new_range(SamplerConfig::Oracle, 5, 10, 15, 1000, seed);
+        let mut o = PeerSampler::new_range(SamplerConfig::Oracle, None, 5, 10, 15, 1000, seed);
         o.grow_range(15, 20, seed);
         let online = Bitset::filled(20, true);
         let mut rng = Rng::new(3);
@@ -402,6 +557,7 @@ mod tests {
         let mut rng = Rng::new(7);
         let mut s = PeerSampler::new(
             SamplerConfig::Newscast { view_size: 5 },
+            None,
             20,
             1000,
             &mut rng,

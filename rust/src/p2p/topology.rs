@@ -1,0 +1,733 @@
+//! Graph topologies constraining SELECTPEER (DESIGN.md §16).
+//!
+//! The paper's protocol assumes a (near-)uniform overlay, but real P2P
+//! deployments gossip over structured graphs whose diameter and expansion
+//! govern mixing time.  This module provides:
+//!
+//! * [`TopologySpec`] — the parsed, serializable form of a `topology =` key
+//!   (`ring:K`, `grid`, `kreg:K`, `ba:M`, `graph:<file>`,
+//!   `graph-inline:a-b,c-d,…`), round-tripping losslessly through
+//!   [`TopologySpec::name`].  `"complete"` / `"none"` parse to `None`: the
+//!   implicit all-pairs overlay every run used before this subsystem.
+//! * [`Topology`] — the resolved graph: a symmetric adjacency in CSR form
+//!   (sorted, deduped neighbor lists; no self loops) plus a canonical
+//!   undirected edge list for scenario-level edge mutations, built
+//!   seed-deterministically (generators derive their own RNG streams via
+//!   [`derive_seed`], never consuming from a shared RNG — the
+//!   `resolve_churn_schedule → sampler → eval` fork order in
+//!   `build_shared` is load-bearing and must not shift).
+//! * [`TopologyMetrics`] — cheap structural metrics (degree min/mean/max,
+//!   BFS double-sweep diameter estimate, component count) surfaced in run
+//!   banners and `RunStats`.
+//!
+//! Validation is typed at the boundary: a graph with a degree-0 node can
+//! never gossip and is always rejected; a disconnected graph is rejected
+//! unless the spec opts in with the `allow-disconnected:` prefix (each
+//! component then converges to its own model, which is sometimes exactly
+//! the experiment).
+
+use crate::util::rng::{derive_seed, Rng};
+use std::fmt;
+
+/// How a [`TopologySpec`] generates its edge set.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TopologyKind {
+    /// `ring:K` — circulant graph: node `i` links to its `K` nearest
+    /// neighbors on each side (degree `2K` once `n > 2K`).
+    Ring { k: usize },
+    /// `grid` — 2D torus on `rows × cols = n` with `rows` the largest
+    /// divisor of `n` at most `√n` (degenerates to a cycle for prime `n`).
+    Grid,
+    /// `kreg:K` — uniform random `K`-regular graph (stub matching with
+    /// edge-swap repair), seed-deterministic.
+    KRegular { k: usize },
+    /// `ba:M` — Barabási–Albert preferential attachment: an `M+1`-clique
+    /// seed, then each new node attaches `M` edges biased by degree.
+    BarabasiAlbert { m: usize },
+    /// `graph:<file>` — whitespace/`-` separated 0-based edge pairs, one
+    /// per line, `#` comments; read at build time.
+    GraphFile { path: String },
+    /// `graph-inline:a-b,c-d,…` — the same edge list embedded in the spec
+    /// string (kept sorted/deduped so serialization is canonical).
+    GraphInline { edges: Vec<(usize, usize)> },
+}
+
+/// A parsed `topology =` value.  `parse` ↔ `name` round-trip exactly.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TopologySpec {
+    pub kind: TopologyKind,
+    /// Accept a multi-component graph (`allow-disconnected:` prefix).
+    /// Degree-0 nodes are rejected regardless — they can never gossip.
+    pub allow_disconnected: bool,
+}
+
+const ALLOW_PREFIX: &str = "allow-disconnected:";
+
+impl TopologySpec {
+    /// Parse a spec string.  `"complete"` and `"none"` — the implicit
+    /// uniform overlay — parse to `None`; everything else is a constrained
+    /// graph or a typed error message.
+    pub fn parse(s: &str) -> Result<Option<TopologySpec>, String> {
+        let s = s.trim();
+        if s.eq_ignore_ascii_case("complete") || s.eq_ignore_ascii_case("none") {
+            return Ok(None);
+        }
+        let (allow_disconnected, body) = match s.strip_prefix(ALLOW_PREFIX) {
+            Some(rest) => (true, rest),
+            None => (false, s),
+        };
+        let kind = if let Some(k) = body.strip_prefix("ring:") {
+            let k: usize = k
+                .parse()
+                .map_err(|_| format!("ring:K needs an integer K, got {k:?}"))?;
+            if k == 0 {
+                return Err("ring:K needs K >= 1".into());
+            }
+            TopologyKind::Ring { k }
+        } else if body == "grid" {
+            TopologyKind::Grid
+        } else if let Some(k) = body.strip_prefix("kreg:") {
+            let k: usize = k
+                .parse()
+                .map_err(|_| format!("kreg:K needs an integer K, got {k:?}"))?;
+            if k == 0 {
+                return Err("kreg:K needs K >= 1".into());
+            }
+            TopologyKind::KRegular { k }
+        } else if let Some(m) = body.strip_prefix("ba:") {
+            let m: usize = m
+                .parse()
+                .map_err(|_| format!("ba:M needs an integer M, got {m:?}"))?;
+            if m == 0 {
+                return Err("ba:M needs M >= 1".into());
+            }
+            TopologyKind::BarabasiAlbert { m }
+        } else if let Some(path) = body.strip_prefix("graph:") {
+            if path.is_empty() {
+                return Err("graph:<file> needs a path".into());
+            }
+            TopologyKind::GraphFile { path: path.to_string() }
+        } else if let Some(list) = body.strip_prefix("graph-inline:") {
+            TopologyKind::GraphInline { edges: parse_edge_list(list)? }
+        } else {
+            return Err(format!(
+                "unknown topology {s:?} (expected complete, ring:K, grid, kreg:K, \
+                 ba:M, graph:<file>, or graph-inline:a-b,c-d)"
+            ));
+        };
+        Ok(Some(TopologySpec { kind, allow_disconnected }))
+    }
+
+    /// The canonical spec string; `parse(name())` reproduces `self`.
+    pub fn name(&self) -> String {
+        let body = match &self.kind {
+            TopologyKind::Ring { k } => format!("ring:{k}"),
+            TopologyKind::Grid => "grid".into(),
+            TopologyKind::KRegular { k } => format!("kreg:{k}"),
+            TopologyKind::BarabasiAlbert { m } => format!("ba:{m}"),
+            TopologyKind::GraphFile { path } => format!("graph:{path}"),
+            TopologyKind::GraphInline { edges } => {
+                let pairs: Vec<String> =
+                    edges.iter().map(|&(a, b)| format!("{a}-{b}")).collect();
+                format!("graph-inline:{}", pairs.join(","))
+            }
+        };
+        if self.allow_disconnected {
+            format!("{ALLOW_PREFIX}{body}")
+        } else {
+            body
+        }
+    }
+}
+
+impl fmt::Display for TopologySpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.name())
+    }
+}
+
+/// Parse `a-b,c-d,…` into canonical (min, max) pairs, sorted and deduped
+/// (the same canonicalization `Csr::push_row` applies to column indices).
+fn parse_edge_list(list: &str) -> Result<Vec<(usize, usize)>, String> {
+    let mut edges = Vec::new();
+    for pair in list.split(',') {
+        let pair = pair.trim();
+        if pair.is_empty() {
+            continue;
+        }
+        let (a, b) = pair
+            .split_once('-')
+            .ok_or_else(|| format!("edge {pair:?} is not of the form a-b"))?;
+        let a: usize = a
+            .trim()
+            .parse()
+            .map_err(|_| format!("edge {pair:?}: bad node id {a:?}"))?;
+        let b: usize = b
+            .trim()
+            .parse()
+            .map_err(|_| format!("edge {pair:?}: bad node id {b:?}"))?;
+        if a == b {
+            return Err(format!("edge {pair:?} is a self loop"));
+        }
+        edges.push((a.min(b), a.max(b)));
+    }
+    if edges.is_empty() {
+        return Err("edge list is empty".into());
+    }
+    edges.sort_unstable();
+    edges.dedup();
+    Ok(edges)
+}
+
+/// Cheap structural metrics, computed once at build time.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TopologyMetrics {
+    pub nodes: usize,
+    /// undirected edge count
+    pub edges: usize,
+    pub degree_min: usize,
+    pub degree_max: usize,
+    pub degree_mean: f64,
+    /// connected components
+    pub components: usize,
+    /// BFS double-sweep eccentricity on the largest component — a lower
+    /// bound on the true diameter, exact on trees and usually tight.
+    pub diameter_est: usize,
+}
+
+impl TopologyMetrics {
+    /// One-line banner form.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} nodes, {} edges, degree {}/{:.1}/{}, diameter>={}, {} component{}",
+            self.nodes,
+            self.edges,
+            self.degree_min,
+            self.degree_mean,
+            self.degree_max,
+            self.diameter_est,
+            self.components,
+            if self.components == 1 { "" } else { "s" }
+        )
+    }
+}
+
+/// A resolved symmetric graph over the node universe: CSR adjacency plus a
+/// canonical undirected edge list.  Immutable after build; shared across
+/// shards / node groups behind an `Arc`.
+#[derive(Debug)]
+pub struct Topology {
+    spec: TopologySpec,
+    n: usize,
+    /// CSR row pointers, length `n + 1`.
+    indptr: Vec<u32>,
+    /// Sorted, deduped neighbor lists (both directions of every edge).
+    indices: Vec<u32>,
+    /// Canonical `(min, max)` undirected edges, sorted — the index space
+    /// scenario edge mutations sample from.
+    edges: Vec<(u32, u32)>,
+    metrics: TopologyMetrics,
+}
+
+impl Topology {
+    /// Build the graph `spec` describes over `n` nodes.  Deterministic in
+    /// `(spec, n, seed)`; randomized generators derive private streams
+    /// (`derive_seed(seed, "topo/…")`) and never touch a shared RNG.
+    pub fn build(spec: &TopologySpec, n: usize, seed: u64) -> Result<Topology, String> {
+        if n < 2 {
+            return Err(format!("a topology needs at least 2 nodes, got {n}"));
+        }
+        let raw = match &spec.kind {
+            TopologyKind::Ring { k } => gen_ring(n, *k),
+            TopologyKind::Grid => gen_grid(n),
+            TopologyKind::KRegular { k } => gen_kregular(n, *k, seed)?,
+            TopologyKind::BarabasiAlbert { m } => gen_ba(n, *m, seed)?,
+            TopologyKind::GraphFile { path } => {
+                let text = std::fs::read_to_string(path)
+                    .map_err(|e| format!("topology graph:{path}: {e}"))?;
+                edges_from_text(&text)?
+            }
+            TopologyKind::GraphInline { edges } => edges.clone(),
+        };
+        Self::from_edges(spec.clone(), n, raw)
+    }
+
+    /// Assemble CSR + metrics from a raw (possibly unsorted, duplicated)
+    /// undirected edge list, then run the typed validation pass.
+    fn from_edges(
+        spec: TopologySpec,
+        n: usize,
+        mut raw: Vec<(usize, usize)>,
+    ) -> Result<Topology, String> {
+        for &(a, b) in &raw {
+            if a >= n || b >= n {
+                return Err(format!(
+                    "topology {}: edge {}-{} names a node >= n = {n}",
+                    spec.name(),
+                    a.min(b),
+                    a.max(b)
+                ));
+            }
+            debug_assert!(a != b, "generators never emit self loops");
+        }
+        raw.iter_mut().for_each(|e| {
+            if e.0 > e.1 {
+                *e = (e.1, e.0);
+            }
+        });
+        raw.sort_unstable();
+        raw.dedup();
+        let edges: Vec<(u32, u32)> =
+            raw.iter().map(|&(a, b)| (a as u32, b as u32)).collect();
+
+        // CSR: count degrees, prefix-sum, scatter, then sort each row.
+        let mut deg = vec![0u32; n];
+        for &(a, b) in &edges {
+            deg[a as usize] += 1;
+            deg[b as usize] += 1;
+        }
+        let mut indptr = vec![0u32; n + 1];
+        for i in 0..n {
+            indptr[i + 1] = indptr[i] + deg[i];
+        }
+        let mut indices = vec![0u32; indptr[n] as usize];
+        let mut cursor: Vec<u32> = indptr[..n].to_vec();
+        for &(a, b) in &edges {
+            indices[cursor[a as usize] as usize] = b;
+            cursor[a as usize] += 1;
+            indices[cursor[b as usize] as usize] = a;
+            cursor[b as usize] += 1;
+        }
+        for i in 0..n {
+            indices[indptr[i] as usize..indptr[i + 1] as usize].sort_unstable();
+        }
+
+        // Typed validation: degree-0 nodes can never gossip.
+        if let Some(isolated) = (0..n).find(|&i| deg[i] == 0) {
+            return Err(format!(
+                "topology {}: node {isolated} has degree 0 and can never gossip",
+                spec.name()
+            ));
+        }
+        let metrics = compute_metrics(n, &indptr, &indices, edges.len(), &deg);
+        if metrics.components > 1 && !spec.allow_disconnected {
+            return Err(format!(
+                "topology {}: graph has {} components; prefix the spec with \
+                 {ALLOW_PREFIX:?} to run on a disconnected graph",
+                spec.name(),
+                metrics.components
+            ));
+        }
+        Ok(Topology { spec, n, indptr, indices, edges, metrics })
+    }
+
+    pub fn spec(&self) -> &TopologySpec {
+        &self.spec
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn degree(&self, v: usize) -> usize {
+        (self.indptr[v + 1] - self.indptr[v]) as usize
+    }
+
+    /// Sorted neighbor list of `v`.
+    pub fn neighbors(&self, v: usize) -> &[u32] {
+        &self.indices[self.indptr[v] as usize..self.indptr[v + 1] as usize]
+    }
+
+    /// O(log degree) membership test.
+    pub fn has_edge(&self, a: usize, b: usize) -> bool {
+        a < self.n && b < self.n && self.neighbors(a).binary_search(&(b as u32)).is_ok()
+    }
+
+    /// Canonical `(min, max)` undirected edge list, sorted — stable index
+    /// space for seed-deterministic scenario sampling.
+    pub fn edges(&self) -> &[(u32, u32)] {
+        &self.edges
+    }
+
+    /// All edges crossing between components of a partition map
+    /// (`components[v]` = component id) — the `bridge_cut` edge set.
+    pub fn crossing_edges(&self, components: &[u32]) -> Vec<(u32, u32)> {
+        let comp = |v: u32| components.get(v as usize).copied().unwrap_or(0);
+        self.edges
+            .iter()
+            .copied()
+            .filter(|&(a, b)| comp(a) != comp(b))
+            .collect()
+    }
+
+    pub fn metrics(&self) -> &TopologyMetrics {
+        &self.metrics
+    }
+
+    /// Banner line: `ring:2: 500 nodes, 1000 edges, …`.
+    pub fn summary(&self) -> String {
+        format!("{}: {}", self.spec.name(), self.metrics.summary())
+    }
+}
+
+/// BFS from `start`, writing distances into `dist` (u32::MAX = unreached).
+/// Returns the farthest reached node and its distance.
+fn bfs(
+    indptr: &[u32],
+    indices: &[u32],
+    start: usize,
+    dist: &mut [u32],
+    queue: &mut Vec<u32>,
+) -> (usize, u32) {
+    dist.fill(u32::MAX);
+    queue.clear();
+    dist[start] = 0;
+    queue.push(start as u32);
+    let mut head = 0;
+    let (mut far, mut far_d) = (start, 0u32);
+    while head < queue.len() {
+        let v = queue[head] as usize;
+        head += 1;
+        let d = dist[v];
+        if d > far_d {
+            (far, far_d) = (v, d);
+        }
+        for &w in &indices[indptr[v] as usize..indptr[v + 1] as usize] {
+            if dist[w as usize] == u32::MAX {
+                dist[w as usize] = d + 1;
+                queue.push(w);
+            }
+        }
+    }
+    (far, far_d)
+}
+
+fn compute_metrics(
+    n: usize,
+    indptr: &[u32],
+    indices: &[u32],
+    edges: usize,
+    deg: &[u32],
+) -> TopologyMetrics {
+    let degree_min = deg.iter().copied().min().unwrap_or(0) as usize;
+    let degree_max = deg.iter().copied().max().unwrap_or(0) as usize;
+    let degree_mean = if n == 0 { 0.0 } else { 2.0 * edges as f64 / n as f64 };
+
+    // Components + largest-component representative in one sweep.
+    let mut dist = vec![u32::MAX; n];
+    let mut queue = Vec::with_capacity(n);
+    let mut seen = vec![false; n];
+    let mut components = 0usize;
+    let (mut big_rep, mut big_size) = (0usize, 0usize);
+    for v in 0..n {
+        if seen[v] {
+            continue;
+        }
+        components += 1;
+        bfs(indptr, indices, v, &mut dist, &mut queue);
+        let size = queue.len();
+        for &w in &queue {
+            seen[w as usize] = true;
+        }
+        if size > big_size {
+            (big_rep, big_size) = (v, size);
+        }
+    }
+    // Double-sweep diameter estimate on the largest component.
+    let (far, _) = bfs(indptr, indices, big_rep, &mut dist, &mut queue);
+    let (_, ecc) = bfs(indptr, indices, far, &mut dist, &mut queue);
+    TopologyMetrics {
+        nodes: n,
+        edges,
+        degree_min,
+        degree_max,
+        degree_mean,
+        components,
+        diameter_est: ecc as usize,
+    }
+}
+
+/// Circulant ring: `i ↔ i±1..k (mod n)`.
+fn gen_ring(n: usize, k: usize) -> Vec<(usize, usize)> {
+    let mut edges = Vec::with_capacity(n * k);
+    for i in 0..n {
+        for d in 1..=k.min(n - 1) {
+            edges.push((i, (i + d) % n));
+        }
+    }
+    edges
+}
+
+/// 2D torus on `rows × cols = n`; `rows` = largest divisor of `n` ≤ `√n`.
+fn gen_grid(n: usize) -> Vec<(usize, usize)> {
+    let mut rows = 1;
+    let mut d = 1;
+    while d * d <= n {
+        if n % d == 0 {
+            rows = d;
+        }
+        d += 1;
+    }
+    let cols = n / rows;
+    let idx = |r: usize, c: usize| r * cols + c;
+    let mut edges = Vec::with_capacity(2 * n);
+    for r in 0..rows {
+        for c in 0..cols {
+            let right = idx(r, (c + 1) % cols);
+            if right != idx(r, c) {
+                edges.push((idx(r, c), right));
+            }
+            let down = idx((r + 1) % rows, c);
+            if down != idx(r, c) {
+                edges.push((idx(r, c), down));
+            }
+        }
+    }
+    edges
+}
+
+/// Uniform random k-regular graph: stub matching with edge-swap repair,
+/// full restarts on a stuck repair, typed error when infeasible.
+fn gen_kregular(n: usize, k: usize, seed: u64) -> Result<Vec<(usize, usize)>, String> {
+    if k >= n {
+        return Err(format!("kreg:{k} needs n > k, got n = {n}"));
+    }
+    if n * k % 2 != 0 {
+        return Err(format!("kreg:{k} over {n} nodes: n*k must be even"));
+    }
+    let mut rng = Rng::new(derive_seed(seed, "topo/kreg"));
+    let canon = |a: u32, b: u32| (a.min(b), a.max(b));
+    'attempt: for _ in 0..100 {
+        let mut stubs: Vec<u32> = (0..n as u32).flat_map(|v| std::iter::repeat(v).take(k)).collect();
+        rng.shuffle(&mut stubs);
+        let mut set = std::collections::HashSet::with_capacity(n * k / 2);
+        let mut accepted: Vec<(u32, u32)> = Vec::with_capacity(n * k / 2);
+        let mut bad: Vec<(u32, u32)> = Vec::new();
+        for pair in stubs.chunks_exact(2) {
+            let (a, b) = (pair[0], pair[1]);
+            if a != b && set.insert(canon(a, b)) {
+                accepted.push(canon(a, b));
+            } else {
+                bad.push((a, b));
+            }
+        }
+        // Repair: swap one endpoint of a bad pair with a random accepted
+        // edge; both resulting edges must be fresh non-loops.
+        let mut budget = 200 * (bad.len() + 1);
+        while let Some((a, b)) = bad.pop() {
+            let mut fixed = false;
+            while budget > 0 {
+                budget -= 1;
+                let j = rng.below_usize(accepted.len());
+                let (c, d) = accepted[j];
+                let (e1, e2) = (canon(a, d), canon(c, b));
+                if a != d && c != b && e1 != e2 && !set.contains(&e1) && !set.contains(&e2) {
+                    set.remove(&canon(c, d));
+                    accepted[j] = e1;
+                    set.insert(e1);
+                    set.insert(e2);
+                    accepted.push(e2);
+                    fixed = true;
+                    break;
+                }
+            }
+            if !fixed {
+                continue 'attempt; // stuck: reshuffle and start over
+            }
+        }
+        return Ok(accepted.into_iter().map(|(a, b)| (a as usize, b as usize)).collect());
+    }
+    Err(format!("kreg:{k} over {n} nodes: could not realize a simple k-regular graph"))
+}
+
+/// Barabási–Albert preferential attachment: an (m+1)-clique seed, then
+/// each new node draws `m` distinct targets from the repeated-endpoint
+/// list (degree-proportional), with a uniform fallback against stalls.
+fn gen_ba(n: usize, m: usize, seed: u64) -> Result<Vec<(usize, usize)>, String> {
+    if n < m + 2 {
+        return Err(format!("ba:{m} needs n >= m + 2, got n = {n}"));
+    }
+    let mut rng = Rng::new(derive_seed(seed, "topo/ba"));
+    let m0 = m + 1;
+    let mut edges: Vec<(usize, usize)> = Vec::with_capacity(m0 * m / 2 + (n - m0) * m);
+    // Endpoint multiset: each node appears once per incident edge, so a
+    // uniform draw over it is degree-proportional.
+    let mut endpoints: Vec<u32> = Vec::with_capacity(2 * (n - m0) * m);
+    for a in 0..m0 {
+        for b in (a + 1)..m0 {
+            edges.push((a, b));
+            endpoints.push(a as u32);
+            endpoints.push(b as u32);
+        }
+    }
+    let mut picked: Vec<usize> = Vec::with_capacity(m);
+    for v in m0..n {
+        picked.clear();
+        let mut attempts = 0;
+        while picked.len() < m {
+            attempts += 1;
+            let t = if attempts <= 64 * m {
+                endpoints[rng.below_usize(endpoints.len())] as usize
+            } else {
+                rng.below_usize(v) // uniform fallback; cannot stall
+            };
+            if t != v && !picked.contains(&t) {
+                picked.push(t);
+            }
+        }
+        for &t in &picked {
+            edges.push((t, v));
+            endpoints.push(t as u32);
+            endpoints.push(v as u32);
+        }
+    }
+    Ok(edges)
+}
+
+/// Parse a `graph:<file>` body: one edge per line, `a b` or `a-b` or
+/// `a,b`; blank lines and `#` comments ignored.
+fn edges_from_text(text: &str) -> Result<Vec<(usize, usize)>, String> {
+    let mut edges = Vec::new();
+    for (ln, line) in text.lines().enumerate() {
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut it = line.split(|c: char| c == '-' || c == ',' || c.is_whitespace()).filter(|t| !t.is_empty());
+        let (a, b) = match (it.next(), it.next(), it.next()) {
+            (Some(a), Some(b), None) => (a, b),
+            _ => return Err(format!("line {}: expected one edge `a b`", ln + 1)),
+        };
+        let a: usize = a.parse().map_err(|_| format!("line {}: bad node id {a:?}", ln + 1))?;
+        let b: usize = b.parse().map_err(|_| format!("line {}: bad node id {b:?}", ln + 1))?;
+        if a == b {
+            return Err(format!("line {}: edge {a}-{b} is a self loop", ln + 1));
+        }
+        edges.push((a, b));
+    }
+    if edges.is_empty() {
+        return Err("edge list file has no edges".into());
+    }
+    Ok(edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn build(spec: &str, n: usize) -> Topology {
+        let s = TopologySpec::parse(spec).unwrap().unwrap();
+        Topology::build(&s, n, 42).unwrap()
+    }
+
+    #[test]
+    fn spec_parse_name_roundtrip() {
+        for s in [
+            "ring:2",
+            "grid",
+            "kreg:4",
+            "ba:3",
+            "graph:edges.txt",
+            "graph-inline:0-1,1-2,0-2",
+            "allow-disconnected:graph-inline:0-1,2-3",
+        ] {
+            let spec = TopologySpec::parse(s).unwrap().unwrap();
+            assert_eq!(spec.name(), s, "round trip of {s:?}");
+            assert_eq!(TopologySpec::parse(&spec.name()).unwrap().unwrap(), spec);
+        }
+        assert_eq!(TopologySpec::parse("complete").unwrap(), None);
+        assert_eq!(TopologySpec::parse("none").unwrap(), None);
+        assert!(TopologySpec::parse("ring:0").is_err());
+        assert!(TopologySpec::parse("hypercube").is_err());
+        assert!(TopologySpec::parse("graph-inline:3-3").is_err());
+    }
+
+    #[test]
+    fn inline_edge_list_canonicalizes() {
+        // unsorted, duplicated, reversed pairs all collapse to one form
+        let spec = TopologySpec::parse("graph-inline:2-1,0-1,1-2,1-0").unwrap().unwrap();
+        assert_eq!(spec.name(), "graph-inline:0-1,1-2");
+    }
+
+    #[test]
+    fn ring_structure() {
+        let t = build("ring:2", 10);
+        for v in 0..10 {
+            assert_eq!(t.degree(v), 4);
+        }
+        assert!(t.has_edge(0, 1) && t.has_edge(0, 2) && t.has_edge(0, 8));
+        assert!(!t.has_edge(0, 5));
+        assert_eq!(t.metrics().components, 1);
+        assert_eq!(t.metrics().edges, 20);
+    }
+
+    #[test]
+    fn grid_is_a_torus() {
+        let t = build("grid", 12); // 3 x 4
+        for v in 0..12 {
+            assert_eq!(t.degree(v), 4);
+        }
+        assert_eq!(t.metrics().components, 1);
+    }
+
+    #[test]
+    fn kregular_has_exact_degree() {
+        let t = build("kreg:4", 50);
+        for v in 0..50 {
+            assert_eq!(t.degree(v), 4, "node {v}");
+        }
+        // seed-deterministic: rebuilding gives the identical edge set
+        let s = TopologySpec::parse("kreg:4").unwrap().unwrap();
+        let t2 = Topology::build(&s, 50, 42).unwrap();
+        assert_eq!(t.edges(), t2.edges());
+    }
+
+    #[test]
+    fn ba_is_connected_and_deterministic() {
+        let t = build("ba:2", 100);
+        assert_eq!(t.metrics().components, 1);
+        assert!(t.metrics().degree_min >= 2);
+        let s = TopologySpec::parse("ba:2").unwrap().unwrap();
+        let t2 = Topology::build(&s, 100, 42).unwrap();
+        assert_eq!(t.edges(), t2.edges());
+        let t3 = Topology::build(&s, 100, 43).unwrap();
+        assert_ne!(t.edges(), t3.edges(), "different seeds give different graphs");
+    }
+
+    #[test]
+    fn degree_zero_and_disconnected_are_typed_errors() {
+        // node 3 exists (n = 4) but has no edges
+        let s = TopologySpec::parse("graph-inline:0-1,1-2").unwrap().unwrap();
+        let err = Topology::build(&s, 4, 1).unwrap_err();
+        assert!(err.contains("degree 0"), "{err}");
+        // two components without the opt-in prefix
+        let s = TopologySpec::parse("graph-inline:0-1,2-3").unwrap().unwrap();
+        let err = Topology::build(&s, 4, 1).unwrap_err();
+        assert!(err.contains("components"), "{err}");
+        // …and with it
+        let s = TopologySpec::parse("allow-disconnected:graph-inline:0-1,2-3")
+            .unwrap()
+            .unwrap();
+        let t = Topology::build(&s, 4, 1).unwrap();
+        assert_eq!(t.metrics().components, 2);
+    }
+
+    #[test]
+    fn crossing_edges_match_partition() {
+        let t = build("ring:1", 6);
+        // halves split 0..3 vs 3..6: ring edges 2-3 and 0-5 cross
+        let comps: Vec<u32> = (0..6).map(|v| if v < 3 { 0 } else { 1 }).collect();
+        let mut crossing = t.crossing_edges(&comps);
+        crossing.sort_unstable();
+        assert_eq!(crossing, vec![(0, 5), (2, 3)]);
+    }
+
+    #[test]
+    fn diameter_estimate_on_a_path_is_exact() {
+        let s = TopologySpec::parse("graph-inline:0-1,1-2,2-3,3-4").unwrap().unwrap();
+        let t = Topology::build(&s, 5, 1).unwrap();
+        assert_eq!(t.metrics().diameter_est, 4);
+        assert_eq!(t.metrics().degree_min, 1);
+        assert_eq!(t.metrics().degree_max, 2);
+    }
+}

@@ -19,8 +19,9 @@
 //! (drop/delay), heal partitions, and restore forced leavers; point events
 //! are one-way.
 
+use crate::p2p::Topology;
 use crate::scenario::{
-    ChurnSpec, Membership, PointAction, Scenario, ScenarioError, TraceEntry,
+    ChurnSpec, EdgeSet, Membership, PointAction, Scenario, ScenarioError, TraceEntry,
 };
 use crate::sim::churn::{ChurnConfig, ChurnSchedule};
 use crate::sim::event::Ticks;
@@ -37,7 +38,14 @@ pub enum Mutation {
     /// install a partition: per-node component ids over the full universe;
     /// cross-component sends are blocked until [`Mutation::Heal`]
     SetPartition(Vec<u32>),
+    /// heal partitions *and* restore every failed topology edge
     Heal,
+    /// fail the listed topology edges (canonical `(min, max)` pairs):
+    /// sends across them block in both directions, consuming no RNG
+    /// draws, until restored
+    EdgeFail(Vec<(u32, u32)>),
+    /// restore the listed failed edges, or every failed edge (`None`)
+    EdgeRestore(Option<Vec<(u32, u32)>>),
     /// toggle the concept: training and test labels flip sign
     Drift,
     /// flash crowd: `k` new nodes join (ids continue from the current
@@ -60,7 +68,12 @@ impl Mutation {
                 let k = components.iter().copied().max().map_or(1, |m| m + 1);
                 format!("partition into {k} components")
             }
-            Mutation::Heal => "partition healed".to_string(),
+            Mutation::Heal => "partition healed, failed links restored".to_string(),
+            Mutation::EdgeFail(edges) => format!("{} topology links fail", edges.len()),
+            Mutation::EdgeRestore(None) => "all failed links restored".to_string(),
+            Mutation::EdgeRestore(Some(edges)) => {
+                format!("{} topology links restored", edges.len())
+            }
             Mutation::Drift => "concept drift: labels invert".to_string(),
             Mutation::Grow(k) => format!("{k} nodes join"),
             Mutation::ForceOffline(ids) => format!("{} nodes forced offline", ids.len()),
@@ -99,7 +112,9 @@ pub struct CompiledScenario {
 impl CompiledScenario {
     /// Compile a **validated** scenario (callers run
     /// [`Scenario::validate`] first; compilation re-validates and surfaces
-    /// the same typed errors).
+    /// the same typed errors).  `topo` is the run's resolved graph
+    /// topology, if any — required when the timeline mutates edges
+    /// (`edge_fail`/`edge_restore`/`bridge_cut`), ignored otherwise.
     pub fn compile(
         s: &Scenario,
         n: usize,
@@ -107,8 +122,10 @@ impl CompiledScenario {
         cycles: u64,
         seed: u64,
         base_net: NetworkConfig,
+        topo: Option<&Topology>,
     ) -> Result<CompiledScenario, ScenarioError> {
         s.validate(n, cycles)?;
+        s.validate_topology(topo)?;
         let n0 = s.initial_nodes(n);
         let tick = |c: u64| c * delta;
         // the baseline the phase ends revert to: the run's network config
@@ -189,6 +206,38 @@ impl CompiledScenario {
                     let k = resolve_join(*m, n0);
                     membership += k;
                     Mutation::Grow(k)
+                }
+                // edge subsets mirror the leave-wave idiom: a per-event
+                // derived stream samples *edge indices* of the canonical
+                // edge list, so compilation order and shard count can
+                // never change which links fail
+                PointAction::EdgeFail(EdgeSet::Fraction(f)) => {
+                    let all = topo.map_or(&[][..], |t| t.edges());
+                    let edges = if all.is_empty() {
+                        Vec::new() // unreachable after validate_topology
+                    } else {
+                        let k = ((all.len() as f64 * f).round() as usize).clamp(1, all.len());
+                        let mut rng = Rng::new(derive_seed(
+                            seed,
+                            &format!("scenario/{}/{}@{}", s.name, e.name, e.at),
+                        ));
+                        let mut idx = rng.sample_indices(all.len(), k);
+                        idx.sort_unstable();
+                        idx.into_iter().map(|i| all[i]).collect()
+                    };
+                    Mutation::EdgeFail(edges)
+                }
+                PointAction::EdgeFail(EdgeSet::List(edges)) => {
+                    Mutation::EdgeFail(edges.clone())
+                }
+                PointAction::EdgeRestore(edges) => Mutation::EdgeRestore(edges.clone()),
+                // a bridge cut resolves to the concrete cut-set: exactly
+                // the topology edges crossing between the partition's
+                // components (deterministic, no sampling)
+                PointAction::BridgeCut(spec) => {
+                    let edges =
+                        topo.map_or_else(Vec::new, |t| t.crossing_edges(&spec.components(n)));
+                    Mutation::EdgeFail(edges)
                 }
             };
             muts.push((tick(e.at), m));
@@ -376,7 +425,7 @@ mod tests {
             partition: Some(PartitionSpec::Halves),
             leave: Some(0.5),
         });
-        let c = CompiledScenario::compile(&s, 10, 1000, 50, 7, net()).unwrap();
+        let c = CompiledScenario::compile(&s, 10, 1000, 50, 7, net(), None).unwrap();
         assert_eq!(c.initial, 10);
         let ticks: Vec<Ticks> = c.muts.iter().map(|&(t, _)| t).collect();
         assert!(ticks.windows(2).all(|w| w[0] <= w[1]), "{ticks:?}");
@@ -428,10 +477,10 @@ mod tests {
             partition: None,
             leave: Some(0.3),
         });
-        let a = CompiledScenario::compile(&s, 40, 1000, 20, 42, net()).unwrap();
-        let b = CompiledScenario::compile(&s, 40, 1000, 20, 42, net()).unwrap();
+        let a = CompiledScenario::compile(&s, 40, 1000, 20, 42, net(), None).unwrap();
+        let b = CompiledScenario::compile(&s, 40, 1000, 20, 42, net(), None).unwrap();
         assert_eq!(a.muts, b.muts);
-        let c = CompiledScenario::compile(&s, 40, 1000, 20, 43, net()).unwrap();
+        let c = CompiledScenario::compile(&s, 40, 1000, 20, 43, net(), None).unwrap();
         assert_ne!(a.muts, c.muts, "leave subsets must depend on the seed");
     }
 
@@ -455,7 +504,7 @@ mod tests {
             partition: None,
             leave: Some(0.5),
         });
-        let c = CompiledScenario::compile(&s, 100, 1000, 40, 3, net()).unwrap();
+        let c = CompiledScenario::compile(&s, 100, 1000, 40, 3, net(), None).unwrap();
         let off: Vec<&Vec<usize>> = c
             .muts
             .iter()
@@ -476,7 +525,7 @@ mod tests {
     #[test]
     fn join_tick_and_membership_accounting() {
         let s = builtin("flash-crowd").unwrap();
-        let c = CompiledScenario::compile(&s, 100, 1000, 300, 1, net()).unwrap();
+        let c = CompiledScenario::compile(&s, 100, 1000, 300, 1, net(), None).unwrap();
         assert_eq!(c.initial, 25);
         assert_eq!(c.final_membership(), 100);
         assert_eq!(c.join_tick(0), 0);
@@ -495,7 +544,7 @@ mod tests {
             at: 3,
             action: PointAction::Drift,
         });
-        let c = CompiledScenario::compile(&s, 10, 100, 10, 1, net()).unwrap();
+        let c = CompiledScenario::compile(&s, 10, 100, 10, 1, net(), None).unwrap();
         let mut d = ScenarioDriver::new(std::sync::Arc::new(c));
         assert!(d.has_due(0));
         assert_eq!(d.pop_due(0), Some(Mutation::SetDrop(0.2)));
@@ -536,7 +585,7 @@ mod tests {
         let mut rng1 = Rng::new(9);
         let a = resolve_churn_schedule(Some(&base), None, 20, 1000, 50_000, &mut rng1).unwrap();
         let s = builtin("paper-fig3").unwrap();
-        let c = CompiledScenario::compile(&s, 20, 1000, 40, 9, net()).unwrap();
+        let c = CompiledScenario::compile(&s, 20, 1000, 40, 9, net(), None).unwrap();
         let mut rng2 = Rng::new(9);
         let b =
             resolve_churn_schedule(None, Some(&c), 20, 1000, 50_000, &mut rng2).unwrap();
@@ -546,16 +595,86 @@ mod tests {
         // Off yields no schedule and consumes nothing
         let mut s_off = Scenario::empty("off");
         s_off.churn = Some(ChurnSpec::Off);
-        let c = CompiledScenario::compile(&s_off, 20, 1000, 40, 9, net()).unwrap();
+        let c = CompiledScenario::compile(&s_off, 20, 1000, 40, 9, net(), None).unwrap();
         let mut rng3 = Rng::new(9);
         assert!(resolve_churn_schedule(Some(&base), Some(&c), 20, 1000, 50_000, &mut rng3)
             .is_none());
     }
 
     #[test]
+    fn edge_events_compile_against_the_topology() {
+        use crate::p2p::{Topology, TopologySpec};
+        use crate::scenario::EdgeSet;
+        let spec = TopologySpec::parse("ring:1").unwrap().unwrap();
+        let topo = Topology::build(&spec, 20, 7).unwrap(); // 20 edges
+        let mut s = Scenario::empty("links");
+        s.events.push(PointEvent {
+            name: "storm".into(),
+            at: 5,
+            action: PointAction::EdgeFail(EdgeSet::Fraction(0.3)),
+        });
+        s.events.push(PointEvent {
+            name: "cut".into(),
+            at: 10,
+            action: PointAction::BridgeCut(PartitionSpec::Halves),
+        });
+        s.events.push(PointEvent {
+            name: "zfix".into(),
+            at: 15,
+            action: PointAction::EdgeRestore(None),
+        });
+        let c = CompiledScenario::compile(&s, 20, 1000, 20, 42, net(), Some(&topo)).unwrap();
+        let failed: Vec<_> = c
+            .muts
+            .iter()
+            .filter_map(|(t, m)| match m {
+                Mutation::EdgeFail(e) => Some((*t, e.clone())),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(failed.len(), 2);
+        // 30% of 20 edges = 6, all real topology edges, sorted canonical
+        assert_eq!(failed[0].0, 5000);
+        assert_eq!(failed[0].1.len(), 6);
+        for &(a, b) in &failed[0].1 {
+            assert!(topo.has_edge(a as usize, b as usize), "{a}-{b}");
+        }
+        assert!(failed[0].1.windows(2).all(|w| w[0] < w[1]));
+        // the halves bridge cut on a ring is exactly the two crossing links
+        assert_eq!(failed[1].0, 10_000);
+        assert_eq!(failed[1].1, topo.crossing_edges(&PartitionSpec::Halves.components(20)));
+        assert_eq!(failed[1].1.len(), 2);
+        assert!(c.muts.contains(&(15_000, Mutation::EdgeRestore(None))));
+        // seed-deterministic subset, sensitive to the seed
+        let c2 = CompiledScenario::compile(&s, 20, 1000, 20, 42, net(), Some(&topo)).unwrap();
+        assert_eq!(c.muts, c2.muts);
+        let c3 = CompiledScenario::compile(&s, 20, 1000, 20, 43, net(), Some(&topo)).unwrap();
+        assert_ne!(
+            c.muts, c3.muts,
+            "sampled edge subsets must depend on the seed"
+        );
+        // compiling an edge scenario without a graph is a typed error
+        assert!(matches!(
+            CompiledScenario::compile(&s, 20, 1000, 20, 42, net(), None),
+            Err(ScenarioError::NeedsTopology { .. })
+        ));
+        // ...as is naming an edge the graph does not have
+        let mut bad = Scenario::empty("bad");
+        bad.events.push(PointEvent {
+            name: "x".into(),
+            at: 1,
+            action: PointAction::EdgeFail(EdgeSet::List(vec![(2, 5)])),
+        });
+        assert!(matches!(
+            CompiledScenario::compile(&bad, 20, 1000, 20, 42, net(), Some(&topo)),
+            Err(ScenarioError::UnknownEdge { a: 2, b: 5, .. })
+        ));
+    }
+
+    #[test]
     fn paper_fig3_compiles_to_the_extreme_constants() {
         let s = builtin("paper-fig3").unwrap();
-        let c = CompiledScenario::compile(&s, 50, 1000, 100, 42, net()).unwrap();
+        let c = CompiledScenario::compile(&s, 50, 1000, 100, 42, net(), None).unwrap();
         assert_eq!(c.churn, CompiledChurn::Paper);
         assert_eq!(c.muts.len(), 2);
         assert_eq!(c.muts[0], (0, Mutation::SetDrop(0.5)));

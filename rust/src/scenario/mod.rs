@@ -12,6 +12,11 @@
 //!   cycles, so one scenario file works at any tick scale),
 //! * **partitions** over node predicates (halves, modulo classes, a leading
 //!   fraction, or an explicit id list) with later healing,
+//! * **edge failures** on a graph topology (DESIGN.md §16): a
+//!   seed-deterministic fraction or explicit list of topology edges fails
+//!   (`edge_fail`), cut-sets between partition components fail
+//!   (`bridge_cut`), and failed links come back (`edge_restore`, or any
+//!   `heal`),
 //! * **mass leave / flash-crowd join** membership waves (joins grow the
 //!   model store; leaves reuse the churn pause machinery),
 //! * **concept drift** (label re-labeling: the synthetic concept inverts,
@@ -64,6 +69,13 @@ pub enum ScenarioError {
     DuplicateName { what: String, name: String },
     /// a churn trace entry is malformed (order, overlap)
     BadTrace { detail: String },
+    /// an edge action (`edge_fail`/`edge_restore`/`bridge_cut`) appears in
+    /// a run with the implicit complete topology — there is no edge set to
+    /// mutate without a `topology =` graph
+    NeedsTopology { what: String },
+    /// an edge action names an edge the configured graph does not have
+    /// (including self-loops, which no topology ever has)
+    UnknownEdge { what: String, a: u32, b: u32 },
     UnknownBuiltin { name: String },
     Io { path: String, detail: String },
 }
@@ -100,6 +112,16 @@ impl fmt::Display for ScenarioError {
                 write!(f, "two {what} sections share the name {name:?}")
             }
             ScenarioError::BadTrace { detail } => write!(f, "churn trace: {detail}"),
+            ScenarioError::NeedsTopology { what } => {
+                write!(
+                    f,
+                    "{what} mutates topology edges, but the run uses the implicit \
+                     complete graph (set `topology =` to a non-complete graph)"
+                )
+            }
+            ScenarioError::UnknownEdge { what, a, b } => {
+                write!(f, "{what} names edge {a}-{b}, which the topology does not have")
+            }
             ScenarioError::UnknownBuiltin { name } => {
                 write!(
                     f,
@@ -224,6 +246,17 @@ impl PartitionSpec {
     }
 }
 
+/// Which topology edges an `edge_fail` event hits: a seed-deterministic
+/// fraction of the graph's edge set (sampled at compile time from a
+/// per-event derived stream) or an explicit list.  Lists are canonical:
+/// `(min, max)` endpoint order, sorted, deduplicated — matching
+/// [`crate::p2p::Topology::edges`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum EdgeSet {
+    Fraction(f64),
+    List(Vec<(u32, u32)>),
+}
+
 /// An interval condition over `[from, to)` cycles.  Conditions set at
 /// `from` revert to the scenario baseline at `to` (partitions heal, forced
 /// leavers rejoin).
@@ -261,7 +294,18 @@ pub enum PointAction {
     Drop(f64),
     Delay(DelaySpec),
     Partition(PartitionSpec),
+    /// restores partitions *and* failed topology edges
     Heal,
+    /// fail a subset of the graph topology's edges: sends across them
+    /// block (both directions, no RNG perturbation) until restored
+    EdgeFail(EdgeSet),
+    /// restore failed edges: an explicit list, or every failed edge
+    /// (`None`, the bare `edge_restore` form)
+    EdgeRestore(Option<Vec<(u32, u32)>>),
+    /// fail every edge crossing between the components of a
+    /// [`PartitionSpec`] — a partition expressed through the graph, so
+    /// only real topology links are cut
+    BridgeCut(PartitionSpec),
 }
 
 /// A declarative failure/workload timeline.  See the module docs for the
@@ -524,6 +568,15 @@ impl Scenario {
                 PointAction::Partition(spec) => {
                     spec.validate(&format!("event {:?} partition", e.name), n)?;
                 }
+                PointAction::BridgeCut(spec) => {
+                    spec.validate(&format!("event {:?} bridge_cut", e.name), n)?;
+                }
+                PointAction::EdgeFail(EdgeSet::List(edges)) => {
+                    validate_edges(&format!("event {:?} edge_fail", e.name), edges, n)?;
+                }
+                PointAction::EdgeRestore(Some(edges)) => {
+                    validate_edges(&format!("event {:?} edge_restore", e.name), edges, n)?;
+                }
                 _ => {}
             }
         }
@@ -532,6 +585,83 @@ impl Scenario {
         }
         Ok(())
     }
+
+    /// Does the timeline mutate topology edges?  Such scenarios only make
+    /// sense on a non-complete graph; the configuration layer pairs this
+    /// with [`Scenario::validate_topology`] before a run starts.
+    pub fn uses_edges(&self) -> bool {
+        self.events.iter().any(|e| {
+            matches!(
+                e.action,
+                PointAction::EdgeFail(_)
+                    | PointAction::EdgeRestore(_)
+                    | PointAction::BridgeCut(_)
+            )
+        })
+    }
+
+    /// Validate edge actions against the run's resolved graph: edge
+    /// actions without a graph are rejected, and explicitly listed edges
+    /// must exist in it.  Called by the configuration layer (typed
+    /// `GolfError` before a run starts) and again by compilation.
+    pub fn validate_topology(
+        &self,
+        topo: Option<&crate::p2p::Topology>,
+    ) -> Result<(), ScenarioError> {
+        let Some(t) = topo else {
+            if let Some(e) = self.events.iter().find(|e| {
+                matches!(
+                    e.action,
+                    PointAction::EdgeFail(_)
+                        | PointAction::EdgeRestore(_)
+                        | PointAction::BridgeCut(_)
+                )
+            }) {
+                return Err(ScenarioError::NeedsTopology {
+                    what: format!("event {:?}", e.name),
+                });
+            }
+            return Ok(());
+        };
+        for e in &self.events {
+            let edges = match &e.action {
+                PointAction::EdgeFail(EdgeSet::List(edges)) => edges,
+                PointAction::EdgeRestore(Some(edges)) => edges,
+                _ => continue,
+            };
+            for &(a, b) in edges {
+                if !t.has_edge(a as usize, b as usize) {
+                    return Err(ScenarioError::UnknownEdge {
+                        what: format!("event {:?}", e.name),
+                        a,
+                        b,
+                    });
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Bounds/shape check for an explicit edge list (graph membership is
+/// checked separately by [`Scenario::validate_topology`], which needs the
+/// resolved graph).
+fn validate_edges(what: &str, edges: &[(u32, u32)], n: usize) -> Result<(), ScenarioError> {
+    for &(a, b) in edges {
+        if a == b {
+            return Err(ScenarioError::UnknownEdge { what: what.to_string(), a, b });
+        }
+        for v in [a, b] {
+            if v as usize >= n {
+                return Err(ScenarioError::UnknownNode {
+                    what: what.to_string(),
+                    node: v as usize,
+                    n,
+                });
+            }
+        }
+    }
+    Ok(())
 }
 
 fn validate_trace(entries: &[TraceEntry], n: usize) -> Result<(), ScenarioError> {
@@ -617,6 +747,12 @@ fn fmt_churn(c: &ChurnSpec) -> String {
     }
 }
 
+/// `1-2,3-4`: the inverse of `parse_edge_pairs`.
+fn fmt_edges(edges: &[(u32, u32)]) -> String {
+    let parts: Vec<String> = edges.iter().map(|(a, b)| format!("{a}-{b}")).collect();
+    parts.join(",")
+}
+
 fn fmt_action(a: &PointAction) -> String {
     match a {
         PointAction::Drift => "drift".to_string(),
@@ -626,6 +762,16 @@ fn fmt_action(a: &PointAction) -> String {
         PointAction::Drop(p) => format!("drop:{p}"),
         PointAction::Delay(d) => format!("delay:{}", fmt_delay(d)),
         PointAction::Partition(p) => format!("partition:{}", fmt_partition(p)),
+        // fractions never contain '-', so the parser can tell the forms apart
+        PointAction::EdgeFail(EdgeSet::Fraction(f)) => format!("edge_fail:{f}"),
+        PointAction::EdgeFail(EdgeSet::List(edges)) => {
+            format!("edge_fail:{}", fmt_edges(edges))
+        }
+        PointAction::EdgeRestore(None) => "edge_restore".to_string(),
+        PointAction::EdgeRestore(Some(edges)) => {
+            format!("edge_restore:{}", fmt_edges(edges))
+        }
+        PointAction::BridgeCut(p) => format!("bridge_cut:{}", fmt_partition(p)),
     }
 }
 
@@ -688,6 +834,24 @@ fn parse_partition(v: &str) -> Option<PartitionSpec> {
 fn parse_fraction(v: &str) -> Option<f64> {
     let f: f64 = v.parse().ok()?;
     (f > 0.0 && f <= 1.0).then_some(f)
+}
+
+/// `1-2,3-4` → canonical edge list: `(min, max)` per pair, sorted, deduped
+/// (the same canonical form `Topology::edges` uses); self-loops rejected.
+fn parse_edge_pairs(v: &str) -> Option<Vec<(u32, u32)>> {
+    let mut out = Vec::new();
+    for part in v.split(',') {
+        let (a, b) = part.trim().split_once('-')?;
+        let a: u32 = a.trim().parse().ok()?;
+        let b: u32 = b.trim().parse().ok()?;
+        if a == b {
+            return None;
+        }
+        out.push((a.min(b), a.max(b)));
+    }
+    out.sort_unstable();
+    out.dedup();
+    (!out.is_empty()).then_some(out)
 }
 
 fn parse_churn(v: &str, key: &str) -> Result<ChurnSpec, ScenarioError> {
@@ -829,11 +993,24 @@ fn parse_event(name: &str, section: &str, kv: &Section) -> Result<PointEvent, Sc
     let action = match action_v.split_once(':') {
         None if action_v == "drift" => PointAction::Drift,
         None if action_v == "heal" => PointAction::Heal,
+        None if action_v == "edge_restore" => PointAction::EdgeRestore(None),
         Some(("join", m)) => PointAction::Join(parse_membership(m).ok_or_else(bad)?),
         Some(("leave", f)) => PointAction::Leave(parse_fraction(f).ok_or_else(bad)?),
         Some(("drop", p)) => PointAction::Drop(parse_prob(p).ok_or_else(bad)?),
         Some(("delay", d)) => PointAction::Delay(parse_delay(d).ok_or_else(bad)?),
         Some(("partition", s)) => PointAction::Partition(parse_partition(s).ok_or_else(bad)?),
+        // `edge_fail:0.3` (fraction of the graph's edges) vs
+        // `edge_fail:1-2,3-4` (explicit list) — only lists contain '-'
+        Some(("edge_fail", v)) if v.contains('-') => {
+            PointAction::EdgeFail(EdgeSet::List(parse_edge_pairs(v).ok_or_else(bad)?))
+        }
+        Some(("edge_fail", v)) => {
+            PointAction::EdgeFail(EdgeSet::Fraction(parse_fraction(v).ok_or_else(bad)?))
+        }
+        Some(("edge_restore", v)) => {
+            PointAction::EdgeRestore(Some(parse_edge_pairs(v).ok_or_else(bad)?))
+        }
+        Some(("bridge_cut", s)) => PointAction::BridgeCut(parse_partition(s).ok_or_else(bad)?),
         _ => return Err(bad()),
     };
     Ok(PointEvent { name: name.to_string(), at, action })
@@ -851,6 +1028,7 @@ pub fn builtin_names() -> &'static [&'static str] {
         "trace-replay",
         "drift",
         "delay-spike",
+        "link-storm",
     ]
 }
 
@@ -931,6 +1109,23 @@ pub fn builtin(name: &str) -> Result<Scenario, ScenarioError> {
                 delay: Some(DelaySpec::Uniform(5.0, 20.0)),
                 partition: None,
                 leave: None,
+            });
+        }
+        // Needs a non-complete `topology =` graph: edge actions have no
+        // edge set to mutate on the implicit complete topology.
+        "link-storm" => {
+            s.summary =
+                "30% of topology links fail at cycle 40, all restored at cycle 120".into();
+            s.cycles_hint = Some(200);
+            s.events.push(PointEvent {
+                name: "storm".into(),
+                at: 40,
+                action: PointAction::EdgeFail(EdgeSet::Fraction(0.3)),
+            });
+            s.events.push(PointEvent {
+                name: "repair".into(),
+                at: 120,
+                action: PointAction::EdgeRestore(None),
             });
         }
         other => {
@@ -1250,6 +1445,104 @@ action = drift
             s.validate(50, 100),
             Err(ScenarioError::DuplicateName { .. })
         ));
+    }
+
+    #[test]
+    fn edge_actions_parse_format_and_validate() {
+        // fraction vs list forms, bare vs listed restore, bridge cuts
+        let text = "
+[event.storm]
+at = 10
+action = edge_fail:0.3
+
+[event.snip]
+at = 20
+action = edge_fail:4-3,1-2,3-4
+
+[event.bridge]
+at = 30
+action = bridge_cut:halves
+
+[event.xfix]
+at = 40
+action = edge_restore:1-2
+
+[event.yfix]
+at = 50
+action = edge_restore
+";
+        let s = Scenario::from_ini(text).unwrap();
+        assert!(s.uses_edges());
+        assert_eq!(s.events[0].action, PointAction::EdgeFail(EdgeSet::Fraction(0.3)));
+        // lists canonicalize: (min,max), sorted, deduped
+        assert_eq!(
+            s.events[1].action,
+            PointAction::EdgeFail(EdgeSet::List(vec![(1, 2), (3, 4)]))
+        );
+        assert_eq!(s.events[2].action, PointAction::BridgeCut(PartitionSpec::Halves));
+        assert_eq!(s.events[3].action, PointAction::EdgeRestore(Some(vec![(1, 2)])));
+        assert_eq!(s.events[4].action, PointAction::EdgeRestore(None));
+        s.validate(50, 100).unwrap();
+        // exact serialization round trip
+        let back = Scenario::from_ini(&s.to_ini_sections()).unwrap();
+        assert_eq!(back, s, "\n{}", s.to_ini_sections());
+        // malformed forms are typed BadValue errors
+        for bad in [
+            "edge_fail:0.0",
+            "edge_fail:1.5",
+            "edge_fail:2-2",
+            "edge_fail:1-",
+            "edge_restore:",
+            "bridge_cut:warp",
+        ] {
+            let e = Scenario::from_ini(&format!("[event.x]\nat = 1\naction = {bad}"))
+                .unwrap_err();
+            assert!(matches!(e, ScenarioError::BadValue { .. }), "{bad}: {e}");
+        }
+    }
+
+    #[test]
+    fn edge_actions_validate_bounds_and_topology() {
+        // node bound: edge endpoint past the run size
+        let s = Scenario::from_ini("[event.x]\nat = 1\naction = edge_fail:1-99").unwrap();
+        assert!(matches!(
+            s.validate(50, 100),
+            Err(ScenarioError::UnknownNode { node: 99, .. })
+        ));
+        s.validate(100, 100).unwrap();
+        // programmatic self-loop (the parser already rejects it)
+        let mut s = Scenario::empty("loop");
+        s.events.push(PointEvent {
+            name: "x".into(),
+            at: 1,
+            action: PointAction::EdgeRestore(Some(vec![(3, 3)])),
+        });
+        assert!(matches!(
+            s.validate(50, 100),
+            Err(ScenarioError::UnknownEdge { a: 3, b: 3, .. })
+        ));
+        // topology cross-check: edge events need a graph...
+        let s = Scenario::from_ini("[event.x]\nat = 1\naction = edge_fail:0.5").unwrap();
+        assert!(matches!(
+            s.validate_topology(None),
+            Err(ScenarioError::NeedsTopology { .. })
+        ));
+        // ...and listed edges must exist in it
+        use crate::p2p::{Topology, TopologySpec};
+        let spec = TopologySpec::parse("ring:1").unwrap().unwrap();
+        let topo = Topology::build(&spec, 10, 7).unwrap();
+        s.validate_topology(Some(&topo)).unwrap(); // fractions fit any graph
+        let s = Scenario::from_ini("[event.x]\nat = 1\naction = edge_fail:2-5").unwrap();
+        assert_eq!(
+            s.validate_topology(Some(&topo)),
+            Err(ScenarioError::UnknownEdge { what: "event \"x\"".into(), a: 2, b: 5 })
+        );
+        let s = Scenario::from_ini("[event.x]\nat = 1\naction = edge_fail:2-3").unwrap();
+        s.validate_topology(Some(&topo)).unwrap();
+        // scenarios without edge actions never need a graph
+        assert!(!builtin("paper-fig3").unwrap().uses_edges());
+        builtin("paper-fig3").unwrap().validate_topology(None).unwrap();
+        assert!(builtin("link-storm").unwrap().uses_edges());
     }
 
     #[test]

@@ -74,6 +74,7 @@ pub enum Fate {
     /// lost to the random drop model
     Dropped,
     /// blocked by an active partition (src and dst in different components)
+    /// or a failed topology edge
     Blocked,
 }
 
@@ -88,14 +89,22 @@ pub enum Fate {
 /// fate: fate is sealed at send, which keeps the
 /// `sent = dropped + blocked + lost_offline + delivered + in_flight`
 /// accounting exact across partition/heal transitions.
+///
+/// Topology edge failures (`edge_fail` / `edge_restore` / `bridge_cut`
+/// mutations, DESIGN.md §16) follow the exact same contract: a failed edge
+/// is a canonical `(min, max)` pair in [`Network::edge_block`], checked in
+/// the same pre-RNG block as partitions, so unaffected sends keep their
+/// bit-identical fate stream.
 #[derive(Debug)]
 pub struct Network {
     pub cfg: NetworkConfig,
     /// active partition: component id per node (None = fully connected)
     partition: Option<Vec<u32>>,
+    /// failed topology edges as canonical (min, max) pairs
+    edge_block: std::collections::HashSet<(u32, u32)>,
     pub sent: u64,
     pub dropped: u64,
-    /// sends blocked by an active partition
+    /// sends blocked by an active partition or a failed edge
     pub blocked: u64,
     pub lost_offline: u64,
     delivered: u64,
@@ -106,6 +115,7 @@ impl Network {
         Network {
             cfg,
             partition: None,
+            edge_block: std::collections::HashSet::new(),
             sent: 0,
             dropped: 0,
             blocked: 0,
@@ -123,8 +133,35 @@ impl Network {
         self.partition.is_some()
     }
 
-    /// Decide the fate of a message from `src` to `dst`.  Partition checks
-    /// precede (and draw nothing from) the RNG-based drop/delay models.
+    /// Mark topology edges as failed: sends across them block at send time
+    /// (canonical `(min, max)` pairs; direction-agnostic).
+    pub fn fail_edges(&mut self, edges: &[(u32, u32)]) {
+        for &(a, b) in edges {
+            self.edge_block.insert((a.min(b), a.max(b)));
+        }
+    }
+
+    /// Restore failed edges: the listed pairs, or — with `None` — all of
+    /// them (link-level heal).
+    pub fn restore_edges(&mut self, edges: Option<&[(u32, u32)]>) {
+        match edges {
+            Some(list) => {
+                for &(a, b) in list {
+                    self.edge_block.remove(&(a.min(b), a.max(b)));
+                }
+            }
+            None => self.edge_block.clear(),
+        }
+    }
+
+    /// Number of currently failed edges.
+    pub fn failed_edges(&self) -> usize {
+        self.edge_block.len()
+    }
+
+    /// Decide the fate of a message from `src` to `dst`.  Partition and
+    /// failed-edge checks precede (and draw nothing from) the RNG-based
+    /// drop/delay models.
     pub fn transmit_between(&mut self, src: usize, dst: usize, rng: &mut Rng) -> Fate {
         self.sent += 1;
         if let Some(p) = &self.partition {
@@ -132,6 +169,13 @@ impl Network {
             let cs = p.get(src).copied().unwrap_or(0);
             let cd = p.get(dst).copied().unwrap_or(0);
             if cs != cd {
+                self.blocked += 1;
+                return Fate::Blocked;
+            }
+        }
+        if !self.edge_block.is_empty() {
+            let key = ((src.min(dst)) as u32, (src.max(dst)) as u32);
+            if self.edge_block.contains(&key) {
                 self.blocked += 1;
                 return Fate::Blocked;
             }
@@ -273,6 +317,39 @@ mod tests {
         b.set_partition(Some(vec![1]));
         assert_eq!(b.transmit_between(0, 7, &mut rb), Fate::Blocked);
         assert_ne!(b.transmit_between(7, 9, &mut rb), Fate::Blocked);
+    }
+
+    /// Failed edges block both directions without consuming RNG draws —
+    /// the same no-perturbation contract partitions honor — and restore
+    /// (selective or full) re-opens them.
+    #[test]
+    fn edge_failures_block_without_rng_draws() {
+        let mut a = Network::new(NetworkConfig::extreme(1000));
+        let mut b = Network::new(NetworkConfig::extreme(1000));
+        b.fail_edges(&[(0, 1), (2, 3)]);
+        assert_eq!(b.failed_edges(), 2);
+        let mut ra = Rng::new(8);
+        let mut rb = Rng::new(8);
+        let pairs = [(0usize, 1usize), (1, 0), (0, 2), (3, 2), (1, 3)];
+        for &(s, d) in &pairs {
+            let fb = b.transmit_between(s, d, &mut rb);
+            let canon = (s.min(d) as u32, s.max(d) as u32);
+            if canon == (0, 1) || canon == (2, 3) {
+                assert_eq!(fb, Fate::Blocked, "{s}->{d}");
+            } else {
+                // unaffected sends match the healthy network's fate stream
+                assert_eq!(fb, a.transmit_between(s, d, &mut ra), "{s}->{d}");
+            }
+        }
+        assert_eq!(b.blocked, 3);
+        // selective restore re-opens one link, full restore the rest
+        b.restore_edges(Some(&[(1, 0)]));
+        assert_eq!(b.failed_edges(), 1);
+        assert_ne!(b.transmit_between(0, 1, &mut rb), Fate::Blocked);
+        assert_eq!(b.transmit_between(3, 2, &mut rb), Fate::Blocked);
+        b.restore_edges(None);
+        assert_eq!(b.failed_edges(), 0);
+        assert_ne!(b.transmit_between(2, 3, &mut rb), Fate::Blocked);
     }
 
     /// Accounting stays exact when partitions block sends.

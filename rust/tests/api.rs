@@ -39,6 +39,7 @@ mode = scalar
 coalesce = 3
 exec = dense
 scenario = paper-fig3
+topology = ring:2
 ";
     let spec = RunSpec::from_ini(text).unwrap();
     // the keys landed
@@ -60,6 +61,7 @@ scenario = paper-fig3
     assert_eq!(e.mode, "scalar");
     assert_eq!(e.coalesce, 3);
     assert_eq!(e.scenario.as_ref().unwrap().name, "paper-fig3");
+    assert_eq!(e.topology.as_ref().unwrap().name(), "ring:2");
     assert_eq!(spec.target, Target::Sim);
     // ... and round-trip exactly
     let round = RunSpec::from_ini(&spec.to_ini()).unwrap();
@@ -129,6 +131,7 @@ seed = 5
 variants = rw,mu,um
 failures = none,extreme
 scenarios = none,paper-fig3
+topologies = complete,ring:2
 replicates = 2
 threads = 3
 ";
@@ -137,6 +140,7 @@ threads = 3
     assert_eq!(axes.variants, vec![Variant::Rw, Variant::Mu, Variant::Um]);
     assert_eq!(axes.failures, vec![false, true]);
     assert_eq!(axes.scenarios, vec!["none", "paper-fig3"]);
+    assert_eq!(axes.topologies, vec!["complete", "ring:2"]);
     assert_eq!(axes.replicates, 2);
     assert_eq!(axes.threads, 3);
     let round = RunSpec::from_ini(&spec.to_ini()).unwrap();
@@ -307,6 +311,91 @@ fn rejects_invalid_combinations_with_typed_errors() {
     assert_eq!(kind(&e), "data", "{e}");
 }
 
+/// Topology validation matrix (DESIGN.md §16): every rejection is a typed
+/// error with its distinct exit code, raised at build time — never a panic
+/// inside a running simulation.
+#[test]
+fn rejects_invalid_topology_combinations_with_typed_errors() {
+    // an unparseable spec fails in the builder itself
+    let e = RunSpec::new("urls").topology("warp").unwrap_err();
+    assert_eq!(kind(&e), "config", "{e}");
+    assert_eq!(e.exit_code(), 2);
+
+    // MATCHING pairs the whole membership; a graph constraint would be
+    // silently ignored
+    let e = RunSpec::new("urls")
+        .scale(0.005)
+        .sampler(SamplerConfig::Matching)
+        .topology("ring:2")
+        .unwrap()
+        .build()
+        .unwrap_err();
+    assert_eq!(kind(&e), "config", "{e}");
+
+    // the batched driver has no per-message peer sampling to constrain
+    let e = RunSpec::new("urls")
+        .scale(0.005)
+        .backend(BackendChoice::BatchedNative)
+        .topology("ring:2")
+        .unwrap()
+        .build()
+        .unwrap_err();
+    assert_eq!(kind(&e), "config", "{e}");
+
+    // a graph leaving nodes at degree 0 can never gossip everywhere
+    let e = RunSpec::new("urls")
+        .scale(0.005)
+        .topology("graph-inline:0-1")
+        .unwrap()
+        .build()
+        .unwrap_err();
+    assert_eq!(kind(&e), "config", "{e}");
+    assert_eq!(e.exit_code(), 2);
+
+    // edge-level failure events need a graph to mutate...
+    let e = RunSpec::new("urls")
+        .scale(0.005)
+        .cycles(200)
+        .eval_peers(5)
+        .builtin_scenario("link-storm")
+        .unwrap()
+        .build()
+        .unwrap_err();
+    assert_eq!(kind(&e), "scenario", "{e}");
+    assert_eq!(e.exit_code(), 5);
+
+    // ...and an explicitly listed edge must exist in that graph
+    let text = "
+[experiment]
+dataset = urls
+scale = 0.005
+cycles = 20
+topology = ring:1
+
+[scenario]
+name = cut-a-chord
+
+[event.cut]
+at = 2
+action = edge_fail:0-5
+";
+    let e = RunSpec::from_ini(text).unwrap().build().unwrap_err();
+    assert_eq!(kind(&e), "scenario", "{e}");
+    assert_eq!(e.exit_code(), 5);
+
+    // the valid combination builds: link-storm over a ring
+    RunSpec::new("urls")
+        .scale(0.005)
+        .cycles(200)
+        .eval_peers(5)
+        .builtin_scenario("link-storm")
+        .unwrap()
+        .topology("ring:2")
+        .unwrap()
+        .build()
+        .unwrap();
+}
+
 // ---------------------------------------------------------------------------
 // observer streaming (Sim and Batched targets)
 
@@ -417,7 +506,7 @@ fn sweep_outcome_exposes_cells_uniformly() {
     // per-cell seeds still follow the historical derivation
     assert_eq!(
         cells[0].seed,
-        golf::experiments::sweep::cell_seed(7, "reuters", Variant::Mu, false, "none", 0)
+        golf::experiments::sweep::cell_seed(7, "reuters", Variant::Mu, false, "none", "complete", 0)
     );
 }
 

@@ -73,6 +73,59 @@ fn deploy_parity_with_matched_simulator() {
     );
 }
 
+/// Topology acceptance (DESIGN.md §16): one non-complete graph constrains
+/// both a real 80-node socket deployment and the matched simulator run —
+/// NEWSCAST views filtered to graph neighbors on the wire — and the final
+/// errors still agree within the standard parity tolerance.
+#[test]
+fn deploy_topology_constrained_parity_with_sim() {
+    use golf::p2p::TopologySpec;
+    let _g = serial();
+    let ds = urls_like(5, Scale(0.008)); // 80 training rows -> 80 nodes
+    let cfg = DeployConfig {
+        n_nodes: ds.n_train(),
+        delta: Duration::from_millis(40),
+        cycles: 40,
+        sampler: SamplerConfig::Newscast { view_size: 20 },
+        eval_peers: 20,
+        seed: 21,
+        topology: TopologySpec::parse("kreg:4").unwrap(),
+        ..Default::default()
+    };
+    assert!(cfg.n_nodes >= 64, "acceptance requires a 64+ node deployment");
+
+    let report = run_deployment(&cfg, &ds).expect("deployment failed");
+    let sim = run(matched_sim_config(&cfg), &ds);
+
+    // the matched sim run carries the graph it was constrained by
+    let m = sim.stats.topology.expect("sim stats must carry graph metrics");
+    assert_eq!(m.nodes, 80);
+    assert_eq!(m.degree_max, 4, "kreg:4 is exactly 4-regular");
+    assert_eq!(m.components, 1);
+
+    // same measurement grid: the curves share their x axis
+    let deploy_cycles: Vec<u64> = report.curve.points.iter().map(|p| p.cycle).collect();
+    let sim_cycles: Vec<u64> = sim.curve.points.iter().map(|p| p.cycle).collect();
+    assert_eq!(deploy_cycles, sim_cycles, "curves must share the cycle grid");
+
+    // the deployment really gossiped under the degree-4 constraint
+    assert!(report.stats.messages_received > cfg.n_nodes as u64);
+    assert!(report.mean_model_t > 1.0, "models never updated");
+
+    // still converging from the zero-model plateau despite the sparse graph
+    let first = report.curve.points.first().unwrap().err_mean;
+    let last = report.curve.final_error();
+    assert!(last < first - 0.05, "deployment must converge: {first} -> {last}");
+
+    // final-error parity with the matched, equally constrained sim run
+    let gap = (last - sim.curve.final_error()).abs();
+    assert!(
+        gap < 0.15,
+        "deploy {last:.4} vs sim {:.4}: gap {gap:.4} out of tolerance",
+        sim.curve.final_error()
+    );
+}
+
 /// Scenario parity (DESIGN.md §11): one partition-heal timeline drives a
 /// 64-node socket deployment and a matched `GossipSim` run from the same
 /// definition; the curves share their grid, the partition blocks real

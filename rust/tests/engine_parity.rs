@@ -539,6 +539,67 @@ fn sharded_scenario_timeline_parity() {
     assert_runs_identical(&single, &sharded, "scenario timeline shards=3");
 }
 
+/// Acceptance (DESIGN.md §16): graph-constrained sampling survives sharding.
+/// The Topo sampler draws from per-node streams against a topology each
+/// shard rebuilds identically from `(spec, n, seed)`, so shards ∈ {2, 3}
+/// reproduce shards = 1 bit-for-bit on ring and Barabási–Albert graphs.
+#[test]
+fn sharded_topology_constrained_parity() {
+    use golf::p2p::TopologySpec;
+    let ds = urls_like(90, Scale(0.02));
+    for spec in ["ring:2", "ba:3"] {
+        let mut cfg = ProtocolConfig::paper_default(12);
+        cfg.eval.n_peers = 10;
+        cfg.seed = 90;
+        cfg.topology = TopologySpec::parse(spec).unwrap();
+        let single = run_sharded(&cfg, &ds, 1);
+        let metrics = single
+            .stats
+            .topology
+            .unwrap_or_else(|| panic!("{spec}: run stats must carry graph metrics"));
+        assert_eq!(metrics.nodes, ds.n_train());
+        assert_eq!(metrics.components, 1);
+        for k in [2, 3] {
+            let sharded = run_sharded(&cfg, &ds, k);
+            assert_runs_identical(&single, &sharded, &format!("topology {spec} shards={k}"));
+            assert_eq!(sharded.stats.topology, Some(metrics), "topology {spec} shards={k}");
+        }
+    }
+}
+
+/// Edge-level failure events anchor at tick barriers like every other
+/// scenario mutation: cutting half a ring's links and repairing them later
+/// stays bit-identical across shard counts — and actually blocks traffic.
+#[test]
+fn sharded_edge_scenario_parity() {
+    use golf::p2p::TopologySpec;
+    use golf::scenario::{EdgeSet, PointAction, PointEvent, Scenario};
+    let ds = urls_like(91, Scale(0.02));
+    let mut scn = Scenario::empty("edge-timeline");
+    scn.events.push(PointEvent {
+        name: "storm".into(),
+        at: 3,
+        action: PointAction::EdgeFail(EdgeSet::Fraction(0.5)),
+    });
+    scn.events.push(PointEvent {
+        name: "repair".into(),
+        at: 12,
+        action: PointAction::EdgeRestore(None),
+    });
+    scn.validate(ds.n_train(), 16).unwrap();
+    let mut cfg = ProtocolConfig::paper_default(16);
+    cfg.eval.n_peers = 10;
+    cfg.seed = 91;
+    cfg.topology = TopologySpec::parse("ring:2").unwrap();
+    cfg.scenario = Some(scn);
+    let single = run_sharded(&cfg, &ds, 1);
+    assert!(single.stats.messages_blocked > 0, "edge failures must block traffic");
+    for k in [2, 3] {
+        let sharded = run_sharded(&cfg, &ds, k);
+        assert_runs_identical(&single, &sharded, &format!("edge scenario shards={k}"));
+    }
+}
+
 /// Determinism across shard counts themselves: 2, 3 and 4 shards all agree,
 /// so results never encode the partition geometry.
 #[test]

@@ -619,6 +619,180 @@ fn prop_feature_projection_preserves_dots() {
     );
 }
 
+/// Every topology generator must emit a simple, symmetric graph whose CSR
+/// adjacency, canonical edge list, and structural metrics agree — and the
+/// family-specific guarantees (exact circulant/regular degree, torus and BA
+/// connectivity, seed determinism) must hold for arbitrary feasible sizes.
+#[test]
+fn prop_topology_generators_well_formed() {
+    use golf::p2p::{Topology, TopologySpec};
+    forall(
+        116,
+        60,
+        |rng| {
+            // one feasible (family, n) per case; kreg uses the
+            // allow-disconnected prefix because a random k-regular graph
+            // may legitimately split into components
+            let (spec, n) = match rng.below(4) {
+                0 => {
+                    let k = 1 + rng.below_usize(3);
+                    (format!("ring:{k}"), 2 * k + 1 + rng.below_usize(60))
+                }
+                1 => ("grid".to_string(), 2 + rng.below_usize(80)),
+                2 => {
+                    let k = 3 + rng.below_usize(2);
+                    let mut n = k + 1 + rng.below_usize(40);
+                    if n * k % 2 != 0 {
+                        n += 1;
+                    }
+                    (format!("allow-disconnected:kreg:{k}"), n)
+                }
+                _ => {
+                    let m = 1 + rng.below_usize(3);
+                    (format!("ba:{m}"), m + 2 + rng.below_usize(60))
+                }
+            };
+            (spec, n, rng.below(1000))
+        },
+        |(spec_str, n, seed)| {
+            let spec = TopologySpec::parse(spec_str)?.ok_or("spec parsed to complete")?;
+            let t = Topology::build(&spec, *n, *seed)?;
+            let m = t.metrics();
+            let mut deg_sum = 0usize;
+            let (mut dmin, mut dmax) = (usize::MAX, 0usize);
+            for v in 0..*n {
+                let nbrs = t.neighbors(v);
+                deg_sum += nbrs.len();
+                dmin = dmin.min(nbrs.len());
+                dmax = dmax.max(nbrs.len());
+                for (i, &w) in nbrs.iter().enumerate() {
+                    if w as usize == v {
+                        return Err(format!("{spec_str}: self loop at {v}"));
+                    }
+                    if w as usize >= *n {
+                        return Err(format!("{spec_str}: neighbor {w} >= n = {n}"));
+                    }
+                    if i > 0 && nbrs[i - 1] >= w {
+                        return Err(format!("{spec_str}: row {v} not sorted/deduped"));
+                    }
+                    if !t.has_edge(w as usize, v) {
+                        return Err(format!("{spec_str}: edge {v}-{w} not symmetric"));
+                    }
+                }
+            }
+            if deg_sum != 2 * t.edges().len() {
+                return Err(format!(
+                    "{spec_str}: degree sum {deg_sum} != 2 x {} edges",
+                    t.edges().len()
+                ));
+            }
+            if (m.nodes, m.edges, m.degree_min, m.degree_max)
+                != (*n, t.edges().len(), dmin, dmax)
+            {
+                return Err(format!("{spec_str}: metrics disagree with the graph"));
+            }
+            match &spec.kind {
+                golf::p2p::TopologyKind::Ring { k } => {
+                    if dmin != 2 * k || dmax != 2 * k {
+                        return Err(format!("ring:{k} degree {dmin}..{dmax} != {}", 2 * k));
+                    }
+                    if m.components != 1 {
+                        return Err("ring is disconnected".into());
+                    }
+                }
+                golf::p2p::TopologyKind::Grid => {
+                    if m.components != 1 {
+                        return Err("torus is disconnected".into());
+                    }
+                }
+                golf::p2p::TopologyKind::KRegular { k } => {
+                    if dmin != *k || dmax != *k {
+                        return Err(format!("kreg:{k} degree {dmin}..{dmax} != {k}"));
+                    }
+                }
+                golf::p2p::TopologyKind::BarabasiAlbert { m: ba_m } => {
+                    if m.components != 1 {
+                        return Err("BA graph is disconnected".into());
+                    }
+                    if dmin < *ba_m {
+                        return Err(format!("ba:{ba_m} has degree-{dmin} node"));
+                    }
+                }
+                _ => {}
+            }
+            // seed determinism: the same (spec, n, seed) rebuilds the
+            // identical edge set
+            let t2 = Topology::build(&spec, *n, *seed)?;
+            if t.edges() != t2.edges() {
+                return Err(format!("{spec_str}: rebuild with same seed differs"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// `graph-inline:` edge lists canonicalize (sorted, deduped, min-max
+/// oriented) and round-trip exactly through `parse` ↔ `name`, however the
+/// input pairs are ordered, reversed, or duplicated.
+#[test]
+fn prop_topology_edge_list_roundtrip() {
+    use golf::p2p::{TopologyKind, TopologySpec};
+    forall(
+        117,
+        80,
+        |rng| {
+            let n = 2 + rng.below_usize(30);
+            let mut canon: Vec<(usize, usize)> = Vec::new();
+            for a in 0..n {
+                for b in (a + 1)..n {
+                    if rng.chance(0.15) {
+                        canon.push((a, b));
+                    }
+                }
+            }
+            if canon.is_empty() {
+                canon.push((0, 1));
+            }
+            // a messy rendering of the same set: shuffled order, random
+            // orientation, some pairs repeated
+            let mut messy: Vec<(usize, usize)> = canon.clone();
+            for &e in &canon {
+                if rng.chance(0.3) {
+                    messy.push(e);
+                }
+            }
+            let order = rng.sample_indices(messy.len(), messy.len());
+            let rendered: Vec<String> = order
+                .iter()
+                .map(|&i| {
+                    let (a, b) = messy[i];
+                    if rng.chance(0.5) {
+                        format!("{a}-{b}")
+                    } else {
+                        format!("{b}-{a}")
+                    }
+                })
+                .collect();
+            (canon, format!("graph-inline:{}", rendered.join(",")))
+        },
+        |(canon, messy_spec)| {
+            let spec = TopologySpec::parse(messy_spec)?.ok_or("parsed to complete")?;
+            let TopologyKind::GraphInline { edges } = &spec.kind else {
+                return Err("did not parse as an inline graph".into());
+            };
+            if edges != canon {
+                return Err(format!("canonicalized {edges:?} != expected {canon:?}"));
+            }
+            let name = spec.name();
+            let reparsed = TopologySpec::parse(&name)?.ok_or("name parsed to complete")?;
+            if reparsed != spec {
+                return Err(format!("{name:?} did not round-trip"));
+            }
+            Ok(())
+        },
+    );
+}
+
 /// The node-group readiness loop depends on partial reads being lossless:
 /// however a routed multi-frame stream is sliced at the socket — 1-byte
 /// dribbles, reads straddling frame boundaries, a trailing partial frame —
