@@ -15,6 +15,7 @@ use golf::engine::pjrt::PjrtBackend;
 use golf::engine::{Backend, LearnerKind, StepBatch, StepOp};
 use golf::gossip::create_model::Variant;
 use golf::gossip::protocol::{run, ExecMode, ProtocolConfig};
+use golf::learning::MergeMode;
 use golf::util::benchkit::bench;
 use golf::util::rng::Rng;
 use std::io::Write;
@@ -190,10 +191,15 @@ fn main() {
         }
     }
 
+    // `kernels` and `pairwise` share one BENCH_kernels.json file, written
+    // once after both sections have had their chance to run
+    let mut kjson: Vec<(String, f64)> = Vec::new();
+    let mut kjson_touched = false;
+
     if section_enabled("kernels") {
         // ---- dense vs sparse kernels (O(d) vs O(nnz); DESIGN.md §7) -----------
         println!("\n--- kernels: dense vs O(nnz) sparse execution path");
-        let mut kjson: Vec<(String, f64)> = Vec::new();
+        kjson_touched = true;
         {
             let mut native = NativeBackend::new();
             // (shape key, d, nnz, batch rows): spambase-like, reuters-like, and a
@@ -239,7 +245,12 @@ fn main() {
                 }
                 let iters = if d >= 1_000_000 { 10 } else { 200 };
                 for (vkey, variant) in [("rw", Variant::Rw), ("mu", Variant::Mu)] {
-                    let op = StepOp { learner: LearnerKind::Pegasos, variant, hp: 0.01 };
+                    let op = StepOp {
+                        learner: LearnerKind::Pegasos,
+                        variant,
+                        hp: 0.01,
+                        merge: MergeMode::Average,
+                    };
                     let rd = bench(&format!("dense  pegasos {vkey} {key} b={b}"), 2, iters, || {
                         native.step(&op, &mut dense_sb).unwrap();
                     });
@@ -321,9 +332,140 @@ fn main() {
                 kjson.push(("speedup_eval_reuters".into(), speedup));
             }
         }
+    }
+
+    if section_enabled("pairwise") {
+        // ---- pairwise AUC objective (DESIGN.md §17): reservoir-pair step vs
+        // the pointwise step it replaces, dense and O(nnz) sparse, across
+        // reservoir capacities ----------------------------------------------
+        use golf::data::dataset::{Examples, Row};
+        use golf::data::matrix::Matrix;
+        use golf::data::Csr;
+        use golf::gossip::create_model::{create_model_pairwise_step, create_model_step};
+        use golf::learning::pairwise::{self, PairScratch, PairwiseAuc};
+        use golf::learning::{Learner, LinearModel};
+        println!("\n--- pairwise: pointwise vs reservoir-pair CREATEMODEL step");
+        kjson_touched = true;
+        let pool = 256usize;
+        for (key, d, nnz) in [("d57_dense", 57usize, 0usize), ("d10k_sparse", 10_000, 60)] {
+            let sparse = nnz > 0;
+            let mut xrow_idx: Vec<u32> = Vec::new();
+            let mut xrow_val: Vec<f32> = Vec::new();
+            let mut xrow_dense: Vec<f32> = Vec::new();
+            let train = if sparse {
+                let mut m = Csr::new(d);
+                let mut mk_row = |rng: &mut Rng| {
+                    let mut seen = std::collections::HashSet::new();
+                    let mut idx: Vec<u32> = Vec::with_capacity(nnz);
+                    while idx.len() < nnz {
+                        let j = rng.below(d as u64) as u32;
+                        if seen.insert(j) {
+                            idx.push(j);
+                        }
+                    }
+                    idx.sort_unstable();
+                    let val: Vec<f32> = idx.iter().map(|_| rng.normal() as f32).collect();
+                    (idx, val)
+                };
+                for _ in 0..pool {
+                    let (idx, val) = mk_row(&mut rng);
+                    let entries: Vec<(u32, f32)> =
+                        idx.into_iter().zip(val).collect();
+                    m.push_row(&entries);
+                }
+                (xrow_idx, xrow_val) = mk_row(&mut rng);
+                Examples::Sparse(m)
+            } else {
+                let data: Vec<f32> = (0..pool * d).map(|_| rng.normal() as f32).collect();
+                xrow_dense = (0..d).map(|_| rng.normal() as f32).collect();
+                Examples::Dense(Matrix::from_vec(pool, d, data))
+            };
+            let x = if sparse {
+                Row::Sparse(&xrow_idx, &xrow_val)
+            } else {
+                Row::Dense(&xrow_dense)
+            };
+            let w1: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            let w2: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            let learner = Learner::pegasos(0.01);
+            let mut last = LinearModel::from_weights(w2.clone(), 12);
+            let rp = bench(&format!("pointwise pegasos mu {key}"), 50, 1000, || {
+                let m1 = LinearModel::from_weights(w1.clone(), 10);
+                std::hint::black_box(create_model_step(
+                    Variant::Mu,
+                    MergeMode::Average,
+                    &learner,
+                    m1,
+                    &mut last,
+                    &x,
+                    1.0,
+                ));
+            });
+            kjson.push((format!("pairwise_pointwise_{key}"), rp.throughput(1.0)));
+            let auc = PairwiseAuc::new(0.01);
+            for k in [4usize, 16, 64] {
+                // alternate reservoir labels so half the entries form
+                // opposite-class pairs against the local y = +1 example
+                let mut res = pairwise::reservoir_new(k);
+                for i in 0..k {
+                    let yj = if i % 2 == 0 { -1.0 } else { 1.0 };
+                    pairwise::offer(&mut res, (i % pool) as u32, yj, i as u64);
+                }
+                let mut scratch = PairScratch::default();
+                let mut last = LinearModel::from_weights(w2.clone(), 12);
+                let r = bench(&format!("pairwise  auc     mu {key} K={k}"), 50, 1000, || {
+                    let m1 = LinearModel::from_weights(w1.clone(), 10);
+                    std::hint::black_box(create_model_pairwise_step(
+                        Variant::Mu,
+                        MergeMode::Average,
+                        &auc,
+                        m1,
+                        &mut last,
+                        &x,
+                        1.0,
+                        &res,
+                        &train,
+                        &mut scratch,
+                    ));
+                });
+                println!("    -> x{:.1} the pointwise step", r.mean_ns / rp.mean_ns);
+                kjson.push((format!("pairwise_k{k}_{key}"), r.throughput(1.0)));
+            }
+        }
+
+        // end-to-end event-driven gossip: pointwise pegasos vs pairwise AUC
+        println!("\n--- pairwise: end-to-end event-driven run, pegasos vs pairwise-auc");
+        {
+            let ds = urls_like(6, Scale(0.05));
+            let mut per_s = [0.0f64; 2];
+            for (slot, pkey) in ["pegasos", "pairwise"].iter().enumerate() {
+                let mut updates = 0u64;
+                let r = bench(&format!("event sim urls learner={pkey}"), 0, 2, || {
+                    let mut cfg = ProtocolConfig::paper_default(20);
+                    cfg.eval.n_peers = 0;
+                    cfg.eval.at_cycles = vec![20];
+                    cfg.seed = 6;
+                    if *pkey == "pairwise" {
+                        cfg.learner = Learner::pairwise_auc(0.01);
+                        cfg.reservoir = 16;
+                    }
+                    let res = run(cfg, &ds);
+                    updates = res.stats.updates_applied;
+                });
+                per_s[slot] = r.throughput(updates as f64);
+                kjson.push((format!("pairwise_protocol_{pkey}_urls"), per_s[slot]));
+            }
+            println!(
+                "    -> pairwise protocol costs x{:.2} the pointwise one",
+                per_s[0] / per_s[1].max(1e-12)
+            );
+        }
+    }
+
+    if kjson_touched {
         write_bench_json(
             "kernels",
-            "row_updates_per_s (speedup_* keys: dense_ns / sparse_ns)",
+            "row_updates_per_s (speedup_* keys: dense_ns / sparse_ns; pairwise_*: steps_per_s)",
             &kjson,
         );
     }
@@ -480,7 +622,12 @@ fn main() {
 
     if section_enabled("backend") {
         println!("\n--- native backend: batched MU step");
-        let op = StepOp { learner: LearnerKind::Pegasos, variant: Variant::Mu, hp: 0.01 };
+        let op = StepOp {
+            learner: LearnerKind::Pegasos,
+            variant: Variant::Mu,
+            hp: 0.01,
+            merge: MergeMode::Average,
+        };
         let mut native = NativeBackend::new();
         for (b, d) in [(128, 10), (1024, 10), (128, 57), (1024, 57), (128, 1024), (128, 10240)] {
             let mut sb = batch(&mut rng, b, d);
@@ -551,6 +698,7 @@ fn main() {
                     let m2 = LinearModel::from_weights(w2.clone(), 12);
                     std::hint::black_box(create_model(
                         Variant::Mu,
+                        MergeMode::Average,
                         &learner,
                         m1.clone(), // simulator used to clone for lastModel
                         &m2,
@@ -564,6 +712,7 @@ fn main() {
                     let m1 = LinearModel::from_weights(w1.clone(), 10);
                     std::hint::black_box(create_model_step(
                         Variant::Mu,
+                        MergeMode::Average,
                         &learner,
                         m1,
                         &mut last,

@@ -164,7 +164,7 @@ mod tests {
     fn recorder_filters_by_event_kind() {
         let mut r = CurveRecorder::new();
         r.on_event(&RunEvent::Cycle { cycle: 1 });
-        r.on_event(&RunEvent::Eval { point: point_from_errors(1, &[0.5], None, None, 10) });
+        r.on_event(&RunEvent::Eval { point: point_from_errors(1, &[0.5], None, None, None, 10) });
         r.on_event(&RunEvent::Scenario { cycle: 1, mutation: "drop -> 0.5".into() });
         r.on_event(&RunEvent::NodeStats { node: 3, sent: 7, received: 6, bytes_sent: 99 });
         assert_eq!(r.cycles(), vec![1]);

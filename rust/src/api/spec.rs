@@ -16,6 +16,7 @@ use crate::config::{ini, BackendChoice, DeploySpec, ExperimentSpec};
 use crate::data::dataset::Dataset;
 use crate::gossip::create_model::Variant;
 use crate::gossip::protocol::ExecPath;
+use crate::learning::MergeMode;
 use crate::p2p::overlay::SamplerConfig;
 use crate::scenario::Scenario;
 
@@ -278,8 +279,8 @@ impl RunSpec {
         self
     }
 
-    /// Select the learner by name (`pegasos` | `adaline` | `logreg`);
-    /// validated at [`RunSpec::build`].
+    /// Select the learner by name (`pegasos` | `adaline` | `logreg` |
+    /// `pairwise-auc`); validated at [`RunSpec::build`].
     pub fn learner(mut self, name: &str) -> Self {
         self.experiment.learner_name = name.to_string();
         self
@@ -287,6 +288,20 @@ impl RunSpec {
 
     pub fn lambda(mut self, lambda: f32) -> Self {
         self.experiment.lambda = lambda;
+        self
+    }
+
+    /// MERGE rule for the Mu/Um variants: coordinate averaging (the paper's
+    /// Algorithm 3) or the sign-agreement quorum vote (DESIGN.md §17).
+    pub fn merge(mut self, mode: MergeMode) -> Self {
+        self.experiment.merge = mode;
+        self
+    }
+
+    /// Example-reservoir capacity K for the pairwise learner (ignored by
+    /// pointwise learners); bounds validated at [`RunSpec::build`].
+    pub fn reservoir(mut self, k: usize) -> Self {
+        self.experiment.reservoir = k;
         self
     }
 
@@ -487,6 +502,8 @@ impl RunSpec {
         kv("learner", e.learner_name.clone());
         kv("lambda", e.lambda.to_string());
         kv("eta", e.eta.to_string());
+        kv("merge", e.merge.name().to_string());
+        kv("reservoir", e.reservoir.to_string());
         kv("cache", e.cache.to_string());
         kv("sampler", e.sampler.name().to_string());
         if let SamplerConfig::Newscast { view_size } = e.sampler {
@@ -539,6 +556,9 @@ impl RunSpec {
     pub fn validate(&self) -> Result<(), GolfError> {
         self.experiment.learner()?;
         self.experiment.exec_mode()?;
+        // pairwise/quorum cross-key rules (reservoir bounds, matching,
+        // batched target) — shared with protocol_config/deploy_config
+        self.experiment.validate_learning()?;
         if self.experiment.shards == 0 {
             return Err(GolfError::config("shards must be at least 1".to_string()));
         }
@@ -669,6 +689,8 @@ impl RunSpec {
                 ("learner", e.learner_name != d.learner_name),
                 ("lambda", e.lambda != d.lambda),
                 ("eta", e.eta != d.eta),
+                ("merge", e.merge != d.merge),
+                ("reservoir", e.reservoir != d.reservoir),
                 ("cache", e.cache != d.cache),
                 ("sampler", e.sampler != d.sampler),
                 ("failures", e.failures != d.failures),

@@ -44,7 +44,7 @@ pub fn curve(data: &Dataset, learner: &Learner, cycles: u64, seed: u64) -> Curve
             done += 1;
         }
         let e = zero_one_error(&m, &data.test, &data.test_y);
-        c.push(point_from_errors(target, &[e], None, None, 0));
+        c.push(point_from_errors(target, &[e], None, None, None, 0));
     }
     c
 }

@@ -69,7 +69,7 @@ pub fn curve(data: &Dataset, learner: &Learner, variant: Bagging, cycles: u64, s
         }
         let avg = LinearModel::from_weights(sum, target);
         let e = zero_one_error(&avg, &data.test, &data.test_y);
-        curve.push(point_from_errors(target, &[e], None, None, 0));
+        curve.push(point_from_errors(target, &[e], None, None, None, 0));
     }
     curve
 }

@@ -72,7 +72,9 @@ pub fn usage() -> &'static str {
 
 USAGE:
   golf run    [--config FILE] [--dataset D] [--scale S] [--cycles N]
-              [--variant rw|mu|um] [--learner pegasos|adaline]
+              [--variant rw|mu|um|pairwise-auc]
+              [--learner pegasos|adaline|logreg|pairwise-auc]
+              [--merge average|quorum] [--reservoir K]
               [--failures none|extreme]
               [--backend event|event-pjrt|batched-native|batched-pjrt]
               [--mode microbatch|scalar] [--coalesce TICKS]
@@ -94,7 +96,9 @@ USAGE:
               [--topology SPEC] [--seed N] [--eval_peers K] [--out FILE.csv]
   golf scenario --list
   golf deploy [--config FILE] [--dataset D] [--scale S] [--cycles N]
-              [--variant rw|mu|um] [--learner pegasos|adaline|logreg]
+              [--variant rw|mu|um|pairwise-auc]
+              [--learner pegasos|adaline|logreg|pairwise-auc]
+              [--merge average|quorum] [--reservoir K]
               [--failures none|extreme] [--sampler newscast|oracle]
               [--nodes N] [--node-groups G] [--delta_ms MS] [--eval_peers K]
               [--topology SPEC] [--seed N] [--compare-sim] [--out FILE.csv]
@@ -848,6 +852,37 @@ mod tests {
         ]))
         .unwrap();
         run_command(&p).unwrap();
+    }
+
+    /// Satellite pin: `golf run --variant pairwise-auc` runs end to end
+    /// (alias expands to Mu + the pairwise hinge learner, AUC eval on), and
+    /// the merge/reservoir keys flow through the flag map like any other
+    /// experiment key.
+    #[test]
+    fn tiny_pairwise_auc_run() {
+        assert_eq!(
+            dispatch(&s(&[
+                "run", "--dataset", "urls", "--scale", "0.005", "--cycles", "4",
+                "--eval_peers", "4", "--variant", "pairwise-auc", "--merge",
+                "quorum", "--reservoir", "4",
+            ])),
+            0
+        );
+        // a bad merge mode is a config error (exit code 2)...
+        assert_eq!(
+            dispatch(&s(&[
+                "run", "--dataset", "urls", "--scale", "0.005", "--merge", "median",
+            ])),
+            2
+        );
+        // ...and so is a reservoir the model cache cannot hold
+        assert_eq!(
+            dispatch(&s(&[
+                "run", "--dataset", "urls", "--scale", "0.005", "--variant",
+                "pairwise-auc", "--reservoir", "0",
+            ])),
+            2
+        );
     }
 
     #[test]

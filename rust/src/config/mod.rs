@@ -6,9 +6,12 @@
 //! dataset = urls          ; reuters | spambase | urls
 //! scale = 0.1             ; dataset size multiplier
 //! cycles = 200
-//! variant = mu            ; rw | mu | um
-//! learner = pegasos       ; pegasos | adaline | logreg
+//! variant = mu            ; rw | mu | um | pairwise-auc (alias: mu + the
+//!                         ; pairwise ranking learner, DESIGN.md §17)
+//! learner = pegasos       ; pegasos | adaline | logreg | pairwise-auc
 //! lambda = 0.01
+//! merge = average         ; average | quorum (MU/UM model combination)
+//! reservoir = 8           ; example-reservoir capacity K (pairwise only)
 //! cache = 10
 //! sampler = newscast      ; newscast | oracle | matching
 //! view = 20
@@ -41,7 +44,7 @@ use crate::data::dataset::Dataset;
 use crate::data::synthetic::{reuters_like, spambase_like, urls_like, Scale};
 use crate::gossip::create_model::Variant;
 use crate::gossip::protocol::{ExecMode, ExecPath, ProtocolConfig};
-use crate::learning::Learner;
+use crate::learning::{Learner, MergeMode};
 use crate::p2p::overlay::SamplerConfig;
 use crate::scenario::Scenario;
 use std::collections::HashMap;
@@ -87,6 +90,12 @@ pub struct ExperimentSpec {
     pub learner_name: String,
     pub lambda: f32,
     pub eta: f32,
+    /// MERGE rule for Mu/Um: coordinate averaging (Algorithm 3) or the
+    /// sign-agreement quorum vote (DESIGN.md §17)
+    pub merge: MergeMode,
+    /// example-reservoir capacity K riding with each model when the learner
+    /// is pairwise (ignored for pointwise learners)
+    pub reservoir: usize,
     pub cache: usize,
     pub sampler: SamplerConfig,
     pub failures: bool,
@@ -122,6 +131,8 @@ impl Default for ExperimentSpec {
             learner_name: "pegasos".into(),
             lambda: 1e-2,
             eta: 1e-3,
+            merge: MergeMode::Average,
+            reservoir: crate::learning::pairwise::DEFAULT_CAPACITY,
             cache: 10,
             sampler: SamplerConfig::Newscast { view_size: 20 },
             failures: false,
@@ -156,12 +167,21 @@ impl ExperimentSpec {
                 _ => return Err(GolfError::config(format!("bad sampler {v:?}"))),
             };
         }
+        if kv.get("variant").map(String::as_str) == Some("pairwise-auc") {
+            // `variant = pairwise-auc` is the ranking-objective alias: the
+            // paper-style Mu walk with the pairwise learner.  Applied before
+            // the main loop so an explicit `learner =` key still wins
+            // regardless of the map's iteration order.
+            self.variant = Variant::Mu;
+            self.learner_name = "pairwise-auc".into();
+        }
         for (k, v) in kv {
             match k.as_str() {
                 "sampler" => {} // applied above
                 "dataset" => self.dataset = v.clone(),
                 "scale" => self.scale = parse(v, k)?,
                 "cycles" => self.cycles = parse(v, k)?,
+                "variant" if v == "pairwise-auc" => {} // alias applied above
                 "variant" => {
                     self.variant = Variant::parse(v)
                         .ok_or_else(|| GolfError::config(format!("bad variant {v:?}")))?
@@ -169,6 +189,11 @@ impl ExperimentSpec {
                 "learner" => self.learner_name = v.clone(),
                 "lambda" => self.lambda = parse(v, k)?,
                 "eta" => self.eta = parse(v, k)?,
+                "merge" => {
+                    self.merge = MergeMode::parse(v)
+                        .ok_or_else(|| GolfError::config(format!("bad merge {v:?}")))?
+                }
+                "reservoir" => self.reservoir = parse(v, k)?,
                 "cache" => self.cache = parse(v, k)?,
                 "view" => match &mut self.sampler {
                     SamplerConfig::Newscast { view_size } => *view_size = parse(v, k)?,
@@ -232,8 +257,58 @@ impl ExperimentSpec {
             "pegasos" => Ok(Learner::pegasos(self.lambda)),
             "adaline" => Ok(Learner::adaline(self.eta)),
             "logreg" => Ok(Learner::logreg(self.lambda)),
+            "pairwise-auc" => Ok(Learner::pairwise_auc(self.lambda)),
             other => Err(GolfError::config(format!("unknown learner {other:?}"))),
         }
+    }
+
+    /// Cross-key learning-rule validation shared by every target (simulator,
+    /// deployment, batched): the invalid combinations of the pairwise
+    /// objective and the quorum merge fail as config errors (exit code 2)
+    /// before any run state exists.
+    pub fn validate_learning(&self) -> Result<(), GolfError> {
+        let learner = self.learner()?;
+        if self.merge == MergeMode::Quorum && self.sampler == SamplerConfig::Matching {
+            // PERFECT MATCHING replaces models pairwise per cycle and never
+            // merges, so a quorum setting would be silently dead
+            return Err(GolfError::config(
+                "merge = quorum is meaningless under the PERFECT MATCHING \
+                 baseline (it never merges models); pick sampler = newscast \
+                 or oracle"
+                    .to_string(),
+            ));
+        }
+        if learner.is_pairwise() {
+            if self.reservoir == 0 {
+                return Err(GolfError::config(
+                    "learner = pairwise-auc needs reservoir >= 1: the \
+                     pairwise step ranks the local example against the \
+                     walking model's reservoir"
+                        .to_string(),
+                ));
+            }
+            if self.reservoir > self.cache {
+                return Err(GolfError::config(format!(
+                    "reservoir = {} exceeds cache = {}: a reservoir larger \
+                     than the model cache skews the walk's example memory \
+                     toward stale peers; shrink reservoir or raise cache",
+                    self.reservoir, self.cache
+                )));
+            }
+        }
+        let batched = matches!(
+            self.backend,
+            BackendChoice::BatchedNative | BackendChoice::BatchedPjrt
+        );
+        if batched && (learner.is_pairwise() || self.merge == MergeMode::Quorum) {
+            return Err(GolfError::config(
+                "the batched target supports averaging pointwise learners \
+                 only (its pending-message frames carry no reservoirs); use \
+                 backend = event"
+                    .to_string(),
+            ));
+        }
+        Ok(())
     }
 
     pub fn build_dataset(&self) -> Result<Dataset, GolfError> {
@@ -265,15 +340,22 @@ impl ExperimentSpec {
                     .to_string(),
             ));
         }
+        self.validate_learning()?;
         let mut cfg = ProtocolConfig::paper_default(self.cycles);
         cfg.variant = self.variant;
         cfg.learner = self.learner()?;
+        cfg.merge = self.merge;
+        cfg.reservoir = self.reservoir;
         cfg.cache_size = self.cache;
         cfg.sampler = self.sampler;
         cfg.seed = self.seed;
         cfg.eval.n_peers = self.eval_peers;
         cfg.eval.voting = self.voting;
         cfg.eval.similarity = self.similarity;
+        // ranking objective => ranking metric: the AUC column turns on with
+        // the pairwise learner (and stays available via eval output for
+        // pointwise runs that opt in programmatically)
+        cfg.eval.auc = cfg.learner.is_pairwise();
         cfg.exec = self.exec_mode()?;
         cfg.path = self.exec_path;
         cfg.shards = self.shards;
@@ -473,6 +555,7 @@ impl DeploySpec {
                 GolfError::scenario_in(format!("scenario {:?}", s.name), err)
             })?;
         }
+        e.validate_learning()?;
         let mut cfg = DeployConfig {
             n_nodes: n,
             node_groups: self.node_groups,
@@ -480,6 +563,8 @@ impl DeploySpec {
             cycles: e.cycles,
             variant: e.variant,
             learner: e.learner()?,
+            merge: e.merge,
+            reservoir: e.reservoir,
             cache_size: e.cache,
             sampler: e.sampler,
             eval_peers: e.eval_peers,
@@ -845,6 +930,79 @@ nodes = 30
         bad.experiment.topology =
             crate::p2p::TopologySpec::parse("graph-inline:0-1").unwrap();
         assert!(bad.deploy_config(&ds).is_err());
+    }
+
+    #[test]
+    fn pairwise_keys_map_and_validate() {
+        // the variant alias expands to Mu + the pairwise learner, and the
+        // AUC metric turns on automatically
+        let mut spec = ExperimentSpec { scale: 0.01, ..Default::default() };
+        let mut kv = HashMap::new();
+        kv.insert("variant".to_string(), "pairwise-auc".to_string());
+        kv.insert("merge".to_string(), "quorum".to_string());
+        kv.insert("reservoir".to_string(), "4".to_string());
+        spec.apply(&kv).unwrap();
+        assert_eq!(spec.variant, Variant::Mu);
+        assert_eq!(spec.learner_name, "pairwise-auc");
+        assert_eq!(spec.merge, MergeMode::Quorum);
+        assert_eq!(spec.reservoir, 4);
+        let cfg = spec.protocol_config().unwrap();
+        assert_eq!(cfg.merge, MergeMode::Quorum);
+        assert_eq!(cfg.reservoir, 4);
+        assert!(cfg.eval.auc, "pairwise learner must enable the AUC metric");
+        assert!(cfg.learner.is_pairwise());
+        // an explicit learner key beats the alias regardless of map order
+        let mut spec = ExperimentSpec { scale: 0.01, ..Default::default() };
+        let mut kv = HashMap::new();
+        kv.insert("variant".to_string(), "pairwise-auc".to_string());
+        kv.insert("learner".to_string(), "pegasos".to_string());
+        spec.apply(&kv).unwrap();
+        assert_eq!(spec.learner_name, "pegasos");
+        assert_eq!(spec.variant, Variant::Mu);
+        assert!(!spec.protocol_config().unwrap().eval.auc);
+        // bad merge values are config errors
+        let mut kv = HashMap::new();
+        kv.insert("merge".to_string(), "majority".to_string());
+        assert!(ExperimentSpec::default().apply(&kv).is_err());
+        // quorum + matching is always rejected: matching never merges
+        let mut spec = ExperimentSpec { scale: 0.01, ..Default::default() };
+        spec.merge = MergeMode::Quorum;
+        spec.sampler = SamplerConfig::Matching;
+        assert!(spec.protocol_config().is_err());
+        // reservoir bounds apply only to the pairwise learner
+        let mut spec = ExperimentSpec { scale: 0.01, ..Default::default() };
+        spec.reservoir = 0;
+        spec.protocol_config().unwrap(); // pointwise: ignored
+        spec.learner_name = "pairwise-auc".into();
+        assert!(spec.protocol_config().is_err(), "reservoir = 0 rejected");
+        spec.reservoir = 99; // > cache (10)
+        assert!(spec.protocol_config().is_err(), "reservoir > cache rejected");
+        spec.reservoir = 8;
+        spec.protocol_config().unwrap();
+        // the batched target carries no reservoirs and never quorum-merges
+        spec.backend = BackendChoice::BatchedNative;
+        assert!(spec.validate_learning().is_err());
+        let mut spec = ExperimentSpec { scale: 0.01, ..Default::default() };
+        spec.merge = MergeMode::Quorum;
+        spec.backend = BackendChoice::BatchedPjrt;
+        assert!(spec.validate_learning().is_err());
+    }
+
+    #[test]
+    fn pairwise_deploy_config_carries_merge_and_reservoir() {
+        let mut spec = DeploySpec::default();
+        spec.experiment.scale = 0.01;
+        spec.experiment.learner_name = "pairwise-auc".into();
+        spec.experiment.merge = MergeMode::Quorum;
+        spec.experiment.reservoir = 4;
+        let ds = spec.experiment.build_dataset().unwrap();
+        let cfg = spec.deploy_config(&ds).unwrap();
+        assert_eq!(cfg.merge, MergeMode::Quorum);
+        assert_eq!(cfg.reservoir, 4);
+        assert!(cfg.learner.is_pairwise());
+        // the deployment applies the same reservoir bounds
+        spec.experiment.reservoir = 0;
+        assert!(spec.deploy_config(&ds).is_err());
     }
 
     #[test]

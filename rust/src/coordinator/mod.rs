@@ -384,6 +384,7 @@ fn eval_loop(
             &errs,
             None,
             None,
+            None,
             shared.messages_sent.load(Ordering::Relaxed),
         );
         obs.on_event(&RunEvent::Eval { point: pt.clone() });

@@ -64,7 +64,9 @@ impl<'a, B: Backend> BatchedSim<'a, B> {
     pub fn new(cfg: ProtocolConfig, data: &'a Dataset, backend: &'a mut B) -> Self {
         let n_univ = data.n_train();
         let d = data.d();
-        let op = StepOp::for_protocol(&cfg.learner, cfg.variant);
+        // the batched target rejects pairwise/quorum upstream
+        // (RunSpec::validate): PendingMsg frames carry no reservoirs
+        let op = StepOp::for_protocol(&cfg.learner, cfg.variant, cfg.merge);
         let mut dense_x = vec![0.0f32; n_univ * d];
         for i in 0..n_univ {
             data.train.row(i).write_dense(&mut dense_x[i * d..(i + 1) * d]);
@@ -316,6 +318,7 @@ impl<'a, B: Backend> BatchedSim<'a, B> {
                 let pt = point_from_errors(
                     cycle,
                     &errs,
+                    None,
                     None,
                     None,
                     self.stats.messages_sent,

@@ -18,10 +18,10 @@ pub mod batched;
 pub mod native;
 pub mod pjrt;
 
-use crate::data::dataset::Examples;
+use crate::data::dataset::{Examples, Row};
 use crate::gossip::create_model::Variant;
 use crate::gossip::state::ModelStore;
-use crate::learning::Learner;
+use crate::learning::{Learner, MergeMode};
 use anyhow::Result;
 
 /// Maximum rows per engine call — matches the largest compiled PJRT shape
@@ -53,36 +53,57 @@ pub enum LearnerKind {
     Pegasos,
     Adaline,
     LogReg,
+    /// Pairwise hinge AUC (DESIGN.md §17): steps consume the batch's staged
+    /// reservoir pair payload instead of the pointwise `x`/`y` example.
+    PairwiseAuc,
 }
 
 /// One batched CREATEMODEL op: which learner, which Algorithm-2 variant,
-/// and the learner hyperparameter (λ for Pegasos, η for Adaline).
+/// how models combine, and the learner hyperparameter (λ for Pegasos and
+/// PairwiseAuc, η for Adaline).
 #[derive(Clone, Copy, Debug)]
 pub struct StepOp {
     pub learner: LearnerKind,
     pub variant: Variant,
+    /// how MERGE combines two models (Mu/Um only; Rw never merges)
+    pub merge: MergeMode,
     pub hp: f32,
 }
 
 impl StepOp {
-    /// Artifact op name, e.g. "pegasos_mu".
+    /// Artifact op name, e.g. "pegasos_mu" (quorum merge suffixes
+    /// "_quorum" — no compiled PJRT artifact exists for those ops).
     pub fn op_name(&self) -> String {
         let l = match self.learner {
             LearnerKind::Pegasos => "pegasos",
             LearnerKind::Adaline => "adaline",
             LearnerKind::LogReg => "logreg",
+            LearnerKind::PairwiseAuc => "pairwise_auc",
         };
-        format!("{}_{}", l, self.variant.name())
+        match self.merge {
+            MergeMode::Average => format!("{}_{}", l, self.variant.name()),
+            MergeMode::Quorum => format!("{}_{}_quorum", l, self.variant.name()),
+        }
     }
 
     /// The op a protocol run executes: learner kind + hyperparameter from the
-    /// [`Learner`] enum, combined with the CREATEMODEL variant.  Shared by the
-    /// event-driven micro-batched simulator and the cycle-synchronous driver.
-    pub fn for_protocol(learner: &Learner, variant: Variant) -> StepOp {
+    /// [`Learner`] enum, combined with the CREATEMODEL variant and merge
+    /// mode.  Shared by the event-driven micro-batched simulator and the
+    /// cycle-synchronous driver.
+    pub fn for_protocol(learner: &Learner, variant: Variant, merge: MergeMode) -> StepOp {
         match learner {
-            Learner::Pegasos(p) => StepOp { learner: LearnerKind::Pegasos, variant, hp: p.lambda },
-            Learner::Adaline(a) => StepOp { learner: LearnerKind::Adaline, variant, hp: a.eta },
-            Learner::LogReg(l) => StepOp { learner: LearnerKind::LogReg, variant, hp: l.lambda },
+            Learner::Pegasos(p) => {
+                StepOp { learner: LearnerKind::Pegasos, variant, merge, hp: p.lambda }
+            }
+            Learner::Adaline(a) => {
+                StepOp { learner: LearnerKind::Adaline, variant, merge, hp: a.eta }
+            }
+            Learner::LogReg(l) => {
+                StepOp { learner: LearnerKind::LogReg, variant, merge, hp: l.lambda }
+            }
+            Learner::PairwiseAuc(p) => {
+                StepOp { learner: LearnerKind::PairwiseAuc, variant, merge, hp: p.lambda }
+            }
         }
     }
 }
@@ -123,6 +144,17 @@ pub struct StepBatch {
     pub x_indptr: Vec<usize>,
     pub x_indices: Vec<u32>,
     pub x_values: Vec<f32>,
+    /// Reservoir pair payload (DESIGN.md §17): per-batch-row offsets into the
+    /// staged opposite-class partner examples (`b + 1` entries when staged
+    /// via [`StepBatch::begin_pair_rows`]; empty for pointwise ops).  Rows
+    /// with an empty range take no step at all — no decay, no `t` bump.
+    pub pair_indptr: Vec<usize>,
+    /// dense layout: one `d`-row per staged pair entry
+    pub pair_x: Vec<f32>,
+    /// sparse layout: CSR over the staged pair entries
+    pub pair_x_indptr: Vec<usize>,
+    pub pair_x_indices: Vec<u32>,
+    pub pair_x_values: Vec<f32>,
 }
 
 impl StepBatch {
@@ -166,6 +198,11 @@ impl StepBatch {
         self.x_indptr.clear();
         self.x_indices.clear();
         self.x_values.clear();
+        self.pair_indptr.clear();
+        self.pair_x.clear();
+        self.pair_x_indptr.clear();
+        self.pair_x_indices.clear();
+        self.pair_x_values.clear();
         if sparse {
             self.x_indptr.push(0);
         }
@@ -203,6 +240,68 @@ impl StepBatch {
     #[inline]
     pub fn is_sparse_x(&self) -> bool {
         self.x_indptr.len() == self.b + 1
+    }
+
+    // ---- reservoir pair payload (pairwise ops) -------------------------
+
+    /// Start staging the pair payload: one [`StepBatch::seal_pair_row`] per
+    /// batch row, each preceded by zero or more `push_pair_entry_*` calls
+    /// (the destination row's opposite-class reservoir partners, in
+    /// reservoir order).  Must follow `resize`/`resize_for` (which clear any
+    /// previous payload).
+    pub fn begin_pair_rows(&mut self) {
+        self.pair_indptr.clear();
+        self.pair_indptr.push(0);
+        self.pair_x.clear();
+        self.pair_x_indptr.clear();
+        self.pair_x_indptr.push(0);
+        self.pair_x_indices.clear();
+        self.pair_x_values.clear();
+    }
+
+    /// Append one partner example to the current row's pair range, staged
+    /// densely (`d` floats; sparse source rows are scattered).
+    pub fn push_pair_entry_dense(&mut self, row: &Row<'_>) {
+        let d = self.d;
+        let at = self.pair_x.len();
+        self.pair_x.resize(at + d, 0.0);
+        row.write_dense(&mut self.pair_x[at..at + d]);
+    }
+
+    /// Append one partner example to the current row's pair range as a
+    /// sorted sparse (indices, values) pair.
+    pub fn push_pair_entry_sparse(&mut self, idx: &[u32], val: &[f32]) {
+        debug_assert_eq!(idx.len(), val.len());
+        self.pair_x_indices.extend_from_slice(idx);
+        self.pair_x_values.extend_from_slice(val);
+        self.pair_x_indptr.push(self.pair_x_indices.len());
+    }
+
+    /// Close the current batch row's pair range.
+    pub fn seal_pair_row(&mut self) {
+        debug_assert!(!self.pair_indptr.is_empty(), "begin_pair_rows first");
+        let n_dense = if self.d == 0 { 0 } else { self.pair_x.len() / self.d };
+        let n_sparse = self.pair_x_indptr.len() - 1;
+        self.pair_indptr.push(n_dense.max(n_sparse));
+    }
+
+    /// Whether a complete pair payload is staged (one sealed range per row).
+    #[inline]
+    pub fn has_pairs(&self) -> bool {
+        self.pair_indptr.len() == self.b + 1
+    }
+
+    /// Dense pair entry `e` (absolute index).
+    #[inline]
+    pub fn pair_dense_entry(&self, e: usize) -> &[f32] {
+        &self.pair_x[e * self.d..(e + 1) * self.d]
+    }
+
+    /// Sparse pair entry `e` (absolute index).
+    #[inline]
+    pub fn pair_sparse_entry(&self, e: usize) -> (&[u32], &[f32]) {
+        let (a, b) = (self.pair_x_indptr[e], self.pair_x_indptr[e + 1]);
+        (&self.pair_x_indices[a..b], &self.pair_x_values[a..b])
     }
 
     /// Convert a staged sparse batch to the dense layout: scatter the CSR
@@ -422,16 +521,56 @@ mod tests {
 
     #[test]
     fn for_protocol_maps_learner_and_hp() {
-        let op = StepOp::for_protocol(&Learner::pegasos(0.25), Variant::Mu);
+        let op = StepOp::for_protocol(&Learner::pegasos(0.25), Variant::Mu, MergeMode::Average);
         assert_eq!(op.learner, LearnerKind::Pegasos);
         assert_eq!(op.variant, Variant::Mu);
+        assert_eq!(op.merge, MergeMode::Average);
         assert_eq!(op.hp, 0.25);
         assert_eq!(op.op_name(), "pegasos_mu");
-        let op = StepOp::for_protocol(&Learner::adaline(0.1), Variant::Rw);
+        let op = StepOp::for_protocol(&Learner::adaline(0.1), Variant::Rw, MergeMode::Average);
         assert_eq!(op.learner, LearnerKind::Adaline);
         assert_eq!(op.hp, 0.1);
-        let op = StepOp::for_protocol(&Learner::logreg(0.01), Variant::Um);
+        let op = StepOp::for_protocol(&Learner::logreg(0.01), Variant::Um, MergeMode::Average);
         assert_eq!(op.learner, LearnerKind::LogReg);
         assert_eq!(op.op_name(), "logreg_um");
+        let op =
+            StepOp::for_protocol(&Learner::pairwise_auc(0.01), Variant::Mu, MergeMode::Quorum);
+        assert_eq!(op.learner, LearnerKind::PairwiseAuc);
+        assert_eq!(op.merge, MergeMode::Quorum);
+        assert_eq!(op.op_name(), "pairwise_auc_mu_quorum");
+    }
+
+    #[test]
+    fn pair_payload_stages_ranges_per_row() {
+        let mut sb = StepBatch::default();
+        sb.resize(2, 3);
+        sb.begin_pair_rows();
+        sb.push_pair_entry_dense(&Row::Dense(&[1.0, 2.0, 3.0]));
+        sb.push_pair_entry_dense(&Row::Sparse(&[2], &[9.0]));
+        sb.seal_pair_row();
+        sb.seal_pair_row(); // row 1: empty range
+        assert!(sb.has_pairs());
+        assert_eq!(sb.pair_indptr, vec![0, 2, 2]);
+        assert_eq!(sb.pair_dense_entry(0), &[1.0, 2.0, 3.0]);
+        assert_eq!(sb.pair_dense_entry(1), &[0.0, 0.0, 9.0]);
+        // resize clears the payload
+        sb.resize(2, 3);
+        assert!(!sb.has_pairs());
+        assert!(sb.pair_x.is_empty());
+    }
+
+    #[test]
+    fn pair_payload_sparse_entries() {
+        let mut sb = StepBatch::default();
+        sb.resize_for(1, 4, true);
+        sb.push_sparse_x_row(&[0], &[1.0]);
+        sb.begin_pair_rows();
+        sb.push_pair_entry_sparse(&[1, 3], &[2.0, -1.0]);
+        sb.push_pair_entry_sparse(&[], &[]);
+        sb.seal_pair_row();
+        assert!(sb.has_pairs());
+        assert_eq!(sb.pair_indptr, vec![0, 2]);
+        assert_eq!(sb.pair_sparse_entry(0), (&[1u32, 3][..], &[2.0f32, -1.0][..]));
+        assert_eq!(sb.pair_sparse_entry(1), (&[][..], &[][..]));
     }
 }

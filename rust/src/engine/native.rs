@@ -14,8 +14,35 @@ use crate::data::dataset::{sparse_dot, Examples};
 use crate::engine::{Backend, LearnerKind, StepBatch, StepOp, PAR_MIN_WORK, PAR_ROWS_MIN};
 use crate::gossip::create_model::Variant;
 use crate::learning::linear::{add_scaled_sparse_in_place, scale_in_place};
+use crate::learning::pairwise::{dense_pair_diff, quorum_coord, sparse_pair_diff};
+use crate::learning::MergeMode;
 use crate::util::threads;
 use anyhow::Result;
+
+/// Chunk view of a staged reservoir pair payload (DESIGN.md §17).
+/// `indptr` is the chunk's `rows + 1` window of **absolute** per-row entry
+/// offsets; the entry buffers are the full payload, shared read-only across
+/// chunks — exactly the CSR-window convention of the sparse example payload.
+#[derive(Clone, Copy)]
+struct PairSlices<'a> {
+    indptr: &'a [usize],
+    /// dense layout: `[n_entries, d]` partner rows
+    dense: &'a [f32],
+    /// sparse layout: CSR over partner entries
+    x_indptr: &'a [usize],
+    indices: &'a [u32],
+    values: &'a [f32],
+}
+
+/// MERGE of one coordinate pair of effective weights: the paper's average,
+/// or the quorum vote (agreeing signs average, disagreements abstain).
+#[inline]
+fn combine(merge: MergeMode, a: f32, b: f32) -> f32 {
+    match merge {
+        MergeMode::Average => 0.5 * (a + b),
+        MergeMode::Quorum => quorum_coord(a, b),
+    }
+}
 
 #[derive(Debug, Default)]
 pub struct NativeBackend {
@@ -75,6 +102,69 @@ impl NativeBackend {
             LearnerKind::Pegasos => Self::pegasos_row(w, x, y, t, op.hp),
             LearnerKind::Adaline => Self::adaline_row(w, x, y, t, op.hp),
             LearnerKind::LogReg => Self::logreg_row(w, x, y, t, op.hp),
+            LearnerKind::PairwiseAuc => {
+                unreachable!("pairwise steps route through apply_update_dense")
+            }
+        }
+    }
+
+    /// One row's UPDATE, dense layout: pointwise learners take the usual
+    /// `(x, y)` step; the pairwise learner takes one Pegasos hinge step on
+    /// `z = y (x − x_j)` with implicit label +1 per staged partner (row `i`
+    /// of the chunk's pair window).  An empty pair range is a complete
+    /// no-op — no decay, no `t` bump — mirroring
+    /// `pairwise::PairwiseAuc::update_with_reservoir`.
+    #[allow(clippy::too_many_arguments)]
+    fn apply_update_dense(
+        op: &StepOp,
+        w: &mut [f32],
+        x: &[f32],
+        y: f32,
+        t: &mut f32,
+        i: usize,
+        pairs: &Option<PairSlices<'_>>,
+        z: &mut Vec<f32>,
+    ) {
+        if op.learner != LearnerKind::PairwiseAuc {
+            Self::update_row(op, w, x, y, t);
+            return;
+        }
+        let p = pairs.as_ref().expect("pairwise op needs a staged pair payload");
+        let d = x.len();
+        for e in p.indptr[i]..p.indptr[i + 1] {
+            let xj = &p.dense[e * d..(e + 1) * d];
+            dense_pair_diff(y, x, xj, z);
+            Self::pegasos_row(w, z, 1.0, t, op.hp);
+        }
+    }
+
+    /// One row's UPDATE, sparse layout: the pairwise learner merges the two
+    /// sorted index lists into a sparse difference row `z = y (x − x_j)` —
+    /// O(nnz(x) + nnz(x_j)) — and takes one lazy-scale Pegasos step per
+    /// staged partner.
+    #[allow(clippy::too_many_arguments)]
+    fn apply_update_sparse(
+        op: &StepOp,
+        w: &mut [f32],
+        s: &mut f32,
+        idx: &[u32],
+        val: &[f32],
+        y: f32,
+        t: &mut f32,
+        i: usize,
+        pairs: &Option<PairSlices<'_>>,
+        zidx: &mut Vec<u32>,
+        zval: &mut Vec<f32>,
+    ) {
+        if op.learner != LearnerKind::PairwiseAuc {
+            Self::update_row_sparse(op, w, s, idx, val, y, t);
+            return;
+        }
+        let p = pairs.as_ref().expect("pairwise op needs a staged pair payload");
+        for e in p.indptr[i]..p.indptr[i + 1] {
+            let (lo, hi) = (p.x_indptr[e], p.x_indptr[e + 1]);
+            sparse_pair_diff(y, idx, val, &p.indices[lo..hi], &p.values[lo..hi], zidx, zval);
+            Self::pegasos_row_sparse(w, s, zidx, zval, 1.0, t, op.hp);
         }
     }
 
@@ -149,6 +239,9 @@ impl NativeBackend {
             LearnerKind::Pegasos => Self::pegasos_row_sparse(w, s, idx, val, y, t, op.hp),
             LearnerKind::Adaline => Self::adaline_row_sparse(w, s, idx, val, y, t, op.hp),
             LearnerKind::LogReg => Self::logreg_row_sparse(w, s, idx, val, y, t, op.hp),
+            LearnerKind::PairwiseAuc => {
+                unreachable!("pairwise steps route through apply_update_sparse")
+            }
         }
     }
 
@@ -160,6 +253,9 @@ impl NativeBackend {
     /// contiguous row chunks on leased threads — rows are independent, so
     /// the result is bit-for-bit the serial loop's.
     fn step_sparse(&mut self, op: &StepOp, batch: &mut StepBatch) -> Result<()> {
+        if op.learner == LearnerKind::PairwiseAuc && !batch.has_pairs() {
+            anyhow::bail!("pairwise op on a batch without a staged pair payload");
+        }
         let (b, d) = (batch.b, batch.d);
         let StepBatch {
             w1,
@@ -174,16 +270,53 @@ impl NativeBackend {
             x_indptr,
             x_indices,
             x_values,
+            pair_indptr,
+            pair_x,
+            pair_x_indptr,
+            pair_x_indices,
+            pair_x_values,
             ..
         } = batch;
         let (s1, s2, t1, t2, y) = (&s1[..], &s2[..], &t1[..], &t2[..], &y[..]);
         let (indptr, indices, values) = (&x_indptr[..], &x_indices[..], &x_values[..]);
+        let pair_payload = (op.learner == LearnerKind::PairwiseAuc).then_some((
+            &pair_indptr[..],
+            &pair_x[..],
+            &pair_x_indptr[..],
+            &pair_x_indices[..],
+            &pair_x_values[..],
+        ));
+        let window = |row0: usize, rows: usize| {
+            pair_payload.map(|(pi, pd, pxi, pxn, pxv)| PairSlices {
+                indptr: &pi[row0..row0 + rows + 1],
+                dense: pd,
+                x_indptr: pxi,
+                indices: pxn,
+                values: pxv,
+            })
+        };
         let want = par_extra_chunks(b, d);
         let lease = (want > 0).then(|| threads::lease(want));
         let workers = 1 + lease.as_ref().map_or(0, |l| l.granted());
         if workers <= 1 {
             // serial (the common path, and the drained-budget degradation)
-            step_rows_sparse(op, d, w1, w2, s1, s2, t1, t2, y, indptr, indices, values, out_s, out_t);
+            step_rows_sparse(
+                op,
+                d,
+                w1,
+                w2,
+                s1,
+                s2,
+                t1,
+                t2,
+                y,
+                indptr,
+                indices,
+                values,
+                window(0, b),
+                out_s,
+                out_t,
+            );
             return Ok(());
         }
         let rows_per = b.div_ceil(workers);
@@ -197,6 +330,7 @@ impl NativeBackend {
         std::thread::scope(|scope| {
             let head = chunks.remove(0);
             for (row0, w1c, w2c, osc, otc) in chunks {
+                let pw = window(row0, otc.len());
                 scope.spawn(move || {
                     let rows = otc.len();
                     step_rows_sparse(
@@ -213,6 +347,7 @@ impl NativeBackend {
                         &indptr[row0..row0 + rows + 1],
                         indices,
                         values,
+                        pw,
                         osc,
                         otc,
                     );
@@ -233,6 +368,7 @@ impl NativeBackend {
                 &indptr[row0..row0 + rows + 1],
                 indices,
                 values,
+                window(row0, rows),
                 osc,
                 otc,
             );
@@ -267,11 +403,14 @@ fn step_rows_dense(
     t2: &[f32],
     x: &[f32],
     y: &[f32],
+    pairs: Option<PairSlices<'_>>,
     out_w: &mut [f32],
     out_t: &mut [f32],
     u1: &mut Vec<f32>,
     u2: &mut Vec<f32>,
 ) {
+    // pairwise difference-row scratch, reused across the chunk's rows
+    let mut z: Vec<f32> = Vec::new();
     for i in 0..y.len() {
         let r = i * d..(i + 1) * d;
         let w1r = &w1[r.clone()];
@@ -284,27 +423,27 @@ fn step_rows_dense(
             Variant::Rw => {
                 out_wr.copy_from_slice(w1r);
                 *out_ti = t1[i];
-                NativeBackend::update_row(op, out_wr, xr, yi, out_ti);
+                NativeBackend::apply_update_dense(op, out_wr, xr, yi, out_ti, i, &pairs, &mut z);
             }
             Variant::Mu => {
                 for (o, (&a, &bb)) in out_wr.iter_mut().zip(w1r.iter().zip(w2r)) {
-                    *o = 0.5 * (a + bb);
+                    *o = combine(op.merge, a, bb);
                 }
                 *out_ti = t1[i].max(t2[i]);
-                NativeBackend::update_row(op, out_wr, xr, yi, out_ti);
+                NativeBackend::apply_update_dense(op, out_wr, xr, yi, out_ti, i, &pairs, &mut z);
             }
             Variant::Um => {
-                // update both with the same local example, then average
+                // update both with the same local example, then combine
                 u1.clear();
                 u1.extend_from_slice(w1r);
                 u2.clear();
                 u2.extend_from_slice(w2r);
                 let mut t1i = t1[i];
                 let mut t2i = t2[i];
-                NativeBackend::update_row(op, u1, xr, yi, &mut t1i);
-                NativeBackend::update_row(op, u2, xr, yi, &mut t2i);
+                NativeBackend::apply_update_dense(op, u1, xr, yi, &mut t1i, i, &pairs, &mut z);
+                NativeBackend::apply_update_dense(op, u2, xr, yi, &mut t2i, i, &pairs, &mut z);
                 for (o, (&a, &bb)) in out_wr.iter_mut().zip(u1.iter().zip(u2.iter())) {
-                    *o = 0.5 * (a + bb);
+                    *o = combine(op.merge, a, bb);
                 }
                 *out_ti = t1i.max(t2i);
             }
@@ -330,9 +469,12 @@ fn step_rows_sparse(
     indptr: &[usize],
     indices: &[u32],
     values: &[f32],
+    pairs: Option<PairSlices<'_>>,
     out_s: &mut [f32],
     out_t: &mut [f32],
 ) {
+    // pairwise merged-difference scratch, reused across the chunk's rows
+    let (mut zidx, mut zval): (Vec<u32>, Vec<f32>) = (Vec::new(), Vec::new());
     for i in 0..y.len() {
         let r = i * d..(i + 1) * d;
         let (lo, hi) = (indptr[i], indptr[i + 1]);
@@ -344,37 +486,45 @@ fn step_rows_sparse(
                 let w = &mut w1[r];
                 let mut s = s1[i];
                 let mut t = t1[i];
-                NativeBackend::update_row_sparse(op, w, &mut s, idx, val, yi, &mut t);
+                NativeBackend::apply_update_sparse(
+                    op, w, &mut s, idx, val, yi, &mut t, i, &pairs, &mut zidx, &mut zval,
+                );
                 out_s[i] = s;
                 out_t[i] = t;
             }
             Variant::Mu => {
-                // merge in place: w1 <- (s1*w1 + s2*w2)/2, then update
+                // merge in place: w1 <- combine(s1*w1, s2*w2), then update
                 let w = &mut w1[r.clone()];
                 let w2r = &w2[r];
                 let (s1i, s2i) = (s1[i], s2[i]);
                 for (a, &bb) in w.iter_mut().zip(w2r) {
-                    *a = 0.5 * (s1i * *a + s2i * bb);
+                    *a = combine(op.merge, s1i * *a, s2i * bb);
                 }
                 let mut s = 1.0f32;
                 let mut t = t1[i].max(t2[i]);
-                NativeBackend::update_row_sparse(op, w, &mut s, idx, val, yi, &mut t);
+                NativeBackend::apply_update_sparse(
+                    op, w, &mut s, idx, val, yi, &mut t, i, &pairs, &mut zidx, &mut zval,
+                );
                 out_s[i] = s;
                 out_t[i] = t;
             }
             Variant::Um => {
                 // update both rows in place with the same local example,
-                // then average into w1 (w2 is scratch per the contract)
+                // then combine into w1 (w2 is scratch per the contract)
                 let w1r = &mut w1[r.clone()];
                 let mut s1i = s1[i];
                 let mut t1i = t1[i];
-                NativeBackend::update_row_sparse(op, w1r, &mut s1i, idx, val, yi, &mut t1i);
+                NativeBackend::apply_update_sparse(
+                    op, w1r, &mut s1i, idx, val, yi, &mut t1i, i, &pairs, &mut zidx, &mut zval,
+                );
                 let w2r = &mut w2[r];
                 let mut s2i = s2[i];
                 let mut t2i = t2[i];
-                NativeBackend::update_row_sparse(op, w2r, &mut s2i, idx, val, yi, &mut t2i);
+                NativeBackend::apply_update_sparse(
+                    op, w2r, &mut s2i, idx, val, yi, &mut t2i, i, &pairs, &mut zidx, &mut zval,
+                );
                 for (a, &bb) in w1r.iter_mut().zip(w2r.iter()) {
-                    *a = 0.5 * (s1i * *a + s2i * bb);
+                    *a = combine(op.merge, s1i * *a, s2i * bb);
                 }
                 out_s[i] = 1.0;
                 out_t[i] = t1i.max(t2i);
@@ -401,15 +551,43 @@ impl Backend for NativeBackend {
         if batch.is_sparse_x() {
             return self.step_sparse(op, batch);
         }
+        if op.learner == LearnerKind::PairwiseAuc && !batch.has_pairs() {
+            anyhow::bail!("pairwise op on a batch without a staged pair payload");
+        }
         let (b, d) = (batch.b, batch.d);
-        let StepBatch { w1, w2, x, y, t1, t2, out_w, out_t, .. } = batch;
+        let StepBatch { w1, w2, x, y, t1, t2, out_w, out_t, pair_indptr, pair_x, .. } = batch;
         let (w1, w2, x, y, t1, t2) = (&w1[..], &w2[..], &x[..], &y[..], &t1[..], &t2[..]);
+        let pair_payload = (op.learner == LearnerKind::PairwiseAuc)
+            .then_some((&pair_indptr[..], &pair_x[..]));
+        let window = |row0: usize, rows: usize| {
+            pair_payload.map(|(pi, pd)| PairSlices {
+                indptr: &pi[row0..row0 + rows + 1],
+                dense: pd,
+                x_indptr: &[],
+                indices: &[],
+                values: &[],
+            })
+        };
         let want = par_extra_chunks(b, d);
         let lease = (want > 0).then(|| threads::lease(want));
         let workers = 1 + lease.as_ref().map_or(0, |l| l.granted());
         if workers <= 1 {
             // serial (the common path, and the drained-budget degradation)
-            step_rows_dense(op, d, w1, t1, w2, t2, x, y, out_w, out_t, &mut self.u1, &mut self.u2);
+            step_rows_dense(
+                op,
+                d,
+                w1,
+                t1,
+                w2,
+                t2,
+                x,
+                y,
+                window(0, b),
+                out_w,
+                out_t,
+                &mut self.u1,
+                &mut self.u2,
+            );
             return Ok(());
         }
         let rows_per = b.div_ceil(workers);
@@ -422,6 +600,7 @@ impl Backend for NativeBackend {
         std::thread::scope(|scope| {
             let head = chunks.remove(0);
             for (row0, owc, otc) in chunks {
+                let pw = window(row0, otc.len());
                 scope.spawn(move || {
                     let rows = otc.len();
                     // spawned chunks carry their own UM scratch pair
@@ -435,6 +614,7 @@ impl Backend for NativeBackend {
                         &t2[row0..row0 + rows],
                         &x[row0 * d..(row0 + rows) * d],
                         &y[row0..row0 + rows],
+                        pw,
                         owc,
                         otc,
                         &mut u1,
@@ -453,6 +633,7 @@ impl Backend for NativeBackend {
                 &t2[row0..row0 + rows],
                 &x[row0 * d..(row0 + rows) * d],
                 &y[row0..row0 + rows],
+                window(row0, rows),
                 owc,
                 otc,
                 &mut self.u1,
@@ -558,7 +739,7 @@ mod tests {
         let mut rng = Rng::new(3);
         let (b, d) = (16, 9);
         let mut sb = random_batch(&mut rng, b, d);
-        let op = StepOp { learner: LearnerKind::Pegasos, variant: Variant::Rw, hp: 0.01 };
+        let op = StepOp { learner: LearnerKind::Pegasos, variant: Variant::Rw, merge: MergeMode::Average, hp: 0.01 };
         let mut be = NativeBackend::new();
         let learner = Learner::pegasos(0.01);
         let expect: Vec<Vec<f32>> = (0..b)
@@ -585,7 +766,7 @@ mod tests {
         let mut rng = Rng::new(4);
         let (b, d) = (8, 5);
         let mut sb = random_batch(&mut rng, b, d);
-        let op = StepOp { learner: LearnerKind::Pegasos, variant: Variant::Mu, hp: 0.1 };
+        let op = StepOp { learner: LearnerKind::Pegasos, variant: Variant::Mu, merge: MergeMode::Average, hp: 0.1 };
         let snapshot = sb.clone();
         NativeBackend::new().step(&op, &mut sb).unwrap();
         for i in 0..b {
@@ -610,9 +791,9 @@ mod tests {
         let mut be = NativeBackend::new();
         let mut mu = base.clone();
         let mut um = base.clone();
-        be.step(&StepOp { learner: LearnerKind::Adaline, variant: Variant::Mu, hp: 0.05 }, &mut mu)
+        be.step(&StepOp { learner: LearnerKind::Adaline, variant: Variant::Mu, merge: MergeMode::Average, hp: 0.05 }, &mut mu)
             .unwrap();
-        be.step(&StepOp { learner: LearnerKind::Adaline, variant: Variant::Um, hp: 0.05 }, &mut um)
+        be.step(&StepOp { learner: LearnerKind::Adaline, variant: Variant::Um, merge: MergeMode::Average, hp: 0.05 }, &mut um)
             .unwrap();
         for (a, e) in mu.out_w.iter().zip(&um.out_w) {
             assert!((a - e).abs() < 1e-5, "{a} vs {e}");
@@ -650,15 +831,15 @@ mod tests {
         let d = 23;
         for (op, learner) in [
             (
-                StepOp { learner: LearnerKind::Pegasos, variant: Variant::Rw, hp: 0.05 },
+                StepOp { learner: LearnerKind::Pegasos, variant: Variant::Rw, merge: MergeMode::Average, hp: 0.05 },
                 Learner::pegasos(0.05),
             ),
             (
-                StepOp { learner: LearnerKind::Adaline, variant: Variant::Rw, hp: 0.1 },
+                StepOp { learner: LearnerKind::Adaline, variant: Variant::Rw, merge: MergeMode::Average, hp: 0.1 },
                 Learner::adaline(0.1),
             ),
             (
-                StepOp { learner: LearnerKind::LogReg, variant: Variant::Rw, hp: 0.05 },
+                StepOp { learner: LearnerKind::LogReg, variant: Variant::Rw, merge: MergeMode::Average, hp: 0.05 },
                 Learner::logreg(0.05),
             ),
         ] {
@@ -714,5 +895,212 @@ mod tests {
         let a = be.error_counts_examples(&ds, &y, &w, m).unwrap();
         let b = be.error_counts_examples(&sp, &y, &w, m).unwrap();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn pairwise_dense_rw_matches_scalar_reference() {
+        use crate::data::matrix::Matrix;
+        use crate::learning::pairwise::{self, PairScratch, PairwiseAuc};
+        let mut rng = Rng::new(33);
+        let (d, lam) = (6, 0.05f32);
+        // a tiny "training set" the reservoir points into
+        let n = 10;
+        let rows: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let mut labels: Vec<f32> = (0..n).map(|_| rng.sign()).collect();
+        labels[0] = -1.0; // guarantee an opposite-class partner for node 7
+        labels[7] = 1.0;
+        let train = Examples::Dense(Matrix::from_vec(n, d, rows));
+        // fill phase only (4 offers into capacity 4): all entries retained
+        let mut res = pairwise::reservoir_new(4);
+        for node in 0..4u32 {
+            pairwise::offer(&mut res, node, labels[node as usize], rng.next_u64());
+        }
+        let (x_local, y_local) = (train.row(7).to_dense(d), labels[7]);
+        // scalar reference
+        let mut model = LinearModel::from_weights(
+            (0..d).map(|_| rng.normal() as f32).collect::<Vec<_>>(),
+            3,
+        );
+        let w0 = model.weights();
+        let mut scratch = PairScratch::default();
+        PairwiseAuc::new(lam).update_with_reservoir(
+            &mut model,
+            &Row::Dense(&x_local),
+            y_local,
+            &res,
+            &train,
+            &mut scratch,
+        );
+        // engine path: one RW row with the same staged partners
+        let mut sb = StepBatch::default();
+        sb.resize(1, d);
+        sb.w1.copy_from_slice(&w0);
+        sb.t1[0] = 3.0;
+        sb.x.copy_from_slice(&x_local);
+        sb.y[0] = y_local;
+        sb.begin_pair_rows();
+        for (node, yj) in pairwise::entries(&res) {
+            if yj * y_local < 0.0 {
+                sb.push_pair_entry_dense(&train.row(node as usize));
+            }
+        }
+        sb.seal_pair_row();
+        let op = StepOp {
+            learner: LearnerKind::PairwiseAuc,
+            variant: Variant::Rw,
+            merge: MergeMode::Average,
+            hp: lam,
+        };
+        NativeBackend::new().step(&op, &mut sb).unwrap();
+        assert!(
+            sb.pair_indptr[1] > 0,
+            "test vacuous: reservoir held no opposite-class partner"
+        );
+        for (a, e) in sb.out_w.iter().zip(model.weights()) {
+            assert!((a - e).abs() < 1e-4, "{a} vs {e}");
+        }
+        assert_eq!(sb.out_t[0], model.t as f32);
+    }
+
+    #[test]
+    fn pairwise_sparse_matches_dense_kernel() {
+        use crate::learning::pairwise;
+        let mut rng = Rng::new(34);
+        let (d, lam) = (12, 0.1f32);
+        let sparse_row = |rng: &mut Rng| {
+            let mut idx: Vec<u32> = (0..5).map(|_| rng.below(d as u64) as u32).collect();
+            idx.sort_unstable();
+            idx.dedup();
+            let val: Vec<f32> = idx.iter().map(|_| rng.normal() as f32).collect();
+            (idx, val)
+        };
+        let (xi, xv) = sparse_row(&mut rng);
+        let partners: Vec<(Vec<u32>, Vec<f32>)> = (0..3).map(|_| sparse_row(&mut rng)).collect();
+        let w0: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let op = StepOp {
+            learner: LearnerKind::PairwiseAuc,
+            variant: Variant::Rw,
+            merge: MergeMode::Average,
+            hp: lam,
+        };
+        // sparse path
+        let mut sp = StepBatch::default();
+        sp.resize_for(1, d, true);
+        sp.w1.copy_from_slice(&w0);
+        sp.t1[0] = 5.0;
+        sp.y[0] = 1.0;
+        sp.push_sparse_x_row(&xi, &xv);
+        sp.begin_pair_rows();
+        for (pi, pv) in &partners {
+            sp.push_pair_entry_sparse(pi, pv);
+        }
+        sp.seal_pair_row();
+        NativeBackend::new().step(&op, &mut sp).unwrap();
+        // dense path with the same data
+        let mut dn = StepBatch::default();
+        dn.resize(1, d);
+        dn.w1.copy_from_slice(&w0);
+        dn.t1[0] = 5.0;
+        dn.y[0] = 1.0;
+        Row::Sparse(&xi, &xv).write_dense(&mut dn.x);
+        dn.begin_pair_rows();
+        for (pi, pv) in &partners {
+            dn.push_pair_entry_dense(&Row::Sparse(pi, pv));
+        }
+        dn.seal_pair_row();
+        NativeBackend::new().step(&op, &mut dn).unwrap();
+        let eff: Vec<f32> = sp.w1.iter().map(|&w| w * sp.out_s[0]).collect();
+        for (a, e) in eff.iter().zip(&dn.out_w) {
+            assert!((a - e).abs() < 1e-4, "{a} vs {e}");
+        }
+        assert_eq!(sp.out_t[0], dn.out_t[0]);
+        assert_eq!(sp.out_t[0], 5.0 + partners.len() as f32);
+        let _ = pairwise::reservoir_new(0); // keep the import exercised
+    }
+
+    #[test]
+    fn pairwise_empty_range_is_complete_noop() {
+        let d = 4;
+        let op = StepOp {
+            learner: LearnerKind::PairwiseAuc,
+            variant: Variant::Rw,
+            merge: MergeMode::Average,
+            hp: 0.01,
+        };
+        let mut sb = StepBatch::default();
+        sb.resize(1, d);
+        sb.w1.copy_from_slice(&[1.0, -2.0, 3.0, 4.0]);
+        sb.t1[0] = 9.0;
+        sb.y[0] = 1.0;
+        sb.begin_pair_rows();
+        sb.seal_pair_row();
+        NativeBackend::new().step(&op, &mut sb).unwrap();
+        assert_eq!(sb.out_w, vec![1.0, -2.0, 3.0, 4.0], "no decay");
+        assert_eq!(sb.out_t[0], 9.0, "no t bump");
+    }
+
+    #[test]
+    fn pairwise_without_payload_is_an_error() {
+        let op = StepOp {
+            learner: LearnerKind::PairwiseAuc,
+            variant: Variant::Rw,
+            merge: MergeMode::Average,
+            hp: 0.01,
+        };
+        let mut sb = StepBatch::default();
+        sb.resize(1, 3);
+        assert!(NativeBackend::new().step(&op, &mut sb).is_err());
+    }
+
+    #[test]
+    fn quorum_merge_mu_matches_reference_dense_and_sparse() {
+        use crate::learning::pairwise::quorum_merge;
+        let mut rng = Rng::new(35);
+        let (b, d) = (6, 5);
+        let mut sb = random_batch(&mut rng, b, d);
+        // isolate the merge: adaline with a zero example is err = -<w,0> = 0,
+        // so the update adds nothing and out_w is exactly the merge result
+        sb.x.fill(0.0);
+        let snapshot = sb.clone();
+        let op = StepOp {
+            learner: LearnerKind::Adaline,
+            variant: Variant::Mu,
+            merge: MergeMode::Quorum,
+            hp: 0.1,
+        };
+        NativeBackend::new().step(&op, &mut sb).unwrap();
+        for i in 0..b {
+            let m1 = LinearModel::from_weights(
+                snapshot.w1[i * d..(i + 1) * d].to_vec(),
+                snapshot.t1[i] as u64,
+            );
+            let m2 = LinearModel::from_weights(
+                snapshot.w2[i * d..(i + 1) * d].to_vec(),
+                snapshot.t2[i] as u64,
+            );
+            let expect = quorum_merge(&m1, &m2).weights();
+            for (a, e) in sb.out_w[i * d..(i + 1) * d].iter().zip(&expect) {
+                assert!((a - e).abs() < 1e-6, "{a} vs {e}");
+            }
+        }
+        // sparse layout: same merge on lazy-scaled rows
+        let mut sp = StepBatch::default();
+        sp.resize_for(1, d, true);
+        sp.w1.copy_from_slice(&snapshot.w1[..d]);
+        sp.w2.copy_from_slice(&snapshot.w2[..d]);
+        sp.s1[0] = 2.0;
+        sp.t1[0] = snapshot.t1[0];
+        sp.t2[0] = snapshot.t2[0];
+        sp.y[0] = 1.0;
+        sp.push_sparse_x_row(&[], &[]);
+        NativeBackend::new().step(&op, &mut sp).unwrap();
+        let mut m1 = LinearModel::from_weights(snapshot.w1[..d].to_vec(), 0);
+        m1.scale_by(2.0);
+        let m2 = LinearModel::from_weights(snapshot.w2[..d].to_vec(), 0);
+        let expect = quorum_merge(&m1, &m2).weights();
+        let eff: Vec<f32> = sp.w1[..d].iter().map(|&w| w * sp.out_s[0]).collect();
+        for (a, e) in eff.iter().zip(&expect) {
+            assert!((a - e).abs() < 1e-6, "{a} vs {e}");
+        }
     }
 }

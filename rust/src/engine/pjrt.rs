@@ -9,8 +9,9 @@
 //! results are copied back into `w1`/`out_s` to honor the sparse in-place
 //! contract of [`Backend::step`].
 
-use crate::engine::{Backend, StepBatch, StepOp};
+use crate::engine::{Backend, LearnerKind, StepBatch, StepOp};
 use crate::gossip::create_model::Variant;
+use crate::learning::MergeMode;
 use crate::runtime::{literal_matrix, literal_to_vec, literal_vec, Runtime};
 use anyhow::{Context, Result};
 use std::path::Path;
@@ -63,6 +64,14 @@ impl Backend for PjrtBackend {
     }
 
     fn step(&mut self, op: &StepOp, batch: &mut StepBatch) -> Result<()> {
+        // pairwise/quorum ops have no compiled artifacts (and no pair-payload
+        // marshalling); config validation routes them to the native backend
+        if op.learner == LearnerKind::PairwiseAuc || op.merge == MergeMode::Quorum {
+            anyhow::bail!(
+                "no compiled artifact for op {} (pairwise/quorum ops run on the native backend)",
+                op.op_name()
+            );
+        }
         // dense compiled buckets: densify sparse batches on entry, restore
         // the sparse in-place result contract on exit
         let was_sparse = batch.is_sparse_x();

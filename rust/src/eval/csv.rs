@@ -6,24 +6,25 @@ use std::io::Write;
 use std::path::Path;
 
 /// Write a set of curves in long format:
-/// `label,cycle,err_mean,err_std,err_vote,similarity,messages_sent`.
+/// `label,cycle,err_mean,err_std,err_vote,similarity,auc,messages_sent`.
 pub fn write_curves(path: &Path, curves: &[Curve]) -> std::io::Result<()> {
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
     }
     let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-    writeln!(f, "label,cycle,err_mean,err_std,err_vote,similarity,messages_sent")?;
+    writeln!(f, "label,cycle,err_mean,err_std,err_vote,similarity,auc,messages_sent")?;
     for c in curves {
         for p in &c.points {
             writeln!(
                 f,
-                "{},{},{:.6},{:.6},{},{},{}",
+                "{},{},{:.6},{:.6},{},{},{},{}",
                 c.label,
                 p.cycle,
                 p.err_mean,
                 p.err_std,
                 p.err_vote.map_or(String::new(), |v| format!("{v:.6}")),
                 p.similarity.map_or(String::new(), |v| format!("{v:.6}")),
+                p.auc.map_or(String::new(), |v| format!("{v:.6}")),
                 p.messages_sent
             )?;
         }
@@ -39,8 +40,8 @@ mod tests {
     #[test]
     fn writes_long_format() {
         let mut c = Curve::new("p2pegasos-mu");
-        c.push(point_from_errors(1, &[0.4], None, Some(0.5), 10));
-        c.push(point_from_errors(2, &[0.3], Some(&[0.25]), None, 20));
+        c.push(point_from_errors(1, &[0.4], None, Some(0.5), None, 10));
+        c.push(point_from_errors(2, &[0.3], Some(&[0.25]), None, Some(&[0.75]), 20));
         let dir = std::env::temp_dir().join("golf_csv_test");
         let path = dir.join("curves.csv");
         write_curves(&path, &[c]).unwrap();
@@ -48,8 +49,10 @@ mod tests {
         let lines: Vec<&str> = text.trim().lines().collect();
         assert_eq!(lines.len(), 3);
         assert!(lines[0].starts_with("label,cycle"));
+        assert!(lines[0].contains(",auc,"));
         assert!(lines[1].starts_with("p2pegasos-mu,1,0.4"));
         assert!(lines[2].contains(",0.250000,"));
+        assert!(lines[2].contains(",0.750000,"));
         std::fs::remove_dir_all(&dir).ok();
     }
 }

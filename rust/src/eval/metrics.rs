@@ -43,6 +43,42 @@ pub fn cache_error(
     wrong as f64 / test.n().max(1) as f64
 }
 
+/// Area under the ROC curve of a score vector against ±1 labels, via the
+/// Mann-Whitney rank-sum with average ranks for ties: the probability that a
+/// uniformly drawn positive example outranks a uniformly drawn negative one
+/// (ties count half).  Degenerate single-class test sets score 0.5 — the
+/// chance level, so an uninformative metric never masquerades as a good or
+/// bad one.  This is the target the pairwise hinge objective optimizes
+/// (DESIGN.md §17).
+pub fn auc(scores: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(scores.len(), y.len());
+    let n_pos = y.iter().filter(|&&v| v > 0.0).count();
+    let n_neg = y.len() - n_pos;
+    if n_pos == 0 || n_neg == 0 {
+        return 0.5;
+    }
+    let mut order: Vec<usize> = (0..scores.len()).collect();
+    order.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap_or(std::cmp::Ordering::Equal));
+    // average ranks over tied score groups, 1-based
+    let mut rank_sum_pos = 0.0f64;
+    let mut i = 0;
+    while i < order.len() {
+        let mut j = i;
+        while j < order.len() && scores[order[j]] == scores[order[i]] {
+            j += 1;
+        }
+        let avg_rank = ((i + 1) + j) as f64 / 2.0; // mean of ranks i+1..=j
+        for &k in &order[i..j] {
+            if y[k] > 0.0 {
+                rank_sum_pos += avg_rank;
+            }
+        }
+        i = j;
+    }
+    let u = rank_sum_pos - (n_pos * (n_pos + 1)) as f64 / 2.0;
+    u / (n_pos as f64 * n_neg as f64)
+}
+
 /// Error of the margin-weighted full-population vote (Eq. 18/19, the WB1/WB2
 /// baselines): sign(sum_j <w_j, x>).
 pub fn weighted_vote_error(models: &[&LinearModel], test: &Examples, y: &[f32]) -> f64 {
@@ -97,6 +133,57 @@ mod tests {
         let bad = LinearModel::from_weights(vec![-0.1, 0.0], 0);
         let e = weighted_vote_error(&[&good, &bad, &good], &x, &y);
         assert_eq!(e, 0.0);
+    }
+
+    #[test]
+    fn auc_perfect_inverted_and_random() {
+        let y = [1.0, 1.0, -1.0, -1.0];
+        assert_eq!(auc(&[0.9, 0.8, 0.2, 0.1], &y), 1.0);
+        assert_eq!(auc(&[0.1, 0.2, 0.8, 0.9], &y), 0.0);
+        // all tied scores: every pair counts half
+        assert_eq!(auc(&[0.5, 0.5, 0.5, 0.5], &y), 0.5);
+    }
+
+    #[test]
+    fn auc_handles_partial_ties_with_average_ranks() {
+        // scores: pos {0.8, 0.5}, neg {0.5, 0.1} — pairs: (0.8>0.5)=1,
+        // (0.8>0.1)=1, (0.5=0.5)=0.5, (0.5>0.1)=1 → 3.5/4
+        let got = auc(&[0.8, 0.5, 0.5, 0.1], &[1.0, 1.0, -1.0, -1.0]);
+        assert!((got - 0.875).abs() < 1e-12, "{got}");
+    }
+
+    #[test]
+    fn auc_single_class_is_chance() {
+        assert_eq!(auc(&[0.1, 0.9], &[1.0, 1.0]), 0.5);
+        assert_eq!(auc(&[0.1, 0.9], &[-1.0, -1.0]), 0.5);
+    }
+
+    #[test]
+    fn auc_agrees_with_brute_force_pair_count() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(77);
+        for _ in 0..20 {
+            let n = 3 + rng.below_usize(30);
+            // coarse scores force plenty of ties
+            let scores: Vec<f32> = (0..n).map(|_| (rng.below_usize(5) as f32) / 4.0).collect();
+            let y: Vec<f32> = (0..n).map(|_| rng.sign()).collect();
+            let (mut wins, mut pairs) = (0.0f64, 0.0f64);
+            for i in 0..n {
+                for j in 0..n {
+                    if y[i] > 0.0 && y[j] < 0.0 {
+                        pairs += 1.0;
+                        if scores[i] > scores[j] {
+                            wins += 1.0;
+                        } else if scores[i] == scores[j] {
+                            wins += 0.5;
+                        }
+                    }
+                }
+            }
+            let expect = if pairs == 0.0 { 0.5 } else { wins / pairs };
+            let got = auc(&scores, &y);
+            assert!((got - expect).abs() < 1e-9, "{got} vs {expect}");
+        }
     }
 
     #[test]

@@ -5,6 +5,6 @@ pub mod metrics;
 pub mod similarity;
 pub mod tracker;
 
-pub use metrics::{cache_error, flipped_labels, weighted_vote_error, zero_one_error};
+pub use metrics::{auc, cache_error, flipped_labels, weighted_vote_error, zero_one_error};
 pub use similarity::mean_pairwise_cosine;
 pub use tracker::{log_spaced_cycles, Curve, EvalPoint};

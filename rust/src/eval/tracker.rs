@@ -39,6 +39,9 @@ pub struct EvalPoint {
     pub err_vote: Option<f64>,
     /// mean pairwise cosine similarity of sampled models, when enabled
     pub similarity: Option<f64>,
+    /// mean test-set AUC (Mann-Whitney) over sampled peers, when enabled —
+    /// the ranking metric of the pairwise objective (DESIGN.md §17)
+    pub auc: Option<f64>,
     /// messages sent network-wide up to this point
     pub messages_sent: u64,
 }
@@ -79,6 +82,7 @@ pub fn point_from_errors(
     errs: &[f64],
     vote_errs: Option<&[f64]>,
     similarity: Option<f64>,
+    aucs: Option<&[f64]>,
     messages_sent: u64,
 ) -> EvalPoint {
     EvalPoint {
@@ -87,6 +91,7 @@ pub fn point_from_errors(
         err_std: stats::std_dev(errs),
         err_vote: vote_errs.map(stats::mean),
         similarity,
+        auc: aucs.map(stats::mean),
         messages_sent,
     }
 }
@@ -129,7 +134,7 @@ mod tests {
     fn curve_threshold_search() {
         let mut c = Curve::new("x");
         for (cy, e) in [(1, 0.5), (10, 0.2), (100, 0.05)] {
-            c.push(point_from_errors(cy, &[e], None, None, 0));
+            c.push(point_from_errors(cy, &[e], None, None, None, 0));
         }
         assert_eq!(c.cycles_to_reach(0.2), Some(10));
         assert_eq!(c.cycles_to_reach(0.01), None);
@@ -138,10 +143,12 @@ mod tests {
 
     #[test]
     fn point_aggregation() {
-        let p = point_from_errors(5, &[0.1, 0.3], Some(&[0.0, 0.2]), Some(0.8), 42);
+        let p =
+            point_from_errors(5, &[0.1, 0.3], Some(&[0.0, 0.2]), Some(0.8), Some(&[0.7, 0.9]), 42);
         assert!((p.err_mean - 0.2).abs() < 1e-12);
         assert_eq!(p.err_vote, Some(0.1));
         assert_eq!(p.similarity, Some(0.8));
+        assert!((p.auc.unwrap() - 0.8).abs() < 1e-12);
         assert_eq!(p.messages_sent, 42);
     }
 }

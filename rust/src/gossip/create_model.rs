@@ -2,9 +2,12 @@
 //! model `m1`, the previously received model `m2`, and the node's single
 //! local example.
 
-use crate::data::dataset::Row;
+use crate::data::dataset::{Examples, Row};
 use crate::learning::adaline::Learner;
 use crate::learning::linear::LinearModel;
+use crate::learning::pairwise::{
+    quorum_merge, quorum_merge_from, MergeMode, PairScratch, PairwiseAuc,
+};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Variant {
@@ -36,10 +39,31 @@ impl Variant {
     }
 }
 
+/// MERGE dispatch (in place): averaging (Algorithm 3) or the quorum vote
+/// (DESIGN.md §17).  Mirrors the engine's `combine` so the scalar and
+/// batched paths agree bitwise.
+#[inline]
+fn merge_from(mode: MergeMode, m: &mut LinearModel, other: &LinearModel) {
+    match mode {
+        MergeMode::Average => m.merge_from(other),
+        MergeMode::Quorum => quorum_merge_from(m, other),
+    }
+}
+
+/// MERGE dispatch (allocating).
+#[inline]
+fn merge_new(mode: MergeMode, a: &LinearModel, b: &LinearModel) -> LinearModel {
+    match mode {
+        MergeMode::Average => LinearModel::merge(a, b),
+        MergeMode::Quorum => quorum_merge(a, b),
+    }
+}
+
 /// Create the new model from the incoming model (consumed) and the last
 /// received model, using the node's local example (x, y).
 pub fn create_model(
     variant: Variant,
+    merge: MergeMode,
     learner: &Learner,
     m1: LinearModel,
     m2: &LinearModel,
@@ -56,7 +80,7 @@ pub fn create_model(
             // merge into m1's buffer in place: the incoming model is owned,
             // so no allocation is needed on this hot path (perf pass §L3)
             let mut m = m1;
-            m.merge_from(m2);
+            merge_from(merge, &mut m, m2);
             learner.update(&mut m, x, y);
             m
         }
@@ -65,7 +89,7 @@ pub fn create_model(
             let mut u2 = m2.clone();
             learner.update(&mut u1, x, y);
             learner.update(&mut u2, x, y);
-            LinearModel::merge(&u1, &u2)
+            merge_new(merge, &u1, &u2)
         }
     }
 }
@@ -78,6 +102,7 @@ pub fn create_model(
 /// Equivalent to `create_model` + assignment — pinned by a property test.
 pub fn create_model_step(
     variant: Variant,
+    merge: MergeMode,
     learner: &Learner,
     incoming: LinearModel,
     last_recv: &mut LinearModel,
@@ -94,7 +119,7 @@ pub fn create_model_step(
         Variant::Mu => {
             // prev <- merge(prev, incoming) in prev's buffer, then update
             let mut prev = std::mem::replace(last_recv, incoming);
-            prev.merge_from(last_recv);
+            merge_from(merge, &mut prev, last_recv);
             learner.update(&mut prev, x, y);
             prev
         }
@@ -103,7 +128,51 @@ pub fn create_model_step(
             learner.update(&mut u1, x, y);
             let mut u2 = std::mem::replace(last_recv, incoming);
             learner.update(&mut u2, x, y);
-            u2.merge_from(&u1);
+            merge_from(merge, &mut u2, &u1);
+            u2
+        }
+    }
+}
+
+/// CREATEMODEL for the pairwise AUC objective (DESIGN.md §17): the learner
+/// step pairs the local example against the walking model's example
+/// reservoir instead of taking a pointwise gradient.  `res` is the incoming
+/// message's reservoir and `train` resolves its origin nodes to feature
+/// rows; the caller offers its local example into the reservoir *after* this
+/// step (the engine kernels follow the same order).  Same `lastModel`
+/// assignment discipline as [`create_model_step`].
+#[allow(clippy::too_many_arguments)]
+pub fn create_model_pairwise_step(
+    variant: Variant,
+    merge: MergeMode,
+    auc: &PairwiseAuc,
+    incoming: LinearModel,
+    last_recv: &mut LinearModel,
+    x: &Row<'_>,
+    y: f32,
+    res: &[f32],
+    train: &Examples,
+    scratch: &mut PairScratch,
+) -> LinearModel {
+    match variant {
+        Variant::Rw => {
+            let mut created = incoming.clone();
+            auc.update_with_reservoir(&mut created, x, y, res, train, scratch);
+            *last_recv = incoming;
+            created
+        }
+        Variant::Mu => {
+            let mut prev = std::mem::replace(last_recv, incoming);
+            merge_from(merge, &mut prev, last_recv);
+            auc.update_with_reservoir(&mut prev, x, y, res, train, scratch);
+            prev
+        }
+        Variant::Um => {
+            let mut u1 = incoming.clone();
+            auc.update_with_reservoir(&mut u1, x, y, res, train, scratch);
+            let mut u2 = std::mem::replace(last_recv, incoming);
+            auc.update_with_reservoir(&mut u2, x, y, res, train, scratch);
+            merge_from(merge, &mut u2, &u1);
             u2
         }
     }
@@ -123,12 +192,14 @@ mod tests {
         )
     }
 
+    const AVG: MergeMode = MergeMode::Average;
+
     #[test]
     fn rw_ignores_m2() {
         let (l, m1, m2, x) = setup();
-        let a = create_model(Variant::Rw, &l, m1.clone(), &m2, &Row::Dense(&x), 1.0);
+        let a = create_model(Variant::Rw, AVG, &l, m1.clone(), &m2, &Row::Dense(&x), 1.0);
         let zero = LinearModel::zeros(2);
-        let b = create_model(Variant::Rw, &l, m1, &zero, &Row::Dense(&x), 1.0);
+        let b = create_model(Variant::Rw, AVG, &l, m1, &zero, &Row::Dense(&x), 1.0);
         assert_eq!(a.weights(), b.weights());
         assert_eq!(a.t, 5);
     }
@@ -136,7 +207,7 @@ mod tests {
     #[test]
     fn mu_merges_then_updates() {
         let (l, m1, m2, x) = setup();
-        let got = create_model(Variant::Mu, &l, m1.clone(), &m2, &Row::Dense(&x), 1.0);
+        let got = create_model(Variant::Mu, AVG, &l, m1.clone(), &m2, &Row::Dense(&x), 1.0);
         let mut expect = LinearModel::merge(&m1, &m2);
         l.update(&mut expect, &Row::Dense(&x), 1.0);
         assert_eq!(got.weights(), expect.weights());
@@ -146,7 +217,7 @@ mod tests {
     #[test]
     fn um_updates_both_with_same_example() {
         let (l, m1, m2, x) = setup();
-        let got = create_model(Variant::Um, &l, m1.clone(), &m2, &Row::Dense(&x), 1.0);
+        let got = create_model(Variant::Um, AVG, &l, m1.clone(), &m2, &Row::Dense(&x), 1.0);
         let mut u1 = m1;
         let mut u2 = m2;
         l.update(&mut u1, &Row::Dense(&x), 1.0);
@@ -157,12 +228,29 @@ mod tests {
     }
 
     #[test]
+    fn quorum_mu_votes_before_updating() {
+        let (l, _, _, x) = setup();
+        let m1 = LinearModel::from_weights(vec![1.0, -2.0], 4);
+        let m2 = LinearModel::from_weights(vec![3.0, 2.0], 2);
+        let got = create_model(
+            Variant::Mu, MergeMode::Quorum, &l, m1.clone(), &m2, &Row::Dense(&x), 1.0,
+        );
+        // quorum vote: agree on coord 0 (avg 2.0), disagree on coord 1 (0.0)
+        let mut expect = quorum_merge(&m1, &m2);
+        assert_eq!(expect.weights(), vec![2.0, 0.0]);
+        l.update(&mut expect, &Row::Dense(&x), 1.0);
+        assert_eq!(got.weights(), expect.weights());
+        assert_eq!(got.t, 5);
+    }
+
+    #[test]
     fn step_variant_equivalent_to_reference_for_all_variants() {
         use crate::util::rng::Rng;
         let mut rng = Rng::new(31);
         for _ in 0..60 {
             let d = 1 + rng.below_usize(12);
             let variant = *rng.pick(&[Variant::Rw, Variant::Mu, Variant::Um]);
+            let merge = *rng.pick(&[MergeMode::Average, MergeMode::Quorum]);
             let l = Learner::pegasos(0.05);
             let w1: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
             let w2: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
@@ -171,16 +259,87 @@ mod tests {
             let m1 = LinearModel::from_weights(w1, 3);
             let m2 = LinearModel::from_weights(w2, 8);
 
-            let expect = create_model(variant, &l, m1.clone(), &m2, &Row::Dense(&x), y);
+            let expect = create_model(variant, merge, &l, m1.clone(), &m2, &Row::Dense(&x), y);
             let mut last = m2.clone();
-            let got = create_model_step(variant, &l, m1.clone(), &mut last, &Row::Dense(&x), y);
+            let got =
+                create_model_step(variant, merge, &l, m1.clone(), &mut last, &Row::Dense(&x), y);
             for (a, b) in got.weights().iter().zip(expect.weights()) {
-                assert!((a - b).abs() < 1e-5, "{variant:?}: {a} vs {b}");
+                assert!((a - b).abs() < 1e-5, "{variant:?}/{merge:?}: {a} vs {b}");
             }
             assert_eq!(got.t, expect.t);
             // Algorithm 1 line 9: lastModel <- incoming
             assert_eq!(last.weights(), m1.weights());
             assert_eq!(last.t, m1.t);
+        }
+    }
+
+    #[test]
+    fn pairwise_step_matches_manual_reservoir_update() {
+        use crate::data::matrix::Matrix;
+        use crate::learning::pairwise::{offer, reservoir_new};
+        let auc = PairwiseAuc::new(0.1);
+        let train = Examples::Dense(Matrix::from_vec(
+            2,
+            2,
+            vec![1.0, 0.0, 0.0, 1.0],
+        ));
+        let mut res = reservoir_new(2);
+        offer(&mut res, 0, -1.0, 0); // opposite class: pairs with y = +1
+        offer(&mut res, 1, 1.0, 0); // same class: filtered out
+        let m1 = LinearModel::from_weights(vec![0.5, -0.5], 4);
+        let m2 = LinearModel::from_weights(vec![0.0, 0.25], 2);
+        let x = [0.0f32, 2.0];
+
+        for variant in [Variant::Rw, Variant::Mu, Variant::Um] {
+            let mut scratch = PairScratch::default();
+            let mut last = m2.clone();
+            let got = create_model_pairwise_step(
+                variant,
+                MergeMode::Average,
+                &auc,
+                m1.clone(),
+                &mut last,
+                &Row::Dense(&x),
+                1.0,
+                &res,
+                &train,
+                &mut scratch,
+            );
+            // reference: apply update_with_reservoir by hand per variant
+            let mut scratch2 = PairScratch::default();
+            let expect = match variant {
+                Variant::Rw => {
+                    let mut m = m1.clone();
+                    auc.update_with_reservoir(
+                        &mut m, &Row::Dense(&x), 1.0, &res, &train, &mut scratch2,
+                    );
+                    m
+                }
+                Variant::Mu => {
+                    let mut m = LinearModel::merge(&m1, &m2);
+                    auc.update_with_reservoir(
+                        &mut m, &Row::Dense(&x), 1.0, &res, &train, &mut scratch2,
+                    );
+                    m
+                }
+                Variant::Um => {
+                    let mut u1 = m1.clone();
+                    let mut u2 = m2.clone();
+                    auc.update_with_reservoir(
+                        &mut u1, &Row::Dense(&x), 1.0, &res, &train, &mut scratch2,
+                    );
+                    auc.update_with_reservoir(
+                        &mut u2, &Row::Dense(&x), 1.0, &res, &train, &mut scratch2,
+                    );
+                    LinearModel::merge(&u1, &u2)
+                }
+            };
+            for (a, b) in got.weights().iter().zip(expect.weights()) {
+                assert!((a - b).abs() < 1e-5, "{variant:?}: {a} vs {b}");
+            }
+            assert_eq!(got.t, expect.t);
+            assert!(got.t > m1.t.max(m2.t), "{variant:?}: opposite pair must step t");
+            assert_eq!(last.weights(), m1.weights(), "lastModel <- incoming");
         }
     }
 

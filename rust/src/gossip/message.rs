@@ -23,23 +23,33 @@ pub struct ModelMsg {
     pub t: u64,
     /// piggybacked peer-sampling descriptors (empty for oracle samplers)
     pub view: Vec<Descriptor>,
+    /// example reservoir riding with the model (pairwise objectives,
+    /// DESIGN.md §17): the packed `[seen, node0, y0, node1, y1, ...]` layout
+    /// of `learning/pairwise`, empty for pointwise learners.  Like `w`, this
+    /// buffer is recycled through the sending shard's
+    /// [`crate::util::pool::BufPool`] once consumed.
+    pub res: Vec<f32>,
 }
 
 /// Fixed per-frame overhead of the deployment wire format (net/wire.rs):
 /// u32 length prefix + u8 version + u64 src + u64 t + u32 weight count +
-/// u16 view count = 27 bytes.  Shared with the simulator's byte accounting
-/// so `RunStats::bytes_sent` matches what `net/wire::encode` actually puts
-/// on a socket.
-pub const WIRE_FRAME_OVERHEAD: usize = 4 + 1 + 8 + 8 + 4 + 2;
+/// u16 view count + u16 reservoir entry count = 29 bytes.  Shared with the
+/// simulator's byte accounting so `RunStats::bytes_sent` matches what
+/// `net/wire::encode` actually puts on a socket.
+pub const WIRE_FRAME_OVERHEAD: usize = 4 + 1 + 8 + 8 + 4 + 2 + 2;
 
 impl ModelMsg {
     /// Wire size in bytes of the full encoded frame:
-    /// `WIRE_FRAME_OVERHEAD + d * 4 + |view| * 16`.  Used by the
+    /// `WIRE_FRAME_OVERHEAD + d * 4 + |view| * 16 + reservoir bytes`, where
+    /// a non-empty reservoir adds a u32 `seen` counter plus 8 bytes
+    /// (u32 node + f32 label) per occupied slot.  Used by the
     /// message-complexity metrics (the paper's cost analysis in Section IV)
     /// and pinned to `net/wire::encode(&m).len()` exactly by test.  The lazy
     /// `scale` does not count: it is folded into the weights on a real wire.
     pub fn wire_bytes(&self) -> usize {
-        WIRE_FRAME_OVERHEAD + self.w.len() * 4 + self.view.len() * 16
+        let occ = crate::learning::pairwise::occupancy(&self.res);
+        let res_bytes = if occ > 0 { 4 + 8 * occ } else { 0 };
+        WIRE_FRAME_OVERHEAD + self.w.len() * 4 + self.view.len() * 16 + res_bytes
     }
 }
 
@@ -55,10 +65,39 @@ mod tests {
             scale: 1.0,
             t: 3,
             view: vec![Descriptor { node: 1, ts: 2 }; 20],
+            res: Vec::new(),
         };
         // regression: the old estimate (4d + 8) omitted the length prefix,
         // version byte, src, and the d/view count fields — 19 bytes/message
-        assert_eq!(WIRE_FRAME_OVERHEAD, 27);
-        assert_eq!(msg.wire_bytes(), 27 + 40 + 320);
+        assert_eq!(WIRE_FRAME_OVERHEAD, 29);
+        assert_eq!(msg.wire_bytes(), 29 + 40 + 320);
+    }
+
+    #[test]
+    fn wire_size_counts_reservoir_entries() {
+        use crate::learning::pairwise::{offer, reservoir_new};
+        let mut res = reservoir_new(4);
+        offer(&mut res, 7, 1.0, 0);
+        offer(&mut res, 9, -1.0, 0);
+        let msg = ModelMsg {
+            src: 0,
+            w: vec![0.0; 10],
+            scale: 1.0,
+            t: 3,
+            view: Vec::new(),
+            res,
+        };
+        // u32 seen + 2 × (u32 node + f32 label) = 20 reservoir bytes
+        assert_eq!(msg.wire_bytes(), 29 + 40 + 4 + 16);
+        // an allocated-but-empty reservoir costs nothing beyond the count
+        let empty = ModelMsg {
+            src: 0,
+            w: vec![0.0; 10],
+            scale: 1.0,
+            t: 0,
+            view: Vec::new(),
+            res: reservoir_new(4),
+        };
+        assert_eq!(empty.wire_bytes(), 29 + 40);
     }
 }

@@ -35,6 +35,7 @@ use crate::eval::tracker::Curve;
 use crate::gossip::create_model::Variant;
 use crate::gossip::sharded;
 use crate::learning::adaline::Learner;
+use crate::learning::pairwise::MergeMode;
 use crate::p2p::overlay::SamplerConfig;
 use crate::p2p::topology::{TopologyMetrics, TopologySpec};
 use crate::scenario::Scenario;
@@ -53,13 +54,23 @@ pub struct EvalConfig {
     pub voting: bool,
     /// measure mean pairwise cosine similarity of sampled models
     pub similarity: bool,
+    /// measure test-set AUC (Mann-Whitney) of the sampled peers' models —
+    /// auto-enabled by the configuration layer for the pairwise ranking
+    /// objective (DESIGN.md §17)
+    pub auc: bool,
     /// cycles at which to measure; empty = log-spaced over the run
     pub at_cycles: Vec<u64>,
 }
 
 impl Default for EvalConfig {
     fn default() -> Self {
-        EvalConfig { n_peers: 100, voting: false, similarity: false, at_cycles: Vec::new() }
+        EvalConfig {
+            n_peers: 100,
+            voting: false,
+            similarity: false,
+            auc: false,
+            at_cycles: Vec::new(),
+        }
     }
 }
 
@@ -149,6 +160,14 @@ impl ExecPath {
 pub struct ProtocolConfig {
     pub variant: Variant,
     pub learner: Learner,
+    /// MERGE semantics for MU/UM: coordinate-wise averaging (Algorithm 3,
+    /// the paper's choice) or the quorum vote that zeroes sign-disagreeing
+    /// coordinates (DESIGN.md §17).  RW never merges, so it is unaffected.
+    pub merge: MergeMode,
+    /// example-reservoir capacity K riding with each walking model — only
+    /// consulted when `learner` is the pairwise AUC objective; pointwise
+    /// learners allocate no reservoirs
+    pub reservoir: usize,
     /// model cache capacity (paper: 10)
     pub cache_size: usize,
     /// gossip period Δ in ticks
@@ -199,6 +218,8 @@ impl ProtocolConfig {
         ProtocolConfig {
             variant: Variant::Mu,
             learner: Learner::pegasos(1e-2),
+            merge: MergeMode::Average,
+            reservoir: crate::learning::pairwise::DEFAULT_CAPACITY,
             cache_size: 10,
             delta: 1000,
             cycles,
@@ -441,6 +462,35 @@ mod tests {
         let first = res.curve.points.first().unwrap().err_mean;
         let last = res.curve.final_error();
         assert!(last < first && last < 0.25, "{first} -> {last}");
+    }
+
+    #[test]
+    fn pairwise_auc_gossip_learns_to_rank() {
+        let ds = urls_like(21, Scale(0.02));
+        let mut cfg = quick_cfg(60);
+        cfg.learner = Learner::pairwise_auc(1e-2);
+        cfg.reservoir = 8;
+        cfg.eval.auc = true;
+        let res = run(cfg, &ds);
+        let first = res.curve.points.first().unwrap();
+        let last = res.curve.points.last().unwrap();
+        let (a0, a1) = (first.auc.unwrap(), last.auc.unwrap());
+        assert!(a1 > a0, "AUC should rise: {a0} -> {a1}");
+        assert!(a1 > 0.7, "final AUC too low: {a1}");
+        // reservoirs ride on the wire: frames are larger than pointwise ones
+        assert!(res.stats.bytes_sent > 0);
+    }
+
+    #[test]
+    fn quorum_merge_converges() {
+        let ds = urls_like(22, Scale(0.02));
+        let mut cfg = quick_cfg(60);
+        cfg.merge = MergeMode::Quorum;
+        let res = run(cfg, &ds);
+        let first = res.curve.points.first().unwrap().err_mean;
+        let last = res.curve.final_error();
+        assert!(last < first, "{first} -> {last}");
+        assert!(last < 0.3, "final {last}");
     }
 
     #[test]

@@ -58,6 +58,7 @@ use crate::gossip::predict::Predictor;
 use crate::gossip::protocol::{ExecMode, ProtocolConfig, RunResult, RunStats};
 use crate::gossip::state::ModelStore;
 use crate::learning::linear::LinearModel;
+use crate::learning::pairwise::{self, reservoir_len};
 use crate::p2p::overlay::{PeerSampler, SamplerConfig};
 use crate::p2p::topology::Topology;
 use crate::scenario::driver::{resolve_churn_schedule, CompiledScenario, Mutation, ScenarioDriver};
@@ -114,6 +115,10 @@ struct Shared<'a> {
     owned_csr: Option<Csr>,
     sparse: bool,
     op: StepOp,
+    /// example-reservoir capacity K riding with each walking model — 0 for
+    /// pointwise learners, `cfg.reservoir` for the pairwise AUC objective
+    /// (DESIGN.md §17)
+    res_cap: usize,
     members0: usize,
     n_univ: usize,
     /// shard range bounds: shard `i` owns nodes `[bounds[i], bounds[i+1])`
@@ -142,6 +147,7 @@ struct EvalOut {
     errs: Vec<(usize, f64)>,
     votes: Vec<(usize, f64)>,
     models: Vec<(usize, LinearModel)>,
+    aucs: Vec<(usize, f64)>,
     sent: u64,
 }
 
@@ -235,7 +241,7 @@ impl<'a, B: Backend> Runner<'a, B> {
             lo,
             hi,
             sh,
-            store: ModelStore::new(rows, d),
+            store: ModelStore::with_reservoirs(rows, d, sh.res_cap),
             caches,
             last_restart: vec![0; rows],
             online: sh.churn_online0.clone(),
@@ -458,12 +464,22 @@ impl<'a, B: Backend> Runner<'a, B> {
         // never leak into a send
         let mut w = self.pool.get(self.store.d());
         self.store.write_freshest_raw(li, &mut w);
+        // the reservoir rides with the walking model; its buffer comes from
+        // the same pool and is overwritten in full, like the weights
+        let res = if self.sh.res_cap > 0 {
+            let mut r = self.pool.get(reservoir_len(self.sh.res_cap));
+            self.store.write_res_raw(li, &mut r);
+            r
+        } else {
+            Vec::new()
+        };
         let msg = ModelMsg {
             src: node,
             w,
             scale: self.store.freshest_scale(li),
             t: self.store.freshest_t(li) as u64,
             view: self.sampler.payload(node, now),
+            res,
         };
         self.stats.messages_sent += 1;
         self.stats.bytes_sent += msg.wire_bytes() as u64;
@@ -492,10 +508,16 @@ impl<'a, B: Backend> Runner<'a, B> {
             Fate::Dropped => {
                 self.stats.messages_dropped += 1;
                 self.pool.put(msg.w);
+                if !msg.res.is_empty() {
+                    self.pool.put(msg.res);
+                }
             }
             Fate::Blocked => {
                 self.stats.messages_blocked += 1;
                 self.pool.put(msg.w);
+                if !msg.res.is_empty() {
+                    self.pool.put(msg.res);
+                }
             }
         }
     }
@@ -535,6 +557,9 @@ impl<'a, B: Backend> Runner<'a, B> {
                 self.stats.messages_lost_offline += 1;
                 let src = msg.src;
                 self.recycle(msg.w, src);
+                if !msg.res.is_empty() {
+                    self.recycle(msg.res, src);
+                }
                 continue;
             }
             self.sampler.on_receive(dst, &msg.view);
@@ -547,11 +572,15 @@ impl<'a, B: Backend> Runner<'a, B> {
             _ => 1,
         };
         let sparse = self.sh.sparse;
+        let pairwise = self.sh.res_cap > 0;
         let mut start = 0;
         while start < live.len() {
             let end = (start + MAX_BATCH_ROWS).min(live.len());
             let b = end - start;
             self.batch.resize_for(b, d, sparse);
+            if pairwise {
+                self.batch.begin_pair_rows();
+            }
             for (row, (dst, msg)) in live[start..end].iter().enumerate() {
                 let dst = *dst;
                 let r = row * d..(row + 1) * d;
@@ -583,6 +612,26 @@ impl<'a, B: Backend> Runner<'a, B> {
                 }
                 // concept drift re-labels: the sign flips with the scenario
                 self.batch.y[row] = self.drift_sign * self.sh.data.train_y[dst];
+                if pairwise {
+                    // stage the walking reservoir's opposite-class partners
+                    // in reservoir order (the kernel applies every staged
+                    // pair, so the class filter lives here — bitwise the
+                    // same filter as the scalar reference)
+                    let yloc = self.batch.y[row];
+                    for (node, yj) in pairwise::entries(&msg.res) {
+                        if yj * yloc >= 0.0 {
+                            continue;
+                        }
+                        if sparse {
+                            let (idx, val) = self.sh.csr().row(node as usize);
+                            self.batch.push_pair_entry_sparse(idx, val);
+                        } else {
+                            self.batch
+                                .push_pair_entry_dense(&self.sh.data.train.row(node as usize));
+                        }
+                    }
+                    self.batch.seal_pair_row();
+                }
             }
             self.backend.step(&self.sh.op, &mut self.batch)?;
             self.stats.engine_calls += 1;
@@ -590,7 +639,7 @@ impl<'a, B: Backend> Runner<'a, B> {
             if sparse {
                 self.stats.sparse_rows += b as u64;
             }
-            for (row, (dst, msg)) in live[start..end].iter().enumerate() {
+            for (row, (dst, msg)) in live[start..end].iter_mut().enumerate() {
                 let li = *dst - lo;
                 let r = row * d..(row + 1) * d;
                 // sparse results land in place in w1 (scale in out_s); dense
@@ -613,14 +662,27 @@ impl<'a, B: Backend> Runner<'a, B> {
                 self.store.set_freshest_scaled(li, out, out_s, out_t);
                 // lastModel <- incoming (Algorithm 1 line 9)
                 self.store.set_last_scaled(li, &msg.w, msg.scale, msg.t as f32);
+                if pairwise {
+                    // the created model inherits the walking reservoir plus
+                    // the receiver's local example (drift-adjusted label).
+                    // Exactly one draw per delivery from the receiver's own
+                    // stream, consumed in keyed delivery order — reservoir
+                    // contents stay bit-for-bit shard-count independent
+                    let draw = self.node_rngs[li].next_u64();
+                    pairwise::offer(&mut msg.res, *dst as u32, self.batch.y[row], draw);
+                    self.store.set_res(li, &msg.res);
+                }
             }
             start = end;
         }
         // every message is fully consumed (copied into the batch and the
-        // store) — send the weight buffers back to their allocating shards
+        // store) — send the buffers back to their allocating shards
         for (_, msg) in live.drain(..) {
             let src = msg.src;
             self.recycle(msg.w, src);
+            if !msg.res.is_empty() {
+                self.recycle(msg.res, src);
+            }
         }
         self.live = live;
         Ok(())
@@ -660,7 +722,26 @@ impl<'a, B: Backend> Runner<'a, B> {
         } else {
             Vec::new()
         };
-        Ok(EvalOut { errs, votes, models, sent: self.stats.messages_sent })
+        let aucs = if self.sh.cfg.eval.auc {
+            // rank the (possibly drift-flipped) test labels by each peer's
+            // raw margin — Mann-Whitney AUC, per-model and therefore
+            // grouping-independent like the error counts
+            let mut w = vec![0.0f32; self.store.d()];
+            let mut scores = vec![0.0f32; test.n()];
+            self.my_eval
+                .iter()
+                .map(|&(pos, p)| {
+                    self.store.write_freshest_into(p - lo, &mut w);
+                    for (i, s) in scores.iter_mut().enumerate() {
+                        *s = test.row(i).dot(&w);
+                    }
+                    (pos, eval::auc(&scores, y))
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+        Ok(EvalOut { errs, votes, models, aucs, sent: self.stats.messages_sent })
     }
 
     /// Final flush; hand back this runner's counters.
@@ -952,6 +1033,7 @@ fn assemble_point(sh: &Shared<'_>, cycle: u64, outs: Vec<EvalOut>) -> eval::Eval
     let mut errs = vec![0.0f64; sh.eval_peers.len()];
     let mut votes: Vec<(usize, f64)> = Vec::new();
     let mut models: Vec<(usize, LinearModel)> = Vec::new();
+    let mut aucs: Vec<(usize, f64)> = Vec::new();
     let mut sent = 0u64;
     for out in outs {
         for (pos, e) in out.errs {
@@ -959,6 +1041,7 @@ fn assemble_point(sh: &Shared<'_>, cycle: u64, outs: Vec<EvalOut>) -> eval::Eval
         }
         votes.extend(out.votes);
         models.extend(out.models);
+        aucs.extend(out.aucs);
         sent += out.sent;
     }
     let vote_errs: Option<Vec<f64>> = sh.cfg.eval.voting.then(|| {
@@ -970,7 +1053,11 @@ fn assemble_point(sh: &Shared<'_>, cycle: u64, outs: Vec<EvalOut>) -> eval::Eval
         let refs: Vec<&LinearModel> = models.iter().map(|(_, m)| m).collect();
         eval::mean_pairwise_cosine(&refs)
     });
-    point_from_errors(cycle, &errs, vote_errs.as_deref(), similarity, sent)
+    let auc_vals: Option<Vec<f64>> = sh.cfg.eval.auc.then(|| {
+        aucs.sort_by_key(|&(pos, _)| pos);
+        aucs.iter().map(|&(_, v)| v).collect()
+    });
+    point_from_errors(cycle, &errs, vote_errs.as_deref(), similarity, auc_vals.as_deref(), sent)
 }
 
 /// Build the shared setup for a run: compiled scenario, churn schedule,
@@ -1058,7 +1145,8 @@ fn build_shared<'a>(
         flipped_y,
         owned_csr,
         sparse,
-        op: StepOp::for_protocol(&cfg.learner, cfg.variant),
+        op: StepOp::for_protocol(&cfg.learner, cfg.variant, cfg.merge),
+        res_cap: if cfg.learner.is_pairwise() { cfg.reservoir } else { 0 },
         members0,
         n_univ,
         bounds,

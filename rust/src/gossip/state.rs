@@ -26,6 +26,7 @@
 //! evaluation/cache boundary via [`ModelStore::freshest_model`].
 
 use crate::learning::linear::LinearModel;
+use crate::learning::pairwise::reservoir_len;
 use std::ops::Range;
 
 #[derive(Clone, Debug)]
@@ -38,11 +39,23 @@ pub struct ModelStore {
     last_w: Vec<f32>,
     last_s: Vec<f32>,
     last_t: Vec<f32>,
+    /// reservoir capacity K (0 = pointwise learner, no reservoir rows)
+    res_cap: usize,
+    /// packed `[n, 1 + 2K]` example reservoirs riding with the freshest
+    /// models (pairwise objectives, DESIGN.md §17); empty when `res_cap == 0`.
+    /// `lastModel` needs no reservoir — only the walking model trains.
+    freshest_res: Vec<f32>,
 }
 
 impl ModelStore {
     /// INITMODEL (Algorithm 3) for every node: zero weights, scale 1, t = 0.
     pub fn new(n: usize, d: usize) -> Self {
+        Self::with_reservoirs(n, d, 0)
+    }
+
+    /// INITMODEL plus an empty capacity-`res_cap` example reservoir per node
+    /// (the all-zero buffer *is* the empty reservoir — `seen = 0`).
+    pub fn with_reservoirs(n: usize, d: usize, res_cap: usize) -> Self {
         ModelStore {
             n,
             d,
@@ -52,6 +65,8 @@ impl ModelStore {
             last_w: vec![0.0; n * d],
             last_s: vec![1.0; n],
             last_t: vec![0.0; n],
+            res_cap,
+            freshest_res: vec![0.0; if res_cap > 0 { n * reservoir_len(res_cap) } else { 0 }],
         }
     }
 
@@ -85,6 +100,42 @@ impl ModelStore {
     #[inline]
     pub fn freshest_t(&self, i: usize) -> f32 {
         self.freshest_t[i]
+    }
+
+    /// Reservoir capacity K (0 when the store carries no reservoirs).
+    #[inline]
+    pub fn res_cap(&self) -> usize {
+        self.res_cap
+    }
+
+    #[inline]
+    fn res_row(&self, i: usize) -> Range<usize> {
+        debug_assert!(self.res_cap > 0 && i < self.n);
+        let len = reservoir_len(self.res_cap);
+        i * len..(i + 1) * len
+    }
+
+    /// Packed example reservoir riding with node `i`'s freshest model.
+    /// Panics (debug) when the store was built without reservoirs.
+    #[inline]
+    pub fn res(&self, i: usize) -> &[f32] {
+        &self.freshest_res[self.res_row(i)]
+    }
+
+    /// Overwrite node `i`'s reservoir row; `res` must already be encoded at
+    /// this store's capacity (`set_capacity` normalizes wire-decoded ones).
+    #[inline]
+    pub fn set_res(&mut self, i: usize, res: &[f32]) {
+        let r = self.res_row(i);
+        self.freshest_res[r].copy_from_slice(res);
+    }
+
+    /// Copy node `i`'s reservoir row into the possibly-recycled buffer `out`
+    /// (resized first, every element overwritten) — the pooled
+    /// message-staging path, mirroring [`ModelStore::write_freshest_raw`].
+    pub fn write_res_raw(&self, i: usize, out: &mut Vec<f32>) {
+        out.resize(reservoir_len(self.res_cap), 0.0);
+        out.copy_from_slice(&self.freshest_res[self.res_row(i)]);
     }
 
     /// Unscaled weight row of the last model received at node `i`
@@ -146,6 +197,10 @@ impl ModelStore {
         self.last_w.resize(self.n * self.d, 0.0);
         self.last_s.resize(self.n, 1.0);
         self.last_t.resize(self.n, 0.0);
+        if self.res_cap > 0 {
+            // zeroed rows are valid empty reservoirs
+            self.freshest_res.resize(self.n * reservoir_len(self.res_cap), 0.0);
+        }
     }
 
     /// Reset node `i` back to INITMODEL state (restart schedules, churn with
@@ -158,6 +213,10 @@ impl ModelStore {
         self.last_s[i] = 1.0;
         self.freshest_t[i] = 0.0;
         self.last_t[i] = 0.0;
+        if self.res_cap > 0 {
+            let rr = self.res_row(i);
+            self.freshest_res[rr].fill(0.0);
+        }
     }
 
     /// Write node `i`'s **materialized** freshest weights into `out` (the
@@ -274,6 +333,26 @@ mod tests {
         let mut short = vec![5.0f32; 1];
         s.write_freshest_raw(0, &mut short);
         assert_eq!(short, vec![4.0, -8.0, 2.0]);
+    }
+
+    #[test]
+    fn reservoir_rows_follow_grow_and_reset() {
+        use crate::learning::pairwise::{occupancy, offer, reservoir_new};
+        let mut s = ModelStore::with_reservoirs(2, 2, 3);
+        assert_eq!(s.res_cap(), 3);
+        assert_eq!(occupancy(s.res(0)), 0, "zeroed row is an empty reservoir");
+        let mut r = reservoir_new(3);
+        offer(&mut r, 42, -1.0, 0);
+        s.set_res(1, &r);
+        assert_eq!(occupancy(s.res(1)), 1);
+        assert_eq!(occupancy(s.res(0)), 0, "neighbour untouched");
+        s.grow(2);
+        assert_eq!(occupancy(s.res(1)), 1, "grow keeps existing reservoirs");
+        assert_eq!(occupancy(s.res(3)), 0, "grown rows start empty");
+        s.reset(1);
+        assert_eq!(occupancy(s.res(1)), 0, "reset clears the reservoir");
+        // pointwise stores allocate nothing
+        assert_eq!(ModelStore::new(4, 2).res_cap(), 0);
     }
 
     #[test]

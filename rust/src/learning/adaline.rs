@@ -33,6 +33,7 @@ pub enum Learner {
     Pegasos(super::pegasos::Pegasos),
     Adaline(Adaline),
     LogReg(super::logreg::LogReg),
+    PairwiseAuc(super::pairwise::PairwiseAuc),
 }
 
 impl Learner {
@@ -48,12 +49,36 @@ impl Learner {
         Learner::LogReg(super::logreg::LogReg::new(lambda))
     }
 
+    pub fn pairwise_auc(lambda: f32) -> Self {
+        Learner::PairwiseAuc(super::pairwise::PairwiseAuc::new(lambda))
+    }
+
+    /// One pointwise step.  [`Learner::PairwiseAuc`] has no pointwise form —
+    /// its step pairs the local example against the model's reservoir
+    /// (`pairwise::PairwiseAuc::update_with_reservoir`), so here it is a
+    /// deliberate no-op (no decay, no `t` bump).
     #[inline]
     pub fn update(&self, m: &mut LinearModel, x: &Row<'_>, y: f32) {
         match self {
             Learner::Pegasos(p) => p.update(m, x, y),
             Learner::Adaline(a) => a.update(m, x, y),
             Learner::LogReg(l) => l.update(m, x, y),
+            Learner::PairwiseAuc(_) => {}
+        }
+    }
+
+    /// Whether steps consume the walking model's example reservoir.
+    pub fn is_pairwise(&self) -> bool {
+        matches!(self, Learner::PairwiseAuc(_))
+    }
+
+    /// The pairwise learner itself, when this is [`Learner::PairwiseAuc`] —
+    /// scalar paths (deployment runtime, reference tests) call its
+    /// reservoir-consuming step directly.
+    pub fn as_pairwise(&self) -> Option<&super::pairwise::PairwiseAuc> {
+        match self {
+            Learner::PairwiseAuc(p) => Some(p),
+            _ => None,
         }
     }
 
@@ -62,6 +87,7 @@ impl Learner {
             Learner::Pegasos(_) => "pegasos",
             Learner::Adaline(_) => "adaline",
             Learner::LogReg(_) => "logreg",
+            Learner::PairwiseAuc(_) => "pairwise-auc",
         }
     }
 }

@@ -1,11 +1,14 @@
 //! Online learners and the linear-model algebra (Algorithm 3): Pegasos,
-//! Adaline, and merge-by-averaging.
+//! Adaline, merge-by-averaging, and the pairwise AUC family (reservoirs +
+//! quorum merge, DESIGN.md §17).
 pub mod adaline;
 pub mod linear;
 pub mod logreg;
+pub mod pairwise;
 pub mod pegasos;
 
 pub use adaline::{Adaline, Learner};
 pub use linear::LinearModel;
 pub use logreg::LogReg;
+pub use pairwise::{MergeMode, PairwiseAuc};
 pub use pegasos::Pegasos;

@@ -1,0 +1,489 @@
+//! Pairwise-objective gossip (DESIGN.md §17): AUC ranking via per-model
+//! example reservoirs and a quorum-vote merge mode.
+//!
+//! The paper's learners are strictly pointwise — each random-walk step
+//! consumes the one local example.  Pairwise objectives (AUC ranking, "On
+//! Gossip Algorithms for Machine Learning with Pairwise Objectives",
+//! PAPERS.md) need *two* examples from different nodes per step.  The fit
+//! with the model-walk machinery is the U-statistic trick: every walking
+//! model carries a small **reservoir** of previously visited examples, so a
+//! step at node `i` can pair the local `(x, y)` against each reservoir entry
+//! of the opposite class.
+//!
+//! Three pieces live here:
+//!
+//! 1. the reservoir encoding + Algorithm-R `offer` (seed-deterministic: one
+//!    RNG draw per offer, keyed off the destination node's RNG stream);
+//! 2. the [`PairwiseAuc`] learner — one Pegasos hinge step on the difference
+//!    vector `z = y (x − x_j)` with implicit label `+1` per opposite-class
+//!    reservoir entry (the hinge ranking loss `[1 − (s(x⁺) − s(x⁻))]₊`);
+//! 3. the [`MergeMode::Quorum`] coordinate-wise merge (majority-vote rumor
+//!    spreading style): where two models agree in sign, average; where they
+//!    disagree, abstain (zero).
+//!
+//! The scalar paths here are the reference semantics; the engine kernels in
+//! `engine/native.rs` reproduce them bit-for-bit on `StepBatch` rows (the
+//! same contract the pointwise kernels honor).
+//!
+//! ## Reservoir encoding
+//!
+//! A reservoir is a plain `Vec<f32>` so it can ride the existing pooled
+//! weight-buffer machinery (`util/pool.rs`) and the wire layer without any
+//! new buffer type:
+//!
+//! ```text
+//! [ seen_bits, node0_bits, y0, node1_bits, y1, ... ]   len = 1 + 2·K
+//! ```
+//!
+//! `seen_bits` and `node*_bits` are `u32` values bit-cast into the `f32`
+//! slots (`f32::from_bits`) — exact for the full `u32` range; `y*` are real
+//! floats.  The live entry count is `min(seen, K)` — no explicit length
+//! field.  A freshly pooled zero buffer is a valid empty reservoir
+//! (`from_bits(0) == 0 seen`).
+
+use crate::data::dataset::{Examples, Row};
+use crate::learning::linear::LinearModel;
+use crate::learning::pegasos::Pegasos;
+
+/// Default reservoir capacity K (paper-default cache is 10; K must stay
+/// within it — validated in `config/`).
+pub const DEFAULT_CAPACITY: usize = 8;
+
+/// How two models combine in CREATEMODEL (Algorithm 2 Mu/Um).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum MergeMode {
+    /// The paper's weighted average: `w = (w1 + w2)/2`, `t = max`.
+    #[default]
+    Average,
+    /// Quorum vote: coordinate-wise, average where the two models agree in
+    /// sign, zero (abstain) where they disagree.  `t = max`.
+    Quorum,
+}
+
+impl MergeMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            MergeMode::Average => "average",
+            MergeMode::Quorum => "quorum",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<MergeMode> {
+        match s {
+            "average" | "avg" => Some(MergeMode::Average),
+            "quorum" => Some(MergeMode::Quorum),
+            _ => None,
+        }
+    }
+}
+
+// ---- reservoir ---------------------------------------------------------
+
+/// An empty reservoir of capacity `k`.
+pub fn reservoir_new(k: usize) -> Vec<f32> {
+    vec![0.0; reservoir_len(k)]
+}
+
+/// Buffer length for capacity `k`: `1 + 2k` floats.
+#[inline]
+pub fn reservoir_len(k: usize) -> usize {
+    1 + 2 * k
+}
+
+/// Capacity K of an encoded reservoir (0 for an empty/absent buffer).
+#[inline]
+pub fn capacity(res: &[f32]) -> usize {
+    res.len().saturating_sub(1) / 2
+}
+
+/// Total examples ever offered.
+#[inline]
+pub fn seen(res: &[f32]) -> u32 {
+    if res.is_empty() {
+        0
+    } else {
+        res[0].to_bits()
+    }
+}
+
+/// Live entry count, `min(seen, K)`.
+#[inline]
+pub fn occupancy(res: &[f32]) -> usize {
+    (seen(res) as usize).min(capacity(res))
+}
+
+/// Entry `i` as `(origin node, label)`.
+#[inline]
+pub fn entry(res: &[f32], i: usize) -> (u32, f32) {
+    (res[1 + 2 * i].to_bits(), res[2 + 2 * i])
+}
+
+fn set_entry(res: &mut [f32], i: usize, node: u32, y: f32) {
+    res[1 + 2 * i] = f32::from_bits(node);
+    res[2 + 2 * i] = y;
+}
+
+/// Iterator over the live `(node, y)` entries.
+pub fn entries(res: &[f32]) -> impl Iterator<Item = (u32, f32)> + '_ {
+    (0..occupancy(res)).map(move |i| entry(res, i))
+}
+
+/// Offer `(node, y)` into the reservoir — Algorithm R with the caller's RNG
+/// draw.  Consumes **exactly one** draw per offer regardless of outcome, so
+/// the per-node draw count (and with it shard-count determinism) depends
+/// only on the node's delivery sequence, never on reservoir contents:
+///
+/// ```text
+/// seen' = seen + 1
+/// if seen < K:            slot seen        (fill phase)
+/// else: j = draw % seen'; if j < K: slot j (replacement phase)
+/// ```
+pub fn offer(res: &mut [f32], node: u32, y: f32, draw: u64) {
+    let k = capacity(res);
+    if k == 0 {
+        return;
+    }
+    let s = seen(res);
+    let s1 = s.wrapping_add(1);
+    res[0] = f32::from_bits(s1);
+    if (s as usize) < k {
+        set_entry(res, s as usize, node, y);
+    } else {
+        let j = (draw % s1 as u64) as usize;
+        if j < k {
+            set_entry(res, j, node, y);
+        }
+    }
+}
+
+/// Rebuild a reservoir buffer from its wire fields, at exactly
+/// `entries.len()` capacity — the decode half of the reservoir tail
+/// (net/wire.rs).  Receivers normalize to their configured capacity with
+/// [`set_capacity`] before offering into it.
+pub fn from_entries(seen: u32, entries: &[(u32, f32)]) -> Vec<f32> {
+    let mut res = reservoir_new(entries.len());
+    res[0] = f32::from_bits(seen);
+    for (i, &(node, y)) in entries.iter().enumerate() {
+        set_entry(&mut res, i, node, y);
+    }
+    res
+}
+
+/// Re-encode a reservoir to capacity `k`, preserving `seen` and the first
+/// `min(occupancy, k)` entries.  The wire format carries only the live
+/// entries, so a decoded reservoir arrives at its occupancy, not at the
+/// configured capacity — receivers normalize with this before offering.
+pub fn set_capacity(res: &mut Vec<f32>, k: usize) {
+    if capacity(res) == k && res.len() == reservoir_len(k) {
+        return;
+    }
+    let s = seen(res);
+    let live: Vec<(u32, f32)> = entries(res).take(k).collect();
+    res.clear();
+    res.resize(reservoir_len(k), 0.0);
+    res[0] = f32::from_bits(s);
+    for (i, (node, y)) in live.into_iter().enumerate() {
+        set_entry(res, i, node, y);
+    }
+}
+
+// ---- pair-difference rows ----------------------------------------------
+
+/// Dense difference row `z = y (x − x_j)` into `out` (resized to `d`).
+///
+/// This is the one construction of `z` shared by the scalar reference path
+/// and the engine's dense pairwise kernel, so both see identical floats.
+pub fn dense_pair_diff(y: f32, x: &[f32], xj: &[f32], out: &mut Vec<f32>) {
+    out.clear();
+    out.extend(x.iter().zip(xj).map(|(&a, &b)| y * (a - b)));
+}
+
+/// Sparse difference row `z = y (x − x_j)` by merging the two sorted index
+/// lists into `(out_idx, out_val)` — O(nnz(x) + nnz(x_j)).  Shared by the
+/// scalar reference path and the engine's sparse pairwise kernel.
+pub fn sparse_pair_diff(
+    y: f32,
+    x_idx: &[u32],
+    x_val: &[f32],
+    xj_idx: &[u32],
+    xj_val: &[f32],
+    out_idx: &mut Vec<u32>,
+    out_val: &mut Vec<f32>,
+) {
+    out_idx.clear();
+    out_val.clear();
+    let (mut a, mut b) = (0usize, 0usize);
+    while a < x_idx.len() || b < xj_idx.len() {
+        let ia = x_idx.get(a).copied().unwrap_or(u32::MAX);
+        let ib = xj_idx.get(b).copied().unwrap_or(u32::MAX);
+        if ia < ib {
+            out_idx.push(ia);
+            out_val.push(y * x_val[a]);
+            a += 1;
+        } else if ib < ia {
+            out_idx.push(ib);
+            out_val.push(y * -xj_val[b]);
+            b += 1;
+        } else {
+            out_idx.push(ia);
+            out_val.push(y * (x_val[a] - xj_val[b]));
+            a += 1;
+            b += 1;
+        }
+    }
+}
+
+// ---- the learner -------------------------------------------------------
+
+/// Pairwise hinge AUC learner: one Pegasos step on `z = y (x − x_j)` with
+/// implicit label `+1` for each reservoir entry `(x_j, y_j)` of the opposite
+/// class.  The hinge on `z` is the ranking loss `[1 − (s(x⁺) − s(x⁻))]₊`
+/// regardless of which of the two examples is local.
+///
+/// With zero opposite-class entries the step is a complete no-op — no decay,
+/// no `t` bump — so a model walking through a single-class region is
+/// untouched until it meets the other class (logistic ranking is deferred;
+/// the hinge is the GADGET-SVM-compatible choice).
+#[derive(Clone, Copy, Debug)]
+pub struct PairwiseAuc {
+    pub lambda: f32,
+}
+
+impl PairwiseAuc {
+    pub fn new(lambda: f32) -> Self {
+        assert!(lambda > 0.0, "lambda must be positive");
+        PairwiseAuc { lambda }
+    }
+
+    /// Scalar reference step (the deployment runtime's per-node path; the
+    /// engine kernels mirror it on `StepBatch` rows).  `train` resolves
+    /// reservoir origin nodes to their feature rows.
+    pub fn update_with_reservoir(
+        &self,
+        m: &mut LinearModel,
+        x: &Row<'_>,
+        y: f32,
+        res: &[f32],
+        train: &Examples,
+        scratch: &mut PairScratch,
+    ) {
+        let peg = Pegasos::new(self.lambda);
+        for (node, yj) in entries(res) {
+            if yj * y >= 0.0 {
+                continue;
+            }
+            let xj = train.row(node as usize);
+            match (x, &xj) {
+                (Row::Sparse(xi, xv), Row::Sparse(ji, jv)) => {
+                    sparse_pair_diff(y, xi, xv, ji, jv, &mut scratch.idx, &mut scratch.val);
+                    peg.update(m, &Row::Sparse(&scratch.idx, &scratch.val), 1.0);
+                }
+                _ => {
+                    // mixed or dense storage: go through dense z
+                    let d = m.dim();
+                    scratch.xd.resize(d, 0.0);
+                    x.write_dense(&mut scratch.xd);
+                    scratch.jd.resize(d, 0.0);
+                    xj.write_dense(&mut scratch.jd);
+                    dense_pair_diff(y, &scratch.xd, &scratch.jd, &mut scratch.z);
+                    peg.update(m, &Row::Dense(&scratch.z), 1.0);
+                }
+            }
+        }
+    }
+}
+
+/// Reusable buffers for [`PairwiseAuc::update_with_reservoir`].
+#[derive(Default)]
+pub struct PairScratch {
+    pub idx: Vec<u32>,
+    pub val: Vec<f32>,
+    pub xd: Vec<f32>,
+    pub jd: Vec<f32>,
+    pub z: Vec<f32>,
+}
+
+// ---- quorum merge ------------------------------------------------------
+
+/// One coordinate of the quorum vote over effective (scale-folded) weights.
+#[inline]
+pub fn quorum_coord(a: f32, b: f32) -> f32 {
+    if a * b > 0.0 {
+        0.5 * (a + b)
+    } else {
+        0.0
+    }
+}
+
+/// Quorum-vote MERGE: sign-agreeing coordinates average, disagreeing ones
+/// zero out; `t = max` exactly like the averaging merge.
+pub fn quorum_merge(a: &LinearModel, b: &LinearModel) -> LinearModel {
+    debug_assert_eq!(a.dim(), b.dim());
+    let (wa, wb) = (a.weights(), b.weights());
+    let v: Vec<f32> = wa.iter().zip(&wb).map(|(&p, &q)| quorum_coord(p, q)).collect();
+    LinearModel::from_weights(v, a.t.max(b.t))
+}
+
+/// In-place variant mirroring [`LinearModel::merge_from`].
+pub fn quorum_merge_from(m: &mut LinearModel, other: &LinearModel) {
+    let merged = quorum_merge(m, other);
+    *m = merged;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::matrix::Matrix;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn merge_mode_parse_and_name_roundtrip() {
+        for m in [MergeMode::Average, MergeMode::Quorum] {
+            assert_eq!(MergeMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(MergeMode::parse("avg"), Some(MergeMode::Average));
+        assert_eq!(MergeMode::parse("majority"), None);
+    }
+
+    #[test]
+    fn reservoir_fill_then_replace() {
+        let mut res = reservoir_new(2);
+        assert_eq!(capacity(&res), 2);
+        assert_eq!(occupancy(&res), 0);
+        offer(&mut res, 7, 1.0, 999);
+        offer(&mut res, 8, -1.0, 999);
+        assert_eq!(seen(&res), 2);
+        assert_eq!(entry(&res, 0), (7, 1.0));
+        assert_eq!(entry(&res, 1), (8, -1.0));
+        // seen = 2 = K: replacement phase; draw % 3 == 0 -> slot 0
+        offer(&mut res, 9, 1.0, 3);
+        assert_eq!(seen(&res), 3);
+        assert_eq!(entry(&res, 0), (9, 1.0));
+        // draw % 4 == 2 >= K -> no replacement, but seen still advances
+        offer(&mut res, 10, 1.0, 2);
+        assert_eq!(seen(&res), 4);
+        assert_eq!(occupancy(&res), 2);
+        assert_eq!(entry(&res, 0), (9, 1.0));
+        assert_eq!(entry(&res, 1), (8, -1.0));
+    }
+
+    #[test]
+    fn reservoir_node_ids_are_exact_for_large_ids() {
+        let mut res = reservoir_new(1);
+        let big = u32::MAX - 17;
+        offer(&mut res, big, -1.0, 0);
+        assert_eq!(entry(&res, 0), (big, -1.0));
+    }
+
+    #[test]
+    fn reservoir_is_approximately_uniform() {
+        // Offer 0..N into a K-reservoir many times with independent RNG
+        // streams; every element's inclusion frequency must be near K/N.
+        let (n, k, trials) = (40u32, 4usize, 3000usize);
+        let mut hits = vec![0usize; n as usize];
+        for t in 0..trials {
+            let mut rng = Rng::new(1000 + t as u64);
+            let mut res = reservoir_new(k);
+            for node in 0..n {
+                offer(&mut res, node, 1.0, rng.next_u64());
+            }
+            for (node, _) in entries(&res) {
+                hits[node as usize] += 1;
+            }
+        }
+        let expect = trials as f64 * k as f64 / n as f64; // 300
+        for (node, &h) in hits.iter().enumerate() {
+            let dev = (h as f64 - expect).abs() / expect;
+            assert!(dev < 0.25, "node {node}: {h} hits vs expected {expect}");
+        }
+    }
+
+    #[test]
+    fn set_capacity_preserves_entries_and_seen() {
+        let mut res = reservoir_new(3);
+        for i in 0..5 {
+            offer(&mut res, i, if i % 2 == 0 { 1.0 } else { -1.0 }, i as u64 * 31);
+        }
+        let before: Vec<_> = entries(&res).collect();
+        let s = seen(&res);
+        // expand (wire decode arrives at occupancy, normalize up)
+        set_capacity(&mut res, 8);
+        assert_eq!(capacity(&res), 8);
+        assert_eq!(seen(&res), s);
+        assert_eq!(entries(&res).collect::<Vec<_>>(), before);
+    }
+
+    #[test]
+    fn pairwise_update_is_noop_without_opposite_class() {
+        let learner = PairwiseAuc::new(0.01);
+        let train = Examples::Dense(Matrix::from_vec(2, 2, vec![1.0, 0.0, 0.0, 1.0]));
+        let mut res = reservoir_new(2);
+        offer(&mut res, 0, 1.0, 0);
+        offer(&mut res, 1, 1.0, 1);
+        let mut m = LinearModel::from_weights(vec![0.5, -0.5], 3);
+        let before = m.weights();
+        let mut scratch = PairScratch::default();
+        learner.update_with_reservoir(&mut m, &Row::Dense(&[1.0, 1.0]), 1.0, &res, &train, &mut scratch);
+        assert_eq!(m.weights(), before);
+        assert_eq!(m.t, 3, "no decay, no t bump");
+    }
+
+    #[test]
+    fn pairwise_update_orders_positive_above_negative() {
+        // one positive local example repeatedly paired against a reservoir
+        // negative must push s(x+) above s(x-)
+        let learner = PairwiseAuc::new(0.1);
+        let xp = vec![1.0f32, 0.2];
+        let xn = vec![0.2f32, 1.0];
+        let train =
+            Examples::Dense(Matrix::from_vec(2, 2, vec![xp[0], xp[1], xn[0], xn[1]]));
+        let mut res = reservoir_new(2);
+        offer(&mut res, 1, -1.0, 0);
+        let mut m = LinearModel::zeros(2);
+        let mut scratch = PairScratch::default();
+        for _ in 0..50 {
+            learner.update_with_reservoir(&mut m, &Row::Dense(&xp), 1.0, &res, &train, &mut scratch);
+        }
+        let sp = m.raw_margin(&Row::Dense(&xp));
+        let sn = m.raw_margin(&Row::Dense(&xn));
+        assert!(sp > sn, "ranking not learned: s+={sp} s-={sn}");
+        assert_eq!(m.t, 50);
+    }
+
+    #[test]
+    fn sparse_and_dense_pair_diff_agree() {
+        let x = vec![0.0f32, 2.0, 0.0, -1.0];
+        let xj = vec![1.0f32, 0.0, 0.0, 3.0];
+        let mut dense = Vec::new();
+        dense_pair_diff(-1.0, &x, &xj, &mut dense);
+        let (mut idx, mut val) = (Vec::new(), Vec::new());
+        sparse_pair_diff(
+            -1.0,
+            &[1, 3],
+            &[2.0, -1.0],
+            &[0, 3],
+            &[1.0, 3.0],
+            &mut idx,
+            &mut val,
+        );
+        let mut from_sparse = vec![0.0f32; 4];
+        for (&j, &v) in idx.iter().zip(&val) {
+            from_sparse[j as usize] = v;
+        }
+        assert_eq!(dense, from_sparse);
+    }
+
+    #[test]
+    fn quorum_zeroes_disagreements_and_averages_agreements() {
+        let a = LinearModel::from_weights(vec![2.0, -2.0, 1.0, 0.0], 3);
+        let mut b = LinearModel::from_weights(vec![4.0, 2.0, -1.0, 2.0], 7);
+        b.scale_by(0.5); // effective [2, 1, -0.5, 1]
+        let m = quorum_merge(&a, &b);
+        assert_eq!(m.weights(), vec![2.0, 0.0, 0.0, 0.0]);
+        assert_eq!(m.t, 7);
+        let mut c = a.clone();
+        quorum_merge_from(&mut c, &b);
+        assert_eq!(c.weights(), m.weights());
+        assert_eq!(c.t, m.t);
+    }
+}

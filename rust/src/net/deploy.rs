@@ -32,10 +32,11 @@
 
 use crate::data::dataset::Dataset;
 use crate::gossip::cache::ModelCache;
-use crate::gossip::create_model::{create_model_step, Variant};
+use crate::gossip::create_model::{create_model_pairwise_step, create_model_step, Variant};
 use crate::gossip::message::ModelMsg;
 use crate::learning::linear::LinearModel;
-use crate::learning::Learner;
+use crate::learning::pairwise::{self, PairScratch};
+use crate::learning::{Learner, MergeMode};
 use crate::net::wire::{self, FrameBuf, WriteBuf};
 use crate::p2p::overlay::{PeerSampler, SamplerConfig};
 use crate::scenario::driver::{CompiledScenario, Mutation, ScenarioDriver};
@@ -111,6 +112,12 @@ pub struct DeployConfig {
     pub cycles: u64,
     pub variant: Variant,
     pub learner: Learner,
+    /// MERGE rule for Mu/Um: coordinate averaging or the quorum vote
+    /// (DESIGN.md §17)
+    pub merge: MergeMode,
+    /// example-reservoir capacity K riding with each model when the learner
+    /// is pairwise (ignored for pointwise learners)
+    pub reservoir: usize,
     pub cache_size: usize,
     pub sampler: SamplerConfig,
     /// drop/delay model injected at send, in ticks ([`SIM_DELTA`] = Δ)
@@ -143,6 +150,8 @@ impl Default for DeployConfig {
             cycles: 30,
             variant: Variant::Mu,
             learner: Learner::pegasos(1e-2),
+            merge: MergeMode::Average,
+            reservoir: pairwise::DEFAULT_CAPACITY,
             cache_size: 10,
             sampler: SamplerConfig::Newscast { view_size: 20 },
             network: NetworkConfig::reliable(),
@@ -571,6 +580,10 @@ struct NodeState {
     stats: NodeStats,
     out: OutConns,
     scn: Option<ScenarioDriver>,
+    /// the freshest model's example reservoir (empty for pointwise
+    /// learners); rides out with every send and is replaced on every
+    /// applied receive, mirroring the simulator's per-node reservoir row
+    res: Vec<f32>,
     join_tick: Ticks,
     forced_off: bool,
     /// churn liveness cache, maintained by `TimerKind::Churn` events so the
@@ -627,6 +640,11 @@ pub(crate) fn group_main(ctx: GroupCtx<'_>) -> GroupReport {
     // liveness is not globally observable in a deployment; samplers treat
     // every peer as a candidate and sends to offline peers are simply lost
     let assume_online = Bitset::filled(cfg.n_nodes, true);
+    // pairwise learning: reservoirs ride with the models; one scratch per
+    // group thread serves every node's reservoir-consuming step
+    let pairwise_auc = cfg.learner.as_pairwise().copied();
+    let res_cap = if pairwise_auc.is_some() { cfg.reservoir } else { 0 };
+    let mut scratch = PairScratch::default();
 
     let mut wheel = TimerWheel::new(ctx.start, poll, WHEEL_SLOTS);
     let mut nodes: Vec<NodeState> = Vec::with_capacity(ctx.nodes.len());
@@ -660,6 +678,7 @@ pub(crate) fn group_main(ctx: GroupCtx<'_>) -> GroupReport {
             stats: NodeStats::default(),
             out: OutConns::new(OUT_CONN_CAP),
             scn,
+            res: if res_cap > 0 { pairwise::reservoir_new(res_cap) } else { Vec::new() },
             join_tick,
             forced_off: false,
             churn_online,
@@ -786,14 +805,40 @@ pub(crate) fn group_main(ctx: GroupCtx<'_>) -> GroupReport {
                 let x = ctx.data.train.row(dst);
                 // concept drift re-labels the local example with the
                 // scenario's current sign
-                let created = create_model_step(
-                    cfg.variant,
-                    &cfg.learner,
-                    incoming,
-                    &mut st.last_recv,
-                    &x,
-                    st.drift_sign * ctx.data.train_y[dst],
-                );
+                let y = st.drift_sign * ctx.data.train_y[dst];
+                let created = if let Some(auc) = pairwise_auc.as_ref() {
+                    // the reservoir decoded at occupancy; re-expand to the
+                    // configured capacity before stepping/offering
+                    pairwise::set_capacity(&mut msg.res, res_cap);
+                    let created = create_model_pairwise_step(
+                        cfg.variant,
+                        cfg.merge,
+                        auc,
+                        incoming,
+                        &mut st.last_recv,
+                        &x,
+                        y,
+                        &msg.res,
+                        &ctx.data.train,
+                        &mut scratch,
+                    );
+                    // the created model inherits the walk's reservoir plus
+                    // the local example — the simulator's flush semantics
+                    let draw = st.rng.next_u64();
+                    pairwise::offer(&mut msg.res, dst as u32, y, draw);
+                    st.res = std::mem::take(&mut msg.res);
+                    created
+                } else {
+                    create_model_step(
+                        cfg.variant,
+                        cfg.merge,
+                        &cfg.learner,
+                        incoming,
+                        &mut st.last_recv,
+                        &x,
+                        y,
+                    )
+                };
                 publish(&ctx.shared.models[dst], &created);
                 st.cache.add(created);
             }
@@ -835,6 +880,7 @@ pub(crate) fn group_main(ctx: GroupCtx<'_>) -> GroupReport {
                         scale: 1.0,
                         t: freshest.t,
                         view: st.sampler.payload(e.node, now_ticks),
+                        res: st.res.clone(),
                     };
                     st.stats.sent += 1;
                     // byte accounting stays on the v1 frame size shared
@@ -890,6 +936,7 @@ mod tests {
             scale: 1.0,
             t,
             view: vec![Descriptor { node: 2, ts: t }],
+            res: Vec::new(),
         }
     }
 

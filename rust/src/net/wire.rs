@@ -10,6 +10,9 @@
 //! f32* d weights
 //! u16  view entry count
 //! (u64 node, u64 ts)* view entries
+//! u16  reservoir entry count (live entries; 0 when the learner is pointwise)
+//! [u32 seen]           — present only when the entry count is nonzero
+//! (u32 node, f32 y)*   reservoir entries
 //! ```
 //!
 //! Version 2 is the *routed* variant used by the node-group runtime
@@ -19,6 +22,7 @@
 //! everything else is identical to v1.
 
 use crate::gossip::message::ModelMsg;
+use crate::learning::pairwise;
 use crate::p2p::newscast::Descriptor;
 use std::io::{self, Read, Write};
 
@@ -41,10 +45,29 @@ fn encode_tail(buf: &mut Vec<u8>, msg: &ModelMsg) {
         buf.extend_from_slice(&(d.node as u64).to_le_bytes());
         buf.extend_from_slice(&d.ts.to_le_bytes());
     }
+    // only the live reservoir entries travel: the receiver re-expands to its
+    // configured capacity, so an empty reservoir costs two zero bytes
+    let occ = pairwise::occupancy(&msg.res);
+    buf.extend_from_slice(&(occ as u16).to_le_bytes());
+    if occ > 0 {
+        buf.extend_from_slice(&pairwise::seen(&msg.res).to_le_bytes());
+        for (node, y) in pairwise::entries(&msg.res) {
+            buf.extend_from_slice(&node.to_le_bytes());
+            buf.extend_from_slice(&y.to_le_bytes());
+        }
+    }
+}
+
+/// Body bytes past the weights and view: the reservoir count plus, when
+/// nonzero, the `seen` counter and the live entries.
+fn res_tail_bytes(msg: &ModelMsg) -> usize {
+    let occ = pairwise::occupancy(&msg.res);
+    2 + if occ > 0 { 4 + 8 * occ } else { 0 }
 }
 
 pub fn encode(msg: &ModelMsg) -> Vec<u8> {
-    let body_len = 1 + 8 + 8 + 4 + msg.w.len() * 4 + 2 + msg.view.len() * 16;
+    let body_len =
+        1 + 8 + 8 + 4 + msg.w.len() * 4 + 2 + msg.view.len() * 16 + res_tail_bytes(msg);
     let mut buf = Vec::with_capacity(4 + body_len);
     buf.extend_from_slice(&(body_len as u32).to_le_bytes());
     buf.push(WIRE_VERSION);
@@ -57,7 +80,8 @@ pub fn encode(msg: &ModelMsg) -> Vec<u8> {
 /// both runtimes use for byte accounting so sim/deploy traffic metrics
 /// remain directly comparable).
 pub fn encode_routed(dst: usize, msg: &ModelMsg) -> Vec<u8> {
-    let body_len = 1 + 8 + 8 + 8 + 4 + msg.w.len() * 4 + 2 + msg.view.len() * 16;
+    let body_len =
+        1 + 8 + 8 + 8 + 4 + msg.w.len() * 4 + 2 + msg.view.len() * 16 + res_tail_bytes(msg);
     let mut buf = Vec::with_capacity(4 + body_len);
     buf.extend_from_slice(&(body_len as u32).to_le_bytes());
     buf.push(ROUTED_WIRE_VERSION);
@@ -179,11 +203,26 @@ fn decode_fields(mut c: Cursor<'_>) -> Result<ModelMsg, WireError> {
         let ts = c.u64()?;
         view.push(Descriptor { node, ts });
     }
+    let nres = c.u16()? as usize;
+    let res = if nres > 0 {
+        let seen = c.u32()?;
+        let mut entries = Vec::with_capacity(nres.min(1024));
+        for _ in 0..nres {
+            let node = c.u32()?;
+            let y = c.f32()?;
+            entries.push((node, y));
+        }
+        // reconstructed at occupancy; the receiver normalizes to its
+        // configured capacity with pairwise::set_capacity before offering
+        pairwise::from_entries(seen, &entries)
+    } else {
+        Vec::new()
+    };
     // the declared counts must consume the body exactly
     if c.pos != body.len() {
         return Err(WireError::TrailingBytes(body.len() - c.pos));
     }
-    Ok(ModelMsg { src, w, scale: 1.0, t, view })
+    Ok(ModelMsg { src, w, scale: 1.0, t, view, res })
 }
 
 /// Blocking framed read from a stream.
@@ -329,7 +368,18 @@ mod tests {
             scale: 1.0,
             t: 99,
             view: (0..nv).map(|i| Descriptor { node: i, ts: i as u64 * 3 }).collect(),
+            res: Vec::new(),
         }
+    }
+
+    /// `sample` plus a capacity-`k` reservoir holding `occ` live entries.
+    fn sample_with_res(d: usize, nv: usize, k: usize, occ: usize) -> ModelMsg {
+        let mut m = sample(d, nv);
+        m.res = pairwise::reservoir_new(k);
+        for i in 0..occ {
+            pairwise::offer(&mut m.res, 100 + i as u32, if i % 2 == 0 { 1.0 } else { -1.0 }, 0);
+        }
+        m
     }
 
     #[test]
@@ -388,6 +438,50 @@ mod tests {
             let m = sample(d, nv);
             assert_eq!(encode(&m).len(), m.wire_bytes(), "d={d} nv={nv}");
         }
+        // the reservoir tail is counted too: 2 always, +4+8*occ when live
+        for (k, occ) in [(8, 0), (8, 3), (4, 4), (16, 20)] {
+            let m = sample_with_res(5, 2, k, occ);
+            assert_eq!(encode(&m).len(), m.wire_bytes(), "k={k} occ={occ}");
+        }
+    }
+
+    #[test]
+    fn reservoir_roundtrips_at_occupancy() {
+        // a half-full capacity-8 reservoir travels as 3 entries; the decoded
+        // buffer sits at capacity 3 until the receiver set_capacity()s it
+        let m = sample_with_res(4, 1, 8, 3);
+        let got = decode_body(&encode(&m)[4..]).unwrap();
+        assert_eq!(pairwise::capacity(&got.res), 3);
+        assert_eq!(pairwise::seen(&got.res), pairwise::seen(&m.res));
+        let want: Vec<(u32, f32)> = pairwise::entries(&m.res).collect();
+        let have: Vec<(u32, f32)> = pairwise::entries(&got.res).collect();
+        assert_eq!(have, want);
+        // normalizing back to the configured capacity preserves everything
+        let mut res = got.res;
+        pairwise::set_capacity(&mut res, 8);
+        assert_eq!(pairwise::seen(&res), pairwise::seen(&m.res));
+        assert_eq!(pairwise::entries(&res).collect::<Vec<_>>(), want);
+        // an over-seen reservoir keeps its seen counter (weights Algorithm R)
+        let m = sample_with_res(4, 1, 4, 9);
+        let got = decode_body(&encode(&m)[4..]).unwrap();
+        assert_eq!(pairwise::seen(&got.res), 9);
+        assert_eq!(pairwise::occupancy(&got.res), 4);
+        // empty reservoirs decode to the empty buffer, not a zero-capacity one
+        let m = sample_with_res(4, 1, 8, 0);
+        assert!(decode_body(&encode(&m)[4..]).unwrap().res.is_empty());
+    }
+
+    #[test]
+    fn routed_frames_carry_reservoirs_too() {
+        let m = sample_with_res(6, 2, 8, 5);
+        let enc = encode_routed(13, &m);
+        assert_eq!(enc.len(), m.wire_bytes() + 8, "v2 = v1 + u64 dst");
+        let (dst, got) = decode_routed_body(&enc[4..]).unwrap();
+        assert_eq!(dst, 13);
+        assert_eq!(
+            pairwise::entries(&got.res).collect::<Vec<_>>(),
+            pairwise::entries(&m.res).collect::<Vec<_>>()
+        );
     }
 
     #[test]

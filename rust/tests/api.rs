@@ -26,6 +26,8 @@ variant = um
 learner = adaline
 lambda = 0.5
 eta = 0.01
+merge = quorum
+reservoir = 4
 cache = 5
 sampler = newscast
 view = 30
@@ -51,6 +53,8 @@ topology = ring:2
     assert_eq!(e.learner_name, "adaline");
     assert_eq!(e.lambda, 0.5);
     assert_eq!(e.eta, 0.01);
+    assert_eq!(e.merge, golf::learning::MergeMode::Quorum);
+    assert_eq!(e.reservoir, 4);
     assert_eq!(e.cache, 5);
     assert_eq!(e.sampler, SamplerConfig::Newscast { view_size: 30 });
     assert!(e.failures);
@@ -309,6 +313,85 @@ fn rejects_invalid_combinations_with_typed_errors() {
     let ds = spambase_like(1, Scale(0.01));
     let e = RunSpec::new("urls").build_with(&ds).unwrap_err();
     assert_eq!(kind(&e), "data", "{e}");
+}
+
+/// Pairwise/quorum validation matrix (DESIGN.md §17): every invalid
+/// combination is a typed config error with its distinct exit code, raised
+/// at build time — never a panic inside a running simulation.
+#[test]
+fn rejects_invalid_pairwise_combinations_with_typed_errors() {
+    use golf::learning::MergeMode;
+
+    // the quorum vote is coordinate agreement between gossip partners; the
+    // PERFECT MATCHING baseline has no overlay to agree over
+    let e = RunSpec::new("urls")
+        .scale(0.005)
+        .sampler(SamplerConfig::Matching)
+        .merge(MergeMode::Quorum)
+        .build()
+        .unwrap_err();
+    assert_eq!(kind(&e), "config", "{e}");
+    assert_eq!(e.exit_code(), 2);
+
+    // a pairwise learner with no reservoir slot can never form a pair
+    let e = RunSpec::new("urls")
+        .scale(0.005)
+        .learner("pairwise-auc")
+        .reservoir(0)
+        .build()
+        .unwrap_err();
+    assert_eq!(kind(&e), "config", "{e}");
+    assert_eq!(e.exit_code(), 2);
+
+    // ...and one larger than the model cache would outlive its models
+    let e = RunSpec::new("urls")
+        .scale(0.005)
+        .learner("pairwise-auc")
+        .cache(10)
+        .reservoir(99)
+        .build()
+        .unwrap_err();
+    assert_eq!(kind(&e), "config", "{e}");
+    assert_eq!(e.exit_code(), 2);
+
+    // the cycle-synchronous batched driver averages pointwise learners only
+    let e = RunSpec::new("urls")
+        .scale(0.005)
+        .backend(BackendChoice::BatchedNative)
+        .learner("pairwise-auc")
+        .build()
+        .unwrap_err();
+    assert_eq!(kind(&e), "config", "{e}");
+
+    let e = RunSpec::new("urls")
+        .scale(0.005)
+        .backend(BackendChoice::BatchedNative)
+        .merge(MergeMode::Quorum)
+        .build()
+        .unwrap_err();
+    assert_eq!(kind(&e), "config", "{e}");
+
+    // the reservoir cap only binds the pairwise objective: a pointwise
+    // learner with reservoir = 0 builds fine
+    RunSpec::new("urls").scale(0.005).reservoir(0).build().unwrap();
+
+    // the valid combination builds, and the variant alias survives the INI
+    // round trip (alias -> mu + pairwise-auc learner)
+    RunSpec::new("urls")
+        .scale(0.005)
+        .learner("pairwise-auc")
+        .merge(MergeMode::Quorum)
+        .reservoir(4)
+        .build()
+        .unwrap();
+    let spec = RunSpec::from_ini(
+        "[experiment]\ndataset = urls\nscale = 0.005\nvariant = pairwise-auc\n",
+    )
+    .unwrap();
+    assert_eq!(spec.experiment.variant, Variant::Mu);
+    assert_eq!(spec.experiment.learner_name, "pairwise-auc");
+    let round = RunSpec::from_ini(&spec.to_ini()).unwrap();
+    assert_eq!(round, spec, "\n{}", spec.to_ini());
 }
 
 /// Topology validation matrix (DESIGN.md §16): every rejection is a typed

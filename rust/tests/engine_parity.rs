@@ -17,7 +17,7 @@ use golf::engine::{Backend, LearnerKind, StepBatch, StepOp};
 use golf::experiments::sweep;
 use golf::gossip::create_model::Variant;
 use golf::gossip::protocol::{run, ExecMode, ExecPath, ProtocolConfig, RunResult};
-use golf::learning::Learner;
+use golf::learning::{Learner, MergeMode};
 use golf::util::rng::Rng;
 
 fn pjrt() -> Option<PjrtBackend> {
@@ -50,7 +50,7 @@ fn step_ops_match_native_all_variants() {
     let mut rng = Rng::new(11);
     for learner in [LearnerKind::Pegasos, LearnerKind::Adaline, LearnerKind::LogReg] {
         for variant in [Variant::Rw, Variant::Mu, Variant::Um] {
-            let op = StepOp { learner, variant, hp: 0.01 };
+            let op = StepOp { learner, variant, hp: 0.01, merge: MergeMode::Average };
             let mut a = random_batch(&mut rng, 37, 13); // forces padding
             let mut b = a.clone();
             nat.step(&op, &mut a).unwrap();
@@ -135,6 +135,7 @@ fn assert_runs_identical(a: &RunResult, b: &RunResult, what: &str) {
         assert_eq!(pa.err_std, pb.err_std, "{what} @ cycle {}", pa.cycle);
         assert_eq!(pa.err_vote, pb.err_vote, "{what} @ cycle {}", pa.cycle);
         assert_eq!(pa.similarity, pb.similarity, "{what} @ cycle {}", pa.cycle);
+        assert_eq!(pa.auc, pb.auc, "{what} @ cycle {}", pa.cycle);
         assert_eq!(pa.messages_sent, pb.messages_sent, "{what} @ cycle {}", pa.cycle);
     }
     assert_eq!(a.stats.messages_sent, b.stats.messages_sent, "{what}");
@@ -345,7 +346,7 @@ fn sparse_kernels_match_dense_per_coordinate_all_learners_and_variants() {
     let (b, d, nnz) = (16, 37, 6);
     for learner in [LearnerKind::Pegasos, LearnerKind::Adaline, LearnerKind::LogReg] {
         for variant in [Variant::Rw, Variant::Mu, Variant::Um] {
-            let op = StepOp { learner, variant, hp: 0.05 };
+            let op = StepOp { learner, variant, hp: 0.05, merge: MergeMode::Average };
             let (mut dense, mut sparse) = dense_and_sparse_twin(&mut rng, b, d, nnz);
             nat.step(&op, &mut dense).unwrap();
             nat.step(&op, &mut sparse).unwrap();
@@ -383,7 +384,7 @@ fn sparse_kernel_chain_exactly_matches_scalar_learner() {
         (LearnerKind::Adaline, Learner::adaline(0.1)),
         (LearnerKind::LogReg, Learner::logreg(0.02)),
     ] {
-        let op = StepOp::for_protocol(&learner, Variant::Rw);
+        let op = StepOp::for_protocol(&learner, Variant::Rw, MergeMode::Average);
         assert_eq!(op.learner, kind);
         let mut rng = Rng::new(72);
         let mut nat = NativeBackend::new();
@@ -600,6 +601,37 @@ fn sharded_edge_scenario_parity() {
     }
 }
 
+/// Acceptance (DESIGN.md §17): the pairwise AUC objective threads per-model
+/// example reservoirs through the sharded hot path — staged pairs, the one
+/// offer draw per receive, and reservoir hand-off all follow the same
+/// node-local event order as the weights, so shards ∈ {2, 3} reproduce
+/// shards = 1 bit-for-bit under the extreme-failures scenario, for both
+/// merge modes.  The per-cycle AUC column must populate and stay identical.
+#[test]
+fn sharded_pairwise_auc_parity_under_extreme_failures() {
+    let ds = urls_like(92, Scale(0.02));
+    for (mi, merge) in [MergeMode::Average, MergeMode::Quorum].iter().enumerate() {
+        let mut cfg = ProtocolConfig::paper_default(16).with_extreme_failures();
+        cfg.variant = Variant::Mu;
+        cfg.learner = Learner::pairwise_auc(1e-2);
+        cfg.merge = *merge;
+        cfg.reservoir = 8;
+        cfg.eval.n_peers = 10;
+        cfg.eval.auc = true;
+        cfg.seed = 92;
+        let single = run_sharded(&cfg, &ds, 1);
+        for p in &single.curve.points {
+            let auc = p.auc.unwrap_or_else(|| panic!("{merge:?}: AUC column missing"));
+            assert!((0.0..=1.0).contains(&auc), "{merge:?}: AUC {auc} out of range");
+        }
+        // rotate the shard count so the two merges cover 2 and 3 between
+        // them without doubling the suite's wall-clock
+        let k = 2 + mi;
+        let sharded = run_sharded(&cfg, &ds, k);
+        assert_runs_identical(&single, &sharded, &format!("pairwise {merge:?} shards={k}"));
+    }
+}
+
 /// Determinism across shard counts themselves: 2, 3 and 4 shards all agree,
 /// so results never encode the partition geometry.
 #[test]
@@ -729,7 +761,7 @@ fn chunked_dense_step_bitwise_equals_serial() {
     assert!(b >= 2 * PAR_ROWS_MIN && b * d >= PAR_MIN_WORK, "batch must clear thresholds");
     for learner in [LearnerKind::Pegasos, LearnerKind::Adaline, LearnerKind::LogReg] {
         for variant in [Variant::Rw, Variant::Mu, Variant::Um] {
-            let op = StepOp { learner, variant, hp: 0.02 };
+            let op = StepOp { learner, variant, hp: 0.02, merge: MergeMode::Average };
             let base = random_batch(&mut rng, b, d);
             let mut chunked = base.clone();
             nat.step(&op, &mut chunked).unwrap();
@@ -754,7 +786,7 @@ fn chunked_sparse_step_bitwise_equals_serial() {
     assert!(b >= 2 * PAR_ROWS_MIN && b * d >= PAR_MIN_WORK, "batch must clear thresholds");
     for learner in [LearnerKind::Pegasos, LearnerKind::Adaline, LearnerKind::LogReg] {
         for variant in [Variant::Rw, Variant::Mu, Variant::Um] {
-            let op = StepOp { learner, variant, hp: 0.02 };
+            let op = StepOp { learner, variant, hp: 0.02, merge: MergeMode::Average };
             let (_, base) = dense_and_sparse_twin(&mut rng, b, d, nnz);
             let mut chunked = base.clone();
             nat.step(&op, &mut chunked).unwrap();

@@ -8,7 +8,7 @@ use golf::engine::native::NativeBackend;
 use golf::engine::{Backend, LearnerKind, StepBatch, StepOp};
 use golf::gossip::cache::ModelCache;
 use golf::gossip::create_model::{create_model, Variant};
-use golf::learning::{Adaline, Learner, LinearModel, Pegasos};
+use golf::learning::{Adaline, Learner, LinearModel, MergeMode, Pegasos};
 use golf::sim::event::{Event, EventQueue};
 use golf::util::check::{close_f32, forall};
 use golf::util::rng::Rng;
@@ -178,8 +178,12 @@ fn prop_create_model_rw_independent_of_m2() {
             let m1 = LinearModel::from_weights(w1.clone(), 3);
             let m2 = LinearModel::from_weights(w2.clone(), 9);
             let zeros = LinearModel::zeros(w1.len());
-            let a = create_model(Variant::Rw, &l, m1.clone(), &m2, &Row::Dense(x), *y);
-            let b = create_model(Variant::Rw, &l, m1, &zeros, &Row::Dense(x), *y);
+            let a = create_model(
+                Variant::Rw, MergeMode::Average, &l, m1.clone(), &m2, &Row::Dense(x), *y,
+            );
+            let b = create_model(
+                Variant::Rw, MergeMode::Average, &l, m1, &zeros, &Row::Dense(x), *y,
+            );
             close_f32(&a.weights(), &b.weights(), 1e-6, 1e-7)
         },
     );
@@ -213,6 +217,7 @@ fn prop_batched_native_matches_scalar_path() {
                 learner: LearnerKind::Pegasos,
                 variant: Variant::Mu,
                 hp: 0.05,
+                merge: MergeMode::Average,
             };
             let learner = Learner::pegasos(0.05);
             let mut expect = Vec::new();
@@ -227,6 +232,7 @@ fn prop_batched_native_matches_scalar_path() {
                 );
                 let c = create_model(
                     Variant::Mu,
+                    MergeMode::Average,
                     &learner,
                     m1,
                     &m2,
@@ -801,6 +807,7 @@ fn prop_topology_edge_list_roundtrip() {
 #[test]
 fn prop_frame_buf_incremental_equals_one_shot() {
     use golf::gossip::message::ModelMsg;
+    use golf::learning::pairwise;
     use golf::net::wire::{self, FrameBuf};
     use golf::p2p::newscast::Descriptor;
 
@@ -815,6 +822,18 @@ fn prop_frame_buf_incremental_equals_one_shot() {
                 let view = (0..rng.below_usize(4))
                     .map(|_| Descriptor { node: rng.below_usize(50), ts: rng.below(1000) })
                     .collect();
+                // about half the frames ride an example reservoir at a
+                // random fill level (wire v2 tail, DESIGN.md §17)
+                let res = if rng.chance(0.5) {
+                    let k = 1 + rng.below_usize(8);
+                    let mut r = pairwise::reservoir_new(k);
+                    for i in 0..rng.below_usize(2 * k + 2) {
+                        pairwise::offer(&mut r, i as u32, rng.sign(), rng.next_u64());
+                    }
+                    r
+                } else {
+                    Vec::new()
+                };
                 msgs.push((
                     rng.below_usize(64),
                     ModelMsg {
@@ -823,6 +842,7 @@ fn prop_frame_buf_incremental_equals_one_shot() {
                         scale: 1.0,
                         t: rng.below(1000),
                         view,
+                        res,
                     },
                 ));
             }
@@ -881,8 +901,104 @@ fn prop_frame_buf_incremental_equals_one_shot() {
                 if gm.w != wm.w {
                     return Err(format!("frame {i}: weights differ"));
                 }
+                if gm.res != wm.res {
+                    return Err(format!("frame {i}: reservoirs differ"));
+                }
             }
             Ok(())
         },
     );
+}
+
+/// The example reservoir (DESIGN.md §17) is Vitter's Algorithm R driven by
+/// one explicit draw per offer: identical draw streams must rebuild the
+/// identical reservoir (this is what makes sharded runs shard-count
+/// independent), `seen` must count every offer, occupancy must saturate at
+/// the capacity, and every surviving entry must name an offered example with
+/// its own label.
+#[test]
+fn prop_reservoir_offer_deterministic_and_bounded() {
+    use golf::learning::pairwise::{self, offer};
+    forall(
+        118,
+        120,
+        |rng| {
+            let k = 1 + rng.below_usize(16);
+            let n = 1 + rng.below_usize(200);
+            let draws: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+            (k, draws)
+        },
+        |(k, draws)| {
+            let label = |i: usize| if i % 2 == 0 { 1.0f32 } else { -1.0 };
+            let mut res = pairwise::reservoir_new(*k);
+            let mut res2 = pairwise::reservoir_new(*k);
+            for (i, &d) in draws.iter().enumerate() {
+                offer(&mut res, i as u32, label(i), d);
+                offer(&mut res2, i as u32, label(i), d);
+                if pairwise::seen(&res) as usize != i + 1 {
+                    return Err(format!("seen {} after {} offers", pairwise::seen(&res), i + 1));
+                }
+                if pairwise::occupancy(&res) != (i + 1).min(*k) {
+                    return Err(format!(
+                        "occupancy {} != min({}, {k})",
+                        pairwise::occupancy(&res),
+                        i + 1
+                    ));
+                }
+            }
+            // determinism: same capacity + same draw stream => same reservoir
+            if pairwise::seen(&res) != pairwise::seen(&res2) {
+                return Err("replay diverged on seen".into());
+            }
+            let (ea, eb): (Vec<_>, Vec<_>) =
+                (pairwise::entries(&res).collect(), pairwise::entries(&res2).collect());
+            if ea != eb {
+                return Err(format!("replay diverged: {ea:?} != {eb:?}"));
+            }
+            // every entry is an offered (node, label) pair, each at most once
+            let mut seen_nodes = std::collections::HashSet::new();
+            for (node, y) in ea {
+                if node as usize >= draws.len() {
+                    return Err(format!("entry names unoffered node {node}"));
+                }
+                if y != label(node as usize) {
+                    return Err(format!("node {node} carries label {y}"));
+                }
+                if !seen_nodes.insert(node) {
+                    return Err(format!("node {node} appears twice"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Algorithm R's defining property: after `n` offers into a capacity-`k`
+/// reservoir, *every* example survives with probability exactly k/n — early
+/// arrivals get no advantage.  Checked in aggregate over independent draw
+/// streams against a 5-sigma binomial band per example.
+#[test]
+fn prop_reservoir_inclusion_is_uniform() {
+    use golf::learning::pairwise::{self, offer};
+    let (k, n, trials) = (8usize, 40usize, 4000usize);
+    let mut counts = vec![0usize; n];
+    let mut rng = Rng::new(0xA0C);
+    for _ in 0..trials {
+        let mut res = pairwise::reservoir_new(k);
+        for i in 0..n {
+            offer(&mut res, i as u32, 1.0, rng.next_u64());
+        }
+        for (node, _) in pairwise::entries(&res) {
+            counts[node as usize] += 1;
+        }
+    }
+    let p = k as f64 / n as f64;
+    let expect = trials as f64 * p;
+    let tol = 5.0 * (trials as f64 * p * (1.0 - p)).sqrt();
+    for (i, &c) in counts.iter().enumerate() {
+        assert!(
+            (c as f64 - expect).abs() < tol,
+            "example {i} survived {c} times, expected {expect:.0} +/- {tol:.0}"
+        );
+    }
 }

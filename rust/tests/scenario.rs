@@ -12,6 +12,7 @@ use golf::engine::native::NativeBackend;
 use golf::experiments::sweep;
 use golf::gossip::create_model::Variant;
 use golf::gossip::protocol::{run, ExecMode, ProtocolConfig, RunResult};
+use golf::learning::Learner;
 use golf::scenario::{
     builtin, ChurnSpec, DelaySpec, Membership, PartitionSpec, Phase, PointAction, PointEvent,
     Scenario, TraceEntry,
@@ -23,6 +24,7 @@ fn assert_runs_identical(a: &RunResult, b: &RunResult, what: &str) {
         assert_eq!(pa.cycle, pb.cycle, "{what}");
         assert_eq!(pa.err_mean, pb.err_mean, "{what} @ cycle {}", pa.cycle);
         assert_eq!(pa.err_std, pb.err_std, "{what} @ cycle {}", pa.cycle);
+        assert_eq!(pa.auc, pb.auc, "{what} @ cycle {}", pa.cycle);
         assert_eq!(pa.messages_sent, pb.messages_sent, "{what} @ cycle {}", pa.cycle);
     }
     assert_eq!(a.stats.messages_sent, b.stats.messages_sent, "{what}");
@@ -158,6 +160,75 @@ fn flash_crowd_grows_membership_and_traffic() {
     );
     let first = grown.curve.points.first().unwrap().err_mean;
     assert!(grown.curve.final_error() < first, "flash crowd must still converge");
+}
+
+/// Pairwise AUC gossip (DESIGN.md §17) through the `partition-heal`
+/// built-in: the split (cycles 40–120) blocks cross-half walks, but each
+/// half keeps training on its own reservoir pairs, and once the partition
+/// heals the AUC curve recovers to the unpartitioned regime.
+#[test]
+fn pairwise_auc_survives_partition_heal() {
+    let ds = urls_like(40, Scale(0.005)); // 50 nodes
+    let scn = builtin("partition-heal").unwrap();
+    let cycles = scn.cycles_hint.unwrap();
+    let mut cfg = ProtocolConfig::paper_default(cycles);
+    cfg.learner = Learner::pairwise_auc(1e-2);
+    cfg.reservoir = 8;
+    cfg.eval.auc = true;
+    cfg.eval.n_peers = 15;
+    cfg.eval.at_cycles = vec![1, 40, 80, 120, 160, cycles];
+    cfg.seed = 40;
+    cfg.scenario = Some(scn);
+    let res = run(cfg, &ds);
+    assert!(res.stats.messages_blocked > 0, "the split must block messages");
+    let auc_at = |c: u64| {
+        res.curve
+            .points
+            .iter()
+            .find(|p| p.cycle == c)
+            .unwrap_or_else(|| panic!("no point at cycle {c}"))
+            .auc
+            .unwrap_or_else(|| panic!("no AUC at cycle {c}"))
+    };
+    let (start, mid_split, at_heal, healed) =
+        (auc_at(1), auc_at(80), auc_at(120), auc_at(cycles));
+    assert!(mid_split > 0.5, "halves must keep ranking mid-split: {mid_split}");
+    assert!(healed > start, "AUC must rise over the run: {start} -> {healed}");
+    assert!(healed > 0.7, "post-heal AUC too low: {healed}");
+    assert!(
+        healed > at_heal - 0.05,
+        "healing must not collapse the ranking: {at_heal} -> {healed}"
+    );
+}
+
+/// Pairwise AUC gossip through the `flash-crowd` built-in: reservoirs are
+/// seeded per node from the run seed, so a join wave that quadruples
+/// membership mid-run stays fully deterministic — two identical runs agree
+/// bit-for-bit on every curve column, AUC included — and the grown crowd
+/// still learns to rank.
+#[test]
+fn pairwise_auc_deterministic_through_flash_crowd() {
+    let ds = urls_like(41, Scale(0.004)); // 40-node universe
+    let scn = builtin("flash-crowd").unwrap();
+    let cycles = scn.cycles_hint.unwrap();
+    let mut cfg = ProtocolConfig::paper_default(cycles);
+    cfg.learner = Learner::pairwise_auc(1e-2);
+    cfg.reservoir = 8;
+    cfg.eval.auc = true;
+    cfg.eval.n_peers = 10;
+    cfg.eval.at_cycles = vec![1, 50, 100, 150, cycles];
+    cfg.seed = 41;
+    cfg.scenario = Some(scn);
+    let a = run(cfg.clone(), &ds);
+    let b = run(cfg, &ds);
+    assert_runs_identical(&a, &b, "flash-crowd pairwise replay");
+    let last = a.curve.points.last().unwrap();
+    let auc = last.auc.expect("AUC column must populate");
+    assert!(auc > 0.7, "post-crowd AUC too low: {auc}");
+    assert!(
+        a.curve.points.iter().all(|p| p.auc.is_some()),
+        "every eval point must carry an AUC"
+    );
 }
 
 /// A mass-leave phase forces nodes offline (messages to them are lost) and
